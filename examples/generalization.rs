@@ -1,0 +1,80 @@
+//! Generalization protocol (paper Fig. 8): train on rulesets whose goal
+//! types are in {AgentHold=1, AgentNear=3, TileNear=4}, evaluate on tasks
+//! sampled from the *held-out* goal types, and report the train/test gap.
+//!
+//! Run: `cargo run --release --example generalization -- [--iters N]`
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::{TrainConfig, Trainer};
+use xmgrid::runtime::Runtime;
+use xmgrid::util::args::Args;
+
+/// Goal ids kept for training (App. K: "only goals with IDs 1, 3, 4 were
+/// retained").
+const TRAIN_GOALS: [i32; 3] = [1, 3, 4];
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 100);
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).context("run `make artifacts` first")?;
+
+    let artifact = rt
+        .manifest
+        .of_kind("train_iter")
+        .iter()
+        .max_by_key(|s| s.meta_usize("B").unwrap())
+        .context("no train_iter artifacts")?
+        .name
+        .clone();
+    let eval_artifact = rt
+        .manifest
+        .of_kind("eval_rollout")
+        .iter()
+        .map(|s| s.name.clone())
+        .next()
+        .context("no eval_rollout artifact")?;
+
+    let mut trainer =
+        Trainer::new(&rt, &artifact, 1, TrainConfig::default())?;
+
+    // benchmark split by goal type — the Fig. 8 protocol
+    let mut gen_cfg = Preset::Small.config();
+    gen_cfg.max_rules = trainer.family.mr;
+    gen_cfg.max_objects = trainer.family.mi;
+    let (rulesets, _) = generate_benchmark(&gen_cfg, 8192);
+    let all = Benchmark { name: "small-8k".into(), rulesets };
+    let (train_bench, test_bench) = all.split_by_goal(&TRAIN_GOALS);
+    println!(
+        "goal-type split: {} train tasks (goals {:?}), {} held-out tasks",
+        train_bench.num_rulesets(), TRAIN_GOALS,
+        test_bench.num_rulesets()
+    );
+
+    trainer.resample_tasks(&train_bench)?;
+    for i in 1..=iters {
+        if i > 1 && (i - 1) % trainer.cfg.task_resample_iters == 0 {
+            trainer.resample_tasks(&train_bench)?;
+        }
+        let m = trainer.train_iter()?;
+        if i % 20 == 0 {
+            println!("iter {i:>4} loss {:+.3} r/step {:.4}",
+                     m.total_loss, m.reward_sum / m.env_steps as f32);
+        }
+    }
+
+    let on_train =
+        trainer.evaluate(&rt, &eval_artifact, &train_bench, 1)?;
+    let on_test = trainer.evaluate(&rt, &eval_artifact, &test_bench, 1)?;
+    println!("\n== Fig. 8 readout (return over eval tasks)");
+    println!("  train goals: mean {:.3}  P20 {:.3}", on_train.return_mean,
+             on_train.return_p20);
+    println!("  held-out:    mean {:.3}  P20 {:.3}", on_test.return_mean,
+             on_test.return_p20);
+    println!("  generalization gap (mean): {:.3}",
+             on_train.return_mean - on_test.return_mean);
+    Ok(())
+}

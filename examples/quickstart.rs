@@ -1,0 +1,81 @@
+//! Quickstart — the Listing 1/2 experience of the paper, in Rust.
+//!
+//! Creates an XLand environment, samples a ruleset from a benchmark,
+//! resets and steps it (both the pure-Rust engine and the AOT-compiled
+//! JAX executable), and renders the grid.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Preset};
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::EnvPool;
+use xmgrid::env::registry;
+use xmgrid::env::state::{reset, step, EnvOptions};
+use xmgrid::render::{render_grid, render_obs};
+use xmgrid::runtime::Runtime;
+use xmgrid::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // --- list available environments (xminigrid.registered_environments)
+    let envs = registry::registered_environments();
+    println!("{} registered environments, e.g. {} / {}", envs.len(),
+             envs[0], envs[20]);
+
+    // --- create an env instance + sample a task -------------------------
+    let mut rng = Rng::new(0);
+    let bp = registry::make("XLand-MiniGrid-R1-9x9", &mut rng);
+    let (mut tasks, _) = generate_benchmark(&Preset::Trivial.config(), 16);
+    let ruleset = tasks.swap_remove(3);
+    println!("\ntask goal id {} | {} rules | {} initial objects",
+             ruleset.goal.id(), ruleset.rules.len(),
+             ruleset.init_tiles.len());
+
+    // --- reset + step the pure-Rust engine ------------------------------
+    let opts = EnvOptions::default();
+    let (mut state, obs) =
+        reset(bp.base_grid, ruleset, bp.max_steps, rng.split(), opts);
+    println!("\ninitial grid:\n{}",
+             render_grid(&state.grid,
+                         Some((state.agent_pos, state.agent_dir)), true));
+    println!("agent's egocentric view:\n{}", render_obs(&obs, true));
+
+    let mut total = 0.0;
+    for _ in 0..100 {
+        let out = step(&mut state, rng.below(6) as i32, opts);
+        total += out.reward as f64;
+    }
+    println!("100 random steps -> total reward {total:.3}");
+
+    // --- same thing through the AOT JAX executable ----------------------
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&artifacts) {
+        Ok(rt) => {
+            let spec = rt.manifest.of_kind("env_rollout");
+            if let Some(s) = spec.first() {
+                let fam = EnvFamily::from_spec(s)?;
+                let t = s.meta_usize("T")?;
+                let mut pool = EnvPool::new(&rt, fam, 1)?;
+                let bench = xmgrid::benchgen::Benchmark {
+                    name: "demo".into(),
+                    rulesets: generate_benchmark(
+                        &Preset::Trivial.config(), 64).0,
+                };
+                let rulesets = pool.sample_rulesets(&bench, &mut rng);
+                pool.reset(&rulesets, &mut rng)?;
+                let (reward, episodes, trials) =
+                    pool.rollout(&rt, t, &mut rng)?;
+                println!(
+                    "\nAOT executable {}: {} envs x {t} steps -> \
+                     reward {reward:.1}, {episodes} episodes, {trials} \
+                     trials",
+                    s.name, fam.b
+                );
+            }
+        }
+        Err(e) => println!("\n(skipping AOT demo: {e}; run `make artifacts`)"),
+    }
+    Ok(())
+}

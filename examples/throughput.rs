@@ -1,0 +1,78 @@
+//! Throughput sweep (the Fig. 5a experience as a runnable example):
+//! random-policy simulation throughput vs number of parallel environments,
+//! comparing the fused AOT rollout against the pure-Rust CPU loop (the
+//! EnvPool-style baseline every JAX-env paper compares against).
+//!
+//! Run: `cargo run --release --example throughput -- [--chunks N]`
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::EnvPool;
+use xmgrid::env::state::{reset, step, EnvOptions};
+use xmgrid::env::Grid;
+use xmgrid::util::args::Args;
+use xmgrid::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let chunks = args.usize_or("chunks", 2);
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = xmgrid::runtime::Runtime::new(&dir)
+        .context("run `make artifacts` first")?;
+
+    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
+    let bench = Benchmark { name: "trivial".into(), rulesets };
+    let mut rng = Rng::new(0);
+
+    // --- AOT fused rollouts, every compiled batch size -------------------
+    println!("== XLA batched rollout (auto-reset on, random policy)");
+    let mut rolls = rt.manifest.of_kind("env_rollout");
+    rolls.sort_by_key(|s| {
+        (s.meta_usize("H").unwrap(), s.meta_usize("B").unwrap())
+    });
+    for spec in rolls {
+        let fam = EnvFamily::from_spec(spec)?;
+        let t = spec.meta_usize("T")?;
+        let mut pool = EnvPool::new(&rt, fam, 1)?;
+        let rs = pool.sample_rulesets(&bench, &mut rng);
+        pool.reset(&rs, &mut rng)?;
+        pool.rollout(&rt, t, &mut rng)?; // warmup (compile+first run)
+        let t0 = Instant::now();
+        for _ in 0..chunks {
+            pool.rollout(&rt, t, &mut rng)?;
+        }
+        let sps = (fam.b * t * chunks) as f64 / t0.elapsed().as_secs_f64();
+        println!("  {:<38} envs={:<6} sps={}", spec.name, fam.b,
+                 fmt_sps(sps));
+    }
+
+    // --- pure-Rust sequential loop (CPU baseline) -------------------------
+    println!("\n== pure-Rust loop baseline (single thread)");
+    for batch in [1usize, 16, 256, 1024] {
+        let opts = EnvOptions::default();
+        let mut states: Vec<_> = (0..batch)
+            .map(|i| {
+                let rs = bench.rulesets[i % bench.num_rulesets()].clone();
+                reset(Grid::empty_room(13, 13), rs, 507,
+                      Rng::new(i as u64), opts).0
+            })
+            .collect();
+        let steps_per_env = 256usize;
+        let t0 = Instant::now();
+        for s in states.iter_mut() {
+            for _ in 0..steps_per_env {
+                step(s, rng.below(6) as i32, opts);
+            }
+        }
+        let sps = (batch * steps_per_env) as f64
+            / t0.elapsed().as_secs_f64();
+        println!("  rust-loop 13x13               envs={batch:<6} sps={}",
+                 fmt_sps(sps));
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): meta-train the
+//! RL² recurrent-PPO baseline on a freshly generated trivial benchmark,
+//! log the learning curve, and run the §4.2 evaluation protocol before and
+//! after — proving all three layers (Pallas kernels inside the JAX policy,
+//! the vmapped env, the Rust coordinator) compose on a real workload.
+//!
+//! Run: `cargo run --release --example train_rl2 -- [--iters N]`
+//! (Results recorded in EXPERIMENTS.md.)
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::{fmt_sps, CsvLog};
+use xmgrid::coordinator::{TrainConfig, Trainer};
+use xmgrid::runtime::Runtime;
+use xmgrid::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 150);
+    let eval_every = args.usize_or("eval-every", 25);
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).context("run `make artifacts` first")?;
+
+    // largest train artifact = the most realistic workload available
+    let artifact = rt
+        .manifest
+        .of_kind("train_iter")
+        .iter()
+        .max_by_key(|s| s.meta_usize("B").unwrap())
+        .context("no train_iter artifacts")?
+        .name
+        .clone();
+    let eval_artifact = rt
+        .manifest
+        .of_kind("eval_rollout")
+        .iter()
+        .map(|s| s.name.clone())
+        .next();
+
+    let cfg = TrainConfig::default();
+    let mut trainer = Trainer::new(&rt, &artifact, 1, cfg)?;
+
+    // benchmark sized to the artifact capacity
+    let mut gen_cfg = Preset::Trivial.config();
+    gen_cfg.max_rules = trainer.family.mr;
+    gen_cfg.max_objects = trainer.family.mi;
+    let (rulesets, _) = generate_benchmark(&gen_cfg, 4096);
+    let bench = Benchmark { name: "trivial-4k".into(), rulesets };
+
+    println!("== train_rl2: {} on {} ({}x{} grid, {} envs, T={})",
+             artifact, bench.name, trainer.family.h, trainer.family.w,
+             trainer.family.b, trainer.t_len);
+
+    trainer.resample_tasks(&bench)?;
+    if let Some(ea) = &eval_artifact {
+        let st = trainer.evaluate(&rt, ea, &bench, 1)?;
+        println!("before training: return mean {:.3} P20 {:.3}",
+                 st.return_mean, st.return_p20);
+    }
+
+    let log_path = dir.join("train_rl2_curve.csv");
+    let mut log = CsvLog::create(&log_path, &[
+        "iter", "env_steps", "loss", "entropy", "reward_per_step",
+        "trials", "sps",
+    ])?;
+
+    let t0 = std::time::Instant::now();
+    let mut env_steps = 0u64;
+    let mut first_r = None;
+    let mut last_r = 0.0f32;
+    for i in 1..=iters {
+        if i > 1 && (i - 1) % trainer.cfg.task_resample_iters == 0 {
+            trainer.resample_tasks(&bench)?;
+        }
+        let m = trainer.train_iter()?;
+        env_steps += m.env_steps;
+        let r_per_step = m.reward_sum / m.env_steps as f32;
+        first_r.get_or_insert(r_per_step);
+        last_r = r_per_step;
+        log.row(&[
+            i.to_string(), env_steps.to_string(),
+            format!("{:.4}", m.total_loss), format!("{:.4}", m.entropy),
+            format!("{r_per_step:.5}"), m.trials.to_string(),
+            format!("{:.0}",
+                    env_steps as f64 / t0.elapsed().as_secs_f64()),
+        ])?;
+        if i % 10 == 0 || i == iters {
+            println!(
+                "iter {i:>4} | steps {env_steps:>8} | loss {:+.3} | \
+                 ent {:.3} | r/step {:.4} | trials {:>5} | sps {}",
+                m.total_loss, m.entropy, r_per_step, m.trials,
+                fmt_sps(env_steps as f64 / t0.elapsed().as_secs_f64())
+            );
+        }
+        if eval_every > 0 && i % eval_every == 0 {
+            if let Some(ea) = &eval_artifact {
+                let st = trainer.evaluate(&rt, ea, &bench, 1)?;
+                println!("  eval @ {i}: return mean {:.3} P20 {:.3} \
+                          per-trial {:.3}",
+                         st.return_mean, st.return_p20, st.per_trial_mean);
+            }
+        }
+    }
+
+    if let Some(ea) = &eval_artifact {
+        let st = trainer.evaluate(&rt, ea, &bench, 1)?;
+        println!("after training: return mean {:.3} P20 {:.3}",
+                 st.return_mean, st.return_p20);
+    }
+    println!(
+        "\nreward/step first->last: {:.4} -> {:.4} | total env steps {} \
+         in {:.1}s | curve: {:?}",
+        first_r.unwrap_or(0.0), last_r, env_steps,
+        t0.elapsed().as_secs_f64(), log_path
+    );
+    Ok(())
+}

@@ -1,0 +1,336 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts + manifest.
+
+Emits HLO *text*, not serialized HloModuleProto — the image's xla_extension
+0.5.1 rejects jax>=0.5's 64-bit-instruction-id protos; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one executable per variant — shapes are static in XLA):
+  env_step_g{H}x{W}_r{MR}_b{B}    batched environment step (+auto-reset)
+  env_reset_g{H}x{W}_r{MR}_b{B}   batched episode reset
+  policy_step_b{B}                RL² actor-critic forward + sampling
+  train_update_t{T}_mb{B}         PPO minibatch update (fwd+bwd+GAE+Adam)
+  render_rgb_b{B}                 symbolic obs -> RGB (Fig. 13 wrapper)
+
+The manifest (artifacts/manifest.txt) is line-oriented so the Rust loader
+needs no JSON dependency:
+
+  artifact <name> <file>
+  meta <key> <value>
+  in <idx> <dtype> <comma-dims>
+  out <idx> <dtype> <comma-dims>
+  end
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts [--quick]``
+Python never runs again after this: the Rust binary is self-contained.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import rollout as R
+from .xmg import env
+from .xmg.render import render_obs
+
+VIEW_SIZE = 5
+
+# State field order across the PJRT boundary — mirrored by
+# rust/src/runtime/state.rs. (name, dtype, per-env shape builder)
+STATE_FIELDS = (
+    ("base_grid", "i32"), ("grid", "i32"), ("agent_pos", "i32"),
+    ("agent_dir", "i32"), ("pocket", "i32"), ("rules", "i32"),
+    ("goal", "i32"), ("init_tiles", "i32"), ("step_count", "i32"),
+    ("key", "u32"), ("max_steps", "i32"),
+)
+
+_DTYPES = {"i32": jnp.int32, "u32": jnp.uint32, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(dtype, shape):
+    return jax.ShapeDtypeStruct(shape, _DTYPES[dtype])
+
+
+def state_specs(h, w, mr, mi, batch=None):
+    """ShapeDtypeStructs for the state tuple, optionally batched."""
+    per_env = {
+        "base_grid": (h, w, 2), "grid": (h, w, 2), "agent_pos": (2,),
+        "agent_dir": (), "pocket": (2,), "rules": (mr, 5 + 2),
+        "goal": (5,), "init_tiles": (mi, 2), "step_count": (),
+        "key": (2,), "max_steps": (),
+    }
+    specs = []
+    for name, dtype in STATE_FIELDS:
+        shape = per_env[name]
+        if batch is not None:
+            shape = (batch,) + shape
+        specs.append(_spec(dtype, shape))
+    return specs
+
+
+def make_env_step(view_size):
+    def step_flat(base_grid, grid, agent_pos, agent_dir, pocket, rules,
+                  goal, init_tiles, step_count, key, max_steps, action):
+        state = env.State(base_grid, grid, agent_pos, agent_dir, pocket,
+                          rules, goal, init_tiles, step_count, key,
+                          max_steps)
+        out = env.step(state, action, view_size=view_size)
+        s = out.state
+        return (s.base_grid, s.grid, s.agent_pos, s.agent_dir, s.pocket,
+                s.rules, s.goal, s.init_tiles, s.step_count, s.key,
+                s.max_steps, out.obs, out.reward, out.done, out.trial_done)
+    return jax.vmap(step_flat)
+
+
+def make_env_reset(view_size):
+    def reset_flat(key, base_grid, rules, goal, init_tiles, max_steps):
+        state, obs = env.reset(base_grid, rules, goal, init_tiles,
+                               max_steps, key, view_size=view_size)
+        return (state.base_grid, state.grid, state.agent_pos,
+                state.agent_dir, state.pocket, state.rules, state.goal,
+                state.init_tiles, state.step_count, state.key,
+                state.max_steps, obs)
+    return jax.vmap(reset_flat)
+
+
+def make_policy_step(cfg):
+    def fn(*args):
+        params = list(args[:M.NUM_PARAMS])
+        obs, prev_action, prev_reward, done, h, key = args[M.NUM_PARAMS:]
+        return M.policy_step(params, obs, prev_action, prev_reward, done,
+                             h, key, cfg)
+    return fn
+
+
+def make_train_update(cfg):
+    np_ = M.NUM_PARAMS
+
+    def fn(*args):
+        params = list(args[:np_])
+        m = list(args[np_:2 * np_])
+        v = list(args[2 * np_:3 * np_])
+        t = args[3 * np_]
+        rollout = args[3 * np_ + 1:3 * np_ + 12]
+        hp = args[3 * np_ + 12]
+        params, m, v, t, metrics = M.train_update(params, m, v, t, rollout,
+                                                  hp, cfg)
+        return tuple(params) + tuple(m) + tuple(v) + (t, metrics)
+    return fn
+
+
+def _dtype_name(dt):
+    return {"int32": "i32", "uint32": "u32", "float32": "f32",
+            "bool": "i32"}[str(dt)]
+
+
+class ManifestWriter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.lines = []
+
+    def emit(self, name, fn, in_specs, meta):
+        """Lower fn at in_specs, write HLO text, append manifest entry."""
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *in_specs)
+        out_flat = jax.tree_util.tree_leaves(out_specs)
+        self.lines.append(f"artifact {name} {fname}")
+        for k, val in meta.items():
+            self.lines.append(f"meta {k} {val}")
+        for i, s in enumerate(in_specs):
+            dims = ",".join(str(d) for d in s.shape)
+            self.lines.append(f"in {i} {_dtype_name(s.dtype)} {dims}")
+        for i, s in enumerate(out_flat):
+            dims = ",".join(str(d) for d in s.shape)
+            self.lines.append(f"out {i} {_dtype_name(s.dtype)} {dims}")
+        self.lines.append("end")
+        print(f"  lowered {name} ({len(text) / 1024:.0f} KiB)")
+
+    def save(self):
+        path = os.path.join(self.out_dir, "manifest.txt")
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+        print(f"wrote {path}")
+
+
+# --- variant tables ---------------------------------------------------------
+# Single-step env artifacts: used for Rust<->JAX cross-validation and as the
+# per-step-dispatch baseline in §Perf. (H, W, MR, MI, batches)
+FULL_STEP_VARIANTS = [
+    (9, 9, 3, 6, [8]),
+    (13, 13, 9, 12, [8]),
+]
+# Fused random-policy rollouts (T steps per call): the §4.1 workload.
+# (H, W, MR, MI, batches, T)
+FULL_ROLLOUT_VARIANTS = [
+    # Fig 5a: throughput vs parallel envs (13x13, the paper's mid size)
+    (13, 13, 9, 12, [1, 16, 256, 1024, 4096, 8192], 256),
+    # Fig 5b: grid-size sweep at fixed batches
+    (9, 9, 9, 6, [1024, 4096], 256),
+    (17, 17, 9, 12, [1024, 4096], 256),
+    (25, 25, 9, 16, [1024, 4096], 256),
+    # Fig 5c: rule-count sweep at 16x16 (paper's setup)
+    (16, 16, 1, 12, [1024], 256),
+    (16, 16, 3, 12, [1024], 256),
+    (16, 16, 6, 12, [1024], 256),
+    (16, 16, 12, 12, [1024], 256),
+    (16, 16, 24, 12, [1024], 256),
+]
+# Training iterations (Anakin): (H, W, MR, MI, B, T, MB)
+FULL_TRAIN_VARIANTS = [
+    # Fig 5f: training-throughput sweep on 9x9 / trivial
+    (9, 9, 3, 6, 64, 32, 16),
+    (9, 9, 3, 6, 256, 32, 64),
+    (9, 9, 3, 6, 1024, 32, 256),
+    # Fig 6/7/8: training on 13x13 R4
+    (13, 13, 9, 12, 256, 64, 64),
+]
+# Evaluation rollouts: (H, W, MR, MI, B, T)
+FULL_EVAL_VARIANTS = [
+    (9, 9, 3, 6, 256, 128),
+    (13, 13, 9, 12, 256, 256),
+]
+FULL_POLICY_BATCHES = [256]
+FULL_RENDER_BATCHES = [256, 1024]
+
+QUICK_STEP_VARIANTS = [(9, 9, 3, 6, [8])]
+QUICK_ROLLOUT_VARIANTS = [(9, 9, 3, 6, [8], 8)]
+QUICK_TRAIN_VARIANTS = [(9, 9, 3, 6, 8, 8, 4)]
+QUICK_EVAL_VARIANTS = [(9, 9, 3, 6, 8, 8)]
+QUICK_POLICY_BATCHES = [8]
+QUICK_RENDER_BATCHES = [8]
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--quick", action="store_true",
+                        help="small variants only (CI / pytest)")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig(view_size=VIEW_SIZE)
+    mw = ManifestWriter(args.out_dir)
+
+    def emit_reset(h, w, mr, mi, b):
+        name = f"env_reset_g{h}x{w}_r{mr}_b{b}"
+        if any(line.endswith(f" {name}.hlo.txt") for line in mw.lines):
+            return
+        reset_in = [
+            _spec("u32", (b, 2)), _spec("i32", (b, h, w, 2)),
+            _spec("i32", (b, mr, 7)), _spec("i32", (b, 5)),
+            _spec("i32", (b, mi, 2)), _spec("i32", (b,)),
+        ]
+        mw.emit(name, make_env_reset(VIEW_SIZE), reset_in,
+                dict(kind="env_reset", H=h, W=w, V=VIEW_SIZE, MR=mr, MI=mi,
+                     B=b))
+
+    # --- single-step env artifacts (cross-validation + dispatch baseline)
+    step_variants = QUICK_STEP_VARIANTS if args.quick else FULL_STEP_VARIANTS
+    for h, w, mr, mi, batches in step_variants:
+        for b in batches:
+            sspecs = state_specs(h, w, mr, mi, batch=b)
+            mw.emit(f"env_step_g{h}x{w}_r{mr}_b{b}", make_env_step(VIEW_SIZE),
+                    sspecs + [_spec("i32", (b,))],
+                    dict(kind="env_step", H=h, W=w, V=VIEW_SIZE, MR=mr,
+                         MI=mi, B=b))
+            emit_reset(h, w, mr, mi, b)
+
+    # --- fused random-policy rollouts (Fig 5a-e workload) ------------------
+    roll_variants = (QUICK_ROLLOUT_VARIANTS if args.quick
+                     else FULL_ROLLOUT_VARIANTS)
+    for h, w, mr, mi, batches, t_len in roll_variants:
+        for b in batches:
+            sspecs = state_specs(h, w, mr, mi, batch=b)
+            mw.emit(f"env_rollout_g{h}x{w}_r{mr}_b{b}_t{t_len}",
+                    R.make_env_rollout(VIEW_SIZE, t_len),
+                    sspecs + [_spec("u32", (2,))],
+                    dict(kind="env_rollout", H=h, W=w, V=VIEW_SIZE, MR=mr,
+                         MI=mi, B=b, T=t_len))
+            emit_reset(h, w, mr, mi, b)
+
+    # --- policy / training / eval artifacts --------------------------------
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    param_specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    v, hd = cfg.view_size, cfg.hidden_dim
+
+    def rl2_carry_specs(b):
+        return [
+            _spec("i32", (b, v, v, 2)),  # obs
+            _spec("i32", (b,)),          # prev_action
+            _spec("f32", (b,)),          # prev_reward
+            _spec("i32", (b,)),          # done_prev
+            _spec("f32", (b, hd)),       # h
+        ]
+
+    pol_batches = (QUICK_POLICY_BATCHES if args.quick
+                   else FULL_POLICY_BATCHES)
+    for b in pol_batches:
+        in_specs = param_specs + rl2_carry_specs(b) + [_spec("u32", (2,))]
+        mw.emit(f"policy_step_b{b}", make_policy_step(cfg), in_specs,
+                dict(kind="policy_step", B=b, V=v, H_DIM=hd,
+                     NP=M.NUM_PARAMS))
+
+    train_variants = (QUICK_TRAIN_VARIANTS if args.quick
+                      else FULL_TRAIN_VARIANTS)
+    for h, w, mr, mi, b, t_len, mb in train_variants:
+        sspecs = state_specs(h, w, mr, mi, batch=b)
+        in_specs = (param_specs * 3 + [_spec("i32", ())] + sspecs
+                    + rl2_carry_specs(b)
+                    + [_spec("u32", (2,)), _spec("f32", (M.HP_LEN,))])
+        mw.emit(
+            f"train_iter_g{h}x{w}_r{mr}_b{b}_t{t_len}_mb{mb}",
+            R.make_train_iter(cfg, VIEW_SIZE, t_len, b, mb), in_specs,
+            dict(kind="train_iter", H=h, W=w, V=v, MR=mr, MI=mi, B=b,
+                 T=t_len, MB=mb, H_DIM=hd, NP=M.NUM_PARAMS,
+                 HP_LEN=M.HP_LEN))
+        emit_reset(h, w, mr, mi, b)
+
+    eval_variants = (QUICK_EVAL_VARIANTS if args.quick
+                     else FULL_EVAL_VARIANTS)
+    for h, w, mr, mi, b, t_len in eval_variants:
+        sspecs = state_specs(h, w, mr, mi, batch=b)
+        in_specs = (param_specs + sspecs + rl2_carry_specs(b)
+                    + [_spec("u32", (2,))])
+        mw.emit(f"eval_rollout_g{h}x{w}_r{mr}_b{b}_t{t_len}",
+                R.make_eval_rollout(cfg, VIEW_SIZE, t_len), in_specs,
+                dict(kind="eval_rollout", H=h, W=w, V=v, MR=mr, MI=mi,
+                     B=b, T=t_len, H_DIM=hd, NP=M.NUM_PARAMS))
+        emit_reset(h, w, mr, mi, b)
+
+    # --- image-observation wrapper (Fig. 13) -------------------------------
+    render_batches = (QUICK_RENDER_BATCHES if args.quick
+                      else FULL_RENDER_BATCHES)
+    for b in render_batches:
+        fn = jax.vmap(lambda o: render_obs(o, patch=8))
+        mw.emit(f"render_rgb_b{b}", fn, [_spec("i32", (b, v, v, 2))],
+                dict(kind="render_rgb", B=b, V=v, P=8))
+
+    # persist model init values so rust can bootstrap training
+    params_path = os.path.join(args.out_dir, "params_init.bin")
+    with open(params_path, "wb") as f:
+        for p in params:
+            f.write(bytes(jnp.asarray(p, jnp.float32).tobytes()))
+    shapes = ";".join(
+        f"{n}:{','.join(str(d) for d in p.shape)}"
+        for n, p in zip(M.PARAM_NAMES, params))
+    mw.lines.insert(0, f"paramshapes {shapes}")
+    mw.save()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels: the baseline network's hot spots.
+
+Lowered with ``interpret=True`` so the resulting HLO runs on the CPU PJRT
+plugin (real-TPU lowering emits Mosaic custom-calls the CPU client cannot
+execute). Correctness is pinned against ``ref.py`` by
+``python/tests/test_kernels.py`` (hypothesis shape/dtype sweeps).
+"""
+
+from .gru import fused_gru_cell  # noqa: F401
+from .heads import fused_actor_critic_head  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,86 @@
+"""Fused GRU cell as a Pallas kernel (L1).
+
+The RL² baseline's recurrent hot spot: three gate matmuls against the input
+and three against the hidden state, plus gating, fused into one kernel so
+gate activations never round-trip to HBM between matmuls.
+
+TPU mapping (DESIGN.md §Perf): the grid tiles the batch; each program holds
+an x-tile (bB×I), the full weight panels (I×3H, H×3H — MXU-aligned when H is
+a multiple of 128) and the h-tile in VMEM, issues the six MXU matmuls
+back-to-back, applies the sigmoid/tanh gating in-register and writes one
+bB×H output tile. The GPU analogue in the paper's lineage would be a
+threadblock-per-batch-tile persistent kernel; on TPU the HBM↔VMEM schedule
+is expressed with BlockSpec index maps instead.
+
+``interpret=True`` always: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_kernel(x_ref, h_ref, wi_ref, wh_ref, bi_ref, bh_ref, out_ref,
+                *, hidden):
+    x = x_ref[...]
+    h = h_ref[...]
+    gi = x @ wi_ref[...] + bi_ref[...]
+    gh = h @ wh_ref[...] + bh_ref[...]
+    i_r, i_z, i_n = (gi[:, :hidden], gi[:, hidden:2 * hidden],
+                     gi[:, 2 * hidden:])
+    h_r, h_z, h_n = (gh[:, :hidden], gh[:, hidden:2 * hidden],
+                     gh[:, 2 * hidden:])
+    r = jax.nn.sigmoid(i_r + h_r)
+    z = jax.nn.sigmoid(i_z + h_z)
+    n = jnp.tanh(i_n + r * h_n)
+    out_ref[...] = (1.0 - z) * n + z * h
+
+
+def _gru_pallas(x, h, wi, wh, bi, bh, block_b=64):
+    b, _ = x.shape
+    hidden = h.shape[-1]
+    bb = min(block_b, b)
+    while b % bb != 0:  # batch tile must divide B (batches are powers of 2)
+        bb //= 2
+    grid = (b // bb,)
+    kernel = functools.partial(_gru_kernel, hidden=hidden)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, x.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((wi.shape[0], 3 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((hidden, 3 * hidden), lambda i: (0, 0)),
+            pl.BlockSpec((3 * hidden,), lambda i: (0,)),
+            pl.BlockSpec((3 * hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hidden), x.dtype),
+        interpret=True,
+    )(x, h, wi, wh, bi, bh)
+
+
+# Reverse-mode AD cannot flow through a pallas_call; the backward pass uses
+# the analytic gradient of the reference computation (same math, pure jnp),
+# which XLA fuses into the same train_update HLO.
+@jax.custom_vjp
+def fused_gru_cell(x, h, wi, wh, bi, bh):
+    """h' = GRU(x, h). Shapes: x [B, I], h [B, H], wi [I, 3H], wh [H, 3H],
+    bi/bh [3H] -> [B, H]."""
+    return _gru_pallas(x, h, wi, wh, bi, bh)
+
+
+def _gru_fwd(x, h, wi, wh, bi, bh):
+    return _gru_pallas(x, h, wi, wh, bi, bh), (x, h, wi, wh, bi, bh)
+
+
+def _gru_bwd(res, g):
+    from .ref import gru_cell_ref
+    _, vjp = jax.vjp(gru_cell_ref, *res)
+    return vjp(g)
+
+
+fused_gru_cell.defvjp(_gru_fwd, _gru_bwd)

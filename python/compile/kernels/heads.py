@@ -1,0 +1,56 @@
+"""Fused actor-critic head as a Pallas kernel (L1).
+
+Policy logits and value share the GRU output tile: one [H, A+1] weight panel
+(last column = value head) means the hidden-state tile is read from VMEM
+once for both heads instead of twice — the fusion the paper's baselines get
+implicitly from XLA, made explicit here.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _head_kernel(h_ref, w_ref, b_ref, out_ref):
+    out_ref[...] = h_ref[...] @ w_ref[...] + b_ref[...]
+
+
+def _head_pallas(h, w, b, block_b=128):
+    batch, hidden = h.shape
+    na1 = w.shape[1]
+    bb = min(block_b, batch)
+    while batch % bb != 0:
+        bb //= 2
+    out = pl.pallas_call(
+        _head_kernel,
+        grid=(batch // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden, na1), lambda i: (0, 0)),
+            pl.BlockSpec((na1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, na1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, na1), h.dtype),
+        interpret=True,
+    )(h, w, b)
+    return out[:, :-1], out[:, -1]
+
+
+# custom_vjp: Pallas forward, analytic (ref-math) backward — see gru.py.
+@jax.custom_vjp
+def fused_actor_critic_head(h, w, b):
+    """(logits [B, A], value [B]) = h @ w + b with w [H, A+1]."""
+    return _head_pallas(h, w, b)
+
+
+def _head_fwd(h, w, b):
+    return _head_pallas(h, w, b), (h, w, b)
+
+
+def _head_bwd(res, g):
+    from .ref import actor_critic_head_ref
+    _, vjp = jax.vjp(actor_critic_head_ref, *res)
+    return vjp(g)
+
+
+fused_actor_critic_head.defvjp(_head_fwd, _head_bwd)

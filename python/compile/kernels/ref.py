@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+The Pallas kernels in ``gru.py`` / ``heads.py`` must reproduce these
+reference computations to float tolerance for every shape/dtype the
+hypothesis sweep in ``python/tests/test_kernels.py`` generates.
+"""
+
+import jax.numpy as jnp
+
+
+def gru_cell_ref(x, h, wi, wh, bi, bh):
+    """Standard GRU cell (r, z, n gate layout along the 3H axis).
+
+    x: [B, I], h: [B, H], wi: [I, 3H], wh: [H, 3H], bi/bh: [3H].
+    Returns h': [B, H].
+    """
+    hidden = h.shape[-1]
+    gi = x @ wi + bi
+    gh = h @ wh + bh
+    i_r, i_z, i_n = (gi[..., :hidden], gi[..., hidden:2 * hidden],
+                     gi[..., 2 * hidden:])
+    h_r, h_z, h_n = (gh[..., :hidden], gh[..., hidden:2 * hidden],
+                     gh[..., 2 * hidden:])
+    r = jnp.reciprocal(1.0 + jnp.exp(-(i_r + h_r)))
+    z = jnp.reciprocal(1.0 + jnp.exp(-(i_z + h_z)))
+    n = jnp.tanh(i_n + r * h_n)
+    return (1.0 - z) * n + z * h
+
+
+def actor_critic_head_ref(h, w, b):
+    """Fused policy/value projection.
+
+    h: [B, H], w: [H, A+1], b: [A+1]. Returns (logits [B, A], value [B]).
+    """
+    out = h @ w + b
+    return out[..., :-1], out[..., -1]

@@ -1,0 +1,255 @@
+"""L2 — the RL² recurrent-PPO baseline (paper §4.2) as pure-jnp functions.
+
+Architecture (Table 6 lineage, CleanRL/PureJaxRL style, scaled for the CPU
+testbed): symbolic obs -> (tile, color) embeddings -> MLP trunk -> RL² input
+(trunk ⊕ prev-action embedding ⊕ prev-reward) -> GRU (Pallas kernel, L1) ->
+fused actor-critic head (Pallas kernel, L1).
+
+``train_update`` is the full PPO minibatch update — forward scan over the
+rollout, GAE, clipped surrogate + value + entropy loss, global-norm clip,
+Adam — lowered to a single HLO artifact. Hyperparameters arrive as a runtime
+``hp[8]`` vector so the Rust coordinator can sweep them without recompiling:
+``[lr, clip_eps, gamma, gae_lambda, ent_coef, vf_coef, max_grad_norm, pad]``.
+
+Parameters cross the PJRT boundary as a flat list in PARAM_NAMES order.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gru import fused_gru_cell
+from .kernels.heads import fused_actor_critic_head
+from .xmg import types as T
+
+
+class ModelConfig(NamedTuple):
+    view_size: int = 5
+    emb_dim: int = 8
+    act_emb_dim: int = 16
+    trunk_dim: int = 256
+    hidden_dim: int = 256
+    num_actions: int = T.NUM_ACTIONS
+
+
+PARAM_NAMES = ("tile_emb", "col_emb", "act_emb", "w1", "b1",
+               "wi", "wh", "bi", "bh", "whead", "bhead")
+NUM_PARAMS = len(PARAM_NAMES)
+HP_LEN = 8  # lr, clip_eps, gamma, gae_lambda, ent_coef, vf_coef, max_gn, pad
+
+
+def rl2_input_dim(cfg: ModelConfig) -> int:
+    return cfg.trunk_dim + cfg.act_emb_dim + 1
+
+
+def init_params(key, cfg: ModelConfig):
+    """Scaled-normal init; returns params in PARAM_NAMES order."""
+    ks = jax.random.split(key, NUM_PARAMS)
+    v, e = cfg.view_size, cfg.emb_dim
+    d, h = cfg.trunk_dim, cfg.hidden_dim
+    i = rl2_input_dim(cfg)
+    a = cfg.num_actions
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape) / jnp.sqrt(fan_in)
+                ).astype(jnp.float32)
+
+    return [
+        dense(ks[0], e, (T.NUM_TILES, e)),
+        dense(ks[1], e, (T.NUM_COLORS, e)),
+        dense(ks[2], cfg.act_emb_dim, (a + 1, cfg.act_emb_dim)),
+        dense(ks[3], v * v * 2 * e, (v * v * 2 * e, d)),
+        jnp.zeros((d,), jnp.float32),
+        dense(ks[5], i, (i, 3 * h)),
+        dense(ks[6], h, (h, 3 * h)),
+        jnp.zeros((3 * h,), jnp.float32),
+        jnp.zeros((3 * h,), jnp.float32),
+        dense(ks[9], h, (h, a + 1)) * 0.01,  # small policy/value head init
+        jnp.zeros((a + 1,), jnp.float32),
+    ]
+
+
+def network_step(params, obs, prev_action, prev_reward, done, h,
+                 cfg: ModelConfig):
+    """One recurrent forward step over a batch.
+
+    obs i32[B,V,V,2], prev_action i32[B], prev_reward f32[B], done i32[B]
+    (episode boundary BEFORE this obs: resets hidden state and RL² inputs),
+    h f32[B,H] -> (logits [B,A], value [B], h' [B,H]).
+    """
+    (tile_emb, col_emb, act_emb, w1, b1, wi, wh, bi, bh, whead,
+     bhead) = params
+    b = obs.shape[0]
+    donef = done.astype(jnp.float32)[:, None]
+
+    te = tile_emb[jnp.clip(obs[..., 0], 0, T.NUM_TILES - 1)]
+    ce = col_emb[jnp.clip(obs[..., 1], 0, T.NUM_COLORS - 1)]
+    flat = jnp.concatenate([te, ce], axis=-1).reshape(b, -1)
+    trunk = jax.nn.relu(flat @ w1 + b1)
+
+    # RL² conditioning; neutralized at episode starts
+    pa = jnp.where(done > 0, cfg.num_actions,
+                   jnp.clip(prev_action, 0, cfg.num_actions))
+    ae = act_emb[pa]
+    pr = (prev_reward * (1.0 - donef[:, 0]))[:, None]
+    x = jnp.concatenate([trunk, ae, pr], axis=-1)
+
+    h = h * (1.0 - donef)
+    h_new = fused_gru_cell(x, h, wi, wh, bi, bh)
+    logits, value = fused_actor_critic_head(h_new, whead, bhead)
+    return logits, value, h_new
+
+
+def goal_conditioning(params, ruleset_goal, rules, cfg: ModelConfig):
+    """Fig. 11 (App. G) mechanism: pre-embed the goal and rule encodings and
+    concatenate into a conditioning vector.
+
+    Reuses the tile/color embedding tables so the parameter list stays in
+    PARAM_NAMES order. ruleset_goal i32[B, 5], rules i32[B, MR, 7] ->
+    f32[B, (1+NUM_GOALS') features]: goal id one-hot ⊕ goal object
+    embeddings ⊕ mean rule-object embedding.
+    """
+    tile_emb, col_emb = params[0], params[1]
+    e = cfg.emb_dim
+    gid = jax.nn.one_hot(jnp.clip(ruleset_goal[:, 0], 0, T.NUM_GOALS - 1),
+                         T.NUM_GOALS)
+    a_t = tile_emb[jnp.clip(ruleset_goal[:, 1], 0, T.NUM_TILES - 1)]
+    a_c = col_emb[jnp.clip(ruleset_goal[:, 2], 0, T.NUM_COLORS - 1)]
+    b_t = tile_emb[jnp.clip(ruleset_goal[:, 3], 0, T.NUM_TILES - 1)]
+    b_c = col_emb[jnp.clip(ruleset_goal[:, 4], 0, T.NUM_COLORS - 1)]
+    rule_t = tile_emb[jnp.clip(rules[..., 1], 0, T.NUM_TILES - 1)]
+    rule_c = col_emb[jnp.clip(rules[..., 2], 0, T.NUM_COLORS - 1)]
+    rule_feat = jnp.concatenate([rule_t, rule_c], -1).mean(axis=1)
+    out = jnp.concatenate([gid, a_t, a_c, b_t, b_c, rule_feat], -1)
+    assert out.shape[-1] == T.NUM_GOALS + 6 * e
+    return out
+
+
+def policy_step(params, obs, prev_action, prev_reward, done, h, key,
+                cfg: ModelConfig):
+    """Forward + categorical sample. Returns (action, logp, value, h')."""
+    logits, value, h_new = network_step(params, obs, prev_action,
+                                        prev_reward, done, h, cfg)
+    logp_all = jax.nn.log_softmax(logits)
+    action = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    logp = jnp.take_along_axis(logp_all, action[:, None], axis=1)[:, 0]
+    return action, logp, value, h_new
+
+
+def _forward_sequence(params, obs, prev_action, prev_reward, done, h0, cfg):
+    """Scan network_step over time. obs [T,B,...]; returns logits [T,B,A],
+    values [T,B]."""
+    def body(h, xs):
+        o, pa, pr, d = xs
+        logits, value, h = network_step(params, o, pa, pr, d, h, cfg)
+        return h, (logits, value)
+
+    _, (logits, values) = jax.lax.scan(
+        body, h0, (obs, prev_action, prev_reward, done))
+    return logits, values
+
+
+def gae(rewards, values, dones_after, last_value, gamma, lam):
+    """Generalized advantage estimation over [T, B] arrays.
+
+    ``dones_after[t]`` marks *episode* termination after step t (trial ends
+    within an episode do NOT cut the value function — the RL² objective
+    maximizes return across trials, §4.2).
+    """
+    def body(carry, xs):
+        adv_next, v_next = carry
+        r, v, d = xs
+        nonterm = 1.0 - d
+        delta = r + gamma * v_next * nonterm - v
+        adv = delta + gamma * lam * nonterm * adv_next
+        return (adv, v), adv
+
+    (_, _), advs = jax.lax.scan(
+        body, (jnp.zeros_like(last_value), last_value),
+        (rewards, values, dones_after.astype(jnp.float32)), reverse=True)
+    return advs
+
+
+def ppo_loss(params, batch, hp, cfg: ModelConfig):
+    (obs, prev_action, prev_reward, done_before, actions, old_logp,
+     advantages, returns, h0) = batch
+    clip_eps, ent_coef, vf_coef = hp[1], hp[4], hp[5]
+
+    logits, values = _forward_sequence(params, obs, prev_action, prev_reward,
+                                       done_before, h0, cfg)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, actions[..., None], axis=-1)[..., 0]
+    ratio = jnp.exp(logp - old_logp)
+
+    adv = (advantages - advantages.mean()) / (advantages.std() + 1e-8)
+    pg1 = ratio * adv
+    pg2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pi_loss = -jnp.minimum(pg1, pg2).mean()
+
+    v_loss = 0.5 * jnp.square(values - returns).mean()
+    entropy = -(jnp.exp(logp_all) * logp_all).sum(-1).mean()
+
+    total = pi_loss + vf_coef * v_loss - ent_coef * entropy
+    approx_kl = ((ratio - 1.0) - jnp.log(ratio)).mean()
+    clip_frac = (jnp.abs(ratio - 1.0) > clip_eps).mean()
+    return total, (pi_loss, v_loss, entropy, approx_kl, clip_frac)
+
+
+def adam_update(params, grads, m, v, t, hp):
+    lr, b1, b2, eps = hp[0], 0.9, 0.999, 1e-8
+    t = t + 1
+    tf = t.astype(jnp.float32)
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * jnp.square(g)
+        mhat = mi / (1 - b1 ** tf)
+        vhat = vi / (1 - b2 ** tf)
+        new_params.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, t
+
+
+def global_norm_clip(grads, max_norm):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-8))
+    return [g * scale for g in grads], gn
+
+
+def train_update(params, m, v, t, rollout, hp, cfg: ModelConfig):
+    """One PPO minibatch update; everything fused into a single HLO.
+
+    rollout = (obs [T,B,V,V,2] i32, prev_action [T,B] i32, prev_reward
+    [T,B] f32, done_before [T,B] i32, actions [T,B] i32, old_logp [T,B] f32,
+    old_value [T,B] f32, reward [T,B] f32, done_after [T,B] i32,
+    last_value [B] f32, h0 [B,H] f32).
+    Returns (params, m, v, t, metrics[8]).
+    """
+    (obs, prev_action, prev_reward, done_before, actions, old_logp,
+     old_value, reward, done_after, last_value, h0) = rollout
+    gamma, lam, max_gn = hp[2], hp[3], hp[6]
+
+    advantages = gae(reward, old_value, done_after, last_value, gamma, lam)
+    returns = advantages + old_value
+
+    batch = (obs, prev_action, prev_reward, done_before, actions, old_logp,
+             advantages, returns, h0)
+    (total, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, batch, hp, cfg)
+    pi_loss, v_loss, entropy, approx_kl, clip_frac = aux
+
+    grads, grad_norm = global_norm_clip(grads, max_gn)
+    params, m, v, t = adam_update(params, grads, m, v, t, hp)
+
+    metrics = jnp.stack([total, pi_loss, v_loss, entropy, approx_kl,
+                         clip_frac, grad_norm, advantages.std()])
+    return params, m, v, t, metrics.astype(jnp.float32)
+
+
+def default_hp():
+    """Table 6 values (lr, clip_eps, gamma, gae_lambda, ent_coef, vf_coef,
+    max_grad_norm, pad)."""
+    return jnp.array([1e-3, 0.2, 0.99, 0.95, 0.01, 0.5, 0.5, 0.0],
+                     dtype=jnp.float32)

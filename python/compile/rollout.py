@@ -1,0 +1,206 @@
+"""L2 — fused rollout graphs (the Anakin architecture, paper §2/§4.2).
+
+The paper's throughput comes from jit-compiling *entire loops*, not single
+steps (Listing 3 + PureJaxRL lineage). We lower three loop artifacts:
+
+- ``env_rollout``: T random-policy steps over a batch of envs — the §4.1
+  simulation-throughput workload (auto-reset enabled, obs forced via a
+  checksum so XLA cannot dead-code the observation path).
+- ``train_iter``: collect T steps with the RL² policy, then PPO updates
+  over minibatch slices — one fused HLO per training iteration (Fig. 5f,
+  Fig. 6/7/8 harness).
+- ``eval_rollout``: policy rollout without learning, returning per-env
+  return/trial counts for the 25-trials / 20th-percentile protocol.
+
+The Rust coordinator feeds state in, gets state back, and swaps rulesets /
+keys between calls; Python never runs at that point.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .xmg import env
+
+
+def batched_step(view_size):
+    return jax.vmap(lambda s, a: env.step(s, a, view_size=view_size))
+
+
+def state_from_flat(args):
+    """Rebuild env.State from the 11 flat arrays (aot.STATE_FIELDS order)."""
+    return env.State(*args)
+
+
+def state_to_flat(s):
+    return (s.base_grid, s.grid, s.agent_pos, s.agent_dir, s.pocket,
+            s.rules, s.goal, s.init_tiles, s.step_count, s.key, s.max_steps)
+
+
+def make_env_rollout(view_size, t_len):
+    """Random-policy rollout: (state..., key) -> (state'..., reward_sum[B],
+    done_sum[B], trial_sum[B], obs_checksum[])."""
+    step = batched_step(view_size)
+
+    def fn(*args):
+        state = state_from_flat(args[:11])
+        key = args[11]
+        batch = state.agent_dir.shape[0]
+
+        def body(carry, k):
+            state, acc_r, acc_d, acc_t, chk = carry
+            action = jax.random.randint(k, (batch,), 0, 6, dtype=jnp.int32)
+            out = step(state, action)
+            # checksum keeps the observation computation live under DCE —
+            # the paper's rollouts materialize obs for the agent, ours must
+            # pay the same cost even with a random policy
+            chk = chk + jnp.sum(out.obs.astype(jnp.int32) % 7)
+            return (out.state, acc_r + out.reward,
+                    acc_d + out.done, acc_t + out.trial_done, chk), None
+
+        keys = jax.random.split(key, t_len)
+        zero_f = jnp.zeros((batch,), jnp.float32)
+        zero_i = jnp.zeros((batch,), jnp.int32)
+        (state, acc_r, acc_d, acc_t, chk), _ = jax.lax.scan(
+            body, (state, zero_f, zero_i, zero_i,
+                   jnp.asarray(0, jnp.int32)), keys)
+        return state_to_flat(state) + (acc_r, acc_d, acc_t, chk)
+
+    return fn
+
+
+def _collect(params, cfg, step, state, obs, prev_a, prev_r, done_prev, h,
+             key, t_len):
+    """Scan the policy+env loop for t_len steps, recording the PPO rollout."""
+    def body(carry, k):
+        state, obs, prev_a, prev_r, done_prev, h = carry
+        action, logp, value, h2 = M.policy_step(
+            params, obs, prev_a, prev_r.astype(jnp.float32), done_prev, h,
+            k, cfg)
+        out = step(state, action)
+        rec = (obs, prev_a, prev_r, done_prev, action, logp, value,
+               out.reward, out.done)
+        carry = (out.state, out.obs, action, out.reward, out.done, h2)
+        return carry, rec
+
+    keys = jax.random.split(key, t_len)
+    carry, recs = jax.lax.scan(
+        body, (state, obs, prev_a, prev_r, done_prev, h), keys)
+    return carry, recs
+
+
+def make_train_iter(cfg, view_size, t_len, batch, minibatch):
+    """One full PPO iteration: collect T×B, then B/minibatch sequential
+    minibatch updates (update_epochs=1, Table 6).
+
+    Inputs:  params(NP), m(NP), v(NP), t,
+             state(11, batched B), obs[B,V,V,2], prev_action[B],
+             prev_reward[B], done_prev[B], h[B,H], key[2], hp[8]
+    Outputs: params(NP), m(NP), v(NP), t,
+             state(11), obs, prev_action, prev_reward, done_prev, h,
+             metrics[8], reward_sum[], trials[], episodes[]
+    """
+    assert batch % minibatch == 0
+    n_mb = batch // minibatch
+    np_ = M.NUM_PARAMS
+    step = batched_step(view_size)
+
+    def fn(*args):
+        params = list(args[:np_])
+        m = list(args[np_:2 * np_])
+        v = list(args[2 * np_:3 * np_])
+        t = args[3 * np_]
+        s = 3 * np_ + 1
+        state = state_from_flat(args[s:s + 11])
+        obs, prev_a, prev_r, done_prev, h = args[s + 11:s + 16]
+        key, hp = args[s + 16], args[s + 17]
+
+        k_collect, k_rest = jax.random.split(key)
+        h0 = h  # hidden state at collection start, for minibatch replays
+        carry, recs = _collect(params, cfg, step, state, obs, prev_a,
+                               prev_r, done_prev, h, k_collect, t_len)
+        (state, obs, prev_a, prev_r, done_prev, h) = carry
+        (r_obs, r_pa, r_pr, r_db, r_act, r_logp, r_val, r_rew,
+         r_da) = recs
+
+        # bootstrap value for GAE from the post-rollout observation
+        _, last_value, _ = M.network_step(
+            params, obs, prev_a, prev_r.astype(jnp.float32), done_prev, h,
+            cfg)
+
+        def to_mb(x):  # [T, B, ...] -> [n_mb, T, MB, ...]
+            return jnp.moveaxis(
+                x.reshape(x.shape[0], n_mb, minibatch, *x.shape[2:]), 1, 0)
+
+        mb_rolls = jax.tree_util.tree_map(
+            to_mb, (r_obs, r_pa, r_pr.astype(jnp.float32), r_db, r_act,
+                    r_logp, r_val, r_rew, r_da))
+        mb_last_v = last_value.reshape(n_mb, minibatch)
+        mb_h0 = h0.reshape(n_mb, minibatch, -1)
+
+        def mb_body(carry, xs):
+            params, m, v, t = carry
+            rolls, lv, h0s = xs
+            rollout = tuple(rolls) + (lv, h0s)
+            params, m, v, t, metrics = M.train_update(
+                list(params), list(m), list(v), t, rollout, hp, cfg)
+            return (tuple(params), tuple(m), tuple(v), t), metrics
+
+        (params, m, v, t), metrics = jax.lax.scan(
+            mb_body, (tuple(params), tuple(m), tuple(v), t),
+            (mb_rolls, mb_last_v, mb_h0))
+        metrics = metrics.mean(axis=0)
+
+        reward_sum = r_rew.sum()
+        trials = (r_rew > 0).astype(jnp.int32).sum()
+        episodes = r_da.sum()
+        del k_rest
+        return (tuple(params) + tuple(m) + tuple(v) + (t,)
+                + state_to_flat(state)
+                + (obs, prev_a, prev_r, done_prev, h, metrics,
+                   reward_sum, trials, episodes))
+
+    return fn
+
+
+def make_eval_rollout(cfg, view_size, t_len):
+    """Policy rollout without learning. Outputs per-env totals for the
+    evaluation protocol of §4.2: return_sum[B], goals_reached[B] (trials
+    solved), episodes_done[B], plus the carried RL² state so evaluation can
+    span multiple calls."""
+    np_ = M.NUM_PARAMS
+    step = batched_step(view_size)
+
+    def fn(*args):
+        params = list(args[:np_])
+        state = state_from_flat(args[np_:np_ + 11])
+        obs, prev_a, prev_r, done_prev, h = args[np_ + 11:np_ + 16]
+        key = args[np_ + 16]
+
+        def body(carry, k):
+            state, obs, prev_a, prev_r, done_prev, h, acc_r, acc_g, acc_e \
+                = carry
+            action, _, _, h2 = M.policy_step(
+                params, obs, prev_a, prev_r.astype(jnp.float32), done_prev,
+                h, k, cfg)
+            out = step(state, action)
+            acc_r = acc_r + out.reward
+            acc_g = acc_g + (out.reward > 0).astype(jnp.int32)
+            acc_e = acc_e + out.done
+            carry = (out.state, out.obs, action, out.reward, out.done, h2,
+                     acc_r, acc_g, acc_e)
+            return carry, None
+
+        batch = obs.shape[0]
+        zf = jnp.zeros((batch,), jnp.float32)
+        zi = jnp.zeros((batch,), jnp.int32)
+        keys = jax.random.split(key, t_len)
+        carry, _ = jax.lax.scan(
+            body, (state, obs, prev_a, prev_r, done_prev, h, zf, zi, zi),
+            keys)
+        (state, obs, prev_a, prev_r, done_prev, h, acc_r, acc_g,
+         acc_e) = carry
+        return (state_to_flat(state)
+                + (obs, prev_a, prev_r, done_prev, h, acc_r, acc_g, acc_e))
+
+    return fn

@@ -1,0 +1,12 @@
+"""xmg — XLand-MiniGrid environment semantics in JAX (build-time, L2).
+
+This package implements the paper's grid-world engine: tiles/colors
+(Table 1), the rules & goals system (Tables 2-3), partial egocentric
+observations, trial auto-reset, and the reset/step functions that get
+vmapped and AOT-lowered to HLO by ``compile/aot.py``.
+
+Nothing here runs at serving/training time — the Rust coordinator executes
+the lowered artifacts through PJRT.
+"""
+
+from . import types, grid, rules, goals, observation, env, render  # noqa: F401

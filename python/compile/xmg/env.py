@@ -1,0 +1,206 @@
+"""The XLand-MiniGrid environment: ``reset`` / ``step`` (paper §2.2).
+
+The environment is completely stateless: all dynamics live in the ``State``
+tuple of fixed-shape arrays, so ``jax.vmap`` batches over envs *and* over
+rulesets (the paper's core trick — tasks are data). ``step`` implements:
+
+- the 6 discrete actions (move_forward, turn_left, turn_right, pick_up,
+  put_down, toggle);
+- rule evaluation after the acting actions only (§2.1 "for efficiency
+  reasons, the rules are evaluated only after some actions");
+- goal checking with reward ``1 - 0.9 * step/max_steps`` on success;
+- trial auto-reset *inside* step (the agent "can get more trials if it
+  manages to solve tasks faster", §4.2) and episode auto-reset at
+  ``max_steps`` (GymAutoResetWrapper semantics, enabled for all throughput
+  measurements as in §4.1).
+
+The PRNG key is state-carried (paper §2.2: State contains "a key for the
+random number generator that can be used during resets").
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+from .goals import check_goal
+from .grid import place_objects
+from .observation import observe
+from .rules import check_rules
+
+
+class State(NamedTuple):
+    """Full environment state; every leaf is a fixed-shape array."""
+    base_grid: jnp.ndarray   # i32[H, W, 2] walls/doors only
+    grid: jnp.ndarray        # i32[H, W, 2] current grid
+    agent_pos: jnp.ndarray   # i32[2] (row, col)
+    agent_dir: jnp.ndarray   # i32[] 0=up 1=right 2=down 3=left
+    pocket: jnp.ndarray      # i32[2] (tile, color), EMPTY sentinel if empty
+    rules: jnp.ndarray       # i32[MAX_RULES, RULE_ENC]
+    goal: jnp.ndarray        # i32[GOAL_ENC]
+    init_tiles: jnp.ndarray  # i32[MAX_INIT, 2] objects placed at trial start
+    step_count: jnp.ndarray  # i32[]
+    key: jnp.ndarray         # u32[2] PRNG key
+    max_steps: jnp.ndarray   # i32[]
+
+
+class StepOutput(NamedTuple):
+    state: State
+    obs: jnp.ndarray         # i32[V, V, 2]
+    reward: jnp.ndarray      # f32[]
+    done: jnp.ndarray        # i32[] episode ended (max_steps reached)
+    trial_done: jnp.ndarray  # i32[] trial ended (goal or episode end)
+
+
+def reset(base_grid, rules, goal, init_tiles, max_steps, key,
+          view_size=5, see_through_walls=True):
+    """Start a fresh episode: place init objects + agent on random floor
+    cells of ``base_grid``."""
+    key, sub = jax.random.split(key)
+    grid, agent_pos, agent_dir = place_objects(sub, base_grid, init_tiles)
+    state = State(
+        base_grid=base_grid,
+        grid=grid,
+        agent_pos=agent_pos,
+        agent_dir=agent_dir,
+        pocket=jnp.array(T.POCKET_EMPTY, dtype=jnp.int32),
+        rules=rules,
+        goal=goal,
+        init_tiles=init_tiles,
+        step_count=jnp.asarray(0, dtype=jnp.int32),
+        key=key,
+        max_steps=jnp.asarray(max_steps, dtype=jnp.int32),
+    )
+    obs = observe(grid, agent_pos, agent_dir, view_size, see_through_walls)
+    return state, obs
+
+
+# --- action branches (identical signatures for lax.switch) ------------------
+
+def _front(grid, pos, direction):
+    h, w = grid.shape[0], grid.shape[1]
+    r = pos[0] + T.DIR_DR[direction]
+    c = pos[1] + T.DIR_DC[direction]
+    inside = (r >= 0) & (r < h) & (c >= 0) & (c < w)
+    rc = jnp.clip(r, 0, h - 1)
+    cc = jnp.clip(c, 0, w - 1)
+    return rc, cc, inside
+
+
+def _act_forward(grid, pos, direction, pocket):
+    rc, cc, inside = _front(grid, pos, direction)
+    ok = inside & T.is_walkable(grid[rc, cc, 0])
+    pos = jnp.where(ok, jnp.stack([rc, cc]), pos)
+    return grid, pos, direction, pocket
+
+
+def _act_turn_left(grid, pos, direction, pocket):
+    return grid, pos, (direction + 3) % 4, pocket
+
+
+def _act_turn_right(grid, pos, direction, pocket):
+    return grid, pos, (direction + 1) % 4, pocket
+
+
+def _act_pick_up(grid, pos, direction, pocket):
+    rc, cc, inside = _front(grid, pos, direction)
+    cell = grid[rc, cc]
+    empty = (pocket[0] == T.TILE_EMPTY)
+    ok = inside & empty & T.is_pickable(cell[0])
+    floor = jnp.array(T.FLOOR_CELL, dtype=jnp.int32)
+    grid = grid.at[rc, cc].set(jnp.where(ok, floor, cell))
+    pocket = jnp.where(ok, cell, pocket)
+    return grid, pos, direction, pocket
+
+
+def _act_put_down(grid, pos, direction, pocket):
+    rc, cc, inside = _front(grid, pos, direction)
+    cell = grid[rc, cc]
+    holding = pocket[0] != T.TILE_EMPTY
+    ok = inside & holding & (cell[0] == T.TILE_FLOOR)
+    grid = grid.at[rc, cc].set(jnp.where(ok, pocket, cell))
+    empty = jnp.array(T.POCKET_EMPTY, dtype=jnp.int32)
+    pocket = jnp.where(ok, empty, pocket)
+    return grid, pos, direction, pocket
+
+
+def _act_toggle(grid, pos, direction, pocket):
+    rc, cc, inside = _front(grid, pos, direction)
+    cell = grid[rc, cc]
+    tile, color = cell[0], cell[1]
+    has_key = (pocket[0] == T.TILE_KEY) & (pocket[1] == color)
+    new_tile = jnp.where(
+        tile == T.TILE_DOOR_CLOSED, T.TILE_DOOR_OPEN,
+        jnp.where(tile == T.TILE_DOOR_OPEN, T.TILE_DOOR_CLOSED,
+                  jnp.where((tile == T.TILE_DOOR_LOCKED) & has_key,
+                            T.TILE_DOOR_OPEN, tile)))
+    new_tile = jnp.where(inside, new_tile, tile)
+    grid = grid.at[rc, cc, 0].set(new_tile)
+    return grid, pos, direction, pocket
+
+
+_ACTION_FNS = [_act_forward, _act_turn_left, _act_turn_right,
+               _act_pick_up, _act_put_down, _act_toggle]
+
+
+def step(state: State, action, view_size=5, see_through_walls=True):
+    """One environment transition with trial/episode auto-reset."""
+    action = jnp.clip(action, 0, T.NUM_ACTIONS - 1)
+    grid, pos, direction, pocket = jax.lax.switch(
+        action, _ACTION_FNS, state.grid, state.agent_pos, state.agent_dir,
+        state.pocket)
+
+    # rules fire only after acting actions (not after turns)
+    triggering = ((action == T.ACTION_FORWARD) | (action == T.ACTION_PICK_UP)
+                  | (action == T.ACTION_PUT_DOWN)
+                  | (action == T.ACTION_TOGGLE))
+    r_grid, r_pocket = check_rules(grid, pos, pocket, state.rules)
+    grid = jnp.where(triggering, r_grid, grid)
+    pocket = jnp.where(triggering, r_pocket, pocket)
+
+    achieved = check_goal(grid, pos, pocket, state.goal)
+    new_step = state.step_count + 1
+    done = new_step >= state.max_steps
+    reward = jnp.where(
+        achieved,
+        1.0 - 0.9 * new_step.astype(jnp.float32)
+        / jnp.maximum(state.max_steps, 1).astype(jnp.float32),
+        0.0).astype(jnp.float32)
+
+    # trial auto-reset on goal, full episode auto-reset at max_steps;
+    # branch-free (both vmap-friendly and matching lax.select cost model)
+    trial_done = achieved | done
+    key, sub = jax.random.split(state.key)
+    f_grid, f_pos, f_dir = place_objects(sub, state.base_grid,
+                                         state.init_tiles)
+    grid = jnp.where(trial_done, f_grid, grid)
+    pos = jnp.where(trial_done, f_pos, pos)
+    direction = jnp.where(trial_done, f_dir, direction)
+    empty = jnp.array(T.POCKET_EMPTY, dtype=jnp.int32)
+    pocket = jnp.where(trial_done, empty, pocket)
+    key = jnp.where(trial_done, key, state.key)
+    step_count = jnp.where(done, 0, new_step).astype(jnp.int32)
+
+    new_state = State(
+        base_grid=state.base_grid, grid=grid, agent_pos=pos,
+        agent_dir=direction, pocket=pocket, rules=state.rules,
+        goal=state.goal, init_tiles=state.init_tiles,
+        step_count=step_count, key=key, max_steps=state.max_steps)
+    obs = observe(grid, pos, direction, view_size, see_through_walls)
+    return StepOutput(state=new_state, obs=obs, reward=reward,
+                      done=done.astype(jnp.int32),
+                      trial_done=trial_done.astype(jnp.int32))
+
+
+def default_max_steps(h, w):
+    """Paper §2.3 heuristic: 3 × grid height × grid width."""
+    return 3 * h * w
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def reset_jit(base_grid, rules, goal, init_tiles, key, view_size,
+              see_through_walls, max_steps):
+    return reset(base_grid, rules, goal, init_tiles, max_steps, key,
+                 view_size, see_through_walls)

@@ -1,0 +1,111 @@
+"""Goals (paper Table 2, §2.1): pure condition checks, never mutate state.
+
+Encoding: ``int32[GOAL_ENC] = [id, a0, a1, a2, a3]``; argument meaning is
+per-goal (object = (tile, color) pair, position = (row, col)). Dispatch is a
+``jax.lax.switch`` over the 15 goal functions, mirroring
+``xminigrid.core.goals.check_goal`` (App. I).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+from .grid import object_mask, shift_mask
+
+_OPP = {T.DIR_UP: T.DIR_DOWN, T.DIR_RIGHT: T.DIR_LEFT,
+        T.DIR_DOWN: T.DIR_UP, T.DIR_LEFT: T.DIR_RIGHT}
+
+
+def _goal_empty(grid, agent_pos, pocket, args):
+    return jnp.asarray(False)
+
+
+def _goal_agent_hold(grid, agent_pos, pocket, args):
+    return (pocket[0] == args[0]) & (pocket[1] == args[1])
+
+
+def _goal_agent_on_tile(grid, agent_pos, pocket, args):
+    cell = grid[agent_pos[0], agent_pos[1]]
+    return (cell[0] == args[0]) & (cell[1] == args[1])
+
+
+def _agent_near_any(grid, agent_pos, a_t, a_c, directions):
+    h, w = grid.shape[0], grid.shape[1]
+    hit = jnp.asarray(False)
+    for d in directions:
+        r = agent_pos[0] + T.DIR_DR[d]
+        c = agent_pos[1] + T.DIR_DC[d]
+        inside = (r >= 0) & (r < h) & (c >= 0) & (c < w)
+        cell = grid[jnp.clip(r, 0, h - 1), jnp.clip(c, 0, w - 1)]
+        hit = hit | (inside & (cell[0] == a_t) & (cell[1] == a_c))
+    return hit
+
+
+def _goal_agent_near(grid, agent_pos, pocket, args):
+    return _agent_near_any(grid, agent_pos, args[0], args[1],
+                           (T.DIR_UP, T.DIR_RIGHT, T.DIR_DOWN, T.DIR_LEFT))
+
+
+def _tile_near_any(grid, a_t, a_c, b_t, b_c, directions):
+    mask_a = object_mask(grid, a_t, a_c)
+    mask_b = object_mask(grid, b_t, b_c)
+    hit = jnp.asarray(False)
+    for d in directions:
+        hit = hit | jnp.any(mask_a & shift_mask(mask_b, _OPP[d]))
+    return hit
+
+
+def _goal_tile_near(grid, agent_pos, pocket, args):
+    return _tile_near_any(grid, args[0], args[1], args[2], args[3],
+                          (T.DIR_UP, T.DIR_RIGHT, T.DIR_DOWN, T.DIR_LEFT))
+
+
+def _goal_agent_on_position(grid, agent_pos, pocket, args):
+    return (agent_pos[0] == args[0]) & (agent_pos[1] == args[1])
+
+
+def _goal_tile_on_position(grid, agent_pos, pocket, args):
+    h, w = grid.shape[0], grid.shape[1]
+    r = jnp.clip(args[2], 0, h - 1)
+    c = jnp.clip(args[3], 0, w - 1)
+    cell = grid[r, c]
+    return (cell[0] == args[0]) & (cell[1] == args[1])
+
+
+def _make_goal_tile_near_dir(direction):
+    def goal(grid, agent_pos, pocket, args):
+        return _tile_near_any(grid, args[0], args[1], args[2], args[3],
+                              (direction,))
+    return goal
+
+
+def _make_goal_agent_near_dir(direction):
+    def goal(grid, agent_pos, pocket, args):
+        return _agent_near_any(grid, agent_pos, args[0], args[1],
+                               (direction,))
+    return goal
+
+
+_GOAL_FNS = [
+    _goal_empty,                               # 0
+    _goal_agent_hold,                          # 1
+    _goal_agent_on_tile,                       # 2
+    _goal_agent_near,                          # 3
+    _goal_tile_near,                           # 4
+    _goal_agent_on_position,                   # 5
+    _goal_tile_on_position,                    # 6
+    _make_goal_tile_near_dir(T.DIR_UP),        # 7  b one tile above a
+    _make_goal_tile_near_dir(T.DIR_RIGHT),     # 8
+    _make_goal_tile_near_dir(T.DIR_DOWN),      # 9
+    _make_goal_tile_near_dir(T.DIR_LEFT),      # 10
+    _make_goal_agent_near_dir(T.DIR_UP),       # 11 a one tile above agent
+    _make_goal_agent_near_dir(T.DIR_RIGHT),    # 12
+    _make_goal_agent_near_dir(T.DIR_DOWN),     # 13
+    _make_goal_agent_near_dir(T.DIR_LEFT),     # 14
+]
+
+
+def check_goal(grid, agent_pos, pocket, goal):
+    """Evaluate an encoded goal; returns a scalar bool."""
+    gid = jnp.clip(goal[0], 0, T.NUM_GOALS - 1)
+    return jax.lax.switch(gid, _GOAL_FNS, grid, agent_pos, pocket, goal[1:])

@@ -1,0 +1,116 @@
+"""Grid helpers: masks, neighbor shifts, random placement.
+
+A grid is an ``int32[H, W, 2]`` array; ``grid[..., 0]`` is the tile id and
+``grid[..., 1]`` the color id (paper §2.2). The agent is *not* part of the
+grid — it lives in separate state fields.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+
+def object_mask(grid, tile, color):
+    """Boolean [H, W] mask of cells equal to object (tile, color)."""
+    return (grid[..., 0] == tile) & (grid[..., 1] == color)
+
+
+def shift_mask(mask, direction):
+    """shift_mask(m, d)[r, c] == m[r - dr, c - dc]: the mask moved one cell
+    *in* direction d (0=up,1=right,2=down,3=left), zero-filled at borders.
+
+    With ``A & shift_mask(B, DIR_DOWN)`` a cell holds ``a`` with ``b``
+    directly above it (b moved down lands on a).
+    """
+    if direction == T.DIR_UP:
+        return jnp.pad(mask[1:, :], ((0, 1), (0, 0)))
+    if direction == T.DIR_RIGHT:
+        return jnp.pad(mask[:, :-1], ((0, 0), (1, 0)))
+    if direction == T.DIR_DOWN:
+        return jnp.pad(mask[:-1, :], ((1, 0), (0, 0)))
+    if direction == T.DIR_LEFT:
+        return jnp.pad(mask[:, 1:], ((0, 0), (0, 1)))
+    raise ValueError(direction)
+
+
+def first_true_flat(flags):
+    """Index of the first True in flattened ``flags`` (0 if none) and whether
+    any is True. Deterministic tie-break = row-major order, mirrored by the
+    Rust oracle."""
+    flat = flags.reshape(-1)
+    any_ = jnp.any(flat)
+    idx = jnp.argmax(flat)  # first max = first True
+    return idx, any_
+
+
+def neighbor_cell(grid, pos, direction):
+    """(tile, color) of the neighbor of ``pos`` in ``direction``; END_OF_MAP
+    outside the grid."""
+    h, w = grid.shape[0], grid.shape[1]
+    r = pos[0] + T.DIR_DR[direction]
+    c = pos[1] + T.DIR_DC[direction]
+    inside = (r >= 0) & (r < h) & (c >= 0) & (c < w)
+    rc = jnp.clip(r, 0, h - 1)
+    cc = jnp.clip(c, 0, w - 1)
+    cell = grid[rc, cc]
+    off = jnp.array([T.TILE_END_OF_MAP, T.COLOR_END_OF_MAP], dtype=jnp.int32)
+    return jnp.where(inside, cell, off), (r, c), inside
+
+
+def place_objects(key, base_grid, init_tiles):
+    """Place ``init_tiles`` (padded with tile==0 rows) and the agent on
+    uniformly random distinct FLOOR cells of ``base_grid``.
+
+    Returns (grid, agent_pos[2] i32, agent_dir i32). Padded object rows write
+    a FLOOR_CELL onto a floor cell (a no-op), keeping the computation
+    branch-free — the trick that makes trial auto-reset inside ``step``
+    jit/vmap friendly (paper §2.2 auto-reset wrapper, App. C on branching).
+    """
+    h, w = base_grid.shape[0], base_grid.shape[1]
+    mi = init_tiles.shape[0]
+    k_pos, k_dir = jax.random.split(key)
+
+    free = base_grid[..., 0] == T.TILE_FLOOR
+    scores = jax.random.uniform(k_pos, (h, w))
+    scores = jnp.where(free, scores, -1.0)  # non-free cells sort last
+    # §Perf: unrolled argmax top-(MI+1) instead of a full argsort —
+    # placement runs on every step (branch-free trial auto-reset), so it is
+    # on the hot path; the distribution is identical (first k of a uniform
+    # random order). Written with plain reduce ops because xla_extension
+    # 0.5.1's HLO parser rejects lax.top_k's `largest` attribute.
+    flat_scores = scores.reshape(-1)
+    picks = []
+    for _ in range(mi + 1):
+        i = jnp.argmax(flat_scores)
+        picks.append(i)
+        flat_scores = flat_scores.at[i].set(-2.0)
+    order = jnp.stack(picks)
+
+    valid = (init_tiles[:, 0] > 0)[:, None]
+    floor = jnp.array(T.FLOOR_CELL, dtype=jnp.int32)
+    vals = jnp.where(valid, init_tiles, floor[None, :]).astype(jnp.int32)
+
+    flat = base_grid.reshape(h * w, 2)
+    flat = flat.at[order[:mi]].set(vals)
+    grid = flat.reshape(h, w, 2)
+
+    agent_flat = order[mi]
+    agent_pos = jnp.stack([agent_flat // w, agent_flat % w]).astype(jnp.int32)
+    agent_dir = jax.random.randint(k_dir, (), 0, 4, dtype=jnp.int32)
+    return grid, agent_pos, agent_dir
+
+
+def empty_room(h, w):
+    """Base grid for a single room: WALL border, FLOOR interior (numpy-side
+    helper used by python tests; the Rust layout library is authoritative
+    for registered environments)."""
+    grid = jnp.zeros((h, w, 2), dtype=jnp.int32)
+    grid = grid.at[..., 0].set(T.TILE_FLOOR)
+    grid = grid.at[..., 1].set(T.COLOR_BLACK)
+    wall = jnp.array(T.WALL_CELL, dtype=jnp.int32)
+    grid = grid.at[0, :].set(wall)
+    grid = grid.at[h - 1, :].set(wall)
+    grid = grid.at[:, 0].set(wall)
+    grid = grid.at[:, w - 1].set(wall)
+    return grid

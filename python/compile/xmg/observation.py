@@ -1,0 +1,66 @@
+"""Partial egocentric observations (paper §2.2).
+
+The agent sees a V×V window, rotated so it faces "up" with the agent at the
+bottom-center cell ``(V-1, V//2)``. Each cell is ``(tile_id, color_id)`` —
+symbolic, not pixels. Cells outside the grid read END_OF_MAP. With
+``see_through_walls=False`` a flood-fill visibility pass marks occluded
+cells UNSEEN (light spreads outward from the agent through transparent
+cells; order-independent fixed point, mirrored by the Rust oracle).
+"""
+
+import jax.numpy as jnp
+
+from . import types as T
+
+
+def view_coords(view_size):
+    """Static (forward, lateral) offsets for each view cell; agent at
+    (V-1, V//2) facing up."""
+    v = view_size
+    rows = jnp.arange(v)
+    cols = jnp.arange(v)
+    fwd = (v - 1) - rows  # forward distance
+    lat = cols - (v // 2)  # lateral offset (right positive)
+    return jnp.meshgrid(fwd, lat, indexing="ij")
+
+
+def observe(grid, agent_pos, agent_dir, view_size, see_through_walls=True):
+    h, w = grid.shape[0], grid.shape[1]
+    v = view_size
+    fwd, lat = view_coords(v)
+
+    # world deltas per direction: facing up=(-f, l), right=(l, f),
+    # down=(f, -l), left=(-l, -f)
+    drs = jnp.stack([-fwd, lat, fwd, -lat])
+    dcs = jnp.stack([lat, fwd, -lat, -fwd])
+    dr = drs[agent_dir]
+    dc = dcs[agent_dir]
+
+    r = agent_pos[0] + dr
+    c = agent_pos[1] + dc
+    inside = (r >= 0) & (r < h) & (c >= 0) & (c < w)
+    rc = jnp.clip(r, 0, h - 1)
+    cc = jnp.clip(c, 0, w - 1)
+    obs = grid[rc, cc]
+    off = jnp.array([T.TILE_END_OF_MAP, T.COLOR_END_OF_MAP], dtype=jnp.int32)
+    obs = jnp.where(inside[..., None], obs, off[None, None, :])
+
+    if not see_through_walls:
+        transparent = ~T.blocks_sight(obs[..., 0])
+        vis = jnp.zeros((v, v), dtype=jnp.bool_)
+        vis = vis.at[v - 1, v // 2].set(True)
+        # light spreads from visible transparent cells to 4-neighbors;
+        # fixed point reached after <= 2*V sweeps
+        for _ in range(2 * v):
+            src = vis & transparent
+            spread = (
+                jnp.pad(src[1:, :], ((0, 1), (0, 0)))
+                | jnp.pad(src[:-1, :], ((1, 0), (0, 0)))
+                | jnp.pad(src[:, 1:], ((0, 0), (0, 1)))
+                | jnp.pad(src[:, :-1], ((0, 0), (1, 0)))
+            )
+            vis = vis | spread
+        unseen = jnp.array([T.TILE_UNSEEN, T.COLOR_UNSEEN], dtype=jnp.int32)
+        obs = jnp.where(vis[..., None], obs, unseen[None, None, :])
+
+    return obs.astype(jnp.int32)

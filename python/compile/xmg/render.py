@@ -1,0 +1,87 @@
+"""RGB rendering of symbolic observations (paper App. H).
+
+``render_obs`` maps an ``i32[V, V, 2]`` symbolic observation to a
+``f32[V*P, V*P, 3]`` image with P pixels per tile, entirely in jnp so it can
+be AOT-lowered (``render_rgb_*`` artifacts) and benchmarked for Fig. 13. The
+paper renders 224×224; we render at tile-patch resolution (the upscale is a
+constant factor, not a semantic difference — DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax.numpy as jnp
+
+from . import types as T
+
+# RGB per color id (rows index COLOR_*)
+_PALETTE = jnp.array([
+    [0, 0, 0],        # END_OF_MAP
+    [40, 40, 40],     # UNSEEN
+    [0, 0, 0],        # EMPTY
+    [255, 0, 0],      # RED
+    [0, 255, 0],      # GREEN
+    [0, 0, 255],      # BLUE
+    [112, 39, 195],   # PURPLE
+    [255, 255, 0],    # YELLOW
+    [100, 100, 100],  # GREY
+    [20, 20, 20],     # BLACK
+    [255, 140, 0],    # ORANGE
+    [255, 255, 255],  # WHITE
+    [139, 69, 19],    # BROWN
+    [255, 105, 180],  # PINK
+], dtype=jnp.float32) / 255.0
+
+
+def _tile_patches(patch):
+    """Binary P×P stencils per tile id (shape [NUM_TILES, P, P])."""
+    p = patch
+    y, x = jnp.meshgrid(jnp.arange(p), jnp.arange(p), indexing="ij")
+    yc = (y - (p - 1) / 2.0) / (p / 2.0)
+    xc = (x - (p - 1) / 2.0) / (p / 2.0)
+    full = jnp.ones((p, p))
+    empty = jnp.zeros((p, p))
+    circle = (yc**2 + xc**2 <= 0.64).astype(jnp.float32)
+    square = ((jnp.abs(yc) <= 0.7) & (jnp.abs(xc) <= 0.7)).astype(jnp.float32)
+    pyramid = ((yc >= -0.7) & (jnp.abs(xc) <= 0.7 * (yc + 0.7) / 1.4)
+               ).astype(jnp.float32)
+    key = (((yc**2 + xc**2 <= 0.3) & (yc < 0))
+           | ((jnp.abs(xc) < 0.18) & (yc >= -0.2) & (yc <= 0.8))
+           ).astype(jnp.float32)
+    door = ((jnp.abs(yc) > 0.75) | (jnp.abs(xc) > 0.75)).astype(jnp.float32)
+    door_open = ((jnp.abs(xc) > 0.75)).astype(jnp.float32)
+    hexa = ((jnp.abs(yc) + jnp.abs(xc) * 0.6) <= 0.8).astype(jnp.float32)
+    star = (((jnp.abs(yc) <= 0.25) | (jnp.abs(xc) <= 0.25))
+            & (jnp.abs(yc) <= 0.8) & (jnp.abs(xc) <= 0.8)).astype(jnp.float32)
+    goal = full * 0.6
+    stencils = [
+        empty,      # END_OF_MAP
+        full,       # UNSEEN (dim overlay via palette)
+        empty,      # EMPTY
+        empty,      # FLOOR (background only)
+        full,       # WALL
+        circle,     # BALL
+        square,     # SQUARE
+        pyramid,    # PYRAMID
+        goal,       # GOAL
+        key,        # KEY
+        door,       # DOOR_LOCKED
+        door,       # DOOR_CLOSED
+        door_open,  # DOOR_OPEN
+        hexa,       # HEX
+        star,       # STAR
+    ]
+    return jnp.stack(stencils)
+
+
+def render_obs(obs, patch=8):
+    """Render symbolic obs [V, V, 2] -> image [V*P, V*P, 3] float32 in
+    [0, 1]."""
+    v = obs.shape[0]
+    stencils = _tile_patches(patch)            # [NT, P, P]
+    tile = jnp.clip(obs[..., 0], 0, T.NUM_TILES - 1)
+    color = jnp.clip(obs[..., 1], 0, T.NUM_COLORS - 1)
+    fg = stencils[tile]                        # [V, V, P, P]
+    rgb = _PALETTE[color]                      # [V, V, 3]
+    floor_bg = jnp.array([0.12, 0.12, 0.12], dtype=jnp.float32)
+    img = (fg[..., None] * rgb[:, :, None, None, :]
+           + (1.0 - fg[..., None]) * floor_bg)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(v * patch, v * patch, 3)
+    return img.astype(jnp.float32)

@@ -1,0 +1,156 @@
+"""Production rules (paper Table 3, §2.1).
+
+Rules are *data*: ``int32[RULE_ENC]`` arrays ``[id, a_tile, a_col, b_tile,
+b_col, c_tile, c_col]``. Dispatch is a single ``jax.lax.switch`` over the 12
+rule functions, exactly the structure the paper describes for
+``xminigrid.core.rules.check_rule`` (App. I). Because the encodings are
+runtime inputs, one compiled executable serves arbitrarily many tasks.
+
+Disappearance is encoded by producing ``(TILE_FLOOR, COLOR_BLACK)`` (App. J).
+
+Determinism contract (mirrored bit-exactly by ``rust/src/env/rules.rs``):
+when a rule has several candidate positions, directions are scanned in the
+fixed order up, right, down, left and cells in row-major order; the first
+match fires. Each rule fires at most once per check; rules are applied
+sequentially in ruleset order, later rules seeing earlier rules' effects.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+from .grid import first_true_flat, object_mask, shift_mask
+
+_OPP = {T.DIR_UP: T.DIR_DOWN, T.DIR_RIGHT: T.DIR_LEFT,
+        T.DIR_DOWN: T.DIR_UP, T.DIR_LEFT: T.DIR_RIGHT}
+
+
+def _floor_cell():
+    return jnp.array(T.FLOOR_CELL, dtype=jnp.int32)
+
+
+def _rule_empty(grid, agent_pos, pocket, args):
+    return grid, pocket
+
+
+def _rule_agent_hold(grid, agent_pos, pocket, args):
+    a_t, a_c, c_t, c_c = args[0], args[1], args[4], args[5]
+    hit = (pocket[0] == a_t) & (pocket[1] == a_c)
+    # producing a floor tile empties the pocket (disappearance)
+    empty = jnp.array(T.POCKET_EMPTY, dtype=jnp.int32)
+    prod = jnp.where(c_t == T.TILE_FLOOR, empty,
+                     jnp.stack([c_t, c_c]).astype(jnp.int32))
+    pocket = jnp.where(hit, prod, pocket)
+    return grid, pocket
+
+
+def _agent_neighbor_replace(grid, agent_pos, a_t, a_c, c_t, c_c, directions):
+    """Replace the first neighbor of the agent (scanning ``directions`` in
+    order) that holds object a with object c."""
+    h, w = grid.shape[0], grid.shape[1]
+    hits, rows, cols = [], [], []
+    for d in directions:
+        r = agent_pos[0] + T.DIR_DR[d]
+        c = agent_pos[1] + T.DIR_DC[d]
+        inside = (r >= 0) & (r < h) & (c >= 0) & (c < w)
+        rc, cc = jnp.clip(r, 0, h - 1), jnp.clip(c, 0, w - 1)
+        cell = grid[rc, cc]
+        hits.append(inside & (cell[0] == a_t) & (cell[1] == a_c))
+        rows.append(rc)
+        cols.append(cc)
+    hits = jnp.stack(hits)
+    idx, any_ = first_true_flat(hits)
+    rr = jnp.stack(rows)[idx]
+    cc = jnp.stack(cols)[idx]
+    prod = jnp.stack([c_t, c_c]).astype(jnp.int32)
+    new = jnp.where(any_, prod, grid[rr, cc])
+    grid = grid.at[rr, cc].set(new)
+    return grid
+
+
+def _rule_agent_near(grid, agent_pos, pocket, args):
+    grid = _agent_neighbor_replace(
+        grid, agent_pos, args[0], args[1], args[4], args[5],
+        (T.DIR_UP, T.DIR_RIGHT, T.DIR_DOWN, T.DIR_LEFT))
+    return grid, pocket
+
+
+def _make_rule_agent_near_dir(direction):
+    def rule(grid, agent_pos, pocket, args):
+        g = _agent_neighbor_replace(grid, agent_pos, args[0], args[1],
+                                    args[4], args[5], (direction,))
+        return g, pocket
+    return rule
+
+
+def _tile_near_apply(grid, a_t, a_c, b_t, b_c, c_t, c_c, directions):
+    """Fire TileNear*: find the first (direction, cell) where object b sits
+    in ``direction`` relative to object a; a's cell becomes c, b's becomes
+    floor."""
+    h, w = grid.shape[0], grid.shape[1]
+    mask_a = object_mask(grid, a_t, a_c)
+    mask_b = object_mask(grid, b_t, b_c)
+    flags = jnp.stack(
+        [mask_a & shift_mask(mask_b, _OPP[d]) for d in directions])
+    idx, any_ = first_true_flat(flags)
+    hw = h * w
+    d_idx = idx // hw
+    cell = idx % hw
+    ar, ac = cell // w, cell % w
+    dirs = jnp.array(directions, dtype=jnp.int32)
+    d = dirs[d_idx]
+    br = jnp.clip(ar + T.DIR_DR[d], 0, h - 1)
+    bc = jnp.clip(ac + T.DIR_DC[d], 0, w - 1)
+    prod = jnp.stack([c_t, c_c]).astype(jnp.int32)
+    grid = grid.at[br, bc].set(jnp.where(any_, _floor_cell(), grid[br, bc]))
+    grid = grid.at[ar, ac].set(jnp.where(any_, prod, grid[ar, ac]))
+    return grid
+
+
+def _rule_tile_near(grid, agent_pos, pocket, args):
+    g = _tile_near_apply(grid, args[0], args[1], args[2], args[3], args[4],
+                         args[5],
+                         (T.DIR_UP, T.DIR_RIGHT, T.DIR_DOWN, T.DIR_LEFT))
+    return g, pocket
+
+
+def _make_rule_tile_near_dir(direction):
+    def rule(grid, agent_pos, pocket, args):
+        g = _tile_near_apply(grid, args[0], args[1], args[2], args[3],
+                             args[4], args[5], (direction,))
+        return g, pocket
+    return rule
+
+
+_RULE_FNS = [
+    _rule_empty,                              # 0
+    _rule_agent_hold,                         # 1
+    _rule_agent_near,                         # 2
+    _rule_tile_near,                          # 3
+    _make_rule_tile_near_dir(T.DIR_UP),       # 4  b one tile above a
+    _make_rule_tile_near_dir(T.DIR_RIGHT),    # 5
+    _make_rule_tile_near_dir(T.DIR_DOWN),     # 6
+    _make_rule_tile_near_dir(T.DIR_LEFT),     # 7
+    _make_rule_agent_near_dir(T.DIR_UP),      # 8  a one tile above agent
+    _make_rule_agent_near_dir(T.DIR_RIGHT),   # 9
+    _make_rule_agent_near_dir(T.DIR_DOWN),    # 10
+    _make_rule_agent_near_dir(T.DIR_LEFT),    # 11
+]
+
+
+def check_rule(grid, agent_pos, pocket, rule):
+    """Apply a single encoded rule; returns (grid, pocket)."""
+    rid = jnp.clip(rule[0], 0, T.NUM_RULES - 1)
+    return jax.lax.switch(rid, _RULE_FNS, grid, agent_pos, pocket, rule[1:])
+
+
+def check_rules(grid, agent_pos, pocket, rules):
+    """Apply all rules of a ruleset sequentially (scan keeps HLO compact so
+    the rule count sweep of Fig. 5c measures per-rule marginal cost)."""
+    def body(carry, rule):
+        grid, pocket = carry
+        grid, pocket = check_rule(grid, agent_pos, pocket, rule)
+        return (grid, pocket), None
+
+    (grid, pocket), _ = jax.lax.scan(body, (grid, pocket), rules)
+    return grid, pocket

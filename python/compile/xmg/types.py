@@ -1,0 +1,144 @@
+"""Shared constants: tiles, colors, actions, rule/goal IDs (paper Tables 1-3).
+
+The Rust substrate (``rust/src/env/types.rs``) mirrors these values exactly;
+``rust/tests/id_tables.rs`` and ``python/tests/test_types.py`` pin them.
+"""
+
+import jax.numpy as jnp
+
+# --- Table 1a: tiles -------------------------------------------------------
+TILE_END_OF_MAP = 0
+TILE_UNSEEN = 1
+TILE_EMPTY = 2
+TILE_FLOOR = 3
+TILE_WALL = 4
+TILE_BALL = 5
+TILE_SQUARE = 6
+TILE_PYRAMID = 7
+TILE_GOAL = 8
+TILE_KEY = 9
+TILE_DOOR_LOCKED = 10
+TILE_DOOR_CLOSED = 11
+TILE_DOOR_OPEN = 12
+TILE_HEX = 13
+TILE_STAR = 14
+NUM_TILES = 15
+
+# --- Table 1b: colors ------------------------------------------------------
+COLOR_END_OF_MAP = 0
+COLOR_UNSEEN = 1
+COLOR_EMPTY = 2
+COLOR_RED = 3
+COLOR_GREEN = 4
+COLOR_BLUE = 5
+COLOR_PURPLE = 6
+COLOR_YELLOW = 7
+COLOR_GREY = 8
+COLOR_BLACK = 9
+COLOR_ORANGE = 10
+COLOR_WHITE = 11
+COLOR_BROWN = 12
+COLOR_PINK = 13
+NUM_COLORS = 14
+
+# Colors used by the benchmark generator for objects (App. J: 10 colors).
+GEN_COLORS = (
+    COLOR_RED, COLOR_GREEN, COLOR_BLUE, COLOR_PURPLE, COLOR_YELLOW,
+    COLOR_GREY, COLOR_WHITE, COLOR_BROWN, COLOR_PINK, COLOR_ORANGE,
+)
+# Object tiles used by the generator (App. J: 7 tile types).
+GEN_TILES = (
+    TILE_BALL, TILE_SQUARE, TILE_PYRAMID, TILE_KEY, TILE_STAR, TILE_HEX,
+    TILE_GOAL,
+)
+
+# --- actions ---------------------------------------------------------------
+ACTION_FORWARD = 0
+ACTION_TURN_LEFT = 1
+ACTION_TURN_RIGHT = 2
+ACTION_PICK_UP = 3
+ACTION_PUT_DOWN = 4
+ACTION_TOGGLE = 5
+NUM_ACTIONS = 6
+
+# --- directions: 0=up, 1=right, 2=down, 3=left -----------------------------
+DIR_UP, DIR_RIGHT, DIR_DOWN, DIR_LEFT = 0, 1, 2, 3
+# row/col deltas indexed by direction
+DIR_DR = jnp.array([-1, 0, 1, 0], dtype=jnp.int32)
+DIR_DC = jnp.array([0, 1, 0, -1], dtype=jnp.int32)
+
+# --- Table 2: goals --------------------------------------------------------
+GOAL_EMPTY = 0
+GOAL_AGENT_HOLD = 1
+GOAL_AGENT_ON_TILE = 2
+GOAL_AGENT_NEAR = 3
+GOAL_TILE_NEAR = 4
+GOAL_AGENT_ON_POSITION = 5
+GOAL_TILE_ON_POSITION = 6
+GOAL_TILE_NEAR_UP = 7
+GOAL_TILE_NEAR_RIGHT = 8
+GOAL_TILE_NEAR_DOWN = 9
+GOAL_TILE_NEAR_LEFT = 10
+GOAL_AGENT_NEAR_UP = 11
+GOAL_AGENT_NEAR_RIGHT = 12
+GOAL_AGENT_NEAR_DOWN = 13
+GOAL_AGENT_NEAR_LEFT = 14
+NUM_GOALS = 15
+
+# --- Table 3: rules --------------------------------------------------------
+RULE_EMPTY = 0
+RULE_AGENT_HOLD = 1
+RULE_AGENT_NEAR = 2
+RULE_TILE_NEAR = 3
+RULE_TILE_NEAR_UP = 4
+RULE_TILE_NEAR_RIGHT = 5
+RULE_TILE_NEAR_DOWN = 6
+RULE_TILE_NEAR_LEFT = 7
+RULE_AGENT_NEAR_UP = 8
+RULE_AGENT_NEAR_RIGHT = 9
+RULE_AGENT_NEAR_DOWN = 10
+RULE_AGENT_NEAR_LEFT = 11
+NUM_RULES = 12
+
+# Encoding widths (paper §2.1: id followed by padded arguments).
+RULE_ENC = 7   # [id, a_tile, a_col, b_tile, b_col, c_tile, c_col]
+GOAL_ENC = 5   # [id, a0, a1, a2, a3]
+
+# Tile sets
+PICKABLE_TILES = (TILE_BALL, TILE_SQUARE, TILE_PYRAMID, TILE_KEY, TILE_HEX,
+                  TILE_STAR)
+WALKABLE_TILES = (TILE_FLOOR, TILE_GOAL, TILE_DOOR_OPEN)
+# Tiles light passes through (for the optional occlusion mode)
+TRANSPARENT_BLOCKERS = (TILE_WALL, TILE_DOOR_CLOSED, TILE_DOOR_LOCKED,
+                        TILE_END_OF_MAP)
+
+# Pocket sentinel: empty pocket is (TILE_EMPTY, COLOR_EMPTY)
+POCKET_EMPTY = (TILE_EMPTY, COLOR_EMPTY)
+
+# Grid cell constants
+FLOOR_CELL = (TILE_FLOOR, COLOR_BLACK)
+WALL_CELL = (TILE_WALL, COLOR_GREY)
+
+
+def is_pickable(tile):
+    t = jnp.asarray(tile)
+    out = jnp.zeros_like(t, dtype=jnp.bool_)
+    for p in PICKABLE_TILES:
+        out = out | (t == p)
+    return out
+
+
+def is_walkable(tile):
+    t = jnp.asarray(tile)
+    out = jnp.zeros_like(t, dtype=jnp.bool_)
+    for w in WALKABLE_TILES:
+        out = out | (t == w)
+    return out
+
+
+def blocks_sight(tile):
+    t = jnp.asarray(tile)
+    out = jnp.zeros_like(t, dtype=jnp.bool_)
+    for b in TRANSPARENT_BLOCKERS:
+        out = out | (t == b)
+    return out

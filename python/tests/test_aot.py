@@ -1,0 +1,112 @@
+"""AOT pipeline tests: HLO-text lowering and the manifest contract that the
+Rust loader (runtime/manifest.rs) depends on."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import rollout as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_emits_parseable_module():
+    fn = lambda x, y: (x @ y + 1.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "f32[2,2]" in text
+
+
+def test_env_step_lowering_has_expected_signature():
+    fn = aot.make_env_step(5)
+    specs = aot.state_specs(9, 9, 3, 6, batch=4)
+    specs.append(jax.ShapeDtypeStruct((4,), jnp.int32))
+    out = jax.eval_shape(fn, *specs)
+    flat = jax.tree_util.tree_leaves(out)
+    # 11 state fields + obs + reward + done + trial_done
+    assert len(flat) == 15
+    assert flat[11].shape == (4, 5, 5, 2)
+    assert flat[12].shape == (4,)
+
+
+def test_manifest_writer_format():
+    with tempfile.TemporaryDirectory() as d:
+        mw = aot.ManifestWriter(d)
+        fn = jax.vmap(lambda x: (x * 2.0,))
+        mw.emit("double_b4", fn,
+                [jax.ShapeDtypeStruct((4, 3), jnp.float32)],
+                dict(kind="test", B=4))
+        mw.save()
+        text = open(os.path.join(d, "manifest.txt")).read()
+        lines = text.strip().splitlines()
+        assert lines[0] == "artifact double_b4 double_b4.hlo.txt"
+        assert "meta kind test" in lines
+        assert "meta B 4" in lines
+        assert "in 0 f32 4,3" in lines
+        assert "out 0 f32 4,3" in lines
+        assert lines[-1] == "end"
+        assert os.path.exists(os.path.join(d, "double_b4.hlo.txt"))
+
+
+def test_quick_artifact_set_covers_all_kinds():
+    # the quick set must exercise every artifact kind so rust integration
+    # tests can run against it
+    kinds = {"env_step", "env_reset", "env_rollout", "policy_step",
+             "train_iter", "eval_rollout", "render_rgb"}
+    assert len(aot.QUICK_STEP_VARIANTS) >= 1
+    assert len(aot.QUICK_ROLLOUT_VARIANTS) >= 1
+    assert len(aot.QUICK_TRAIN_VARIANTS) >= 1
+    assert len(aot.QUICK_EVAL_VARIANTS) >= 1
+    assert len(aot.QUICK_POLICY_BATCHES) >= 1
+    assert len(aot.QUICK_RENDER_BATCHES) >= 1
+    assert kinds  # documented contract
+
+
+def test_full_variants_cover_paper_sweeps():
+    # Fig 5a: batch sweep on one grid size
+    fig5a = [v for v in aot.FULL_ROLLOUT_VARIANTS if v[0] == 13]
+    assert any(len(v[4]) >= 5 for v in fig5a), "needs a wide batch sweep"
+    # Fig 5b: at least 4 grid sizes
+    sizes = {v[0] for v in aot.FULL_ROLLOUT_VARIANTS}
+    assert len(sizes) >= 4
+    # Fig 5c: rule sweep at 16x16
+    rules16 = sorted(v[2] for v in aot.FULL_ROLLOUT_VARIANTS if v[0] == 16)
+    assert rules16 == [1, 3, 6, 12, 24]
+    # Fig 5f: training batch sweep
+    train_b = sorted(v[4] for v in aot.FULL_TRAIN_VARIANTS if v[0] == 9)
+    assert len(train_b) >= 3
+
+
+def test_train_iter_io_arity():
+    cfg = M.ModelConfig()
+    t_len, b, mb = 4, 8, 4
+    fn = R.make_train_iter(cfg, 5, t_len, b, mb)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pspecs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    sspecs = aot.state_specs(9, 9, 3, 6, batch=b)
+    hd = cfg.hidden_dim
+    rl2 = [
+        jax.ShapeDtypeStruct((b, 5, 5, 2), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b, hd), jnp.float32),
+    ]
+    in_specs = (pspecs * 3 + [jax.ShapeDtypeStruct((), jnp.int32)]
+                + sspecs + rl2
+                + [jax.ShapeDtypeStruct((2,), jnp.uint32),
+                   jax.ShapeDtypeStruct((M.HP_LEN,), jnp.float32)])
+    out = jax.eval_shape(fn, *in_specs)
+    flat = jax.tree_util.tree_leaves(out)
+    # 33 learner tensors + t + 11 state + 5 carry + metrics + 3 stats
+    assert len(flat) == 3 * M.NUM_PARAMS + 1 + 11 + 5 + 1 + 3
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

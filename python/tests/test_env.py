@@ -1,0 +1,289 @@
+"""L2 environment semantics tests — the JAX twin of the Rust oracle's unit
+suite (both implementations are additionally cross-validated transition-
+for-transition in rust/tests/cross_validation.rs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.xmg import env, types as T
+from compile.xmg.goals import check_goal
+from compile.xmg.grid import empty_room, place_objects
+from compile.xmg.observation import observe
+from compile.xmg.rules import check_rule, check_rules
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def cell(t, c):
+    return jnp.array([t, c], dtype=jnp.int32)
+
+
+def mk_state(h=9, w=9, rules=None, goal=None, init=None, max_steps=243,
+             seed=0):
+    base = empty_room(h, w)
+    mr = 3
+    r = jnp.zeros((mr, T.RULE_ENC), jnp.int32)
+    for i, enc in enumerate(rules or []):
+        r = r.at[i].set(jnp.array(enc, jnp.int32))
+    g = jnp.array(goal or [0] * T.GOAL_ENC, jnp.int32)
+    it = jnp.zeros((4, 2), jnp.int32)
+    for i, obj in enumerate(init or []):
+        it = it.at[i].set(jnp.array(obj, jnp.int32))
+    state, obs = env.reset(base, r, g, it, max_steps,
+                           jax.random.PRNGKey(seed))
+    return state, obs
+
+
+def put(state, r, c, tile, color):
+    return state._replace(
+        grid=state.grid.at[r, c].set(jnp.array([tile, color], jnp.int32)))
+
+
+def teleport(state, pos, d):
+    return state._replace(
+        agent_pos=jnp.array(pos, jnp.int32),
+        agent_dir=jnp.asarray(d, jnp.int32))
+
+
+class TestActions:
+    def test_forward_blocked_by_wall(self):
+        s, _ = mk_state()
+        s = teleport(s, (1, 1), 0)  # face up into wall
+        out = env.step(s, jnp.asarray(T.ACTION_FORWARD))
+        assert tuple(out.state.agent_pos.tolist()) == (1, 1)
+
+    def test_forward_moves_on_floor(self):
+        s, _ = mk_state()
+        s = teleport(s, (1, 1), 2)  # face down
+        out = env.step(s, jnp.asarray(T.ACTION_FORWARD))
+        assert tuple(out.state.agent_pos.tolist()) == (2, 1)
+
+    def test_turns(self):
+        s, _ = mk_state()
+        s = teleport(s, (4, 4), 0)
+        out = env.step(s, jnp.asarray(T.ACTION_TURN_RIGHT))
+        assert int(out.state.agent_dir) == 1
+        out = env.step(out.state, jnp.asarray(T.ACTION_TURN_LEFT))
+        out = env.step(out.state, jnp.asarray(T.ACTION_TURN_LEFT))
+        assert int(out.state.agent_dir) == 3
+
+    def test_pickup_putdown(self):
+        s, _ = mk_state()
+        s = teleport(s, (4, 4), 1)
+        s = put(s, 4, 5, T.TILE_BALL, T.COLOR_RED)
+        out = env.step(s, jnp.asarray(T.ACTION_PICK_UP))
+        assert out.state.pocket.tolist() == [T.TILE_BALL, T.COLOR_RED]
+        assert out.state.grid[4, 5].tolist() == list(T.FLOOR_CELL)
+        # single-slot pocket
+        s2 = put(out.state, 4, 5, T.TILE_KEY, T.COLOR_BLUE)
+        out2 = env.step(s2, jnp.asarray(T.ACTION_PICK_UP))
+        assert out2.state.pocket.tolist() == [T.TILE_BALL, T.COLOR_RED]
+        # put down on floor
+        s3 = teleport(out2.state, (4, 4), 2)
+        out3 = env.step(s3, jnp.asarray(T.ACTION_PUT_DOWN))
+        assert out3.state.pocket.tolist() == list(T.POCKET_EMPTY)
+        assert out3.state.grid[5, 4].tolist() == [T.TILE_BALL, T.COLOR_RED]
+
+    def test_toggle_door_with_key(self):
+        s, _ = mk_state()
+        s = teleport(s, (4, 4), 1)
+        s = put(s, 4, 5, T.TILE_DOOR_LOCKED, T.COLOR_BLUE)
+        out = env.step(s, jnp.asarray(T.ACTION_TOGGLE))
+        assert int(out.state.grid[4, 5, 0]) == T.TILE_DOOR_LOCKED
+        s2 = out.state._replace(
+            pocket=jnp.array([T.TILE_KEY, T.COLOR_BLUE], jnp.int32))
+        out2 = env.step(s2, jnp.asarray(T.ACTION_TOGGLE))
+        assert int(out2.state.grid[4, 5, 0]) == T.TILE_DOOR_OPEN
+
+
+class TestRules:
+    def test_tile_near_rule_fires(self):
+        g = empty_room(7, 7)
+        g = g.at[3, 3].set(cell(T.TILE_BALL, T.COLOR_RED))
+        g = g.at[3, 4].set(cell(T.TILE_SQUARE, T.COLOR_BLUE))
+        rule = jnp.array([T.RULE_TILE_NEAR, T.TILE_BALL, T.COLOR_RED,
+                          T.TILE_SQUARE, T.COLOR_BLUE, T.TILE_HEX,
+                          T.COLOR_PINK], jnp.int32)
+        pocket = jnp.array(T.POCKET_EMPTY, jnp.int32)
+        g2, _ = check_rule(g, jnp.array([1, 1]), pocket, rule)
+        assert g2[3, 3].tolist() == [T.TILE_HEX, T.COLOR_PINK]
+        assert g2[3, 4].tolist() == list(T.FLOOR_CELL)
+
+    def test_direction_priority_up_first(self):
+        g = empty_room(7, 7)
+        g = g.at[3, 3].set(cell(T.TILE_BALL, T.COLOR_RED))
+        g = g.at[2, 3].set(cell(T.TILE_SQUARE, T.COLOR_BLUE))  # above
+        g = g.at[3, 4].set(cell(T.TILE_SQUARE, T.COLOR_BLUE))  # right
+        rule = jnp.array([T.RULE_TILE_NEAR, T.TILE_BALL, T.COLOR_RED,
+                          T.TILE_SQUARE, T.COLOR_BLUE, T.TILE_HEX,
+                          T.COLOR_PINK], jnp.int32)
+        pocket = jnp.array(T.POCKET_EMPTY, jnp.int32)
+        g2, _ = check_rule(g, jnp.array([1, 1]), pocket, rule)
+        assert g2[2, 3].tolist() == list(T.FLOOR_CELL), "up consumed"
+        assert g2[3, 4].tolist() == [T.TILE_SQUARE, T.COLOR_BLUE]
+
+    def test_agent_hold_rule(self):
+        g = empty_room(5, 5)
+        rule = jnp.array([T.RULE_AGENT_HOLD, T.TILE_BALL, T.COLOR_RED,
+                          0, 0, T.TILE_KEY, T.COLOR_YELLOW], jnp.int32)
+        pocket = cell(T.TILE_BALL, T.COLOR_RED)
+        _, p2 = check_rule(g, jnp.array([2, 2]), pocket, rule)
+        assert p2.tolist() == [T.TILE_KEY, T.COLOR_YELLOW]
+
+    def test_rules_chain_sequentially(self):
+        g = empty_room(7, 7)
+        g = g.at[3, 3].set(cell(T.TILE_BALL, T.COLOR_RED))
+        g = g.at[3, 4].set(cell(T.TILE_SQUARE, T.COLOR_BLUE))
+        g = g.at[2, 3].set(cell(T.TILE_PYRAMID, T.COLOR_GREEN))
+        rules = jnp.array([
+            [T.RULE_TILE_NEAR, T.TILE_BALL, T.COLOR_RED, T.TILE_SQUARE,
+             T.COLOR_BLUE, T.TILE_STAR, T.COLOR_YELLOW],
+            [T.RULE_TILE_NEAR, T.TILE_STAR, T.COLOR_YELLOW,
+             T.TILE_PYRAMID, T.COLOR_GREEN, T.TILE_HEX, T.COLOR_PINK],
+        ], jnp.int32)
+        pocket = jnp.array(T.POCKET_EMPTY, jnp.int32)
+        g2, _ = check_rules(g, jnp.array([5, 5]), pocket, rules)
+        assert g2[3, 3].tolist() == [T.TILE_HEX, T.COLOR_PINK]
+
+
+class TestGoals:
+    def test_agent_near_goal(self):
+        g = empty_room(5, 5)
+        g = g.at[1, 2].set(cell(T.TILE_BALL, T.COLOR_RED))
+        goal = jnp.array([T.GOAL_AGENT_NEAR, T.TILE_BALL, T.COLOR_RED, 0,
+                          0], jnp.int32)
+        pocket = jnp.array(T.POCKET_EMPTY, jnp.int32)
+        assert bool(check_goal(g, jnp.array([2, 2]), pocket, goal))
+        assert not bool(check_goal(g, jnp.array([3, 3]), pocket, goal))
+
+    def test_tile_near_goal_symmetric(self):
+        g = empty_room(6, 6)
+        g = g.at[2, 2].set(cell(T.TILE_BALL, T.COLOR_RED))
+        g = g.at[2, 3].set(cell(T.TILE_SQUARE, T.COLOR_BLUE))
+        pocket = jnp.array(T.POCKET_EMPTY, jnp.int32)
+        fwd = jnp.array([T.GOAL_TILE_NEAR, T.TILE_BALL, T.COLOR_RED,
+                         T.TILE_SQUARE, T.COLOR_BLUE], jnp.int32)
+        rev = jnp.array([T.GOAL_TILE_NEAR, T.TILE_SQUARE, T.COLOR_BLUE,
+                         T.TILE_BALL, T.COLOR_RED], jnp.int32)
+        assert bool(check_goal(g, jnp.array([4, 4]), pocket, fwd))
+        assert bool(check_goal(g, jnp.array([4, 4]), pocket, rev))
+
+    def test_empty_goal_false(self):
+        g = empty_room(5, 5)
+        pocket = jnp.array(T.POCKET_EMPTY, jnp.int32)
+        goal = jnp.zeros(T.GOAL_ENC, jnp.int32)
+        assert not bool(check_goal(g, jnp.array([2, 2]), pocket, goal))
+
+
+class TestObservation:
+    def test_rotation_consistency(self):
+        g = empty_room(11, 11)
+        for r, c in [(3, 5), (5, 7), (7, 5), (5, 3)]:
+            g = g.at[r, c].set(cell(T.TILE_BALL, T.COLOR_RED))
+        for d in range(4):
+            obs = observe(g, jnp.array([5, 5]), jnp.asarray(d), 5, True)
+            assert obs[2, 2].tolist() == [T.TILE_BALL, T.COLOR_RED]
+
+    def test_out_of_map(self):
+        g = empty_room(9, 9)
+        obs = observe(g, jnp.array([1, 1]), jnp.asarray(0), 5, True)
+        assert obs[0, 0].tolist() == [T.TILE_END_OF_MAP,
+                                      T.COLOR_END_OF_MAP]
+
+    def test_occlusion(self):
+        g = empty_room(11, 11)
+        wall = cell(T.TILE_WALL, T.COLOR_GREY)
+        for c in range(11):
+            g = g.at[4, c].set(wall)
+        g = g.at[2, 5].set(cell(T.TILE_BALL, T.COLOR_RED))
+        seen = observe(g, jnp.array([5, 5]), jnp.asarray(0), 5, True)
+        hidden = observe(g, jnp.array([5, 5]), jnp.asarray(0), 5, False)
+        assert seen[1, 2].tolist() == [T.TILE_BALL, T.COLOR_RED]
+        assert hidden[1, 2].tolist() == [T.TILE_UNSEEN, T.COLOR_UNSEEN]
+        assert hidden[3, 2].tolist() == [T.TILE_WALL, T.COLOR_GREY]
+
+
+class TestEpisodeMechanics:
+    def test_goal_gives_scaled_reward(self):
+        goal = [T.GOAL_AGENT_NEAR, T.TILE_BALL, T.COLOR_RED, 0, 0]
+        s, _ = mk_state(goal=goal, init=[(T.TILE_BALL, T.COLOR_RED)])
+        s = teleport(s, (4, 4), 0)
+        # clear any randomly placed ball, then place next to agent
+        grid = jnp.where(
+            (s.grid[..., 0] == T.TILE_BALL)[..., None],
+            jnp.array(T.FLOOR_CELL, jnp.int32), s.grid)
+        s = s._replace(grid=grid)
+        s = put(s, 3, 4, T.TILE_BALL, T.COLOR_RED)
+        out = env.step(s, jnp.asarray(T.ACTION_TURN_LEFT))
+        assert bool(out.trial_done)
+        expected = 1.0 - 0.9 * 1.0 / float(s.max_steps)
+        np.testing.assert_allclose(out.reward, expected, rtol=1e-6)
+        # trial reset: ball somewhere, pocket empty, step continues
+        assert int((out.state.grid[..., 0] == T.TILE_BALL).sum()) == 1
+        assert int(out.state.step_count) == 1
+
+    def test_episode_auto_reset(self):
+        s, _ = mk_state(init=[(T.TILE_BALL, T.COLOR_RED)], max_steps=3)
+        for i in range(3):
+            out = env.step(s, jnp.asarray(T.ACTION_TURN_LEFT))
+            s = out.state
+        assert bool(out.done)
+        assert int(s.step_count) == 0
+        assert int((s.grid[..., 0] == T.TILE_BALL).sum()) == 1
+
+    def test_default_max_steps(self):
+        assert env.default_max_steps(9, 9) == 243
+        assert env.default_max_steps(13, 13) == 507
+
+
+class TestPlacement:
+    def test_objects_placed_once_on_floor(self):
+        base = empty_room(9, 9)
+        init = jnp.array([[T.TILE_BALL, T.COLOR_RED],
+                          [T.TILE_KEY, T.COLOR_YELLOW],
+                          [0, 0]], jnp.int32)
+        for seed in range(10):
+            grid, pos, d = place_objects(jax.random.PRNGKey(seed), base,
+                                         init)
+            assert int((grid[..., 0] == T.TILE_BALL).sum()) == 1
+            assert int((grid[..., 0] == T.TILE_KEY).sum()) == 1
+            assert int(grid[pos[0], pos[1], 0]) == T.TILE_FLOOR
+            assert 0 <= int(d) < 4
+
+    def test_placement_randomizes(self):
+        base = empty_room(9, 9)
+        init = jnp.array([[T.TILE_BALL, T.COLOR_RED]], jnp.int32)
+        g1, p1, _ = place_objects(jax.random.PRNGKey(1), base, init)
+        g2, p2, _ = place_objects(jax.random.PRNGKey(2), base, init)
+        assert (not np.array_equal(np.asarray(g1), np.asarray(g2))
+                or not np.array_equal(np.asarray(p1), np.asarray(p2)))
+
+
+class TestVmap:
+    def test_batched_step_and_reset(self):
+        b = 4
+        base = jnp.stack([empty_room(9, 9)] * b)
+        rules = jnp.zeros((b, 3, T.RULE_ENC), jnp.int32)
+        goal = jnp.zeros((b, T.GOAL_ENC), jnp.int32)
+        init = jnp.tile(jnp.array([[[T.TILE_BALL, T.COLOR_RED]]],
+                                  jnp.int32), (b, 1, 1))
+        keys = jax.random.split(jax.random.PRNGKey(0), b)
+        reset_b = jax.vmap(
+            lambda bg, r, g, it, k: env.reset(bg, r, g, it, 243, k))
+        state, obs = jit_once(reset_b)(base, rules, goal, init, keys)
+        assert obs.shape == (b, 5, 5, 2)
+        step_b = jax.vmap(lambda s, a: env.step(s, a))
+        out = jit_once(step_b)(state,
+                               jnp.zeros((b,), jnp.int32))
+        assert out.obs.shape == (b, 5, 5, 2)
+        assert out.reward.shape == (b,)
+
+
+def jit_once(fn):
+    return jax.jit(fn)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

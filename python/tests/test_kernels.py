@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref — the CORE
+correctness signal for the kernels that end up inside every policy/train
+artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gru import fused_gru_cell
+from compile.kernels.heads import fused_actor_critic_head
+from compile.kernels.ref import actor_critic_head_ref, gru_cell_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _gru_inputs(key, b, i, h, dtype):
+    ks = jax.random.split(key, 6)
+    scale = 0.3
+    return (
+        jax.random.normal(ks[0], (b, i), dtype) * scale,
+        jax.random.normal(ks[1], (b, h), dtype) * scale,
+        jax.random.normal(ks[2], (i, 3 * h), dtype) * scale,
+        jax.random.normal(ks[3], (h, 3 * h), dtype) * scale,
+        jax.random.normal(ks[4], (3 * h,), dtype) * scale,
+        jax.random.normal(ks[5], (3 * h,), dtype) * scale,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 8, 17, 64]),
+    i=st.sampled_from([1, 7, 32, 273]),
+    h=st.sampled_from([4, 16, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gru_matches_ref_shapes(b, i, h, seed):
+    args = _gru_inputs(jax.random.PRNGKey(seed), b, i, h, jnp.float32)
+    out = fused_gru_cell(*args)
+    ref = gru_cell_ref(*args)
+    assert out.shape == (b, h)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gru_bf16(seed):
+    args = _gru_inputs(jax.random.PRNGKey(seed), 8, 16, 32, jnp.bfloat16)
+    out = fused_gru_cell(*args)
+    ref = gru_cell_ref(*args)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_gru_output_bounded():
+    # GRU output is a convex combination of tanh output and previous h
+    args = _gru_inputs(jax.random.PRNGKey(0), 16, 8, 8, jnp.float32)
+    x, h, wi, wh, bi, bh = args
+    h = jnp.clip(h, -1.0, 1.0)
+    out = fused_gru_cell(x, h, wi, wh, bi, bh)
+    assert jnp.all(jnp.abs(out) <= 1.0 + 1e-6)
+
+
+def test_gru_gradients_match_ref():
+    args = _gru_inputs(jax.random.PRNGKey(3), 4, 6, 8, jnp.float32)
+
+    def loss_kernel(*a):
+        return jnp.sum(fused_gru_cell(*a) ** 2)
+
+    def loss_ref(*a):
+        return jnp.sum(gru_cell_ref(*a) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=tuple(range(6)))(*args)
+    gr = jax.grad(loss_ref, argnums=tuple(range(6)))(*args)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_gru_under_jit_and_scan():
+    args = _gru_inputs(jax.random.PRNGKey(1), 8, 8, 16, jnp.float32)
+    x, h, wi, wh, bi, bh = args
+
+    @jax.jit
+    def roll(h):
+        def body(h, _):
+            return fused_gru_cell(x, h, wi, wh, bi, bh), None
+        h, _ = jax.lax.scan(body, h, None, length=5)
+        return h
+
+    out = roll(h)
+    ref = h
+    for _ in range(5):
+        ref = gru_cell_ref(x, ref, wi, wh, bi, bh)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 5, 8, 64, 100]),
+    h=st.sampled_from([4, 16, 256]),
+    a=st.sampled_from([2, 6, 17]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_head_matches_ref(b, h, a, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    hid = jax.random.normal(ks[0], (b, h))
+    w = jax.random.normal(ks[1], (h, a + 1)) * 0.1
+    bias = jax.random.normal(ks[2], (a + 1,))
+    logits, value = fused_actor_critic_head(hid, w, bias)
+    rl, rv = actor_critic_head_ref(hid, w, bias)
+    assert logits.shape == (b, a)
+    assert value.shape == (b,)
+    np.testing.assert_allclose(logits, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(value, rv, rtol=1e-5, atol=1e-6)
+
+
+def test_head_gradients_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    hid = jax.random.normal(ks[0], (4, 8))
+    w = jax.random.normal(ks[1], (8, 7)) * 0.1
+    bias = jax.random.normal(ks[2], (7,))
+
+    def lk(h, w, b):
+        lo, v = fused_actor_critic_head(h, w, b)
+        return jnp.sum(lo ** 2) + jnp.sum(v ** 2)
+
+    def lr(h, w, b):
+        lo, v = actor_critic_head_ref(h, w, b)
+        return jnp.sum(lo ** 2) + jnp.sum(v ** 2)
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(hid, w, bias)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(hid, w, bias)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_kernels_lower_to_hlo_text():
+    # the AOT path must accept the kernels (interpret=True lowering)
+    from compile.aot import to_hlo_text
+
+    spec = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    wspec = jax.ShapeDtypeStruct((16, 48), jnp.float32)
+    bspec = jax.ShapeDtypeStruct((48,), jnp.float32)
+    lowered = jax.jit(fused_gru_cell).lower(
+        spec, spec.update(shape=(8, 16)), wspec,
+        jax.ShapeDtypeStruct((16, 48), jnp.float32), bspec, bspec)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

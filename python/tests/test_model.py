@@ -1,0 +1,187 @@
+"""L2 model tests: RL² network shapes, PPO update math (GAE, Adam,
+clipping) and learning on a synthetic bandit-like task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(trunk_dim=32, hidden_dim=16, emb_dim=4, act_emb_dim=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def test_param_shapes_and_order(params):
+    assert len(params) == M.NUM_PARAMS == len(M.PARAM_NAMES)
+    shapes = {n: p.shape for n, p in zip(M.PARAM_NAMES, params)}
+    assert shapes["wi"] == (M.rl2_input_dim(CFG), 3 * CFG.hidden_dim)
+    assert shapes["whead"] == (CFG.hidden_dim, CFG.num_actions + 1)
+
+
+def test_policy_step_outputs(params):
+    b = 8
+    key = jax.random.PRNGKey(1)
+    obs = jax.random.randint(key, (b, 5, 5, 2), 0, 10)
+    a, logp, v, h = M.policy_step(
+        params, obs, jnp.zeros(b, jnp.int32), jnp.zeros(b),
+        jnp.zeros(b, jnp.int32), jnp.zeros((b, CFG.hidden_dim)), key, CFG)
+    assert a.shape == (b,) and a.dtype == jnp.int32
+    assert np.all((np.asarray(a) >= 0) & (np.asarray(a) < 6))
+    assert np.all(np.asarray(logp) <= 0)
+    assert v.shape == (b,)
+    assert h.shape == (b, CFG.hidden_dim)
+
+
+def test_done_resets_hidden_state(params):
+    b = 4
+    key = jax.random.PRNGKey(2)
+    obs = jnp.zeros((b, 5, 5, 2), jnp.int32)
+    h = jax.random.normal(key, (b, CFG.hidden_dim))
+    # with done=1 the carried h must be ignored: outputs identical for any h
+    _, v1, h1 = M.network_step(params, obs, jnp.zeros(b, jnp.int32),
+                               jnp.zeros(b), jnp.ones(b, jnp.int32), h,
+                               CFG)
+    _, v2, h2 = M.network_step(params, obs, jnp.zeros(b, jnp.int32),
+                               jnp.zeros(b), jnp.ones(b, jnp.int32),
+                               h * 5.0, CFG)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6)
+    np.testing.assert_allclose(h1, h2, rtol=1e-6)
+
+
+def test_gae_matches_manual():
+    # single env, 3 steps, no terminations
+    r = jnp.array([[1.0], [0.0], [1.0]])
+    v = jnp.array([[0.5], [0.5], [0.5]])
+    d = jnp.zeros((3, 1), jnp.int32)
+    last_v = jnp.array([0.5])
+    gamma, lam = 0.9, 0.8
+    adv = M.gae(r, v, d, last_v, gamma, lam)
+    # manual backward recursion
+    deltas = [1.0 + 0.9 * 0.5 - 0.5, 0.0 + 0.9 * 0.5 - 0.5,
+              1.0 + 0.9 * 0.5 - 0.5]
+    a2 = deltas[2]
+    a1 = deltas[1] + gamma * lam * a2
+    a0 = deltas[0] + gamma * lam * a1
+    np.testing.assert_allclose(np.asarray(adv)[:, 0], [a0, a1, a2],
+                               rtol=1e-6)
+
+
+def test_gae_cuts_at_episode_end():
+    r = jnp.zeros((3, 1))
+    v = jnp.ones((3, 1))
+    last_v = jnp.array([100.0])  # must not leak across the done at t=2
+    d = jnp.array([[0], [0], [1]], jnp.int32)
+    adv = M.gae(r, v, d, last_v, 0.99, 0.95)
+    # at t=2: delta = 0 + 0 - 1 = -1 (bootstrap suppressed)
+    np.testing.assert_allclose(float(adv[2, 0]), -1.0, rtol=1e-6)
+
+
+def test_adam_step_moves_toward_gradient():
+    params = [jnp.ones((3,))]
+    grads = [jnp.array([1.0, -1.0, 0.0])]
+    m = [jnp.zeros((3,))]
+    v = [jnp.zeros((3,))]
+    hp = jnp.array([0.1, 0.2, 0.99, 0.95, 0.01, 0.5, 0.5, 0.0])
+    new_p, _, _, t = M.adam_update(params, grads, m, v,
+                                   jnp.asarray(0, jnp.int32), hp)
+    assert int(t) == 1
+    p = np.asarray(new_p[0])
+    assert p[0] < 1.0 and p[1] > 1.0 and p[2] == 1.0
+
+
+def test_global_norm_clip():
+    grads = [jnp.array([3.0, 4.0])]  # norm 5
+    clipped, gn = M.global_norm_clip(grads, 1.0)
+    np.testing.assert_allclose(float(gn), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped[0])), 1.0, rtol=1e-4)
+    # below the max norm: untouched
+    same, _ = M.global_norm_clip(grads, 10.0)
+    np.testing.assert_allclose(same[0], grads[0])
+
+
+def _synthetic_rollout(key, t, b, good_action=2):
+    """Bandit-ish data: reward when action==good_action was taken."""
+    ks = jax.random.split(key, 4)
+    obs = jax.random.randint(ks[0], (t, b, 5, 5, 2), 0, 10)
+    actions = jax.random.randint(ks[1], (t, b), 0, 6)
+    reward = (actions == good_action).astype(jnp.float32)
+    old_logp = jnp.full((t, b), -np.log(6.0))
+    old_value = jnp.zeros((t, b))
+    return (obs, jnp.zeros((t, b), jnp.int32), jnp.zeros((t, b)),
+            jnp.zeros((t, b), jnp.int32), actions, old_logp, old_value,
+            reward, jnp.zeros((t, b), jnp.int32), jnp.zeros((b,)),
+            jnp.zeros((b, CFG.hidden_dim)))
+
+
+def test_train_update_learns_synthetic_bandit(params):
+    t, b = 8, 16
+    hp = M.default_hp()
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    tcount = jnp.asarray(0, jnp.int32)
+    p = [jnp.asarray(x) for x in params]
+
+    upd = jax.jit(lambda p, m, v, t_, roll, hp: M.train_update(
+        p, m, v, t_, roll, hp, CFG))
+
+    def mean_good_prob(p):
+        obs = jnp.zeros((4, 5, 5, 2), jnp.int32)
+        logits, _, _ = M.network_step(
+            p, obs, jnp.zeros(4, jnp.int32), jnp.zeros(4),
+            jnp.ones(4, jnp.int32), jnp.zeros((4, CFG.hidden_dim)), CFG)
+        return float(jax.nn.softmax(logits, -1)[:, 2].mean())
+
+    before = mean_good_prob(p)
+    for i in range(30):
+        roll = _synthetic_rollout(jax.random.PRNGKey(i), t, b)
+        p, m, v, tcount, metrics = upd(p, m, v, tcount, roll, hp)
+    after = mean_good_prob(p)
+    assert int(tcount) == 30
+    assert after > before + 0.05, (
+        f"policy should move toward the rewarded action ({before:.3f} -> "
+        f"{after:.3f})")
+    assert np.all(np.isfinite(np.asarray(metrics)))
+
+
+def test_metrics_vector_semantics(params):
+    t, b = 4, 8
+    hp = M.default_hp()
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    roll = _synthetic_rollout(jax.random.PRNGKey(0), t, b)
+    _, _, _, _, metrics = M.train_update(
+        list(params), m, v, jnp.asarray(0, jnp.int32), roll, hp, CFG)
+    ms = np.asarray(metrics)
+    assert ms.shape == (8,)
+    entropy = ms[3]
+    assert 0.0 < entropy <= np.log(6.0) + 1e-5
+    clip_frac = ms[5]
+    assert 0.0 <= clip_frac <= 1.0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
+
+
+def test_goal_conditioning_features():
+    # Fig. 11 mechanism: goal/rule encodings -> conditioning vector
+    params = M.init_params(jax.random.PRNGKey(0), CFG)
+    b, mr = 6, 3
+    goal = jnp.tile(jnp.array([[3, 5, 3, 0, 0]], jnp.int32), (b, 1))
+    rules = jnp.zeros((b, mr, 7), jnp.int32)
+    feat = M.goal_conditioning(params, goal, rules, CFG)
+    assert feat.shape == (b, 15 + 6 * CFG.emb_dim)
+    # one-hot on the goal id
+    np.testing.assert_allclose(np.asarray(feat[:, 3]), 1.0)
+    # different goals give different features
+    goal2 = goal.at[:, 0].set(4)
+    feat2 = M.goal_conditioning(params, goal2, rules, CFG)
+    assert not np.allclose(np.asarray(feat), np.asarray(feat2))

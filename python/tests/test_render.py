@@ -1,0 +1,56 @@
+"""RGB rendering wrapper (App. H) tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.xmg import types as T
+from compile.xmg.render import render_obs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_render_shape_and_range():
+    obs = jnp.zeros((5, 5, 2), jnp.int32).at[..., 0].set(T.TILE_FLOOR)
+    img = render_obs(obs, patch=8)
+    assert img.shape == (40, 40, 3)
+    assert img.dtype == jnp.float32
+    assert float(img.min()) >= 0.0 and float(img.max()) <= 1.0
+
+
+def test_different_tiles_render_differently():
+    base = jnp.zeros((5, 5, 2), jnp.int32).at[..., 0].set(T.TILE_FLOOR)
+    ball = base.at[2, 2].set(
+        jnp.array([T.TILE_BALL, T.COLOR_RED], jnp.int32))
+    wall = base.at[2, 2].set(
+        jnp.array([T.TILE_WALL, T.COLOR_GREY], jnp.int32))
+    img_b = np.asarray(render_obs(ball))
+    img_w = np.asarray(render_obs(wall))
+    assert not np.array_equal(img_b, img_w)
+    # the ball patch contains red pixels
+    patch = img_b[16:24, 16:24]
+    assert patch[..., 0].max() > 0.9
+    assert patch[..., 1].max() < 0.5
+
+
+def test_color_is_respected():
+    base = jnp.zeros((5, 5, 2), jnp.int32).at[..., 0].set(T.TILE_FLOOR)
+    red = base.at[1, 1].set(
+        jnp.array([T.TILE_BALL, T.COLOR_RED], jnp.int32))
+    blue = base.at[1, 1].set(
+        jnp.array([T.TILE_BALL, T.COLOR_BLUE], jnp.int32))
+    img_r = np.asarray(render_obs(red))[8:16, 8:16]
+    img_b = np.asarray(render_obs(blue))[8:16, 8:16]
+    assert img_r[..., 0].max() > img_r[..., 2].max()
+    assert img_b[..., 2].max() > img_b[..., 0].max()
+
+
+def test_render_is_jit_and_vmap_compatible():
+    obs = jnp.zeros((3, 5, 5, 2), jnp.int32).at[..., 0].set(T.TILE_FLOOR)
+    imgs = jax.jit(jax.vmap(lambda o: render_obs(o, patch=4)))(obs)
+    assert imgs.shape == (3, 20, 20, 3)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

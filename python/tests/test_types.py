@@ -1,0 +1,96 @@
+"""Table 1-3 constants pinned to the paper, and python<->rust contract
+checks (the Rust side pins the same values in env/types.rs)."""
+
+import jax.numpy as jnp
+import pytest
+
+from compile.xmg import types as T
+
+
+def test_tile_ids_match_table_1a():
+    assert T.TILE_END_OF_MAP == 0
+    assert T.TILE_UNSEEN == 1
+    assert T.TILE_EMPTY == 2
+    assert T.TILE_FLOOR == 3
+    assert T.TILE_WALL == 4
+    assert T.TILE_BALL == 5
+    assert T.TILE_SQUARE == 6
+    assert T.TILE_PYRAMID == 7
+    assert T.TILE_GOAL == 8
+    assert T.TILE_KEY == 9
+    assert T.TILE_DOOR_LOCKED == 10
+    assert T.TILE_DOOR_CLOSED == 11
+    assert T.TILE_DOOR_OPEN == 12
+    assert T.TILE_HEX == 13
+    assert T.TILE_STAR == 14
+    assert T.NUM_TILES == 15
+
+
+def test_color_ids_match_table_1b():
+    assert T.COLOR_RED == 3
+    assert T.COLOR_GREEN == 4
+    assert T.COLOR_BLUE == 5
+    assert T.COLOR_PURPLE == 6
+    assert T.COLOR_YELLOW == 7
+    assert T.COLOR_GREY == 8
+    assert T.COLOR_BLACK == 9
+    assert T.COLOR_ORANGE == 10
+    assert T.COLOR_WHITE == 11
+    assert T.COLOR_BROWN == 12
+    assert T.COLOR_PINK == 13
+    assert T.NUM_COLORS == 14
+
+
+def test_goal_ids_match_table_2():
+    assert T.GOAL_EMPTY == 0
+    assert T.GOAL_AGENT_HOLD == 1
+    assert T.GOAL_AGENT_ON_TILE == 2
+    assert T.GOAL_AGENT_NEAR == 3
+    assert T.GOAL_TILE_NEAR == 4
+    assert T.GOAL_AGENT_ON_POSITION == 5
+    assert T.GOAL_TILE_ON_POSITION == 6
+    assert T.GOAL_TILE_NEAR_UP == 7
+    assert T.GOAL_AGENT_NEAR_LEFT == 14
+    assert T.NUM_GOALS == 15
+
+
+def test_rule_ids_match_table_3():
+    assert T.RULE_EMPTY == 0
+    assert T.RULE_AGENT_HOLD == 1
+    assert T.RULE_AGENT_NEAR == 2
+    assert T.RULE_TILE_NEAR == 3
+    assert T.RULE_TILE_NEAR_UP == 4
+    assert T.RULE_AGENT_NEAR_LEFT == 11
+    assert T.NUM_RULES == 12
+
+
+def test_generator_palettes():
+    # App. J: 10 colors, 7 tile types => 70 unique objects
+    assert len(T.GEN_COLORS) == 10
+    assert len(T.GEN_TILES) == 7
+    assert len(set(T.GEN_COLORS)) == 10
+    assert len(set(T.GEN_TILES)) == 7
+
+
+def test_predicates():
+    assert bool(T.is_pickable(jnp.asarray(T.TILE_KEY)))
+    assert not bool(T.is_pickable(jnp.asarray(T.TILE_WALL)))
+    assert bool(T.is_walkable(jnp.asarray(T.TILE_DOOR_OPEN)))
+    assert not bool(T.is_walkable(jnp.asarray(T.TILE_DOOR_LOCKED)))
+    assert bool(T.blocks_sight(jnp.asarray(T.TILE_DOOR_CLOSED)))
+    assert not bool(T.blocks_sight(jnp.asarray(T.TILE_FLOOR)))
+
+
+def test_action_space():
+    assert T.NUM_ACTIONS == 6
+    assert T.ACTION_FORWARD == 0
+    assert T.ACTION_TOGGLE == 5
+
+
+def test_encoding_widths():
+    assert T.RULE_ENC == 7
+    assert T.GOAL_ENC == 5
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

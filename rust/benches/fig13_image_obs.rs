@@ -1,0 +1,81 @@
+//! Fig. 13 (App. H): simulation throughput with RGB image observations vs
+//! symbolic observations. Paper claim: image rendering costs a large
+//! constant factor but stays in the millions of steps/second on device;
+//! the reproduced shape is the symbolic-vs-image throughput *ratio*.
+
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::EnvPool;
+use xmgrid::runtime::{Runtime, Tensor};
+use xmgrid::util::bench::bench;
+use xmgrid::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 128);
+    let tasks = Benchmark { name: "trivial".into(), rulesets };
+    let mut rng = Rng::new(0);
+
+    println!("# Fig 13: symbolic vs image-observation throughput");
+
+    // pick a rollout artifact and the matching render batch
+    let rolls = rt.manifest.of_kind("env_rollout");
+    let spec = rolls
+        .iter()
+        .find(|s| {
+            let b = s.meta_usize("B").unwrap();
+            rt.manifest
+                .of_kind("render_rgb")
+                .iter()
+                .any(|r| r.meta_usize("B").unwrap() == b)
+        })
+        .or_else(|| rolls.first())
+        .expect("no env_rollout artifacts");
+    let fam = EnvFamily::from_spec(spec).unwrap();
+    let t = spec.meta_usize("T").unwrap();
+
+    let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
+    let rs = pool.sample_rulesets(&tasks, &mut rng);
+    pool.reset(&rs, &mut rng).unwrap();
+
+    // symbolic: fused rollout only
+    let mut r = Rng::new(7);
+    let sym = bench("symbolic", 1, 1, || {
+        pool.rollout(&rt, t, &mut r).unwrap();
+    });
+    let sym_sps = (fam.b * t) as f64 / sym.min_secs;
+    println!("symbolic  envs={:<5} steps/s={:<12.0} ({})", fam.b, sym_sps,
+             fmt_sps(sym_sps));
+
+    // image: rollout + per-step render of each observation through the
+    // render_rgb artifact (the RGBImgObservationWrapper cost model)
+    if let Some(render_spec) = rt
+        .manifest
+        .of_kind("render_rgb")
+        .iter()
+        .find(|r| r.meta_usize("B").unwrap() == fam.b)
+    {
+        let render = rt.load(&render_spec.name).unwrap();
+        let obs = Tensor::I32(vec![4; fam.b * 5 * 5 * 2]);
+        let mut r = Rng::new(7);
+        let img = bench("image", 1, 1, || {
+            pool.rollout(&rt, t, &mut r).unwrap();
+            // wrapper renders every step's observation batch
+            for _ in 0..t {
+                render.execute(std::slice::from_ref(&obs)).unwrap();
+            }
+        });
+        let img_sps = (fam.b * t) as f64 / img.min_secs;
+        println!("image     envs={:<5} steps/s={:<12.0} ({})", fam.b,
+                 img_sps, fmt_sps(img_sps));
+        println!("ratio symbolic/image = {:.1}x  (paper: ~5-10x at \
+                  comparable batch)", sym_sps / img_sps);
+    } else {
+        println!("(no render_rgb artifact at B={}; run full `make \
+                  artifacts`)", fam.b);
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig. 5a: simulation throughput (random policy, auto-reset on) vs the
+//! number of parallel environments. Paper protocol: minimum over repeats.
+//! Prints the log-log series; compare shapes, not absolute SPS (CPU here,
+//! A100 there — DESIGN.md §Hardware-Adaptation).
+
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::EnvPool;
+use xmgrid::env::state::{reset, step, EnvOptions};
+use xmgrid::env::Grid;
+use xmgrid::runtime::Runtime;
+use xmgrid::util::bench::bench;
+use xmgrid::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
+    let bench_tasks = Benchmark { name: "trivial".into(), rulesets };
+    let mut rng = Rng::new(0);
+
+    println!("# Fig 5a: simulation throughput vs num parallel envs");
+    println!("# paper: log-log linear, saturation ~2^13 on one device");
+    // XMG_MAX_B bounds the sweep (1-core CI default keeps runtimes sane)
+    let max_b: usize = std::env::var("XMG_MAX_B")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4096);
+    let mut rolls: Vec<_> = rt
+        .manifest
+        .of_kind("env_rollout")
+        .into_iter()
+        .filter(|s| s.meta_usize("H").unwrap() == 13
+                && s.meta_usize("B").unwrap() <= max_b)
+        .cloned()
+        .collect();
+    rolls.sort_by_key(|s| s.meta_usize("B").unwrap());
+    for spec in &rolls {
+        let fam = EnvFamily::from_spec(spec).unwrap();
+        let t = spec.meta_usize("T").unwrap();
+        let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
+        let tasks = pool.sample_rulesets(&bench_tasks, &mut rng);
+        pool.reset(&tasks, &mut rng).unwrap();
+        let mut r = Rng::new(7);
+        // large batches amortize dispatch already; 1 timed repeat suffices
+        let repeats = if fam.b >= 1024 { 1 } else { 2 };
+        let result = bench(&spec.name, 1, repeats, || {
+            pool.rollout(&rt, t, &mut r).unwrap();
+        });
+        let sps = (fam.b * t) as f64 / result.min_secs;
+        println!("envs={:<6} steps/s={:<12.0} ({})", fam.b, sps,
+                 fmt_sps(sps));
+    }
+
+    // per-step dispatch baseline (§Perf): the same env driven through the
+    // single-step artifact with one host<->device round-trip per step —
+    // what the architecture would cost WITHOUT the fused Anakin rollouts
+    println!("\n# baseline: per-step dispatch through env_step (13x13)");
+    if let Some(spec) = rt
+        .manifest
+        .of_kind("env_step")
+        .into_iter()
+        .find(|s| s.meta_usize("H").unwrap() == 13)
+    {
+        use xmgrid::env::state::Ruleset;
+        use xmgrid::env::Goal;
+        use xmgrid::runtime::state::{pack_states, NUM_STATE_FIELDS};
+        use xmgrid::runtime::Tensor;
+        let fam = EnvFamily::from_spec(spec).unwrap();
+        let art = rt.load(&spec.name).unwrap();
+        let opts = EnvOptions::default();
+        let states: Vec<_> = (0..fam.b)
+            .map(|i| {
+                let rs = Ruleset {
+                    goal: Goal::EMPTY,
+                    rules: vec![],
+                    init_tiles: vec![],
+                };
+                reset(Grid::empty_room(13, 13), rs, 507, Rng::new(i as u64),
+                      opts).0
+            })
+            .collect();
+        let keys: Vec<[u32; 2]> = (0..fam.b).map(|i| [1, i as u32]).collect();
+        let mut inputs =
+            pack_states(&states, fam.mr, fam.mi, &keys).unwrap();
+        inputs.push(Tensor::I32(vec![0; fam.b]));
+        let mut r = Rng::new(3);
+        let steps = 128usize;
+        let result = bench("per-step dispatch", 1, 1, || {
+            for _ in 0..steps {
+                let out = art.execute(&inputs).unwrap();
+                for (j, t) in
+                    out.into_iter().take(NUM_STATE_FIELDS).enumerate()
+                {
+                    inputs[j] = t;
+                }
+                inputs[NUM_STATE_FIELDS] =
+                    Tensor::I32((0..fam.b)
+                        .map(|_| r.below(6) as i32)
+                        .collect());
+            }
+        });
+        let sps = (fam.b * steps) as f64 / result.min_secs;
+        println!("envs={:<6} steps/s={sps:<12.0} ({})  <- one dispatch per \
+                  step", fam.b, fmt_sps(sps));
+    }
+
+    // CPU-loop baseline for context (single thread)
+    println!("\n# baseline: pure-Rust sequential loop (13x13)");
+    for batch in [1usize, 256, 1024] {
+        let opts = EnvOptions::default();
+        let mut states: Vec<_> = (0..batch)
+            .map(|i| {
+                let rs = bench_tasks.rulesets
+                    [i % bench_tasks.num_rulesets()].clone();
+                reset(Grid::empty_room(13, 13), rs, 507,
+                      Rng::new(i as u64), opts).0
+            })
+            .collect();
+        let mut r = Rng::new(5);
+        let result = bench("rust-loop", 0, 3, || {
+            for s in states.iter_mut() {
+                for _ in 0..64 {
+                    step(s, r.below(6) as i32, opts);
+                }
+            }
+        });
+        let sps = (batch * 64) as f64 / result.min_secs;
+        println!("envs={batch:<6} steps/s={sps:<12.0} ({})", fmt_sps(sps));
+    }
+}

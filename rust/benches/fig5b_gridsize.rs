@@ -1,0 +1,46 @@
+//! Fig. 5b: simulation throughput vs grid size. Paper claim: throughput
+//! degrades markedly with grid size and saturates earlier.
+
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::EnvPool;
+use xmgrid::runtime::Runtime;
+use xmgrid::util::bench::bench;
+use xmgrid::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
+    let tasks = Benchmark { name: "trivial".into(), rulesets };
+    let mut rng = Rng::new(0);
+
+    println!("# Fig 5b: simulation throughput vs grid size");
+    println!("# paper: larger grids are significantly slower");
+    let mut rolls: Vec<_> =
+        rt.manifest.of_kind("env_rollout").into_iter().cloned().collect();
+    rolls.sort_by_key(|s| {
+        (s.meta_usize("H").unwrap(), s.meta_usize("B").unwrap())
+    });
+    for spec in &rolls {
+        let fam = EnvFamily::from_spec(spec).unwrap();
+        // the grid-size series: same batch, varying H
+        if fam.b != 1024 {
+            continue;
+        }
+        let t = spec.meta_usize("T").unwrap();
+        let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
+        let rs = pool.sample_rulesets(&tasks, &mut rng);
+        pool.reset(&rs, &mut rng).unwrap();
+        let mut r = Rng::new(7);
+        let result = bench(&spec.name, 1, 1, || {
+            pool.rollout(&rt, t, &mut r).unwrap();
+        });
+        let sps = (fam.b * t) as f64 / result.min_secs;
+        println!("grid={:<2}x{:<2} rules={:<2} envs={:<5} steps/s={:<12.0} ({})",
+                 fam.h, fam.w, fam.mr, fam.b, sps, fmt_sps(sps));
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig. 5c: simulation throughput vs the number of rules (16x16 grid, the
+//! paper's setup: "we simply replicated the same NEAR rule multiple
+//! times"). Paper claim: monotone decrease, no saturation up to 24 rules.
+
+use std::path::Path;
+
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::EnvPool;
+use xmgrid::env::rules::Rule;
+use xmgrid::env::state::Ruleset;
+use xmgrid::env::types::*;
+use xmgrid::env::{Cell, Goal};
+use xmgrid::runtime::Runtime;
+use xmgrid::util::bench::bench;
+use xmgrid::util::rng::Rng;
+
+/// Paper protocol: the same NEAR rule replicated `n` times.
+fn replicated_near_ruleset(n: usize) -> Ruleset {
+    let a = Cell::new(TILE_BALL, COLOR_RED);
+    let b = Cell::new(TILE_SQUARE, COLOR_BLUE);
+    let c = Cell::new(TILE_HEX, COLOR_PINK);
+    Ruleset {
+        goal: Goal::agent_near(c),
+        rules: (0..n).map(|_| Rule::tile_near(a, b, c)).collect(),
+        init_tiles: vec![a, b],
+    }
+}
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let mut rng = Rng::new(0);
+
+    println!("# Fig 5c: simulation throughput vs number of rules (16x16)");
+    println!("# paper: monotone decrease with rule count");
+    let mut rolls: Vec<_> = rt
+        .manifest
+        .of_kind("env_rollout")
+        .into_iter()
+        .filter(|s| s.meta_usize("H").unwrap() == 16)
+        .cloned()
+        .collect();
+    rolls.sort_by_key(|s| s.meta_usize("MR").unwrap());
+    for spec in &rolls {
+        let fam = EnvFamily::from_spec(spec).unwrap();
+        let t = spec.meta_usize("T").unwrap();
+        let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
+        let ruleset = replicated_near_ruleset(fam.mr);
+        let rulesets: Vec<&Ruleset> = (0..fam.b).map(|_| &ruleset).collect();
+        pool.reset(&rulesets, &mut rng).unwrap();
+        let mut r = Rng::new(7);
+        let result = bench(&spec.name, 1, 1, || {
+            pool.rollout(&rt, t, &mut r).unwrap();
+        });
+        let sps = (fam.b * t) as f64 / result.min_secs;
+        println!("rules={:<2} envs={:<5} steps/s={:<12.0} ({})", fam.mr,
+                 fam.b, sps, fmt_sps(sps));
+    }
+}

@@ -1,0 +1,56 @@
+//! Fig. 5f: RL² PPO *training* throughput vs number of parallel envs
+//! (9x9 grid, trivial benchmark, Table 6 hyperparameters). Paper claim:
+//! single-device training saturates near its ceiling; batch growth helps
+//! until the update cost dominates.
+
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::{TrainConfig, Trainer};
+use xmgrid::runtime::Runtime;
+use xmgrid::util::bench::bench;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).expect("make artifacts first");
+
+    println!("# Fig 5f: training throughput vs num parallel envs (9x9)");
+    let mut arts: Vec<_> = rt
+        .manifest
+        .of_kind("train_iter")
+        .into_iter()
+        .filter(|s| s.meta_usize("H").unwrap() == 9)
+        .cloned()
+        .collect();
+    arts.sort_by_key(|s| s.meta_usize("B").unwrap());
+    if arts.is_empty() {
+        // quick-artifact fallback: whatever train_iter exists
+        arts = rt.manifest.of_kind("train_iter").into_iter().cloned()
+            .collect();
+    }
+
+    for spec in &arts {
+        let mut trainer = Trainer::new(&rt, &spec.name, 1,
+                                       TrainConfig::default())
+            .unwrap();
+        let mut cfg = Preset::Trivial.config();
+        cfg.max_rules = trainer.family.mr;
+        cfg.max_objects = trainer.family.mi;
+        let (rulesets, _) = generate_benchmark(&cfg, 256);
+        let tasks = Benchmark { name: "trivial".into(), rulesets };
+        trainer.resample_tasks(&tasks).unwrap();
+        trainer.train_iter().unwrap(); // warmup
+
+        let steps = trainer.t_len * trainer.family.b;
+        let result = bench(&spec.name, 0, 2, || {
+            trainer.train_iter().unwrap();
+        });
+        let sps = steps as f64 / result.min_secs;
+        println!(
+            "envs={:<5} T={:<3} mb={:<4} train-steps/s={sps:<12.0} ({})",
+            trainer.family.b, trainer.t_len,
+            spec.meta_usize("MB").unwrap(), fmt_sps(sps)
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Generation configurations — paper Table 4, argument names matching the
+//! paper's `scripts/ruleset_generator.py`.
+
+/// Parameters of the ruleset generator (Table 4 / App. J).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenConfig {
+    /// depth of the production-rule tree below the goal
+    pub chain_depth: usize,
+    /// sample the depth uniformly in `0..=chain_depth` instead of fixing it
+    pub sample_depth: bool,
+    /// allow marking inner nodes as leaves early
+    pub prune_chain: bool,
+    /// probability of pruning a node when `prune_chain`
+    pub prune_prob: f64,
+    /// number of distractor production rules
+    pub num_distractor_rules: usize,
+    /// sample the count uniformly in `0..=num_distractor_rules`
+    pub sample_distractor_rules: bool,
+    /// number of distractor objects
+    pub num_distractor_objects: usize,
+    pub random_seed: u64,
+    /// capacity limits so rulesets fit the compiled artifacts
+    pub max_rules: usize,
+    pub max_objects: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    Trivial,
+    Small,
+    Medium,
+    High,
+}
+
+impl Preset {
+    pub fn all() -> [Preset; 4] {
+        [Preset::Trivial, Preset::Small, Preset::Medium, Preset::High]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Preset::Trivial => "trivial",
+            Preset::Small => "small",
+            Preset::Medium => "medium",
+            Preset::High => "high",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Preset> {
+        // accept both "high" and "high-1m" style names
+        let base = name.split('-').next().unwrap_or(name);
+        match base {
+            "trivial" => Some(Preset::Trivial),
+            "small" => Some(Preset::Small),
+            "medium" => Some(Preset::Medium),
+            "high" => Some(Preset::High),
+            _ => None,
+        }
+    }
+
+    /// Exact Table 4 parameters.
+    pub fn config(&self) -> GenConfig {
+        let base = GenConfig {
+            chain_depth: 0,
+            sample_depth: false,
+            prune_chain: false,
+            prune_prob: 0.0,
+            num_distractor_rules: 0,
+            sample_distractor_rules: false,
+            num_distractor_objects: 3,
+            random_seed: 42,
+            max_rules: 24,
+            max_objects: 16,
+        };
+        match self {
+            Preset::Trivial => base,
+            Preset::Small => GenConfig {
+                chain_depth: 1,
+                prune_chain: true,
+                prune_prob: 0.3,
+                num_distractor_rules: 2,
+                sample_distractor_rules: true,
+                num_distractor_objects: 2,
+                ..base
+            },
+            Preset::Medium => GenConfig {
+                chain_depth: 2,
+                prune_chain: true,
+                prune_prob: 0.1,
+                num_distractor_rules: 3,
+                sample_distractor_rules: true,
+                num_distractor_objects: 2,
+                ..base
+            },
+            Preset::High => GenConfig {
+                chain_depth: 3,
+                prune_chain: true,
+                prune_prob: 0.1,
+                num_distractor_rules: 4,
+                sample_distractor_rules: true,
+                num_distractor_objects: 1,
+                ..base
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 4 pinned exactly.
+    #[test]
+    fn table4_presets() {
+        let t = Preset::Trivial.config();
+        assert_eq!(t.chain_depth, 0);
+        assert!(!t.prune_chain);
+        assert_eq!(t.num_distractor_rules, 0);
+        assert_eq!(t.num_distractor_objects, 3);
+        assert_eq!(t.random_seed, 42);
+
+        let s = Preset::Small.config();
+        assert_eq!(s.chain_depth, 1);
+        assert!(s.prune_chain);
+        assert!((s.prune_prob - 0.3).abs() < 1e-12);
+        assert_eq!(s.num_distractor_rules, 2);
+        assert_eq!(s.num_distractor_objects, 2);
+
+        let m = Preset::Medium.config();
+        assert_eq!(m.chain_depth, 2);
+        assert!((m.prune_prob - 0.1).abs() < 1e-12);
+        assert_eq!(m.num_distractor_rules, 3);
+
+        let h = Preset::High.config();
+        assert_eq!(h.chain_depth, 3);
+        assert_eq!(h.num_distractor_rules, 4);
+        assert_eq!(h.num_distractor_objects, 1);
+    }
+
+    #[test]
+    fn preset_names_roundtrip() {
+        for p in Preset::all() {
+            assert_eq!(Preset::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Preset::from_name("high-1m"), Some(Preset::High));
+        assert_eq!(Preset::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,409 @@
+//! Ruleset generation (paper §3 "Generation Procedure", App. J).
+//!
+//! Each task is a tree whose root is the goal and whose nodes are
+//! production rules; leaf-rule inputs become the initial objects. Objects
+//! appear at most once as an input and once as an output across the main
+//! tree (the paper's uniqueness constraint), so triggering a wrong rule can
+//! dead-end the trial. Distractor objects take no part in any rule;
+//! distractor rules consume tree objects but never produce useful ones.
+
+use crate::env::goals::Goal;
+use crate::env::rules::Rule;
+use crate::env::state::Ruleset;
+use crate::env::types::*;
+use crate::util::rng::Rng;
+
+use super::config::GenConfig;
+
+/// Stats recorded per generated ruleset (Fig. 4 distributions).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RulesetStats {
+    pub num_rules: usize,
+    pub num_distractor_rules: usize,
+    pub tree_depth: usize,
+    pub num_init_objects: usize,
+}
+
+/// The 70-object pool (7 tiles × 10 colors, App. J).
+fn object_pool() -> Vec<Cell> {
+    let mut pool = Vec::with_capacity(70);
+    for &t in GEN_TILES.iter() {
+        for &c in GEN_COLORS.iter() {
+            pool.push(Cell::new(t, c));
+        }
+    }
+    pool
+}
+
+/// Goal families used by the generator: all object-argument goals
+/// (position goals are layout-dependent and excluded, as in the paper's
+/// benchmarks).
+const GOAL_CHOICES: [i32; 9] = [
+    GOAL_AGENT_HOLD, GOAL_AGENT_NEAR, GOAL_TILE_NEAR, GOAL_TILE_NEAR_UP,
+    GOAL_TILE_NEAR_RIGHT, GOAL_TILE_NEAR_DOWN, GOAL_TILE_NEAR_LEFT,
+    GOAL_AGENT_NEAR_UP, GOAL_AGENT_NEAR_RIGHT,
+];
+
+fn sample_goal(rng: &mut Rng, pool: &mut Vec<Cell>) -> (Goal, Vec<Cell>) {
+    let gid = *rng.choose(&GOAL_CHOICES);
+    let take = |rng: &mut Rng, pool: &mut Vec<Cell>| -> Cell {
+        let i = rng.below(pool.len());
+        pool.swap_remove(i)
+    };
+    match gid {
+        GOAL_AGENT_HOLD => {
+            let a = take(rng, pool);
+            (Goal::agent_hold(a), vec![a])
+        }
+        GOAL_AGENT_NEAR => {
+            let a = take(rng, pool);
+            (Goal::agent_near(a), vec![a])
+        }
+        GOAL_TILE_NEAR => {
+            let a = take(rng, pool);
+            let b = take(rng, pool);
+            (Goal::tile_near(a, b), vec![a, b])
+        }
+        GOAL_TILE_NEAR_UP | GOAL_TILE_NEAR_RIGHT | GOAL_TILE_NEAR_DOWN
+        | GOAL_TILE_NEAR_LEFT => {
+            let a = take(rng, pool);
+            let b = take(rng, pool);
+            let dir = (gid - GOAL_TILE_NEAR_UP) as usize;
+            (Goal::tile_near_dir(dir, a, b), vec![a, b])
+        }
+        _ => {
+            let a = take(rng, pool);
+            let dir = (gid - GOAL_AGENT_NEAR_UP) as usize;
+            (Goal::agent_near_dir(dir, a), vec![a])
+        }
+    }
+}
+
+/// Sample a production rule with output `out`; returns (rule, inputs).
+fn sample_rule(rng: &mut Rng, pool: &mut Vec<Cell>, out: Cell)
+               -> (Rule, Vec<Cell>) {
+    let take = |rng: &mut Rng, pool: &mut Vec<Cell>| -> Cell {
+        let i = rng.below(pool.len());
+        pool.swap_remove(i)
+    };
+    // two-input TileNear family vs one-input Agent family, weighted toward
+    // TileNear like the paper's trees (binary in the worst case)
+    let choice = rng.below(8);
+    match choice {
+        0 => {
+            let a = take(rng, pool);
+            (Rule::agent_hold(a, out), vec![a])
+        }
+        1 => {
+            let a = take(rng, pool);
+            (Rule::agent_near(a, out), vec![a])
+        }
+        2 | 3 | 4 => {
+            let a = take(rng, pool);
+            let b = take(rng, pool);
+            (Rule::tile_near(a, b, out), vec![a, b])
+        }
+        5 | 6 => {
+            let a = take(rng, pool);
+            let b = take(rng, pool);
+            let dir = rng.below(4);
+            (Rule::tile_near_dir(dir, a, b, out), vec![a, b])
+        }
+        _ => {
+            let a = take(rng, pool);
+            let dir = rng.below(4);
+            (Rule::agent_near_dir(dir, a, out), vec![a])
+        }
+    }
+}
+
+/// Generate one ruleset under `cfg`. Deterministic given `rng`.
+pub fn generate_ruleset(cfg: &GenConfig, rng: &mut Rng)
+                        -> (Ruleset, RulesetStats) {
+    let mut pool = object_pool();
+    let (goal, goal_objects) = sample_goal(rng, &mut pool);
+
+    let depth = if cfg.sample_depth {
+        rng.below(cfg.chain_depth + 1)
+    } else {
+        cfg.chain_depth
+    };
+
+    let mut rules: Vec<Rule> = Vec::new();
+    let mut init: Vec<Cell> = Vec::new();
+    let mut tree_objects: Vec<Cell> = goal_objects.clone();
+    let mut max_depth_reached = 0usize;
+
+    // frontier of objects that still need a producer, with their level
+    let mut frontier: Vec<(Cell, usize)> =
+        goal_objects.iter().map(|&o| (o, 0)).collect();
+
+    while let Some((obj, level)) = frontier.pop() {
+        max_depth_reached = max_depth_reached.max(level);
+        let capacity_left = cfg.max_objects.saturating_sub(
+            init.len() + frontier.len() + 2 + cfg.num_distractor_objects);
+        let rules_left = cfg.max_rules.saturating_sub(
+            rules.len() + cfg.num_distractor_rules);
+        let prune = cfg.prune_chain && rng.chance(cfg.prune_prob);
+        if level >= depth || prune || capacity_left < 2 || rules_left == 0
+            || pool.len() < 2
+        {
+            init.push(obj); // leaf: placed on the grid at trial start
+            continue;
+        }
+        let (rule, inputs) = sample_rule(rng, &mut pool, obj);
+        rules.push(rule);
+        for inp in inputs {
+            tree_objects.push(inp);
+            frontier.push((inp, level + 1));
+        }
+    }
+
+    // distractor objects: never used by any rule
+    let n_dobj = cfg.num_distractor_objects
+        .min(cfg.max_objects.saturating_sub(init.len()));
+    for _ in 0..n_dobj {
+        if pool.is_empty() {
+            break;
+        }
+        let i = rng.below(pool.len());
+        init.push(pool.swap_remove(i));
+    }
+
+    // distractor rules: inputs from the main tree, outputs useless
+    let main_rules = rules.len();
+    let n_drules = if cfg.sample_distractor_rules {
+        rng.below(cfg.num_distractor_rules + 1)
+    } else {
+        cfg.num_distractor_rules
+    };
+    let n_drules = n_drules.min(cfg.max_rules.saturating_sub(rules.len()));
+    for _ in 0..n_drules {
+        if tree_objects.is_empty() || pool.is_empty() {
+            break;
+        }
+        // output is a fresh object no other rule consumes, or disappearance
+        let out = if rng.chance(0.3) {
+            FLOOR_CELL // disappearance (App. J)
+        } else {
+            let i = rng.below(pool.len());
+            pool.swap_remove(i)
+        };
+        let a = *rng.choose(&tree_objects);
+        let rule = if rng.chance(0.5) && tree_objects.len() >= 2 {
+            let b = *rng.choose(&tree_objects);
+            Rule::tile_near(a, b, out)
+        } else {
+            Rule::agent_near(a, out)
+        };
+        rules.push(rule);
+    }
+
+    // rules are hidden from the agent and order must not leak the tree
+    rng.shuffle(&mut rules);
+
+    let stats = RulesetStats {
+        num_rules: rules.len(),
+        num_distractor_rules: rules.len() - main_rules,
+        tree_depth: max_depth_reached,
+        num_init_objects: init.len(),
+    };
+    (Ruleset { goal, rules, init_tiles: init }, stats)
+}
+
+/// Generate `n` unique rulesets (dedup by content, as the paper's
+/// generator spends "a lot of time spent filtering out repeated tasks").
+pub fn generate_benchmark(cfg: &GenConfig, n: usize)
+                          -> (Vec<Ruleset>, Vec<RulesetStats>) {
+    let mut rng = Rng::new(cfg.random_seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    let mut stats = Vec::with_capacity(n);
+    let mut attempts = 0usize;
+    while out.len() < n {
+        attempts += 1;
+        assert!(attempts < n * 100 + 10_000,
+                "generator stuck deduplicating; lower n for this config");
+        let (rs, st) = generate_ruleset(cfg, &mut rng);
+        let key = fingerprint(&rs);
+        if seen.insert(key) {
+            out.push(rs);
+            stats.push(st);
+        }
+    }
+    (out, stats)
+}
+
+fn fingerprint(rs: &Ruleset) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    rs.goal.0.hash(&mut h);
+    for r in &rs.rules {
+        r.0.hash(&mut h);
+    }
+    for c in &rs.init_tiles {
+        (c.tile, c.color).hash(&mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchgen::config::Preset;
+    use crate::util::property_test;
+
+    #[test]
+    fn trivial_has_no_rules_and_direct_objects() {
+        let cfg = Preset::Trivial.config();
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let (rs, st) = generate_ruleset(&cfg, &mut rng);
+            assert_eq!(st.num_rules, 0, "trivial depth=0 means no rules");
+            assert_eq!(st.tree_depth, 0);
+            // goal objects placed directly + 3 distractors
+            let need = rs.goal.required_objects().len();
+            assert_eq!(rs.init_tiles.len(), need + 3);
+            for obj in rs.goal.required_objects() {
+                assert!(rs.init_tiles.contains(&obj),
+                        "goal object must be on the grid");
+            }
+        }
+    }
+
+    #[test]
+    fn high_reaches_depth_three() {
+        let cfg = Preset::High.config();
+        let mut rng = Rng::new(42);
+        let mut max_depth = 0;
+        for _ in 0..300 {
+            let (_, st) = generate_ruleset(&cfg, &mut rng);
+            max_depth = max_depth.max(st.tree_depth);
+        }
+        assert_eq!(max_depth, 3);
+    }
+
+    #[test]
+    fn successive_presets_increase_rule_counts() {
+        // Fig. 4: average rules grow trivial < small < medium < high
+        let mut means = Vec::new();
+        for p in Preset::all() {
+            let (_, stats) = generate_benchmark(&p.config(), 300);
+            let mean: f64 = stats.iter().map(|s| s.num_rules as f64)
+                .sum::<f64>() / stats.len() as f64;
+            means.push(mean);
+        }
+        assert!(means[0] < means[1] && means[1] < means[2]
+                && means[2] < means[3],
+                "rule-count means must increase: {means:?}");
+    }
+
+    #[test]
+    fn respects_capacity_limits() {
+        property_test("capacity", 50, |rng| {
+            let mut cfg = Preset::High.config();
+            cfg.max_rules = 8;
+            cfg.max_objects = 10;
+            cfg.random_seed = rng.next_u64();
+            let (rs, _) = generate_ruleset(&cfg, rng);
+            assert!(rs.rules.len() <= 8);
+            assert!(rs.init_tiles.len() <= 10);
+        });
+    }
+
+    #[test]
+    fn objects_unique_as_inputs_in_main_tree() {
+        // every object appears at most once as a MAIN-tree rule input
+        // (distractor rules deliberately reuse tree objects, §3 — disable
+        // them so all rules are main-tree rules)
+        property_test("unique-inputs", 50, |rng| {
+            let mut cfg = Preset::High.config();
+            cfg.num_distractor_rules = 0;
+            cfg.random_seed = rng.next_u64();
+            let (rs, _) = generate_ruleset(&cfg, rng);
+            let mut seen = std::collections::HashSet::new();
+            for r in &rs.rules {
+                for inp in r.inputs() {
+                    assert!(seen.insert(inp),
+                            "object used twice as input: {inp:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn distractor_objects_not_consumed_by_rules() {
+        property_test("distractors", 50, |rng| {
+            let cfg = Preset::Trivial.config();
+            let mut c = cfg;
+            c.random_seed = rng.next_u64();
+            let (rs, _) = generate_ruleset(&c, rng);
+            // trivial: no rules at all, so all init objects are inert
+            assert!(rs.rules.is_empty());
+        });
+    }
+
+    #[test]
+    fn generation_is_reproducible() {
+        let cfg = Preset::Medium.config();
+        let (a, _) = generate_benchmark(&cfg, 50);
+        let (b, _) = generate_benchmark(&cfg, 50);
+        assert_eq!(a, b, "same seed => same benchmark (App. J)");
+    }
+
+    #[test]
+    fn benchmark_rulesets_unique() {
+        let (rs, _) = generate_benchmark(&Preset::Medium.config(), 500);
+        let mut keys: Vec<u64> = rs.iter().map(fingerprint).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 500);
+    }
+
+    #[test]
+    fn solvable_by_forced_rule_triggering() {
+        // simulate an oracle that triggers rules in reverse tree order:
+        // starting from the init objects, the goal must become satisfiable.
+        // We verify structurally: each rule's output is either a goal
+        // object or an input of another (earlier-in-tree) rule.
+        property_test("solvable", 50, |rng| {
+            let mut cfg = Preset::High.config();
+            cfg.random_seed = rng.next_u64();
+            let (rs, st) = generate_ruleset(&cfg, rng);
+            let goal_objs = rs.goal.required_objects();
+            let main_rules = rs.rules.len() - st.num_distractor_rules;
+            if main_rules == 0 {
+                for o in &goal_objs {
+                    assert!(rs.init_tiles.contains(o));
+                }
+                return;
+            }
+            // fixpoint closure: objects obtainable from init via rules
+            let mut have: std::collections::HashSet<(i32, i32)> = rs
+                .init_tiles
+                .iter()
+                .map(|c| (c.tile, c.color))
+                .collect();
+            loop {
+                let mut changed = false;
+                for r in &rs.rules {
+                    let ins = r.inputs();
+                    if !ins.is_empty()
+                        && ins.iter().all(|i| have.contains(&(i.tile, i.color)))
+                        && have.insert((r.c().tile, r.c().color))
+                    {
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            for o in &goal_objs {
+                assert!(have.contains(&(o.tile, o.color)),
+                        "goal object {o:?} unreachable");
+            }
+        });
+    }
+}

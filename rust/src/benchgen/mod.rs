@@ -1,0 +1,10 @@
+//! Procedural benchmark generation (paper §3, App. J) and the benchmark
+//! store with the load/sample/split API of App. D.
+
+pub mod config;
+pub mod generator;
+pub mod store;
+
+pub use config::{GenConfig, Preset};
+pub use generator::{generate_benchmark, generate_ruleset, RulesetStats};
+pub use store::Benchmark;

@@ -1,0 +1,306 @@
+//! Benchmark store: compact binary format + gzip compression, with the
+//! user-facing API of paper App. D (load / cache / sample / get / shuffle /
+//! split). Table 5 (raw vs compressed MB) is measured on this format.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::goals::Goal;
+use crate::env::rules::Rule;
+use crate::env::state::Ruleset;
+use crate::env::types::{Cell, GOAL_ENC, RULE_ENC};
+use crate::util::rng::Rng;
+
+use super::config::Preset;
+use super::generator::generate_benchmark;
+
+const MAGIC: &[u8; 4] = b"XMG1";
+
+/// An in-memory benchmark: a bag of unique rulesets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Benchmark {
+    pub name: String,
+    pub rulesets: Vec<Ruleset>,
+}
+
+impl Benchmark {
+    pub fn num_rulesets(&self) -> usize {
+        self.rulesets.len()
+    }
+
+    pub fn get_ruleset(&self, id: usize) -> &Ruleset {
+        &self.rulesets[id]
+    }
+
+    pub fn sample_ruleset(&self, rng: &mut Rng) -> &Ruleset {
+        &self.rulesets[rng.below(self.rulesets.len())]
+    }
+
+    pub fn shuffle(mut self, rng: &mut Rng) -> Benchmark {
+        rng.shuffle(&mut self.rulesets);
+        self
+    }
+
+    /// Split into (train, test) by proportion, App. D style.
+    pub fn split(self, prop: f64) -> (Benchmark, Benchmark) {
+        let k = ((self.rulesets.len() as f64) * prop).round() as usize;
+        let k = k.min(self.rulesets.len());
+        let mut train = self.rulesets;
+        let test = train.split_off(k);
+        (
+            Benchmark { name: format!("{}-train", self.name), rulesets: train },
+            Benchmark { name: format!("{}-test", self.name), rulesets: test },
+        )
+    }
+
+    /// Hold out rulesets whose goal id is NOT in `keep_goal_ids`
+    /// (the Fig. 8 generalization protocol: train on goals {1,3,4},
+    /// test on the rest).
+    pub fn split_by_goal(self, keep_goal_ids: &[i32])
+                         -> (Benchmark, Benchmark) {
+        let (train, test): (Vec<_>, Vec<_>) = self
+            .rulesets
+            .into_iter()
+            .partition(|rs| keep_goal_ids.contains(&rs.goal.id()));
+        (
+            Benchmark { name: format!("{}-goaltrain", self.name),
+                        rulesets: train },
+            Benchmark { name: format!("{}-goaltest", self.name),
+                        rulesets: test },
+        )
+    }
+
+    // --- serialization ----------------------------------------------------
+
+    /// Uncompressed binary encoding.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.rulesets.len() as u32).to_le_bytes());
+        for rs in &self.rulesets {
+            for &x in rs.goal.0.iter() {
+                out.push(x as u8);
+            }
+            out.push(rs.rules.len() as u8);
+            for r in &rs.rules {
+                for &x in r.0.iter() {
+                    out.push(x as u8);
+                }
+            }
+            out.push(rs.init_tiles.len() as u8);
+            for c in &rs.init_tiles {
+                out.push(c.tile as u8);
+                out.push(c.color as u8);
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(name: &str, data: &[u8]) -> Result<Benchmark> {
+        let mut p = 0usize;
+        let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+            if *p + n > data.len() {
+                bail!("truncated benchmark file");
+            }
+            let s = &data[*p..*p + n];
+            *p += n;
+            Ok(s)
+        };
+        if take(&mut p, 4)? != MAGIC {
+            bail!("bad magic (not an XMG1 benchmark)");
+        }
+        let n = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap());
+        let mut rulesets = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let gb = take(&mut p, GOAL_ENC)?;
+            let mut goal = [0i32; GOAL_ENC];
+            for (g, &b) in goal.iter_mut().zip(gb) {
+                *g = b as i32;
+            }
+            let nr = take(&mut p, 1)?[0] as usize;
+            let mut rules = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                let rb = take(&mut p, RULE_ENC)?;
+                let mut enc = [0i32; RULE_ENC];
+                for (e, &b) in enc.iter_mut().zip(rb) {
+                    *e = b as i32;
+                }
+                rules.push(Rule(enc));
+            }
+            let ni = take(&mut p, 1)?[0] as usize;
+            let mut init = Vec::with_capacity(ni);
+            for _ in 0..ni {
+                let cb = take(&mut p, 2)?;
+                init.push(Cell::new(cb[0] as i32, cb[1] as i32));
+            }
+            rulesets.push(Ruleset { goal: Goal(goal), rules,
+                                    init_tiles: init });
+        }
+        Ok(Benchmark { name: name.to_string(), rulesets })
+    }
+
+    /// Save gzip-compressed (the cloud-hosted format of §3, locally).
+    pub fn save(&self, path: &Path) -> Result<(usize, usize)> {
+        let raw = self.to_bytes();
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        let mut enc = flate2::write::GzEncoder::new(
+            file, flate2::Compression::new(6));
+        enc.write_all(&raw)?;
+        enc.finish()?;
+        let comp = std::fs::metadata(path)?.len() as usize;
+        Ok((raw.len(), comp))
+    }
+
+    pub fn load(name: &str, path: &Path) -> Result<Benchmark> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let mut dec = flate2::read::GzDecoder::new(file);
+        let mut raw = Vec::new();
+        dec.read_to_mut(&mut raw)?;
+        Benchmark::from_bytes(name, &raw)
+    }
+}
+
+trait ReadToMut {
+    fn read_to_mut(&mut self, buf: &mut Vec<u8>) -> std::io::Result<usize>;
+}
+
+impl<R: Read> ReadToMut for R {
+    fn read_to_mut(&mut self, buf: &mut Vec<u8>) -> std::io::Result<usize> {
+        self.read_to_end(buf)
+    }
+}
+
+/// Benchmark cache dir (`$XLAND_MINIGRID_DATA`, default
+/// `artifacts/benchmarks` — §3's download-and-cache behaviour, local).
+pub fn data_dir() -> PathBuf {
+    std::env::var("XLAND_MINIGRID_DATA")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts/benchmarks"))
+}
+
+/// Load a named benchmark like `trivial-1k` / `medium-10k`, generating and
+/// caching it on first use (the local stand-in for the paper's cloud
+/// download; sizes like `-1m` work but take a while).
+pub fn load_benchmark(name: &str) -> Result<Benchmark> {
+    let dir = data_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.xmg.gz"));
+    if path.exists() {
+        return Benchmark::load(name, &path);
+    }
+    let preset = Preset::from_name(name)
+        .with_context(|| format!("unknown benchmark {name}"))?;
+    let n = parse_size_suffix(name).unwrap_or(1000);
+    let (rulesets, _) = generate_benchmark(&preset.config(), n);
+    let bench = Benchmark { name: name.to_string(), rulesets };
+    bench.save(&path)?;
+    Ok(bench)
+}
+
+/// `trivial-1m` -> 1_000_000, `small-10k` -> 10_000, bare name -> None.
+pub fn parse_size_suffix(name: &str) -> Option<usize> {
+    let suffix = name.rsplit('-').next()?;
+    let (num, mult) = if let Some(s) = suffix.strip_suffix('m') {
+        (s, 1_000_000)
+    } else if let Some(s) = suffix.strip_suffix('k') {
+        (s, 1_000)
+    } else {
+        return None;
+    };
+    num.parse::<usize>().ok().map(|v| v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_bench() -> Benchmark {
+        let (rulesets, _) =
+            generate_benchmark(&Preset::Small.config(), 64);
+        Benchmark { name: "small-test".into(), rulesets }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let b = small_bench();
+        let raw = b.to_bytes();
+        let b2 = Benchmark::from_bytes("small-test", &raw).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn gzip_roundtrip_and_compression() {
+        let b = small_bench();
+        let dir = std::env::temp_dir().join("xmg_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("small.xmg.gz");
+        let (raw, comp) = b.save(&path).unwrap();
+        assert!(comp < raw, "gzip should compress ({comp} < {raw})");
+        let b2 = Benchmark::load("small-test", &path).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn split_proportions() {
+        let b = small_bench();
+        let (train, test) = b.split(0.75);
+        assert_eq!(train.num_rulesets(), 48);
+        assert_eq!(test.num_rulesets(), 16);
+    }
+
+    #[test]
+    fn shuffle_preserves_content() {
+        let b = small_bench();
+        let mut sorted_before: Vec<_> =
+            b.rulesets.iter().map(|r| format!("{r:?}")).collect();
+        let shuffled = b.shuffle(&mut Rng::new(9));
+        let mut sorted_after: Vec<_> =
+            shuffled.rulesets.iter().map(|r| format!("{r:?}")).collect();
+        sorted_before.sort();
+        sorted_after.sort();
+        assert_eq!(sorted_before, sorted_after);
+    }
+
+    #[test]
+    fn split_by_goal_partitions() {
+        let b = small_bench();
+        let total = b.num_rulesets();
+        let keep = [1, 3, 4];
+        let (train, test) = b.split_by_goal(&keep);
+        assert_eq!(train.num_rulesets() + test.num_rulesets(), total);
+        for rs in &train.rulesets {
+            assert!(keep.contains(&rs.goal.id()));
+        }
+        for rs in &test.rulesets {
+            assert!(!keep.contains(&rs.goal.id()));
+        }
+        assert!(!test.rulesets.is_empty(),
+                "generator produces held-out goal types");
+    }
+
+    #[test]
+    fn size_suffix_parsing() {
+        assert_eq!(parse_size_suffix("trivial-1m"), Some(1_000_000));
+        assert_eq!(parse_size_suffix("high-3m"), Some(3_000_000));
+        assert_eq!(parse_size_suffix("small-10k"), Some(10_000));
+        assert_eq!(parse_size_suffix("small"), None);
+    }
+
+    #[test]
+    fn load_benchmark_generates_and_caches() {
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_cache_test_{}", std::process::id()));
+        std::env::set_var("XLAND_MINIGRID_DATA", &dir);
+        let b1 = load_benchmark("trivial-1k").unwrap();
+        assert_eq!(b1.num_rulesets(), 1000);
+        // second load hits the cache (same contents)
+        let b2 = load_benchmark("trivial-1k").unwrap();
+        assert_eq!(b1, b2);
+        std::env::remove_var("XLAND_MINIGRID_DATA");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,74 @@
+//! Training configuration — paper Table 6 (RL² hyperparameters), with the
+//! compute-scale knobs (num_envs, total steps) sized for the CPU testbed.
+
+/// PPO/RL² hyperparameters. The first eight map onto the runtime `hp[8]`
+/// vector consumed by the `train_iter` artifacts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+    pub max_grad_norm: f32,
+    /// resample tasks (rulesets) every this many train iterations
+    pub task_resample_iters: usize,
+    pub eval_seed: u64,
+    pub train_seed: u64,
+}
+
+impl Default for TrainConfig {
+    /// Table 6 values where they are hyperparameters (lr, clip, gamma,
+    /// lambda, coefs, grad norm, seeds).
+    fn default() -> Self {
+        TrainConfig {
+            lr: 1e-3,
+            clip_eps: 0.2,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            ent_coef: 0.01,
+            vf_coef: 0.5,
+            max_grad_norm: 0.5,
+            task_resample_iters: 8,
+            eval_seed: 42,
+            train_seed: 42,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// The runtime hyperparameter vector (see model.HP_LEN).
+    pub fn hp_vector(&self) -> Vec<f32> {
+        vec![self.lr, self.clip_eps, self.gamma, self.gae_lambda,
+             self.ent_coef, self.vf_coef, self.max_grad_norm, 0.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 6 pinned.
+    #[test]
+    fn table6_defaults() {
+        let c = TrainConfig::default();
+        assert_eq!(c.lr, 1e-3);
+        assert_eq!(c.clip_eps, 0.2);
+        assert_eq!(c.gamma, 0.99);
+        assert_eq!(c.gae_lambda, 0.95);
+        assert_eq!(c.ent_coef, 0.01);
+        assert_eq!(c.vf_coef, 0.5);
+        assert_eq!(c.max_grad_norm, 0.5);
+        assert_eq!(c.eval_seed, 42);
+        assert_eq!(c.train_seed, 42);
+    }
+
+    #[test]
+    fn hp_vector_layout() {
+        let hp = TrainConfig::default().hp_vector();
+        assert_eq!(hp.len(), 8);
+        assert_eq!(hp[0], 1e-3);
+        assert_eq!(hp[6], 0.5);
+    }
+}

@@ -1,0 +1,74 @@
+//! Metrics sinks: CSV rows (plottable) + human-readable console lines.
+//! No serde offline — plain formatting.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Append-only CSV writer with a fixed header.
+pub struct CsvLog {
+    file: std::fs::File,
+}
+
+impl CsvLog {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvLog> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvLog { file })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> Result<()> {
+        let strs: Vec<String> =
+            values.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs)
+    }
+}
+
+/// Format steps/second human-readably (e.g. "1.25M").
+pub fn fmt_sps(sps: f64) -> String {
+    if sps >= 1e6 {
+        format!("{:.2}M", sps / 1e6)
+    } else if sps >= 1e3 {
+        format!("{:.1}k", sps / 1e3)
+    } else {
+        format!("{sps:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_csv_{}", std::process::id()));
+        let path = dir.join("m.csv");
+        {
+            let mut log =
+                CsvLog::create(&path, &["iter", "loss"]).unwrap();
+            log.row(&["1".into(), "0.5".into()]).unwrap();
+            log.row_f64(&[2.0, 0.25]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "iter,loss\n1,0.5\n2,0.25\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sps_formatting() {
+        assert_eq!(fmt_sps(1_250_000.0), "1.25M");
+        assert_eq!(fmt_sps(32_100.0), "32.1k");
+        assert_eq!(fmt_sps(321.0), "321");
+    }
+}

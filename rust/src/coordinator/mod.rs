@@ -1,0 +1,14 @@
+//! L3 coordinator: vectorized env pool, RL² PPO training orchestration
+//! (Anakin-style — the whole collect+update iteration is one fused HLO
+//! call), the §4.2 evaluation protocol, and the shard pool standing in for
+//! `jax.pmap` multi-device scaling.
+
+pub mod config;
+pub mod metrics;
+pub mod pool;
+pub mod shard;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use pool::EnvPool;
+pub use trainer::{EvalStats, Trainer};

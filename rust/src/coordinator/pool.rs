@@ -1,0 +1,135 @@
+//! Vectorized environment pool: owns the batched state tensors for one
+//! artifact family (H, W, MR, MI, B) and drives reset / random-policy
+//! rollout executables.
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::benchgen::Benchmark;
+use crate::env::grid::Grid;
+use crate::env::layouts::xland_layout;
+use crate::env::state::{default_max_steps, Ruleset};
+use crate::runtime::state::{reset_inputs, NUM_STATE_FIELDS};
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Shape family of compiled env artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvFamily {
+    pub h: usize,
+    pub w: usize,
+    pub mr: usize,
+    pub mi: usize,
+    pub b: usize,
+}
+
+impl EnvFamily {
+    pub fn reset_name(&self) -> String {
+        format!("env_reset_g{}x{}_r{}_b{}", self.h, self.w, self.mr, self.b)
+    }
+
+    pub fn rollout_name(&self, t: usize) -> String {
+        format!("env_rollout_g{}x{}_r{}_b{}_t{t}", self.h, self.w, self.mr,
+                self.b)
+    }
+
+    pub fn step_name(&self) -> String {
+        format!("env_step_g{}x{}_r{}_b{}", self.h, self.w, self.mr, self.b)
+    }
+
+    /// Read the family from an artifact's metadata.
+    pub fn from_spec(spec: &crate::runtime::ArtifactSpec) -> Result<Self> {
+        Ok(EnvFamily {
+            h: spec.meta_usize("H")?,
+            w: spec.meta_usize("W")?,
+            mr: spec.meta_usize("MR")?,
+            mi: spec.meta_usize("MI")?,
+            b: spec.meta_usize("B")?,
+        })
+    }
+}
+
+/// Batched environment pool driving AOT executables.
+pub struct EnvPool {
+    pub family: EnvFamily,
+    reset_art: Arc<Artifact>,
+    /// 11 state tensors (aot.STATE_FIELDS order)
+    pub state: Vec<Tensor>,
+    /// observation from the latest reset/step
+    pub last_obs: Tensor,
+    /// number of rooms for base-grid construction (XLand layouts)
+    pub rooms: usize,
+}
+
+impl EnvPool {
+    pub fn new(rt: &Runtime, family: EnvFamily, rooms: usize)
+               -> Result<EnvPool> {
+        let reset_art = rt.load(&family.reset_name())?;
+        Ok(EnvPool {
+            family,
+            reset_art,
+            state: Vec::new(),
+            last_obs: Tensor::I32(vec![]),
+            rooms,
+        })
+    }
+
+    /// Sample one ruleset per env slot from the benchmark.
+    pub fn sample_rulesets<'b>(&self, bench: &'b Benchmark, rng: &mut Rng)
+                               -> Vec<&'b Ruleset> {
+        (0..self.family.b).map(|_| bench.sample_ruleset(rng)).collect()
+    }
+
+    /// Reset every env with the given rulesets (fresh base grids with
+    /// re-randomized doors — L3 owns door randomization, DESIGN.md).
+    pub fn reset(&mut self, rulesets: &[&Ruleset], rng: &mut Rng)
+                 -> Result<()> {
+        let f = self.family;
+        let grids: Vec<Grid> = (0..f.b)
+            .map(|_| xland_layout(self.rooms, f.h, f.w, rng))
+            .collect();
+        let max_steps = vec![default_max_steps(f.h, f.w); f.b];
+        let seeds: Vec<[u32; 2]> =
+            (0..f.b).map(|_| [rng.next_u32(), rng.next_u32()]).collect();
+        let inputs = reset_inputs(&grids, rulesets, &max_steps, &seeds,
+                                  f.mr, f.mi)?;
+        let mut out = self.reset_art.execute(&inputs)?;
+        self.last_obs = out
+            .pop()
+            .context("reset artifact returned no outputs")?;
+        out.truncate(NUM_STATE_FIELDS);
+        self.state = out;
+        Ok(())
+    }
+
+    /// Run one fused random-policy rollout of `t` steps; returns
+    /// (reward_sum, episodes_done, trials_done) aggregated over the batch.
+    pub fn rollout(&mut self, rt: &Runtime, t: usize, rng: &mut Rng)
+                   -> Result<(f64, u64, u64)> {
+        let art = rt.load(&self.family.rollout_name(t))?;
+        let mut inputs = self.state.clone();
+        inputs.push(Tensor::U32(vec![rng.next_u32(), rng.next_u32()]));
+        let out = art.execute(&inputs)?;
+        let (state, rest) = out.split_at(NUM_STATE_FIELDS);
+        self.state = state.to_vec();
+        let reward_sum: f64 =
+            rest[0].as_f32().iter().map(|&x| x as f64).sum();
+        let episodes: u64 =
+            rest[1].as_i32().iter().map(|&x| x as u64).sum();
+        let trials: u64 = rest[2].as_i32().iter().map(|&x| x as u64).sum();
+        Ok((reward_sum, episodes, trials))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_names() {
+        let f = EnvFamily { h: 9, w: 9, mr: 3, mi: 6, b: 8 };
+        assert_eq!(f.reset_name(), "env_reset_g9x9_r3_b8");
+        assert_eq!(f.rollout_name(8), "env_rollout_g9x9_r3_b8_t8");
+        assert_eq!(f.step_name(), "env_step_g9x9_r3_b8");
+    }
+}

@@ -1,0 +1,83 @@
+//! Shard pool — the `jax.pmap` stand-in (DESIGN.md §Hardware-Adaptation).
+//!
+//! Each shard is a host thread owning its *own* PJRT client, compiled
+//! executables and env-state buffers (exactly a pmap replica's footprint).
+//! Shards synchronize per call like a collective step. Since the `xla`
+//! crate's handles are not `Send`, all shard state is constructed inside
+//! the shard's thread.
+
+/// Run `f(shard_index)` on `n` threads and collect the results in shard
+/// order. Panics propagate.
+pub fn run_sharded<F, R>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Send + Sync,
+    R: Send,
+{
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = &f;
+                scope.spawn(move || f(i))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Data-parallel gradient averaging across shard parameter sets (the
+/// all-reduce a pmap training step performs). Arithmetic mean, in place on
+/// the first set, returned.
+pub fn average_params(mut shard_params: Vec<Vec<Vec<f32>>>)
+                      -> Vec<Vec<f32>> {
+    assert!(!shard_params.is_empty());
+    let n = shard_params.len() as f32;
+    let mut acc = shard_params.swap_remove(0);
+    for other in &shard_params {
+        for (a, o) in acc.iter_mut().zip(other) {
+            for (x, y) in a.iter_mut().zip(o) {
+                *x += *y;
+            }
+        }
+    }
+    for a in acc.iter_mut() {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_run_and_collect_in_order() {
+        let out = run_sharded(4, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn shards_actually_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        run_sharded(4, |_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2, "threads overlapped");
+    }
+
+    #[test]
+    fn param_averaging() {
+        let shards = vec![
+            vec![vec![1.0, 2.0]],
+            vec![vec![3.0, 6.0]],
+        ];
+        let avg = average_params(shards);
+        assert_eq!(avg, vec![vec![2.0, 4.0]]);
+    }
+}

@@ -1,0 +1,243 @@
+//! RL² PPO trainer: drives `train_iter` artifacts (collect + update fused
+//! into one HLO call), handles task resampling between iterations, and
+//! implements the §4.2 evaluation protocol (N tasks × trials, mean and
+//! 20th percentile).
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use crate::benchgen::Benchmark;
+use crate::runtime::state::NUM_STATE_FIELDS;
+use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::util::rng::Rng;
+use crate::util::stats::{mean, percentile};
+
+use super::config::TrainConfig;
+use super::pool::{EnvFamily, EnvPool};
+
+pub const NUM_PARAMS: usize = 11;
+const NUM_METRICS: usize = 8;
+
+/// One iteration's training metrics (from the train_update HLO).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterMetrics {
+    pub total_loss: f32,
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub clip_frac: f32,
+    pub grad_norm: f32,
+    pub adv_std: f32,
+    pub reward_sum: f32,
+    pub trials: i64,
+    pub episodes: i64,
+    pub env_steps: u64,
+}
+
+/// Evaluation summary over tasks (paper reports mean + 20th percentile).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub return_mean: f64,
+    pub return_p20: f64,
+    pub per_trial_mean: f64,
+    pub per_trial_p20: f64,
+    pub trials_mean: f64,
+    pub num_tasks: usize,
+}
+
+pub struct Trainer {
+    pub family: EnvFamily,
+    pub t_len: usize,
+    train_art: Arc<Artifact>,
+    pool: EnvPool,
+    pub cfg: TrainConfig,
+    // learner state (host copies; device round-trip once per iteration)
+    pub params: Vec<Tensor>,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: Tensor,
+    // RL² carry
+    obs: Tensor,
+    prev_a: Tensor,
+    prev_r: Tensor,
+    done_prev: Tensor,
+    h: Tensor,
+    hidden_dim: usize,
+    pub rng: Rng,
+    pub iter: usize,
+}
+
+impl Trainer {
+    /// Build a trainer around a `train_iter_*` artifact name.
+    pub fn new(rt: &Runtime, artifact: &str, rooms: usize,
+               cfg: TrainConfig) -> Result<Trainer> {
+        let train_art = rt.load(artifact)?;
+        let spec = &train_art.spec;
+        if spec.kind() != "train_iter" {
+            bail!("{artifact} is not a train_iter artifact");
+        }
+        let family = EnvFamily::from_spec(spec)?;
+        let t_len = spec.meta_usize("T")?;
+        let hidden_dim = spec.meta_usize("H_DIM")?;
+        let pool = EnvPool::new(rt, family, rooms)?;
+        let params = rt.load_params_init()?;
+        let m: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::F32(vec![0.0; p.len()]))
+            .collect();
+        let v = m.clone();
+        let b = family.b;
+        Ok(Trainer {
+            family,
+            t_len,
+            train_art,
+            pool,
+            cfg,
+            params,
+            m,
+            v,
+            t: Tensor::I32(vec![0]),
+            obs: Tensor::I32(vec![]),
+            prev_a: Tensor::I32(vec![0; b]),
+            prev_r: Tensor::F32(vec![0.0; b]),
+            done_prev: Tensor::I32(vec![1; b]),
+            h: Tensor::F32(vec![0.0; b * hidden_dim]),
+            hidden_dim,
+            rng: Rng::new(cfg.train_seed),
+            iter: 0,
+        })
+    }
+
+    /// Sample fresh tasks for every env and reset (called at start and
+    /// every `task_resample_iters` iterations).
+    pub fn resample_tasks(&mut self, bench: &Benchmark) -> Result<()> {
+        let rulesets = {
+            let mut rng = self.rng.split();
+            self.pool.sample_rulesets(bench, &mut rng)
+        };
+        let mut rng = self.rng.split();
+        self.pool.reset(&rulesets, &mut rng)?;
+        self.obs = self.pool.last_obs.clone();
+        let b = self.family.b;
+        self.prev_a = Tensor::I32(vec![0; b]);
+        self.prev_r = Tensor::F32(vec![0.0; b]);
+        self.done_prev = Tensor::I32(vec![1; b]); // episode start: reset h
+        self.h = Tensor::F32(vec![0.0; b * self.hidden_dim]);
+        Ok(())
+    }
+
+    /// One fused PPO iteration (collect T×B steps + minibatch updates).
+    pub fn train_iter(&mut self) -> Result<IterMetrics> {
+        if self.obs.is_empty() {
+            bail!("call resample_tasks before train_iter");
+        }
+        let mut inputs = Vec::with_capacity(3 * NUM_PARAMS + 20);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(self.t.clone());
+        inputs.extend(self.pool.state.iter().cloned());
+        inputs.push(self.obs.clone());
+        inputs.push(self.prev_a.clone());
+        inputs.push(self.prev_r.clone());
+        inputs.push(self.done_prev.clone());
+        inputs.push(self.h.clone());
+        inputs.push(Tensor::U32(vec![self.rng.next_u32(),
+                                     self.rng.next_u32()]));
+        inputs.push(Tensor::F32(self.cfg.hp_vector()));
+
+        let out = self.train_art.execute(&inputs)?;
+        let mut it = out.into_iter();
+        self.params = (&mut it).take(NUM_PARAMS).collect();
+        self.m = (&mut it).take(NUM_PARAMS).collect();
+        self.v = (&mut it).take(NUM_PARAMS).collect();
+        self.t = it.next().context("missing t")?;
+        self.pool.state = (&mut it).take(NUM_STATE_FIELDS).collect();
+        self.obs = it.next().context("missing obs")?;
+        self.prev_a = it.next().context("missing prev_a")?;
+        self.prev_r = it.next().context("missing prev_r")?;
+        self.done_prev = it.next().context("missing done_prev")?;
+        self.h = it.next().context("missing h")?;
+        let metrics = it.next().context("missing metrics")?;
+        let reward_sum = it.next().context("missing reward_sum")?;
+        let trials = it.next().context("missing trials")?;
+        let episodes = it.next().context("missing episodes")?;
+
+        let ms = metrics.as_f32();
+        if ms.len() != NUM_METRICS {
+            bail!("metrics vector has {} entries", ms.len());
+        }
+        self.iter += 1;
+        Ok(IterMetrics {
+            total_loss: ms[0],
+            pi_loss: ms[1],
+            v_loss: ms[2],
+            entropy: ms[3],
+            approx_kl: ms[4],
+            clip_frac: ms[5],
+            grad_norm: ms[6],
+            adv_std: ms[7],
+            reward_sum: reward_sum.scalar_f32(),
+            trials: trials.scalar_i32() as i64,
+            episodes: episodes.scalar_i32() as i64,
+            env_steps: (self.t_len * self.family.b) as u64,
+        })
+    }
+
+    /// §4.2 evaluation: roll the current policy over `eval_art`'s batch of
+    /// held-out tasks and report mean / 20th-percentile return.
+    pub fn evaluate(&mut self, rt: &Runtime, eval_artifact: &str,
+                    bench: &Benchmark, rooms: usize) -> Result<EvalStats> {
+        let eval_art = rt.load(eval_artifact)?;
+        let spec = &eval_art.spec;
+        if spec.kind() != "eval_rollout" {
+            bail!("{eval_artifact} is not an eval_rollout artifact");
+        }
+        let family = EnvFamily::from_spec(spec)?;
+        if family.h != self.family.h || family.w != self.family.w {
+            bail!("eval artifact grid differs from training grid");
+        }
+        let mut pool = EnvPool::new(rt, family, rooms)?;
+        let mut rng = Rng::new(self.cfg.eval_seed);
+        let rulesets = pool.sample_rulesets(bench, &mut rng.split());
+        pool.reset(&rulesets, &mut rng)?;
+
+        let b = family.b;
+        let mut inputs = Vec::new();
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(pool.state.iter().cloned());
+        inputs.push(pool.last_obs.clone());
+        inputs.push(Tensor::I32(vec![0; b]));
+        inputs.push(Tensor::F32(vec![0.0; b]));
+        inputs.push(Tensor::I32(vec![1; b]));
+        inputs.push(Tensor::F32(vec![0.0; b * self.hidden_dim]));
+        inputs.push(Tensor::U32(vec![rng.next_u32(), rng.next_u32()]));
+
+        let out = eval_art.execute(&inputs)?;
+        let n = out.len();
+        let acc_r = out[n - 3].as_f32();
+        let acc_goals = out[n - 2].as_i32();
+        let acc_eps = out[n - 1].as_i32();
+
+        let returns: Vec<f64> = acc_r.iter().map(|&x| x as f64).collect();
+        let per_trial: Vec<f64> = acc_r
+            .iter()
+            .zip(acc_goals.iter().zip(acc_eps))
+            .map(|(&r, (&g, &e))| r as f64 / ((g + e).max(1)) as f64)
+            .collect();
+        let trials: Vec<f64> = acc_goals
+            .iter()
+            .zip(acc_eps)
+            .map(|(&g, &e)| (g + e) as f64)
+            .collect();
+        Ok(EvalStats {
+            return_mean: mean(&returns),
+            return_p20: percentile(&returns, 20.0),
+            per_trial_mean: mean(&per_trial),
+            per_trial_p20: percentile(&per_trial, 20.0),
+            trials_mean: mean(&trials),
+            num_tasks: b,
+        })
+    }
+}

@@ -1,0 +1,229 @@
+//! Goals (paper Table 2) — pure condition checks, the Rust oracle for
+//! `python/compile/xmg/goals.py`.
+
+use super::grid::Grid;
+use super::types::*;
+
+/// Encoded goal `[id, a0, a1, a2, a3]`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Goal(pub [i32; GOAL_ENC]);
+
+impl Goal {
+    pub const EMPTY: Goal = Goal([0; GOAL_ENC]);
+
+    pub fn id(&self) -> i32 {
+        self.0[0]
+    }
+
+    pub fn agent_hold(a: Cell) -> Goal {
+        Goal([GOAL_AGENT_HOLD, a.tile, a.color, 0, 0])
+    }
+    pub fn agent_on_tile(a: Cell) -> Goal {
+        Goal([GOAL_AGENT_ON_TILE, a.tile, a.color, 0, 0])
+    }
+    pub fn agent_near(a: Cell) -> Goal {
+        Goal([GOAL_AGENT_NEAR, a.tile, a.color, 0, 0])
+    }
+    pub fn tile_near(a: Cell, b: Cell) -> Goal {
+        Goal([GOAL_TILE_NEAR, a.tile, a.color, b.tile, b.color])
+    }
+    pub fn agent_on_position(r: i32, c: i32) -> Goal {
+        Goal([GOAL_AGENT_ON_POSITION, r, c, 0, 0])
+    }
+    pub fn tile_on_position(a: Cell, r: i32, c: i32) -> Goal {
+        Goal([GOAL_TILE_ON_POSITION, a.tile, a.color, r, c])
+    }
+    pub fn tile_near_dir(dir: usize, a: Cell, b: Cell) -> Goal {
+        Goal([GOAL_TILE_NEAR_UP + dir as i32, a.tile, a.color, b.tile,
+              b.color])
+    }
+    pub fn agent_near_dir(dir: usize, a: Cell) -> Goal {
+        Goal([GOAL_AGENT_NEAR_UP + dir as i32, a.tile, a.color, 0, 0])
+    }
+
+    /// Objects the goal requires on the grid / in pocket (generator input).
+    pub fn required_objects(&self) -> Vec<Cell> {
+        let a = Cell::new(self.0[1], self.0[2]);
+        let b = Cell::new(self.0[3], self.0[4]);
+        match self.id() {
+            GOAL_EMPTY | GOAL_AGENT_ON_POSITION => vec![],
+            GOAL_TILE_NEAR | GOAL_TILE_NEAR_UP | GOAL_TILE_NEAR_RIGHT
+            | GOAL_TILE_NEAR_DOWN | GOAL_TILE_NEAR_LEFT => vec![a, b],
+            _ => vec![a],
+        }
+    }
+}
+
+fn agent_near_any(grid: &Grid, agent_pos: (i32, i32), a: Cell,
+                  dirs: &[usize]) -> bool {
+    dirs.iter().any(|&d| {
+        let r = agent_pos.0 + DIR_DR[d];
+        let c = agent_pos.1 + DIR_DC[d];
+        grid.in_bounds(r, c) && grid.get_i(r, c) == a
+    })
+}
+
+fn tile_near_any(grid: &Grid, a: Cell, b: Cell, dirs: &[usize]) -> bool {
+    for r in 0..grid.h as i32 {
+        for c in 0..grid.w as i32 {
+            if grid.get_i(r, c) != a {
+                continue;
+            }
+            for &d in dirs {
+                if grid.get_i(r + DIR_DR[d], c + DIR_DC[d]) == b {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+const ALL_DIRS: [usize; 4] = [DIR_UP, DIR_RIGHT, DIR_DOWN, DIR_LEFT];
+
+/// Evaluate an encoded goal.
+pub fn check_goal(grid: &Grid, agent_pos: (i32, i32), pocket: Cell,
+                  goal: &Goal) -> bool {
+    let a = Cell::new(goal.0[1], goal.0[2]);
+    let b = Cell::new(goal.0[3], goal.0[4]);
+    match goal.id() {
+        GOAL_EMPTY => false,
+        GOAL_AGENT_HOLD => pocket == a,
+        GOAL_AGENT_ON_TILE => grid.get_i(agent_pos.0, agent_pos.1) == a,
+        GOAL_AGENT_NEAR => agent_near_any(grid, agent_pos, a, &ALL_DIRS),
+        GOAL_TILE_NEAR => tile_near_any(grid, a, b, &ALL_DIRS),
+        GOAL_AGENT_ON_POSITION => {
+            agent_pos.0 == goal.0[1] && agent_pos.1 == goal.0[2]
+        }
+        GOAL_TILE_ON_POSITION => grid.get_i(goal.0[3], goal.0[4]) == a,
+        GOAL_TILE_NEAR_UP => tile_near_any(grid, a, b, &[DIR_UP]),
+        GOAL_TILE_NEAR_RIGHT => tile_near_any(grid, a, b, &[DIR_RIGHT]),
+        GOAL_TILE_NEAR_DOWN => tile_near_any(grid, a, b, &[DIR_DOWN]),
+        GOAL_TILE_NEAR_LEFT => tile_near_any(grid, a, b, &[DIR_LEFT]),
+        GOAL_AGENT_NEAR_UP => {
+            agent_near_any(grid, agent_pos, a, &[DIR_UP])
+        }
+        GOAL_AGENT_NEAR_RIGHT => {
+            agent_near_any(grid, agent_pos, a, &[DIR_RIGHT])
+        }
+        GOAL_AGENT_NEAR_DOWN => {
+            agent_near_any(grid, agent_pos, a, &[DIR_DOWN])
+        }
+        GOAL_AGENT_NEAR_LEFT => {
+            agent_near_any(grid, agent_pos, a, &[DIR_LEFT])
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ball_red() -> Cell {
+        Cell::new(TILE_BALL, COLOR_RED)
+    }
+    fn sq_blue() -> Cell {
+        Cell::new(TILE_SQUARE, COLOR_BLUE)
+    }
+
+    #[test]
+    fn empty_goal_always_false() {
+        let g = Grid::empty_room(5, 5);
+        assert!(!check_goal(&g, (2, 2), POCKET_EMPTY, &Goal::EMPTY));
+    }
+
+    #[test]
+    fn agent_hold_goal() {
+        let g = Grid::empty_room(5, 5);
+        let goal = Goal::agent_hold(ball_red());
+        assert!(check_goal(&g, (2, 2), ball_red(), &goal));
+        assert!(!check_goal(&g, (2, 2), sq_blue(), &goal));
+        assert!(!check_goal(&g, (2, 2), POCKET_EMPTY, &goal));
+    }
+
+    #[test]
+    fn agent_on_tile_goal() {
+        let mut g = Grid::empty_room(5, 5);
+        g.set(2, 2, Cell::new(TILE_GOAL, COLOR_GREEN));
+        let goal = Goal::agent_on_tile(Cell::new(TILE_GOAL, COLOR_GREEN));
+        assert!(check_goal(&g, (2, 2), POCKET_EMPTY, &goal));
+        assert!(!check_goal(&g, (1, 2), POCKET_EMPTY, &goal));
+    }
+
+    #[test]
+    fn agent_near_goal_all_directions() {
+        let mut g = Grid::empty_room(5, 5);
+        g.set(3, 2, ball_red()); // below agent (2,2)
+        let goal = Goal::agent_near(ball_red());
+        assert!(check_goal(&g, (2, 2), POCKET_EMPTY, &goal));
+        assert!(!check_goal(&g, (1, 1), POCKET_EMPTY, &goal));
+    }
+
+    #[test]
+    fn tile_near_goal() {
+        let mut g = Grid::empty_room(6, 6);
+        g.set(2, 2, ball_red());
+        g.set(2, 3, sq_blue());
+        assert!(check_goal(&g, (4, 4), POCKET_EMPTY,
+                           &Goal::tile_near(ball_red(), sq_blue())));
+        // symmetric: also true with operands swapped
+        assert!(check_goal(&g, (4, 4), POCKET_EMPTY,
+                           &Goal::tile_near(sq_blue(), ball_red())));
+    }
+
+    #[test]
+    fn tile_near_directional_goals() {
+        let mut g = Grid::empty_room(6, 6);
+        g.set(3, 2, ball_red());
+        g.set(2, 2, sq_blue()); // b above a
+        let up = Goal::tile_near_dir(DIR_UP, ball_red(), sq_blue());
+        let down = Goal::tile_near_dir(DIR_DOWN, ball_red(), sq_blue());
+        assert!(check_goal(&g, (5, 5), POCKET_EMPTY, &up));
+        assert!(!check_goal(&g, (5, 5), POCKET_EMPTY, &down));
+    }
+
+    #[test]
+    fn position_goals() {
+        let mut g = Grid::empty_room(6, 6);
+        assert!(check_goal(&g, (3, 4), POCKET_EMPTY,
+                           &Goal::agent_on_position(3, 4)));
+        assert!(!check_goal(&g, (4, 3), POCKET_EMPTY,
+                            &Goal::agent_on_position(3, 4)));
+        g.set(1, 2, ball_red());
+        assert!(check_goal(&g, (3, 3), POCKET_EMPTY,
+                           &Goal::tile_on_position(ball_red(), 1, 2)));
+        assert!(!check_goal(&g, (3, 3), POCKET_EMPTY,
+                            &Goal::tile_on_position(ball_red(), 2, 1)));
+    }
+
+    #[test]
+    fn agent_near_directional_goals() {
+        let mut g = Grid::empty_room(5, 5);
+        g.set(2, 3, ball_red()); // right of agent (2,2)
+        assert!(check_goal(&g, (2, 2), POCKET_EMPTY,
+                           &Goal::agent_near_dir(DIR_RIGHT, ball_red())));
+        assert!(!check_goal(&g, (2, 2), POCKET_EMPTY,
+                            &Goal::agent_near_dir(DIR_LEFT, ball_red())));
+    }
+
+    #[test]
+    fn color_must_match() {
+        let mut g = Grid::empty_room(5, 5);
+        g.set(2, 3, Cell::new(TILE_BALL, COLOR_GREEN));
+        let goal = Goal::agent_near(ball_red());
+        assert!(!check_goal(&g, (2, 2), POCKET_EMPTY, &goal));
+    }
+
+    #[test]
+    fn required_objects_arity() {
+        assert_eq!(Goal::EMPTY.required_objects().len(), 0);
+        assert_eq!(Goal::agent_hold(ball_red()).required_objects().len(), 1);
+        assert_eq!(
+            Goal::tile_near(ball_red(), sq_blue())
+                .required_objects()
+                .len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,146 @@
+//! Row-major grid of (tile, color) cells; mirrors the JAX `i32[H, W, 2]`
+//! representation bit-for-bit via `to_flat`/`from_flat` (the PJRT boundary
+//! format used by the cross-validation tests).
+
+use super::types::{Cell, END_OF_MAP_CELL, FLOOR_CELL, TILE_FLOOR, WALL_CELL};
+
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Grid {
+    pub h: usize,
+    pub w: usize,
+    cells: Vec<Cell>,
+}
+
+impl Grid {
+    pub fn filled(h: usize, w: usize, cell: Cell) -> Self {
+        Grid { h, w, cells: vec![cell; h * w] }
+    }
+
+    /// Single room: wall border, floor interior.
+    pub fn empty_room(h: usize, w: usize) -> Self {
+        let mut g = Grid::filled(h, w, FLOOR_CELL);
+        for c in 0..w {
+            g.set(0, c, WALL_CELL);
+            g.set(h - 1, c, WALL_CELL);
+        }
+        for r in 0..h {
+            g.set(r, 0, WALL_CELL);
+            g.set(r, w - 1, WALL_CELL);
+        }
+        g
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> Cell {
+        self.cells[r * self.w + c]
+    }
+
+    /// Signed-index read; END_OF_MAP outside the grid.
+    #[inline]
+    pub fn get_i(&self, r: i32, c: i32) -> Cell {
+        if r < 0 || c < 0 || r >= self.h as i32 || c >= self.w as i32 {
+            END_OF_MAP_CELL
+        } else {
+            self.get(r as usize, c as usize)
+        }
+    }
+
+    #[inline]
+    pub fn in_bounds(&self, r: i32, c: i32) -> bool {
+        r >= 0 && c >= 0 && r < self.h as i32 && c < self.w as i32
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, cell: Cell) {
+        self.cells[r * self.w + c] = cell;
+    }
+
+    #[inline]
+    pub fn set_i(&mut self, r: i32, c: i32, cell: Cell) {
+        if self.in_bounds(r, c) {
+            self.set(r as usize, c as usize, cell);
+        }
+    }
+
+    /// Row-major indices of floor cells (candidate object/agent positions).
+    pub fn free_cells(&self) -> Vec<usize> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.tile == TILE_FLOOR)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn count_tile(&self, tile: i32) -> usize {
+        self.cells.iter().filter(|c| c.tile == tile).count()
+    }
+
+    /// Flatten to the PJRT boundary layout `i32[H, W, 2]` (row-major,
+    /// innermost = [tile, color]).
+    pub fn to_flat(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.h * self.w * 2);
+        for cell in &self.cells {
+            out.push(cell.tile);
+            out.push(cell.color);
+        }
+        out
+    }
+
+    pub fn from_flat(h: usize, w: usize, flat: &[i32]) -> Self {
+        assert_eq!(flat.len(), h * w * 2, "flat grid size mismatch");
+        let cells = flat
+            .chunks_exact(2)
+            .map(|p| Cell::new(p[0], p[1]))
+            .collect();
+        Grid { h, w, cells }
+    }
+
+    pub fn iter_cells(&self) -> impl Iterator<Item = (usize, usize, Cell)> + '_ {
+        let w = self.w;
+        self.cells
+            .iter()
+            .enumerate()
+            .map(move |(i, &c)| (i / w, i % w, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::types::*;
+
+    #[test]
+    fn empty_room_structure() {
+        let g = Grid::empty_room(5, 7);
+        assert_eq!(g.get(0, 0).tile, TILE_WALL);
+        assert_eq!(g.get(4, 6).tile, TILE_WALL);
+        assert_eq!(g.get(2, 3).tile, TILE_FLOOR);
+        assert_eq!(g.count_tile(TILE_WALL), 2 * 7 + 2 * 3);
+        assert_eq!(g.free_cells().len(), 3 * 5);
+    }
+
+    #[test]
+    fn out_of_bounds_reads_end_of_map() {
+        let g = Grid::empty_room(4, 4);
+        assert_eq!(g.get_i(-1, 0), END_OF_MAP_CELL);
+        assert_eq!(g.get_i(0, 4), END_OF_MAP_CELL);
+        assert_eq!(g.get_i(1, 1).tile, TILE_FLOOR);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let mut g = Grid::empty_room(4, 5);
+        g.set(2, 2, Cell::new(TILE_BALL, COLOR_RED));
+        let flat = g.to_flat();
+        assert_eq!(flat.len(), 4 * 5 * 2);
+        let g2 = Grid::from_flat(4, 5, &flat);
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn free_cells_row_major() {
+        let g = Grid::empty_room(3, 3);
+        assert_eq!(g.free_cells(), vec![4]); // only the center
+    }
+}

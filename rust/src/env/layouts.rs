@@ -1,0 +1,205 @@
+//! Room layouts (paper Fig. 14): 1, 2, 4, 6 and 9 rooms with randomized
+//! door positions/colors between episodes.
+//!
+//! Door randomization is owned by L3 (this module), not by the AOT `reset`:
+//! the finished base grid is an *input* to the reset executable, keeping the
+//! HLO free of data-dependent layout branching (the paper hits the same
+//! wall: "layouts ... can not be changed under jit-compilation", App. I).
+
+use crate::util::rng::Rng;
+
+use super::grid::Grid;
+use super::types::*;
+
+/// Wall coordinates splitting `len` cells into `parts` rooms.
+fn dividers(len: usize, parts: usize) -> Vec<usize> {
+    (1..parts).map(|i| i * (len - 1) / parts).collect()
+}
+
+/// Build an `room_rows x room_cols` layout with one door per shared wall
+/// segment. With `fixed_doors`, doors sit mid-segment (the paper fixes the
+/// 6-room layout's doors).
+pub fn multi_room(h: usize, w: usize, room_rows: usize, room_cols: usize,
+                  rng: &mut Rng, fixed_doors: bool) -> Grid {
+    let mut grid = Grid::empty_room(h, w);
+    let row_walls = dividers(h, room_rows);
+    let col_walls = dividers(w, room_cols);
+
+    for &wr in &row_walls {
+        for c in 1..w - 1 {
+            grid.set(wr, c, WALL_CELL);
+        }
+    }
+    for &wc in &col_walls {
+        for r in 1..h - 1 {
+            grid.set(r, wc, WALL_CELL);
+        }
+    }
+
+    let door = |grid: &mut Grid, r: usize, c: usize, rng: &mut Rng| {
+        let color = GEN_COLORS[rng.below(GEN_COLORS.len())];
+        grid.set(r, c, Cell::new(TILE_DOOR_CLOSED, color));
+    };
+
+    // vertical walls: one door per room-row span
+    let row_spans = spans(h, &row_walls);
+    let col_spans = spans(w, &col_walls);
+    for &wc in &col_walls {
+        for span in &row_spans {
+            let slots: Vec<usize> = (span.0..span.1)
+                .filter(|&r| grid.get(r, wc).tile == TILE_WALL
+                        && r > 0 && r < h - 1)
+                .collect();
+            if slots.is_empty() {
+                continue;
+            }
+            let r = if fixed_doors {
+                slots[slots.len() / 2]
+            } else {
+                slots[rng.below(slots.len())]
+            };
+            door(&mut grid, r, wc, rng);
+        }
+    }
+    // horizontal walls: one door per room-col span
+    for &wr in &row_walls {
+        for span in &col_spans {
+            let slots: Vec<usize> = (span.0..span.1)
+                .filter(|&c| grid.get(wr, c).tile == TILE_WALL
+                        && c > 0 && c < w - 1)
+                .collect();
+            if slots.is_empty() {
+                continue;
+            }
+            let c = if fixed_doors {
+                slots[slots.len() / 2]
+            } else {
+                slots[rng.below(slots.len())]
+            };
+            door(&mut grid, wr, c, rng);
+        }
+    }
+    grid
+}
+
+/// Open intervals between walls (excluding border and wall cells).
+fn spans(len: usize, walls: &[usize]) -> Vec<(usize, usize)> {
+    let mut edges = vec![0usize];
+    edges.extend_from_slice(walls);
+    edges.push(len - 1);
+    edges.windows(2).map(|p| (p[0] + 1, p[1])).collect()
+}
+
+/// XLand layout by room count (1, 2, 4, 6, 9 — Fig. 14).
+pub fn xland_layout(rooms: usize, h: usize, w: usize, rng: &mut Rng)
+                    -> Grid {
+    match rooms {
+        1 => Grid::empty_room(h, w),
+        2 => multi_room(h, w, 1, 2, rng, false),
+        4 => multi_room(h, w, 2, 2, rng, false),
+        6 => multi_room(h, w, 2, 3, rng, true),
+        9 => multi_room(h, w, 3, 3, rng, false),
+        n => panic!("unsupported room count {n}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn door_count(g: &Grid) -> usize {
+        g.count_tile(TILE_DOOR_CLOSED) + g.count_tile(TILE_DOOR_OPEN)
+            + g.count_tile(TILE_DOOR_LOCKED)
+    }
+
+    #[test]
+    fn one_room_has_no_doors() {
+        let mut rng = Rng::new(0);
+        let g = xland_layout(1, 9, 9, &mut rng);
+        assert_eq!(door_count(&g), 0);
+    }
+
+    #[test]
+    fn two_rooms_one_door() {
+        let mut rng = Rng::new(0);
+        let g = xland_layout(2, 9, 9, &mut rng);
+        assert_eq!(door_count(&g), 1);
+    }
+
+    #[test]
+    fn four_rooms_four_doors() {
+        let mut rng = Rng::new(0);
+        let g = xland_layout(4, 13, 13, &mut rng);
+        assert_eq!(door_count(&g), 4);
+    }
+
+    #[test]
+    fn six_rooms_seven_doors() {
+        // 2x3 rooms: 2 row-spans * 2 col-walls = 4 vertical doors,
+        // 3 col-spans * 1 row-wall = 3 horizontal doors
+        let mut rng = Rng::new(0);
+        let g = xland_layout(6, 13, 13, &mut rng);
+        assert_eq!(door_count(&g), 7);
+    }
+
+    #[test]
+    fn nine_rooms_twelve_doors() {
+        let mut rng = Rng::new(0);
+        let g = xland_layout(9, 16, 16, &mut rng);
+        assert_eq!(door_count(&g), 12);
+    }
+
+    #[test]
+    fn rooms_are_connected() {
+        // flood fill over walkable+door cells must reach every floor cell
+        for rooms in [1, 2, 4, 6, 9] {
+            let mut rng = Rng::new(42);
+            let g = xland_layout(rooms, 13, 13, &mut rng);
+            let free = g.free_cells();
+            let mut seen = vec![false; g.h * g.w];
+            let mut stack = vec![free[0]];
+            seen[free[0]] = true;
+            while let Some(p) = stack.pop() {
+                let (r, c) = ((p / g.w) as i32, (p % g.w) as i32);
+                for d in 0..4 {
+                    let (nr, nc) = (r + DIR_DR[d], c + DIR_DC[d]);
+                    if !g.in_bounds(nr, nc) {
+                        continue;
+                    }
+                    let q = nr as usize * g.w + nc as usize;
+                    let t = g.get(nr as usize, nc as usize).tile;
+                    if !seen[q]
+                        && (t == TILE_FLOOR || t == TILE_DOOR_CLOSED
+                            || t == TILE_DOOR_OPEN)
+                    {
+                        seen[q] = true;
+                        stack.push(q);
+                    }
+                }
+            }
+            for &p in &free {
+                assert!(seen[p], "rooms={rooms}: floor cell {p} unreachable");
+            }
+        }
+    }
+
+    #[test]
+    fn door_positions_randomize_between_builds() {
+        let g1 = xland_layout(4, 13, 13, &mut Rng::new(1));
+        let g2 = xland_layout(4, 13, 13, &mut Rng::new(2));
+        assert_ne!(g1, g2, "door placement should vary with the seed");
+    }
+
+    #[test]
+    fn six_room_doors_are_fixed() {
+        let g1 = xland_layout(6, 13, 13, &mut Rng::new(1));
+        let g2 = xland_layout(6, 13, 13, &mut Rng::new(2));
+        let doors = |g: &Grid| -> Vec<(usize, usize)> {
+            g.iter_cells()
+                .filter(|(_, _, c)| c.tile == TILE_DOOR_CLOSED)
+                .map(|(r, c, _)| (r, c))
+                .collect()
+        };
+        assert_eq!(doors(&g1), doors(&g2), "positions fixed (colors vary)");
+    }
+}

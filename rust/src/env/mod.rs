@@ -1,0 +1,21 @@
+//! Pure-Rust XLand-MiniGrid engine: the cross-validation oracle for the
+//! AOT-lowered JAX environment and the CPU-loop baseline for the throughput
+//! benches (the comparison every hardware-accelerated-env paper makes
+//! against EnvPool-style stepping).
+
+pub mod goals;
+pub mod grid;
+pub mod layouts;
+pub mod observation;
+pub mod registry;
+pub mod rules;
+pub mod state;
+pub mod types;
+
+pub use goals::Goal;
+pub use grid::Grid;
+pub use observation::Obs;
+pub use rules::Rule;
+pub use state::{default_max_steps, reset, step, EnvOptions, Ruleset, State,
+                StepOutput};
+pub use types::Cell;

@@ -1,0 +1,218 @@
+//! Egocentric partial observations — Rust oracle for
+//! `python/compile/xmg/observation.py`.
+//!
+//! V×V window, agent at bottom-center `(V-1, V/2)` facing up; cells are
+//! `(tile, color)` symbol pairs; outside the grid reads END_OF_MAP; with
+//! `see_through_walls == false`, a flood-fill visibility pass marks
+//! occluded cells UNSEEN (identical fixed-point to the JAX version).
+
+use super::grid::Grid;
+use super::types::*;
+
+/// Observation: row-major V×V of cells.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Obs {
+    pub v: usize,
+    pub cells: Vec<Cell>,
+}
+
+impl Obs {
+    pub fn get(&self, r: usize, c: usize) -> Cell {
+        self.cells[r * self.v + c]
+    }
+
+    /// Flatten to the PJRT boundary layout `i32[V, V, 2]`.
+    pub fn to_flat(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.v * self.v * 2);
+        for cell in &self.cells {
+            out.push(cell.tile);
+            out.push(cell.color);
+        }
+        out
+    }
+
+    pub fn from_flat(v: usize, flat: &[i32]) -> Self {
+        assert_eq!(flat.len(), v * v * 2);
+        Obs {
+            v,
+            cells: flat.chunks_exact(2).map(|p| Cell::new(p[0], p[1]))
+                .collect(),
+        }
+    }
+}
+
+pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
+               view_size: usize, see_through_walls: bool) -> Obs {
+    let v = view_size as i32;
+    let mut cells = Vec::with_capacity((v * v) as usize);
+    for vr in 0..v {
+        for vc in 0..v {
+            let fwd = (v - 1) - vr;
+            let lat = vc - v / 2;
+            let (dr, dc) = match agent_dir {
+                0 => (-fwd, lat),
+                1 => (lat, fwd),
+                2 => (fwd, -lat),
+                _ => (-lat, -fwd),
+            };
+            cells.push(grid.get_i(agent_pos.0 + dr, agent_pos.1 + dc));
+        }
+    }
+    let mut obs = Obs { v: view_size, cells };
+
+    if !see_through_walls {
+        let n = view_size;
+        let idx = |r: usize, c: usize| r * n + c;
+        let transparent: Vec<bool> =
+            obs.cells.iter().map(|c| !blocks_sight(c.tile)).collect();
+        let mut vis = vec![false; n * n];
+        vis[idx(n - 1, n / 2)] = true;
+        // flood to fixed point (bounded by cell count)
+        loop {
+            let mut changed = false;
+            for r in 0..n {
+                for c in 0..n {
+                    if vis[idx(r, c)] {
+                        continue;
+                    }
+                    let mut lit = false;
+                    if r > 0 {
+                        lit |= vis[idx(r - 1, c)] && transparent[idx(r - 1, c)];
+                    }
+                    if r + 1 < n {
+                        lit |= vis[idx(r + 1, c)] && transparent[idx(r + 1, c)];
+                    }
+                    if c > 0 {
+                        lit |= vis[idx(r, c - 1)] && transparent[idx(r, c - 1)];
+                    }
+                    if c + 1 < n {
+                        lit |= vis[idx(r, c + 1)] && transparent[idx(r, c + 1)];
+                    }
+                    if lit {
+                        vis[idx(r, c)] = true;
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        for (i, cell) in obs.cells.iter_mut().enumerate() {
+            if !vis[i] {
+                *cell = UNSEEN_CELL;
+            }
+        }
+    }
+    obs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ball_red() -> Cell {
+        Cell::new(TILE_BALL, COLOR_RED)
+    }
+
+    #[test]
+    fn agent_cell_is_bottom_center() {
+        let mut g = Grid::empty_room(9, 9);
+        g.set(4, 4, ball_red()); // agent's own cell shows grid content
+        let obs = observe(&g, (4, 4), 0, 5, true);
+        assert_eq!(obs.get(4, 2), ball_red());
+    }
+
+    #[test]
+    fn facing_up_sees_forward() {
+        let mut g = Grid::empty_room(9, 9);
+        g.set(2, 4, ball_red()); // two cells above agent (4,4)
+        let obs = observe(&g, (4, 4), 0, 5, true);
+        // forward 2 => view row V-1-2 = 2, center col 2
+        assert_eq!(obs.get(2, 2), ball_red());
+    }
+
+    #[test]
+    fn rotation_consistency() {
+        // the object straight ahead must appear at the same view cell for
+        // every facing direction
+        let mut g = Grid::empty_room(11, 11);
+        let center = (5, 5);
+        g.set(3, 5, ball_red()); // up
+        g.set(5, 7, ball_red()); // right
+        g.set(7, 5, ball_red()); // down
+        g.set(5, 3, ball_red()); // left
+        for dir in 0..4 {
+            let obs = observe(&g, center, dir, 5, true);
+            assert_eq!(obs.get(2, 2), ball_red(), "dir={dir}");
+        }
+    }
+
+    #[test]
+    fn lateral_orientation() {
+        // object to the agent's RIGHT-hand side appears right of center
+        let mut g = Grid::empty_room(11, 11);
+        g.set(4, 6, ball_red()); // world-east of agent, one fwd one right
+        let obs = observe(&g, (5, 5), 0, 5, true); // facing up
+        assert_eq!(obs.get(3, 3), ball_red());
+        // facing down, the same world cell is on the LEFT, one back —
+        // outside the forward view
+        let obs = observe(&g, (5, 5), 2, 5, true);
+        assert_eq!(obs.get(3, 3), FLOOR_CELL);
+    }
+
+    #[test]
+    fn out_of_map_cells() {
+        let g = Grid::empty_room(9, 9);
+        let obs = observe(&g, (1, 1), 0, 5, true); // near top-left corner
+        assert_eq!(obs.get(0, 0), END_OF_MAP_CELL);
+    }
+
+    #[test]
+    fn occlusion_hides_behind_walls() {
+        let mut g = Grid::empty_room(11, 11);
+        // wall row right in front of the agent
+        for c in 0..11 {
+            g.set(4, c, WALL_CELL);
+        }
+        g.set(2, 5, ball_red()); // behind the wall
+        let seen = observe(&g, (5, 5), 0, 5, true);
+        let occluded = observe(&g, (5, 5), 0, 5, false);
+        assert_eq!(seen.get(1, 2), ball_red());
+        assert_eq!(occluded.get(1, 2), UNSEEN_CELL);
+        // the wall itself is visible
+        assert_eq!(occluded.get(3, 2), WALL_CELL);
+    }
+
+    #[test]
+    fn open_door_lets_light_through() {
+        let mut g = Grid::empty_room(11, 11);
+        for c in 0..11 {
+            g.set(4, c, WALL_CELL);
+        }
+        g.set(4, 5, Cell::new(TILE_DOOR_OPEN, COLOR_BLUE));
+        g.set(3, 5, ball_red());
+        let obs = observe(&g, (5, 5), 0, 5, false);
+        assert_eq!(obs.get(2, 2), ball_red());
+    }
+
+    #[test]
+    fn closed_door_blocks_light() {
+        let mut g = Grid::empty_room(11, 11);
+        for c in 0..11 {
+            g.set(4, c, WALL_CELL);
+        }
+        g.set(4, 5, Cell::new(TILE_DOOR_CLOSED, COLOR_BLUE));
+        g.set(3, 5, ball_red());
+        let obs = observe(&g, (5, 5), 0, 5, false);
+        assert_eq!(obs.get(2, 2), UNSEEN_CELL);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let g = Grid::empty_room(9, 9);
+        let obs = observe(&g, (4, 4), 1, 5, true);
+        let flat = obs.to_flat();
+        assert_eq!(Obs::from_flat(5, &flat), obs);
+    }
+}

@@ -1,0 +1,317 @@
+//! Production rules (paper Table 3) — the Rust oracle for
+//! `python/compile/xmg/rules.py`.
+//!
+//! Determinism contract shared with the JAX side: candidate directions are
+//! scanned up, right, down, left; cells row-major; the first match fires;
+//! each rule fires at most once per check; rules apply sequentially in
+//! ruleset order.
+
+use super::grid::Grid;
+use super::types::*;
+
+/// Encoded rule `[id, a_tile, a_col, b_tile, b_col, c_tile, c_col]`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Rule(pub [i32; RULE_ENC]);
+
+impl Rule {
+    pub const EMPTY: Rule = Rule([0; RULE_ENC]);
+
+    pub fn id(&self) -> i32 {
+        self.0[0]
+    }
+    pub fn a(&self) -> Cell {
+        Cell::new(self.0[1], self.0[2])
+    }
+    pub fn b(&self) -> Cell {
+        Cell::new(self.0[3], self.0[4])
+    }
+    pub fn c(&self) -> Cell {
+        Cell::new(self.0[5], self.0[6])
+    }
+
+    pub fn agent_hold(a: Cell, c: Cell) -> Rule {
+        Rule([RULE_AGENT_HOLD, a.tile, a.color, 0, 0, c.tile, c.color])
+    }
+    pub fn agent_near(a: Cell, c: Cell) -> Rule {
+        Rule([RULE_AGENT_NEAR, a.tile, a.color, 0, 0, c.tile, c.color])
+    }
+    pub fn tile_near(a: Cell, b: Cell, c: Cell) -> Rule {
+        Rule([RULE_TILE_NEAR, a.tile, a.color, b.tile, b.color, c.tile,
+              c.color])
+    }
+    pub fn tile_near_dir(dir: usize, a: Cell, b: Cell, c: Cell) -> Rule {
+        let id = RULE_TILE_NEAR_UP + dir as i32;
+        Rule([id, a.tile, a.color, b.tile, b.color, c.tile, c.color])
+    }
+    pub fn agent_near_dir(dir: usize, a: Cell, c: Cell) -> Rule {
+        let id = RULE_AGENT_NEAR_UP + dir as i32;
+        Rule([id, a.tile, a.color, 0, 0, c.tile, c.color])
+    }
+
+    /// Input objects consumed by this rule (for the generator/solver).
+    pub fn inputs(&self) -> Vec<Cell> {
+        match self.id() {
+            RULE_EMPTY => vec![],
+            RULE_AGENT_HOLD | RULE_AGENT_NEAR | RULE_AGENT_NEAR_UP
+            | RULE_AGENT_NEAR_RIGHT | RULE_AGENT_NEAR_DOWN
+            | RULE_AGENT_NEAR_LEFT => vec![self.a()],
+            _ => vec![self.a(), self.b()],
+        }
+    }
+}
+
+const ALL_DIRS: [usize; 4] = [DIR_UP, DIR_RIGHT, DIR_DOWN, DIR_LEFT];
+
+/// Production that lands on the grid; producing FLOOR means disappearance
+/// (App. J: "the disappearance production rule was emulated by setting the
+/// production tile to the black floor").
+fn production(rule: &Rule) -> Cell {
+    rule.c()
+}
+
+fn apply_tile_near(grid: &mut Grid, rule: &Rule, dirs: &[usize]) {
+    let (a, b, c) = (rule.a(), rule.b(), production(rule));
+    for &d in dirs {
+        for r in 0..grid.h as i32 {
+            for col in 0..grid.w as i32 {
+                if grid.get_i(r, col) != a {
+                    continue;
+                }
+                let (br, bc) = (r + DIR_DR[d], col + DIR_DC[d]);
+                if grid.get_i(br, bc) == b {
+                    // b's cell is cleared first, then a's becomes c —
+                    // same order as the JAX scatter (handles a == b).
+                    grid.set_i(br, bc, FLOOR_CELL);
+                    grid.set_i(r, col, c);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn apply_agent_near(grid: &mut Grid, agent_pos: (i32, i32), rule: &Rule,
+                    dirs: &[usize]) {
+    let (a, c) = (rule.a(), production(rule));
+    for &d in dirs {
+        let r = agent_pos.0 + DIR_DR[d];
+        let col = agent_pos.1 + DIR_DC[d];
+        if grid.in_bounds(r, col) && grid.get_i(r, col) == a {
+            grid.set_i(r, col, c);
+            return;
+        }
+    }
+}
+
+/// Apply one encoded rule; mutates grid/pocket like the JAX `check_rule`.
+pub fn check_rule(grid: &mut Grid, agent_pos: (i32, i32), pocket: &mut Cell,
+                  rule: &Rule) {
+    match rule.id() {
+        RULE_EMPTY => {}
+        RULE_AGENT_HOLD => {
+            if *pocket == rule.a() {
+                let c = production(rule);
+                *pocket = if c.tile == TILE_FLOOR { POCKET_EMPTY } else { c };
+            }
+        }
+        RULE_AGENT_NEAR => apply_agent_near(grid, agent_pos, rule, &ALL_DIRS),
+        RULE_TILE_NEAR => apply_tile_near(grid, rule, &ALL_DIRS),
+        RULE_TILE_NEAR_UP => apply_tile_near(grid, rule, &[DIR_UP]),
+        RULE_TILE_NEAR_RIGHT => apply_tile_near(grid, rule, &[DIR_RIGHT]),
+        RULE_TILE_NEAR_DOWN => apply_tile_near(grid, rule, &[DIR_DOWN]),
+        RULE_TILE_NEAR_LEFT => apply_tile_near(grid, rule, &[DIR_LEFT]),
+        RULE_AGENT_NEAR_UP => {
+            apply_agent_near(grid, agent_pos, rule, &[DIR_UP])
+        }
+        RULE_AGENT_NEAR_RIGHT => {
+            apply_agent_near(grid, agent_pos, rule, &[DIR_RIGHT])
+        }
+        RULE_AGENT_NEAR_DOWN => {
+            apply_agent_near(grid, agent_pos, rule, &[DIR_DOWN])
+        }
+        RULE_AGENT_NEAR_LEFT => {
+            apply_agent_near(grid, agent_pos, rule, &[DIR_LEFT])
+        }
+        _ => {} // unknown ids are inert, like the clipped lax.switch
+    }
+}
+
+/// Apply a full ruleset sequentially.
+pub fn check_rules(grid: &mut Grid, agent_pos: (i32, i32),
+                   pocket: &mut Cell, rules: &[Rule]) {
+    for rule in rules {
+        check_rule(grid, agent_pos, pocket, rule);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ball_red() -> Cell {
+        Cell::new(TILE_BALL, COLOR_RED)
+    }
+    fn sq_blue() -> Cell {
+        Cell::new(TILE_SQUARE, COLOR_BLUE)
+    }
+    fn pyr_green() -> Cell {
+        Cell::new(TILE_PYRAMID, COLOR_GREEN)
+    }
+
+    #[test]
+    fn tile_near_fires_on_adjacency() {
+        let mut g = Grid::empty_room(7, 7);
+        g.set(3, 3, ball_red());
+        g.set(3, 4, sq_blue());
+        let rule = Rule::tile_near(ball_red(), sq_blue(), pyr_green());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (1, 1), &mut pocket, &rule);
+        assert_eq!(g.get(3, 3), pyr_green()); // a replaced by c
+        assert_eq!(g.get(3, 4), FLOOR_CELL); // b removed
+    }
+
+    #[test]
+    fn tile_near_ignores_non_adjacent() {
+        let mut g = Grid::empty_room(7, 7);
+        g.set(1, 1, ball_red());
+        g.set(5, 5, sq_blue());
+        let rule = Rule::tile_near(ball_red(), sq_blue(), pyr_green());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (3, 3), &mut pocket, &rule);
+        assert_eq!(g.get(1, 1), ball_red());
+        assert_eq!(g.get(5, 5), sq_blue());
+    }
+
+    #[test]
+    fn tile_near_direction_priority_up_first() {
+        // b both above and to the right of a: the up-direction match wins
+        let mut g = Grid::empty_room(7, 7);
+        g.set(3, 3, ball_red());
+        g.set(2, 3, sq_blue()); // above
+        g.set(3, 4, sq_blue()); // right
+        let rule = Rule::tile_near(ball_red(), sq_blue(), pyr_green());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (1, 1), &mut pocket, &rule);
+        assert_eq!(g.get(2, 3), FLOOR_CELL, "up neighbor consumed");
+        assert_eq!(g.get(3, 4), sq_blue(), "right neighbor untouched");
+        assert_eq!(g.get(3, 3), pyr_green());
+    }
+
+    #[test]
+    fn tile_near_fires_once_per_check() {
+        let mut g = Grid::empty_room(9, 9);
+        g.set(1, 1, ball_red());
+        g.set(1, 2, sq_blue());
+        g.set(5, 5, ball_red());
+        g.set(5, 6, sq_blue());
+        let rule = Rule::tile_near(ball_red(), sq_blue(), pyr_green());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (3, 3), &mut pocket, &rule);
+        // only the row-major-first pair fired
+        assert_eq!(g.get(1, 1), pyr_green());
+        assert_eq!(g.get(5, 5), ball_red());
+        assert_eq!(g.get(5, 6), sq_blue());
+    }
+
+    #[test]
+    fn directional_tile_near_up_only() {
+        // TileNearUp: b one tile ABOVE a
+        let mut g = Grid::empty_room(7, 7);
+        g.set(3, 3, ball_red());
+        g.set(3, 4, sq_blue()); // right, should NOT fire
+        let rule = Rule::tile_near_dir(DIR_UP, ball_red(), sq_blue(),
+                                       pyr_green());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (1, 1), &mut pocket, &rule);
+        assert_eq!(g.get(3, 3), ball_red());
+
+        g.set(2, 3, sq_blue()); // above, should fire
+        check_rule(&mut g, (1, 1), &mut pocket, &rule);
+        assert_eq!(g.get(3, 3), pyr_green());
+        assert_eq!(g.get(2, 3), FLOOR_CELL);
+    }
+
+    #[test]
+    fn agent_hold_transforms_pocket() {
+        let mut g = Grid::empty_room(5, 5);
+        let rule = Rule::agent_hold(ball_red(), sq_blue());
+        let mut pocket = ball_red();
+        check_rule(&mut g, (2, 2), &mut pocket, &rule);
+        assert_eq!(pocket, sq_blue());
+    }
+
+    #[test]
+    fn agent_hold_disappearance_empties_pocket() {
+        let mut g = Grid::empty_room(5, 5);
+        let rule = Rule::agent_hold(ball_red(), FLOOR_CELL);
+        let mut pocket = ball_red();
+        check_rule(&mut g, (2, 2), &mut pocket, &rule);
+        assert_eq!(pocket, POCKET_EMPTY);
+    }
+
+    #[test]
+    fn agent_near_replaces_neighbor() {
+        let mut g = Grid::empty_room(5, 5);
+        g.set(1, 2, ball_red()); // above agent at (2,2)
+        let rule = Rule::agent_near(ball_red(), sq_blue());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (2, 2), &mut pocket, &rule);
+        assert_eq!(g.get(1, 2), sq_blue());
+    }
+
+    #[test]
+    fn agent_near_dir_respects_direction() {
+        let mut g = Grid::empty_room(5, 5);
+        g.set(2, 3, ball_red()); // right of agent
+        let up_rule = Rule::agent_near_dir(DIR_UP, ball_red(), sq_blue());
+        let mut pocket = POCKET_EMPTY;
+        check_rule(&mut g, (2, 2), &mut pocket, &up_rule);
+        assert_eq!(g.get(2, 3), ball_red(), "up rule must not fire");
+        let right_rule =
+            Rule::agent_near_dir(DIR_RIGHT, ball_red(), sq_blue());
+        check_rule(&mut g, (2, 2), &mut pocket, &right_rule);
+        assert_eq!(g.get(2, 3), sq_blue());
+    }
+
+    #[test]
+    fn rules_apply_sequentially_chained() {
+        // rule1 produces the input of rule2 — both fire in one check
+        let mut g = Grid::empty_room(7, 7);
+        g.set(3, 3, ball_red());
+        g.set(3, 4, sq_blue());
+        g.set(2, 3, pyr_green());
+        let star = Cell::new(TILE_STAR, COLOR_YELLOW);
+        let hexa = Cell::new(TILE_HEX, COLOR_PINK);
+        let rules = [
+            Rule::tile_near(ball_red(), sq_blue(), star.clone()),
+            Rule::tile_near(star.clone(), pyr_green(), hexa.clone()),
+        ];
+        let mut pocket = POCKET_EMPTY;
+        check_rules(&mut g, (5, 5), &mut pocket, &rules);
+        assert_eq!(g.get(3, 3), hexa);
+        assert_eq!(g.get(3, 4), FLOOR_CELL);
+        assert_eq!(g.get(2, 3), FLOOR_CELL);
+    }
+
+    #[test]
+    fn empty_rule_inert() {
+        let mut g = Grid::empty_room(5, 5);
+        let before = g.clone();
+        let mut pocket = ball_red();
+        check_rule(&mut g, (2, 2), &mut pocket, &Rule::EMPTY);
+        assert_eq!(g, before);
+        assert_eq!(pocket, ball_red());
+    }
+
+    #[test]
+    fn rule_inputs_arity() {
+        assert_eq!(Rule::EMPTY.inputs().len(), 0);
+        assert_eq!(Rule::agent_hold(ball_red(), sq_blue()).inputs().len(), 1);
+        assert_eq!(
+            Rule::tile_near(ball_red(), sq_blue(), pyr_green())
+                .inputs()
+                .len(),
+            2
+        );
+    }
+}

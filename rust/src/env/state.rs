@@ -1,0 +1,402 @@
+//! Environment state + the `reset`/`step` transition — Rust oracle for
+//! `python/compile/xmg/env.py`, with identical semantics:
+//!
+//! - 6 discrete actions; rules fire after forward/pick/put/toggle only;
+//! - reward `1 - 0.9*step/max_steps` on goal;
+//! - trial auto-reset on goal, episode auto-reset at `max_steps`.
+
+use crate::util::rng::Rng;
+
+use super::goals::{check_goal, Goal};
+use super::grid::Grid;
+use super::observation::{observe, Obs};
+use super::rules::{check_rules, Rule};
+use super::types::*;
+
+/// A task: goal + production rules + objects placed at trial start
+/// (paper §2.1 "ruleset").
+#[derive(Clone, PartialEq, Debug)]
+pub struct Ruleset {
+    pub goal: Goal,
+    pub rules: Vec<Rule>,
+    pub init_tiles: Vec<Cell>,
+}
+
+impl Ruleset {
+    /// Number of non-empty rules (the Fig. 4 statistic).
+    pub fn num_rules(&self) -> usize {
+        self.rules.iter().filter(|r| r.id() != RULE_EMPTY).count()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct State {
+    pub base_grid: Grid,
+    pub grid: Grid,
+    pub agent_pos: (i32, i32),
+    pub agent_dir: i32,
+    pub pocket: Cell,
+    pub ruleset: Ruleset,
+    pub step_count: i32,
+    pub max_steps: i32,
+    pub rng: Rng,
+}
+
+pub struct StepOutput {
+    pub obs: Obs,
+    pub reward: f32,
+    pub done: bool,
+    pub trial_done: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EnvOptions {
+    pub view_size: usize,
+    pub see_through_walls: bool,
+}
+
+impl Default for EnvOptions {
+    fn default() -> Self {
+        EnvOptions { view_size: 5, see_through_walls: true }
+    }
+}
+
+/// Place init objects + agent on distinct random floor cells. Mirrors the
+/// JAX `place_objects` distribution (k+1 distinct uniform floor cells; the
+/// object list may contain conceptual padding on the JAX side — here the
+/// list is exact).
+fn place_objects(rng: &mut Rng, base_grid: &Grid, init_tiles: &[Cell])
+                 -> (Grid, (i32, i32), i32) {
+    let mut grid = base_grid.clone();
+    let free = grid.free_cells();
+    assert!(
+        free.len() > init_tiles.len(),
+        "grid has {} free cells but needs {}",
+        free.len(),
+        init_tiles.len() + 1
+    );
+    let chosen = rng.sample_distinct(&free, init_tiles.len() + 1);
+    for (cell, &pos) in init_tiles.iter().zip(&chosen) {
+        grid.set(pos / grid.w, pos % grid.w, *cell);
+    }
+    let agent_flat = chosen[init_tiles.len()];
+    let agent_pos = ((agent_flat / grid.w) as i32,
+                     (agent_flat % grid.w) as i32);
+    let agent_dir = rng.below(4) as i32;
+    (grid, agent_pos, agent_dir)
+}
+
+/// Start a fresh episode.
+pub fn reset(base_grid: Grid, ruleset: Ruleset, max_steps: i32,
+             mut rng: Rng, opts: EnvOptions) -> (State, Obs) {
+    let (grid, agent_pos, agent_dir) =
+        place_objects(&mut rng, &base_grid, &ruleset.init_tiles);
+    let obs = observe(&grid, agent_pos, agent_dir, opts.view_size,
+                      opts.see_through_walls);
+    let state = State {
+        base_grid,
+        grid,
+        agent_pos,
+        agent_dir,
+        pocket: POCKET_EMPTY,
+        ruleset,
+        step_count: 0,
+        max_steps,
+        rng,
+    };
+    (state, obs)
+}
+
+/// Paper §2.3 heuristic for the default step limit.
+pub fn default_max_steps(h: usize, w: usize) -> i32 {
+    (3 * h * w) as i32
+}
+
+fn front(state: &State) -> (i32, i32) {
+    let d = state.agent_dir as usize;
+    (state.agent_pos.0 + DIR_DR[d], state.agent_pos.1 + DIR_DC[d])
+}
+
+/// One environment transition (mutates `state` in place).
+pub fn step(state: &mut State, action: i32, opts: EnvOptions) -> StepOutput {
+    let action = action.clamp(0, NUM_ACTIONS as i32 - 1);
+    match action {
+        ACTION_FORWARD => {
+            let (r, c) = front(state);
+            if state.grid.in_bounds(r, c)
+                && is_walkable(state.grid.get_i(r, c).tile)
+            {
+                state.agent_pos = (r, c);
+            }
+        }
+        ACTION_TURN_LEFT => state.agent_dir = (state.agent_dir + 3) % 4,
+        ACTION_TURN_RIGHT => state.agent_dir = (state.agent_dir + 1) % 4,
+        ACTION_PICK_UP => {
+            let (r, c) = front(state);
+            let cell = state.grid.get_i(r, c);
+            if state.grid.in_bounds(r, c)
+                && state.pocket.tile == TILE_EMPTY
+                && is_pickable(cell.tile)
+            {
+                state.pocket = cell;
+                state.grid.set_i(r, c, FLOOR_CELL);
+            }
+        }
+        ACTION_PUT_DOWN => {
+            let (r, c) = front(state);
+            let cell = state.grid.get_i(r, c);
+            if state.grid.in_bounds(r, c)
+                && state.pocket.tile != TILE_EMPTY
+                && cell.tile == TILE_FLOOR
+            {
+                state.grid.set_i(r, c, state.pocket);
+                state.pocket = POCKET_EMPTY;
+            }
+        }
+        ACTION_TOGGLE => {
+            let (r, c) = front(state);
+            if state.grid.in_bounds(r, c) {
+                let cell = state.grid.get_i(r, c);
+                let has_key = state.pocket.tile == TILE_KEY
+                    && state.pocket.color == cell.color;
+                let new_tile = match cell.tile {
+                    TILE_DOOR_CLOSED => TILE_DOOR_OPEN,
+                    TILE_DOOR_OPEN => TILE_DOOR_CLOSED,
+                    TILE_DOOR_LOCKED if has_key => TILE_DOOR_OPEN,
+                    t => t,
+                };
+                state.grid.set_i(r, c, Cell::new(new_tile, cell.color));
+            }
+        }
+        _ => unreachable!(),
+    }
+
+    // rules fire only after acting actions (§2.1)
+    let triggering = matches!(
+        action,
+        ACTION_FORWARD | ACTION_PICK_UP | ACTION_PUT_DOWN | ACTION_TOGGLE
+    );
+    if triggering {
+        let rules = state.ruleset.rules.clone();
+        check_rules(&mut state.grid, state.agent_pos, &mut state.pocket,
+                    &rules);
+    }
+
+    let achieved = check_goal(&state.grid, state.agent_pos, state.pocket,
+                              &state.ruleset.goal);
+    let new_step = state.step_count + 1;
+    let done = new_step >= state.max_steps;
+    let reward = if achieved {
+        1.0 - 0.9 * new_step as f32 / state.max_steps.max(1) as f32
+    } else {
+        0.0
+    };
+
+    let trial_done = achieved || done;
+    if trial_done {
+        let mut sub = state.rng.split();
+        let (grid, pos, dir) =
+            place_objects(&mut sub, &state.base_grid,
+                          &state.ruleset.init_tiles);
+        state.grid = grid;
+        state.agent_pos = pos;
+        state.agent_dir = dir;
+        state.pocket = POCKET_EMPTY;
+    }
+    state.step_count = if done { 0 } else { new_step };
+
+    let obs = observe(&state.grid, state.agent_pos, state.agent_dir,
+                      opts.view_size, opts.see_through_walls);
+    StepOutput { obs, reward, done, trial_done }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ball_red() -> Cell {
+        Cell::new(TILE_BALL, COLOR_RED)
+    }
+
+    fn simple_state(goal: Goal, rules: Vec<Rule>, init: Vec<Cell>) -> State {
+        let base = Grid::empty_room(9, 9);
+        let ruleset = Ruleset { goal, rules, init_tiles: init };
+        let (state, _) = reset(base, ruleset, 243, Rng::new(1),
+                               EnvOptions::default());
+        state
+    }
+
+    /// Drive the agent to a specific cell/direction (test helper bypassing
+    /// pathing).
+    fn teleport(state: &mut State, pos: (i32, i32), dir: i32) {
+        state.agent_pos = pos;
+        state.agent_dir = dir;
+    }
+
+    #[test]
+    fn forward_moves_onto_floor_only() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![]);
+        teleport(&mut s, (1, 1), 0); // facing up into the wall
+        step(&mut s, ACTION_FORWARD, EnvOptions::default());
+        assert_eq!(s.agent_pos, (1, 1), "wall blocks");
+        teleport(&mut s, (1, 1), 2); // facing down into floor
+        step(&mut s, ACTION_FORWARD, EnvOptions::default());
+        assert_eq!(s.agent_pos, (2, 1));
+    }
+
+    #[test]
+    fn turns_cycle_directions() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![]);
+        teleport(&mut s, (4, 4), 0);
+        step(&mut s, ACTION_TURN_RIGHT, EnvOptions::default());
+        assert_eq!(s.agent_dir, 1);
+        step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        assert_eq!(s.agent_dir, 3);
+    }
+
+    #[test]
+    fn pick_up_and_put_down_roundtrip() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![]);
+        teleport(&mut s, (4, 4), 1); // facing right
+        s.grid.set(4, 5, ball_red());
+        step(&mut s, ACTION_PICK_UP, EnvOptions::default());
+        assert_eq!(s.pocket, ball_red());
+        assert_eq!(s.grid.get(4, 5), FLOOR_CELL);
+        // can't pick a second item
+        s.grid.set(4, 5, Cell::new(TILE_SQUARE, COLOR_BLUE));
+        step(&mut s, ACTION_PICK_UP, EnvOptions::default());
+        assert_eq!(s.pocket, ball_red(), "pocket is single-slot");
+        // put down on floor
+        teleport(&mut s, (4, 4), 2); // facing down (floor)
+        step(&mut s, ACTION_PUT_DOWN, EnvOptions::default());
+        assert_eq!(s.pocket, POCKET_EMPTY);
+        assert_eq!(s.grid.get(5, 4), ball_red());
+    }
+
+    #[test]
+    fn put_down_blocked_by_occupied_cell() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![]);
+        teleport(&mut s, (4, 4), 1);
+        s.pocket = ball_red();
+        s.grid.set(4, 5, Cell::new(TILE_SQUARE, COLOR_BLUE));
+        step(&mut s, ACTION_PUT_DOWN, EnvOptions::default());
+        assert_eq!(s.pocket, ball_red(), "cannot drop onto an object");
+    }
+
+    #[test]
+    fn toggle_doors_and_keys() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![]);
+        teleport(&mut s, (4, 4), 1);
+        s.grid.set(4, 5, Cell::new(TILE_DOOR_CLOSED, COLOR_BLUE));
+        step(&mut s, ACTION_TOGGLE, EnvOptions::default());
+        assert_eq!(s.grid.get(4, 5).tile, TILE_DOOR_OPEN);
+        step(&mut s, ACTION_TOGGLE, EnvOptions::default());
+        assert_eq!(s.grid.get(4, 5).tile, TILE_DOOR_CLOSED);
+
+        s.grid.set(4, 5, Cell::new(TILE_DOOR_LOCKED, COLOR_BLUE));
+        step(&mut s, ACTION_TOGGLE, EnvOptions::default());
+        assert_eq!(s.grid.get(4, 5).tile, TILE_DOOR_LOCKED,
+                   "locked without key");
+        s.pocket = Cell::new(TILE_KEY, COLOR_RED);
+        step(&mut s, ACTION_TOGGLE, EnvOptions::default());
+        assert_eq!(s.grid.get(4, 5).tile, TILE_DOOR_LOCKED,
+                   "wrong key color");
+        s.pocket = Cell::new(TILE_KEY, COLOR_BLUE);
+        step(&mut s, ACTION_TOGGLE, EnvOptions::default());
+        assert_eq!(s.grid.get(4, 5).tile, TILE_DOOR_OPEN);
+    }
+
+    #[test]
+    fn goal_gives_scaled_reward_and_trial_reset() {
+        let goal = Goal::agent_near(ball_red());
+        let mut s = simple_state(goal, vec![], vec![ball_red()]);
+        teleport(&mut s, (4, 4), 0);
+        s.grid.set(3, 4, ball_red()); // in front; forward triggers check
+        let out = step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        // goal checked after every action — already adjacent
+        assert!(out.trial_done);
+        assert!(!out.done);
+        let expected = 1.0 - 0.9 * (s.max_steps as f32).recip();
+        assert!((out.reward - expected).abs() < 1e-6);
+        // trial reset happened: pocket empty, step count continues
+        assert_eq!(s.pocket, POCKET_EMPTY);
+        assert_eq!(s.step_count, 1);
+        // the ball was re-placed somewhere on the grid
+        assert_eq!(s.grid.count_tile(TILE_BALL), 1);
+    }
+
+    #[test]
+    fn episode_auto_resets_at_max_steps() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![ball_red()]);
+        s.max_steps = 3;
+        let o1 = step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        let o2 = step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        let o3 = step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        assert!(!o1.done && !o2.done && o3.done);
+        assert_eq!(s.step_count, 0, "step count reset");
+        assert_eq!(s.grid.count_tile(TILE_BALL), 1, "objects re-placed");
+    }
+
+    #[test]
+    fn rules_fire_after_forward_but_not_after_turn() {
+        let rule = Rule::agent_near(ball_red(),
+                                    Cell::new(TILE_SQUARE, COLOR_BLUE));
+        let mut s = simple_state(Goal::EMPTY, vec![rule], vec![]);
+        teleport(&mut s, (4, 4), 0);
+        s.grid.set(3, 4, ball_red()); // already adjacent
+        step(&mut s, ACTION_TURN_LEFT, EnvOptions::default());
+        assert_eq!(s.grid.get(3, 4), ball_red(), "turn must not trigger");
+        step(&mut s, ACTION_TURN_RIGHT, EnvOptions::default());
+        assert_eq!(s.grid.get(3, 4), ball_red(), "turn must not trigger");
+        // put_down with an empty pocket moves nothing but IS an acting
+        // action, so rules are evaluated
+        step(&mut s, ACTION_PUT_DOWN, EnvOptions::default());
+        assert_eq!(s.grid.get(3, 4).tile, TILE_SQUARE);
+    }
+
+    #[test]
+    fn reset_places_all_objects_and_agent_on_floor() {
+        let init = vec![ball_red(), Cell::new(TILE_KEY, COLOR_YELLOW),
+                        Cell::new(TILE_SQUARE, COLOR_BLUE)];
+        let base = Grid::empty_room(9, 9);
+        let ruleset = Ruleset {
+            goal: Goal::EMPTY,
+            rules: vec![],
+            init_tiles: init.clone(),
+        };
+        for seed in 0..20 {
+            let (s, _) = reset(base.clone(), ruleset.clone(), 243,
+                               Rng::new(seed), EnvOptions::default());
+            for cell in &init {
+                assert_eq!(
+                    s.grid
+                        .iter_cells()
+                        .filter(|(_, _, c)| c == cell)
+                        .count(),
+                    1
+                );
+            }
+            let under_agent =
+                s.grid.get_i(s.agent_pos.0, s.agent_pos.1);
+            assert_eq!(under_agent.tile, TILE_FLOOR,
+                       "agent starts on a floor cell");
+        }
+    }
+
+    #[test]
+    fn observation_matches_view_size() {
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![]);
+        let opts = EnvOptions { view_size: 7, see_through_walls: true };
+        teleport(&mut s, (4, 4), 0);
+        let out = step(&mut s, ACTION_TURN_LEFT, opts);
+        assert_eq!(out.obs.v, 7);
+        assert_eq!(out.obs.cells.len(), 49);
+    }
+
+    #[test]
+    fn default_max_steps_heuristic() {
+        assert_eq!(default_max_steps(9, 9), 243);
+        assert_eq!(default_max_steps(13, 13), 507);
+    }
+}

@@ -1,0 +1,190 @@
+//! Shared constants (paper Tables 1-3), mirroring
+//! `python/compile/xmg/types.py` value-for-value. Pinned by
+//! `rust/tests/id_tables.rs` against the manifest and by python tests.
+
+// --- Table 1a: tiles --------------------------------------------------------
+pub const TILE_END_OF_MAP: i32 = 0;
+pub const TILE_UNSEEN: i32 = 1;
+pub const TILE_EMPTY: i32 = 2;
+pub const TILE_FLOOR: i32 = 3;
+pub const TILE_WALL: i32 = 4;
+pub const TILE_BALL: i32 = 5;
+pub const TILE_SQUARE: i32 = 6;
+pub const TILE_PYRAMID: i32 = 7;
+pub const TILE_GOAL: i32 = 8;
+pub const TILE_KEY: i32 = 9;
+pub const TILE_DOOR_LOCKED: i32 = 10;
+pub const TILE_DOOR_CLOSED: i32 = 11;
+pub const TILE_DOOR_OPEN: i32 = 12;
+pub const TILE_HEX: i32 = 13;
+pub const TILE_STAR: i32 = 14;
+pub const NUM_TILES: usize = 15;
+
+// --- Table 1b: colors -------------------------------------------------------
+pub const COLOR_END_OF_MAP: i32 = 0;
+pub const COLOR_UNSEEN: i32 = 1;
+pub const COLOR_EMPTY: i32 = 2;
+pub const COLOR_RED: i32 = 3;
+pub const COLOR_GREEN: i32 = 4;
+pub const COLOR_BLUE: i32 = 5;
+pub const COLOR_PURPLE: i32 = 6;
+pub const COLOR_YELLOW: i32 = 7;
+pub const COLOR_GREY: i32 = 8;
+pub const COLOR_BLACK: i32 = 9;
+pub const COLOR_ORANGE: i32 = 10;
+pub const COLOR_WHITE: i32 = 11;
+pub const COLOR_BROWN: i32 = 12;
+pub const COLOR_PINK: i32 = 13;
+pub const NUM_COLORS: usize = 14;
+
+/// 10 object colors used by the benchmark generator (App. J).
+pub const GEN_COLORS: [i32; 10] = [
+    COLOR_RED, COLOR_GREEN, COLOR_BLUE, COLOR_PURPLE, COLOR_YELLOW,
+    COLOR_GREY, COLOR_WHITE, COLOR_BROWN, COLOR_PINK, COLOR_ORANGE,
+];
+/// 7 object tiles used by the benchmark generator (App. J).
+pub const GEN_TILES: [i32; 7] = [
+    TILE_BALL, TILE_SQUARE, TILE_PYRAMID, TILE_KEY, TILE_STAR, TILE_HEX,
+    TILE_GOAL,
+];
+
+// --- actions ----------------------------------------------------------------
+pub const ACTION_FORWARD: i32 = 0;
+pub const ACTION_TURN_LEFT: i32 = 1;
+pub const ACTION_TURN_RIGHT: i32 = 2;
+pub const ACTION_PICK_UP: i32 = 3;
+pub const ACTION_PUT_DOWN: i32 = 4;
+pub const ACTION_TOGGLE: i32 = 5;
+pub const NUM_ACTIONS: usize = 6;
+
+// --- directions: 0=up 1=right 2=down 3=left ---------------------------------
+pub const DIR_UP: usize = 0;
+pub const DIR_RIGHT: usize = 1;
+pub const DIR_DOWN: usize = 2;
+pub const DIR_LEFT: usize = 3;
+pub const DIR_DR: [i32; 4] = [-1, 0, 1, 0];
+pub const DIR_DC: [i32; 4] = [0, 1, 0, -1];
+
+// --- Table 2: goals ---------------------------------------------------------
+pub const GOAL_EMPTY: i32 = 0;
+pub const GOAL_AGENT_HOLD: i32 = 1;
+pub const GOAL_AGENT_ON_TILE: i32 = 2;
+pub const GOAL_AGENT_NEAR: i32 = 3;
+pub const GOAL_TILE_NEAR: i32 = 4;
+pub const GOAL_AGENT_ON_POSITION: i32 = 5;
+pub const GOAL_TILE_ON_POSITION: i32 = 6;
+pub const GOAL_TILE_NEAR_UP: i32 = 7;
+pub const GOAL_TILE_NEAR_RIGHT: i32 = 8;
+pub const GOAL_TILE_NEAR_DOWN: i32 = 9;
+pub const GOAL_TILE_NEAR_LEFT: i32 = 10;
+pub const GOAL_AGENT_NEAR_UP: i32 = 11;
+pub const GOAL_AGENT_NEAR_RIGHT: i32 = 12;
+pub const GOAL_AGENT_NEAR_DOWN: i32 = 13;
+pub const GOAL_AGENT_NEAR_LEFT: i32 = 14;
+pub const NUM_GOALS: usize = 15;
+
+// --- Table 3: rules ---------------------------------------------------------
+pub const RULE_EMPTY: i32 = 0;
+pub const RULE_AGENT_HOLD: i32 = 1;
+pub const RULE_AGENT_NEAR: i32 = 2;
+pub const RULE_TILE_NEAR: i32 = 3;
+pub const RULE_TILE_NEAR_UP: i32 = 4;
+pub const RULE_TILE_NEAR_RIGHT: i32 = 5;
+pub const RULE_TILE_NEAR_DOWN: i32 = 6;
+pub const RULE_TILE_NEAR_LEFT: i32 = 7;
+pub const RULE_AGENT_NEAR_UP: i32 = 8;
+pub const RULE_AGENT_NEAR_RIGHT: i32 = 9;
+pub const RULE_AGENT_NEAR_DOWN: i32 = 10;
+pub const RULE_AGENT_NEAR_LEFT: i32 = 11;
+pub const NUM_RULES: usize = 12;
+
+/// Encoding widths (paper §2.1).
+pub const RULE_ENC: usize = 7; // [id, a_t, a_c, b_t, b_c, c_t, c_c]
+pub const GOAL_ENC: usize = 5; // [id, a0, a1, a2, a3]
+
+/// A grid cell / object: (tile id, color id).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub struct Cell {
+    pub tile: i32,
+    pub color: i32,
+}
+
+impl Cell {
+    pub const fn new(tile: i32, color: i32) -> Self {
+        Cell { tile, color }
+    }
+}
+
+pub const FLOOR_CELL: Cell = Cell::new(TILE_FLOOR, COLOR_BLACK);
+pub const WALL_CELL: Cell = Cell::new(TILE_WALL, COLOR_GREY);
+pub const END_OF_MAP_CELL: Cell = Cell::new(TILE_END_OF_MAP, COLOR_END_OF_MAP);
+pub const UNSEEN_CELL: Cell = Cell::new(TILE_UNSEEN, COLOR_UNSEEN);
+pub const POCKET_EMPTY: Cell = Cell::new(TILE_EMPTY, COLOR_EMPTY);
+
+pub fn is_pickable(tile: i32) -> bool {
+    matches!(
+        tile,
+        TILE_BALL | TILE_SQUARE | TILE_PYRAMID | TILE_KEY | TILE_HEX
+            | TILE_STAR
+    )
+}
+
+pub fn is_walkable(tile: i32) -> bool {
+    matches!(tile, TILE_FLOOR | TILE_GOAL | TILE_DOOR_OPEN)
+}
+
+pub fn blocks_sight(tile: i32) -> bool {
+    matches!(
+        tile,
+        TILE_WALL | TILE_DOOR_CLOSED | TILE_DOOR_LOCKED | TILE_END_OF_MAP
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 pinned exactly as printed in the paper.
+    #[test]
+    fn id_tables_match_paper() {
+        assert_eq!(TILE_END_OF_MAP, 0);
+        assert_eq!(TILE_FLOOR, 3);
+        assert_eq!(TILE_WALL, 4);
+        assert_eq!(TILE_BALL, 5);
+        assert_eq!(TILE_GOAL, 8);
+        assert_eq!(TILE_KEY, 9);
+        assert_eq!(TILE_DOOR_LOCKED, 10);
+        assert_eq!(TILE_STAR, 14);
+        assert_eq!(COLOR_RED, 3);
+        assert_eq!(COLOR_PINK, 13);
+        assert_eq!(NUM_TILES, 15);
+        assert_eq!(NUM_COLORS, 14);
+    }
+
+    /// Tables 2-3 pinned.
+    #[test]
+    fn rule_goal_ids_match_paper() {
+        assert_eq!(GOAL_TILE_NEAR, 4);
+        assert_eq!(GOAL_AGENT_NEAR_LEFT, 14);
+        assert_eq!(RULE_TILE_NEAR, 3);
+        assert_eq!(RULE_AGENT_NEAR_LEFT, 11);
+        assert_eq!(NUM_GOALS, 15);
+        assert_eq!(NUM_RULES, 12);
+    }
+
+    #[test]
+    fn tile_predicates() {
+        assert!(is_pickable(TILE_KEY));
+        assert!(!is_pickable(TILE_WALL));
+        assert!(is_walkable(TILE_DOOR_OPEN));
+        assert!(!is_walkable(TILE_DOOR_CLOSED));
+        assert!(blocks_sight(TILE_DOOR_LOCKED));
+        assert!(!blocks_sight(TILE_FLOOR));
+    }
+
+    #[test]
+    fn generator_palettes_match_appendix_j() {
+        assert_eq!(GEN_COLORS.len(), 10);
+        assert_eq!(GEN_TILES.len(), 7);
+    }
+}

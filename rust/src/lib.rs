@@ -1,0 +1,28 @@
+//! xmgrid — reproduction of *XLand-MiniGrid: Scalable Meta-Reinforcement
+//! Learning Environments in JAX* (NeurIPS 2024) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! - [`env`] — the full grid-world engine in pure Rust: tiles, rules, goals,
+//!   observations, layouts, and the 38-environment registry. Serves as the
+//!   cross-validation oracle for the AOT-lowered JAX environment and as the
+//!   CPU-loop baseline (EnvPool-style) in the throughput benches.
+//! - [`benchgen`] — the procedural benchmark generator (paper §3, Table 4):
+//!   goal-rooted production-rule trees, branch pruning, distractors, and the
+//!   compressed benchmark store with load/sample/split APIs.
+//! - [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
+//!   (manifest-driven), compiles once, executes with device-resident
+//!   buffers (`execute_b`) so the hot loop never copies state to the host.
+//! - [`coordinator`] — the L3 contribution: vectorized env pool, rollout
+//!   collector, RL² PPO trainer (Anakin-style), evaluation harness
+//!   (25-trial / 20th-percentile protocol of §4.2), and the shard pool that
+//!   stands in for `jax.pmap` multi-device scaling.
+//! - [`render`] — ASCII renderer for interactive inspection.
+//! - [`util`] — offline-friendly substitutes for crates unavailable in this
+//!   environment: PRNG, arg parsing, stats, bench harness, property tests.
+
+pub mod benchgen;
+pub mod coordinator;
+pub mod env;
+pub mod render;
+pub mod runtime;
+pub mod util;

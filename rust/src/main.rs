@@ -1,0 +1,304 @@
+//! xmgrid CLI — the L3 launcher.
+//!
+//! Subcommands:
+//!   envs                         list the 38 registered environments
+//!   play                         random-policy episode with ASCII render
+//!   gen-benchmark                generate + store a benchmark (§3)
+//!   rollout                      fused random-policy throughput run
+//!   train                        RL² PPO training (Fig. 6/7 harness)
+//!   eval                         evaluation protocol on a benchmark
+//!   validate                     Rust-oracle vs HLO cross-check
+//!   artifacts                    list manifest artifacts
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use xmgrid::benchgen::store::load_benchmark;
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::{fmt_sps, CsvLog};
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::{EnvPool, TrainConfig, Trainer};
+use xmgrid::env::registry;
+use xmgrid::env::state::{reset, step, EnvOptions};
+use xmgrid::render::render_grid;
+use xmgrid::runtime::Runtime;
+use xmgrid::util::args::Args;
+use xmgrid::util::rng::Rng;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts-dir", "artifacts"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "envs" => cmd_envs(),
+        "play" => cmd_play(&args),
+        "gen-benchmark" => cmd_gen_benchmark(&args),
+        "rollout" => cmd_rollout(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "validate" => cmd_validate(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            println!(
+                "xmgrid — XLand-MiniGrid reproduction (rust+JAX+Pallas)\n\n\
+                 usage: xmgrid <command> [--options]\n\n\
+                 commands:\n\
+                 \x20 envs                                list environments\n\
+                 \x20 play --env NAME [--steps N]         ASCII episode\n\
+                 \x20 gen-benchmark --preset P --n N      generate benchmark\n\
+                 \x20 rollout --batch B [--chunks N]      throughput run\n\
+                 \x20 train --benchmark B --iters N       RL² PPO training\n\
+                 \x20 eval --benchmark B                  evaluation\n\
+                 \x20 validate                            oracle cross-check\n\
+                 \x20 artifacts                           list manifest"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_envs() -> Result<()> {
+    for name in registry::registered_environments() {
+        println!("{name}");
+    }
+    Ok(())
+}
+
+fn cmd_play(args: &Args) -> Result<()> {
+    let name = args.str_or("env", "MiniGrid-Empty-8x8");
+    let steps = args.usize_or("steps", 30);
+    let seed = args.u64_or("seed", 0);
+    let mut rng = Rng::new(seed);
+    let bp = registry::make(&name, &mut rng);
+    let ruleset = bp.ruleset.clone().unwrap_or_else(|| {
+        // XLand env: sample a trivial task
+        let (mut rs, _) =
+            generate_benchmark(&Preset::Trivial.config(), 1);
+        rs.pop().unwrap()
+    });
+    let (mut state, _) = reset(bp.base_grid, ruleset, bp.max_steps,
+                               rng.split(), EnvOptions::default());
+    println!("{}", render_grid(&state.grid,
+                               Some((state.agent_pos, state.agent_dir)),
+                               true));
+    let mut total = 0.0f32;
+    for i in 0..steps {
+        let a = rng.below(6) as i32;
+        let out = step(&mut state, a, EnvOptions::default());
+        total += out.reward;
+        if out.trial_done {
+            println!("--- trial done at step {i} (reward {:.3})",
+                     out.reward);
+        }
+    }
+    println!("{}", render_grid(&state.grid,
+                               Some((state.agent_pos, state.agent_dir)),
+                               true));
+    println!("total reward over {steps} random steps: {total:.3}");
+    Ok(())
+}
+
+fn cmd_gen_benchmark(args: &Args) -> Result<()> {
+    let preset_name = args.str_or("preset", "trivial");
+    let n = args.usize_or("n", 1000);
+    let preset = Preset::from_name(&preset_name)
+        .with_context(|| format!("unknown preset {preset_name}"))?;
+    let mut cfg = preset.config();
+    cfg.random_seed = args.u64_or("seed", cfg.random_seed);
+    let t0 = std::time::Instant::now();
+    let (rulesets, stats) = generate_benchmark(&cfg, n);
+    let bench = Benchmark {
+        name: format!("{preset_name}-{n}"),
+        rulesets,
+    };
+    let dir = xmgrid::benchgen::store::data_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{}.xmg.gz", bench.name));
+    let (raw, comp) = bench.save(&path)?;
+    let mean_rules: f64 = stats.iter().map(|s| s.num_rules as f64)
+        .sum::<f64>() / stats.len() as f64;
+    println!(
+        "generated {n} unique rulesets in {:.1}s (mean rules {mean_rules:.2}) \
+         -> {path:?} ({:.1} KiB raw, {:.1} KiB gz)",
+        t0.elapsed().as_secs_f64(), raw as f64 / 1024.0,
+        comp as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_rollout(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let batch = args.usize_or("batch", 1024);
+    let chunks = args.usize_or("chunks", 4);
+    let rolls = rt.manifest.of_kind("env_rollout");
+    let spec = rolls
+        .iter()
+        .find(|s| s.meta_usize("B").unwrap() == batch)
+        .or_else(|| rolls.first())
+        .context("no env_rollout artifacts; run `make artifacts`")?;
+    let fam = EnvFamily::from_spec(spec)?;
+    let t = spec.meta_usize("T")?;
+    println!("artifact {} (B={} T={t})", spec.name, fam.b);
+
+    let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let mut pool = EnvPool::new(&rt, fam, args.usize_or("rooms", 1))?;
+    let rulesets = pool.sample_rulesets(&bench, &mut rng);
+    pool.reset(&rulesets, &mut rng)?;
+
+    let t0 = std::time::Instant::now();
+    let mut total_steps = 0u64;
+    for c in 0..chunks {
+        let (reward, episodes, trials) = pool.rollout(&rt, t, &mut rng)?;
+        total_steps += (fam.b * t) as u64;
+        let sps = total_steps as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "chunk {c}: steps={} reward={reward:.1} episodes={episodes} \
+             trials={trials} cum-sps={}",
+            fam.b * t, fmt_sps(sps)
+        );
+    }
+    Ok(())
+}
+
+fn pick_train_artifact(rt: &Runtime, batch: usize) -> Result<String> {
+    let arts = rt.manifest.of_kind("train_iter");
+    let spec = arts
+        .iter()
+        .find(|s| s.meta_usize("B").unwrap() == batch)
+        .or_else(|| {
+            arts.iter().max_by_key(|s| s.meta_usize("B").unwrap())
+        })
+        .context("no train_iter artifacts; run `make artifacts`")?;
+    Ok(spec.name.clone())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
+    let iters = args.usize_or("iters", 50);
+    let artifact = match args.get("artifact") {
+        Some(a) => a.to_string(),
+        None => pick_train_artifact(&rt, args.usize_or("batch", 256))?,
+    };
+    let rooms = args.usize_or("rooms", 1);
+    let mut cfg = TrainConfig::default();
+    cfg.train_seed = args.u64_or("seed", cfg.train_seed);
+    cfg.task_resample_iters =
+        args.usize_or("resample", cfg.task_resample_iters);
+    let eval_every = args.usize_or("eval-every", 0);
+    let eval_art = rt
+        .manifest
+        .of_kind("eval_rollout")
+        .iter()
+        .map(|s| s.name.clone())
+        .next();
+
+    println!("training with {artifact} on {} ({} tasks)", bench.name,
+             bench.num_rulesets());
+    let mut trainer = Trainer::new(&rt, &artifact, rooms, cfg)?;
+    trainer.resample_tasks(&bench)?;
+
+    let csv_path = PathBuf::from(
+        args.str_or("log", "artifacts/train_log.csv"));
+    let mut log = CsvLog::create(&csv_path, &[
+        "iter", "env_steps", "loss", "pi_loss", "v_loss", "entropy",
+        "approx_kl", "reward_per_step", "trials", "sps",
+    ])?;
+
+    let t0 = std::time::Instant::now();
+    let mut env_steps = 0u64;
+    for i in 1..=iters {
+        if i > 1 && (i - 1) % trainer.cfg.task_resample_iters == 0 {
+            trainer.resample_tasks(&bench)?;
+        }
+        let m = trainer.train_iter()?;
+        env_steps += m.env_steps;
+        let sps = env_steps as f64 / t0.elapsed().as_secs_f64();
+        log.row(&[
+            i.to_string(), env_steps.to_string(),
+            format!("{:.4}", m.total_loss), format!("{:.4}", m.pi_loss),
+            format!("{:.4}", m.v_loss), format!("{:.4}", m.entropy),
+            format!("{:.5}", m.approx_kl),
+            format!("{:.5}", m.reward_sum / m.env_steps as f32),
+            m.trials.to_string(), format!("{sps:.0}"),
+        ])?;
+        if i % 10 == 0 || i == iters {
+            println!(
+                "iter {i:>4} steps {env_steps:>9} loss {:+.4} ent {:.3} \
+                 r/step {:.4} trials {:>5} sps {}",
+                m.total_loss, m.entropy,
+                m.reward_sum / m.env_steps as f32, m.trials, fmt_sps(sps)
+            );
+        }
+        if eval_every > 0 && i % eval_every == 0 {
+            if let Some(ea) = &eval_art {
+                let st = trainer.evaluate(&rt, ea, &bench, rooms)?;
+                println!(
+                    "  eval: return mean {:.3} P20 {:.3} per-trial {:.3} \
+                     (tasks {})",
+                    st.return_mean, st.return_p20, st.per_trial_mean,
+                    st.num_tasks
+                );
+            }
+        }
+    }
+    println!("log written to {csv_path:?}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
+    let artifact = pick_train_artifact(&rt, args.usize_or("batch", 256))?;
+    let rooms = args.usize_or("rooms", 1);
+    let mut trainer =
+        Trainer::new(&rt, &artifact, rooms, TrainConfig::default())?;
+    trainer.resample_tasks(&bench)?;
+    let eval_name = rt
+        .manifest
+        .of_kind("eval_rollout")
+        .iter()
+        .map(|s| s.name.clone())
+        .next()
+        .context("no eval_rollout artifact")?;
+    let st = trainer.evaluate(&rt, &eval_name, &bench, rooms)?;
+    println!(
+        "eval on {}: return mean {:.3} | P20 {:.3} | per-trial mean {:.3} \
+         | per-trial P20 {:.3} | trials/task {:.1} | tasks {}",
+        bench.name, st.return_mean, st.return_p20, st.per_trial_mean,
+        st.per_trial_p20, st.trials_mean, st.num_tasks
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    // thin wrapper over the cross-validation invariants, for manual runs
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let steps = rt.manifest.of_kind("env_step");
+    if steps.is_empty() {
+        bail!("no env_step artifacts in manifest");
+    }
+    println!("{} env_step artifacts available; run `cargo test --test \
+              cross_validation` for the full transition-level check",
+             steps.len());
+    for s in steps {
+        let art = rt.load(&s.name)?;
+        println!("  {} compiled ok ({} inputs, {} outputs)", s.name,
+                 art.spec.inputs.len(), art.spec.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    for a in &rt.manifest.artifacts {
+        println!("{:<50} kind={:<12} ins={} outs={}", a.name, a.kind(),
+                 a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}

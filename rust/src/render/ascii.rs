@@ -1,0 +1,127 @@
+//! ASCII renderer: one glyph per tile, ANSI color per color id.
+
+use crate::env::grid::Grid;
+use crate::env::observation::Obs;
+use crate::env::types::*;
+
+fn glyph(tile: i32) -> char {
+    match tile {
+        TILE_END_OF_MAP => ' ',
+        TILE_UNSEEN => '?',
+        TILE_EMPTY => ' ',
+        TILE_FLOOR => '.',
+        TILE_WALL => '#',
+        TILE_BALL => 'o',
+        TILE_SQUARE => '□',
+        TILE_PYRAMID => '^',
+        TILE_GOAL => 'G',
+        TILE_KEY => 'k',
+        TILE_DOOR_LOCKED => 'L',
+        TILE_DOOR_CLOSED => 'D',
+        TILE_DOOR_OPEN => 'd',
+        TILE_HEX => 'h',
+        TILE_STAR => '*',
+        _ => '!',
+    }
+}
+
+fn ansi(color: i32) -> &'static str {
+    match color {
+        COLOR_RED => "\x1b[31m",
+        COLOR_GREEN => "\x1b[32m",
+        COLOR_BLUE => "\x1b[34m",
+        COLOR_PURPLE => "\x1b[35m",
+        COLOR_YELLOW => "\x1b[33m",
+        COLOR_GREY => "\x1b[90m",
+        COLOR_ORANGE => "\x1b[38;5;208m",
+        COLOR_WHITE => "\x1b[97m",
+        COLOR_BROWN => "\x1b[38;5;94m",
+        COLOR_PINK => "\x1b[38;5;205m",
+        _ => "",
+    }
+}
+
+const RESET: &str = "\x1b[0m";
+const AGENT_GLYPHS: [char; 4] = ['▲', '▶', '▼', '◀'];
+
+/// Render the full grid; the agent (if given) overlays its cell.
+pub fn render_grid(grid: &Grid, agent: Option<((i32, i32), i32)>,
+                   color: bool) -> String {
+    let mut out = String::new();
+    for r in 0..grid.h {
+        for c in 0..grid.w {
+            if let Some((pos, dir)) = agent {
+                if pos == (r as i32, c as i32) {
+                    out.push(AGENT_GLYPHS[(dir.rem_euclid(4)) as usize]);
+                    continue;
+                }
+            }
+            let cell = grid.get(r, c);
+            if color {
+                out.push_str(ansi(cell.color));
+                out.push(glyph(cell.tile));
+                out.push_str(RESET);
+            } else {
+                out.push(glyph(cell.tile));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render an egocentric observation (agent at bottom-center).
+pub fn render_obs(obs: &Obs, color: bool) -> String {
+    let mut out = String::new();
+    for r in 0..obs.v {
+        for c in 0..obs.v {
+            if r == obs.v - 1 && c == obs.v / 2 {
+                out.push('▲');
+                continue;
+            }
+            let cell = obs.get(r, c);
+            if color {
+                out.push_str(ansi(cell.color));
+                out.push(glyph(cell.tile));
+                out.push_str(RESET);
+            } else {
+                out.push(glyph(cell.tile));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::observation::observe;
+
+    #[test]
+    fn grid_render_dimensions() {
+        let g = Grid::empty_room(5, 7);
+        let s = render_grid(&g, None, false);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines.iter().all(|l| l.chars().count() == 7));
+        assert!(s.starts_with("#######"));
+    }
+
+    #[test]
+    fn agent_overlay() {
+        let g = Grid::empty_room(5, 5);
+        let s = render_grid(&g, Some(((2, 2), 1)), false);
+        assert!(s.contains('▶'));
+    }
+
+    #[test]
+    fn obs_render_marks_agent() {
+        let g = Grid::empty_room(9, 9);
+        let obs = observe(&g, (4, 4), 0, 5, true);
+        let s = render_obs(&obs, false);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[4].chars().nth(2), Some('▲'));
+    }
+}

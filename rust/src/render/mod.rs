@@ -1,0 +1,7 @@
+//! ASCII rendering for interactive inspection (`xmgrid play`,
+//! examples/quickstart). The RGB rendering path lives in the
+//! `render_rgb_*` AOT artifacts (App. H reproduction).
+
+pub mod ascii;
+
+pub use ascii::{render_grid, render_obs};

@@ -1,0 +1,253 @@
+//! Manifest parser for `artifacts/manifest.txt` — the line-oriented
+//! contract written by `python/compile/aot.py` (no JSON dependency).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type crossing the PJRT boundary.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DType {
+    I32,
+    U32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "f32" => DType::F32,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub meta: HashMap<String, String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("artifact {} missing meta {key}",
+                                     self.name))?
+            .parse()
+            .with_context(|| format!("bad meta {key}"))
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    /// `name:d0,d1;...` parameter shape table from `paramshapes`.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.splitn(2, ' ');
+            let tag = it.next().unwrap();
+            let rest = it.next().unwrap_or("");
+            match tag {
+                "paramshapes" => {
+                    for part in rest.split(';') {
+                        let (name, dims) = part
+                            .split_once(':')
+                            .with_context(|| format!("bad paramshapes: {part}"))?;
+                        let dims = if dims.is_empty() {
+                            vec![]
+                        } else {
+                            dims.split(',')
+                                .map(|d| d.parse().context("bad dim"))
+                                .collect::<Result<Vec<usize>>>()?
+                        };
+                        m.param_shapes.push((name.to_string(), dims));
+                    }
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("line {lineno}: nested artifact");
+                    }
+                    let (name, file) = rest
+                        .split_once(' ')
+                        .with_context(|| format!("line {lineno}: bad artifact"))?;
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file: file.to_string(),
+                        meta: HashMap::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "meta" => {
+                    let a = cur.as_mut().context("meta outside artifact")?;
+                    let (k, v) = rest.split_once(' ')
+                        .with_context(|| format!("line {lineno}: bad meta"))?;
+                    a.meta.insert(k.to_string(), v.to_string());
+                }
+                "in" | "out" => {
+                    let a = cur.as_mut().context("io outside artifact")?;
+                    let mut parts = rest.split(' ');
+                    let _idx = parts.next().context("missing idx")?;
+                    let dtype = DType::parse(parts.next().context("dtype")?)?;
+                    let dims_s = parts.next().unwrap_or("");
+                    let dims = if dims_s.is_empty() {
+                        vec![]
+                    } else {
+                        dims_s
+                            .split(',')
+                            .map(|d| d.parse().context("bad dim"))
+                            .collect::<Result<Vec<usize>>>()?
+                    };
+                    let spec = TensorSpec { dtype, dims };
+                    if tag == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "end" => {
+                    let a = cur.take().context("end outside artifact")?;
+                    m.artifacts.push(a);
+                }
+                other => bail!("line {lineno}: unknown tag {other}"),
+            }
+        }
+        if cur.is_some() {
+            bail!("unterminated artifact entry");
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?}; run `make artifacts` first")
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| {
+                let names: Vec<_> =
+                    self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                format!("artifact {name} not in manifest; have: {names:?}")
+            })
+    }
+
+    /// All artifacts of a given kind (e.g. "env_rollout").
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind() == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+paramshapes w1:4,8;b1:8
+artifact env_step_g9x9_r3_b8 env_step_g9x9_r3_b8.hlo.txt
+meta kind env_step
+meta H 9
+meta B 8
+in 0 i32 8,9,9,2
+in 1 u32 8,2
+out 0 i32 8
+out 1 f32 8
+end
+artifact policy_step_b8 policy_step_b8.hlo.txt
+meta kind policy_step
+in 0 f32 15,8
+out 0 i32 8
+end
+";
+
+    #[test]
+    fn parses_artifacts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("env_step_g9x9_r3_b8").unwrap();
+        assert_eq!(a.kind(), "env_step");
+        assert_eq!(a.meta_usize("H").unwrap(), 9);
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![8, 9, 9, 2]);
+        assert_eq!(a.inputs[1].dtype, DType::U32);
+        assert_eq!(a.outputs[1].dtype, DType::F32);
+    }
+
+    #[test]
+    fn parses_param_shapes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.param_shapes.len(), 2);
+        assert_eq!(m.param_shapes[0], ("w1".to_string(), vec![4, 8]));
+    }
+
+    #[test]
+    fn of_kind_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.of_kind("policy_step").len(), 1);
+        assert_eq!(m.of_kind("nope").len(), 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line").is_err());
+        assert!(Manifest::parse("artifact x").is_err());
+        assert!(Manifest::parse("artifact a b.hlo\nmeta kind k").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = format!("{:#}", m.find("missing").unwrap_err());
+        assert!(err.contains("env_step_g9x9_r3_b8"));
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { dtype: DType::I32, dims: vec![8, 9, 9, 2] };
+        assert_eq!(t.num_elements(), 8 * 9 * 9 * 2);
+        let s = TensorSpec { dtype: DType::F32, dims: vec![] };
+        assert_eq!(s.num_elements(), 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! PJRT runtime: loads AOT artifacts (HLO text), compiles them once on the
+//! CPU PJRT client, and executes them from the L3 hot path.
+//!
+//! Interchange format is HLO *text* (see DESIGN.md / aot_recipe): the
+//! image's xla_extension 0.5.1 rejects jax>=0.5 serialized protos, while the
+//! text parser reassigns instruction ids and round-trips cleanly.
+
+pub mod manifest;
+pub mod state;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::I32(_) => DType::I32,
+            Tensor::U32(_) => DType::U32,
+            Tensor::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::I32(v) => v.len(),
+            Tensor::U32(v) => v.len(),
+            Tensor::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> &[u32] {
+        match self {
+            Tensor::U32(v) => v,
+            _ => panic!("tensor is not u32"),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_i32(&self) -> i32 {
+        self.as_i32()[0]
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        self.as_f32()[0]
+    }
+
+    fn bytes(&self) -> &[u8] {
+        unsafe {
+            match self {
+                Tensor::I32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8, v.len() * 4),
+                Tensor::U32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8, v.len() * 4),
+                Tensor::F32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8, v.len() * 4),
+            }
+        }
+    }
+
+    fn to_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
+        let ty = match self {
+            Tensor::I32(_) => xla::ElementType::S32,
+            Tensor::U32(_) => xla::ElementType::U32,
+            Tensor::F32(_) => xla::ElementType::F32,
+        };
+        let expect: usize = dims.iter().product();
+        if expect != self.len() {
+            bail!("tensor has {} elements, dims {:?} want {expect}",
+                  self.len(), dims);
+        }
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty, dims, self.bytes())?)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType) -> Result<Tensor> {
+        Ok(match dtype {
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+            DType::U32 => Tensor::U32(lit.to_vec::<u32>()?),
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host tensors; returns host tensors (aot.py lowers with
+    /// `return_tuple=True`, so the single result buffer is untupled here).
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!("{}: got {} inputs, want {}", self.spec.name,
+                  inputs.len(), self.spec.inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in
+            inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            if t.dtype() != spec.dtype {
+                bail!("{}: input {i} dtype {:?} want {:?}", self.spec.name,
+                      t.dtype(), spec.dtype);
+            }
+            literals.push(t.to_literal(&spec.dims).with_context(|| {
+                format!("{}: input {i}", self.spec.name)
+            })?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: got {} outputs, want {}", self.spec.name,
+                  parts.len(), self.spec.outputs.len());
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec.dtype))
+            .collect()
+    }
+}
+
+/// Artifact loader + compile cache around one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let artifact = Arc::new(Artifact { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// Initial network parameters written by aot.py (`params_init.bin`,
+    /// f32, concatenated in `paramshapes` order).
+    pub fn load_params_init(&self) -> Result<Vec<Tensor>> {
+        let path = self.dir.join("params_init.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let mut params = Vec::new();
+        let mut off = 0usize;
+        for (name, dims) in &self.manifest.param_shapes {
+            let n: usize = dims.iter().product();
+            let end = off + n * 4;
+            if end > bytes.len() {
+                bail!("params_init.bin truncated at {name}");
+            }
+            let vals: Vec<f32> = bytes[off..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            params.push(Tensor::F32(vals));
+            off = end;
+        }
+        if off != bytes.len() {
+            bail!("params_init.bin has trailing bytes");
+        }
+        Ok(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors_and_bytes() {
+        let t = Tensor::I32(vec![1, 2, 3]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dtype(), DType::I32);
+        assert_eq!(t.as_i32(), &[1, 2, 3]);
+        assert_eq!(t.bytes().len(), 12);
+        let f = Tensor::F32(vec![1.5]);
+        assert_eq!(f.scalar_f32(), 1.5);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::F32(vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal(&[2, 2]).unwrap();
+        let back = Tensor::from_literal(&lit, DType::F32).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_dims_must_match() {
+        let t = Tensor::I32(vec![1, 2, 3]);
+        assert!(t.to_literal(&[2, 2]).is_err());
+    }
+}

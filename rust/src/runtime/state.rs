@@ -1,0 +1,214 @@
+//! Batched env-state packing: Rust structs <-> the 11 flat state tensors of
+//! the AOT boundary (`aot.STATE_FIELDS` order).
+//!
+//! Field order: base_grid, grid, agent_pos, agent_dir, pocket, rules, goal,
+//! init_tiles, step_count, key, max_steps.
+
+use anyhow::{ensure, Result};
+
+use crate::env::goals::Goal;
+use crate::env::grid::Grid;
+use crate::env::rules::Rule;
+use crate::env::state::{Ruleset, State};
+use crate::env::types::{GOAL_ENC, RULE_ENC};
+
+use super::Tensor;
+
+pub const NUM_STATE_FIELDS: usize = 11;
+
+/// Encode a ruleset into padded arrays (rules [MR,7], goal [5],
+/// init [MI,2]).
+pub fn encode_ruleset(rs: &Ruleset, mr: usize, mi: usize)
+                      -> Result<(Vec<i32>, Vec<i32>, Vec<i32>)> {
+    ensure!(rs.rules.len() <= mr,
+            "ruleset has {} rules > artifact capacity {mr}",
+            rs.rules.len());
+    ensure!(rs.init_tiles.len() <= mi,
+            "ruleset has {} init objects > artifact capacity {mi}",
+            rs.init_tiles.len());
+    let mut rules = vec![0i32; mr * RULE_ENC];
+    for (i, r) in rs.rules.iter().enumerate() {
+        rules[i * RULE_ENC..(i + 1) * RULE_ENC].copy_from_slice(&r.0);
+    }
+    let goal = rs.goal.0.to_vec();
+    let mut init = vec![0i32; mi * 2];
+    for (i, c) in rs.init_tiles.iter().enumerate() {
+        init[i * 2] = c.tile;
+        init[i * 2 + 1] = c.color;
+    }
+    Ok((rules, goal, init))
+}
+
+/// Decode padded arrays back into a ruleset (zero rows are padding).
+pub fn decode_ruleset(rules: &[i32], goal: &[i32], init: &[i32]) -> Ruleset {
+    let rules = rules
+        .chunks_exact(RULE_ENC)
+        .filter(|c| c[0] != 0)
+        .map(|c| Rule(c.try_into().unwrap()))
+        .collect();
+    let mut g = [0i32; GOAL_ENC];
+    g.copy_from_slice(&goal[..GOAL_ENC]);
+    let init = init
+        .chunks_exact(2)
+        .filter(|c| c[0] != 0)
+        .map(|c| crate::env::Cell::new(c[0], c[1]))
+        .collect();
+    Ruleset { goal: Goal(g), rules, init_tiles: init }
+}
+
+/// Inputs for an `env_reset` artifact: one (base grid, ruleset, max_steps)
+/// triple per env slot, plus PRNG key material.
+pub fn reset_inputs(grids: &[Grid], rulesets: &[&Ruleset],
+                    max_steps: &[i32], seeds: &[[u32; 2]], mr: usize,
+                    mi: usize) -> Result<Vec<Tensor>> {
+    let b = grids.len();
+    ensure!(rulesets.len() == b && max_steps.len() == b && seeds.len() == b,
+            "batch size mismatch");
+    let mut key = Vec::with_capacity(b * 2);
+    let mut base = Vec::new();
+    let mut rules = Vec::new();
+    let mut goal = Vec::new();
+    let mut init = Vec::new();
+    for i in 0..b {
+        key.extend_from_slice(&seeds[i]);
+        base.extend_from_slice(&grids[i].to_flat());
+        let (r, g, it) = encode_ruleset(rulesets[i], mr, mi)?;
+        rules.extend_from_slice(&r);
+        goal.extend_from_slice(&g);
+        init.extend_from_slice(&it);
+    }
+    Ok(vec![
+        Tensor::U32(key),
+        Tensor::I32(base),
+        Tensor::I32(rules),
+        Tensor::I32(goal),
+        Tensor::I32(init),
+        Tensor::I32(max_steps.to_vec()),
+    ])
+}
+
+/// Pack a batch of pure-Rust env states into the 11 state tensors (used by
+/// the cross-validation tests; `keys` supplies the JAX-side PRNG state).
+pub fn pack_states(states: &[State], mr: usize, mi: usize,
+                   keys: &[[u32; 2]]) -> Result<Vec<Tensor>> {
+    let b = states.len();
+    ensure!(keys.len() == b, "need one key per env");
+    let mut base = Vec::new();
+    let mut grid = Vec::new();
+    let mut pos = Vec::with_capacity(b * 2);
+    let mut dir = Vec::with_capacity(b);
+    let mut pocket = Vec::with_capacity(b * 2);
+    let mut rules = Vec::new();
+    let mut goal = Vec::new();
+    let mut init = Vec::new();
+    let mut step_count = Vec::with_capacity(b);
+    let mut key = Vec::with_capacity(b * 2);
+    let mut max_steps = Vec::with_capacity(b);
+    for (s, k) in states.iter().zip(keys) {
+        base.extend_from_slice(&s.base_grid.to_flat());
+        grid.extend_from_slice(&s.grid.to_flat());
+        pos.push(s.agent_pos.0);
+        pos.push(s.agent_pos.1);
+        dir.push(s.agent_dir);
+        pocket.push(s.pocket.tile);
+        pocket.push(s.pocket.color);
+        let (r, g, it) = encode_ruleset(&s.ruleset, mr, mi)?;
+        rules.extend_from_slice(&r);
+        goal.extend_from_slice(&g);
+        init.extend_from_slice(&it);
+        step_count.push(s.step_count);
+        key.extend_from_slice(k);
+        max_steps.push(s.max_steps);
+    }
+    Ok(vec![
+        Tensor::I32(base),
+        Tensor::I32(grid),
+        Tensor::I32(pos),
+        Tensor::I32(dir),
+        Tensor::I32(pocket),
+        Tensor::I32(rules),
+        Tensor::I32(goal),
+        Tensor::I32(init),
+        Tensor::I32(step_count),
+        Tensor::U32(key),
+        Tensor::I32(max_steps),
+    ])
+}
+
+/// View of one env's slice of unpacked state tensors.
+pub struct StateView {
+    pub grid: Grid,
+    pub agent_pos: (i32, i32),
+    pub agent_dir: i32,
+    pub pocket: crate::env::Cell,
+    pub step_count: i32,
+}
+
+/// Extract env `i`'s state from the 11 state tensors.
+pub fn state_view(tensors: &[Tensor], i: usize, h: usize, w: usize)
+                  -> StateView {
+    let cells = h * w * 2;
+    let grid = Grid::from_flat(
+        h, w, &tensors[1].as_i32()[i * cells..(i + 1) * cells]);
+    let pos = &tensors[2].as_i32()[i * 2..(i + 1) * 2];
+    let dir = tensors[3].as_i32()[i];
+    let pocket = &tensors[4].as_i32()[i * 2..(i + 1) * 2];
+    StateView {
+        grid,
+        agent_pos: (pos[0], pos[1]),
+        agent_dir: dir,
+        pocket: crate::env::Cell::new(pocket[0], pocket[1]),
+        step_count: tensors[8].as_i32()[i],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::types::*;
+    use crate::env::Cell;
+
+    fn sample_ruleset() -> Ruleset {
+        Ruleset {
+            goal: Goal::agent_hold(Cell::new(TILE_BALL, COLOR_RED)),
+            rules: vec![Rule::tile_near(
+                Cell::new(TILE_BALL, COLOR_RED),
+                Cell::new(TILE_SQUARE, COLOR_BLUE),
+                Cell::new(TILE_HEX, COLOR_PINK),
+            )],
+            init_tiles: vec![Cell::new(TILE_BALL, COLOR_RED),
+                             Cell::new(TILE_SQUARE, COLOR_BLUE)],
+        }
+    }
+
+    #[test]
+    fn ruleset_encode_decode_roundtrip() {
+        let rs = sample_ruleset();
+        let (r, g, i) = encode_ruleset(&rs, 4, 6).unwrap();
+        assert_eq!(r.len(), 4 * RULE_ENC);
+        assert_eq!(i.len(), 12);
+        let back = decode_ruleset(&r, &g, &i);
+        assert_eq!(back, rs);
+    }
+
+    #[test]
+    fn capacity_overflow_rejected() {
+        let rs = sample_ruleset();
+        assert!(encode_ruleset(&rs, 0, 6).is_err());
+        assert!(encode_ruleset(&rs, 4, 1).is_err());
+    }
+
+    #[test]
+    fn reset_inputs_shapes() {
+        let g = Grid::empty_room(9, 9);
+        let rs = sample_ruleset();
+        let inputs = reset_inputs(&[g.clone(), g], &[&rs, &rs],
+                                  &[243, 243], &[[0, 1], [2, 3]], 3, 6)
+            .unwrap();
+        assert_eq!(inputs.len(), 6);
+        assert_eq!(inputs[0].len(), 4); // keys 2x2
+        assert_eq!(inputs[1].len(), 2 * 9 * 9 * 2);
+        assert_eq!(inputs[2].len(), 2 * 3 * RULE_ENC);
+        assert_eq!(inputs[5].as_i32(), &[243, 243]);
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal CLI argument parser (no `clap` offline): `--key value`,
+//! `--flag`, and positional arguments.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.opts.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{name}: {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{name}: {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{name}: {v}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--batches 1,16,256`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().expect("bad list item"))
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = Args::parse(&sv(&["--batch", "64", "--name", "x"]));
+        assert_eq!(a.usize_or("batch", 0), 64);
+        assert_eq!(a.str_or("name", ""), "x");
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&sv(&["--batch=128"]));
+        assert_eq!(a.usize_or("batch", 0), 128);
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = Args::parse(&sv(&["train", "--fast", "--n", "3"]));
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&sv(&["--quick"]));
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--batches", "1,2,8"]));
+        assert_eq!(a.usize_list_or("batches", &[]), vec![1, 2, 8]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[]);
+        assert_eq!(a.usize_or("missing", 42), 42);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert!(!a.flag("missing"));
+    }
+}

@@ -1,0 +1,81 @@
+//! Bench harness (no `criterion` offline): warmup + repeated timed runs,
+//! reporting the *minimum* across repeats — the paper's own protocol
+//! ("taking the minimum value among multiple repeats", §4.1).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per invocation, minimum over repeats
+    pub min_secs: f64,
+    pub mean_secs: f64,
+    pub repeats: usize,
+}
+
+impl BenchResult {
+    /// steps/second given `work` units per invocation.
+    pub fn throughput(&self, work: usize) -> f64 {
+        work as f64 / self.min_secs
+    }
+}
+
+/// Time `f` (which performs one full invocation of the workload).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, repeats: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        min_secs: min,
+        mean_secs: mean,
+        repeats,
+    }
+}
+
+/// Pretty-print a steps-per-second table row (log-log figures in the paper
+/// become rows here; plotting is left to the reader's tooling).
+pub fn report_sps(label: &str, envs: usize, steps: usize, r: &BenchResult) {
+    let sps = (envs * steps) as f64 / r.min_secs;
+    println!(
+        "{label:<40} envs={envs:<6} steps={steps:<6} \
+         min={:>9.4}s  sps={sps:>12.0}",
+        r.min_secs
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_times() {
+        let mut count = 0;
+        let r = bench("noop", 2, 5, || {
+            count += 1;
+        });
+        assert_eq!(count, 7); // warmup + repeats
+        assert_eq!(r.repeats, 5);
+        assert!(r.min_secs >= 0.0);
+        assert!(r.mean_secs >= r.min_secs);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            min_secs: 0.5,
+            mean_secs: 0.5,
+            repeats: 1,
+        };
+        assert_eq!(r.throughput(100), 200.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Self-contained utilities replacing crates that are unavailable offline
+//! (rand, clap, criterion, proptest, serde_json).
+
+pub mod args;
+pub mod bench;
+pub mod rng;
+pub mod stats;
+
+/// Lightweight property-test driver: runs `f` against `n` seeded RNGs and
+/// reports the failing seed, so failures reproduce deterministically.
+pub fn property_test<F: Fn(&mut rng::Rng)>(name: &str, n: u64, f: F) {
+    for seed in 0..n {
+        let mut rng = rng::Rng::new(0xC0FFEE ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Statistics helpers for the evaluation protocol (§4.2: return mean and
+//! 20th percentile over evaluation tasks) and for bench reporting.
+
+/// Percentile with linear interpolation (numpy 'linear' method), so the
+/// "20th percentile" matches the paper's evaluation metric.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    assert!(!values.is_empty(), "percentile of empty slice");
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+pub fn std_dev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    let var = values.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (values.len() - 1) as f64;
+    var.sqrt()
+}
+
+pub fn min(values: &[f64]) -> f64 {
+    values.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(values: &[f64]) -> f64 {
+    values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Histogram over integer values (used by the Fig. 4 rule-count
+/// distribution bench).
+pub fn int_histogram(values: &[usize]) -> Vec<(usize, usize)> {
+    let mut counts = std::collections::BTreeMap::new();
+    for &v in values {
+        *counts.entry(v).or_insert(0usize) += 1;
+    }
+    counts.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_linear_interp() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&v, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        // numpy.percentile([1,2,3,4], 20) == 1.6
+        assert!((percentile(&v, 20.0) - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 20.0), 7.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&v) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&v) - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = int_histogram(&[1, 1, 2, 5, 5, 5]);
+        assert_eq!(h, vec![(1, 2), (2, 1), (5, 3)]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Cross-validation: the pure-Rust environment oracle vs the AOT-lowered
+//! JAX environment, executed through PJRT.
+//!
+//! This is the repository's core correctness claim: two independent
+//! implementations of the paper's semantics (Tables 1-3, §2) agree
+//! transition-for-transition. Requires `make artifacts` (quick or full).
+
+use std::path::Path;
+
+use xmgrid::env::goals::Goal;
+use xmgrid::env::rules::Rule;
+use xmgrid::env::state::{EnvOptions, Ruleset, State};
+use xmgrid::env::types::*;
+use xmgrid::env::{Cell, Grid};
+use xmgrid::runtime::state::{pack_states, state_view, NUM_STATE_FIELDS};
+use xmgrid::runtime::{Runtime, Tensor};
+use xmgrid::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::new(&dir).expect("run `make artifacts` before cargo test")
+}
+
+/// Smallest-batch env_step artifact in the manifest.
+fn smallest_step(rt: &Runtime) -> (String, usize, usize, usize, usize,
+                                   usize) {
+    let mut specs = rt.manifest.of_kind("env_step");
+    specs.sort_by_key(|s| s.meta_usize("B").unwrap());
+    let s = specs.first().expect("no env_step artifact in manifest");
+    (
+        s.name.clone(),
+        s.meta_usize("H").unwrap(),
+        s.meta_usize("W").unwrap(),
+        s.meta_usize("MR").unwrap(),
+        s.meta_usize("MI").unwrap(),
+        s.meta_usize("B").unwrap(),
+    )
+}
+
+/// Build a random mid-episode state with objects, rules and a goal that
+/// exercise the full rule machinery. Deterministic per seed.
+fn random_state(h: usize, w: usize, mr: usize, mi: usize, seed: u64)
+                -> State {
+    let mut rng = Rng::new(seed);
+    let base = Grid::empty_room(h, w);
+    let obj = |rng: &mut Rng| {
+        Cell::new(GEN_TILES[rng.below(6)], GEN_COLORS[rng.below(10)])
+    };
+    let a = obj(&mut rng);
+    let b = obj(&mut rng);
+    let c = obj(&mut rng);
+    let mut rules = vec![Rule::tile_near(a, b, c),
+                         Rule::agent_near(c, obj(&mut rng))];
+    rules.truncate(mr);
+    let goal = Goal::agent_near(c);
+    let mut init = vec![a, b];
+    init.truncate(mi);
+    let ruleset = Ruleset { goal, rules, init_tiles: init };
+
+    let (mut state, _) = xmgrid::env::reset(
+        base, ruleset, 243.min(3 * (h * w) as i32), Rng::new(seed ^ 0xF00),
+        EnvOptions::default());
+    // scatter some extra objects for richer transitions
+    for _ in 0..3 {
+        let r = 1 + rng.below(h - 2);
+        let cpos = 1 + rng.below(w - 2);
+        if state.grid.get(r, cpos).tile == TILE_FLOOR {
+            state.grid.set(r, cpos, obj(&mut rng));
+        }
+    }
+    state
+}
+
+#[test]
+fn rust_and_hlo_step_agree_over_random_walks() {
+    let rt = runtime();
+    let (name, h, w, mr, mi, b) = smallest_step(&rt);
+    let art = rt.load(&name).unwrap();
+    let opts = EnvOptions::default();
+
+    let mut states: Vec<State> =
+        (0..b).map(|i| random_state(h, w, mr, mi, 1000 + i as u64)).collect();
+    let keys: Vec<[u32; 2]> = (0..b).map(|i| [7, i as u32]).collect();
+    let mut action_rng = Rng::new(99);
+
+    for step_i in 0..40 {
+        let actions: Vec<i32> =
+            (0..b).map(|_| action_rng.below(6) as i32).collect();
+
+        let mut inputs = pack_states(&states, mr, mi, &keys).unwrap();
+        inputs.push(Tensor::I32(actions.clone()));
+        let out = art.execute(&inputs).unwrap();
+
+        // rust oracle steps
+        let rust_outs: Vec<_> = states
+            .iter_mut()
+            .zip(&actions)
+            .map(|(s, &a)| xmgrid::env::step(s, a, opts))
+            .collect();
+
+        let obs_t = &out[NUM_STATE_FIELDS];
+        let reward_t = out[NUM_STATE_FIELDS + 1].as_f32();
+        let done_t = out[NUM_STATE_FIELDS + 2].as_i32();
+        let trial_t = out[NUM_STATE_FIELDS + 3].as_i32();
+
+        for i in 0..b {
+            let r = &rust_outs[i];
+            assert_eq!(reward_t[i], r.reward,
+                       "step {step_i} env {i}: reward");
+            assert_eq!(done_t[i] != 0, r.done, "step {step_i} env {i}: done");
+            assert_eq!(trial_t[i] != 0, r.trial_done,
+                       "step {step_i} env {i}: trial_done");
+            if !r.trial_done {
+                // deterministic transition: full state must match exactly
+                // (trial resets draw from different PRNGs, skip those)
+                let view = state_view(&out[..NUM_STATE_FIELDS], i, h, w);
+                assert_eq!(view.grid, states[i].grid,
+                           "step {step_i} env {i}: grid");
+                assert_eq!(view.agent_pos, states[i].agent_pos,
+                           "step {step_i} env {i}: agent pos");
+                assert_eq!(view.agent_dir, states[i].agent_dir,
+                           "step {step_i} env {i}: agent dir");
+                assert_eq!(view.pocket, states[i].pocket,
+                           "step {step_i} env {i}: pocket");
+                assert_eq!(view.step_count, states[i].step_count,
+                           "step {step_i} env {i}: step count");
+                // observation equality
+                let v = 5usize;
+                let o = &obs_t.as_i32()[i * v * v * 2..(i + 1) * v * v * 2];
+                assert_eq!(o, r.obs.to_flat().as_slice(),
+                           "step {step_i} env {i}: obs");
+            } else {
+                // after a trial reset both sides must still satisfy the
+                // placement invariants
+                let view = state_view(&out[..NUM_STATE_FIELDS], i, h, w);
+                for cell in &states[i].ruleset.init_tiles {
+                    assert_eq!(
+                        view.grid
+                            .iter_cells()
+                            .filter(|(_, _, cc)| cc == cell)
+                            .count(),
+                        1,
+                        "step {step_i} env {i}: init object re-placed once"
+                    );
+                }
+                // resync rust state to the HLO state so the walk continues
+                states[i].grid = view.grid;
+                states[i].agent_pos = view.agent_pos;
+                states[i].agent_dir = view.agent_dir;
+                states[i].pocket = view.pocket;
+                states[i].step_count = view.step_count;
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_reset_respects_placement_invariants() {
+    let rt = runtime();
+    let (_, h, w, mr, mi, b) = smallest_step(&rt);
+    let reset_name = format!("env_reset_g{h}x{w}_r{mr}_b{b}");
+    let art = rt.load(&reset_name).unwrap();
+
+    let mut rng = Rng::new(5);
+    let base = Grid::empty_room(h, w);
+    let obj = Cell::new(TILE_BALL, COLOR_RED);
+    let obj2 = Cell::new(TILE_KEY, COLOR_YELLOW);
+    let ruleset = Ruleset {
+        goal: Goal::agent_hold(obj),
+        rules: vec![],
+        init_tiles: vec![obj, obj2],
+    };
+    let grids = vec![base; b];
+    let rulesets: Vec<&Ruleset> = (0..b).map(|_| &ruleset).collect();
+    let seeds: Vec<[u32; 2]> =
+        (0..b).map(|_| [rng.next_u32(), rng.next_u32()]).collect();
+    let inputs = xmgrid::runtime::state::reset_inputs(
+        &grids, &rulesets, &vec![243; b], &seeds, mr, mi).unwrap();
+    let out = art.execute(&inputs).unwrap();
+
+    for i in 0..b {
+        let view = state_view(&out[..NUM_STATE_FIELDS], i, h, w);
+        for cell in [obj, obj2] {
+            assert_eq!(
+                view.grid.iter_cells().filter(|(_, _, c)| *c == cell).count(),
+                1,
+                "env {i}: object placed exactly once"
+            );
+        }
+        // agent on a floor cell, valid direction
+        assert_eq!(view.grid.get_i(view.agent_pos.0, view.agent_pos.1).tile,
+                   TILE_FLOOR, "env {i}");
+        assert!((0..4).contains(&view.agent_dir), "env {i}");
+        assert_eq!(view.step_count, 0);
+        assert_eq!(view.pocket, POCKET_EMPTY);
+    }
+
+    // different seeds produce different placements somewhere in the batch
+    if b >= 2 {
+        let g0 = state_view(&out[..NUM_STATE_FIELDS], 0, h, w).grid;
+        let g1 = state_view(&out[..NUM_STATE_FIELDS], 1, h, w).grid;
+        assert_ne!(g0, g1, "independent per-env randomization");
+    }
+}
+
+#[test]
+fn hlo_rollout_runs_and_counts_trials() {
+    let rt = runtime();
+    let rolls = rt.manifest.of_kind("env_rollout");
+    let spec = rolls
+        .iter()
+        .min_by_key(|s| s.meta_usize("B").unwrap())
+        .expect("no env_rollout artifact");
+    let fam = xmgrid::coordinator::pool::EnvFamily::from_spec(spec).unwrap();
+    let t = spec.meta_usize("T").unwrap();
+    let rooms = 1;
+    let mut pool =
+        xmgrid::coordinator::EnvPool::new(&rt, fam, rooms).unwrap();
+    let bench = {
+        let (rulesets, _) = xmgrid::benchgen::generate_benchmark(
+            &xmgrid::benchgen::Preset::Trivial.config(), 32);
+        xmgrid::benchgen::Benchmark { name: "t".into(), rulesets }
+    };
+    let mut rng = Rng::new(3);
+    let rulesets = pool.sample_rulesets(&bench, &mut rng);
+    pool.reset(&rulesets, &mut rng).unwrap();
+    let (reward, episodes, trials) = pool.rollout(&rt, t, &mut rng).unwrap();
+    assert!(reward >= 0.0);
+    assert!(trials >= episodes,
+            "every episode end is also a trial end ({trials} >= {episodes})");
+    // state stays consistent across repeated rollouts
+    let (r2, _, _) = pool.rollout(&rt, t, &mut rng).unwrap();
+    assert!(r2 >= 0.0);
+}

@@ -1,0 +1,157 @@
+//! Integration: the full training stack — benchmark generation → env pool
+//! reset → fused train_iter (collect + PPO update) → evaluation protocol.
+//! Requires `make artifacts` (quick or full).
+
+use std::path::Path;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::{TrainConfig, Trainer};
+use xmgrid::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::new(&dir).expect("run `make artifacts` before cargo test")
+}
+
+fn smallest_train_artifact(rt: &Runtime) -> String {
+    rt.manifest
+        .of_kind("train_iter")
+        .iter()
+        .min_by_key(|s| s.meta_usize("B").unwrap())
+        .expect("no train_iter artifact")
+        .name
+        .clone()
+}
+
+fn trivial_bench(mr: usize, mi: usize, n: usize) -> Benchmark {
+    let mut cfg = Preset::Trivial.config();
+    cfg.max_rules = mr;
+    cfg.max_objects = mi;
+    let (rulesets, _) = generate_benchmark(&cfg, n);
+    Benchmark { name: "trivial-test".into(), rulesets }
+}
+
+#[test]
+fn train_iter_updates_params_and_reports_metrics() {
+    let rt = runtime();
+    let name = smallest_train_artifact(&rt);
+    let mut trainer =
+        Trainer::new(&rt, &name, 1, TrainConfig::default()).unwrap();
+    let bench = trivial_bench(trainer.family.mr, trainer.family.mi, 64);
+
+    trainer.resample_tasks(&bench).unwrap();
+    let params_before: Vec<f32> =
+        trainer.params.iter().flat_map(|t| t.as_f32().to_vec()).collect();
+
+    let m1 = trainer.train_iter().unwrap();
+    let m2 = trainer.train_iter().unwrap();
+
+    let params_after: Vec<f32> =
+        trainer.params.iter().flat_map(|t| t.as_f32().to_vec()).collect();
+    assert_ne!(params_before, params_after, "Adam must move the params");
+    for p in &params_after {
+        assert!(p.is_finite(), "params stay finite");
+    }
+    assert!(m1.total_loss.is_finite());
+    assert!(m1.entropy > 0.0, "fresh policy has entropy");
+    assert!(m1.entropy <= (6.0f32).ln() + 1e-3,
+            "entropy bounded by ln(num_actions)");
+    assert!(m2.grad_norm >= 0.0);
+    assert_eq!(m1.env_steps, (trainer.t_len * trainer.family.b) as u64);
+    assert!(m1.episodes >= 0 && m1.trials >= 0);
+}
+
+#[test]
+fn task_resampling_changes_tasks_but_keeps_params() {
+    let rt = runtime();
+    let name = smallest_train_artifact(&rt);
+    let mut trainer =
+        Trainer::new(&rt, &name, 1, TrainConfig::default()).unwrap();
+    let bench = trivial_bench(trainer.family.mr, trainer.family.mi, 64);
+    trainer.resample_tasks(&bench).unwrap();
+    let _ = trainer.train_iter().unwrap();
+    let params: Vec<f32> =
+        trainer.params.iter().flat_map(|t| t.as_f32().to_vec()).collect();
+    trainer.resample_tasks(&bench).unwrap();
+    let params2: Vec<f32> =
+        trainer.params.iter().flat_map(|t| t.as_f32().to_vec()).collect();
+    assert_eq!(params, params2, "resampling must not touch the learner");
+    // and training continues fine afterwards
+    let m = trainer.train_iter().unwrap();
+    assert!(m.total_loss.is_finite());
+}
+
+#[test]
+fn evaluation_protocol_reports_percentiles() {
+    let rt = runtime();
+    let name = smallest_train_artifact(&rt);
+    let mut trainer =
+        Trainer::new(&rt, &name, 1, TrainConfig::default()).unwrap();
+    let eval_name = rt
+        .manifest
+        .of_kind("eval_rollout")
+        .iter()
+        .min_by_key(|s| s.meta_usize("B").unwrap())
+        .expect("no eval_rollout artifact")
+        .name
+        .clone();
+    let bench = trivial_bench(trainer.family.mr, trainer.family.mi, 64);
+    trainer.resample_tasks(&bench).unwrap();
+    let stats = trainer.evaluate(&rt, &eval_name, &bench, 1).unwrap();
+    assert!(stats.num_tasks > 0);
+    assert!(stats.return_p20 <= stats.return_mean + 1e-9,
+            "P20 is a lower bound on the mean for non-negative returns");
+    assert!(stats.return_mean >= 0.0);
+    assert!(stats.trials_mean >= 0.0);
+    // evaluation is deterministic given the eval seed
+    let stats2 = trainer.evaluate(&rt, &eval_name, &bench, 1).unwrap();
+    assert_eq!(stats.return_mean, stats2.return_mean);
+}
+
+#[test]
+fn policy_step_artifact_runs() {
+    let rt = runtime();
+    let specs = rt.manifest.of_kind("policy_step");
+    let spec = specs
+        .iter()
+        .min_by_key(|s| s.meta_usize("B").unwrap())
+        .expect("no policy_step artifact");
+    let b = spec.meta_usize("B").unwrap();
+    let hd = spec.meta_usize("H_DIM").unwrap();
+    let art = rt.load(&spec.name).unwrap();
+    let params = rt.load_params_init().unwrap();
+    use xmgrid::runtime::Tensor;
+    let mut inputs = params;
+    inputs.push(Tensor::I32(vec![3; b * 5 * 5 * 2]));
+    inputs.push(Tensor::I32(vec![0; b]));
+    inputs.push(Tensor::F32(vec![0.0; b]));
+    inputs.push(Tensor::I32(vec![1; b]));
+    inputs.push(Tensor::F32(vec![0.0; b * hd]));
+    inputs.push(Tensor::U32(vec![1, 2]));
+    let out = art.execute(&inputs).unwrap();
+    assert_eq!(out.len(), 4);
+    let actions = out[0].as_i32();
+    assert!(actions.iter().all(|&a| (0..6).contains(&a)));
+    let logp = out[1].as_f32();
+    assert!(logp.iter().all(|&l| l <= 0.0));
+    assert_eq!(out[3].len(), b * hd);
+}
+
+#[test]
+fn render_rgb_artifact_runs() {
+    let rt = runtime();
+    let specs = rt.manifest.of_kind("render_rgb");
+    let spec = specs
+        .iter()
+        .min_by_key(|s| s.meta_usize("B").unwrap())
+        .expect("no render_rgb artifact");
+    let b = spec.meta_usize("B").unwrap();
+    let art = rt.load(&spec.name).unwrap();
+    use xmgrid::runtime::Tensor;
+    let out = art
+        .execute(&[Tensor::I32(vec![4; b * 5 * 5 * 2])])
+        .unwrap();
+    let img = out[0].as_f32();
+    assert_eq!(img.len(), b * 40 * 40 * 3);
+    assert!(img.iter().all(|&x| (0.0..=1.0).contains(&x)));
+}

@@ -1,0 +1,207 @@
+//! Property tests over coordinator/env/generator invariants (seeded driver
+//! from `util::property_test` — no proptest crate offline, failures print
+//! the reproducing seed).
+
+use xmgrid::benchgen::{generate_ruleset, Preset};
+use xmgrid::env::goals::Goal;
+use xmgrid::env::state::{reset, step, EnvOptions, Ruleset};
+use xmgrid::env::types::*;
+use xmgrid::env::{Cell, Grid};
+use xmgrid::util::property_test;
+use xmgrid::util::rng::Rng;
+use xmgrid::util::stats::percentile;
+
+fn random_ruleset(rng: &mut Rng, preset: Preset) -> Ruleset {
+    let mut cfg = preset.config();
+    cfg.random_seed = rng.next_u64();
+    generate_ruleset(&cfg, rng).0
+}
+
+/// Conservation: objects never duplicate — the number of non-floor,
+/// non-structural cells plus pocket contents can only change through rules
+/// (which consume >= produce).
+#[test]
+fn object_count_never_increases_without_rules() {
+    property_test("object-conservation", 30, |rng| {
+        let ruleset = Ruleset {
+            goal: Goal::EMPTY,
+            rules: vec![],
+            init_tiles: vec![
+                Cell::new(TILE_BALL, COLOR_RED),
+                Cell::new(TILE_KEY, COLOR_BLUE),
+            ],
+        };
+        let base = Grid::empty_room(9, 9);
+        let (mut s, _) = reset(base, ruleset, 100, rng.split(),
+                               EnvOptions::default());
+        let count_objs = |s: &xmgrid::env::State| -> usize {
+            let grid_objs = s
+                .grid
+                .iter_cells()
+                .filter(|(_, _, c)| is_pickable(c.tile))
+                .count();
+            grid_objs + usize::from(s.pocket.tile != TILE_EMPTY)
+        };
+        for _ in 0..60 {
+            let before = count_objs(&s);
+            step(&mut s, rng.below(6) as i32, EnvOptions::default());
+            let after = count_objs(&s);
+            assert_eq!(before, after,
+                       "no rules => object count is conserved");
+        }
+    });
+}
+
+/// Walls are immutable under any action sequence.
+#[test]
+fn walls_never_change() {
+    property_test("wall-immutable", 30, |rng| {
+        let ruleset = Ruleset {
+            goal: Goal::EMPTY,
+            rules: vec![],
+            init_tiles: vec![Cell::new(TILE_BALL, COLOR_RED)],
+        };
+        let base = Grid::empty_room(7, 7);
+        let walls: Vec<(usize, usize)> = base
+            .iter_cells()
+            .filter(|(_, _, c)| c.tile == TILE_WALL)
+            .map(|(r, c, _)| (r, c))
+            .collect();
+        let (mut s, _) = reset(base, ruleset, 500, rng.split(),
+                               EnvOptions::default());
+        for _ in 0..100 {
+            step(&mut s, rng.below(6) as i32, EnvOptions::default());
+            for &(r, c) in &walls {
+                assert_eq!(s.grid.get(r, c).tile, TILE_WALL);
+            }
+        }
+    });
+}
+
+/// The agent can never stand inside a wall or object.
+#[test]
+fn agent_always_on_walkable_cell() {
+    property_test("agent-walkable", 30, |rng| {
+        let ruleset = random_ruleset(rng, Preset::Small);
+        let base = Grid::empty_room(13, 13);
+        let (mut s, _) = reset(base, ruleset, 200, rng.split(),
+                               EnvOptions::default());
+        for _ in 0..120 {
+            step(&mut s, rng.below(6) as i32, EnvOptions::default());
+            let under = s.grid.get_i(s.agent_pos.0, s.agent_pos.1);
+            assert!(is_walkable(under.tile),
+                    "agent on non-walkable {under:?}");
+        }
+    });
+}
+
+/// Step counter cycles within [0, max_steps) and episode flags fire
+/// exactly at the boundary.
+#[test]
+fn step_counter_cycles_with_episodes() {
+    property_test("step-cycle", 20, |rng| {
+        let ruleset = Ruleset {
+            goal: Goal::EMPTY, // unreachable goal: trials only end by time
+            rules: vec![],
+            init_tiles: vec![],
+        };
+        let base = Grid::empty_room(6, 6);
+        let max_steps = 17;
+        let (mut s, _) = reset(base, ruleset, max_steps, rng.split(),
+                               EnvOptions::default());
+        for i in 1..=3 * max_steps as usize {
+            let out = step(&mut s, rng.below(6) as i32,
+                           EnvOptions::default());
+            let expect_done = i % max_steps as usize == 0;
+            assert_eq!(out.done, expect_done, "step {i}");
+            assert!(s.step_count < max_steps);
+        }
+    });
+}
+
+/// Rewards are always within (0, 1] on success and exactly 0 otherwise.
+#[test]
+fn reward_range() {
+    property_test("reward-range", 20, |rng| {
+        let ruleset = random_ruleset(rng, Preset::Trivial);
+        let base = Grid::empty_room(9, 9);
+        let (mut s, _) = reset(base, ruleset, 243, rng.split(),
+                               EnvOptions::default());
+        for _ in 0..243 {
+            let out = step(&mut s, rng.below(6) as i32,
+                           EnvOptions::default());
+            if out.reward != 0.0 {
+                assert!(out.reward > 0.0 && out.reward <= 1.0);
+                assert!(out.trial_done);
+            }
+        }
+    });
+}
+
+/// Observation cells are always valid (tile, color) ids.
+#[test]
+fn observations_always_valid_ids() {
+    property_test("obs-valid", 20, |rng| {
+        let ruleset = random_ruleset(rng, Preset::Medium);
+        let base = Grid::empty_room(13, 13);
+        let opts = EnvOptions { view_size: 5, see_through_walls: false };
+        let (mut s, obs0) = reset(base, ruleset, 100, rng.split(), opts);
+        let check = |obs: &xmgrid::env::Obs| {
+            for cell in &obs.cells {
+                assert!((0..NUM_TILES as i32).contains(&cell.tile));
+                assert!((0..NUM_COLORS as i32).contains(&cell.color));
+            }
+        };
+        check(&obs0);
+        for _ in 0..60 {
+            let out = step(&mut s, rng.below(6) as i32, opts);
+            check(&out.obs);
+        }
+    });
+}
+
+/// Generated benchmarks stay within artifact capacity across presets.
+#[test]
+fn generator_respects_artifact_capacities() {
+    property_test("gen-capacity", 20, |rng| {
+        for preset in Preset::all() {
+            let mut cfg = preset.config();
+            cfg.max_rules = 9;
+            cfg.max_objects = 12;
+            cfg.random_seed = rng.next_u64();
+            let (rs, _) = generate_ruleset(&cfg, rng);
+            assert!(rs.rules.len() <= 9);
+            assert!(rs.init_tiles.len() <= 12);
+        }
+    });
+}
+
+/// Percentile is monotone in p — the eval protocol depends on it.
+#[test]
+fn percentile_monotone() {
+    property_test("pct-monotone", 30, |rng| {
+        let vals: Vec<f64> = (0..50).map(|_| rng.f64()).collect();
+        let mut last = f64::NEG_INFINITY;
+        for p in [0.0, 10.0, 20.0, 50.0, 80.0, 100.0] {
+            let v = percentile(&vals, p);
+            assert!(v >= last);
+            last = v;
+        }
+    });
+}
+
+/// RL² semantics: trial reset keeps the ruleset; episode reset keeps it
+/// too (task changes only via the coordinator).
+#[test]
+fn ruleset_stable_across_resets() {
+    property_test("ruleset-stable", 20, |rng| {
+        let ruleset = random_ruleset(rng, Preset::Small);
+        let base = Grid::empty_room(11, 11);
+        let (mut s, _) = reset(base, ruleset.clone(), 13, rng.split(),
+                               EnvOptions::default());
+        for _ in 0..40 {
+            step(&mut s, rng.below(6) as i32, EnvOptions::default());
+            assert_eq!(s.ruleset, ruleset);
+        }
+    });
+}
