@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §End-to-end validation): meta-train the
+//! End-to-end driver (docs/ARCHITECTURE.md, "End-to-end validation"): meta-train the
 //! RL² recurrent-PPO baseline on a freshly generated trivial benchmark,
 //! log the learning curve, and run the §4.2 evaluation protocol before and
 //! after — proving all three layers (Pallas kernels inside the JAX policy,

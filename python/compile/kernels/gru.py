@@ -4,7 +4,7 @@ The RL² baseline's recurrent hot spot: three gate matmuls against the input
 and three against the hidden state, plus gating, fused into one kernel so
 gate activations never round-trip to HBM between matmuls.
 
-TPU mapping (DESIGN.md §Perf): the grid tiles the batch; each program holds
+TPU mapping (docs/ARCHITECTURE.md, "Pallas kernels"): the grid tiles the batch; each program holds
 an x-tile (bB×I), the full weight panels (I×3H, H×3H — MXU-aligned when H is
 a multiple of 128) and the h-tile in VMEM, issues the six MXU matmuls
 back-to-back, applies the sigmoid/tanh gating in-register and writes one

@@ -4,7 +4,7 @@
 ``f32[V*P, V*P, 3]`` image with P pixels per tile, entirely in jnp so it can
 be AOT-lowered (``render_rgb_*`` artifacts) and benchmarked for Fig. 13. The
 paper renders 224×224; we render at tile-patch resolution (the upscale is a
-constant factor, not a semantic difference — DESIGN.md §Hardware-Adaptation).
+constant factor, not a semantic difference — docs/ARCHITECTURE.md, "Hardware adaptation").
 """
 
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 //! Fig. 5a: simulation throughput (random policy, auto-reset on) vs the
 //! number of parallel environments. Paper protocol: minimum over repeats.
 //! Prints the log-log series; compare shapes, not absolute SPS (CPU here,
-//! A100 there — DESIGN.md §Hardware-Adaptation).
+//! A100 there — docs/ARCHITECTURE.md, "Hardware adaptation").
 
 use std::path::Path;
 

@@ -2,14 +2,49 @@
 //! (9x9 grid, trivial benchmark, Table 6 hyperparameters). Paper claim:
 //! single-device training saturates near its ceiling; batch growth helps
 //! until the update cost dominates.
+//!
+//! A second section measures the sharded trainer (the pmap axis applied
+//! to training): data-parallel replicas with fixed-order parameter
+//! averaging, lockstep (overlap off) vs the double-buffered pipeline
+//! (overlap on, host reduction overlapped with shard compute).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
-use xmgrid::coordinator::{TrainConfig, Trainer};
+use xmgrid::coordinator::{Overlap, ShardConfig, ShardedTrainer,
+                          TrainConfig, Trainer};
 use xmgrid::runtime::Runtime;
 use xmgrid::util::bench::bench;
+
+fn trivial_for(mr: usize, mi: usize, n: usize) -> Benchmark {
+    let mut cfg = Preset::Trivial.config();
+    cfg.max_rules = mr;
+    cfg.max_objects = mi;
+    let (rulesets, _) = generate_benchmark(&cfg, n);
+    Benchmark { name: "trivial".into(), rulesets }
+}
+
+fn sharded_sps(dir: &Path, artifact: &str, mr: usize, mi: usize,
+               shards: usize, overlap: Overlap, iters: usize) -> f64 {
+    let bench = Arc::new(trivial_for(mr, mi, 256));
+    let cfg = ShardConfig { shards, overlap, seed: 42, rooms: 1 };
+    let mut engine = ShardedTrainer::launch(dir.to_path_buf(),
+                                            artifact.to_string(), bench,
+                                            cfg, TrainConfig::default())
+        .expect("launching sharded trainer");
+    engine.train(1, |_, _| Ok(())).unwrap(); // warmup
+    let t0 = std::time::Instant::now();
+    let mut steps = 0u64;
+    engine
+        .train(iters, |_, m| {
+            steps += m.env_steps;
+            Ok(())
+        })
+        .unwrap();
+    steps as f64 / t0.elapsed().as_secs_f64()
+}
 
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -34,11 +69,7 @@ fn main() {
         let mut trainer = Trainer::new(&rt, &spec.name, 1,
                                        TrainConfig::default())
             .unwrap();
-        let mut cfg = Preset::Trivial.config();
-        cfg.max_rules = trainer.family.mr;
-        cfg.max_objects = trainer.family.mi;
-        let (rulesets, _) = generate_benchmark(&cfg, 256);
-        let tasks = Benchmark { name: "trivial".into(), rulesets };
+        let tasks = trivial_for(trainer.family.mr, trainer.family.mi, 256);
         trainer.resample_tasks(&tasks).unwrap();
         trainer.train_iter().unwrap(); // warmup
 
@@ -52,5 +83,20 @@ fn main() {
             trainer.family.b, trainer.t_len,
             spec.meta_usize("MB").unwrap(), fmt_sps(sps)
         );
+    }
+    drop(rt);
+
+    // Sharded trainer: smallest artifact, overlap off vs on.
+    if let Some(spec) = arts.first() {
+        let mr = spec.meta_usize("MR").unwrap();
+        let mi = spec.meta_usize("MI").unwrap();
+        println!("\n# sharded trainer (fixed-order all-reduce), \
+                  2 shards, 4 timed iters");
+        let off = sharded_sps(&dir, &spec.name, mr, mi, 2, Overlap::Off, 4);
+        let on = sharded_sps(&dir, &spec.name, mr, mi, 2, Overlap::On, 4);
+        println!("overlap=off train-steps/s={off:<12.0} ({})",
+                 fmt_sps(off));
+        println!("overlap=on  train-steps/s={on:<12.0} ({}) \
+                  [{:.2}x]", fmt_sps(on), on / off);
     }
 }

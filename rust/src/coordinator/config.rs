@@ -1,5 +1,70 @@
 //! Training configuration — paper Table 6 (RL² hyperparameters), with the
-//! compute-scale knobs (num_envs, total steps) sized for the CPU testbed.
+//! compute-scale knobs (num_envs, total steps) sized for the CPU testbed,
+//! plus the shard-engine execution knobs (`--shards` / `--overlap`).
+
+use anyhow::{bail, Result};
+
+/// Whether the shard engine pipelines collection against consumption.
+///
+/// `Off` is the lockstep mode: every round is a collective with a global
+/// barrier and fixed-order reduction — bitwise reproducible for a fixed
+/// seed. `On` enables the double-buffered pipeline: shards keep a second
+/// trajectory buffer in flight while the consumer drains the first, and
+/// the trainer applies averaged updates with one iteration of staleness.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Overlap {
+    #[default]
+    Off,
+    On,
+}
+
+impl Overlap {
+    /// Parse a `--overlap on|off` CLI value.
+    pub fn from_flag(s: &str) -> Result<Overlap> {
+        match s {
+            "on" => Ok(Overlap::On),
+            "off" => Ok(Overlap::Off),
+            other => bail!("--overlap must be `on` or `off`, got {other}"),
+        }
+    }
+
+    pub fn is_on(self) -> bool {
+        self == Overlap::On
+    }
+}
+
+impl std::fmt::Display for Overlap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Overlap::On => "on",
+            Overlap::Off => "off",
+        })
+    }
+}
+
+/// Execution shape of the shard engine, shared by `rollout` and `train`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// number of shard replicas (pmap stand-in axis)
+    pub shards: usize,
+    /// double-buffered pipelining on/off
+    pub overlap: Overlap,
+    /// run seed; each shard derives a private stream from it
+    pub seed: u64,
+    /// rooms for base-grid construction on reset
+    pub rooms: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 1,
+            overlap: Overlap::Off,
+            seed: 0,
+            rooms: 1,
+        }
+    }
+}
 
 /// PPO/RL² hyperparameters. The first eight map onto the runtime `hp[8]`
 /// vector consumed by the `train_iter` artifacts.
@@ -70,5 +135,14 @@ mod tests {
         assert_eq!(hp.len(), 8);
         assert_eq!(hp[0], 1e-3);
         assert_eq!(hp[6], 0.5);
+    }
+
+    #[test]
+    fn overlap_flag_parsing() {
+        assert_eq!(Overlap::from_flag("on").unwrap(), Overlap::On);
+        assert_eq!(Overlap::from_flag("off").unwrap(), Overlap::Off);
+        assert!(Overlap::from_flag("maybe").is_err());
+        assert_eq!(Overlap::On.to_string(), "on");
+        assert!(!ShardConfig::default().overlap.is_on());
     }
 }

@@ -1,10 +1,77 @@
-//! Metrics sinks: CSV rows (plottable) + human-readable console lines.
-//! No serde offline — plain formatting.
+//! Metrics sinks: CSV rows (plottable) + human-readable console lines,
+//! plus the cross-shard metric reduction and a throughput meter for the
+//! engines. No serde offline — plain formatting.
 
 use std::io::Write;
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
+
+use super::trainer::IterMetrics;
+
+/// Reduce per-shard iteration metrics to one row: losses and ratios are
+/// averaged, counters (steps, trials, episodes, reward) are summed.
+pub fn reduce_iter_metrics(shard_metrics: &[IterMetrics]) -> IterMetrics {
+    assert!(!shard_metrics.is_empty());
+    let n = shard_metrics.len() as f32;
+    let mut out = IterMetrics::default();
+    for m in shard_metrics {
+        out.total_loss += m.total_loss;
+        out.pi_loss += m.pi_loss;
+        out.v_loss += m.v_loss;
+        out.entropy += m.entropy;
+        out.approx_kl += m.approx_kl;
+        out.clip_frac += m.clip_frac;
+        out.grad_norm += m.grad_norm;
+        out.adv_std += m.adv_std;
+        out.reward_sum += m.reward_sum;
+        out.trials += m.trials;
+        out.episodes += m.episodes;
+        out.env_steps += m.env_steps;
+    }
+    out.total_loss /= n;
+    out.pi_loss /= n;
+    out.v_loss /= n;
+    out.entropy /= n;
+    out.approx_kl /= n;
+    out.clip_frac /= n;
+    out.grad_norm /= n;
+    out.adv_std /= n;
+    out
+}
+
+/// Cumulative steps/second meter for the engines' console reporting.
+pub struct ThroughputMeter {
+    t0: Instant,
+    steps: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> ThroughputMeter {
+        ThroughputMeter { t0: Instant::now(), steps: 0 }
+    }
+
+    pub fn add(&mut self, steps: u64) {
+        self.steps += steps;
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Cumulative steps per second since construction.
+    pub fn sps(&self) -> f64 {
+        let secs = self.t0.elapsed().as_secs_f64();
+        if secs > 0.0 { self.steps as f64 / secs } else { 0.0 }
+    }
+}
 
 /// Append-only CSV writer with a fixed header.
 pub struct CsvLog {
@@ -70,5 +137,42 @@ mod tests {
         assert_eq!(fmt_sps(1_250_000.0), "1.25M");
         assert_eq!(fmt_sps(32_100.0), "32.1k");
         assert_eq!(fmt_sps(321.0), "321");
+    }
+
+    #[test]
+    fn iter_metrics_reduction() {
+        let a = IterMetrics {
+            total_loss: 1.0,
+            entropy: 0.5,
+            reward_sum: 2.0,
+            trials: 3,
+            episodes: 1,
+            env_steps: 100,
+            ..Default::default()
+        };
+        let b = IterMetrics {
+            total_loss: 3.0,
+            entropy: 1.5,
+            reward_sum: 4.0,
+            trials: 5,
+            episodes: 1,
+            env_steps: 100,
+            ..Default::default()
+        };
+        let r = reduce_iter_metrics(&[a, b]);
+        assert_eq!(r.total_loss, 2.0);
+        assert_eq!(r.entropy, 1.0);
+        assert_eq!(r.reward_sum, 6.0);
+        assert_eq!(r.trials, 8);
+        assert_eq!(r.env_steps, 200);
+    }
+
+    #[test]
+    fn throughput_meter_accumulates() {
+        let mut m = ThroughputMeter::new();
+        m.add(50);
+        m.add(50);
+        assert_eq!(m.steps(), 100);
+        assert!(m.sps() >= 0.0);
     }
 }

@@ -1,14 +1,23 @@
 //! L3 coordinator: vectorized env pool, RL² PPO training orchestration
 //! (Anakin-style — the whole collect+update iteration is one fused HLO
-//! call), the §4.2 evaluation protocol, and the shard pool standing in for
-//! `jax.pmap` multi-device scaling.
+//! call), the §4.2 evaluation protocol, and the persistent shard engine
+//! standing in for `jax.pmap` multi-device scaling.
+//!
+//! The execution model is a pipelined producer/consumer system: long-lived
+//! shard worker threads (one PJRT replica each, driven over channels of
+//! jobs — [`shard::ShardPool`]) produce trajectory buffers that the host
+//! consumes, double-buffered when overlap is on. See `docs/ARCHITECTURE.md`
+//! for the threading model.
 
 pub mod config;
 pub mod metrics;
 pub mod pool;
+pub mod rollout;
 pub mod shard;
 pub mod trainer;
 
-pub use config::TrainConfig;
+pub use config::{Overlap, ShardConfig, TrainConfig};
 pub use pool::EnvPool;
-pub use trainer::{EvalStats, Trainer};
+pub use rollout::RolloutEngine;
+pub use shard::ShardPool;
+pub use trainer::{EvalStats, ShardedTrainer, Trainer};

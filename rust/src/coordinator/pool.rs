@@ -81,7 +81,7 @@ impl EnvPool {
     }
 
     /// Reset every env with the given rulesets (fresh base grids with
-    /// re-randomized doors — L3 owns door randomization, DESIGN.md).
+    /// re-randomized doors — L3 owns door randomization; docs/ARCHITECTURE.md, "Deviations").
     pub fn reset(&mut self, rulesets: &[&Ruleset], rng: &mut Rng)
                  -> Result<()> {
         let f = self.family;
@@ -109,9 +109,12 @@ impl EnvPool {
         let art = rt.load(&self.family.rollout_name(t))?;
         let mut inputs = self.state.clone();
         inputs.push(Tensor::U32(vec![rng.next_u32(), rng.next_u32()]));
-        let out = art.execute(&inputs)?;
-        let (state, rest) = out.split_at(NUM_STATE_FIELDS);
-        self.state = state.to_vec();
+        let mut out = art.execute(&inputs)?;
+        // Buffer handoff: the returned state tensors replace ours by
+        // move, not copy — at B=1024 the state block is megabytes and
+        // this runs once per chunk on the engine's hot path.
+        let rest = out.split_off(NUM_STATE_FIELDS);
+        self.state = out;
         let reward_sum: f64 =
             rest[0].as_f32().iter().map(|&x| x as f64).sum();
         let episodes: u64 =

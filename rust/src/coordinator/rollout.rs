@@ -1,0 +1,284 @@
+//! Double-buffered sharded rollout engine.
+//!
+//! Replaces the fork-join `run_sharded` collection loop with persistent
+//! shard workers (see [`ShardPool`]): each shard owns a full replica —
+//! PJRT client, compiled rollout executable, device-resident env-state
+//! buffers, and a private RNG stream — and is driven over a channel of
+//! rollout jobs.
+//!
+//! With overlap **off**, collection is a lockstep collective per round
+//! (dispatch to all shards, barrier, consume in shard order) — bitwise
+//! identical across runs for a fixed seed.
+//!
+//! With overlap **on**, each shard keeps up to two rounds in flight (the
+//! double buffer): while the consumer drains the stats of trajectory
+//! buffer *t*, the shard is already stepping buffer *t+1*. There is no
+//! global barrier, so a slow shard never stalls the others, and host-side
+//! consumption overlaps device stepping. Per-shard trajectories are
+//! *identical* in both modes — a shard's RNG advances only with its own
+//! jobs, in submission order — only the order in which the consumer
+//! observes finished chunks changes.
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::benchgen::Benchmark;
+use crate::runtime::{Manifest, Runtime};
+use crate::util::rng::Rng;
+
+use super::config::{Overlap, ShardConfig};
+use super::pool::{EnvFamily, EnvPool};
+use super::shard::ShardPool;
+
+/// Rounds in flight per shard with overlap on: the double buffer.
+pub const PIPELINE_DEPTH: usize = 2;
+
+/// Derive shard `i`'s seed from the run seed. Shard 0 keeps the run seed
+/// itself (so a one-shard engine reproduces the unsharded path bitwise);
+/// higher shards are decorrelated by a golden-ratio multiple, which
+/// `Rng::new`'s splitmix init diffuses into an independent stream. The
+/// mapping depends only on `(seed, shard)`, never on scheduling — that is
+/// what keeps overlap modes trajectory-identical.
+pub fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(shard as u64)
+}
+
+/// [`shard_seed`] as a ready-made RNG stream.
+pub fn shard_rng(seed: u64, shard: usize) -> Rng {
+    Rng::new(shard_seed(seed, shard))
+}
+
+/// One finished rollout chunk (a trajectory buffer's aggregate stats).
+/// The env-state tensors themselves stay shard-resident; only these
+/// aggregates cross the channel to the consumer.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkStats {
+    pub shard: usize,
+    pub round: usize,
+    pub steps: u64,
+    pub reward_sum: f64,
+    pub episodes: u64,
+    pub trials: u64,
+    /// seconds the shard spent executing this chunk
+    pub secs: f64,
+}
+
+/// Totals over one `collect` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RolloutTotals {
+    pub steps: u64,
+    pub reward_sum: f64,
+    pub episodes: u64,
+    pub trials: u64,
+    /// wall-clock seconds for the whole collection
+    pub elapsed: f64,
+}
+
+impl RolloutTotals {
+    pub fn absorb(&mut self, c: &ChunkStats) {
+        self.steps += c.steps;
+        self.reward_sum += c.reward_sum;
+        self.episodes += c.episodes;
+        self.trials += c.trials;
+    }
+
+    pub fn sps(&self) -> f64 {
+        if self.elapsed > 0.0 {
+            self.steps as f64 / self.elapsed
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-shard replica state, constructed inside the shard thread.
+struct ShardReplica {
+    shard: usize,
+    rt: Runtime,
+    pool: EnvPool,
+    rng: Rng,
+    t: usize,
+}
+
+impl ShardReplica {
+    fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
+        let t0 = Instant::now();
+        let (reward_sum, episodes, trials) =
+            self.pool.rollout(&self.rt, self.t, &mut self.rng)?;
+        Ok(ChunkStats {
+            shard: self.shard,
+            round,
+            steps: (self.pool.family.b * self.t) as u64,
+            reward_sum,
+            episodes,
+            trials,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Persistent sharded rollout engine (random-policy collection).
+pub struct RolloutEngine {
+    pool: ShardPool<ShardReplica>,
+    pub family: EnvFamily,
+    /// steps per fused rollout call
+    pub t: usize,
+    pub cfg: ShardConfig,
+}
+
+impl RolloutEngine {
+    /// Spin up `cfg.shards` replica threads around one `env_rollout`
+    /// artifact. Each shard loads its own PJRT client + executables from
+    /// `artifacts_dir`, samples rulesets from `bench` with its private
+    /// stream, resets, and pre-compiles the rollout executable so the
+    /// first timed chunk measures stepping, not compilation.
+    pub fn launch(artifacts_dir: PathBuf, artifact: String,
+                  bench: Arc<Benchmark>, cfg: ShardConfig)
+                  -> Result<RolloutEngine> {
+        // Family / T come from the manifest (cheap text parse — no PJRT
+        // client on the main thread; replicas own the clients).
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let spec = manifest.find(&artifact)?;
+        let family = EnvFamily::from_spec(spec)?;
+        let t = spec.meta_usize("T")?;
+
+        let seed = cfg.seed;
+        let rooms = cfg.rooms;
+        let name = artifact.clone();
+        let pool = ShardPool::spawn(cfg.shards, move |i| {
+            let rt = Runtime::new(&artifacts_dir)?;
+            rt.preload(&[name.as_str()])?;
+            let mut rng = shard_rng(seed, i);
+            let mut pool = EnvPool::new(&rt, family, rooms)?;
+            let rulesets = pool.sample_rulesets(&bench, &mut rng);
+            pool.reset(&rulesets, &mut rng)
+                .with_context(|| format!("resetting shard {i}"))?;
+            Ok(ShardReplica { shard: i, rt, pool, rng, t })
+        })?;
+        Ok(RolloutEngine { pool, family, t, cfg })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
+    }
+
+    /// Collect `rounds` rollout chunks *per shard*, invoking `consume`
+    /// for every finished chunk, and return the totals.
+    ///
+    /// Overlap off: lockstep rounds, chunks consumed in (round, shard)
+    /// order. Overlap on: double-buffered free-running pipeline, chunks
+    /// consumed in completion order.
+    pub fn collect<C>(&self, rounds: usize, mut consume: C)
+                      -> Result<RolloutTotals>
+    where
+        C: FnMut(&ChunkStats),
+    {
+        let t0 = Instant::now();
+        let mut totals = RolloutTotals::default();
+        match self.cfg.overlap {
+            Overlap::Off => {
+                for round in 0..rounds {
+                    let stats = self
+                        .pool
+                        .broadcast(move |_, w| w.rollout_chunk(round));
+                    for s in stats {
+                        let s = s?;
+                        totals.absorb(&s);
+                        consume(&s);
+                    }
+                }
+            }
+            Overlap::On => {
+                let shards = self.shards();
+                let (res_tx, res_rx) = channel::<Result<ChunkStats>>();
+                let mut next_round = vec![0usize; shards];
+                let dispatch = |shard: usize, round: usize| {
+                    let tx = res_tx.clone();
+                    self.pool.submit(shard, move |w| {
+                        // Every dispatched job sends exactly once, even
+                        // if the chunk panics — otherwise the consumer
+                        // below would wait forever for a message from a
+                        // dead worker (it holds a sender itself, so the
+                        // channel never closes).
+                        let r = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                w.rollout_chunk(round)
+                            }),
+                        );
+                        match r {
+                            Ok(res) => {
+                                let _ = tx.send(res);
+                            }
+                            Err(p) => {
+                                let _ = tx.send(Err(anyhow::anyhow!(
+                                    "shard {shard} panicked during \
+                                     rollout round {round}"
+                                )));
+                                std::panic::resume_unwind(p);
+                            }
+                        }
+                    });
+                };
+                for shard in 0..shards {
+                    for _ in 0..PIPELINE_DEPTH.min(rounds) {
+                        dispatch(shard, next_round[shard]);
+                        next_round[shard] += 1;
+                    }
+                }
+                for _ in 0..shards * rounds {
+                    let s = res_rx
+                        .recv()
+                        .expect("rollout result channel closed")?;
+                    // Refill this shard's pipeline before consuming, so
+                    // the shard steps buffer t+1 while we drain buffer t.
+                    if next_round[s.shard] < rounds {
+                        dispatch(s.shard, next_round[s.shard]);
+                        next_round[s.shard] += 1;
+                    }
+                    totals.absorb(&s);
+                    consume(&s);
+                }
+            }
+        }
+        totals.elapsed = t0.elapsed().as_secs_f64();
+        Ok(totals)
+    }
+
+    /// `collect` with windowed progress reporting: chunk stats
+    /// accumulate into a window aggregate; every `window` chunks the
+    /// completed window is reported (aggregate steps/sec over that
+    /// window) and a fresh one starts.
+    pub fn collect_windowed<R>(&self, rounds: usize, window: usize,
+                               mut report: R) -> Result<RolloutTotals>
+    where
+        R: FnMut(usize, &RolloutTotals),
+    {
+        let mut acc = RolloutTotals::default();
+        let mut in_window = 0usize;
+        let mut windows = 0usize;
+        let t_window = Instant::now();
+        let mut last_report = 0.0f64;
+        let totals = self.collect(rounds, |c| {
+            acc.absorb(c);
+            in_window += 1;
+            if in_window == window {
+                let now = t_window.elapsed().as_secs_f64();
+                acc.elapsed = now - last_report;
+                last_report = now;
+                report(windows, &std::mem::take(&mut acc));
+                in_window = 0;
+                windows += 1;
+            }
+        })?;
+        if in_window > 0 {
+            let now = t_window.elapsed().as_secs_f64();
+            acc.elapsed = now - last_report;
+            report(windows, &acc);
+        }
+        Ok(totals)
+    }
+}

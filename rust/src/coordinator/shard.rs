@@ -1,13 +1,175 @@
-//! Shard pool — the `jax.pmap` stand-in (DESIGN.md §Hardware-Adaptation).
+//! Shard engine — the `jax.pmap` stand-in (see `docs/ARCHITECTURE.md`,
+//! "Shard engine" section).
 //!
-//! Each shard is a host thread owning its *own* PJRT client, compiled
-//! executables and env-state buffers (exactly a pmap replica's footprint).
-//! Shards synchronize per call like a collective step. Since the `xla`
-//! crate's handles are not `Send`, all shard state is constructed inside
-//! the shard's thread.
+//! Each shard is a *persistent* host thread owning its own PJRT client,
+//! compiled executables and env-state buffers (exactly a pmap replica's
+//! footprint). Because the `xla` crate's handles are not `Send`, all shard
+//! state is constructed inside the shard's thread by an init closure and
+//! never leaves it; the main thread talks to shards exclusively over
+//! channels of `FnOnce` jobs.
+//!
+//! Two layers build on [`ShardPool`]:
+//!
+//! - [`crate::coordinator::rollout::RolloutEngine`] — double-buffered
+//!   random-policy collection (Fig. 5d/e scaling axis).
+//! - [`crate::coordinator::trainer::ShardedTrainer`] — data-parallel RL²
+//!   PPO with fixed-order parameter averaging (the pmap all-reduce).
 
-/// Run `f(shard_index)` on `n` threads and collect the results in shard
-/// order. Panics propagate.
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Tensor;
+
+/// A unit of work shipped to one shard thread. The worker state `W` stays
+/// on its thread; only the closure (and its captures) cross.
+type Job<W> = Box<dyn FnOnce(&mut W) + Send + 'static>;
+
+/// Pool of persistent shard worker threads, each owning a worker state `W`
+/// built in-thread by the init closure (so `W` need not be `Send` — PJRT
+/// clients and executables are not).
+///
+/// Jobs are executed strictly in submission order per shard, which is what
+/// the double-buffered engines rely on for deterministic per-shard RNG
+/// streams: a shard's trajectory depends only on its own job sequence,
+/// never on cross-shard scheduling.
+pub struct ShardPool<W> {
+    txs: Vec<Sender<Job<W>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<W: 'static> ShardPool<W> {
+    /// Spawn `n` shard threads. `init(shard_index)` runs *inside* each
+    /// thread to build its worker state; if any shard fails to initialise,
+    /// the pool is torn down and the first error is returned.
+    pub fn spawn<F>(n: usize, init: F) -> Result<ShardPool<W>>
+    where
+        F: Fn(usize) -> Result<W> + Send + Sync + 'static,
+    {
+        assert!(n > 0, "shard pool needs at least one shard");
+        let init = Arc::new(init);
+        let (ready_tx, ready_rx) = channel::<(usize, Result<()>)>();
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel::<Job<W>>();
+            let init = init.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("xmgrid-shard-{i}"))
+                .spawn(move || {
+                    let mut w = match init(i) {
+                        Ok(w) => {
+                            let _ = ready.send((i, Ok(())));
+                            w
+                        }
+                        Err(e) => {
+                            let _ = ready.send((i, Err(e)));
+                            return;
+                        }
+                    };
+                    // Drop the ready sender now: if a *sibling* shard
+                    // panics during init (sending nothing), the channel
+                    // must close once the survivors are done with it,
+                    // so spawn() fails loudly instead of hanging.
+                    drop(ready);
+                    while let Ok(job) = rx.recv() {
+                        job(&mut w);
+                    }
+                })
+                .expect("spawning shard thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let pool = ShardPool { txs, handles };
+        for _ in 0..n {
+            let (i, r) =
+                ready_rx.recv().expect("shard init channel closed");
+            r.with_context(|| format!("initialising shard {i}"))?;
+        }
+        Ok(pool)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Enqueue `f` on one shard without waiting for a result. Panics if
+    /// the shard thread has died (a previous job panicked).
+    pub fn submit<F>(&self, shard: usize, f: F)
+    where
+        F: FnOnce(&mut W) + Send + 'static,
+    {
+        self.txs[shard]
+            .send(Box::new(f))
+            .expect("shard thread has exited");
+    }
+
+    /// Enqueue `f` on one shard and return a [`Ticket`] for its result.
+    pub fn call<R, F>(&self, shard: usize, f: F) -> Ticket<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&mut W) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.submit(shard, move |w| {
+            let _ = tx.send(f(w));
+        });
+        Ticket { rx }
+    }
+
+    /// Lockstep collective: run `f(shard_index, worker)` on every shard
+    /// concurrently, wait for all, and return results in shard order.
+    pub fn broadcast<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut W) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let tickets: Vec<Ticket<R>> = (0..self.shards())
+            .map(|i| {
+                let f = f.clone();
+                self.call(i, move |w| f(i, w))
+            })
+            .collect();
+        tickets.into_iter().map(|t| t.wait()).collect()
+    }
+}
+
+impl<W> Drop for ShardPool<W> {
+    fn drop(&mut self) {
+        // Closing the job channels ends each worker loop; queued jobs
+        // still run to completion before the thread exits.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Receipt for an in-flight shard job.
+pub struct Ticket<R> {
+    rx: Receiver<R>,
+}
+
+impl<R> Ticket<R> {
+    /// Block until the job completes. Panics if the shard thread died
+    /// before sending (i.e. the job itself panicked).
+    pub fn wait(self) -> R {
+        self.rx
+            .recv()
+            .expect("shard dropped its result (worker panicked)")
+    }
+}
+
+/// Run `f(shard_index)` on `n` scoped threads and collect the results in
+/// shard order. The original fork-join primitive, superseded on the hot
+/// paths by the persistent [`ShardPool`]; retained as the simple
+/// borrow-friendly escape hatch (scoped threads may capture non-`'static`
+/// state, which pool jobs cannot).
 pub fn run_sharded<F, R>(n: usize, f: F) -> Vec<R>
 where
     F: Fn(usize) -> R + Send + Sync,
@@ -24,15 +186,23 @@ where
     })
 }
 
-/// Data-parallel gradient averaging across shard parameter sets (the
+/// Data-parallel parameter averaging across shard parameter sets (the
 /// all-reduce a pmap training step performs). Arithmetic mean, in place on
 /// the first set, returned.
+///
+/// The reduction order is *fixed*: shard 0's parameters are the
+/// accumulator and shards 1..n are added in ascending index order. f32
+/// addition is not associative, so this ordering is part of the engine's
+/// determinism contract — overlap-off runs must be bitwise reproducible
+/// regardless of which shard finished first (see the reduction-order
+/// regression test in `tests/shard_engine.rs`).
 pub fn average_params(mut shard_params: Vec<Vec<Vec<f32>>>)
                       -> Vec<Vec<f32>> {
     assert!(!shard_params.is_empty());
     let n = shard_params.len() as f32;
-    let mut acc = shard_params.swap_remove(0);
-    for other in &shard_params {
+    let rest = shard_params.split_off(1);
+    let mut acc = shard_params.pop().unwrap();
+    for other in &rest {
         for (a, o) in acc.iter_mut().zip(other) {
             for (x, y) in a.iter_mut().zip(o) {
                 *x += *y;
@@ -45,6 +215,58 @@ pub fn average_params(mut shard_params: Vec<Vec<Vec<f32>>>)
         }
     }
     acc
+}
+
+/// [`average_params`] lifted to the runtime's `Tensor` parameter lists
+/// (all-f32), as held by the trainer.
+pub fn average_param_tensors(shard_params: Vec<Vec<Tensor>>)
+                             -> Vec<Tensor> {
+    let raw: Vec<Vec<Vec<f32>>> = shard_params
+        .into_iter()
+        .map(|ps| {
+            ps.into_iter()
+                .map(|t| match t {
+                    // move, don't copy: this runs on the per-iteration
+                    // all-reduce hot path and the tensors are owned
+                    Tensor::F32(v) => v,
+                    _ => panic!("parameters must be f32 tensors"),
+                })
+                .collect()
+        })
+        .collect();
+    average_params(raw).into_iter().map(Tensor::F32).collect()
+}
+
+/// Element-wise `after - before` over two parameter lists: the local
+/// update one fused train iteration applied on a shard.
+pub fn sub_params(after: &[Tensor], before: &[Tensor]) -> Vec<Tensor> {
+    after
+        .iter()
+        .zip(before)
+        .map(|(a, b)| {
+            Tensor::F32(
+                a.as_f32()
+                    .iter()
+                    .zip(b.as_f32())
+                    .map(|(x, y)| x - y)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// Add a (mean) delta into the master parameters in place.
+pub fn add_params(master: &mut [Tensor], delta: &[Tensor]) {
+    for (m, d) in master.iter_mut().zip(delta) {
+        match m {
+            Tensor::F32(mv) => {
+                for (x, y) in mv.iter_mut().zip(d.as_f32()) {
+                    *x += *y;
+                }
+            }
+            _ => panic!("parameters must be f32 tensors"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -79,5 +301,56 @@ mod tests {
         ];
         let avg = average_params(shards);
         assert_eq!(avg, vec![vec![2.0, 4.0]]);
+    }
+
+    #[test]
+    fn pool_broadcast_collects_in_shard_order() {
+        let pool = ShardPool::spawn(4, |i| Ok(i * 100)).unwrap();
+        let out = pool.broadcast(|i, w| *w + i);
+        assert_eq!(out, vec![0, 101, 202, 303]);
+    }
+
+    #[test]
+    fn pool_jobs_run_in_submission_order_per_shard() {
+        let pool = ShardPool::spawn(1, |_| Ok(Vec::<usize>::new())).unwrap();
+        for k in 0..16 {
+            pool.submit(0, move |log| log.push(k));
+        }
+        let log = pool.call(0, |log| log.clone()).wait();
+        assert_eq!(log, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_worker_state_persists_across_calls() {
+        let pool = ShardPool::spawn(2, |_| Ok(0u64)).unwrap();
+        for _ in 0..5 {
+            pool.broadcast(|_, w| *w += 1);
+        }
+        let counts = pool.broadcast(|_, w| *w);
+        assert_eq!(counts, vec![5, 5]);
+    }
+
+    #[test]
+    fn pool_init_failure_surfaces() {
+        let r = ShardPool::<u8>::spawn(3, |i| {
+            if i == 1 {
+                anyhow::bail!("shard 1 refuses");
+            }
+            Ok(0)
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn param_tensor_helpers() {
+        let a = vec![Tensor::F32(vec![2.0, 4.0])];
+        let b = vec![Tensor::F32(vec![1.0, 1.0])];
+        let d = sub_params(&a, &b);
+        assert_eq!(d[0].as_f32(), &[1.0, 3.0]);
+        let mut m = vec![Tensor::F32(vec![10.0, 10.0])];
+        add_params(&mut m, &d);
+        assert_eq!(m[0].as_f32(), &[11.0, 13.0]);
+        let avg = average_param_tensors(vec![a, b]);
+        assert_eq!(avg[0].as_f32(), &[1.5, 2.5]);
     }
 }

@@ -2,18 +2,31 @@
 //! into one HLO call), handles task resampling between iterations, and
 //! implements the §4.2 evaluation protocol (N tasks × trials, mean and
 //! 20th percentile).
+//!
+//! [`ShardedTrainer`] scales the single-replica [`Trainer`] across the
+//! shard engine: one full trainer replica per shard thread, fixed-order
+//! averaging of per-iteration parameter updates on the host (the pmap
+//! all-reduce), and — with overlap on — a double-buffered pipeline that
+//! lets shards compute iteration *t+1* while the host reduces and logs
+//! iteration *t*.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
 use crate::benchgen::Benchmark;
 use crate::runtime::state::NUM_STATE_FIELDS;
-use crate::runtime::{Artifact, Runtime, Tensor};
+use crate::runtime::{Artifact, Manifest, Runtime, Tensor};
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, percentile};
 
-use super::config::TrainConfig;
+use super::config::{ShardConfig, TrainConfig};
 use super::pool::{EnvFamily, EnvPool};
+use super::rollout::{shard_seed, PIPELINE_DEPTH};
+use super::shard::{add_params, average_param_tensors, sub_params,
+                   ShardPool, Ticket};
 
 pub const NUM_PARAMS: usize = 11;
 const NUM_METRICS: usize = 8;
@@ -107,6 +120,15 @@ impl Trainer {
             rng: Rng::new(cfg.train_seed),
             iter: 0,
         })
+    }
+
+    /// Overwrite the policy/value parameters (the broadcast half of the
+    /// shard engine's all-reduce). Adam moments stay local to this
+    /// replica — only parameters cross the shard boundary, like the
+    /// paper's pmap all-reduce of the learner state's gradient half.
+    pub fn set_params(&mut self, params: Vec<Tensor>) {
+        debug_assert_eq!(params.len(), self.params.len());
+        self.params = params;
     }
 
     /// Sample fresh tasks for every env and reset (called at start and
@@ -239,5 +261,190 @@ impl Trainer {
             trials_mean: mean(&trials),
             num_tasks: b,
         })
+    }
+}
+
+/// One shard's contribution to a training iteration: the local parameter
+/// update (delta) it computed, plus its metrics.
+type ShardIterOut = Result<(Vec<Tensor>, IterMetrics)>;
+
+/// A full trainer replica living on one shard thread.
+struct TrainerReplica {
+    rt: Runtime,
+    trainer: Trainer,
+    bench: Arc<Benchmark>,
+}
+
+impl TrainerReplica {
+    /// Run one fused PPO iteration from the broadcast `basis` parameters
+    /// and return the local update `params_after - basis`.
+    fn shard_iter(&mut self, basis: Arc<Vec<Tensor>>, resample: bool)
+                  -> ShardIterOut {
+        self.trainer.set_params((*basis).clone());
+        if resample {
+            self.trainer.resample_tasks(&self.bench)?;
+        }
+        let m = self.trainer.train_iter()?;
+        Ok((sub_params(&self.trainer.params, &basis), m))
+    }
+}
+
+/// Data-parallel RL² PPO across the shard engine.
+///
+/// Every shard thread owns a full [`Trainer`] replica (its own PJRT
+/// client, `train_iter` executable, env states and Adam moments). The
+/// host thread holds the *master* parameters and drives iterations:
+///
+/// 1. broadcast the master parameters as the iteration's basis,
+/// 2. each shard runs one fused collect+update and returns its local
+///    parameter delta,
+/// 3. the host averages the deltas in ascending shard order (f32
+///    addition is not associative — the fixed order is the determinism
+///    contract) and folds the mean into the master.
+///
+/// With overlap **off** this is the classic lockstep pmap step: one
+/// iteration in flight, every shard starts from the freshly averaged
+/// master, bitwise reproducible for a fixed seed.
+///
+/// With overlap **on** the pipeline keeps [`PIPELINE_DEPTH`] iterations
+/// in flight: shards compute iteration *t+1* (from the master as of
+/// *t-1* — one iteration of staleness) while the host reduces and logs
+/// iteration *t*. All updates are still applied exactly once; they are
+/// merely computed at a one-iteration-stale basis, the usual
+/// stale-synchronous data-parallel trade.
+pub struct ShardedTrainer {
+    pool: ShardPool<TrainerReplica>,
+    pub cfg: ShardConfig,
+    pub train_cfg: TrainConfig,
+    /// host-side master parameters (averaged across shards)
+    pub master: Vec<Tensor>,
+    pub family: EnvFamily,
+    pub t_len: usize,
+    /// iterations completed (reduced into the master)
+    pub iters_done: usize,
+}
+
+impl ShardedTrainer {
+    /// Spin up `cfg.shards` trainer replicas around one `train_iter`
+    /// artifact. `cfg.seed` is the single run seed: shard `i` trains
+    /// with `shard_seed(cfg.seed, i)` (any `train_cfg.train_seed` is
+    /// overwritten so the two knobs cannot drift apart) and samples its
+    /// tasks from `bench` with that private stream; all replicas start
+    /// from the same `params_init.bin` master copy.
+    pub fn launch(artifacts_dir: PathBuf, artifact: String,
+                  bench: Arc<Benchmark>, cfg: ShardConfig,
+                  mut train_cfg: TrainConfig) -> Result<ShardedTrainer> {
+        train_cfg.train_seed = cfg.seed;
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let spec = manifest.find(&artifact)?;
+        if spec.kind() != "train_iter" {
+            bail!("{artifact} is not a train_iter artifact");
+        }
+        let family = EnvFamily::from_spec(spec)?;
+        let t_len = spec.meta_usize("T")?;
+        let master =
+            crate::runtime::load_params_init_from(&artifacts_dir,
+                                                  &manifest)?;
+        let rooms = cfg.rooms;
+        let pool = ShardPool::spawn(cfg.shards, move |i| {
+            let rt = Runtime::new(&artifacts_dir)?;
+            let mut tc = train_cfg;
+            tc.train_seed = shard_seed(cfg.seed, i);
+            let mut trainer = Trainer::new(&rt, &artifact, rooms, tc)?;
+            trainer
+                .resample_tasks(&bench)
+                .with_context(|| format!("initial resample, shard {i}"))?;
+            Ok(TrainerReplica { rt, trainer, bench: bench.clone() })
+        })?;
+        Ok(ShardedTrainer {
+            pool,
+            cfg,
+            train_cfg,
+            master,
+            family,
+            t_len,
+            iters_done: 0,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
+    }
+
+    /// Environment steps contributed per iteration across all shards.
+    pub fn steps_per_iter(&self) -> u64 {
+        (self.t_len * self.family.b * self.shards()) as u64
+    }
+
+    /// Run `iters` training iterations, calling `consume(iter, metrics)`
+    /// with the cross-shard reduced metrics as each iteration's results
+    /// are folded into the master parameters. A `consume` error aborts
+    /// training immediately (in-flight pipelined iterations are
+    /// discarded) and is returned to the caller.
+    pub fn train<C>(&mut self, iters: usize, mut consume: C) -> Result<()>
+    where
+        C: FnMut(usize, &IterMetrics) -> Result<()>,
+    {
+        let depth = if self.cfg.overlap.is_on() { PIPELINE_DEPTH } else { 1 };
+        let shards = self.shards();
+        let resample_every = self.train_cfg.task_resample_iters.max(1);
+        let first = self.iters_done + 1;
+        let last = self.iters_done + iters;
+        let mut inflight: VecDeque<(usize, Vec<Ticket<ShardIterOut>>)> =
+            VecDeque::new();
+        let mut next = first;
+        while next <= last || !inflight.is_empty() {
+            // Keep the pipeline full: with depth 2 the dispatch of t+1
+            // happens before t is reduced, so shards never idle on the
+            // host's averaging / logging.
+            while next <= last && inflight.len() < depth {
+                let basis = Arc::new(self.master.clone());
+                let resample = next > 1 && (next - 1) % resample_every == 0;
+                let tickets: Vec<Ticket<ShardIterOut>> = (0..shards)
+                    .map(|s| {
+                        let basis = basis.clone();
+                        self.pool.call(s, move |w| {
+                            w.shard_iter(basis, resample)
+                        })
+                    })
+                    .collect();
+                inflight.push_back((next, tickets));
+                next += 1;
+            }
+            let (t, tickets) = inflight.pop_front().unwrap();
+            let mut deltas = Vec::with_capacity(shards);
+            let mut metrics = Vec::with_capacity(shards);
+            for ticket in tickets {
+                let (d, m) = ticket
+                    .wait()
+                    .with_context(|| format!("training iteration {t}"))?;
+                deltas.push(d);
+                metrics.push(m);
+            }
+            // Fixed-order all-reduce: mean of the shard deltas, shard 0
+            // first, folded into the master.
+            let mean_delta = average_param_tensors(deltas);
+            add_params(&mut self.master, &mean_delta);
+            self.iters_done = t;
+            let reduced = super::metrics::reduce_iter_metrics(&metrics);
+            consume(t, &reduced)?;
+        }
+        Ok(())
+    }
+
+    /// §4.2 evaluation of the *master* parameters, run on shard 0's
+    /// replica (its queue guarantees this happens after any previously
+    /// dispatched iterations).
+    pub fn evaluate(&self, eval_artifact: &str, rooms: usize)
+                    -> Result<EvalStats> {
+        let master = Arc::new(self.master.clone());
+        let name = eval_artifact.to_string();
+        self.pool
+            .call(0, move |w| {
+                w.trainer.set_params((*master).clone());
+                let bench = w.bench.clone();
+                w.trainer.evaluate(&w.rt, &name, &bench, rooms)
+            })
+            .wait()
     }
 }

@@ -7,7 +7,7 @@
 //! take their ruleset from a benchmark at episode time; MiniGrid ports bake
 //! their task into the blueprint.
 //!
-//! Deviation noted in DESIGN.md: agent start position is always randomized
+//! Deviation noted in docs/ARCHITECTURE.md ("Deviations"): agent start position is always randomized
 //! (the paper's `Empty` fixes it; `EmptyRandom` matches exactly).
 
 use crate::util::rng::Rng;

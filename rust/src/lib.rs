@@ -10,12 +10,14 @@
 //!   goal-rooted production-rule trees, branch pruning, distractors, and the
 //!   compressed benchmark store with load/sample/split APIs.
 //! - [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
-//!   (manifest-driven), compiles once, executes with device-resident
-//!   buffers (`execute_b`) so the hot loop never copies state to the host.
-//! - [`coordinator`] — the L3 contribution: vectorized env pool, rollout
-//!   collector, RL² PPO trainer (Anakin-style), evaluation harness
-//!   (25-trial / 20th-percentile protocol of §4.2), and the shard pool that
-//!   stands in for `jax.pmap` multi-device scaling.
+//!   (manifest-driven), compiles once per artifact name, and executes
+//!   fused computations so the hot loop crosses the host boundary once
+//!   per chunk, not once per step.
+//! - [`coordinator`] — the L3 contribution: vectorized env pool, the
+//!   persistent double-buffered shard engine standing in for `jax.pmap`
+//!   multi-device scaling, the RL² PPO trainer (Anakin-style, single- and
+//!   multi-shard), and the evaluation harness (25-trial /
+//!   20th-percentile protocol of §4.2).
 //! - [`render`] — ASCII renderer for interactive inspection.
 //! - [`util`] — offline-friendly substitutes for crates unavailable in this
 //!   environment: PRNG, arg parsing, stats, bench harness, property tests.

@@ -1,33 +1,58 @@
 //! xmgrid CLI — the L3 launcher.
 //!
-//! Subcommands:
-//!   envs                         list the 38 registered environments
-//!   play                         random-policy episode with ASCII render
-//!   gen-benchmark                generate + store a benchmark (§3)
-//!   rollout                      fused random-policy throughput run
-//!   train                        RL² PPO training (Fig. 6/7 harness)
-//!   eval                         evaluation protocol on a benchmark
-//!   validate                     Rust-oracle vs HLO cross-check
-//!   artifacts                    list manifest artifacts
+//! Subcommands (see `xmgrid help <cmd>` for per-command options):
+//!
+//! ```text
+//!   envs            list the 38 registered environments
+//!   play            random-policy episode with ASCII render
+//!   gen-benchmark   generate + store a benchmark (§3)
+//!   rollout         sharded random-policy throughput run
+//!                   (--shards N --overlap on|off: double-buffered engine)
+//!   train           RL² PPO training (Fig. 6/7 harness; --shards N runs
+//!                   the data-parallel shard engine)
+//!   eval            evaluation protocol on a benchmark
+//!   validate        Rust-oracle vs HLO cross-check
+//!   artifacts       list manifest artifacts
+//!   help            global or per-command usage
+//! ```
+//!
+//! Every command reading compiled artifacts honours `--artifacts-dir DIR`
+//! (default `artifacts`).
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use xmgrid::benchgen::store::load_benchmark;
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
-use xmgrid::coordinator::metrics::{fmt_sps, CsvLog};
+use xmgrid::coordinator::metrics::{fmt_sps, CsvLog, ThroughputMeter};
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::{EnvPool, TrainConfig, Trainer};
+use xmgrid::coordinator::{Overlap, RolloutEngine, ShardConfig,
+                          ShardedTrainer, TrainConfig, Trainer};
 use xmgrid::env::registry;
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::render::render_grid;
-use xmgrid::runtime::Runtime;
+use xmgrid::runtime::{Manifest, Runtime};
 use xmgrid::util::args::Args;
 use xmgrid::util::rng::Rng;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts-dir", "artifacts"))
+}
+
+/// `--shards` / `--overlap` / `--seed` / `--rooms` → engine config.
+fn shard_config(args: &Args) -> Result<ShardConfig> {
+    let shards = args.usize_or("shards", 1);
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+    Ok(ShardConfig {
+        shards,
+        overlap: Overlap::from_flag(&args.str_or("overlap", "off"))?,
+        seed: args.u64_or("seed", 0),
+        rooms: args.usize_or("rooms", 1),
+    })
 }
 
 fn main() -> Result<()> {
@@ -42,20 +67,167 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "validate" => cmd_validate(&args),
         "artifacts" => cmd_artifacts(&args),
-        _ => {
-            println!(
-                "xmgrid — XLand-MiniGrid reproduction (rust+JAX+Pallas)\n\n\
-                 usage: xmgrid <command> [--options]\n\n\
-                 commands:\n\
-                 \x20 envs                                list environments\n\
-                 \x20 play --env NAME [--steps N]         ASCII episode\n\
-                 \x20 gen-benchmark --preset P --n N      generate benchmark\n\
-                 \x20 rollout --batch B [--chunks N]      throughput run\n\
-                 \x20 train --benchmark B --iters N       RL² PPO training\n\
-                 \x20 eval --benchmark B                  evaluation\n\
-                 \x20 validate                            oracle cross-check\n\
-                 \x20 artifacts                           list manifest"
-            );
+        "help" => cmd_help(&args),
+        other => {
+            println!("unknown command `{other}`\n");
+            print_global_help();
+            Ok(())
+        }
+    }
+}
+
+const GLOBAL_HELP: &str = "\
+xmgrid — XLand-MiniGrid reproduction (Rust + JAX + Pallas)
+
+usage: xmgrid <command> [--options]
+       xmgrid help <command>        per-command option docs
+
+commands:
+  envs                                list environments
+  play --env NAME [--steps N]         ASCII episode
+  gen-benchmark --preset P --n N      generate benchmark
+  rollout [--shards N] [--overlap M]  sharded throughput run
+  train [--shards N] [--overlap M]    RL² PPO training
+  eval --benchmark B                  evaluation protocol
+  validate                            oracle cross-check
+  artifacts                           list manifest
+
+global options:
+  --artifacts-dir DIR   AOT artifact directory (default: artifacts)";
+
+/// Per-command option documentation for `xmgrid help <cmd>`.
+fn command_help(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "envs" => "\
+usage: xmgrid envs
+
+List the registered environment names (MiniGrid ports + XLand family).
+Takes no options.",
+        "play" => "\
+usage: xmgrid play [--env NAME] [--steps N] [--seed S]
+
+Run a random-policy episode in the pure-Rust environment and render the
+grid as ASCII before and after.
+
+  --env NAME    environment name from `xmgrid envs`
+                (default: MiniGrid-Empty-8x8)
+  --steps N     number of random steps (default: 30)
+  --seed S      RNG seed (default: 0)",
+        "gen-benchmark" => "\
+usage: xmgrid gen-benchmark [--preset P] [--n N] [--seed S]
+
+Generate N unique rulesets with the §3 procedural generator and store
+them gzip-compressed under the benchmark data dir
+($XLAND_MINIGRID_DATA, default artifacts/benchmarks).
+
+  --preset P    trivial | small | medium | high | high-3m (default:
+                trivial)
+  --n N         number of rulesets (default: 1000)
+  --seed S      generator seed (default: preset seed)",
+        "rollout" => "\
+usage: xmgrid rollout [--batch B] [--chunks N] [--shards K]
+                      [--overlap on|off] [--benchmark NAME] [--seed S]
+                      [--rooms R] [--artifacts-dir DIR]
+
+Fused random-policy throughput run on the sharded rollout engine. Each
+shard is a persistent worker thread owning a full replica (PJRT client,
+compiled executables, env states, private RNG stream).
+
+  --batch B          env batch of the rollout artifact to pick
+                     (default: 1024; falls back to the first artifact)
+  --chunks N         rollout chunks per shard (default: 4)
+  --shards K         number of shard replicas (default: 1)
+  --overlap on|off   off: lockstep rounds with a global barrier,
+                     bitwise-deterministic per seed. on: double-buffered
+                     pipeline — each shard keeps a second trajectory
+                     buffer in flight while the host drains the first.
+                     Per-shard trajectories are identical in both modes.
+                     (default: off)
+  --benchmark NAME   task source (default: trivial-1k, generated and
+                     cached on first use)
+  --seed S           run seed; shard k derives stream shard_seed(S, k)
+                     (default: 0)
+  --rooms R          rooms in the base grid layout (default: 1)",
+        "train" => "\
+usage: xmgrid train [--benchmark NAME] [--iters N] [--batch B]
+                    [--artifact NAME] [--shards K] [--overlap on|off]
+                    [--seed S] [--resample I] [--eval-every E]
+                    [--rooms R] [--log PATH] [--artifacts-dir DIR]
+
+RL² PPO training over fused train_iter artifacts. With --shards > 1 the
+data-parallel shard engine runs one full trainer replica per shard and
+all-reduces parameter updates on the host in fixed shard order.
+
+  --benchmark NAME   task source (default: trivial-1k)
+  --iters N          training iterations (default: 50)
+  --batch B          pick the train_iter artifact with this env batch
+                     (default: 256; falls back to the largest)
+  --artifact NAME    explicit train_iter artifact (overrides --batch)
+  --shards K         trainer replicas (default: 1 = single-replica path)
+  --overlap on|off   off: lockstep all-reduce every iteration (bitwise
+                     deterministic per seed). on: double-buffered
+                     pipeline — shards compute iteration t+1 while the
+                     host reduces iteration t (one iteration of
+                     parameter staleness). (default: off)
+  --seed S           training seed (default: 42); shard k trains with
+                     shard_seed(S, k)
+  --resample I       resample tasks every I iterations (default: 8)
+  --eval-every E     run the §4.2 evaluation every E iterations
+                     (default: 0 = never)
+  --rooms R          rooms in the base grid layout (default: 1)
+  --log PATH         CSV metrics path
+                     (default: artifacts/train_log.csv)",
+        "eval" => "\
+usage: xmgrid eval [--benchmark NAME] [--batch B] [--rooms R]
+                   [--artifacts-dir DIR]
+
+§4.2 evaluation protocol: roll the (freshly initialised) policy over the
+eval artifact's batch of held-out tasks; report mean and 20th-percentile
+return and per-trial numbers.
+
+  --benchmark NAME   task source (default: trivial-1k)
+  --batch B          train_iter artifact to build the trainer around
+                     (default: 256)
+  --rooms R          rooms in the base grid layout (default: 1)",
+        "validate" => "\
+usage: xmgrid validate [--artifacts-dir DIR]
+
+Compile-check every env_step artifact in the manifest. The full
+transition-level oracle cross-check runs with
+`cargo test --test cross_validation -- --ignored`
+(the tests are #[ignore]d because they need artifacts + the PJRT
+runtime).",
+        "artifacts" => "\
+usage: xmgrid artifacts [--artifacts-dir DIR]
+
+List every artifact in the manifest with kind and I/O arity.",
+        "help" => "\
+usage: xmgrid help [command]
+
+Print global usage, or detailed options for one command.",
+        _ => return None,
+    })
+}
+
+fn print_global_help() {
+    println!("{GLOBAL_HELP}");
+}
+
+fn cmd_help(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some(cmd) => match command_help(cmd) {
+            Some(text) => {
+                println!("{text}");
+                Ok(())
+            }
+            None => {
+                println!("no such command `{cmd}`\n");
+                print_global_help();
+                Ok(())
+            }
+        },
+        None => {
+            print_global_help();
             Ok(())
         }
     }
@@ -131,10 +303,12 @@ fn cmd_gen_benchmark(args: &Args) -> Result<()> {
 }
 
 fn cmd_rollout(args: &Args) -> Result<()> {
-    let rt = Runtime::new(&artifacts_dir(args))?;
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
     let batch = args.usize_or("batch", 1024);
     let chunks = args.usize_or("chunks", 4);
-    let rolls = rt.manifest.of_kind("env_rollout");
+    let cfg = shard_config(args)?;
+    let rolls = manifest.of_kind("env_rollout");
     let spec = rolls
         .iter()
         .find(|s| s.meta_usize("B").unwrap() == batch)
@@ -142,31 +316,49 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         .context("no env_rollout artifacts; run `make artifacts`")?;
     let fam = EnvFamily::from_spec(spec)?;
     let t = spec.meta_usize("T")?;
-    println!("artifact {} (B={} T={t})", spec.name, fam.b);
+    println!(
+        "artifact {} (B={} T={t}) shards={} overlap={}",
+        spec.name, fam.b, cfg.shards, cfg.overlap
+    );
 
-    let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
-    let mut rng = Rng::new(args.u64_or("seed", 0));
-    let mut pool = EnvPool::new(&rt, fam, args.usize_or("rooms", 1))?;
-    let rulesets = pool.sample_rulesets(&bench, &mut rng);
-    pool.reset(&rulesets, &mut rng)?;
+    let bench =
+        Arc::new(load_benchmark(&args.str_or("benchmark", "trivial-1k"))?);
+    let engine =
+        RolloutEngine::launch(dir, spec.name.clone(), bench, cfg)?;
 
-    let t0 = std::time::Instant::now();
-    let mut total_steps = 0u64;
-    for c in 0..chunks {
-        let (reward, episodes, trials) = pool.rollout(&rt, t, &mut rng)?;
-        total_steps += (fam.b * t) as u64;
-        let sps = total_steps as f64 / t0.elapsed().as_secs_f64();
-        println!(
-            "chunk {c}: steps={} reward={reward:.1} episodes={episodes} \
-             trials={trials} cum-sps={}",
-            fam.b * t, fmt_sps(sps)
-        );
-    }
+    let totals = if cfg.shards == 1 {
+        let mut meter = ThroughputMeter::new();
+        engine.collect(chunks, |c| {
+            meter.add(c.steps);
+            println!(
+                "chunk {}: steps={} reward={:.1} episodes={} \
+                 trials={} shard-secs={:.3} cum-sps={}",
+                c.round, c.steps, c.reward_sum, c.episodes, c.trials,
+                c.secs, fmt_sps(meter.sps())
+            );
+        })?
+    } else {
+        // Windowed reporting: one aggregate line per `shards` chunks.
+        engine.collect_windowed(chunks, cfg.shards, |w, win| {
+            println!(
+                "window {w:>3}: steps={} reward={:.1} episodes={} \
+                 trials={} window-sps={}",
+                win.steps, win.reward_sum, win.episodes, win.trials,
+                fmt_sps(win.sps())
+            );
+        })?
+    };
+    println!(
+        "total: shards={} overlap={} steps={} elapsed={:.2}s sps={}",
+        cfg.shards, cfg.overlap, totals.steps, totals.elapsed,
+        fmt_sps(totals.sps())
+    );
     Ok(())
 }
 
-fn pick_train_artifact(rt: &Runtime, batch: usize) -> Result<String> {
-    let arts = rt.manifest.of_kind("train_iter");
+fn pick_train_artifact(manifest: &Manifest, batch: usize)
+                       -> Result<String> {
+    let arts = manifest.of_kind("train_iter");
     let spec = arts
         .iter()
         .find(|s| s.meta_usize("B").unwrap() == batch)
@@ -178,16 +370,27 @@ fn pick_train_artifact(rt: &Runtime, batch: usize) -> Result<String> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let scfg = {
+        // train defaults its seed to the Table 6 seed, not 0
+        let mut c = shard_config(args)?;
+        c.seed = args.u64_or("seed", TrainConfig::default().train_seed);
+        c
+    };
+    if scfg.shards > 1 {
+        return cmd_train_sharded(args, scfg);
+    }
     let rt = Runtime::new(&artifacts_dir(args))?;
     let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
     let iters = args.usize_or("iters", 50);
     let artifact = match args.get("artifact") {
         Some(a) => a.to_string(),
-        None => pick_train_artifact(&rt, args.usize_or("batch", 256))?,
+        None => {
+            pick_train_artifact(&rt.manifest, args.usize_or("batch", 256))?
+        }
     };
-    let rooms = args.usize_or("rooms", 1);
+    let rooms = scfg.rooms;
     let mut cfg = TrainConfig::default();
-    cfg.train_seed = args.u64_or("seed", cfg.train_seed);
+    cfg.train_seed = scfg.seed;
     cfg.task_resample_iters =
         args.usize_or("resample", cfg.task_resample_iters);
     let eval_every = args.usize_or("eval-every", 0);
@@ -251,10 +454,98 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `train --shards K`: the data-parallel shard engine path.
+fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let bench =
+        Arc::new(load_benchmark(&args.str_or("benchmark", "trivial-1k"))?);
+    let iters = args.usize_or("iters", 50);
+    let artifact = match args.get("artifact") {
+        Some(a) => a.to_string(),
+        None => pick_train_artifact(&manifest, args.usize_or("batch", 256))?,
+    };
+    // seed flows through scfg.seed; ShardedTrainer::launch derives the
+    // per-shard train seeds from it
+    let mut cfg = TrainConfig::default();
+    cfg.task_resample_iters =
+        args.usize_or("resample", cfg.task_resample_iters);
+    let eval_every = args.usize_or("eval-every", 0);
+    let eval_art = manifest
+        .of_kind("eval_rollout")
+        .iter()
+        .map(|s| s.name.clone())
+        .next();
+
+    println!(
+        "training with {artifact} on {} ({} tasks) — {} shards, overlap {}",
+        bench.name, bench.num_rulesets(), scfg.shards, scfg.overlap
+    );
+    let mut engine = ShardedTrainer::launch(dir, artifact, bench, scfg,
+                                            cfg)?;
+
+    let csv_path = PathBuf::from(
+        args.str_or("log", "artifacts/train_log.csv"));
+    let mut log = CsvLog::create(&csv_path, &[
+        "iter", "env_steps", "loss", "pi_loss", "v_loss", "entropy",
+        "approx_kl", "reward_per_step", "trials", "sps",
+    ])?;
+
+    let mut meter = ThroughputMeter::new();
+    let mut done = 0usize;
+    while done < iters {
+        let n = if eval_every > 0 {
+            eval_every.min(iters - done)
+        } else {
+            iters - done
+        };
+        engine.train(n, |i, m| {
+            meter.add(m.env_steps);
+            let sps = meter.sps();
+            log.row(&[
+                i.to_string(), meter.steps().to_string(),
+                format!("{:.4}", m.total_loss),
+                format!("{:.4}", m.pi_loss),
+                format!("{:.4}", m.v_loss),
+                format!("{:.4}", m.entropy),
+                format!("{:.5}", m.approx_kl),
+                format!("{:.5}", m.reward_sum / m.env_steps as f32),
+                m.trials.to_string(), format!("{sps:.0}"),
+            ])
+            .with_context(|| format!("writing {csv_path:?}"))?;
+            if i % 10 == 0 || i == iters {
+                println!(
+                    "iter {i:>4} steps {:>9} loss {:+.4} ent {:.3} \
+                     r/step {:.4} trials {:>5} sps {}",
+                    meter.steps(), m.total_loss, m.entropy,
+                    m.reward_sum / m.env_steps as f32, m.trials,
+                    fmt_sps(sps)
+                );
+            }
+            Ok(())
+        })?;
+        done += n;
+        if eval_every > 0 && done % eval_every == 0 {
+            if let Some(ea) = &eval_art {
+                let st = engine.evaluate(ea, scfg.rooms)?;
+                println!(
+                    "  eval: return mean {:.3} P20 {:.3} per-trial {:.3} \
+                     (tasks {})",
+                    st.return_mean, st.return_p20, st.per_trial_mean,
+                    st.num_tasks
+                );
+            }
+        }
+    }
+    println!("log written to {csv_path:?}");
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = Runtime::new(&artifacts_dir(args))?;
     let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
-    let artifact = pick_train_artifact(&rt, args.usize_or("batch", 256))?;
+    let artifact =
+        pick_train_artifact(&rt.manifest, args.usize_or("batch", 256))?;
     let rooms = args.usize_or("rooms", 1);
     let mut trainer =
         Trainer::new(&rt, &artifact, rooms, TrainConfig::default())?;
@@ -284,7 +575,8 @@ fn cmd_validate(args: &Args) -> Result<()> {
         bail!("no env_step artifacts in manifest");
     }
     println!("{} env_step artifacts available; run `cargo test --test \
-              cross_validation` for the full transition-level check",
+              cross_validation -- --ignored` for the full \
+              transition-level check",
              steps.len());
     for s in steps {
         let art = rt.load(&s.name)?;

@@ -1,7 +1,7 @@
 //! PJRT runtime: loads AOT artifacts (HLO text), compiles them once on the
 //! CPU PJRT client, and executes them from the L3 hot path.
 //!
-//! Interchange format is HLO *text* (see DESIGN.md / aot_recipe): the
+//! Interchange format is HLO *text* (see docs/ARCHITECTURE.md, "HLO-text interchange"): the
 //! image's xla_extension 0.5.1 rejects jax>=0.5 serialized protos, while the
 //! text parser reassigns instruction ids and round-trips cleanly.
 
@@ -200,32 +200,52 @@ impl Runtime {
         Ok(artifact)
     }
 
+    /// Warm the compile cache: load + compile every named artifact now,
+    /// so the engines' first timed chunk measures stepping rather than
+    /// HLO compilation.
+    pub fn preload(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.load(name)?;
+        }
+        Ok(())
+    }
+
     /// Initial network parameters written by aot.py (`params_init.bin`,
     /// f32, concatenated in `paramshapes` order).
     pub fn load_params_init(&self) -> Result<Vec<Tensor>> {
-        let path = self.dir.join("params_init.bin");
-        let bytes = std::fs::read(&path)
-            .with_context(|| format!("reading {path:?}"))?;
-        let mut params = Vec::new();
-        let mut off = 0usize;
-        for (name, dims) in &self.manifest.param_shapes {
-            let n: usize = dims.iter().product();
-            let end = off + n * 4;
-            if end > bytes.len() {
-                bail!("params_init.bin truncated at {name}");
-            }
-            let vals: Vec<f32> = bytes[off..end]
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                .collect();
-            params.push(Tensor::F32(vals));
-            off = end;
-        }
-        if off != bytes.len() {
-            bail!("params_init.bin has trailing bytes");
-        }
-        Ok(params)
+        load_params_init_from(&self.dir, &self.manifest)
     }
+}
+
+/// [`Runtime::load_params_init`] without a `Runtime`: reads
+/// `params_init.bin` given the artifacts dir and a parsed manifest. The
+/// sharded trainer's host thread uses this for its master copy — the
+/// host coordinates but never owns a PJRT client; clients live one per
+/// shard thread.
+pub fn load_params_init_from(dir: &Path, manifest: &Manifest)
+                             -> Result<Vec<Tensor>> {
+    let path = dir.join("params_init.bin");
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading {path:?}"))?;
+    let mut params = Vec::new();
+    let mut off = 0usize;
+    for (name, dims) in &manifest.param_shapes {
+        let n: usize = dims.iter().product();
+        let end = off + n * 4;
+        if end > bytes.len() {
+            bail!("params_init.bin truncated at {name}");
+        }
+        let vals: Vec<f32> = bytes[off..end]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        params.push(Tensor::F32(vals));
+        off = end;
+    }
+    if off != bytes.len() {
+        bail!("params_init.bin has trailing bytes");
+    }
+    Ok(params)
 }
 
 #[cfg(test)]
@@ -256,4 +276,5 @@ mod tests {
         let t = Tensor::I32(vec![1, 2, 3]);
         assert!(t.to_literal(&[2, 2]).is_err());
     }
+
 }

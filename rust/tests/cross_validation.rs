@@ -3,7 +3,13 @@
 //!
 //! This is the repository's core correctness claim: two independent
 //! implementations of the paper's semantics (Tables 1-3, §2) agree
-//! transition-for-transition. Requires `make artifacts` (quick or full).
+//! transition-for-transition.
+//!
+//! Every test here executes compiled HLO through PJRT, so the whole file
+//! is `#[ignore]`d: the offline CI image has neither the AOT artifacts
+//! (`make artifacts` needs the JAX toolchain) nor the xla_extension
+//! runtime. Run with `cargo test --test cross_validation -- --ignored`
+//! on a host with both.
 
 use std::path::Path;
 
@@ -72,6 +78,9 @@ fn random_state(h: usize, w: usize, mr: usize, mi: usize, seed: u64)
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn rust_and_hlo_step_agree_over_random_walks() {
     let rt = runtime();
     let (name, h, w, mr, mi, b) = smallest_step(&rt);
@@ -155,6 +164,9 @@ fn rust_and_hlo_step_agree_over_random_walks() {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn hlo_reset_respects_placement_invariants() {
     let rt = runtime();
     let (_, h, w, mr, mi, b) = smallest_step(&rt);
@@ -204,6 +216,9 @@ fn hlo_reset_respects_placement_invariants() {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn hlo_rollout_runs_and_counts_trials() {
     let rt = runtime();
     let rolls = rt.manifest.of_kind("env_rollout");

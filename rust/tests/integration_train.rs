@@ -1,6 +1,11 @@
 //! Integration: the full training stack — benchmark generation → env pool
 //! reset → fused train_iter (collect + PPO update) → evaluation protocol.
-//! Requires `make artifacts` (quick or full).
+//!
+//! Every test here executes compiled HLO through PJRT, so the whole file
+//! is `#[ignore]`d: the offline CI image has neither the AOT artifacts
+//! (`make artifacts` needs the JAX toolchain) nor the xla_extension
+//! runtime. Run with `cargo test --test integration_train -- --ignored`
+//! on a host with both.
 
 use std::path::Path;
 
@@ -32,6 +37,9 @@ fn trivial_bench(mr: usize, mi: usize, n: usize) -> Benchmark {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn train_iter_updates_params_and_reports_metrics() {
     let rt = runtime();
     let name = smallest_train_artifact(&rt);
@@ -62,6 +70,9 @@ fn train_iter_updates_params_and_reports_metrics() {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn task_resampling_changes_tasks_but_keeps_params() {
     let rt = runtime();
     let name = smallest_train_artifact(&rt);
@@ -82,6 +93,9 @@ fn task_resampling_changes_tasks_but_keeps_params() {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn evaluation_protocol_reports_percentiles() {
     let rt = runtime();
     let name = smallest_train_artifact(&rt);
@@ -109,6 +123,9 @@ fn evaluation_protocol_reports_percentiles() {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn policy_step_artifact_runs() {
     let rt = runtime();
     let specs = rt.manifest.of_kind("policy_step");
@@ -138,6 +155,9 @@ fn policy_step_artifact_runs() {
 }
 
 #[test]
+#[ignore = "requires compiled AOT artifacts (make artifacts) and the \
+            xla_extension PJRT runtime, neither of which exists in the \
+            offline CI image"]
 fn render_rgb_artifact_runs() {
     let rt = runtime();
     let specs = rt.manifest.of_kind("render_rgb");

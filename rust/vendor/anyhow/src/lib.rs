@@ -1,0 +1,303 @@
+//! Minimal offline stand-in for the `anyhow` crate, implementing the
+//! subset this repository uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait for `Result` and `Option`, and the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros.
+//!
+//! Semantics match real anyhow where it matters here:
+//! - any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! - context wraps errors into a cause chain;
+//! - `{}` displays the outermost message, `{:#}` the whole chain
+//!   separated by `: `, and `{:?}` the chain in "Caused by" form.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    /// A plain message error (from `anyhow!` / `bail!`).
+    Msg(String),
+    /// A wrapped foreign error.
+    Std(Box<dyn StdError + Send + Sync + 'static>),
+    /// A context layer over another error.
+    Context { msg: String, source: Box<Error> },
+}
+
+/// Dynamic error type: a message or wrapped error plus a context chain.
+pub struct Error {
+    repr: Repr,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { repr: Repr::Msg(msg.to_string()) }
+    }
+
+    /// Construct from a standard error (what `?` does).
+    pub fn new<E>(err: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { repr: Repr::Std(Box::new(err)) }
+    }
+
+    /// Wrap with a context message (outermost in the chain).
+    pub fn context<C: fmt::Display>(self, msg: C) -> Error {
+        Error {
+            repr: Repr::Context {
+                msg: msg.to_string(),
+                source: Box::new(self),
+            },
+        }
+    }
+
+    /// The cause chain, outermost message first.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut cur = self;
+        loop {
+            match &cur.repr {
+                Repr::Msg(m) => {
+                    out.push(m.clone());
+                    break;
+                }
+                Repr::Std(e) => {
+                    out.push(e.to_string());
+                    let mut src = e.source();
+                    while let Some(s) = src {
+                        out.push(s.to_string());
+                        src = s.source();
+                    }
+                    break;
+                }
+                Repr::Context { msg, source } => {
+                    out.push(msg.clone());
+                    cur = &**source;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        if f.alternate() {
+            f.write_str(&chain.join(": "))
+        } else {
+            f.write_str(&chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T, E>: sealed::Sealed {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoAnyhow,
+{
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_anyhow().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+mod ext {
+    use super::*;
+
+    /// Conversion into [`Error`], implemented for both standard errors
+    /// and `Error` itself (which deliberately does *not* implement
+    /// `std::error::Error`, keeping the two impls coherent — the same
+    /// construction real anyhow uses).
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> Error;
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> Error {
+            Error::new(self)
+        }
+    }
+
+    impl IntoAnyhow for Error {
+        fn into_anyhow(self) -> Error {
+            self
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> where E: super::ext::IntoAnyhow {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Error = Error::new(io_err());
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u8> = None;
+        let err = none.context("missing").unwrap_err();
+        assert_eq!(format!("{err}"), "missing");
+
+        let r: Result<u8, std::io::Error> = Err(io_err());
+        let err = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{err:#}"), "step 3: gone");
+
+        let rr: Result<u8> = Err(anyhow!("inner"));
+        let err = rr.context("outer").unwrap_err();
+        assert_eq!(format!("{err:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn macros() {
+        fn b() -> Result<()> {
+            bail!("bad {}", 7);
+        }
+        assert_eq!(format!("{}", b().unwrap_err()), "bad 7");
+
+        fn e(x: u8) -> Result<u8> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert!(e(5).is_ok());
+        assert_eq!(format!("{}", e(11).unwrap_err()), "x too big: 11");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::new(io_err()).context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("gone"));
+    }
+}

@@ -1,0 +1,669 @@
+//! Minimal offline stand-in for the `flate2` crate: a real (if compact)
+//! gzip implementation covering the surface this repository uses.
+//!
+//! - [`write::GzEncoder`] emits RFC 1952 gzip framing around a single
+//!   RFC 1951 *fixed-Huffman* DEFLATE block with greedy hash-chain LZ77
+//!   matching — genuinely compressing (the benchmark store's Table 5
+//!   raw-vs-gz comparison holds), readable by any gzip tool. The
+//!   compression level is accepted and ignored.
+//! - [`read::GzDecoder`] is a full inflate: stored, fixed-Huffman and
+//!   dynamic-Huffman blocks, gzip header option fields, CRC32 + ISIZE
+//!   verification — it reads real gzip output, not just its own.
+//!
+//! The algorithms were cross-validated against a reference zlib: encoder
+//! output decodes with reference gzip, and the decoder reads reference
+//! gzip output (dynamic blocks) bit-exactly.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+
+/// Compression level knob, accepted for API compatibility and ignored
+/// (the fixed-Huffman encoder has a single operating point).
+#[derive(Clone, Copy, Debug)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+}
+
+/// CRC-32 (IEEE 802.3), bitwise — fine for benchmark-store sizes.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+// RFC 1951 length/distance code tables.
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51,
+    59, 67, 83, 99, 115, 131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4,
+    4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385,
+    513, 769, 1025, 1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385,
+    24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10,
+    10, 11, 11, 12, 12, 13, 13,
+];
+/// Order in which code-length code lengths appear in a dynamic header.
+const CLEN_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+/// Canonical Huffman codes from code lengths (RFC 1951 §3.2.2):
+/// `codes[sym] = (code, len)`, len 0 = unused symbol.
+fn build_codes(lens: &[u8]) -> Vec<(u16, u8)> {
+    let max_len = lens.iter().copied().max().unwrap_or(0) as usize;
+    let mut bl_count = vec![0u16; max_len + 1];
+    for &l in lens {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = vec![0u16; max_len + 2];
+    let mut code = 0u16;
+    for l in 1..=max_len {
+        code = (code + bl_count[l - 1]) << 1;
+        next_code[l] = code;
+    }
+    lens.iter()
+        .map(|&l| {
+            if l == 0 {
+                (0, 0)
+            } else {
+                let c = next_code[l as usize];
+                next_code[l as usize] += 1;
+                (c, l)
+            }
+        })
+        .collect()
+}
+
+fn fixed_lit_lens() -> Vec<u8> {
+    (0..288)
+        .map(|i| {
+            if i < 144 {
+                8
+            } else if i < 256 {
+                9
+            } else if i < 280 {
+                7
+            } else {
+                8
+            }
+        })
+        .collect()
+}
+
+fn fixed_dist_lens() -> Vec<u8> {
+    vec![5; 30]
+}
+
+// ---------------------------------------------------------------- encode
+
+/// LSB-first bit accumulator; Huffman codes go in MSB-first.
+struct BitWriter {
+    out: Vec<u8>,
+    bitbuf: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter { out: Vec::new(), bitbuf: 0, nbits: 0 }
+    }
+
+    fn put(&mut self, value: u32, nbits: u32) {
+        debug_assert!(nbits <= 16);
+        self.bitbuf |= (value & ((1 << nbits) - 1)) << self.nbits;
+        self.nbits += nbits;
+        while self.nbits >= 8 {
+            self.out.push((self.bitbuf & 0xFF) as u8);
+            self.bitbuf >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn put_code(&mut self, code: u16, nbits: u8) {
+        let mut rev = 0u32;
+        for i in 0..nbits {
+            rev |= (((code >> i) & 1) as u32) << (nbits - 1 - i);
+        }
+        self.put(rev, nbits as u32);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.bitbuf & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+const WINDOW: usize = 32768;
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const HASH_BITS: u32 = 15;
+const MAX_CHAIN: usize = 64;
+
+fn hash3(a: u8, b: u8, c: u8) -> usize {
+    (((a as usize) << 10) ^ ((b as usize) << 5) ^ c as usize)
+        & ((1 << HASH_BITS) - 1)
+}
+
+/// `(code, extra_bits_value)` for a match length.
+fn len_to_code(length: usize) -> (usize, u16) {
+    let mut c = LEN_BASE.len() - 1;
+    for i in 0..LEN_BASE.len() - 1 {
+        if length < LEN_BASE[i + 1] as usize {
+            c = i;
+            break;
+        }
+    }
+    (257 + c, (length - LEN_BASE[c] as usize) as u16)
+}
+
+fn dist_to_code(dist: usize) -> (usize, u16) {
+    let mut c = DIST_BASE.len() - 1;
+    for i in 0..DIST_BASE.len() - 1 {
+        if dist < DIST_BASE[i + 1] as usize {
+            c = i;
+            break;
+        }
+    }
+    (c, (dist - DIST_BASE[c] as usize) as u16)
+}
+
+/// One final fixed-Huffman block over the whole payload, greedy LZ77.
+fn deflate_fixed(data: &[u8]) -> Vec<u8> {
+    let lit = build_codes(&fixed_lit_lens());
+    let dst = build_codes(&fixed_dist_lens());
+    let mut w = BitWriter::new();
+    w.put(1, 1); // BFINAL
+    w.put(1, 2); // BTYPE = 01 (fixed)
+    let n = data.len();
+    let mut head = vec![-1i64; 1 << HASH_BITS];
+    let mut prev = vec![-1i64; n];
+    let mut pos = 0usize;
+    let insert = |head: &mut [i64], prev: &mut [i64], p: usize| {
+        if p + MIN_MATCH <= n {
+            let h = hash3(data[p], data[p + 1], data[p + 2]);
+            prev[p] = head[h];
+            head[h] = p as i64;
+        }
+    };
+    while pos < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if pos + MIN_MATCH <= n {
+            let h = hash3(data[pos], data[pos + 1], data[pos + 2]);
+            let mut cand = head[h];
+            let mut chain = 0usize;
+            while cand >= 0
+                && chain < MAX_CHAIN
+                && pos - cand as usize <= WINDOW
+            {
+                let c = cand as usize;
+                let maxl = MAX_MATCH.min(n - pos);
+                let mut l = 0usize;
+                while l < maxl && data[c + l] == data[pos + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = pos - c;
+                }
+                cand = prev[c];
+                chain += 1;
+            }
+        }
+        if best_len >= MIN_MATCH {
+            let (lc, lx) = len_to_code(best_len);
+            let (code, nb) = lit[lc];
+            w.put_code(code, nb);
+            w.put(lx as u32, LEN_EXTRA[lc - 257] as u32);
+            let (dc, dx) = dist_to_code(best_dist);
+            let (code, nb) = dst[dc];
+            w.put_code(code, nb);
+            w.put(dx as u32, DIST_EXTRA[dc] as u32);
+            let end = pos + best_len;
+            while pos < end {
+                insert(&mut head, &mut prev, pos);
+                pos += 1;
+            }
+        } else {
+            let (code, nb) = lit[data[pos] as usize];
+            w.put_code(code, nb);
+            insert(&mut head, &mut prev, pos);
+            pos += 1;
+        }
+    }
+    let (code, nb) = lit[256];
+    w.put_code(code, nb);
+    w.finish()
+}
+
+pub mod write {
+    use super::*;
+
+    /// Gzip writer. Input is buffered; the whole member is emitted on
+    /// [`GzEncoder::finish`].
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> GzEncoder<W> {
+            GzEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Write the gzip member and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            // header: magic, CM=deflate, no flags, mtime 0, XFL 0,
+            // OS 255 (unknown)
+            self.inner.write_all(&[
+                0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0x00, 0xff,
+            ])?;
+            self.inner.write_all(&deflate_fixed(&self.buf))?;
+            self.inner.write_all(&crc32(&self.buf).to_le_bytes())?;
+            self.inner
+                .write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    bitbuf: u32,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8], pos: usize) -> BitReader<'a> {
+        BitReader { data, pos, bitbuf: 0, nbits: 0 }
+    }
+
+    fn bits(&mut self, n: u32) -> io::Result<u32> {
+        if n == 0 {
+            return Ok(0);
+        }
+        while self.nbits < n {
+            if self.pos >= self.data.len() {
+                return Err(bad("unexpected end of deflate stream"));
+            }
+            self.bitbuf |= (self.data[self.pos] as u32) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let v = self.bitbuf & ((1 << n) - 1);
+        self.bitbuf >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    fn align_byte(&mut self) {
+        let drop = self.nbits % 8;
+        self.bitbuf >>= drop;
+        self.nbits -= drop;
+    }
+
+    /// Byte position of the first unconsumed byte (whole bytes sitting
+    /// in the bit buffer are given back; sub-byte padding is dropped).
+    fn byte_pos(&self) -> usize {
+        self.pos - (self.nbits / 8) as usize
+    }
+}
+
+/// Bit-at-a-time canonical (MSB-first) Huffman decoder.
+struct HuffDecoder {
+    map: HashMap<(u8, u16), u16>,
+    max_len: u8,
+}
+
+impl HuffDecoder {
+    fn new(lens: &[u8]) -> HuffDecoder {
+        let codes = build_codes(lens);
+        let mut map = HashMap::new();
+        let mut max_len = 0u8;
+        for (sym, &(code, len)) in codes.iter().enumerate() {
+            if len > 0 {
+                map.insert((len, code), sym as u16);
+                max_len = max_len.max(len);
+            }
+        }
+        HuffDecoder { map, max_len }
+    }
+
+    fn decode(&self, r: &mut BitReader) -> io::Result<u16> {
+        let mut code = 0u16;
+        for l in 1..=self.max_len {
+            code = (code << 1) | r.bits(1)? as u16;
+            if let Some(&sym) = self.map.get(&(l, code)) {
+                return Ok(sym);
+            }
+        }
+        Err(bad("invalid huffman code"))
+    }
+}
+
+/// Inflate all blocks; returns the payload (reader holds the position
+/// of the gzip trailer via `byte_pos`).
+fn inflate(r: &mut BitReader) -> io::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let bfinal = r.bits(1)?;
+        let btype = r.bits(2)?;
+        match btype {
+            0 => {
+                r.align_byte();
+                let len =
+                    (r.bits(8)? | (r.bits(8)? << 8)) as u16;
+                let nlen =
+                    (r.bits(8)? | (r.bits(8)? << 8)) as u16;
+                if nlen != !len {
+                    return Err(bad("stored LEN/NLEN mismatch"));
+                }
+                for _ in 0..len {
+                    out.push(r.bits(8)? as u8);
+                }
+            }
+            1 | 2 => {
+                let (litdec, dstdec) = if btype == 1 {
+                    (
+                        HuffDecoder::new(&fixed_lit_lens()),
+                        HuffDecoder::new(&fixed_dist_lens()),
+                    )
+                } else {
+                    let hlit = r.bits(5)? as usize + 257;
+                    let hdist = r.bits(5)? as usize + 1;
+                    let hclen = r.bits(4)? as usize + 4;
+                    let mut clen_lens = [0u8; 19];
+                    for i in 0..hclen {
+                        clen_lens[CLEN_ORDER[i]] = r.bits(3)? as u8;
+                    }
+                    let cdec = HuffDecoder::new(&clen_lens);
+                    let mut lens: Vec<u8> = Vec::new();
+                    while lens.len() < hlit + hdist {
+                        let sym = cdec.decode(r)?;
+                        match sym {
+                            0..=15 => lens.push(sym as u8),
+                            16 => {
+                                let rep = 3 + r.bits(2)? as usize;
+                                let last = *lens.last().ok_or_else(
+                                    || bad("repeat with no previous"),
+                                )?;
+                                for _ in 0..rep {
+                                    lens.push(last);
+                                }
+                            }
+                            17 => {
+                                let rep = 3 + r.bits(3)? as usize;
+                                lens.resize(lens.len() + rep, 0);
+                            }
+                            18 => {
+                                let rep = 11 + r.bits(7)? as usize;
+                                lens.resize(lens.len() + rep, 0);
+                            }
+                            _ => {
+                                return Err(bad("bad code-length code"))
+                            }
+                        }
+                    }
+                    (
+                        HuffDecoder::new(&lens[..hlit]),
+                        HuffDecoder::new(&lens[hlit..]),
+                    )
+                };
+                loop {
+                    let sym = litdec.decode(r)?;
+                    if sym == 256 {
+                        break;
+                    }
+                    if sym < 256 {
+                        out.push(sym as u8);
+                    } else {
+                        let li = sym as usize - 257;
+                        if li >= LEN_BASE.len() {
+                            return Err(bad("bad length code"));
+                        }
+                        let length = LEN_BASE[li] as usize
+                            + r.bits(LEN_EXTRA[li] as u32)? as usize;
+                        let dc = dstdec.decode(r)? as usize;
+                        if dc >= DIST_BASE.len() {
+                            return Err(bad("bad distance code"));
+                        }
+                        let dist = DIST_BASE[dc] as usize
+                            + r.bits(DIST_EXTRA[dc] as u32)? as usize;
+                        if dist > out.len() {
+                            return Err(bad("distance too far back"));
+                        }
+                        for _ in 0..length {
+                            out.push(out[out.len() - dist]);
+                        }
+                    }
+                }
+            }
+            _ => return Err(bad("reserved deflate block type")),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+pub mod read {
+    use super::*;
+
+    /// Gzip reader: full inflate + header/trailer handling.
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        decoded: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(inner: R) -> GzDecoder<R> {
+            GzDecoder { inner: Some(inner), decoded: Vec::new(), pos: 0 }
+        }
+
+        fn decode_all(&mut self) -> io::Result<()> {
+            let mut raw = Vec::new();
+            match self.inner.take() {
+                Some(mut r) => r.read_to_end(&mut raw)?,
+                None => return Ok(()), // already decoded
+            };
+            if raw.len() < 18 {
+                return Err(bad("gzip member too short"));
+            }
+            if raw[0] != 0x1f || raw[1] != 0x8b {
+                return Err(bad("not a gzip stream (bad magic)"));
+            }
+            if raw[2] != 0x08 {
+                return Err(bad("unknown gzip compression method"));
+            }
+            let flg = raw[3];
+            let mut p = 10usize;
+            if flg & 0x04 != 0 {
+                if p + 2 > raw.len() {
+                    return Err(bad("truncated FEXTRA"));
+                }
+                let xlen =
+                    u16::from_le_bytes([raw[p], raw[p + 1]]) as usize;
+                p += 2 + xlen;
+            }
+            if flg & 0x08 != 0 {
+                while p < raw.len() && raw[p] != 0 {
+                    p += 1;
+                }
+                p += 1;
+            }
+            if flg & 0x10 != 0 {
+                while p < raw.len() && raw[p] != 0 {
+                    p += 1;
+                }
+                p += 1;
+            }
+            if flg & 0x02 != 0 {
+                p += 2;
+            }
+            if p >= raw.len() {
+                return Err(bad("truncated gzip header"));
+            }
+
+            let mut r = BitReader::new(&raw, p);
+            let out = inflate(&mut r)?;
+            let tp = r.byte_pos();
+            if tp + 8 > raw.len() {
+                return Err(bad("missing gzip trailer"));
+            }
+            let crc = u32::from_le_bytes([
+                raw[tp], raw[tp + 1], raw[tp + 2], raw[tp + 3],
+            ]);
+            let isz = u32::from_le_bytes([
+                raw[tp + 4], raw[tp + 5], raw[tp + 6], raw[tp + 7],
+            ]);
+            if crc != crc32(&out) {
+                return Err(bad("gzip CRC mismatch"));
+            }
+            if isz != out.len() as u32 {
+                return Err(bad("gzip ISIZE mismatch"));
+            }
+            self.decoded = out;
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.inner.is_some() {
+                self.decode_all()?;
+            }
+            let n = buf.len().min(self.decoded.len() - self.pos);
+            buf[..n]
+                .copy_from_slice(&self.decoded[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compress(data: &[u8]) -> Vec<u8> {
+        let mut enc =
+            write::GzEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(data).unwrap();
+        enc.finish().unwrap()
+    }
+
+    fn decompress(gz: &[u8]) -> io::Result<Vec<u8>> {
+        let mut dec = read::GzDecoder::new(gz);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out)?;
+        Ok(out)
+    }
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        decompress(&compress(data)).unwrap()
+    }
+
+    #[test]
+    fn roundtrips_small_and_empty() {
+        assert_eq!(roundtrip(b"hello gzip"), b"hello gzip");
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"a"), b"a");
+    }
+
+    #[test]
+    fn roundtrips_large_repetitive_and_compresses() {
+        let big: Vec<u8> =
+            (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        let gz = compress(&big);
+        assert!(gz.len() < big.len() / 10,
+                "repetitive data must compress well ({} vs {})",
+                gz.len(), big.len());
+        assert_eq!(decompress(&gz).unwrap(), big);
+    }
+
+    #[test]
+    fn roundtrips_incompressible() {
+        // xorshift noise: no matches, pure literal path
+        let mut x = 0x12345678u32;
+        let noise: Vec<u8> = (0..10_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                (x & 0xFF) as u8
+            })
+            .collect();
+        assert_eq!(roundtrip(&noise), noise);
+    }
+
+    #[test]
+    fn decodes_stored_blocks() {
+        // hand-built gzip member with one final stored block "abc"
+        let payload = b"abc";
+        let mut gz = vec![
+            0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0x00, 0xff, // header
+            0x01, 3, 0, 0xfc, 0xff, // BFINAL=1 BTYPE=00, LEN, NLEN
+        ];
+        gz.extend_from_slice(payload);
+        gz.extend_from_slice(&crc32(payload).to_le_bytes());
+        gz.extend_from_slice(&3u32.to_le_bytes());
+        assert_eq!(decompress(&gz).unwrap(), payload);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut gz = compress(b"payload payload payload");
+        let k = gz.len() - 10;
+        gz[k] ^= 0xff;
+        assert!(decompress(&gz).is_err());
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // CRC-32("123456789") is the classic check value 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,296 @@
+//! Offline stub of the `xla` crate (xla-rs bindings over xla_extension).
+//!
+//! Two halves with different fidelity:
+//!
+//! - **Host-side literals are real.** [`Literal`] stores shape + bytes,
+//!   converts to/from typed vecs, and supports tuples — enough for the
+//!   runtime's tensor round-trip logic and its unit tests to work
+//!   without any native library.
+//! - **The device runtime is honestly absent.** [`PjRtClient::cpu`]
+//!   returns an error explaining that the native xla_extension PJRT
+//!   plugin is not part of this offline build. Everything that would
+//!   need a device (compile, execute) is unreachable behind that error,
+//!   so callers fail fast at `Runtime::new` with a clear message instead
+//!   of deep inside a call chain.
+//!
+//! Like the real bindings, the PJRT handle types are deliberately
+//! `!Send` (raw-pointer marker): shard workers must construct their own
+//! client inside their own thread, which is exactly the discipline the
+//! coordinator's shard engine enforces.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Error type matching the real crate's role: convertible into
+/// `anyhow::Error` via `?`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+const UNAVAILABLE: &str =
+    "the native xla_extension (PJRT) runtime is not part of this \
+     offline build — rust/vendor/xla is a host-side stub. Install \
+     xla_extension and replace the vendored stub with the real xla \
+     crate to execute compiled artifacts";
+
+/// Marker making a handle type `!Send + !Sync`, like the real C++
+/// handle wrappers.
+type NotSend = PhantomData<*const ()>;
+
+/// Element types crossing the PJRT boundary (subset used here).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    S32,
+    U32,
+    F32,
+}
+
+impl ElementType {
+    fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> i32 {
+        i32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn from_le_bytes(b: [u8; 4]) -> u32 {
+        u32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+enum LiteralRepr {
+    Array {
+        ty: ElementType,
+        dims: Vec<usize>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: dense array bytes + shape, or a tuple.
+pub struct Literal {
+    repr: LiteralRepr,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect: usize =
+            dims.iter().product::<usize>() * ty.size_bytes();
+        if expect != data.len() {
+            return err(format!(
+                "literal data has {} bytes, shape {:?} wants {}",
+                data.len(),
+                dims,
+                expect
+            ));
+        }
+        Ok(Literal {
+            repr: LiteralRepr::Array {
+                ty,
+                dims: dims.to_vec(),
+                data: data.to_vec(),
+            },
+        })
+    }
+
+    /// Build a tuple literal (what executables return with
+    /// `return_tuple=True`).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { repr: LiteralRepr::Tuple(elements) }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            LiteralRepr::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return err(format!(
+                        "literal is {ty:?}, requested {:?}",
+                        T::TY
+                    ));
+                }
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|b| {
+                        T::from_le_bytes([b[0], b[1], b[2], b[3]])
+                    })
+                    .collect())
+            }
+            LiteralRepr::Tuple(_) => err("literal is a tuple"),
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            LiteralRepr::Tuple(els) => Ok(els),
+            LiteralRepr::Array { .. } => {
+                err("literal is not a tuple")
+            }
+        }
+    }
+
+    pub fn element_type(&self) -> Result<ElementType> {
+        match &self.repr {
+            LiteralRepr::Array { ty, .. } => Ok(*ty),
+            LiteralRepr::Tuple(_) => err("tuple has no element type"),
+        }
+    }
+}
+
+/// Parsed HLO module handle. The stub keeps the text so parse errors
+/// (missing file, non-UTF8) still surface at load time.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle built from a module proto.
+pub struct XlaComputation {
+    _not_send: NotSend,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _not_send: PhantomData }
+    }
+}
+
+/// PJRT client handle. In this stub, construction always fails with an
+/// explanatory error (see crate docs).
+pub struct PjRtClient {
+    _not_send: NotSend,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        err(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        err(UNAVAILABLE)
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer {
+    _not_send: NotSend,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(UNAVAILABLE)
+    }
+}
+
+/// Loaded executable handle.
+pub struct PjRtLoadedExecutable {
+    _not_send: NotSend,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let vals: Vec<i32> = vec![1, -2, 3];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vals);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 12],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::U32,
+            &[1],
+            &1u32.to_le_bytes(),
+        )
+        .unwrap();
+        let t = Literal::tuple(vec![a]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].to_vec::<u32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline"));
+    }
+}
