@@ -1,18 +1,20 @@
 //! Throughput sweep (the Fig. 5a experience as a runnable example):
 //! random-policy simulation throughput vs number of parallel environments,
-//! comparing the fused AOT rollout against the pure-Rust CPU loop (the
-//! EnvPool-style baseline every JAX-env paper compares against).
+//! comparing the native vectorized SoA engine and the fused AOT rollout
+//! against the pure-Rust CPU loop (the EnvPool-style baseline every
+//! JAX-env paper compares against). The native and scalar sections need
+//! no artifacts; the XLA section is skipped without them.
 //!
 //! Run: `cargo run --release --example throughput -- [--chunks N]`
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::Path;
 use std::time::Instant;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::EnvPool;
+use xmgrid::coordinator::{EnvPool, NativeEnvConfig, NativePool};
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::env::Grid;
 use xmgrid::util::args::Args;
@@ -22,33 +24,59 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let chunks = args.usize_or("chunks", 2);
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = xmgrid::runtime::Runtime::new(&dir)
-        .context("run `make artifacts` first")?;
 
     let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
     let bench = Benchmark { name: "trivial".into(), rulesets };
     let mut rng = Rng::new(0);
 
-    // --- AOT fused rollouts, every compiled batch size -------------------
-    println!("== XLA batched rollout (auto-reset on, random policy)");
-    let mut rolls = rt.manifest.of_kind("env_rollout");
-    rolls.sort_by_key(|s| {
-        (s.meta_usize("H").unwrap(), s.meta_usize("B").unwrap())
-    });
-    for spec in rolls {
-        let fam = EnvFamily::from_spec(spec)?;
-        let t = spec.meta_usize("T")?;
-        let mut pool = EnvPool::new(&rt, fam, 1)?;
-        let rs = pool.sample_rulesets(&bench, &mut rng);
-        pool.reset(&rs, &mut rng)?;
-        pool.rollout(&rt, t, &mut rng)?; // warmup (compile+first run)
+    // --- native vectorized SoA engine (no artifacts) ---------------------
+    println!("== native vectorized rollout (VecEnv SoA kernels, 13x13)");
+    for batch in [16usize, 256, 1024] {
+        let t = 128usize;
+        let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13",
+                                            batch, t, &bench)?;
+        let mut pool = NativePool::new(ncfg);
+        pool.reset(&bench, &mut rng);
+        pool.rollout(t, &mut rng); // warmup (buffer first-touch)
         let t0 = Instant::now();
         for _ in 0..chunks {
-            pool.rollout(&rt, t, &mut rng)?;
+            pool.rollout(t, &mut rng);
         }
-        let sps = (fam.b * t * chunks) as f64 / t0.elapsed().as_secs_f64();
-        println!("  {:<38} envs={:<6} sps={}", spec.name, fam.b,
+        let sps = (batch * t * chunks) as f64
+            / t0.elapsed().as_secs_f64();
+        println!("  native-vec 13x13              envs={batch:<6} sps={}",
                  fmt_sps(sps));
+    }
+
+    // --- AOT fused rollouts, every compiled batch size -------------------
+    match xmgrid::runtime::Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("\n== XLA batched rollout (auto-reset on, random \
+                      policy)");
+            let mut rolls = rt.manifest.of_kind("env_rollout");
+            rolls.sort_by_key(|s| {
+                (s.meta_usize("H").unwrap(), s.meta_usize("B").unwrap())
+            });
+            for spec in rolls {
+                let fam = EnvFamily::from_spec(spec)?;
+                let t = spec.meta_usize("T")?;
+                let mut pool = EnvPool::new(&rt, fam, 1)?;
+                let rs = pool.sample_rulesets(&bench, &mut rng);
+                pool.reset(&rs, &mut rng)?;
+                pool.rollout(&rt, t, &mut rng)?; // warmup
+                let t0 = Instant::now();
+                for _ in 0..chunks {
+                    pool.rollout(&rt, t, &mut rng)?;
+                }
+                let sps = (fam.b * t * chunks) as f64
+                    / t0.elapsed().as_secs_f64();
+                println!("  {:<38} envs={:<6} sps={}", spec.name, fam.b,
+                         fmt_sps(sps));
+            }
+        }
+        Err(e) => {
+            println!("\n== XLA section skipped (no artifacts/PJRT): {e}");
+        }
     }
 
     // --- pure-Rust sequential loop (CPU baseline) -------------------------

@@ -2,115 +2,86 @@
 //! number of parallel environments. Paper protocol: minimum over repeats.
 //! Prints the log-log series; compare shapes, not absolute SPS (CPU here,
 //! A100 there — docs/ARCHITECTURE.md, "Hardware adaptation").
+//!
+//! Sections, in order:
+//! 1. native vectorized backend — `VecEnv` SoA batch kernels (always
+//!    runs, no artifacts needed);
+//! 2. scalar per-env loop baseline — the allocating `step()` oracle, the
+//!    EnvPool-style comparison point;
+//! 3. artifact-backed fused rollout + per-step dispatch (skipped with a
+//!    note when no PJRT runtime / artifacts are present).
+//!
+//! `--json [PATH]` writes `BENCH_fig5a_native.json` (machine-readable
+//! perf trajectory; validated by the CI smoke run). Env knobs:
+//! `XMG_MAX_B` caps the batch sweep, `XMG_BENCH_T` sets steps/chunk.
 
 use std::path::Path;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::EnvPool;
+use xmgrid::coordinator::{EnvPool, NativeEnvConfig, NativePool};
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::env::Grid;
 use xmgrid::runtime::Runtime;
-use xmgrid::util::bench::bench;
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{bench, json_arg_path, JsonReport};
 use xmgrid::util::rng::Rng;
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let args = Args::from_env();
+    let mut report = JsonReport::new("fig5a_native");
+    // XMG_MAX_B bounds the sweep (1-core CI default keeps runtimes sane)
+    let max_b = env_usize("XMG_MAX_B", 4096);
+    let t_steps = env_usize("XMG_BENCH_T", 64);
+
     let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
     let bench_tasks = Benchmark { name: "trivial".into(), rulesets };
     let mut rng = Rng::new(0);
 
     println!("# Fig 5a: simulation throughput vs num parallel envs");
     println!("# paper: log-log linear, saturation ~2^13 on one device");
-    // XMG_MAX_B bounds the sweep (1-core CI default keeps runtimes sane)
-    let max_b: usize = std::env::var("XMG_MAX_B")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(4096);
-    let mut rolls: Vec<_> = rt
-        .manifest
-        .of_kind("env_rollout")
-        .into_iter()
-        .filter(|s| s.meta_usize("H").unwrap() == 13
-                && s.meta_usize("B").unwrap() <= max_b)
-        .cloned()
-        .collect();
-    rolls.sort_by_key(|s| s.meta_usize("B").unwrap());
-    for spec in &rolls {
-        let fam = EnvFamily::from_spec(spec).unwrap();
-        let t = spec.meta_usize("T").unwrap();
-        let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
-        let tasks = pool.sample_rulesets(&bench_tasks, &mut rng);
-        pool.reset(&tasks, &mut rng).unwrap();
+
+    // --- native vectorized backend (VecEnv SoA kernels, 13x13) ----------
+    println!("\n# native vectorized backend (SoA batch kernels, 13x13)");
+    let mut native_1024 = None;
+    for &b in &[1usize, 16, 256, 1024, 4096] {
+        if b > max_b {
+            continue;
+        }
+        let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13", b,
+                                            t_steps, &bench_tasks)
+            .unwrap();
+        let mut pool = NativePool::new(ncfg);
+        let mut seed_rng = Rng::new(0);
+        pool.reset(&bench_tasks, &mut seed_rng);
         let mut r = Rng::new(7);
-        // large batches amortize dispatch already; 1 timed repeat suffices
-        let repeats = if fam.b >= 1024 { 1 } else { 2 };
-        let result = bench(&spec.name, 1, repeats, || {
-            pool.rollout(&rt, t, &mut r).unwrap();
+        let repeats = if b >= 1024 { 2 } else { 3 };
+        let result = bench("native-vec", 1, repeats, || {
+            pool.rollout(t_steps, &mut r);
         });
-        let sps = (fam.b * t) as f64 / result.min_secs;
-        println!("envs={:<6} steps/s={:<12.0} ({})", fam.b, sps,
-                 fmt_sps(sps));
+        let sps = (b * t_steps) as f64 / result.min_secs;
+        println!("envs={b:<6} steps/s={sps:<12.0} ({})", fmt_sps(sps));
+        report.add(&format!("native-vec-b{b}"), b, t_steps, &result);
+        if b == 1024 {
+            native_1024 = Some(sps);
+        }
     }
 
-    // per-step dispatch baseline (§Perf): the same env driven through the
-    // single-step artifact with one host<->device round-trip per step —
-    // what the architecture would cost WITHOUT the fused Anakin rollouts
-    println!("\n# baseline: per-step dispatch through env_step (13x13)");
-    if let Some(spec) = rt
-        .manifest
-        .of_kind("env_step")
-        .into_iter()
-        .find(|s| s.meta_usize("H").unwrap() == 13)
-    {
-        use xmgrid::env::state::Ruleset;
-        use xmgrid::env::Goal;
-        use xmgrid::runtime::state::{pack_states, NUM_STATE_FIELDS};
-        use xmgrid::runtime::Tensor;
-        let fam = EnvFamily::from_spec(spec).unwrap();
-        let art = rt.load(&spec.name).unwrap();
-        let opts = EnvOptions::default();
-        let states: Vec<_> = (0..fam.b)
-            .map(|i| {
-                let rs = Ruleset {
-                    goal: Goal::EMPTY,
-                    rules: vec![],
-                    init_tiles: vec![],
-                };
-                reset(Grid::empty_room(13, 13), rs, 507, Rng::new(i as u64),
-                      opts).0
-            })
-            .collect();
-        let keys: Vec<[u32; 2]> = (0..fam.b).map(|i| [1, i as u32]).collect();
-        let mut inputs =
-            pack_states(&states, fam.mr, fam.mi, &keys).unwrap();
-        inputs.push(Tensor::I32(vec![0; fam.b]));
-        let mut r = Rng::new(3);
-        let steps = 128usize;
-        let result = bench("per-step dispatch", 1, 1, || {
-            for _ in 0..steps {
-                let out = art.execute(&inputs).unwrap();
-                for (j, t) in
-                    out.into_iter().take(NUM_STATE_FIELDS).enumerate()
-                {
-                    inputs[j] = t;
-                }
-                inputs[NUM_STATE_FIELDS] =
-                    Tensor::I32((0..fam.b)
-                        .map(|_| r.below(6) as i32)
-                        .collect());
-            }
-        });
-        let sps = (fam.b * steps) as f64 / result.min_secs;
-        println!("envs={:<6} steps/s={sps:<12.0} ({})  <- one dispatch per \
-                  step", fam.b, fmt_sps(sps));
-    }
-
-    // CPU-loop baseline for context (single thread)
-    println!("\n# baseline: pure-Rust sequential loop (13x13)");
-    for batch in [1usize, 256, 1024] {
+    // --- scalar per-env loop baseline (the allocating oracle) -----------
+    println!("\n# baseline: pure-Rust scalar per-env loop (13x13)");
+    let mut scalar_1024 = None;
+    for &batch in &[1usize, 256, 1024] {
+        if batch > max_b {
+            continue;
+        }
         let opts = EnvOptions::default();
         let mut states: Vec<_> = (0..batch)
             .map(|i| {
@@ -121,14 +92,131 @@ fn main() {
             })
             .collect();
         let mut r = Rng::new(5);
-        let result = bench("rust-loop", 0, 3, || {
+        let result = bench("scalar-loop", 0, 3, || {
             for s in states.iter_mut() {
-                for _ in 0..64 {
+                for _ in 0..t_steps {
                     step(s, r.below(6) as i32, opts);
                 }
             }
         });
-        let sps = (batch * 64) as f64 / result.min_secs;
+        let sps = (batch * t_steps) as f64 / result.min_secs;
         println!("envs={batch:<6} steps/s={sps:<12.0} ({})", fmt_sps(sps));
+        report.add(&format!("scalar-loop-b{batch}"), batch, t_steps,
+                   &result);
+        if batch == 1024 {
+            scalar_1024 = Some(sps);
+        }
+    }
+    if let (Some(nv), Some(sc)) = (native_1024, scalar_1024) {
+        println!(
+            "\n# native-vectorized vs scalar per-env loop at B=1024: \
+             {:.2}x",
+            nv / sc
+        );
+        report.metric("native_vs_scalar_b1024", nv / sc);
+    }
+
+    // --- artifact-backed sections (need PJRT + `make artifacts`) --------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("\n# fused rollout artifacts (AOT/PJRT backend)");
+            let mut rolls: Vec<_> = rt
+                .manifest
+                .of_kind("env_rollout")
+                .into_iter()
+                .filter(|s| s.meta_usize("H").unwrap() == 13
+                        && s.meta_usize("B").unwrap() <= max_b)
+                .cloned()
+                .collect();
+            rolls.sort_by_key(|s| s.meta_usize("B").unwrap());
+            for spec in &rolls {
+                let fam = EnvFamily::from_spec(spec).unwrap();
+                let t = spec.meta_usize("T").unwrap();
+                let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
+                let tasks = pool.sample_rulesets(&bench_tasks, &mut rng);
+                pool.reset(&tasks, &mut rng).unwrap();
+                let mut r = Rng::new(7);
+                // large batches amortize dispatch; 1 timed repeat is fine
+                let repeats = if fam.b >= 1024 { 1 } else { 2 };
+                let result = bench(&spec.name, 1, repeats, || {
+                    pool.rollout(&rt, t, &mut r).unwrap();
+                });
+                let sps = (fam.b * t) as f64 / result.min_secs;
+                println!("envs={:<6} steps/s={sps:<12.0} ({})", fam.b,
+                         fmt_sps(sps));
+                report.add(&format!("xla-fused-b{}", fam.b), fam.b, t,
+                           &result);
+            }
+
+            // per-step dispatch baseline (§Perf): the same env driven
+            // through the single-step artifact, one host<->device
+            // round-trip per step — what the architecture would cost
+            // WITHOUT the fused Anakin rollouts
+            println!("\n# baseline: per-step dispatch through env_step \
+                      (13x13)");
+            if let Some(spec) = rt
+                .manifest
+                .of_kind("env_step")
+                .into_iter()
+                .find(|s| s.meta_usize("H").unwrap() == 13)
+            {
+                use xmgrid::env::state::Ruleset;
+                use xmgrid::env::Goal;
+                use xmgrid::runtime::state::{pack_states,
+                                             NUM_STATE_FIELDS};
+                use xmgrid::runtime::Tensor;
+                let fam = EnvFamily::from_spec(spec).unwrap();
+                let art = rt.load(&spec.name).unwrap();
+                let opts = EnvOptions::default();
+                let states: Vec<_> = (0..fam.b)
+                    .map(|i| {
+                        let rs = Ruleset {
+                            goal: Goal::EMPTY,
+                            rules: vec![],
+                            init_tiles: vec![],
+                        };
+                        reset(Grid::empty_room(13, 13), rs, 507,
+                              Rng::new(i as u64), opts).0
+                    })
+                    .collect();
+                let keys: Vec<[u32; 2]> =
+                    (0..fam.b).map(|i| [1, i as u32]).collect();
+                let mut inputs =
+                    pack_states(&states, fam.mr, fam.mi, &keys).unwrap();
+                inputs.push(Tensor::I32(vec![0; fam.b]));
+                let mut r = Rng::new(3);
+                let steps = 128usize;
+                let result = bench("per-step dispatch", 1, 1, || {
+                    for _ in 0..steps {
+                        let out = art.execute(&inputs).unwrap();
+                        for (j, t) in out
+                            .into_iter()
+                            .take(NUM_STATE_FIELDS)
+                            .enumerate()
+                        {
+                            inputs[j] = t;
+                        }
+                        inputs[NUM_STATE_FIELDS] =
+                            Tensor::I32((0..fam.b)
+                                .map(|_| r.below(6) as i32)
+                                .collect());
+                    }
+                });
+                let sps = (fam.b * steps) as f64 / result.min_secs;
+                println!("envs={:<6} steps/s={sps:<12.0} ({})  <- one \
+                          dispatch per step", fam.b, fmt_sps(sps));
+                report.add("xla-per-step-dispatch", fam.b, steps,
+                           &result);
+            }
+        }
+        Err(e) => {
+            println!("\n# artifact-backed sections skipped: {e}");
+        }
+    }
+
+    if let Some(path) = json_arg_path(&args, "fig5a_native") {
+        report.write(&path).expect("writing bench json");
+        println!("# wrote {}", path.display());
     }
 }

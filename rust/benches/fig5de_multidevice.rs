@@ -1,34 +1,47 @@
 //! Fig. 5d/e: multi-device scaling (the `jax.pmap` axis), reproduced with
-//! the persistent shard engine — one PJRT client + executables + env
-//! states per shard thread (docs/ARCHITECTURE.md, "Shard engine"). Paper
-//! claim: more devices mitigate saturation and raise total throughput, at
-//! large grid sizes (5d) and rule counts (5e).
+//! the persistent shard engine — one replica per shard thread
+//! (docs/ARCHITECTURE.md, "Shard engine"). Paper claim: more devices
+//! mitigate saturation and raise total throughput, at large grid sizes
+//! (5d) and rule counts (5e).
 //!
-//! On top of the shard axis this bench measures the overlap axis: lockstep
-//! collection (overlap off, global barrier per round) vs the
+//! On top of the shard axis this bench measures the overlap axis:
+//! lockstep collection (overlap off, global barrier per round) vs the
 //! double-buffered pipeline (overlap on, two rounds in flight per shard,
 //! no barrier). The pipeline removes straggler stalls and overlaps
-//! host-side consumption with device stepping, so `on/off >= 1` is the
-//! expected shape; the gap widens with shard count and host load.
+//! host-side consumption with stepping, so `on/off >= 1` is the expected
+//! shape; the gap widens with shard count and host load.
+//!
+//! Two backends share the engine: the native vectorized section (VecEnv
+//! SoA kernels — always runs, no artifacts) and the AOT/PJRT section
+//! (skipped with a note when no runtime/artifacts are present).
 //!
 //! On a single CPU socket the shards contend for cores, so scaling bends
-//! earlier than on 8 discrete GPUs — the qualitative ordering (more shards
-//! >= one shard at high load) is the reproduced shape.
+//! earlier than on 8 discrete GPUs — the qualitative ordering (more
+//! shards >= one shard at high load) is the reproduced shape.
+//!
+//! `--json [PATH]` writes `BENCH_fig5de_engine.json`.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
-use xmgrid::coordinator::{Overlap, RolloutEngine, ShardConfig};
+use xmgrid::coordinator::{NativeEnvConfig, Overlap, RolloutEngine,
+                          ShardConfig};
 use xmgrid::runtime::Runtime;
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{json_arg_path, JsonReport};
 
 const ROUNDS: usize = 4;
 
+fn trivial_bench(n: usize) -> Arc<Benchmark> {
+    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), n);
+    Arc::new(Benchmark { name: "t".into(), rulesets })
+}
+
 fn engine_throughput(dir: &Path, name: &str, shards: usize,
                      overlap: Overlap) -> f64 {
-    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 64);
-    let bench = Arc::new(Benchmark { name: "t".into(), rulesets });
+    let bench = trivial_bench(64);
     let cfg = ShardConfig { shards, overlap, seed: 100, rooms: 1 };
     let engine = RolloutEngine::launch(dir.to_path_buf(),
                                        name.to_string(), bench, cfg)
@@ -40,49 +53,106 @@ fn engine_throughput(dir: &Path, name: &str, shards: usize,
     totals.sps()
 }
 
+fn native_engine_throughput(b: usize, t: usize, shards: usize,
+                            overlap: Overlap) -> f64 {
+    let bench = trivial_bench(64);
+    let cfg = ShardConfig { shards, overlap, seed: 100, rooms: 1 };
+    let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13", b, t,
+                                        &bench)
+        .expect("native family");
+    let engine = RolloutEngine::launch_native(ncfg, bench, cfg)
+        .expect("launching native rollout engine");
+    engine.collect(1, |_| {}).unwrap(); // warmup (buffer first-touch)
+    let totals = engine.collect(ROUNDS, |_| {}).unwrap();
+    totals.sps()
+}
+
 fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new(&dir).expect("make artifacts first");
-
-    // 5d axis: grid size; 5e axis: rule count — one representative
-    // artifact (CI keeps this cheap; add more via the filter below)
-    let mut names: Vec<String> = Vec::new();
-    for spec in rt.manifest.of_kind("env_rollout") {
-        let h = spec.meta_usize("H").unwrap();
-        let mr = spec.meta_usize("MR").unwrap();
-        let b = spec.meta_usize("B").unwrap();
-        if b == 1024 && h == 13 && mr == 9 {
-            names.push(spec.name.clone());
-        }
-    }
-    if names.is_empty() {
-        // quick-artifact fallback: first rollout artifact available
-        if let Some(s) = rt.manifest.of_kind("env_rollout").first() {
-            names.push(s.name.clone());
-        }
-    }
-    drop(rt);
-
-    println!("# Fig 5d/e: shard engine (pmap stand-in) scaling");
+    let args = Args::from_env();
+    let mut report = JsonReport::new("fig5de_engine");
     let cores = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1);
+    let shard_counts: Vec<usize> =
+        if cores >= 4 { vec![1, 2, 4] } else { vec![1, 2] };
+
+    println!("# Fig 5d/e: shard engine (pmap stand-in) scaling");
     println!("# host cores: {cores} — with a single core the shards \
               time-slice one CPU, so total SPS stays flat; the topology \
               (replica-per-shard, per-shard states, fixed-order reduce) \
               is what is exercised. On a multi-core/multi-GPU host the \
               same code scales like Fig 5d/e.");
-    let shard_counts: Vec<usize> =
-        if cores >= 4 { vec![1, 2, 4] } else { vec![1, 2] };
-    for name in &names {
-        println!("\nartifact {name}");
-        println!("  {:<8} {:>14} {:>14} {:>9}", "shards",
-                 "overlap-off", "overlap-on", "on/off");
-        for &shards in &shard_counts {
-            let off = engine_throughput(&dir, name, shards, Overlap::Off);
-            let on = engine_throughput(&dir, name, shards, Overlap::On);
-            println!("  {shards:<8} {:>14} {:>14} {:>8.2}x",
-                     fmt_sps(off), fmt_sps(on), on / off);
+
+    // --- native vectorized backend: shard x overlap sweep ---------------
+    let (nb, nt) = (512usize, 32usize);
+    println!("\n# native backend (VecEnv SoA kernels, 13x13, \
+              B={nb}/shard, T={nt})");
+    println!("  {:<8} {:>14} {:>14} {:>9}", "shards", "overlap-off",
+             "overlap-on", "on/off");
+    for &shards in &shard_counts {
+        let off = native_engine_throughput(nb, nt, shards, Overlap::Off);
+        let on = native_engine_throughput(nb, nt, shards, Overlap::On);
+        println!("  {shards:<8} {:>14} {:>14} {:>8.2}x", fmt_sps(off),
+                 fmt_sps(on), on / off);
+        report.add_sps(&format!("native-s{shards}-off"), nb * shards,
+                       nt * ROUNDS, off);
+        report.add_sps(&format!("native-s{shards}-on"), nb * shards,
+                       nt * ROUNDS, on);
+    }
+
+    // --- AOT/PJRT backend (needs artifacts + runtime) -------------------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            // 5d axis: grid size; 5e axis: rule count — one
+            // representative artifact (CI keeps this cheap). Keep
+            // (name, B, T) so the JSON rows carry real work units.
+            let mut arts: Vec<(String, usize, usize)> = Vec::new();
+            for spec in rt.manifest.of_kind("env_rollout") {
+                let h = spec.meta_usize("H").unwrap();
+                let mr = spec.meta_usize("MR").unwrap();
+                let b = spec.meta_usize("B").unwrap();
+                if b == 1024 && h == 13 && mr == 9 {
+                    arts.push((spec.name.clone(), b,
+                               spec.meta_usize("T").unwrap()));
+                }
+            }
+            if arts.is_empty() {
+                // quick-artifact fallback: first rollout artifact
+                if let Some(s) =
+                    rt.manifest.of_kind("env_rollout").first()
+                {
+                    arts.push((s.name.clone(),
+                               s.meta_usize("B").unwrap(),
+                               s.meta_usize("T").unwrap()));
+                }
+            }
+            drop(rt);
+            for (name, b, t) in &arts {
+                println!("\n# xla backend, artifact {name}");
+                println!("  {:<8} {:>14} {:>14} {:>9}", "shards",
+                         "overlap-off", "overlap-on", "on/off");
+                for &shards in &shard_counts {
+                    let off = engine_throughput(&dir, name, shards,
+                                                Overlap::Off);
+                    let on = engine_throughput(&dir, name, shards,
+                                               Overlap::On);
+                    println!("  {shards:<8} {:>14} {:>14} {:>8.2}x",
+                             fmt_sps(off), fmt_sps(on), on / off);
+                    report.add_sps(&format!("xla-s{shards}-off"),
+                                   b * shards, t * ROUNDS, off);
+                    report.add_sps(&format!("xla-s{shards}-on"),
+                                   b * shards, t * ROUNDS, on);
+                }
+            }
         }
+        Err(e) => {
+            println!("\n# xla backend section skipped: {e}");
+        }
+    }
+
+    if let Some(path) = json_arg_path(&args, "fig5de_engine") {
+        report.write(&path).expect("writing bench json");
+        println!("# wrote {}", path.display());
     }
 }

@@ -7,6 +7,11 @@
 //! to training): data-parallel replicas with fixed-order parameter
 //! averaging, lockstep (overlap off) vs the double-buffered pipeline
 //! (overlap on, host reduction overlapped with shard compute).
+//!
+//! Training is AOT-artifact-backed only (the fused `train_iter` HLO has
+//! no native analogue yet), so without artifacts/PJRT the bench prints a
+//! skip note. `--json [PATH]` writes `BENCH_fig5f_training.json` with
+//! whatever sections ran.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,7 +21,8 @@ use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::{Overlap, ShardConfig, ShardedTrainer,
                           TrainConfig, Trainer};
 use xmgrid::runtime::Runtime;
-use xmgrid::util::bench::bench;
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{bench, json_arg_path, JsonReport};
 
 fn trivial_for(mr: usize, mi: usize, n: usize) -> Benchmark {
     let mut cfg = Preset::Trivial.config();
@@ -47,8 +53,22 @@ fn sharded_sps(dir: &Path, artifact: &str, mr: usize, mi: usize,
 }
 
 fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::new("fig5f_training");
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("# Fig 5f needs train_iter artifacts + the PJRT \
+                      runtime; skipped: {e}");
+            report.note("skipped: no artifacts/PJRT runtime");
+            if let Some(path) = json_arg_path(&args, "fig5f_training") {
+                report.write(&path).expect("writing bench json");
+                println!("# wrote {}", path.display());
+            }
+            return;
+        }
+    };
 
     println!("# Fig 5f: training throughput vs num parallel envs (9x9)");
     let mut arts: Vec<_> = rt
@@ -83,6 +103,8 @@ fn main() {
             trainer.family.b, trainer.t_len,
             spec.meta_usize("MB").unwrap(), fmt_sps(sps)
         );
+        report.add(&format!("train-b{}", trainer.family.b),
+                   trainer.family.b, trainer.t_len, &result);
     }
     drop(rt);
 
@@ -90,13 +112,26 @@ fn main() {
     if let Some(spec) = arts.first() {
         let mr = spec.meta_usize("MR").unwrap();
         let mi = spec.meta_usize("MI").unwrap();
+        let b = spec.meta_usize("B").unwrap();
+        let t = spec.meta_usize("T").unwrap();
+        let (shards, iters) = (2usize, 4usize);
         println!("\n# sharded trainer (fixed-order all-reduce), \
-                  2 shards, 4 timed iters");
-        let off = sharded_sps(&dir, &spec.name, mr, mi, 2, Overlap::Off, 4);
-        let on = sharded_sps(&dir, &spec.name, mr, mi, 2, Overlap::On, 4);
+                  {shards} shards, {iters} timed iters");
+        let off = sharded_sps(&dir, &spec.name, mr, mi, shards,
+                              Overlap::Off, iters);
+        let on = sharded_sps(&dir, &spec.name, mr, mi, shards,
+                             Overlap::On, iters);
         println!("overlap=off train-steps/s={off:<12.0} ({})",
                  fmt_sps(off));
         println!("overlap=on  train-steps/s={on:<12.0} ({}) \
                   [{:.2}x]", fmt_sps(on), on / off);
+        report.add_sps("sharded-trainer-off", b * shards, t * iters, off);
+        report.add_sps("sharded-trainer-on", b * shards, t * iters, on);
+        report.metric("sharded_overlap_speedup", on / off);
+    }
+
+    if let Some(path) = json_arg_path(&args, "fig5f_training") {
+        report.write(&path).expect("writing bench json");
+        println!("# wrote {}", path.display());
     }
 }

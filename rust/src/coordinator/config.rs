@@ -42,6 +42,44 @@ impl std::fmt::Display for Overlap {
     }
 }
 
+/// Which execution backend drives the rollout engine's shard replicas
+/// (`xmgrid rollout --backend auto|native|xla`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT artifacts through PJRT when a manifest with rollout
+    /// artifacts is present, otherwise the native vectorized engine.
+    #[default]
+    Auto,
+    /// Pure-Rust SoA `VecEnv` kernels — no artifacts, no PJRT.
+    Native,
+    /// Compiled HLO artifacts through the PJRT runtime.
+    Xla,
+}
+
+impl BackendKind {
+    /// Parse a `--backend auto|native|xla` CLI value.
+    pub fn from_flag(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => bail!(
+                "--backend must be `auto`, `native` or `xla`, got {other}"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        })
+    }
+}
+
 /// Execution shape of the shard engine, shared by `rollout` and `train`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ShardConfig {
@@ -144,5 +182,18 @@ mod tests {
         assert!(Overlap::from_flag("maybe").is_err());
         assert_eq!(Overlap::On.to_string(), "on");
         assert!(!ShardConfig::default().overlap.is_on());
+    }
+
+    #[test]
+    fn backend_flag_parsing() {
+        assert_eq!(BackendKind::from_flag("auto").unwrap(),
+                   BackendKind::Auto);
+        assert_eq!(BackendKind::from_flag("native").unwrap(),
+                   BackendKind::Native);
+        assert_eq!(BackendKind::from_flag("xla").unwrap(),
+                   BackendKind::Xla);
+        assert!(BackendKind::from_flag("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+        assert_eq!(BackendKind::Native.to_string(), "native");
     }
 }

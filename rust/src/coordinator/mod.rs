@@ -1,7 +1,11 @@
 //! L3 coordinator: vectorized env pool, RL² PPO training orchestration
 //! (Anakin-style — the whole collect+update iteration is one fused HLO
 //! call), the §4.2 evaluation protocol, and the persistent shard engine
-//! standing in for `jax.pmap` multi-device scaling.
+//! standing in for `jax.pmap` multi-device scaling. The rollout engine
+//! is backend-generic: `--backend xla` drives AOT executables through
+//! PJRT, `--backend native` drives the pure-Rust SoA `VecEnv` kernels
+//! (see [`native`]) — same shard topology, same RNG streams, zero
+//! artifacts.
 //!
 //! The execution model is a pipelined producer/consumer system: long-lived
 //! shard worker threads (one PJRT replica each, driven over channels of
@@ -11,12 +15,14 @@
 
 pub mod config;
 pub mod metrics;
+pub mod native;
 pub mod pool;
 pub mod rollout;
 pub mod shard;
 pub mod trainer;
 
-pub use config::{Overlap, ShardConfig, TrainConfig};
+pub use config::{BackendKind, Overlap, ShardConfig, TrainConfig};
+pub use native::{NativeEnvConfig, NativePool};
 pub use pool::EnvPool;
 pub use rollout::RolloutEngine;
 pub use shard::ShardPool;

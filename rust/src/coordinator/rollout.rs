@@ -6,6 +6,13 @@
 //! buffers, and a private RNG stream — and is driven over a channel of
 //! rollout jobs.
 //!
+//! The engine is **backend-generic**: a replica is anything that can
+//! produce rollout chunks. Two backends exist — the AOT/PJRT replica
+//! (`ShardReplica`, `--backend xla`) and the native vectorized replica
+//! (`NativeReplica`, `--backend native`: a [`NativePool`]-owned
+//! `VecEnv` batch per shard, no artifacts). Both run under the same
+//! overlap disciplines and the same `(seed, shard)` RNG streams.
+//!
 //! With overlap **off**, collection is a lockstep collective per round
 //! (dispatch to all shards, barrier, consume in shard order) — bitwise
 //! identical across runs for a fixed seed.
@@ -31,6 +38,7 @@ use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
 
 use super::config::{Overlap, ShardConfig};
+use super::native::{NativeEnvConfig, NativePool};
 use super::pool::{EnvFamily, EnvPool};
 use super::shard::ShardPool;
 
@@ -95,7 +103,14 @@ impl RolloutTotals {
     }
 }
 
-/// Per-shard replica state, constructed inside the shard thread.
+/// One rollout replica's unit of work. Implemented by both backends so
+/// the engine's collect machinery (lockstep and double-buffered alike)
+/// is generic over where the stepping actually happens.
+trait RolloutReplica: 'static {
+    fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats>;
+}
+
+/// Per-shard AOT/PJRT replica state, constructed inside the shard thread.
 struct ShardReplica {
     shard: usize,
     rt: Runtime,
@@ -104,7 +119,7 @@ struct ShardReplica {
     t: usize,
 }
 
-impl ShardReplica {
+impl RolloutReplica for ShardReplica {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
         let t0 = Instant::now();
         let (reward_sum, episodes, trials) =
@@ -121,9 +136,41 @@ impl ShardReplica {
     }
 }
 
+/// Per-shard native vectorized replica: a `VecEnv` batch stepped by the
+/// SoA kernels on the shard's own thread — no PJRT, no artifacts.
+struct NativeReplica {
+    shard: usize,
+    pool: NativePool,
+    rng: Rng,
+    t: usize,
+}
+
+impl RolloutReplica for NativeReplica {
+    fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
+        let t0 = Instant::now();
+        let (reward_sum, episodes, trials) =
+            self.pool.rollout(self.t, &mut self.rng);
+        Ok(ChunkStats {
+            shard: self.shard,
+            round,
+            steps: (self.pool.cfg.b * self.t) as u64,
+            reward_sum,
+            episodes,
+            trials,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// The engine's shard pool, one variant per backend.
+enum EnginePool {
+    Xla(ShardPool<ShardReplica>),
+    Native(ShardPool<NativeReplica>),
+}
+
 /// Persistent sharded rollout engine (random-policy collection).
 pub struct RolloutEngine {
-    pool: ShardPool<ShardReplica>,
+    pool: EnginePool,
     pub family: EnvFamily,
     /// steps per fused rollout call
     pub t: usize,
@@ -159,11 +206,43 @@ impl RolloutEngine {
                 .with_context(|| format!("resetting shard {i}"))?;
             Ok(ShardReplica { shard: i, rt, pool, rng, t })
         })?;
-        Ok(RolloutEngine { pool, family, t, cfg })
+        Ok(RolloutEngine { pool: EnginePool::Xla(pool), family, t, cfg })
+    }
+
+    /// Spin up `cfg.shards` *native vectorized* replicas — no manifest,
+    /// no artifacts, no PJRT. Each shard owns a `VecEnv` of `ncfg.b`
+    /// envs, samples rulesets from `bench` with the same
+    /// `shard_rng(seed, i)` streams as the AOT path, resets, and steps
+    /// the SoA kernels on its own thread.
+    pub fn launch_native(ncfg: NativeEnvConfig, bench: Arc<Benchmark>,
+                         cfg: ShardConfig) -> Result<RolloutEngine> {
+        let seed = cfg.seed;
+        let pool = ShardPool::spawn(cfg.shards, move |i| {
+            let mut rng = shard_rng(seed, i);
+            let mut pool = NativePool::new(ncfg);
+            pool.reset(&bench, &mut rng);
+            Ok(NativeReplica { shard: i, pool, rng, t: ncfg.t })
+        })?;
+        let family = EnvFamily {
+            h: ncfg.h,
+            w: ncfg.w,
+            mr: ncfg.mr,
+            mi: ncfg.mi,
+            b: ncfg.b,
+        };
+        Ok(RolloutEngine {
+            pool: EnginePool::Native(pool),
+            family,
+            t: ncfg.t,
+            cfg,
+        })
     }
 
     pub fn shards(&self) -> usize {
-        self.pool.shards()
+        match &self.pool {
+            EnginePool::Xla(p) => p.shards(),
+            EnginePool::Native(p) => p.shards(),
+        }
     }
 
     /// Collect `rounds` rollout chunks *per shard*, invoking `consume`
@@ -177,75 +256,14 @@ impl RolloutEngine {
     where
         C: FnMut(&ChunkStats),
     {
-        let t0 = Instant::now();
-        let mut totals = RolloutTotals::default();
-        match self.cfg.overlap {
-            Overlap::Off => {
-                for round in 0..rounds {
-                    let stats = self
-                        .pool
-                        .broadcast(move |_, w| w.rollout_chunk(round));
-                    for s in stats {
-                        let s = s?;
-                        totals.absorb(&s);
-                        consume(&s);
-                    }
-                }
+        match &self.pool {
+            EnginePool::Xla(p) => {
+                collect_over(p, self.cfg.overlap, rounds, &mut consume)
             }
-            Overlap::On => {
-                let shards = self.shards();
-                let (res_tx, res_rx) = channel::<Result<ChunkStats>>();
-                let mut next_round = vec![0usize; shards];
-                let dispatch = |shard: usize, round: usize| {
-                    let tx = res_tx.clone();
-                    self.pool.submit(shard, move |w| {
-                        // Every dispatched job sends exactly once, even
-                        // if the chunk panics — otherwise the consumer
-                        // below would wait forever for a message from a
-                        // dead worker (it holds a sender itself, so the
-                        // channel never closes).
-                        let r = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| {
-                                w.rollout_chunk(round)
-                            }),
-                        );
-                        match r {
-                            Ok(res) => {
-                                let _ = tx.send(res);
-                            }
-                            Err(p) => {
-                                let _ = tx.send(Err(anyhow::anyhow!(
-                                    "shard {shard} panicked during \
-                                     rollout round {round}"
-                                )));
-                                std::panic::resume_unwind(p);
-                            }
-                        }
-                    });
-                };
-                for shard in 0..shards {
-                    for _ in 0..PIPELINE_DEPTH.min(rounds) {
-                        dispatch(shard, next_round[shard]);
-                        next_round[shard] += 1;
-                    }
-                }
-                for _ in 0..shards * rounds {
-                    let s = res_rx
-                        .recv()
-                        .expect("rollout result channel closed")?;
-                    // Refill this shard's pipeline before consuming, so
-                    // the shard steps buffer t+1 while we drain buffer t.
-                    if next_round[s.shard] < rounds {
-                        dispatch(s.shard, next_round[s.shard]);
-                        next_round[s.shard] += 1;
-                    }
-                    totals.absorb(&s);
-                    consume(&s);
-                }
+            EnginePool::Native(p) => {
+                collect_over(p, self.cfg.overlap, rounds, &mut consume)
             }
         }
-        totals.elapsed = t0.elapsed().as_secs_f64();
-        Ok(totals)
     }
 
     /// `collect` with windowed progress reporting: chunk stats
@@ -281,4 +299,86 @@ impl RolloutEngine {
         }
         Ok(totals)
     }
+}
+
+/// Backend-generic collection loop: the lockstep collective (overlap
+/// off) and the depth-2 double-buffered pipeline (overlap on), over any
+/// `RolloutReplica` pool. This is the single implementation both the
+/// AOT and native backends run, so the overlap determinism contract is
+/// shared by construction.
+fn collect_over<W, C>(pool: &ShardPool<W>, overlap: Overlap,
+                      rounds: usize, consume: &mut C)
+                      -> Result<RolloutTotals>
+where
+    W: RolloutReplica,
+    C: FnMut(&ChunkStats),
+{
+    let t0 = Instant::now();
+    let mut totals = RolloutTotals::default();
+    match overlap {
+        Overlap::Off => {
+            for round in 0..rounds {
+                let stats =
+                    pool.broadcast(move |_, w| w.rollout_chunk(round));
+                for s in stats {
+                    let s = s?;
+                    totals.absorb(&s);
+                    consume(&s);
+                }
+            }
+        }
+        Overlap::On => {
+            let shards = pool.shards();
+            let (res_tx, res_rx) = channel::<Result<ChunkStats>>();
+            let mut next_round = vec![0usize; shards];
+            let dispatch = |shard: usize, round: usize| {
+                let tx = res_tx.clone();
+                pool.submit(shard, move |w| {
+                    // Every dispatched job sends exactly once, even
+                    // if the chunk panics — otherwise the consumer
+                    // below would wait forever for a message from a
+                    // dead worker (it holds a sender itself, so the
+                    // channel never closes).
+                    let r = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            w.rollout_chunk(round)
+                        }),
+                    );
+                    match r {
+                        Ok(res) => {
+                            let _ = tx.send(res);
+                        }
+                        Err(p) => {
+                            let _ = tx.send(Err(anyhow::anyhow!(
+                                "shard {shard} panicked during \
+                                 rollout round {round}"
+                            )));
+                            std::panic::resume_unwind(p);
+                        }
+                    }
+                });
+            };
+            for shard in 0..shards {
+                for _ in 0..PIPELINE_DEPTH.min(rounds) {
+                    dispatch(shard, next_round[shard]);
+                    next_round[shard] += 1;
+                }
+            }
+            for _ in 0..shards * rounds {
+                let s = res_rx
+                    .recv()
+                    .expect("rollout result channel closed")?;
+                // Refill this shard's pipeline before consuming, so
+                // the shard steps buffer t+1 while we drain buffer t.
+                if next_round[s.shard] < rounds {
+                    dispatch(s.shard, next_round[s.shard]);
+                    next_round[s.shard] += 1;
+                }
+                totals.absorb(&s);
+                consume(&s);
+            }
+        }
+    }
+    totals.elapsed = t0.elapsed().as_secs_f64();
+    Ok(totals)
 }

@@ -1,7 +1,7 @@
 //! Goals (paper Table 2) — pure condition checks, the Rust oracle for
 //! `python/compile/xmg/goals.py`.
 
-use super::grid::Grid;
+use super::grid::CellGrid;
 use super::types::*;
 
 /// Encoded goal `[id, a0, a1, a2, a3]`.
@@ -54,8 +54,8 @@ impl Goal {
     }
 }
 
-fn agent_near_any(grid: &Grid, agent_pos: (i32, i32), a: Cell,
-                  dirs: &[usize]) -> bool {
+fn agent_near_any<G: CellGrid>(grid: &G, agent_pos: (i32, i32), a: Cell,
+                               dirs: &[usize]) -> bool {
     dirs.iter().any(|&d| {
         let r = agent_pos.0 + DIR_DR[d];
         let c = agent_pos.1 + DIR_DC[d];
@@ -63,9 +63,10 @@ fn agent_near_any(grid: &Grid, agent_pos: (i32, i32), a: Cell,
     })
 }
 
-fn tile_near_any(grid: &Grid, a: Cell, b: Cell, dirs: &[usize]) -> bool {
-    for r in 0..grid.h as i32 {
-        for c in 0..grid.w as i32 {
+fn tile_near_any<G: CellGrid>(grid: &G, a: Cell, b: Cell,
+                              dirs: &[usize]) -> bool {
+    for r in 0..grid.h() as i32 {
+        for c in 0..grid.w() as i32 {
             if grid.get_i(r, c) != a {
                 continue;
             }
@@ -81,9 +82,10 @@ fn tile_near_any(grid: &Grid, a: Cell, b: Cell, dirs: &[usize]) -> bool {
 
 const ALL_DIRS: [usize; 4] = [DIR_UP, DIR_RIGHT, DIR_DOWN, DIR_LEFT];
 
-/// Evaluate an encoded goal.
-pub fn check_goal(grid: &Grid, agent_pos: (i32, i32), pocket: Cell,
-                  goal: &Goal) -> bool {
+/// Evaluate an encoded goal. Generic over [`CellGrid`] so the scalar
+/// oracle and the SoA engine of `env::vector` run the identical kernel.
+pub fn check_goal<G: CellGrid>(grid: &G, agent_pos: (i32, i32), pocket: Cell,
+                               goal: &Goal) -> bool {
     let a = Cell::new(goal.0[1], goal.0[2]);
     let b = Cell::new(goal.0[3], goal.0[4]);
     match goal.id() {
@@ -119,6 +121,7 @@ pub fn check_goal(grid: &Grid, agent_pos: (i32, i32), pocket: Cell,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::env::grid::Grid;
 
     fn ball_red() -> Cell {
         Cell::new(TILE_BALL, COLOR_RED)

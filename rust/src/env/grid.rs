@@ -4,11 +4,52 @@
 
 use super::types::{Cell, END_OF_MAP_CELL, FLOOR_CELL, TILE_FLOOR, WALL_CELL};
 
+/// Cell-level grid access shared by the owning [`Grid`] and the borrowed
+/// SoA views of `env::vector`. The transition kernels (`rules`, `goals`,
+/// `observation`, `state::apply_action`) are generic over this trait, so
+/// the scalar oracle and the batched engine execute the *same* code —
+/// their bitwise equivalence is a test-pinned contract, not a convention.
+pub trait CellGrid {
+    fn h(&self) -> usize;
+    fn w(&self) -> usize;
+    /// Signed-index read; END_OF_MAP outside the grid.
+    fn get_i(&self, r: i32, c: i32) -> Cell;
+    /// Signed-index write; out-of-bounds writes are ignored.
+    fn set_i(&mut self, r: i32, c: i32, cell: Cell);
+
+    #[inline]
+    fn in_bounds(&self, r: i32, c: i32) -> bool {
+        r >= 0 && c >= 0 && (r as usize) < self.h() && (c as usize) < self.w()
+    }
+}
+
 #[derive(Clone, PartialEq, Eq, Debug)]
 pub struct Grid {
     pub h: usize,
     pub w: usize,
     cells: Vec<Cell>,
+}
+
+impl CellGrid for Grid {
+    #[inline]
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    #[inline]
+    fn w(&self) -> usize {
+        self.w
+    }
+
+    #[inline]
+    fn get_i(&self, r: i32, c: i32) -> Cell {
+        Grid::get_i(self, r, c)
+    }
+
+    #[inline]
+    fn set_i(&mut self, r: i32, c: i32, cell: Cell) {
+        Grid::set_i(self, r, c, cell)
+    }
 }
 
 impl Grid {
@@ -60,6 +101,12 @@ impl Grid {
         if self.in_bounds(r, c) {
             self.set(r as usize, c as usize, cell);
         }
+    }
+
+    /// Row-major cell storage (the `[H, W, 2]` tensor as `Cell` pairs) —
+    /// the memcpy source for `env::vector`'s batched SoA buffers.
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
     }
 
     /// Row-major indices of floor cells (candidate object/agent positions).

@@ -1,7 +1,10 @@
 //! Pure-Rust XLand-MiniGrid engine: the cross-validation oracle for the
-//! AOT-lowered JAX environment and the CPU-loop baseline for the throughput
+//! AOT-lowered JAX environment, the CPU-loop baseline for the throughput
 //! benches (the comparison every hardware-accelerated-env paper makes
-//! against EnvPool-style stepping).
+//! against EnvPool-style stepping), and — via [`vector`] — the native
+//! vectorized backend: SoA batch kernels stepping B envs per call with
+//! no AOT artifacts, sharing the exact transition code with the scalar
+//! oracle through the [`grid::CellGrid`] trait.
 
 pub mod goals;
 pub mod grid;
@@ -11,11 +14,13 @@ pub mod registry;
 pub mod rules;
 pub mod state;
 pub mod types;
+pub mod vector;
 
 pub use goals::Goal;
-pub use grid::Grid;
-pub use observation::Obs;
+pub use grid::{CellGrid, Grid};
+pub use observation::{Obs, ObsScratch};
 pub use rules::Rule;
-pub use state::{default_max_steps, reset, step, EnvOptions, Ruleset, State,
-                StepOutput};
+pub use state::{default_max_steps, reset, step, step_with, EnvOptions,
+                Ruleset, State, StepInfo, StepOutput};
 pub use types::Cell;
+pub use vector::{VecEnv, VecEnvConfig};

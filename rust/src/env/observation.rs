@@ -6,7 +6,7 @@
 //! `see_through_walls == false`, a flood-fill visibility pass marks
 //! occluded cells UNSEEN (identical fixed-point to the JAX version).
 
-use super::grid::Grid;
+use super::grid::{CellGrid, Grid};
 use super::types::*;
 
 /// Observation: row-major V×V of cells.
@@ -17,6 +17,12 @@ pub struct Obs {
 }
 
 impl Obs {
+    /// Empty observation buffer for [`observe_into`] (capacity reserved,
+    /// so the first fill is the only allocation).
+    pub fn empty(view_size: usize) -> Obs {
+        Obs { v: view_size, cells: Vec::with_capacity(view_size * view_size) }
+    }
+
     pub fn get(&self, r: usize, c: usize) -> Cell {
         self.cells[r * self.v + c]
     }
@@ -41,10 +47,31 @@ impl Obs {
     }
 }
 
-pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
-               view_size: usize, see_through_walls: bool) -> Obs {
+/// Reusable occlusion scratch for [`observe_into`]: after warm-up, the
+/// flood-fill runs without touching the allocator.
+#[derive(Default)]
+pub struct ObsScratch {
+    transparent: Vec<bool>,
+    vis: Vec<bool>,
+}
+
+impl ObsScratch {
+    pub fn new() -> ObsScratch {
+        ObsScratch::default()
+    }
+}
+
+/// [`observe`] writing into caller-owned buffers: `out.cells` is cleared
+/// and refilled (capacity reused), occlusion state lives in `scratch`.
+/// Generic over [`CellGrid`] so the scalar oracle and the SoA engine of
+/// `env::vector` share the kernel.
+pub fn observe_into<G: CellGrid>(grid: &G, agent_pos: (i32, i32),
+                                 agent_dir: i32, view_size: usize,
+                                 see_through_walls: bool, out: &mut Obs,
+                                 scratch: &mut ObsScratch) {
     let v = view_size as i32;
-    let mut cells = Vec::with_capacity((v * v) as usize);
+    out.v = view_size;
+    out.cells.clear();
     for vr in 0..v {
         for vc in 0..v {
             let fwd = (v - 1) - vr;
@@ -55,26 +82,30 @@ pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
                 2 => (fwd, -lat),
                 _ => (-lat, -fwd),
             };
-            cells.push(grid.get_i(agent_pos.0 + dr, agent_pos.1 + dc));
+            out.cells.push(grid.get_i(agent_pos.0 + dr, agent_pos.1 + dc));
         }
     }
-    let mut obs = Obs { v: view_size, cells };
 
     if !see_through_walls {
         let n = view_size;
         let idx = |r: usize, c: usize| r * n + c;
-        let transparent: Vec<bool> =
-            obs.cells.iter().map(|c| !blocks_sight(c.tile)).collect();
-        let mut vis = vec![false; n * n];
-        vis[idx(n - 1, n / 2)] = true;
+        scratch.transparent.clear();
+        scratch
+            .transparent
+            .extend(out.cells.iter().map(|c| !blocks_sight(c.tile)));
+        scratch.vis.clear();
+        scratch.vis.resize(n * n, false);
+        scratch.vis[idx(n - 1, n / 2)] = true;
         // flood to fixed point (bounded by cell count)
         loop {
             let mut changed = false;
             for r in 0..n {
                 for c in 0..n {
-                    if vis[idx(r, c)] {
+                    if scratch.vis[idx(r, c)] {
                         continue;
                     }
+                    let vis = &scratch.vis;
+                    let transparent = &scratch.transparent;
                     let mut lit = false;
                     if r > 0 {
                         lit |= vis[idx(r - 1, c)] && transparent[idx(r - 1, c)];
@@ -89,7 +120,7 @@ pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
                         lit |= vis[idx(r, c + 1)] && transparent[idx(r, c + 1)];
                     }
                     if lit {
-                        vis[idx(r, c)] = true;
+                        scratch.vis[idx(r, c)] = true;
                         changed = true;
                     }
                 }
@@ -98,12 +129,19 @@ pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
                 break;
             }
         }
-        for (i, cell) in obs.cells.iter_mut().enumerate() {
-            if !vis[i] {
+        for (i, cell) in out.cells.iter_mut().enumerate() {
+            if !scratch.vis[i] {
                 *cell = UNSEEN_CELL;
             }
         }
     }
+}
+
+pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
+               view_size: usize, see_through_walls: bool) -> Obs {
+    let mut obs = Obs::empty(view_size);
+    observe_into(grid, agent_pos, agent_dir, view_size, see_through_walls,
+                 &mut obs, &mut ObsScratch::new());
     obs
 }
 

@@ -6,7 +6,7 @@
 //! each rule fires at most once per check; rules apply sequentially in
 //! ruleset order.
 
-use super::grid::Grid;
+use super::grid::CellGrid;
 use super::types::*;
 
 /// Encoded rule `[id, a_tile, a_col, b_tile, b_col, c_tile, c_col]`.
@@ -69,11 +69,11 @@ fn production(rule: &Rule) -> Cell {
     rule.c()
 }
 
-fn apply_tile_near(grid: &mut Grid, rule: &Rule, dirs: &[usize]) {
+fn apply_tile_near<G: CellGrid>(grid: &mut G, rule: &Rule, dirs: &[usize]) {
     let (a, b, c) = (rule.a(), rule.b(), production(rule));
     for &d in dirs {
-        for r in 0..grid.h as i32 {
-            for col in 0..grid.w as i32 {
+        for r in 0..grid.h() as i32 {
+            for col in 0..grid.w() as i32 {
                 if grid.get_i(r, col) != a {
                     continue;
                 }
@@ -90,8 +90,8 @@ fn apply_tile_near(grid: &mut Grid, rule: &Rule, dirs: &[usize]) {
     }
 }
 
-fn apply_agent_near(grid: &mut Grid, agent_pos: (i32, i32), rule: &Rule,
-                    dirs: &[usize]) {
+fn apply_agent_near<G: CellGrid>(grid: &mut G, agent_pos: (i32, i32),
+                                 rule: &Rule, dirs: &[usize]) {
     let (a, c) = (rule.a(), production(rule));
     for &d in dirs {
         let r = agent_pos.0 + DIR_DR[d];
@@ -104,8 +104,10 @@ fn apply_agent_near(grid: &mut Grid, agent_pos: (i32, i32), rule: &Rule,
 }
 
 /// Apply one encoded rule; mutates grid/pocket like the JAX `check_rule`.
-pub fn check_rule(grid: &mut Grid, agent_pos: (i32, i32), pocket: &mut Cell,
-                  rule: &Rule) {
+/// Generic over [`CellGrid`] so the scalar oracle and the SoA engine of
+/// `env::vector` run the identical kernel.
+pub fn check_rule<G: CellGrid>(grid: &mut G, agent_pos: (i32, i32),
+                               pocket: &mut Cell, rule: &Rule) {
     match rule.id() {
         RULE_EMPTY => {}
         RULE_AGENT_HOLD => {
@@ -136,9 +138,10 @@ pub fn check_rule(grid: &mut Grid, agent_pos: (i32, i32), pocket: &mut Cell,
     }
 }
 
-/// Apply a full ruleset sequentially.
-pub fn check_rules(grid: &mut Grid, agent_pos: (i32, i32),
-                   pocket: &mut Cell, rules: &[Rule]) {
+/// Apply a full ruleset sequentially (padding `RULE_EMPTY` rows are
+/// inert, so encoded fixed-width rule tables can be passed directly).
+pub fn check_rules<G: CellGrid>(grid: &mut G, agent_pos: (i32, i32),
+                                pocket: &mut Cell, rules: &[Rule]) {
     for rule in rules {
         check_rule(grid, agent_pos, pocket, rule);
     }
@@ -147,6 +150,7 @@ pub fn check_rules(grid: &mut Grid, agent_pos: (i32, i32),
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::env::grid::Grid;
 
     fn ball_red() -> Cell {
         Cell::new(TILE_BALL, COLOR_RED)

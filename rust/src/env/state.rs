@@ -8,8 +8,8 @@
 use crate::util::rng::Rng;
 
 use super::goals::{check_goal, Goal};
-use super::grid::Grid;
-use super::observation::{observe, Obs};
+use super::grid::{CellGrid, Grid};
+use super::observation::{observe, observe_into, Obs, ObsScratch};
 use super::rules::{check_rules, Rule};
 use super::types::*;
 
@@ -44,6 +44,16 @@ pub struct State {
 
 pub struct StepOutput {
     pub obs: Obs,
+    pub reward: f32,
+    pub done: bool,
+    pub trial_done: bool,
+}
+
+/// [`StepOutput`] without the observation — returned by the
+/// buffer-reusing [`step_with`], which writes the observation into a
+/// caller-owned [`Obs`] instead of allocating one per step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
     pub reward: f32,
     pub done: bool,
     pub trial_done: bool,
@@ -112,74 +122,84 @@ pub fn default_max_steps(h: usize, w: usize) -> i32 {
     (3 * h * w) as i32
 }
 
-fn front(state: &State) -> (i32, i32) {
-    let d = state.agent_dir as usize;
-    (state.agent_pos.0 + DIR_DR[d], state.agent_pos.1 + DIR_DC[d])
+/// Actions after which production rules fire (§2.1 "acting" actions).
+pub fn is_acting_action(action: i32) -> bool {
+    matches!(
+        action,
+        ACTION_FORWARD | ACTION_PICK_UP | ACTION_PUT_DOWN | ACTION_TOGGLE
+    )
 }
 
-/// One environment transition (mutates `state` in place).
-pub fn step(state: &mut State, action: i32, opts: EnvOptions) -> StepOutput {
-    let action = action.clamp(0, NUM_ACTIONS as i32 - 1);
+/// Apply one (already clamped) action to a grid/agent/pocket triple.
+/// Generic over [`CellGrid`]: this is the single action kernel shared by
+/// the scalar oracle and the SoA engine of `env::vector`.
+pub fn apply_action<G: CellGrid>(grid: &mut G, agent_pos: &mut (i32, i32),
+                                 agent_dir: &mut i32, pocket: &mut Cell,
+                                 action: i32) {
+    let d = *agent_dir as usize;
+    let (fr, fc) = (agent_pos.0 + DIR_DR[d], agent_pos.1 + DIR_DC[d]);
     match action {
         ACTION_FORWARD => {
-            let (r, c) = front(state);
-            if state.grid.in_bounds(r, c)
-                && is_walkable(state.grid.get_i(r, c).tile)
+            if grid.in_bounds(fr, fc)
+                && is_walkable(grid.get_i(fr, fc).tile)
             {
-                state.agent_pos = (r, c);
+                *agent_pos = (fr, fc);
             }
         }
-        ACTION_TURN_LEFT => state.agent_dir = (state.agent_dir + 3) % 4,
-        ACTION_TURN_RIGHT => state.agent_dir = (state.agent_dir + 1) % 4,
+        ACTION_TURN_LEFT => *agent_dir = (*agent_dir + 3) % 4,
+        ACTION_TURN_RIGHT => *agent_dir = (*agent_dir + 1) % 4,
         ACTION_PICK_UP => {
-            let (r, c) = front(state);
-            let cell = state.grid.get_i(r, c);
-            if state.grid.in_bounds(r, c)
-                && state.pocket.tile == TILE_EMPTY
+            let cell = grid.get_i(fr, fc);
+            if grid.in_bounds(fr, fc)
+                && pocket.tile == TILE_EMPTY
                 && is_pickable(cell.tile)
             {
-                state.pocket = cell;
-                state.grid.set_i(r, c, FLOOR_CELL);
+                *pocket = cell;
+                grid.set_i(fr, fc, FLOOR_CELL);
             }
         }
         ACTION_PUT_DOWN => {
-            let (r, c) = front(state);
-            let cell = state.grid.get_i(r, c);
-            if state.grid.in_bounds(r, c)
-                && state.pocket.tile != TILE_EMPTY
+            let cell = grid.get_i(fr, fc);
+            if grid.in_bounds(fr, fc)
+                && pocket.tile != TILE_EMPTY
                 && cell.tile == TILE_FLOOR
             {
-                state.grid.set_i(r, c, state.pocket);
-                state.pocket = POCKET_EMPTY;
+                grid.set_i(fr, fc, *pocket);
+                *pocket = POCKET_EMPTY;
             }
         }
         ACTION_TOGGLE => {
-            let (r, c) = front(state);
-            if state.grid.in_bounds(r, c) {
-                let cell = state.grid.get_i(r, c);
-                let has_key = state.pocket.tile == TILE_KEY
-                    && state.pocket.color == cell.color;
+            if grid.in_bounds(fr, fc) {
+                let cell = grid.get_i(fr, fc);
+                let has_key = pocket.tile == TILE_KEY
+                    && pocket.color == cell.color;
                 let new_tile = match cell.tile {
                     TILE_DOOR_CLOSED => TILE_DOOR_OPEN,
                     TILE_DOOR_OPEN => TILE_DOOR_CLOSED,
                     TILE_DOOR_LOCKED if has_key => TILE_DOOR_OPEN,
                     t => t,
                 };
-                state.grid.set_i(r, c, Cell::new(new_tile, cell.color));
+                grid.set_i(fr, fc, Cell::new(new_tile, cell.color));
             }
         }
         _ => unreachable!(),
     }
+}
 
-    // rules fire only after acting actions (§2.1)
-    let triggering = matches!(
-        action,
-        ACTION_FORWARD | ACTION_PICK_UP | ACTION_PUT_DOWN | ACTION_TOGGLE
-    );
-    if triggering {
-        let rules = state.ruleset.rules.clone();
-        check_rules(&mut state.grid, state.agent_pos, &mut state.pocket,
-                    &rules);
+/// One environment transition, writing the observation into the
+/// caller-owned `obs`/`scratch` buffers — the allocation-free hot-loop
+/// form of [`step`] (no per-step rule clones or observation `Vec`s).
+pub fn step_with(state: &mut State, action: i32, opts: EnvOptions,
+                 obs: &mut Obs, scratch: &mut ObsScratch) -> StepInfo {
+    let action = action.clamp(0, NUM_ACTIONS as i32 - 1);
+    apply_action(&mut state.grid, &mut state.agent_pos,
+                 &mut state.agent_dir, &mut state.pocket, action);
+
+    // rules fire only after acting actions (§2.1); the ruleset is
+    // borrowed, not cloned — grid and ruleset are disjoint fields
+    if is_acting_action(action) {
+        let State { grid, agent_pos, pocket, ruleset, .. } = state;
+        check_rules(grid, *agent_pos, pocket, &ruleset.rules);
     }
 
     let achieved = check_goal(&state.grid, state.agent_pos, state.pocket,
@@ -205,9 +225,22 @@ pub fn step(state: &mut State, action: i32, opts: EnvOptions) -> StepOutput {
     }
     state.step_count = if done { 0 } else { new_step };
 
-    let obs = observe(&state.grid, state.agent_pos, state.agent_dir,
-                      opts.view_size, opts.see_through_walls);
-    StepOutput { obs, reward, done, trial_done }
+    observe_into(&state.grid, state.agent_pos, state.agent_dir,
+                 opts.view_size, opts.see_through_walls, obs, scratch);
+    StepInfo { reward, done, trial_done }
+}
+
+/// One environment transition (mutates `state` in place).
+pub fn step(state: &mut State, action: i32, opts: EnvOptions) -> StepOutput {
+    let mut obs = Obs::empty(opts.view_size);
+    let info = step_with(state, action, opts, &mut obs,
+                         &mut ObsScratch::new());
+    StepOutput {
+        obs,
+        reward: info.reward,
+        done: info.done,
+        trial_done: info.trial_done,
+    }
 }
 
 #[cfg(test)]

@@ -102,8 +102,11 @@ pub const NUM_RULES: usize = 12;
 pub const RULE_ENC: usize = 7; // [id, a_t, a_c, b_t, b_c, c_t, c_c]
 pub const GOAL_ENC: usize = 5; // [id, a0, a1, a2, a3]
 
-/// A grid cell / object: (tile id, color id).
+/// A grid cell / object: (tile id, color id). `repr(C)` so a `[Cell]`
+/// slice is bit-identical to the `i32[..., 2]` boundary layout the SoA
+/// engine and the PJRT tensors use.
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+#[repr(C)]
 pub struct Cell {
     pub tile: i32,
     pub color: i32,

@@ -1,0 +1,449 @@
+//! Vectorized native stepping engine: `VecEnv` holds B environments in
+//! flat structure-of-arrays buffers and steps them with allocation-free
+//! batch kernels — the NAVIX/Jumanji-style design that makes batched
+//! stepping fast on the host, with no AOT artifacts involved.
+//!
+//! Layout mirrors `python/compile/aot.py`'s STATE_FIELDS: one contiguous
+//! grid tensor `[B, H, W, 2]` (as `Cell` pairs — `repr(C)`, bit-identical
+//! to the i32 boundary layout), flat arrays for agent pos/dir/pocket/
+//! step_count/max_steps, and rulesets encoded into fixed-width tables
+//! (`rules [B, MR, 7]`, `goal [B, 5]`, `init [B, MI, 2]`).
+//!
+//! Semantics are *bitwise identical* to the scalar oracle in
+//! [`super::state`]: both run the same generic kernels (`apply_action`,
+//! `check_rules`, `check_goal`, `observe_into` over [`CellGrid`]) and the
+//! same RNG call sequence (`Rng::partial_shuffle` mirrors
+//! `Rng::sample_distinct`). `tests/vec_env_equivalence.rs` pins this
+//! contract for every registry env family across auto-reset boundaries.
+
+use crate::util::rng::Rng;
+
+use super::goals::{check_goal, Goal};
+use super::grid::{CellGrid, Grid};
+use super::observation::{observe_into, Obs, ObsScratch};
+use super::rules::{check_rules, Rule};
+use super::state::{apply_action, is_acting_action, EnvOptions, Ruleset};
+use super::types::*;
+
+/// Borrowed view of one environment's `[H, W, 2]` slice of the batched
+/// grid tensor — the `CellGrid` the shared kernels run on.
+pub struct GridView<'a> {
+    h: usize,
+    w: usize,
+    cells: &'a mut [Cell],
+}
+
+impl<'a> GridView<'a> {
+    pub fn new(h: usize, w: usize, cells: &'a mut [Cell]) -> GridView<'a> {
+        debug_assert_eq!(cells.len(), h * w);
+        GridView { h, w, cells }
+    }
+}
+
+impl CellGrid for GridView<'_> {
+    #[inline]
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    #[inline]
+    fn w(&self) -> usize {
+        self.w
+    }
+
+    #[inline]
+    fn get_i(&self, r: i32, c: i32) -> Cell {
+        if self.in_bounds(r, c) {
+            self.cells[r as usize * self.w + c as usize]
+        } else {
+            END_OF_MAP_CELL
+        }
+    }
+
+    #[inline]
+    fn set_i(&mut self, r: i32, c: i32, cell: Cell) {
+        if self.in_bounds(r, c) {
+            self.cells[r as usize * self.w + c as usize] = cell;
+        }
+    }
+}
+
+/// Shape of one `VecEnv` family: grid dims plus the fixed-width ruleset
+/// table capacities (the artifact-free analogue of `(H, W, MR, MI)`).
+#[derive(Clone, Copy, Debug)]
+pub struct VecEnvConfig {
+    pub h: usize,
+    pub w: usize,
+    /// rule-table rows per env (zero rows are inert padding)
+    pub max_rules: usize,
+    /// init-tile rows per env
+    pub max_init: usize,
+    pub opts: EnvOptions,
+}
+
+/// B environments in SoA buffers with allocation-free `reset_all` /
+/// `step_all` kernels (in-place trial/episode auto-reset, observations
+/// written into a caller-provided `[B, V, V, 2]` i32 buffer).
+pub struct VecEnv {
+    cfg: VecEnvConfig,
+    b: usize,
+    /// episode-start grids `[B, H, W, 2]`
+    base: Vec<Cell>,
+    /// live grids `[B, H, W, 2]`
+    grid: Vec<Cell>,
+    /// `[B, 2]` (row, col)
+    agent_pos: Vec<i32>,
+    /// `[B]`
+    agent_dir: Vec<i32>,
+    /// `[B, 2]` (tile, color)
+    pocket: Vec<Cell>,
+    /// `[B, MR, 7]` fixed-width rule table
+    rules: Vec<Rule>,
+    /// `[B, 5]` encoded goals
+    goals: Vec<Goal>,
+    /// `[B, MI, 2]` init-tile table
+    init: Vec<Cell>,
+    /// number of live rows in each env's init table
+    init_len: Vec<u32>,
+    /// `[B]`
+    step_count: Vec<i32>,
+    /// `[B]`
+    max_steps: Vec<i32>,
+    /// one xoshiro256++ stream per env (the JAX per-env key analogue)
+    rngs: Vec<Rng>,
+    // --- reusable scratch: steady-state kernels never allocate ---------
+    free_scratch: Vec<usize>,
+    obs_scratch: Obs,
+    vis_scratch: ObsScratch,
+}
+
+impl VecEnv {
+    pub fn new(cfg: VecEnvConfig, b: usize) -> VecEnv {
+        assert!(b > 0, "VecEnv needs at least one env");
+        assert!(cfg.h >= 3 && cfg.w >= 3, "grid too small");
+        let ghw = cfg.h * cfg.w;
+        let zero = Cell::new(0, 0);
+        VecEnv {
+            cfg,
+            b,
+            base: vec![zero; b * ghw],
+            grid: vec![zero; b * ghw],
+            agent_pos: vec![0; b * 2],
+            agent_dir: vec![0; b],
+            pocket: vec![POCKET_EMPTY; b],
+            rules: vec![Rule::EMPTY; b * cfg.max_rules],
+            goals: vec![Goal::EMPTY; b],
+            init: vec![zero; b * cfg.max_init],
+            init_len: vec![0; b],
+            step_count: vec![0; b],
+            max_steps: vec![0; b],
+            rngs: vec![Rng::new(0); b],
+            free_scratch: Vec::with_capacity(ghw),
+            obs_scratch: Obs::empty(cfg.opts.view_size),
+            vis_scratch: ObsScratch::new(),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn config(&self) -> &VecEnvConfig {
+        &self.cfg
+    }
+
+    /// Length of the caller-provided observation buffer:
+    /// `B * V * V * 2` i32s in the PJRT boundary layout.
+    pub fn obs_len(&self) -> usize {
+        self.b * self.cfg.opts.view_size * self.cfg.opts.view_size * 2
+    }
+
+    /// Start a fresh episode in every env slot. Mirrors the scalar
+    /// `state::reset` per slot: env `i` consumes `rngs[i]` exactly like
+    /// the oracle consumes its reset RNG, then keeps it as its stream.
+    pub fn reset_all(&mut self, grids: &[Grid], rulesets: &[&Ruleset],
+                     max_steps: &[i32], rngs: &[Rng],
+                     obs_out: &mut [i32]) {
+        assert_eq!(grids.len(), self.b, "need one base grid per env");
+        assert_eq!(rulesets.len(), self.b, "need one ruleset per env");
+        assert_eq!(max_steps.len(), self.b);
+        assert_eq!(rngs.len(), self.b);
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        for i in 0..self.b {
+            self.reset_env(i, &grids[i], rulesets[i], max_steps[i],
+                           rngs[i].clone());
+            self.observe_env(i, obs_out);
+        }
+    }
+
+    /// One batched transition. `actions[i]` drives env `i`; observations
+    /// land in `obs_out` (`[B, V, V, 2]` i32), per-env reward / episode
+    /// done / trial done in the remaining buffers. Trial and episode
+    /// auto-resets happen in place, exactly like the scalar oracle.
+    pub fn step_all(&mut self, actions: &[i32], obs_out: &mut [i32],
+                    rewards: &mut [f32], dones: &mut [bool],
+                    trial_dones: &mut [bool]) {
+        assert_eq!(actions.len(), self.b, "need one action per env");
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        assert_eq!(rewards.len(), self.b);
+        assert_eq!(dones.len(), self.b);
+        assert_eq!(trial_dones.len(), self.b);
+        for i in 0..self.b {
+            let (reward, done, trial_done) = self.step_env(i, actions[i]);
+            rewards[i] = reward;
+            dones[i] = done;
+            trial_dones[i] = trial_done;
+            self.observe_env(i, obs_out);
+        }
+    }
+
+    // --- per-env kernels ---------------------------------------------------
+
+    fn reset_env(&mut self, i: usize, base: &Grid, ruleset: &Ruleset,
+                 max_steps: i32, mut rng: Rng) {
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        assert_eq!((base.h, base.w), (h, w),
+                   "env {i}: base grid {}x{} != family {h}x{w}",
+                   base.h, base.w);
+        let mr = self.cfg.max_rules;
+        let mi = self.cfg.max_init;
+        assert!(ruleset.rules.len() <= mr,
+                "env {i}: ruleset has {} rules > capacity {mr}",
+                ruleset.rules.len());
+        assert!(ruleset.init_tiles.len() <= mi,
+                "env {i}: ruleset has {} init objects > capacity {mi}",
+                ruleset.init_tiles.len());
+
+        // encode the ruleset into its fixed-width table rows
+        for j in 0..mr {
+            self.rules[i * mr + j] =
+                ruleset.rules.get(j).copied().unwrap_or(Rule::EMPTY);
+        }
+        self.goals[i] = ruleset.goal;
+        for j in 0..mi {
+            self.init[i * mi + j] = ruleset.init_tiles.get(j).copied()
+                .unwrap_or(Cell::new(0, 0));
+        }
+        self.init_len[i] = ruleset.init_tiles.len() as u32;
+
+        let g0 = i * h * w;
+        self.base[g0..g0 + h * w].copy_from_slice(base.cells());
+        self.max_steps[i] = max_steps;
+        self.pocket[i] = POCKET_EMPTY;
+        self.step_count[i] = 0;
+        self.place(i, &mut rng);
+        self.rngs[i] = rng;
+    }
+
+    fn step_env(&mut self, i: usize, action: i32) -> (f32, bool, bool) {
+        let action = action.clamp(0, NUM_ACTIONS as i32 - 1);
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let g0 = i * h * w;
+        let mr = self.cfg.max_rules;
+
+        let mut pos = (self.agent_pos[i * 2], self.agent_pos[i * 2 + 1]);
+        let mut dir = self.agent_dir[i];
+        let mut pocket = self.pocket[i];
+        let achieved;
+        {
+            let mut g = GridView::new(h, w, &mut self.grid[g0..g0 + h * w]);
+            apply_action(&mut g, &mut pos, &mut dir, &mut pocket, action);
+            // rules fire only after acting actions (§2.1); padded zero
+            // rows are inert, so the whole fixed-width table is applied
+            if is_acting_action(action) {
+                check_rules(&mut g, pos, &mut pocket,
+                            &self.rules[i * mr..(i + 1) * mr]);
+            }
+            achieved = check_goal(&g, pos, pocket, &self.goals[i]);
+        }
+
+        let new_step = self.step_count[i] + 1;
+        let done = new_step >= self.max_steps[i];
+        let reward = if achieved {
+            1.0 - 0.9 * new_step as f32 / self.max_steps[i].max(1) as f32
+        } else {
+            0.0
+        };
+
+        self.agent_pos[i * 2] = pos.0;
+        self.agent_pos[i * 2 + 1] = pos.1;
+        self.agent_dir[i] = dir;
+        self.pocket[i] = pocket;
+
+        let trial_done = achieved || done;
+        if trial_done {
+            // same stream discipline as the scalar oracle: split the
+            // env's RNG, place from the child stream
+            let mut sub = self.rngs[i].split();
+            self.place(i, &mut sub);
+            self.pocket[i] = POCKET_EMPTY;
+        }
+        self.step_count[i] = if done { 0 } else { new_step };
+        (reward, done, trial_done)
+    }
+
+    /// Trial placement for env `i`: restore the base grid, then place
+    /// init tiles + agent on distinct random floor cells. Mirrors
+    /// `state::place_objects` including its RNG call sequence
+    /// (`partial_shuffle` == `sample_distinct`, then `below(4)`), but
+    /// works in place on the SoA buffers with reusable scratch.
+    fn place(&mut self, i: usize, rng: &mut Rng) {
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let g0 = i * h * w;
+        let grid = &mut self.grid[g0..g0 + h * w];
+        grid.copy_from_slice(&self.base[g0..g0 + h * w]);
+
+        self.free_scratch.clear();
+        for (p, cell) in grid.iter().enumerate() {
+            if cell.tile == TILE_FLOOR {
+                self.free_scratch.push(p);
+            }
+        }
+        let k = self.init_len[i] as usize;
+        assert!(
+            self.free_scratch.len() > k,
+            "grid has {} free cells but needs {}",
+            self.free_scratch.len(),
+            k + 1
+        );
+        rng.partial_shuffle(&mut self.free_scratch, k + 1);
+        let init = &self.init[i * self.cfg.max_init..];
+        for j in 0..k {
+            grid[self.free_scratch[j]] = init[j];
+        }
+        let agent_flat = self.free_scratch[k];
+        self.agent_pos[i * 2] = (agent_flat / w) as i32;
+        self.agent_pos[i * 2 + 1] = (agent_flat % w) as i32;
+        self.agent_dir[i] = rng.below(4) as i32;
+    }
+
+    /// Render env `i`'s observation into its `[V, V, 2]` slice of
+    /// `obs_out`, reusing the shared obs/occlusion scratch.
+    fn observe_env(&mut self, i: usize, obs_out: &mut [i32]) {
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let v = self.cfg.opts.view_size;
+        let g0 = i * h * w;
+        let pos = (self.agent_pos[i * 2], self.agent_pos[i * 2 + 1]);
+        let dir = self.agent_dir[i];
+        let gv = GridView::new(h, w, &mut self.grid[g0..g0 + h * w]);
+        observe_into(&gv, pos, dir, v, self.cfg.opts.see_through_walls,
+                     &mut self.obs_scratch, &mut self.vis_scratch);
+        let out = &mut obs_out[i * v * v * 2..(i + 1) * v * v * 2];
+        for (j, cell) in self.obs_scratch.cells.iter().enumerate() {
+            out[2 * j] = cell.tile;
+            out[2 * j + 1] = cell.color;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::state::{reset, step};
+
+    fn ball_red() -> Cell {
+        Cell::new(TILE_BALL, COLOR_RED)
+    }
+
+    fn sample_ruleset() -> Ruleset {
+        Ruleset {
+            goal: Goal::agent_near(ball_red()),
+            rules: vec![Rule::agent_near(
+                ball_red(),
+                Cell::new(TILE_SQUARE, COLOR_BLUE),
+            )],
+            init_tiles: vec![ball_red()],
+        }
+    }
+
+    /// Smoke-level bitwise parity on one env family; the full registry
+    /// sweep lives in `tests/vec_env_equivalence.rs`.
+    #[test]
+    fn matches_scalar_oracle_on_simple_family() {
+        let opts = EnvOptions::default();
+        let b = 3usize;
+        let h = 9;
+        let w = 9;
+        let rs = sample_ruleset();
+        let grids: Vec<Grid> =
+            (0..b).map(|_| Grid::empty_room(h, w)).collect();
+        let max_steps = vec![5i32; b]; // short episodes force auto-resets
+        let rngs: Vec<Rng> =
+            (0..b).map(|i| Rng::new(100 + i as u64)).collect();
+
+        // scalar oracle
+        let mut scalar: Vec<_> = (0..b)
+            .map(|i| {
+                reset(grids[i].clone(), rs.clone(), max_steps[i],
+                      rngs[i].clone(), opts)
+            })
+            .collect();
+
+        // vectorized
+        let cfg = VecEnvConfig {
+            h,
+            w,
+            max_rules: 2,
+            max_init: 2,
+            opts,
+        };
+        let mut venv = VecEnv::new(cfg, b);
+        let mut obs = vec![0i32; venv.obs_len()];
+        let rs_refs: Vec<&Ruleset> = (0..b).map(|_| &rs).collect();
+        venv.reset_all(&grids, &rs_refs, &max_steps, &rngs, &mut obs);
+
+        let vv2 = opts.view_size * opts.view_size * 2;
+        for i in 0..b {
+            assert_eq!(&obs[i * vv2..(i + 1) * vv2],
+                       &scalar[i].1.to_flat()[..], "reset obs env {i}");
+        }
+
+        let mut rewards = vec![0f32; b];
+        let mut dones = vec![false; b];
+        let mut trials = vec![false; b];
+        let mut act = Rng::new(7);
+        for t in 0..24 {
+            let actions: Vec<i32> =
+                (0..b).map(|_| act.below(6) as i32).collect();
+            venv.step_all(&actions, &mut obs, &mut rewards, &mut dones,
+                          &mut trials);
+            for i in 0..b {
+                let out = step(&mut scalar[i].0, actions[i], opts);
+                assert_eq!(rewards[i].to_bits(), out.reward.to_bits(),
+                           "step {t} env {i}: reward");
+                assert_eq!(dones[i], out.done, "step {t} env {i}: done");
+                assert_eq!(trials[i], out.trial_done,
+                           "step {t} env {i}: trial_done");
+                assert_eq!(&obs[i * vv2..(i + 1) * vv2],
+                           &out.obs.to_flat()[..],
+                           "step {t} env {i}: obs");
+            }
+        }
+    }
+
+    #[test]
+    fn obs_buffer_layout() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let venv = VecEnv::new(cfg, 4);
+        assert_eq!(venv.batch(), 4);
+        assert_eq!(venv.obs_len(), 4 * 5 * 5 * 2);
+        assert_eq!(venv.config().max_rules, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "need one action per env")]
+    fn action_batch_mismatch_panics() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let mut venv = VecEnv::new(cfg, 2);
+        let mut obs = vec![0i32; venv.obs_len()];
+        let mut rewards = vec![0f32; 2];
+        let mut dones = vec![false; 2];
+        let mut trials = vec![false; 2];
+        venv.step_all(&[0], &mut obs, &mut rewards, &mut dones,
+                      &mut trials);
+    }
+}

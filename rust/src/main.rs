@@ -7,7 +7,8 @@
 //!   play            random-policy episode with ASCII render
 //!   gen-benchmark   generate + store a benchmark (§3)
 //!   rollout         sharded random-policy throughput run
-//!                   (--shards N --overlap on|off: double-buffered engine)
+//!                   (--backend native|xla|auto; --shards N
+//!                   --overlap on|off: double-buffered engine)
 //!   train           RL² PPO training (Fig. 6/7 harness; --shards N runs
 //!                   the data-parallel shard engine)
 //!   eval            evaluation protocol on a benchmark
@@ -28,8 +29,9 @@ use xmgrid::benchgen::store::load_benchmark;
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::{fmt_sps, CsvLog, ThroughputMeter};
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::{Overlap, RolloutEngine, ShardConfig,
-                          ShardedTrainer, TrainConfig, Trainer};
+use xmgrid::coordinator::{BackendKind, NativeEnvConfig, Overlap,
+                          RolloutEngine, ShardConfig, ShardedTrainer,
+                          TrainConfig, Trainer};
 use xmgrid::env::registry;
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::render::render_grid;
@@ -86,7 +88,7 @@ commands:
   envs                                list environments
   play --env NAME [--steps N]         ASCII episode
   gen-benchmark --preset P --n N      generate benchmark
-  rollout [--shards N] [--overlap M]  sharded throughput run
+  rollout [--backend B] [--shards N]  sharded throughput run
   train [--shards N] [--overlap M]    RL² PPO training
   eval --benchmark B                  evaluation protocol
   validate                            oracle cross-check
@@ -125,16 +127,22 @@ them gzip-compressed under the benchmark data dir
   --n N         number of rulesets (default: 1000)
   --seed S      generator seed (default: preset seed)",
         "rollout" => "\
-usage: xmgrid rollout [--batch B] [--chunks N] [--shards K]
-                      [--overlap on|off] [--benchmark NAME] [--seed S]
-                      [--rooms R] [--artifacts-dir DIR]
+usage: xmgrid rollout [--backend auto|native|xla] [--batch B]
+                      [--chunks N] [--shards K] [--overlap on|off]
+                      [--env NAME] [--steps T] [--benchmark NAME]
+                      [--seed S] [--rooms R] [--artifacts-dir DIR]
 
-Fused random-policy throughput run on the sharded rollout engine. Each
-shard is a persistent worker thread owning a full replica (PJRT client,
-compiled executables, env states, private RNG stream).
+Random-policy throughput run on the sharded rollout engine. Each shard
+is a persistent worker thread owning a full replica and a private RNG
+stream; the replica is either an AOT/PJRT executable set (`xla`) or a
+pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
 
-  --batch B          env batch of the rollout artifact to pick
-                     (default: 1024; falls back to the first artifact)
+  --backend B        native: vectorized SoA kernels, zero artifacts.
+                     xla: compiled HLO artifacts through PJRT.
+                     auto (default): xla if a manifest with rollout
+                     artifacts exists, else native.
+  --batch B          env batch: artifact to pick (xla) or VecEnv size
+                     per shard (native) (default: 1024)
   --chunks N         rollout chunks per shard (default: 4)
   --shards K         number of shard replicas (default: 1)
   --overlap on|off   off: lockstep rounds with a global barrier,
@@ -143,11 +151,16 @@ compiled executables, env states, private RNG stream).
                      buffer in flight while the host drains the first.
                      Per-shard trajectories are identical in both modes.
                      (default: off)
+  --env NAME         native backend: XLand registry family to roll out
+                     (default: XLand-MiniGrid-R1-13x13)
+  --steps T          native backend: steps per rollout chunk
+                     (default: 64; xla takes T from the artifact)
   --benchmark NAME   task source (default: trivial-1k, generated and
                      cached on first use)
   --seed S           run seed; shard k derives stream shard_seed(S, k)
                      (default: 0)
-  --rooms R          rooms in the base grid layout (default: 1)",
+  --rooms R          rooms in the base grid layout — xla backend; the
+                     native backend takes rooms from --env (default: 1)",
         "train" => "\
 usage: xmgrid train [--benchmark NAME] [--iters N] [--batch B]
                     [--artifact NAME] [--shards K] [--overlap on|off]
@@ -304,27 +317,60 @@ fn cmd_gen_benchmark(args: &Args) -> Result<()> {
 
 fn cmd_rollout(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let manifest = Manifest::load(&dir)?;
+    let backend = BackendKind::from_flag(&args.str_or("backend", "auto"))?;
     let batch = args.usize_or("batch", 1024);
     let chunks = args.usize_or("chunks", 4);
     let cfg = shard_config(args)?;
-    let rolls = manifest.of_kind("env_rollout");
-    let spec = rolls
-        .iter()
-        .find(|s| s.meta_usize("B").unwrap() == batch)
-        .or_else(|| rolls.first())
-        .context("no env_rollout artifacts; run `make artifacts`")?;
-    let fam = EnvFamily::from_spec(spec)?;
-    let t = spec.meta_usize("T")?;
-    println!(
-        "artifact {} (B={} T={t}) shards={} overlap={}",
-        spec.name, fam.b, cfg.shards, cfg.overlap
-    );
-
     let bench =
         Arc::new(load_benchmark(&args.str_or("benchmark", "trivial-1k"))?);
-    let engine =
-        RolloutEngine::launch(dir, spec.name.clone(), bench, cfg)?;
+
+    // Backend selection: an explicit flag wins; `auto` takes the
+    // AOT/PJRT path only when a manifest with rollout artifacts exists,
+    // and otherwise falls back to the native vectorized engine — so a
+    // fresh checkout rolls out with zero build steps. The manifest is
+    // loaded once and reused by the xla launch path.
+    let manifest = match backend {
+        BackendKind::Native => None,
+        BackendKind::Xla => Some(Manifest::load(&dir)?),
+        BackendKind::Auto => Manifest::load(&dir)
+            .ok()
+            .filter(|m| !m.of_kind("env_rollout").is_empty()),
+    };
+
+    let engine = if let Some(manifest) = manifest {
+        if args.get("env").is_some() || args.get("steps").is_some() {
+            println!("note: --env/--steps apply to the native backend \
+                      only; the xla family/T come from the artifact");
+        }
+        let rolls = manifest.of_kind("env_rollout");
+        let spec = rolls
+            .iter()
+            .find(|s| s.meta_usize("B").unwrap() == batch)
+            .or_else(|| rolls.first())
+            .context("no env_rollout artifacts; run `make artifacts`")?;
+        let fam = EnvFamily::from_spec(spec)?;
+        let t = spec.meta_usize("T")?;
+        println!(
+            "backend xla: artifact {} (B={} T={t}) shards={} overlap={}",
+            spec.name, fam.b, cfg.shards, cfg.overlap
+        );
+        RolloutEngine::launch(dir, spec.name.clone(), bench, cfg)?
+    } else {
+        if args.get("rooms").is_some() {
+            println!("note: --rooms applies to the xla backend only; \
+                      the native room count comes from --env");
+        }
+        let env_name =
+            args.str_or("env", "XLand-MiniGrid-R1-13x13");
+        let t = args.usize_or("steps", 64);
+        let ncfg = NativeEnvConfig::for_env(&env_name, batch, t, &bench)?;
+        println!(
+            "backend native: {env_name} (B={batch} T={t} grid {}x{} \
+             rooms {}) shards={} overlap={}",
+            ncfg.h, ncfg.w, ncfg.rooms, cfg.shards, cfg.overlap
+        );
+        RolloutEngine::launch_native(ncfg, bench, cfg)?
+    };
 
     let totals = if cfg.shards == 1 {
         let mut meter = ThroughputMeter::new();

@@ -1,8 +1,13 @@
 //! Bench harness (no `criterion` offline): warmup + repeated timed runs,
 //! reporting the *minimum* across repeats — the paper's own protocol
-//! ("taking the minimum value among multiple repeats", §4.1).
+//! ("taking the minimum value among multiple repeats", §4.1). Results
+//! can be serialized to `BENCH_<name>.json` files ([`JsonReport`]) so
+//! the repo's perf trajectory is machine-readable across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use super::args::Args;
 
 pub struct BenchResult {
     pub name: String,
@@ -12,11 +17,131 @@ pub struct BenchResult {
     pub repeats: usize,
 }
 
+/// Minimal JSON string escaping (quotes and backslashes; labels here are
+/// ASCII identifiers, control characters do not occur).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// A finite f64 as a JSON number (JSON has no NaN/Infinity literals).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
 impl BenchResult {
     /// steps/second given `work` units per invocation.
     pub fn throughput(&self, work: usize) -> f64 {
         work as f64 / self.min_secs
     }
+
+    /// Machine-readable record (no serde offline — hand-rolled JSON).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"min_secs\":{},\"mean_secs\":{},\
+             \"repeats\":{}}}",
+            json_escape(&self.name),
+            json_num(self.min_secs),
+            json_num(self.mean_secs),
+            self.repeats
+        )
+    }
+}
+
+/// Accumulates bench rows and writes one `BENCH_<name>.json` file — the
+/// perf-trajectory format the CI smoke run validates and the repo tracks
+/// across PRs.
+pub struct JsonReport {
+    bench: String,
+    rows: Vec<String>,
+    metrics: Vec<(String, f64)>,
+    note: Option<String>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> JsonReport {
+        JsonReport {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+            metrics: Vec::new(),
+            note: None,
+        }
+    }
+
+    /// One timed row: `envs * steps` work units per invocation.
+    pub fn add(&mut self, label: &str, envs: usize, steps: usize,
+               r: &BenchResult) {
+        let sps = r.throughput(envs * steps);
+        self.rows.push(format!(
+            "{{\"label\":\"{}\",\"envs\":{envs},\"steps\":{steps},\
+             \"sps\":{},\"min_secs\":{},\"mean_secs\":{},\"repeats\":{}}}",
+            json_escape(label),
+            json_num(sps),
+            json_num(r.min_secs),
+            json_num(r.mean_secs),
+            r.repeats
+        ));
+    }
+
+    /// A row measured externally (e.g. by an engine's own wall clock)
+    /// where only the steps/second figure is known.
+    pub fn add_sps(&mut self, label: &str, envs: usize, steps: usize,
+                   sps: f64) {
+        self.rows.push(format!(
+            "{{\"label\":\"{}\",\"envs\":{envs},\"steps\":{steps},\
+             \"sps\":{}}}",
+            json_escape(label),
+            json_num(sps)
+        ));
+    }
+
+    /// A named summary figure (speedups, ratios).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    pub fn note(&mut self, note: &str) {
+        self.note = Some(note.to_string());
+    }
+
+    pub fn to_json(&self) -> String {
+        let metrics: Vec<String> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", json_escape(k), json_num(*v)))
+            .collect();
+        let note = match &self.note {
+            Some(n) => format!(",\"note\":\"{}\"", json_escape(n)),
+            None => String::new(),
+        };
+        format!(
+            "{{\"bench\":\"{}\",\"rows\":[{}],\"metrics\":{{{}}}{}}}\n",
+            json_escape(&self.bench),
+            self.rows.join(","),
+            metrics.join(","),
+            note
+        )
+    }
+
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+/// Resolve the `--json [PATH]` bench flag: an explicit path wins; the
+/// bare flag means `BENCH_<name>.json` in the working directory; absent
+/// means no JSON output.
+pub fn json_arg_path(args: &Args, name: &str) -> Option<PathBuf> {
+    if let Some(p) = args.get("json") {
+        return Some(PathBuf::from(p));
+    }
+    if args.flag("json") {
+        return Some(PathBuf::from(format!("BENCH_{name}.json")));
+    }
+    None
 }
 
 /// Time `f` (which performs one full invocation of the workload).
@@ -77,5 +202,58 @@ mod tests {
             repeats: 1,
         };
         assert_eq!(r.throughput(100), 200.0);
+    }
+
+    #[test]
+    fn bench_result_json() {
+        let r = BenchResult {
+            name: "native-vec".into(),
+            min_secs: 0.25,
+            mean_secs: 0.5,
+            repeats: 3,
+        };
+        assert_eq!(
+            r.to_json(),
+            "{\"name\":\"native-vec\",\"min_secs\":0.25,\
+             \"mean_secs\":0.5,\"repeats\":3}"
+        );
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut rep = JsonReport::new("fig5a_native");
+        let r = BenchResult {
+            name: "n".into(),
+            min_secs: 0.5,
+            mean_secs: 0.5,
+            repeats: 2,
+        };
+        rep.add("native-vec-b16", 16, 64, &r);
+        rep.add_sps("engine", 8, 32, 1000.0);
+        rep.metric("native_vs_scalar_b1024", 6.5);
+        rep.note("a \"quoted\" note");
+        let text = rep.to_json();
+        assert!(text.starts_with("{\"bench\":\"fig5a_native\""));
+        assert!(text.contains("\"label\":\"native-vec-b16\""));
+        assert!(text.contains("\"sps\":2048")); // 16*64/0.5
+        assert!(text.contains("\"native_vs_scalar_b1024\":6.5"));
+        assert!(text.contains("\\\"quoted\\\""));
+        assert!(text.ends_with("}\n"));
+    }
+
+    #[test]
+    fn json_path_resolution() {
+        use crate::util::args::Args;
+        let argv: Vec<String> =
+            vec!["--json".into(), "out.json".into()];
+        let a = Args::parse(&argv);
+        assert_eq!(json_arg_path(&a, "x").unwrap(),
+                   PathBuf::from("out.json"));
+        let argv: Vec<String> = vec!["--json".into()];
+        let a = Args::parse(&argv);
+        assert_eq!(json_arg_path(&a, "fig5a_native").unwrap(),
+                   PathBuf::from("BENCH_fig5a_native.json"));
+        let a = Args::parse(&[]);
+        assert!(json_arg_path(&a, "x").is_none());
     }
 }

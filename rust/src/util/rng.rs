@@ -67,14 +67,26 @@ impl Rng {
         self.f64() < p
     }
 
-    /// Sample `k` distinct elements from `items` (partial Fisher-Yates).
-    pub fn sample_distinct<T: Copy>(&mut self, items: &[T], k: usize) -> Vec<T> {
-        let mut pool: Vec<T> = items.to_vec();
+    /// Partial Fisher-Yates: after the call, `pool[..k]` holds `k`
+    /// distinct uniformly-sampled elements. Returns the clamped `k`.
+    ///
+    /// In-place, allocation-free form of [`Rng::sample_distinct`] — the
+    /// RNG call sequence (`below(len)`, `below(len-1)`, ...) is shared
+    /// between both and is part of the scalar/vectorized equivalence
+    /// contract of `env::vector`.
+    pub fn partial_shuffle<T>(&mut self, pool: &mut [T], k: usize) -> usize {
         let k = k.min(pool.len());
         for i in 0..k {
             let j = i + self.below(pool.len() - i);
             pool.swap(i, j);
         }
+        k
+    }
+
+    /// Sample `k` distinct elements from `items` (partial Fisher-Yates).
+    pub fn sample_distinct<T: Copy>(&mut self, items: &[T], k: usize) -> Vec<T> {
+        let mut pool: Vec<T> = items.to_vec();
+        let k = self.partial_shuffle(&mut pool, k);
         pool.truncate(k);
         pool
     }
@@ -142,6 +154,17 @@ mod tests {
         t.sort_unstable();
         t.dedup();
         assert_eq!(t.len(), 20);
+    }
+
+    #[test]
+    fn partial_shuffle_matches_sample_distinct() {
+        // same seed -> identical RNG call sequence -> identical prefix
+        let items: Vec<usize> = (0..30).collect();
+        let sampled = Rng::new(21).sample_distinct(&items, 12);
+        let mut pool = items.clone();
+        let k = Rng::new(21).partial_shuffle(&mut pool, 12);
+        assert_eq!(k, 12);
+        assert_eq!(&pool[..12], &sampled[..]);
     }
 
     #[test]

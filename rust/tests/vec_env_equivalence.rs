@@ -1,0 +1,180 @@
+//! Batched-vs-scalar equivalence: the SoA `VecEnv` kernels must
+//! reproduce the scalar oracle's trajectories **bitwise** — identical
+//! observations, rewards, done and trial_done flags — for every registry
+//! env family and for sampled XLand rulesets, across multi-trial
+//! episodes including trial and episode auto-reset boundaries.
+//!
+//! Both engines run the same generic kernels over `CellGrid` and the
+//! same RNG call sequences, so a divergence here means the SoA
+//! orchestration (encoding, placement, reset bookkeeping) broke.
+
+use xmgrid::benchgen::{generate_benchmark, Preset};
+use xmgrid::env::registry;
+use xmgrid::env::state::{reset, step, EnvOptions, Ruleset, State};
+use xmgrid::env::vector::{VecEnv, VecEnvConfig};
+use xmgrid::env::{Goal, Obs};
+use xmgrid::util::rng::Rng;
+
+/// Drive `b` instances of one env family through `steps` random actions
+/// on both engines in lockstep and assert bitwise parity per step.
+fn assert_equivalence(name: &str, b: usize, steps: usize, seed: u64,
+                      max_steps_override: Option<i32>, opts: EnvOptions,
+                      xland_tasks: &[Ruleset]) {
+    let mut rng = Rng::new(seed);
+    let mut grids = Vec::new();
+    let mut rss: Vec<Ruleset> = Vec::new();
+    let mut maxs = Vec::new();
+    let mut rngs = Vec::new();
+    for i in 0..b {
+        let bp = registry::make(name, &mut rng);
+        let rs = bp.ruleset.clone().unwrap_or_else(|| {
+            xland_tasks[i % xland_tasks.len()].clone()
+        });
+        let ms = max_steps_override.unwrap_or(bp.max_steps);
+        grids.push(bp.base_grid);
+        rss.push(rs);
+        maxs.push(ms);
+        rngs.push(rng.split());
+    }
+    let h = grids[0].h;
+    let w = grids[0].w;
+    let mr = rss.iter().map(|r| r.rules.len()).max().unwrap().max(1);
+    let mi = rss.iter().map(|r| r.init_tiles.len()).max().unwrap().max(1);
+
+    // scalar oracle
+    let mut scalar: Vec<(State, Obs)> = (0..b)
+        .map(|i| {
+            reset(grids[i].clone(), rss[i].clone(), maxs[i],
+                  rngs[i].clone(), opts)
+        })
+        .collect();
+
+    // vectorized engine
+    let cfg = VecEnvConfig { h, w, max_rules: mr, max_init: mi, opts };
+    let mut venv = VecEnv::new(cfg, b);
+    let mut obs = vec![0i32; venv.obs_len()];
+    let rs_refs: Vec<&Ruleset> = rss.iter().collect();
+    venv.reset_all(&grids, &rs_refs, &maxs, &rngs, &mut obs);
+
+    let vv2 = opts.view_size * opts.view_size * 2;
+    for i in 0..b {
+        assert_eq!(&obs[i * vv2..(i + 1) * vv2],
+                   &scalar[i].1.to_flat()[..],
+                   "{name}: reset obs mismatch, env {i}");
+    }
+
+    let mut rewards = vec![0f32; b];
+    let mut dones = vec![false; b];
+    let mut trials = vec![false; b];
+    let mut act_rng = Rng::new(seed ^ 0xAB12_CD34);
+    let mut boundaries = 0usize;
+    for t in 0..steps {
+        let actions: Vec<i32> =
+            (0..b).map(|_| act_rng.below(6) as i32).collect();
+        venv.step_all(&actions, &mut obs, &mut rewards, &mut dones,
+                      &mut trials);
+        for i in 0..b {
+            let out = step(&mut scalar[i].0, actions[i], opts);
+            assert_eq!(rewards[i].to_bits(), out.reward.to_bits(),
+                       "{name} step {t} env {i}: reward");
+            assert_eq!(dones[i], out.done,
+                       "{name} step {t} env {i}: done");
+            assert_eq!(trials[i], out.trial_done,
+                       "{name} step {t} env {i}: trial_done");
+            assert_eq!(&obs[i * vv2..(i + 1) * vv2],
+                       &out.obs.to_flat()[..],
+                       "{name} step {t} env {i}: obs");
+            if trials[i] {
+                boundaries += 1;
+            }
+        }
+    }
+    if max_steps_override.is_some() {
+        assert!(boundaries > 0,
+                "{name}: test never crossed an auto-reset boundary");
+    }
+}
+
+fn small_tasks(n: usize) -> Vec<Ruleset> {
+    let (rulesets, _) = generate_benchmark(&Preset::Small.config(), n);
+    rulesets
+}
+
+/// Every registry env family, short episodes so episode auto-resets are
+/// exercised (max_steps = 6 forces a boundary every 6 steps).
+#[test]
+fn every_registry_family_matches_scalar() {
+    let tasks = small_tasks(8);
+    for name in registry::registered_environments() {
+        assert_equivalence(name, 2, 20, 11, Some(6),
+                           EnvOptions::default(), &tasks);
+    }
+}
+
+/// XLand families with rule-bearing rulesets over longer multi-trial
+/// episodes: rules fire, trials end on goal achievement, episodes on the
+/// step limit — all boundaries crossed repeatedly.
+#[test]
+fn xland_rulesets_multi_trial_parity() {
+    let tasks = small_tasks(16);
+    for (name, seed) in [
+        ("XLand-MiniGrid-R1-9x9", 1u64),
+        ("XLand-MiniGrid-R4-13x13", 2),
+        ("XLand-MiniGrid-R9-16x16", 3),
+    ] {
+        assert_equivalence(name, 4, 60, seed, Some(9),
+                           EnvOptions::default(), &tasks);
+    }
+}
+
+/// Occlusion path: see_through_walls = false runs the flood-fill
+/// visibility kernel in both engines.
+#[test]
+fn occlusion_parity() {
+    let tasks = small_tasks(8);
+    let opts = EnvOptions { view_size: 5, see_through_walls: false };
+    assert_equivalence("XLand-MiniGrid-R4-13x13", 3, 30, 5, Some(8),
+                       opts, &tasks);
+    assert_equivalence("MiniGrid-DoorKey-8x8", 2, 20, 6, Some(8), opts,
+                       &tasks);
+}
+
+/// Non-default view size exercises the obs buffer strides.
+#[test]
+fn view_size_7_parity() {
+    let tasks = small_tasks(8);
+    let opts = EnvOptions { view_size: 7, see_through_walls: true };
+    assert_equivalence("XLand-MiniGrid-R2-9x9", 3, 24, 13, Some(7),
+                       opts, &tasks);
+}
+
+/// A trivially-empty goal (never achieved) still episode-resets; and a
+/// goal that is immediately achievable trial-resets without ending the
+/// episode — the two boundary kinds are distinguishable in the flags.
+#[test]
+fn boundary_flags_distinguish_trial_and_episode() {
+    let rs = Ruleset {
+        goal: Goal::EMPTY,
+        rules: vec![],
+        init_tiles: vec![],
+    };
+    let grids = vec![xmgrid::env::Grid::empty_room(9, 9)];
+    let opts = EnvOptions::default();
+    let rngs = vec![Rng::new(3)];
+    let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                             opts };
+    let mut venv = VecEnv::new(cfg, 1);
+    let mut obs = vec![0i32; venv.obs_len()];
+    venv.reset_all(&grids, &[&rs], &[4], &rngs, &mut obs);
+    let mut rewards = vec![0f32; 1];
+    let mut dones = vec![false; 1];
+    let mut trials = vec![false; 1];
+    for t in 1..=8 {
+        venv.step_all(&[1], &mut obs, &mut rewards, &mut dones,
+                      &mut trials);
+        let expect_done = t % 4 == 0;
+        assert_eq!(dones[0], expect_done, "step {t}");
+        assert_eq!(trials[0], expect_done, "step {t}");
+        assert_eq!(rewards[0], 0.0, "EMPTY goal never rewards");
+    }
+}
