@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     let mut gen_cfg = Preset::Small.config();
     gen_cfg.max_rules = trainer.family.mr;
     gen_cfg.max_objects = trainer.family.mi;
-    let (rulesets, _) = generate_benchmark(&gen_cfg, 8192);
+    let (rulesets, _) = generate_benchmark(&gen_cfg, 8192)?;
     let all = Benchmark { name: "small-8k".into(), rulesets };
     let (train_bench, test_bench) = all.split_by_goal(&TRAIN_GOALS);
     println!(

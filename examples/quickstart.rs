@@ -27,7 +27,8 @@ fn main() -> Result<()> {
     // --- create an env instance + sample a task -------------------------
     let mut rng = Rng::new(0);
     let bp = registry::make("XLand-MiniGrid-R1-9x9", &mut rng);
-    let (mut tasks, _) = generate_benchmark(&Preset::Trivial.config(), 16);
+    let (mut tasks, _) =
+        generate_benchmark(&Preset::Trivial.config(), 16)?;
     let ruleset = tasks.swap_remove(3);
     println!("\ntask goal id {} | {} rules | {} initial objects",
              ruleset.goal.id(), ruleset.rules.len(),
@@ -61,7 +62,7 @@ fn main() -> Result<()> {
                 let bench = xmgrid::benchgen::Benchmark {
                     name: "demo".into(),
                     rulesets: generate_benchmark(
-                        &Preset::Trivial.config(), 64).0,
+                        &Preset::Trivial.config(), 64)?.0,
                 };
                 let rulesets = pool.sample_rulesets(&bench, &mut rng);
                 pool.reset(&rulesets, &mut rng)?;

@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Instant;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
@@ -25,8 +26,8 @@ fn main() -> Result<()> {
     let chunks = args.usize_or("chunks", 2);
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
 
-    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
-    let bench = Benchmark { name: "trivial".into(), rulesets };
+    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256)?;
+    let bench = Arc::new(Benchmark { name: "trivial".into(), rulesets });
     let mut rng = Rng::new(0);
 
     // --- native vectorized SoA engine (no artifacts) ---------------------
@@ -46,6 +47,33 @@ fn main() -> Result<()> {
             / t0.elapsed().as_secs_f64();
         println!("  native-vec 13x13              envs={batch:<6} sps={}",
                  fmt_sps(sps));
+    }
+
+    // --- threads axis: same batch chunked over the worker pool ----------
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    println!("\n== native rollout threads scaling (B=1024, \
+              host cores: {cores})");
+    let mut sweep = vec![1usize, 2, cores.min(8)];
+    sweep.sort_unstable();
+    sweep.dedup();
+    for threads in sweep {
+        let t = 128usize;
+        let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13",
+                                            1024, t, &bench)?
+            .with_threads(threads);
+        let mut pool = NativePool::new(ncfg);
+        pool.reset(&bench, &mut rng);
+        pool.rollout(t, &mut rng); // warmup
+        let t0 = Instant::now();
+        for _ in 0..chunks {
+            pool.rollout(t, &mut rng);
+        }
+        let sps = (1024 * t * chunks) as f64
+            / t0.elapsed().as_secs_f64();
+        println!("  native-vec threads={threads:<3}       envs=1024   \
+                  sps={}", fmt_sps(sps));
     }
 
     // --- AOT fused rollouts, every compiled batch size -------------------

@@ -47,7 +47,7 @@ fn main() -> Result<()> {
     let mut gen_cfg = Preset::Trivial.config();
     gen_cfg.max_rules = trainer.family.mr;
     gen_cfg.max_objects = trainer.family.mi;
-    let (rulesets, _) = generate_benchmark(&gen_cfg, 4096);
+    let (rulesets, _) = generate_benchmark(&gen_cfg, 4096)?;
     let bench = Benchmark { name: "trivial-4k".into(), rulesets };
 
     println!("== train_rl2: {} on {} ({}x{} grid, {} envs, T={})",

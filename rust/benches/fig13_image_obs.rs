@@ -16,7 +16,8 @@ use xmgrid::util::rng::Rng;
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Runtime::new(&dir).expect("make artifacts first");
-    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 128);
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), 128).unwrap();
     let tasks = Benchmark { name: "trivial".into(), rulesets };
     let mut rng = Rng::new(0);
 

@@ -15,7 +15,8 @@ fn main() {
     println!("# Fig 4: rule-count distribution per benchmark ({n} \
               rulesets each)");
     for preset in Preset::all() {
-        let (_, stats) = generate_benchmark(&preset.config(), n);
+        let (_, stats) =
+            generate_benchmark(&preset.config(), n).unwrap();
         let counts: Vec<usize> =
             stats.iter().map(|s| s.num_rules).collect();
         let depths: Vec<f64> =

@@ -6,18 +6,27 @@
 //! Sections, in order:
 //! 1. native vectorized backend — `VecEnv` SoA batch kernels (always
 //!    runs, no artifacts needed);
-//! 2. scalar per-env loop baseline — the allocating `step()` oracle, the
+//! 2. native threads scaling — the same batch chunked over the
+//!    `ParVecEnv` persistent worker pool (`--threads` axis; steps/s vs
+//!    thread count, bitwise-identical output by construction);
+//! 3. benchmark-generation throughput — rulesets/s vs thread count for
+//!    the parallel §3 generator;
+//! 4. scalar per-env loop baseline — the allocating `step()` oracle, the
 //!    EnvPool-style comparison point;
-//! 3. artifact-backed fused rollout + per-step dispatch (skipped with a
+//! 5. artifact-backed fused rollout + per-step dispatch (skipped with a
 //!    note when no PJRT runtime / artifacts are present).
 //!
 //! `--json [PATH]` writes `BENCH_fig5a_native.json` (machine-readable
 //! perf trajectory; validated by the CI smoke run). Env knobs:
-//! `XMG_MAX_B` caps the batch sweep, `XMG_BENCH_T` sets steps/chunk.
+//! `XMG_MAX_B` caps the batch sweep, `XMG_BENCH_T` sets steps/chunk,
+//! `XMG_MAX_THREADS` caps the thread sweep, `XMG_GEN_N` sizes the
+//! generation-throughput run.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::benchgen::{generate_benchmark, generate_benchmark_par,
+                       Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::{EnvPool, NativeEnvConfig, NativePool};
@@ -42,8 +51,10 @@ fn main() {
     let max_b = env_usize("XMG_MAX_B", 4096);
     let t_steps = env_usize("XMG_BENCH_T", 64);
 
-    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), 256);
-    let bench_tasks = Benchmark { name: "trivial".into(), rulesets };
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), 256).unwrap();
+    let bench_tasks =
+        Arc::new(Benchmark { name: "trivial".into(), rulesets });
     let mut rng = Rng::new(0);
 
     println!("# Fig 5a: simulation throughput vs num parallel envs");
@@ -73,6 +84,60 @@ fn main() {
         if b == 1024 {
             native_1024 = Some(sps);
         }
+    }
+
+    // --- threads scaling: chunked ParVecEnv worker pool -----------------
+    let max_threads = env_usize("XMG_MAX_THREADS", 8);
+    let tb = 1024usize.min(max_b);
+    println!("\n# native backend threads scaling (ParVecEnv worker \
+              pool, 13x13, B={tb})");
+    let mut sps_by_threads = std::collections::HashMap::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        if threads > max_threads {
+            continue;
+        }
+        let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13",
+                                            tb, t_steps, &bench_tasks)
+            .unwrap()
+            .with_threads(threads);
+        let mut pool = NativePool::new(ncfg);
+        let mut seed_rng = Rng::new(0);
+        pool.reset(&bench_tasks, &mut seed_rng);
+        let mut r = Rng::new(7);
+        let result = bench("native-threads", 1, 2, || {
+            pool.rollout(t_steps, &mut r);
+        });
+        let sps = (tb * t_steps) as f64 / result.min_secs;
+        println!("threads={threads:<3} envs={tb:<6} \
+                  steps/s={sps:<12.0} ({})", fmt_sps(sps));
+        report.add(&format!("native-vec-b{tb}-t{threads}"), tb, t_steps,
+                   &result);
+        sps_by_threads.insert(threads, sps);
+    }
+    if let (Some(&s1), Some(&s4)) =
+        (sps_by_threads.get(&1), sps_by_threads.get(&4))
+    {
+        println!("\n# threads=4 vs threads=1 at B={tb}: {:.2}x", s4 / s1);
+        report.metric("threads4_vs_1", s4 / s1);
+    }
+
+    // --- benchmark generation throughput (parallel §3 generator) --------
+    let gen_n = env_usize("XMG_GEN_N", 20_000);
+    println!("\n# benchmark generation throughput (medium preset, \
+              n={gen_n})");
+    for &threads in &[1usize, 4] {
+        if threads > max_threads {
+            continue;
+        }
+        let cfg = Preset::Medium.config();
+        let result = bench("gen-benchmark", 0, 1, || {
+            let (rs, _) =
+                generate_benchmark_par(&cfg, gen_n, threads).unwrap();
+            assert_eq!(rs.len(), gen_n);
+        });
+        let rps = gen_n as f64 / result.min_secs;
+        println!("threads={threads:<3} rulesets/s={rps:<12.0}");
+        report.add_sps(&format!("gen-medium-t{threads}"), gen_n, 1, rps);
     }
 
     // --- scalar per-env loop baseline (the allocating oracle) -----------

@@ -13,7 +13,10 @@
 //!
 //! Two backends share the engine: the native vectorized section (VecEnv
 //! SoA kernels — always runs, no artifacts) and the AOT/PJRT section
-//! (skipped with a note when no runtime/artifacts are present).
+//! (skipped with a note when no runtime/artifacts are present). The
+//! native backend additionally sweeps the `--threads` axis: a shards ×
+//! stepping-threads grid showing how replica parallelism and chunked
+//! per-replica stepping compose on one host.
 //!
 //! On a single CPU socket the shards contend for cores, so scaling bends
 //! earlier than on 8 discrete GPUs — the qualitative ordering (more
@@ -35,7 +38,8 @@ use xmgrid::util::bench::{json_arg_path, JsonReport};
 const ROUNDS: usize = 4;
 
 fn trivial_bench(n: usize) -> Arc<Benchmark> {
-    let (rulesets, _) = generate_benchmark(&Preset::Trivial.config(), n);
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), n).unwrap();
     Arc::new(Benchmark { name: "t".into(), rulesets })
 }
 
@@ -54,12 +58,13 @@ fn engine_throughput(dir: &Path, name: &str, shards: usize,
 }
 
 fn native_engine_throughput(b: usize, t: usize, shards: usize,
-                            overlap: Overlap) -> f64 {
+                            threads: usize, overlap: Overlap) -> f64 {
     let bench = trivial_bench(64);
     let cfg = ShardConfig { shards, overlap, seed: 100, rooms: 1 };
     let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13", b, t,
                                         &bench)
-        .expect("native family");
+        .expect("native family")
+        .with_threads(threads);
     let engine = RolloutEngine::launch_native(ncfg, bench, cfg)
         .expect("launching native rollout engine");
     engine.collect(1, |_| {}).unwrap(); // warmup (buffer first-touch)
@@ -90,14 +95,37 @@ fn main() {
     println!("  {:<8} {:>14} {:>14} {:>9}", "shards", "overlap-off",
              "overlap-on", "on/off");
     for &shards in &shard_counts {
-        let off = native_engine_throughput(nb, nt, shards, Overlap::Off);
-        let on = native_engine_throughput(nb, nt, shards, Overlap::On);
+        let off =
+            native_engine_throughput(nb, nt, shards, 1, Overlap::Off);
+        let on =
+            native_engine_throughput(nb, nt, shards, 1, Overlap::On);
         println!("  {shards:<8} {:>14} {:>14} {:>8.2}x", fmt_sps(off),
                  fmt_sps(on), on / off);
         report.add_sps(&format!("native-s{shards}-off"), nb * shards,
                        nt * ROUNDS, off);
         report.add_sps(&format!("native-s{shards}-on"), nb * shards,
                        nt * ROUNDS, on);
+    }
+
+    // --- native backend: shards x stepping-threads grid -----------------
+    // The two parallelism axes compose: shard replicas (independent
+    // engines) x per-replica chunked stepping workers. On a big host
+    // shards capture pmap scaling and threads capture per-replica core
+    // saturation; here the grid documents how they trade off on one
+    // socket.
+    let thread_counts: Vec<usize> =
+        if cores >= 4 { vec![1, 2, 4] } else { vec![1, 2] };
+    println!("\n# native backend shards x threads (overlap off, \
+              B={nb}/shard, T={nt})");
+    println!("  {:<8} {:<8} {:>14}", "shards", "threads", "steps/s");
+    for &shards in &shard_counts {
+        for &threads in &thread_counts {
+            let sps = native_engine_throughput(nb, nt, shards, threads,
+                                               Overlap::Off);
+            println!("  {shards:<8} {threads:<8} {:>14}", fmt_sps(sps));
+            report.add_sps(&format!("native-s{shards}-t{threads}"),
+                           nb * shards, nt * ROUNDS, sps);
+        }
     }
 
     // --- AOT/PJRT backend (needs artifacts + runtime) -------------------

@@ -28,7 +28,7 @@ fn trivial_for(mr: usize, mi: usize, n: usize) -> Benchmark {
     let mut cfg = Preset::Trivial.config();
     cfg.max_rules = mr;
     cfg.max_objects = mi;
-    let (rulesets, _) = generate_benchmark(&cfg, n);
+    let (rulesets, _) = generate_benchmark(&cfg, n).unwrap();
     Benchmark { name: "trivial".into(), rulesets }
 }
 

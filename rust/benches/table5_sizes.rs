@@ -18,7 +18,8 @@ fn main() {
     let dir = std::env::temp_dir().join("xmg_table5");
     std::fs::create_dir_all(&dir).unwrap();
     for preset in Preset::all() {
-        let (rulesets, _) = generate_benchmark(&preset.config(), n);
+        let (rulesets, _) =
+            generate_benchmark(&preset.config(), n).unwrap();
         let bench = Benchmark {
             name: format!("{}-{n}", preset.name()),
             rulesets,

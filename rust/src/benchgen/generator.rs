@@ -7,6 +7,8 @@
 //! dead-end the trial. Distractor objects take no part in any rule;
 //! distractor rules consume tree objects but never produce useful ones.
 
+use anyhow::Result;
+
 use crate::env::goals::Goal;
 use crate::env::rules::Rule;
 use crate::env::state::Ruleset;
@@ -14,6 +16,7 @@ use crate::env::types::*;
 use crate::util::rng::Rng;
 
 use super::config::GenConfig;
+use super::store::encode_ruleset_into;
 
 /// Stats recorded per generated ruleset (Fig. 4 distributions).
 #[derive(Clone, Copy, Debug, Default)]
@@ -211,41 +214,162 @@ pub fn generate_ruleset(cfg: &GenConfig, rng: &mut Rng)
     (Ruleset { goal, rules, init_tiles: init }, stats)
 }
 
-/// Generate `n` unique rulesets (dedup by content, as the paper's
-/// generator spends "a lot of time spent filtering out repeated tasks").
-pub fn generate_benchmark(cfg: &GenConfig, n: usize)
-                          -> (Vec<Ruleset>, Vec<RulesetStats>) {
-    let mut rng = Rng::new(cfg.random_seed);
-    let mut seen = std::collections::HashSet::new();
-    let mut out = Vec::with_capacity(n);
-    let mut stats = Vec::with_capacity(n);
-    let mut attempts = 0usize;
-    while out.len() < n {
-        attempts += 1;
-        assert!(attempts < n * 100 + 10_000,
-                "generator stuck deduplicating; lower n for this config");
-        let (rs, st) = generate_ruleset(cfg, &mut rng);
-        let key = fingerprint(&rs);
-        if seen.insert(key) {
-            out.push(rs);
-            stats.push(st);
-        }
-    }
-    (out, stats)
+/// Exact structural dedup key: the store's per-ruleset binary encoding
+/// (goal, rules, init tiles). Keying the `seen` set on the encoding
+/// itself is collision-free by construction — the previous 64-bit
+/// `DefaultHasher` fingerprint could (and at million-task scale,
+/// measurably would, ~1 expected collision per ~6B pairs) let two
+/// distinct rulesets collide and silently shrink "N unique tasks".
+pub fn ruleset_key(rs: &Ruleset) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        8 + rs.rules.len() * 8 + rs.init_tiles.len() * 2);
+    encode_ruleset_into(rs, &mut out);
+    out
 }
 
-fn fingerprint(rs: &Ruleset) -> u64 {
-    use std::collections::hash_map::DefaultHasher;
-    use std::hash::{Hash, Hasher};
-    let mut h = DefaultHasher::new();
-    rs.goal.0.hash(&mut h);
-    for r in &rs.rules {
-        r.0.hash(&mut h);
+/// Independent RNG stream for generation attempt `k`
+/// ([`Rng::stream`] — the same golden-ratio spread as the engine's
+/// `shard_seed`). Attempt `k`'s candidate is a pure function of
+/// `(seed, k)`, which is what makes parallel generation **identical**
+/// to serial for every thread count: workers own disjoint `k`-ranges
+/// and the merge consumes candidates in ascending `k` order.
+fn attempt_rng(seed: u64, k: u64) -> Rng {
+    Rng::stream(seed, k)
+}
+
+/// Attempts allowed before concluding the config's task space cannot
+/// supply `n` unique rulesets.
+fn max_attempts(n: usize) -> u64 {
+    n as u64 * 100 + 10_000
+}
+
+/// Candidates for attempts `[k0, k0 + count)`, in ascending `k` order,
+/// fanned out over `threads` scoped workers (serial when it would not
+/// pay off). Pure: depends only on `(cfg, k0, count)`.
+fn candidates(cfg: &GenConfig, k0: u64, count: u64, threads: usize)
+              -> Vec<(Ruleset, RulesetStats)> {
+    let seed = cfg.random_seed;
+    let gen_range = |lo: u64, hi: u64| -> Vec<(Ruleset, RulesetStats)> {
+        (lo..hi)
+            .map(|k| generate_ruleset(cfg, &mut attempt_rng(seed, k)))
+            .collect()
+    };
+    if threads <= 1 || count < 2 * threads as u64 {
+        return gen_range(k0, k0 + count);
     }
-    for c in &rs.init_tiles {
-        (c.tile, c.color).hash(&mut h);
+    let per = (count + threads as u64 - 1) / threads as u64;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads as u64)
+            .filter_map(|c| {
+                let lo = k0 + c * per;
+                let hi = (lo + per).min(k0 + count);
+                if lo >= hi {
+                    return None;
+                }
+                Some(scope.spawn(move || gen_range(lo, hi)))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("generator worker panicked"))
+            .collect()
+    })
+}
+
+/// Core generation loop: stream `n` unique rulesets into `sink` (dedup
+/// by exact structural key), generating candidates in parallel rounds
+/// over `threads` workers. Returns the number of attempts consumed —
+/// exactly `k + 1` where `k` is the attempt index of the `n`-th
+/// accepted ruleset, so the count (like the accepted sequence) depends
+/// only on `(cfg, n)`, never on the thread count. Errors instead of
+/// spinning when the config's task space saturates below `n`.
+pub fn generate_benchmark_with<F>(cfg: &GenConfig, n: usize,
+                                  threads: usize, mut sink: F)
+                                  -> Result<u64>
+where
+    F: FnMut(Ruleset, RulesetStats) -> Result<()>,
+{
+    if n == 0 {
+        return Ok(0);
     }
-    h.finish()
+    let threads = threads.max(1);
+    let limit = max_attempts(n);
+    let mut seen: std::collections::HashSet<Vec<u8>> =
+        std::collections::HashSet::with_capacity(n.saturating_mul(2));
+    let mut accepted = 0usize;
+    let mut next_k = 0u64;
+    let mut last_accept_k = 0u64;
+    // duplicates-only window that counts as saturation even below the
+    // hard attempt limit: beyond it, the space is exhausted for all
+    // practical purposes and waiting for the limit would take minutes.
+    // Checked per *candidate* k inside the ascending-k merge (not per
+    // round — round sizes scale with the thread count, and a
+    // round-granular check would make the error/success outcome depend
+    // on --threads near the boundary).
+    let stale_window = 10_000 + n as u64;
+    let saturated = |accepted: usize, k: u64, gap: u64| {
+        anyhow::anyhow!(
+            "benchmark generation saturated: {accepted}/{n} unique \
+             rulesets after {k} attempts (no fresh ruleset in the last \
+             {gap} attempts) — this preset's task space is smaller than \
+             --n; lower --n or pick a richer preset"
+        )
+    };
+    while accepted < n {
+        if next_k >= limit {
+            return Err(saturated(accepted, next_k,
+                                 next_k - last_accept_k));
+        }
+        // round size: what's missing plus dedup headroom, bounded so a
+        // nearly-saturated config fails fast instead of overgenerating
+        let want = (n - accepted) as u64;
+        let round = (want + want / 8 + 8)
+            .clamp(threads as u64, threads as u64 * 1024)
+            .min(limit - next_k);
+        let batch = candidates(cfg, next_k, round, threads);
+        for (i, (rs, st)) in batch.into_iter().enumerate() {
+            if accepted == n {
+                break;
+            }
+            let k = next_k + i as u64;
+            if k - last_accept_k > stale_window {
+                return Err(saturated(accepted, k, k - last_accept_k));
+            }
+            if seen.insert(ruleset_key(&rs)) {
+                sink(rs, st)?;
+                accepted += 1;
+                last_accept_k = k;
+            }
+        }
+        next_k += round;
+    }
+    // attempts up to and including the n-th accept; the overgenerated
+    // round tail was never consumed and must not count (it would make
+    // the figure vary with the round size, i.e. with the thread count)
+    Ok(last_accept_k + 1)
+}
+
+/// Generate `n` unique rulesets over `threads` workers (dedup by
+/// content, as the paper's generator spends "a lot of time spent
+/// filtering out repeated tasks"). The result is identical for every
+/// thread count.
+pub fn generate_benchmark_par(cfg: &GenConfig, n: usize, threads: usize)
+                              -> Result<(Vec<Ruleset>, Vec<RulesetStats>)>
+{
+    let mut out = Vec::with_capacity(n);
+    let mut stats = Vec::with_capacity(n);
+    generate_benchmark_with(cfg, n, threads, |rs, st| {
+        out.push(rs);
+        stats.push(st);
+        Ok(())
+    })?;
+    Ok((out, stats))
+}
+
+/// Single-threaded [`generate_benchmark_par`].
+pub fn generate_benchmark(cfg: &GenConfig, n: usize)
+                          -> Result<(Vec<Ruleset>, Vec<RulesetStats>)> {
+    generate_benchmark_par(cfg, n, 1)
 }
 
 #[cfg(test)]
@@ -289,7 +413,8 @@ mod tests {
         // Fig. 4: average rules grow trivial < small < medium < high
         let mut means = Vec::new();
         for p in Preset::all() {
-            let (_, stats) = generate_benchmark(&p.config(), 300);
+            let (_, stats) =
+                generate_benchmark(&p.config(), 300).unwrap();
             let mean: f64 = stats.iter().map(|s| s.num_rules as f64)
                 .sum::<f64>() / stats.len() as f64;
             means.push(mean);
@@ -347,18 +472,78 @@ mod tests {
     #[test]
     fn generation_is_reproducible() {
         let cfg = Preset::Medium.config();
-        let (a, _) = generate_benchmark(&cfg, 50);
-        let (b, _) = generate_benchmark(&cfg, 50);
+        let (a, _) = generate_benchmark(&cfg, 50).unwrap();
+        let (b, _) = generate_benchmark(&cfg, 50).unwrap();
         assert_eq!(a, b, "same seed => same benchmark (App. J)");
     }
 
     #[test]
     fn benchmark_rulesets_unique() {
-        let (rs, _) = generate_benchmark(&Preset::Medium.config(), 500);
-        let mut keys: Vec<u64> = rs.iter().map(fingerprint).collect();
+        let (rs, _) =
+            generate_benchmark(&Preset::Medium.config(), 500).unwrap();
+        let mut keys: Vec<Vec<u8>> = rs.iter().map(ruleset_key).collect();
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), 500);
+    }
+
+    /// Parallel generation is *identical* to serial — not just
+    /// set-equal: same rulesets, same order, for every thread count.
+    #[test]
+    fn parallel_generation_matches_serial() {
+        let cfg = Preset::Medium.config();
+        let serial = generate_benchmark_par(&cfg, 400, 1).unwrap();
+        for threads in [2usize, 3, 8] {
+            let par = generate_benchmark_par(&cfg, 400, threads).unwrap();
+            assert_eq!(serial.0, par.0, "{threads} threads: rulesets");
+            assert_eq!(
+                serial.0.len(),
+                par.0
+                    .iter()
+                    .map(ruleset_key)
+                    .collect::<std::collections::HashSet<_>>()
+                    .len(),
+                "{threads} threads: set size"
+            );
+        }
+    }
+
+    /// A saturated task space must surface as a clean error carrying
+    /// the attempt count, not an `assert!` panic. depth-0, no
+    /// distractors => the space is exactly the goal-family object
+    /// choices (~24k), far below the requested n.
+    #[test]
+    fn saturation_is_a_clean_error() {
+        let mut cfg = Preset::Trivial.config();
+        cfg.num_distractor_objects = 0;
+        let err = generate_benchmark_par(&cfg, 50_000, 4)
+            .expect_err("26k-task space cannot yield 50k uniques");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("saturated"), "got: {msg}");
+        assert!(msg.contains("attempts"), "got: {msg}");
+    }
+
+    /// The CLI-surfaced attempt count is exact (k of the n-th accept,
+    /// +1) and therefore thread-invariant like the benchmark itself.
+    #[test]
+    fn attempt_count_thread_invariant() {
+        let cfg = Preset::Medium.config();
+        let count = |threads: usize| {
+            generate_benchmark_with(&cfg, 200, threads, |_, _| Ok(()))
+                .unwrap()
+        };
+        let serial = count(1);
+        assert!(serial >= 200);
+        assert_eq!(serial, count(4));
+        assert_eq!(serial, count(8));
+    }
+
+    #[test]
+    fn attempt_streams_are_decorrelated() {
+        let cfg = Preset::Medium.config();
+        let a = generate_ruleset(&cfg, &mut attempt_rng(42, 0));
+        let b = generate_ruleset(&cfg, &mut attempt_rng(42, 1));
+        assert_ne!(a.0, b.0, "neighbouring attempts must differ");
     }
 
     #[test]

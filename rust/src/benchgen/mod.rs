@@ -6,5 +6,7 @@ pub mod generator;
 pub mod store;
 
 pub use config::{GenConfig, Preset};
-pub use generator::{generate_benchmark, generate_ruleset, RulesetStats};
-pub use store::Benchmark;
+pub use generator::{generate_benchmark, generate_benchmark_par,
+                    generate_benchmark_with, generate_ruleset,
+                    ruleset_key, RulesetStats};
+pub use store::{Benchmark, BenchmarkWriter};

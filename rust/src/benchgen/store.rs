@@ -1,6 +1,14 @@
 //! Benchmark store: compact binary format + gzip compression, with the
 //! user-facing API of paper App. D (load / cache / sample / get / shuffle /
 //! split). Table 5 (raw vs compressed MB) is measured on this format.
+//!
+//! Writing is *streaming*: [`BenchmarkWriter`] encodes rulesets straight
+//! into a chunked multi-member gzip stream as they arrive (the vendored
+//! `flate2` emits a member per ~1 MiB of input), so `gen-benchmark
+//! --n 1000000` never materializes the raw encoding in memory. The file
+//! format is unchanged — `XMG1` header with a leading count — and
+//! multi-member gzip is what `gzip -d` and Python's `gzip` module
+//! already decode.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -9,14 +17,34 @@ use anyhow::{bail, Context, Result};
 
 use crate::env::goals::Goal;
 use crate::env::rules::Rule;
-use crate::env::state::Ruleset;
+use crate::env::state::{Ruleset, TaskSource};
 use crate::env::types::{Cell, GOAL_ENC, RULE_ENC};
 use crate::util::rng::Rng;
 
 use super::config::Preset;
-use super::generator::generate_benchmark;
+use super::generator::generate_benchmark_par;
 
 const MAGIC: &[u8; 4] = b"XMG1";
+
+/// Append one ruleset's binary encoding (goal, rules, init tiles) to
+/// `out`. This is both the store's wire format and the generator's
+/// exact dedup key (`benchgen::ruleset_key`).
+pub fn encode_ruleset_into(rs: &Ruleset, out: &mut Vec<u8>) {
+    for &x in rs.goal.0.iter() {
+        out.push(x as u8);
+    }
+    out.push(rs.rules.len() as u8);
+    for r in &rs.rules {
+        for &x in r.0.iter() {
+            out.push(x as u8);
+        }
+    }
+    out.push(rs.init_tiles.len() as u8);
+    for c in &rs.init_tiles {
+        out.push(c.tile as u8);
+        out.push(c.color as u8);
+    }
+}
 
 /// An in-memory benchmark: a bag of unique rulesets.
 #[derive(Clone, Debug, PartialEq)]
@@ -80,20 +108,7 @@ impl Benchmark {
         out.extend_from_slice(MAGIC);
         out.extend_from_slice(&(self.rulesets.len() as u32).to_le_bytes());
         for rs in &self.rulesets {
-            for &x in rs.goal.0.iter() {
-                out.push(x as u8);
-            }
-            out.push(rs.rules.len() as u8);
-            for r in &rs.rules {
-                for &x in r.0.iter() {
-                    out.push(x as u8);
-                }
-            }
-            out.push(rs.init_tiles.len() as u8);
-            for c in &rs.init_tiles {
-                out.push(c.tile as u8);
-                out.push(c.color as u8);
-            }
+            encode_ruleset_into(rs, &mut out);
         }
         out
     }
@@ -142,25 +157,157 @@ impl Benchmark {
     }
 
     /// Save gzip-compressed (the cloud-hosted format of §3, locally).
+    /// Streams through [`BenchmarkWriter`]: the raw encoding is never
+    /// materialized, so this scales to million-task benchmarks.
     pub fn save(&self, path: &Path) -> Result<(usize, usize)> {
-        let raw = self.to_bytes();
-        let file = std::fs::File::create(path)
-            .with_context(|| format!("creating {path:?}"))?;
-        let mut enc = flate2::write::GzEncoder::new(
-            file, flate2::Compression::new(6));
-        enc.write_all(&raw)?;
-        enc.finish()?;
-        let comp = std::fs::metadata(path)?.len() as usize;
-        Ok((raw.len(), comp))
+        let mut w = BenchmarkWriter::create(path, self.rulesets.len())?;
+        for rs in &self.rulesets {
+            w.push(rs)?;
+        }
+        w.finish()
     }
 
     pub fn load(name: &str, path: &Path) -> Result<Benchmark> {
         let file = std::fs::File::open(path)
             .with_context(|| format!("opening {path:?}"))?;
-        let mut dec = flate2::read::GzDecoder::new(file);
+        // MultiGzDecoder, not GzDecoder: the store is written as
+        // concatenated gzip members, and the real flate2 crate's
+        // GzDecoder stops after the first member.
+        let mut dec = flate2::read::MultiGzDecoder::new(file);
         let mut raw = Vec::new();
         dec.read_to_mut(&mut raw)?;
         Benchmark::from_bytes(name, &raw)
+    }
+}
+
+/// The episode auto-reset task distribution (`env::state::TaskSource`):
+/// `VecEnv`/`NativePool` draw a fresh task per episode straight from the
+/// benchmark, which is the paper's meta-RL protocol.
+impl TaskSource for Benchmark {
+    fn num_tasks(&self) -> usize {
+        self.rulesets.len()
+    }
+
+    fn task(&self, id: usize) -> &Ruleset {
+        &self.rulesets[id]
+    }
+}
+
+/// Streaming benchmark writer: rulesets are encoded and fed straight
+/// into a chunked gzip stream as they arrive. The ruleset count is part
+/// of the header, so it must be promised up front; [`finish`] verifies
+/// the promise was kept (a partially-written file is never valid).
+///
+/// The stream is written to a process-unique `.tmp-<pid>` sibling and
+/// only renamed onto the final path by [`finish`], so an interrupted
+/// run (Ctrl-C, OOM kill) can never leave a truncated file at the path
+/// `load_benchmark` trusts — the cache either holds a complete
+/// benchmark or nothing. Call [`discard`] on abort to also remove the
+/// temp file.
+///
+/// [`finish`]: BenchmarkWriter::finish
+/// [`discard`]: BenchmarkWriter::discard
+pub struct BenchmarkWriter {
+    /// `Some` until [`BenchmarkWriter::finish`] consumes the stream.
+    enc: Option<flate2::write::GzEncoder<std::fs::File>>,
+    path: PathBuf,
+    tmp_path: PathBuf,
+    buf: Vec<u8>,
+    raw_len: usize,
+    expected: usize,
+    written: usize,
+    /// set by a successful finish; [`Drop`] removes the temp file
+    /// on every other exit path (error return, panic, early drop)
+    finished: bool,
+}
+
+impl BenchmarkWriter {
+    pub fn create(path: &Path, count: usize) -> Result<BenchmarkWriter> {
+        if count > u32::MAX as usize {
+            bail!("benchmark too large for the XMG1 header: {count}");
+        }
+        let mut tmp_path = path.to_path_buf();
+        let mut name = tmp_path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        name.push_str(&format!(".tmp-{}", std::process::id()));
+        tmp_path.set_file_name(name);
+        let file = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("creating {tmp_path:?}"))?;
+        let mut enc = flate2::write::GzEncoder::new(
+            file, flate2::Compression::new(6));
+        enc.write_all(MAGIC)?;
+        enc.write_all(&(count as u32).to_le_bytes())?;
+        Ok(BenchmarkWriter {
+            enc: Some(enc),
+            path: path.to_path_buf(),
+            tmp_path,
+            buf: Vec::new(),
+            raw_len: MAGIC.len() + 4,
+            expected: count,
+            written: 0,
+            finished: false,
+        })
+    }
+
+    pub fn push(&mut self, rs: &Ruleset) -> Result<()> {
+        if self.written == self.expected {
+            bail!("benchmark writer: more rulesets than the promised {}",
+                  self.expected);
+        }
+        self.buf.clear();
+        encode_ruleset_into(rs, &mut self.buf);
+        self.enc
+            .as_mut()
+            .expect("writer already finished")
+            .write_all(&self.buf)?;
+        self.raw_len += self.buf.len();
+        self.written += 1;
+        Ok(())
+    }
+
+    fn flush_and_rename(&mut self) -> Result<usize> {
+        if self.written != self.expected {
+            bail!("benchmark writer: {}/{} promised rulesets written",
+                  self.written, self.expected);
+        }
+        self.enc
+            .take()
+            .expect("writer already finished")
+            .finish()
+            .with_context(|| format!("finishing {:?}", self.tmp_path))?;
+        let comp = std::fs::metadata(&self.tmp_path)?.len() as usize;
+        std::fs::rename(&self.tmp_path, &self.path).with_context(|| {
+            format!("moving {:?} -> {:?}", self.tmp_path, self.path)
+        })?;
+        Ok(comp)
+    }
+
+    /// Flush, close, move the completed file onto the final path
+    /// (same-directory rename — atomic on POSIX), and return
+    /// `(raw_bytes, compressed_bytes)` — the same figures as
+    /// [`Benchmark::save`]. On error, [`Drop`] removes the temp file.
+    pub fn finish(mut self) -> Result<(usize, usize)> {
+        let comp = self.flush_and_rename()?;
+        self.finished = true;
+        Ok((self.raw_len, comp))
+    }
+
+    /// Abort explicitly: drops the writer, which deletes the temp
+    /// file; the final path is left untouched (whatever complete
+    /// benchmark it held, it still holds).
+    pub fn discard(self) {}
+}
+
+impl Drop for BenchmarkWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            // close the stream handle before unlinking, then remove
+            // whatever partial temp file exists
+            self.enc.take();
+            let _ = std::fs::remove_file(&self.tmp_path);
+        }
     }
 }
 
@@ -182,26 +329,45 @@ pub fn data_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts/benchmarks"))
 }
 
-/// Load a named benchmark like `trivial-1k` / `medium-10k`, generating and
-/// caching it on first use (the local stand-in for the paper's cloud
-/// download; sizes like `-1m` work but take a while).
+/// Load a named benchmark like `trivial-1k` / `medium-10k`, generating
+/// and caching it on first use (the local stand-in for the paper's
+/// cloud download). Single-threaded generation; million-task names are
+/// practical through [`load_benchmark_with`].
 pub fn load_benchmark(name: &str) -> Result<Benchmark> {
+    load_benchmark_with(name, 1)
+}
+
+/// [`load_benchmark`] with a first-use generation thread count (the
+/// CLI's `--threads`); the generated content is identical for every
+/// thread count. A `-seed<S>` suffix (the name `gen-benchmark --seed`
+/// caches under) selects the custom generator seed on a cache miss, so
+/// the same name resolves to the same content on every machine.
+pub fn load_benchmark_with(name: &str, threads: usize)
+                           -> Result<Benchmark> {
     let dir = data_dir();
     std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("{name}.xmg.gz"));
     if path.exists() {
         return Benchmark::load(name, &path);
     }
-    let preset = Preset::from_name(name)
+    let (base, seed) = parse_seed_suffix(name);
+    let preset = Preset::from_name(base)
         .with_context(|| format!("unknown benchmark {name}"))?;
-    let n = parse_size_suffix(name).unwrap_or(1000);
-    let (rulesets, _) = generate_benchmark(&preset.config(), n);
+    let n = parse_size_suffix(base).unwrap_or(1000);
+    let mut cfg = preset.config();
+    if let Some(s) = seed {
+        cfg.random_seed = s;
+    }
+    let (rulesets, _) = generate_benchmark_par(&cfg, n, threads)?;
     let bench = Benchmark { name: name.to_string(), rulesets };
     bench.save(&path)?;
     Ok(bench)
 }
 
-/// `trivial-1m` -> 1_000_000, `small-10k` -> 10_000, bare name -> None.
+/// `trivial-1m` -> 1_000_000, `small-10k` -> 10_000, `trivial-500` ->
+/// 500 (the exact inverse of [`size_suffix_name`], so every name
+/// `gen-benchmark` mints resolves to its true size on a cache miss),
+/// no size suffix -> None.
 pub fn parse_size_suffix(name: &str) -> Option<usize> {
     let suffix = name.rsplit('-').next()?;
     let (num, mult) = if let Some(s) = suffix.strip_suffix('m') {
@@ -209,9 +375,38 @@ pub fn parse_size_suffix(name: &str) -> Option<usize> {
     } else if let Some(s) = suffix.strip_suffix('k') {
         (s, 1_000)
     } else {
-        return None;
+        (suffix, 1) // bare digits, e.g. `trivial-500`
     };
     num.parse::<usize>().ok().map(|v| v * mult)
+}
+
+/// `medium-100k-seed7` -> (`"medium-100k"`, `Some(7)`); names without
+/// a trailing `-seed<S>` pass through unchanged. The suffix is how
+/// `gen-benchmark --seed` keeps custom generations out of the
+/// canonical namespace while staying loadable by name.
+pub fn parse_seed_suffix(name: &str) -> (&str, Option<u64>) {
+    if let Some((base, last)) = name.rsplit_once('-') {
+        if let Some(digits) = last.strip_prefix("seed") {
+            if let Ok(seed) = digits.parse::<u64>() {
+                return (base, Some(seed));
+            }
+        }
+    }
+    (name, None)
+}
+
+/// Inverse of [`parse_size_suffix`] where one exists: `1_000_000` ->
+/// `"1m"`, `100_000` -> `"100k"`, `1234` -> `"1234"` — so
+/// `gen-benchmark --preset medium --n 100000` caches under
+/// `medium-100k`, the exact name `--benchmark medium-100k` loads.
+pub fn size_suffix_name(n: usize) -> String {
+    if n >= 1_000_000 && n % 1_000_000 == 0 {
+        format!("{}m", n / 1_000_000)
+    } else if n >= 1000 && n % 1000 == 0 {
+        format!("{}k", n / 1000)
+    } else {
+        n.to_string()
+    }
 }
 
 #[cfg(test)]
@@ -220,7 +415,8 @@ mod tests {
 
     fn small_bench() -> Benchmark {
         let (rulesets, _) =
-            generate_benchmark(&Preset::Small.config(), 64);
+            generate_benchmark_par(&Preset::Small.config(), 64, 1)
+                .unwrap();
         Benchmark { name: "small-test".into(), rulesets }
     }
 
@@ -287,11 +483,110 @@ mod tests {
         assert_eq!(parse_size_suffix("trivial-1m"), Some(1_000_000));
         assert_eq!(parse_size_suffix("high-3m"), Some(3_000_000));
         assert_eq!(parse_size_suffix("small-10k"), Some(10_000));
+        assert_eq!(parse_size_suffix("trivial-500"), Some(500));
         assert_eq!(parse_size_suffix("small"), None);
+        assert_eq!(parse_size_suffix("trivial-1k-seed7"), None,
+                   "seed suffix is stripped by parse_seed_suffix first");
+    }
+
+    #[test]
+    fn seed_suffix_parsing() {
+        assert_eq!(parse_seed_suffix("medium-100k-seed7"),
+                   ("medium-100k", Some(7)));
+        assert_eq!(parse_seed_suffix("medium-100k"),
+                   ("medium-100k", None));
+        assert_eq!(parse_seed_suffix("trivial-1k-seedy"),
+                   ("trivial-1k-seedy", None));
+        assert_eq!(parse_seed_suffix("seed9"), ("seed9", None));
+    }
+
+    /// Serializes the tests that mutate the process-global
+    /// `XLAND_MINIGRID_DATA` variable (cargo runs tests in parallel).
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn seed_suffixed_name_resolves_to_custom_seed() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_seed_suffix_{}", std::process::id()));
+        std::env::set_var("XLAND_MINIGRID_DATA", &dir);
+        let custom = load_benchmark("trivial-1k-seed7").unwrap();
+        assert_eq!(custom.num_rulesets(), 1000);
+        let mut cfg = Preset::Trivial.config();
+        cfg.random_seed = 7;
+        let (expect, _) = generate_benchmark_par(&cfg, 1000, 1).unwrap();
+        assert_eq!(custom.rulesets, expect,
+                   "-seed7 name must generate with seed 7");
+        std::env::remove_var("XLAND_MINIGRID_DATA");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_suffix_roundtrip() {
+        for n in [500usize, 1000, 1234, 10_000, 100_000, 1_000_000,
+                  3_000_000]
+        {
+            let name = format!("medium-{}", size_suffix_name(n));
+            assert_eq!(parse_size_suffix(&name), Some(n), "{name}");
+        }
+        assert_eq!(size_suffix_name(1234), "1234");
+        assert_eq!(size_suffix_name(100_000), "100k");
+    }
+
+    /// The streaming writer must produce a file `load` round-trips, at
+    /// a size that spans multiple gzip members (the chunked encoder
+    /// emits one member per ~1 MiB of raw input).
+    #[test]
+    fn streaming_writer_multi_member_roundtrip() {
+        let (rulesets, _) =
+            generate_benchmark_par(&Preset::Small.config(), 60_000, 4)
+                .unwrap();
+        let b = Benchmark { name: "stream-test".into(), rulesets };
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_stream_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.xmg.gz");
+        let mut w = BenchmarkWriter::create(&path, b.rulesets.len())
+            .unwrap();
+        for rs in &b.rulesets {
+            w.push(rs).unwrap();
+        }
+        let (raw, comp) = w.finish().unwrap();
+        assert!(raw > (1 << 20),
+                "need >1 MiB raw to exercise member chunking ({raw})");
+        assert!(comp < raw);
+        let b2 = Benchmark::load("stream-test", &path).unwrap();
+        assert_eq!(b, b2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_enforces_promised_count() {
+        let b = small_bench();
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_writer_count_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("short.xmg.gz");
+        let mut w = BenchmarkWriter::create(&path, 2).unwrap();
+        w.push(&b.rulesets[0]).unwrap();
+        assert!(w.finish().is_err(), "1/2 written must not finish");
+        let mut w = BenchmarkWriter::create(&path, 1).unwrap();
+        w.push(&b.rulesets[0]).unwrap();
+        assert!(w.push(&b.rulesets[1]).is_err(), "over-push must fail");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn benchmark_is_a_task_source() {
+        use crate::env::state::TaskSource;
+        let b = small_bench();
+        assert_eq!(b.num_tasks(), 64);
+        assert_eq!(b.task(3), &b.rulesets[3]);
     }
 
     #[test]
     fn load_benchmark_generates_and_caches() {
+        let _guard = ENV_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join(format!(
             "xmg_cache_test_{}", std::process::id()));
         std::env::set_var("XLAND_MINIGRID_DATA", &dir);

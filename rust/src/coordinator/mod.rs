@@ -20,6 +20,7 @@ pub mod pool;
 pub mod rollout;
 pub mod shard;
 pub mod trainer;
+pub mod workers;
 
 pub use config::{BackendKind, Overlap, ShardConfig, TrainConfig};
 pub use native::{NativeEnvConfig, NativePool};
@@ -27,3 +28,4 @@ pub use pool::EnvPool;
 pub use rollout::RolloutEngine;
 pub use shard::ShardPool;
 pub use trainer::{EvalStats, ShardedTrainer, Trainer};
+pub use workers::ParVecEnv;

@@ -1,23 +1,30 @@
-//! Native vectorized backend: drives [`VecEnv`] batches from the
+//! Native vectorized backend: drives [`ParVecEnv`] batches from the
 //! coordinator with the same shard/RNG discipline as the AOT-backed
 //! [`super::pool::EnvPool`] — but with zero artifacts and zero PJRT.
 //! This is what makes `xmgrid rollout --backend native` work on a fresh
 //! checkout: any registry XLand env family rolls out at full speed with
-//! no artifact build step.
+//! no artifact build step, chunked across `threads` stepping workers
+//! per replica (bitwise-identical to serial for any thread count — see
+//! [`super::workers`]).
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::benchgen::Benchmark;
 use crate::env::layouts::xland_layout;
 use crate::env::registry::XLAND_ENVS;
-use crate::env::state::{default_max_steps, EnvOptions, Ruleset};
-use crate::env::types::NUM_ACTIONS;
-use crate::env::vector::{VecEnv, VecEnvConfig};
+use crate::env::state::{default_max_steps, EnvOptions, Ruleset,
+                        TaskSource};
+use crate::env::vector::VecEnvConfig;
 use crate::env::Grid;
 use crate::util::rng::Rng;
 
+use super::workers::ParVecEnv;
+
 /// Shape of a native vectorized env family — the artifact-free analogue
-/// of [`super::pool::EnvFamily`] plus the fused step count `T`.
+/// of [`super::pool::EnvFamily`] plus the fused step count `T` and the
+/// stepping-worker count.
 #[derive(Clone, Copy, Debug)]
 pub struct NativeEnvConfig {
     pub h: usize,
@@ -31,12 +38,16 @@ pub struct NativeEnvConfig {
     pub b: usize,
     /// steps per rollout chunk (the fused-T analogue)
     pub t: usize,
+    /// stepping worker threads per replica (`--threads`); the batch is
+    /// chunked across them, output bitwise-independent of the count
+    pub threads: usize,
 }
 
 impl NativeEnvConfig {
     /// Derive the family from a registry XLand env name plus the
     /// benchmark that will supply tasks (its max rule / init-tile counts
-    /// size the fixed-width tables).
+    /// size the fixed-width tables). One stepping thread by default;
+    /// see [`NativeEnvConfig::with_threads`].
     pub fn for_env(name: &str, b: usize, t: usize, bench: &Benchmark)
                    -> Result<NativeEnvConfig> {
         let spec = match XLAND_ENVS.iter().find(|e| e.name == name) {
@@ -71,28 +82,33 @@ impl NativeEnvConfig {
             mi,
             b,
             t,
+            threads: 1,
         })
+    }
+
+    /// Chunk the batch across `threads` persistent stepping workers
+    /// (clamped to at least 1; `ParVecEnv` further clamps to the batch).
+    pub fn with_threads(mut self, threads: usize) -> NativeEnvConfig {
+        self.threads = threads.max(1);
+        self
     }
 }
 
-/// Host-side analogue of [`super::pool::EnvPool`]: owns a [`VecEnv`]
+/// Host-side analogue of [`super::pool::EnvPool`]: owns a [`ParVecEnv`]
 /// batch plus the rollout I/O buffers, and drives the random-policy
 /// rollout used by the throughput benches and `xmgrid rollout
-/// --backend native`. All buffers are allocated once here; the rollout
-/// loop itself never allocates.
+/// --backend native`. Data buffers (obs, per-chunk staging, action
+/// scratch) are allocated once and recycled; the rollout hot loop
+/// costs only the per-chunk job dispatch, never per-step allocation.
 pub struct NativePool {
     pub cfg: NativeEnvConfig,
-    venv: VecEnv,
-    actions: Vec<i32>,
+    venv: ParVecEnv,
     obs: Vec<i32>,
-    rewards: Vec<f32>,
-    dones: Vec<bool>,
-    trial_dones: Vec<bool>,
 }
 
 impl NativePool {
     pub fn new(cfg: NativeEnvConfig) -> NativePool {
-        let venv = VecEnv::new(
+        let venv = ParVecEnv::new(
             VecEnvConfig {
                 h: cfg.h,
                 w: cfg.w,
@@ -101,17 +117,10 @@ impl NativePool {
                 opts: EnvOptions::default(),
             },
             cfg.b,
+            cfg.threads,
         );
         let obs_len = venv.obs_len();
-        NativePool {
-            cfg,
-            venv,
-            actions: vec![0; cfg.b],
-            obs: vec![0; obs_len],
-            rewards: vec![0.0; cfg.b],
-            dones: vec![false; cfg.b],
-            trial_dones: vec![false; cfg.b],
-        }
+        NativePool { cfg, venv, obs: vec![0; obs_len] }
     }
 
     /// Latest observations, `[B, V, V, 2]` i32.
@@ -122,8 +131,11 @@ impl NativePool {
     /// Mirror of `EnvPool::reset`: per env, a fresh base grid with
     /// re-randomized doors, a ruleset sampled from the benchmark, the
     /// default step limit, and a private RNG stream split off `rng` —
-    /// everything a function of the caller's stream only.
-    pub fn reset(&mut self, bench: &Benchmark, rng: &mut Rng) {
+    /// everything a function of the caller's stream only. The benchmark
+    /// is also installed as the episode-reset task source, so every
+    /// episode draws a fresh task (the §2.1 protocol) instead of
+    /// replaying the reset-time ruleset forever.
+    pub fn reset(&mut self, bench: &Arc<Benchmark>, rng: &mut Rng) {
         let b = self.cfg.b;
         let rulesets: Vec<&Ruleset> =
             (0..b).map(|_| bench.sample_ruleset(rng)).collect();
@@ -136,30 +148,19 @@ impl NativePool {
         let rngs: Vec<Rng> = (0..b).map(|_| rng.split()).collect();
         self.venv.reset_all(&grids, &rulesets, &max_steps, &rngs,
                             &mut self.obs);
+        let tasks: Arc<dyn TaskSource> = bench.clone();
+        self.venv.set_task_source(tasks);
     }
 
     /// One random-policy rollout chunk of `t` steps; returns
     /// (reward_sum, episodes_done, trials_done) aggregated over the
-    /// batch — the same aggregates as `EnvPool::rollout`.
+    /// batch — the same aggregates as `EnvPool::rollout`, reduced
+    /// env-major so the value is identical for every thread count.
     pub fn rollout(&mut self, t: usize, rng: &mut Rng)
                    -> (f64, u64, u64) {
-        let mut reward_sum = 0.0f64;
-        let mut episodes = 0u64;
-        let mut trials = 0u64;
-        for _ in 0..t {
-            for a in self.actions.iter_mut() {
-                *a = rng.below(NUM_ACTIONS) as i32;
-            }
-            self.venv.step_all(&self.actions, &mut self.obs,
-                               &mut self.rewards, &mut self.dones,
-                               &mut self.trial_dones);
-            reward_sum +=
-                self.rewards.iter().map(|&x| x as f64).sum::<f64>();
-            episodes += self.dones.iter().filter(|&&d| d).count() as u64;
-            trials +=
-                self.trial_dones.iter().filter(|&&d| d).count() as u64;
-        }
-        (reward_sum, episodes, trials)
+        let totals = self.venv.rollout(t, rng);
+        self.venv.copy_obs_into(&mut self.obs);
+        totals
     }
 }
 
@@ -168,10 +169,10 @@ mod tests {
     use super::*;
     use crate::benchgen::{generate_benchmark, Preset};
 
-    fn tiny_bench() -> Benchmark {
+    fn tiny_bench() -> Arc<Benchmark> {
         let (rulesets, _) =
-            generate_benchmark(&Preset::Trivial.config(), 8);
-        Benchmark { name: "t".into(), rulesets }
+            generate_benchmark(&Preset::Trivial.config(), 8).unwrap();
+        Arc::new(Benchmark { name: "t".into(), rulesets })
     }
 
     #[test]
@@ -182,6 +183,9 @@ mod tests {
             .unwrap();
         assert_eq!((cfg.h, cfg.w, cfg.rooms), (13, 13, 4));
         assert!(cfg.mr >= 1 && cfg.mi >= 1);
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(cfg.with_threads(0).threads, 1);
+        assert_eq!(cfg.with_threads(4).threads, 4);
         assert!(NativeEnvConfig::for_env("MiniGrid-Empty-8x8", 16, 8,
                                          &bench)
             .is_err());
@@ -193,14 +197,17 @@ mod tests {
         let cfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", 8, 4,
                                            &bench)
             .unwrap();
-        let run = || {
-            let mut pool = NativePool::new(cfg);
+        let run = |threads: usize| {
+            let mut pool = NativePool::new(cfg.with_threads(threads));
             let mut rng = Rng::new(9);
             pool.reset(&bench, &mut rng);
             let totals = pool.rollout(4, &mut rng);
-            (totals, pool.obs().to_vec())
+            (totals.0.to_bits(), totals.1, totals.2,
+             pool.obs().to_vec())
         };
-        assert_eq!(run(), run());
+        assert_eq!(run(1), run(1));
+        // chunked across workers == serial, bitwise
+        assert_eq!(run(1), run(4));
     }
 
     #[test]

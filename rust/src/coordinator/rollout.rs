@@ -10,8 +10,10 @@
 //! produce rollout chunks. Two backends exist — the AOT/PJRT replica
 //! (`ShardReplica`, `--backend xla`) and the native vectorized replica
 //! (`NativeReplica`, `--backend native`: a [`NativePool`]-owned
-//! `VecEnv` batch per shard, no artifacts). Both run under the same
-//! overlap disciplines and the same `(seed, shard)` RNG streams.
+//! `ParVecEnv` batch per shard — itself chunked over `--threads`
+//! stepping workers, bitwise-independent of the thread count — no
+//! artifacts). Both run under the same overlap disciplines and the
+//! same `(seed, shard)` RNG streams.
 //!
 //! With overlap **off**, collection is a lockstep collective per round
 //! (dispatch to all shards, barrier, consume in shard order) — bitwise
@@ -47,12 +49,12 @@ pub const PIPELINE_DEPTH: usize = 2;
 
 /// Derive shard `i`'s seed from the run seed. Shard 0 keeps the run seed
 /// itself (so a one-shard engine reproduces the unsharded path bitwise);
-/// higher shards are decorrelated by a golden-ratio multiple, which
-/// `Rng::new`'s splitmix init diffuses into an independent stream. The
-/// mapping depends only on `(seed, shard)`, never on scheduling — that is
-/// what keeps overlap modes trajectory-identical.
+/// higher shards are decorrelated by [`crate::util::rng::stream_seed`]'s
+/// golden-ratio spread. The mapping depends only on `(seed, shard)`,
+/// never on scheduling — that is what keeps overlap modes
+/// trajectory-identical.
 pub fn shard_seed(seed: u64, shard: usize) -> u64 {
-    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(shard as u64)
+    crate::util::rng::stream_seed(seed, shard as u64)
 }
 
 /// [`shard_seed`] as a ready-made RNG stream.
@@ -210,10 +212,10 @@ impl RolloutEngine {
     }
 
     /// Spin up `cfg.shards` *native vectorized* replicas — no manifest,
-    /// no artifacts, no PJRT. Each shard owns a `VecEnv` of `ncfg.b`
-    /// envs, samples rulesets from `bench` with the same
-    /// `shard_rng(seed, i)` streams as the AOT path, resets, and steps
-    /// the SoA kernels on its own thread.
+    /// no artifacts, no PJRT. Each shard owns a `ParVecEnv` of `ncfg.b`
+    /// envs chunked over `ncfg.threads` stepping workers, samples
+    /// rulesets from `bench` with the same `shard_rng(seed, i)` streams
+    /// as the AOT path, resets, and steps the SoA kernels.
     pub fn launch_native(ncfg: NativeEnvConfig, bench: Arc<Benchmark>,
                          cfg: ShardConfig) -> Result<RolloutEngine> {
         let seed = cfg.seed;

@@ -1,0 +1,411 @@
+//! Parallel vectorized stepping: [`ParVecEnv`] chunks one `VecEnv`
+//! batch across a pool of persistent worker threads and drives them
+//! through the same `reset_all`/`step_all` surface as the serial
+//! engine — saturating every core while staying **bitwise identical**
+//! to serial execution for any thread count.
+//!
+//! # Determinism argument
+//!
+//! Envs are independent: every RNG draw a step makes comes from the
+//! stepped env's own stream (placement splits, episode task draws), and
+//! every buffer a step touches is private to that env's SoA rows. Chunk
+//! worker `c` owns envs `[lo_c, hi_c)` outright — a real sub-`VecEnv`
+//! over contiguous ranges, not a view — so parallel execution is the
+//! *same computation* as serial, merely partitioned. The only cross-env
+//! arithmetic is the rollout reward reduction, which is performed
+//! env-major (each env accumulates its own `f64` sum over time, then
+//! the sums are folded in ascending env order on the coordinator
+//! thread), so even that float reduction is independent of chunking.
+//! `tests/native_threads.rs` pins all of this across thread counts
+//! {1, 2, 8}, down to the internal SoA buffers and RNG states.
+//!
+//! # Thread model
+//!
+//! Workers are spawned once ([`ShardPool`]) and live as long as the
+//! `ParVecEnv`; each call ships the chunk's I/O staging buffers to its
+//! worker (owned, recycled — no steady-state allocation) and collects
+//! them back in chunk order. For rollout chunks the whole `T`-step loop
+//! runs worker-side off one dispatch, so synchronization cost is per
+//! chunk, not per step.
+
+use std::sync::Arc;
+
+use crate::env::state::{Ruleset, TaskSource};
+use crate::env::types::NUM_ACTIONS;
+use crate::env::vector::{VecEnv, VecEnvConfig, VecEnvSnapshot};
+use crate::env::Grid;
+use crate::util::rng::Rng;
+
+use super::shard::ShardPool;
+
+/// One worker's owned slice of the batch.
+struct ChunkEnv {
+    venv: VecEnv,
+}
+
+/// Recyclable I/O staging for one chunk: shipped into the worker job,
+/// filled there, shipped back, and stored for the next call.
+struct ChunkBufs {
+    actions: Vec<i32>,
+    obs: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    trials: Vec<bool>,
+    /// per-env `f64` reward accumulators for fused rollout chunks
+    reward_acc: Vec<f64>,
+}
+
+/// `B` envs chunked over `threads` persistent workers, with the serial
+/// [`VecEnv`] API plus a fused [`ParVecEnv::rollout`]. `threads == 1`
+/// runs the identical machinery with a single worker.
+pub struct ParVecEnv {
+    cfg: VecEnvConfig,
+    b: usize,
+    /// per-chunk `[lo, hi)` env ranges, ascending and contiguous
+    ranges: Vec<(usize, usize)>,
+    pool: ShardPool<ChunkEnv>,
+    bufs: Vec<Option<ChunkBufs>>,
+    /// reusable `[T, B]` action staging for fused rollouts — the
+    /// rollout hot path allocates nothing per chunk
+    act_scratch: Vec<i32>,
+}
+
+impl ParVecEnv {
+    /// Chunk `b` envs over `threads` workers (clamped to `[1, b]`);
+    /// chunk sizes differ by at most one env.
+    pub fn new(cfg: VecEnvConfig, b: usize, threads: usize) -> ParVecEnv {
+        assert!(b > 0, "ParVecEnv needs at least one env");
+        let threads = threads.max(1).min(b);
+        let (base, extra) = (b / threads, b % threads);
+        let mut ranges = Vec::with_capacity(threads);
+        let mut lo = 0usize;
+        for c in 0..threads {
+            let len = base + usize::from(c < extra);
+            ranges.push((lo, lo + len));
+            lo += len;
+        }
+        let spawn_ranges = ranges.clone();
+        let pool = ShardPool::spawn(threads, move |c| {
+            let (lo, hi) = spawn_ranges[c];
+            Ok(ChunkEnv { venv: VecEnv::new(cfg, hi - lo) })
+        })
+        .expect("spawning vec-env chunk workers");
+        let vv2 = cfg.opts.view_size * cfg.opts.view_size * 2;
+        let bufs = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let cb = hi - lo;
+                Some(ChunkBufs {
+                    actions: Vec::with_capacity(cb),
+                    obs: vec![0; cb * vv2],
+                    rewards: vec![0.0; cb],
+                    dones: vec![false; cb],
+                    trials: vec![false; cb],
+                    reward_acc: vec![0.0; cb],
+                })
+            })
+            .collect();
+        ParVecEnv { cfg, b, ranges, pool, bufs,
+                    act_scratch: Vec::new() }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn threads(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn config(&self) -> &VecEnvConfig {
+        &self.cfg
+    }
+
+    /// `B * V * V * 2`, as in [`VecEnv::obs_len`].
+    pub fn obs_len(&self) -> usize {
+        self.b * self.vv2()
+    }
+
+    fn vv2(&self) -> usize {
+        self.cfg.opts.view_size * self.cfg.opts.view_size * 2
+    }
+
+    /// Install the episode-reset task distribution on every chunk
+    /// (see [`VecEnv::set_task_source`]). The O(num_tasks) capacity
+    /// validation runs once here, not once per chunk worker.
+    pub fn set_task_source(&mut self, tasks: Arc<dyn TaskSource>) {
+        self.cfg.validate_task_source(tasks.as_ref());
+        self.pool.broadcast(move |_, w: &mut ChunkEnv| {
+            w.venv.set_task_source_prevalidated(tasks.clone());
+        });
+    }
+
+    /// Parallel [`VecEnv::reset_all`]: inputs are split by chunk and
+    /// cloned into the workers (reset is the cold path), observations
+    /// land in `obs_out` in global env order.
+    pub fn reset_all(&mut self, grids: &[Grid], rulesets: &[&Ruleset],
+                     max_steps: &[i32], rngs: &[Rng],
+                     obs_out: &mut [i32]) {
+        assert_eq!(grids.len(), self.b, "need one base grid per env");
+        assert_eq!(rulesets.len(), self.b, "need one ruleset per env");
+        assert_eq!(max_steps.len(), self.b);
+        assert_eq!(rngs.len(), self.b);
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        let vv2 = self.vv2();
+        let mut tickets = Vec::with_capacity(self.ranges.len());
+        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let bufs = self.bufs[c].take().expect("chunk bufs in flight");
+            let g: Vec<Grid> = grids[lo..hi].to_vec();
+            let rs: Vec<Ruleset> =
+                rulesets[lo..hi].iter().map(|&r| r.clone()).collect();
+            let ms: Vec<i32> = max_steps[lo..hi].to_vec();
+            let rg: Vec<Rng> = rngs[lo..hi].to_vec();
+            tickets.push(self.pool.call(c, move |w| {
+                let mut bufs = bufs;
+                let refs: Vec<&Ruleset> = rs.iter().collect();
+                w.venv.reset_all(&g, &refs, &ms, &rg, &mut bufs.obs);
+                bufs
+            }));
+        }
+        for (c, ticket) in tickets.into_iter().enumerate() {
+            let bufs = ticket.wait();
+            let (lo, hi) = self.ranges[c];
+            obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
+            self.bufs[c] = Some(bufs);
+        }
+    }
+
+    /// Parallel [`VecEnv::step_all`]: one dispatch per chunk, outputs
+    /// merged back into the caller's buffers in global env order —
+    /// bitwise identical to the serial engine for any thread count.
+    pub fn step_all(&mut self, actions: &[i32], obs_out: &mut [i32],
+                    rewards: &mut [f32], dones: &mut [bool],
+                    trial_dones: &mut [bool]) {
+        assert_eq!(actions.len(), self.b, "need one action per env");
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        assert_eq!(rewards.len(), self.b);
+        assert_eq!(dones.len(), self.b);
+        assert_eq!(trial_dones.len(), self.b);
+        let vv2 = self.vv2();
+        let mut tickets = Vec::with_capacity(self.ranges.len());
+        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let mut bufs =
+                self.bufs[c].take().expect("chunk bufs in flight");
+            bufs.actions.clear();
+            bufs.actions.extend_from_slice(&actions[lo..hi]);
+            tickets.push(self.pool.call(c, move |w| {
+                let mut bufs = bufs;
+                let ChunkBufs {
+                    actions, obs, rewards, dones, trials, ..
+                } = &mut bufs;
+                w.venv.step_all(actions, obs, rewards, dones, trials);
+                bufs
+            }));
+        }
+        for (c, ticket) in tickets.into_iter().enumerate() {
+            let bufs = ticket.wait();
+            let (lo, hi) = self.ranges[c];
+            obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
+            rewards[lo..hi].copy_from_slice(&bufs.rewards);
+            dones[lo..hi].copy_from_slice(&bufs.dones);
+            trial_dones[lo..hi].copy_from_slice(&bufs.trials);
+            self.bufs[c] = Some(bufs);
+        }
+    }
+
+    /// Fused random-policy rollout: `t` steps per env with actions drawn
+    /// from `rng` in the serial order (step-major, env-minor), the whole
+    /// `t`-step loop running worker-side off a single dispatch per
+    /// chunk. Returns `(reward_sum, episodes_done, trials_done)`.
+    ///
+    /// The reward reduction is env-major — env `i` accumulates its own
+    /// `f64` sum over the `t` steps, and the per-env sums are folded in
+    /// ascending env order here — so the result is bit-identical for
+    /// every thread count.
+    pub fn rollout(&mut self, t: usize, rng: &mut Rng)
+                   -> (f64, u64, u64) {
+        let b = self.b;
+        self.act_scratch.resize(t * b, 0);
+        for a in self.act_scratch.iter_mut() {
+            *a = rng.below(NUM_ACTIONS) as i32;
+        }
+        let acts = &self.act_scratch;
+        let mut tickets = Vec::with_capacity(self.ranges.len());
+        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let cb = hi - lo;
+            let mut bufs =
+                self.bufs[c].take().expect("chunk bufs in flight");
+            bufs.actions.clear();
+            for step in 0..t {
+                bufs.actions
+                    .extend_from_slice(&acts[step * b + lo..step * b + hi]);
+            }
+            tickets.push(self.pool.call(c, move |w| {
+                let mut bufs = bufs;
+                bufs.reward_acc.iter_mut().for_each(|x| *x = 0.0);
+                let mut episodes = 0u64;
+                let mut trials = 0u64;
+                for step in 0..t {
+                    let ChunkBufs {
+                        actions, obs, rewards, dones, trials: tr,
+                        reward_acc,
+                    } = &mut bufs;
+                    let a = &actions[step * cb..(step + 1) * cb];
+                    w.venv.step_all(a, obs, rewards, dones, tr);
+                    for (acc, &r) in reward_acc.iter_mut().zip(&*rewards)
+                    {
+                        *acc += r as f64;
+                    }
+                    episodes +=
+                        dones.iter().filter(|&&d| d).count() as u64;
+                    trials += tr.iter().filter(|&&d| d).count() as u64;
+                }
+                (bufs, episodes, trials)
+            }));
+        }
+        let mut reward_sum = 0.0f64;
+        let mut episodes = 0u64;
+        let mut trials = 0u64;
+        for (c, ticket) in tickets.into_iter().enumerate() {
+            let (bufs, ep, tr) = ticket.wait();
+            for &x in &bufs.reward_acc {
+                reward_sum += x;
+            }
+            episodes += ep;
+            trials += tr;
+            self.bufs[c] = Some(bufs);
+        }
+        (reward_sum, episodes, trials)
+    }
+
+    /// Copy the most recent observations (from the last `reset_all`,
+    /// `step_all` or `rollout`) into `out`, global env order.
+    pub fn copy_obs_into(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.obs_len(), "obs buffer size");
+        let vv2 = self.vv2();
+        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let bufs =
+                self.bufs[c].as_ref().expect("chunk bufs in flight");
+            out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
+        }
+    }
+
+    /// Full-batch snapshot: per-chunk snapshots concatenated in chunk
+    /// (= global env) order. Equal across thread counts iff the engines
+    /// are bitwise-identical.
+    pub fn snapshot(&self) -> VecEnvSnapshot {
+        let chunks = self.pool.broadcast(|_, w: &mut ChunkEnv| {
+            w.venv.snapshot()
+        });
+        let mut out = VecEnvSnapshot::empty();
+        for s in chunks {
+            out.append(s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::state::EnvOptions;
+    use crate::env::types::{Cell, COLOR_RED, TILE_BALL};
+    use crate::env::Goal;
+
+    fn simple_ruleset() -> Ruleset {
+        Ruleset {
+            goal: Goal::agent_near(Cell::new(TILE_BALL, COLOR_RED)),
+            rules: vec![],
+            init_tiles: vec![Cell::new(TILE_BALL, COLOR_RED)],
+        }
+    }
+
+    fn reset_inputs(b: usize)
+                    -> (Vec<Grid>, Ruleset, Vec<i32>, Vec<Rng>) {
+        let grids = (0..b).map(|_| Grid::empty_room(9, 9)).collect();
+        let rs = simple_ruleset();
+        let maxs = vec![5i32; b];
+        let rngs = (0..b).map(|i| Rng::new(300 + i as u64)).collect();
+        (grids, rs, maxs, rngs)
+    }
+
+    /// Chunked parallel stepping must be bitwise identical to the plain
+    /// serial `VecEnv` — outputs and internal state. (The full
+    /// registry/thread-count matrix lives in `tests/native_threads.rs`.)
+    #[test]
+    fn parallel_matches_serial_vecenv() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let b = 5usize; // odd on purpose: uneven chunks
+        let (grids, rs, maxs, rngs) = reset_inputs(b);
+        let refs: Vec<&Ruleset> = (0..b).map(|_| &rs).collect();
+
+        let mut serial = VecEnv::new(cfg, b);
+        let mut par = ParVecEnv::new(cfg, b, 3);
+        let mut obs_s = vec![0i32; serial.obs_len()];
+        let mut obs_p = vec![0i32; par.obs_len()];
+        serial.reset_all(&grids, &refs, &maxs, &rngs, &mut obs_s);
+        par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs_p);
+        assert_eq!(obs_s, obs_p, "reset obs");
+
+        let mut rw_s = vec![0f32; b];
+        let mut dn_s = vec![false; b];
+        let mut tr_s = vec![false; b];
+        let (mut rw_p, mut dn_p, mut tr_p) =
+            (rw_s.clone(), dn_s.clone(), tr_s.clone());
+        let mut act = Rng::new(4);
+        for t in 0..20 {
+            let actions: Vec<i32> =
+                (0..b).map(|_| act.below(6) as i32).collect();
+            serial.step_all(&actions, &mut obs_s, &mut rw_s, &mut dn_s,
+                            &mut tr_s);
+            par.step_all(&actions, &mut obs_p, &mut rw_p, &mut dn_p,
+                         &mut tr_p);
+            assert_eq!(obs_s, obs_p, "step {t}: obs");
+            assert_eq!(rw_s.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                       rw_p.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                       "step {t}: rewards");
+            assert_eq!(dn_s, dn_p, "step {t}: dones");
+            assert_eq!(tr_s, tr_p, "step {t}: trials");
+        }
+        assert_eq!(serial.snapshot(), par.snapshot(),
+                   "internal SoA buffers and RNG states");
+    }
+
+    /// The fused rollout's aggregates, final observations and internal
+    /// state must be identical for every thread count.
+    #[test]
+    fn fused_rollout_thread_invariant() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let b = 8usize;
+        let run = |threads: usize| {
+            let (grids, rs, maxs, rngs) = reset_inputs(b);
+            let refs: Vec<&Ruleset> = (0..b).map(|_| &rs).collect();
+            let mut par = ParVecEnv::new(cfg, b, threads);
+            let mut obs = vec![0i32; par.obs_len()];
+            par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs);
+            let mut rng = Rng::new(77);
+            let totals = par.rollout(12, &mut rng);
+            par.copy_obs_into(&mut obs);
+            (totals.0.to_bits(), totals.1, totals.2, obs,
+             par.snapshot())
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(8));
+    }
+
+    #[test]
+    fn threads_clamped_to_batch() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let par = ParVecEnv::new(cfg, 2, 16);
+        assert_eq!(par.threads(), 2);
+        assert_eq!(par.batch(), 2);
+        assert_eq!(par.obs_len(), 2 * 5 * 5 * 2);
+    }
+}

@@ -20,7 +20,8 @@ pub use goals::Goal;
 pub use grid::{CellGrid, Grid};
 pub use observation::{Obs, ObsScratch};
 pub use rules::Rule;
-pub use state::{default_max_steps, reset, step, step_with, EnvOptions,
-                Ruleset, State, StepInfo, StepOutput};
+pub use state::{default_max_steps, reset, step, step_with,
+                step_with_tasks, EnvOptions, Ruleset, State, StepInfo,
+                StepOutput, TaskSource};
 pub use types::Cell;
-pub use vector::{VecEnv, VecEnvConfig};
+pub use vector::{VecEnv, VecEnvConfig, VecEnvSnapshot};

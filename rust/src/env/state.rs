@@ -29,6 +29,29 @@ impl Ruleset {
     }
 }
 
+/// A bag of tasks an environment resamples from at *episode* auto-reset
+/// (the meta-RL task-distribution protocol of §2.1: a new episode is a
+/// new task, while trial resets within an episode keep the task). The
+/// benchmark store implements this for `Benchmark`; plain ruleset
+/// vectors implement it for tests.
+///
+/// `Send + Sync` is a supertrait so one source can be shared across the
+/// parallel stepping workers of `coordinator::workers`.
+pub trait TaskSource: Send + Sync {
+    fn num_tasks(&self) -> usize;
+    fn task(&self, id: usize) -> &Ruleset;
+}
+
+impl TaskSource for Vec<Ruleset> {
+    fn num_tasks(&self) -> usize {
+        self.len()
+    }
+
+    fn task(&self, id: usize) -> &Ruleset {
+        &self[id]
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct State {
     pub base_grid: Grid,
@@ -189,8 +212,26 @@ pub fn apply_action<G: CellGrid>(grid: &mut G, agent_pos: &mut (i32, i32),
 /// One environment transition, writing the observation into the
 /// caller-owned `obs`/`scratch` buffers — the allocation-free hot-loop
 /// form of [`step`] (no per-step rule clones or observation `Vec`s).
+/// Episode auto-reset replays the same ruleset forever; benchmark-driven
+/// runs that must resample a fresh task per episode use
+/// [`step_with_tasks`].
 pub fn step_with(state: &mut State, action: i32, opts: EnvOptions,
                  obs: &mut Obs, scratch: &mut ObsScratch) -> StepInfo {
+    step_with_tasks(state, action, opts, None, obs, scratch)
+}
+
+/// [`step_with`] under the benchmark protocol: at an *episode* boundary
+/// (`done`) a fresh task is drawn uniformly from `tasks` with the env's
+/// own RNG stream and replaces the ruleset before objects are re-placed;
+/// trial resets within the episode keep the task (§2.1). With
+/// `tasks = None` this is exactly [`step_with`].
+///
+/// RNG discipline at an episode boundary: one `below(num_tasks)` draw on
+/// the env stream, then the usual `split` for placement — the sequence
+/// `env::vector::VecEnv` mirrors bitwise.
+pub fn step_with_tasks(state: &mut State, action: i32, opts: EnvOptions,
+                       tasks: Option<&dyn TaskSource>, obs: &mut Obs,
+                       scratch: &mut ObsScratch) -> StepInfo {
     let action = action.clamp(0, NUM_ACTIONS as i32 - 1);
     apply_action(&mut state.grid, &mut state.agent_pos,
                  &mut state.agent_dir, &mut state.pocket, action);
@@ -214,6 +255,15 @@ pub fn step_with(state: &mut State, action: i32, opts: EnvOptions,
 
     let trial_done = achieved || done;
     if trial_done {
+        if done {
+            // episode boundary: resample the task before re-placing
+            // (trial resets keep it — §2.1 benchmark protocol)
+            if let Some(ts) = tasks {
+                assert!(ts.num_tasks() > 0, "task source is empty");
+                let t = state.rng.below(ts.num_tasks());
+                state.ruleset = ts.task(t).clone();
+            }
+        }
         let mut sub = state.rng.split();
         let (grid, pos, dir) =
             place_objects(&mut sub, &state.base_grid,
@@ -357,6 +407,45 @@ mod tests {
         assert_eq!(s.step_count, 1);
         // the ball was re-placed somewhere on the grid
         assert_eq!(s.grid.count_tile(TILE_BALL), 1);
+    }
+
+    #[test]
+    fn episode_reset_resamples_task_trial_reset_keeps_it() {
+        // two tasks with distinct goals; episode boundaries must draw
+        // from the source, trial boundaries must not
+        let tasks: Vec<Ruleset> = vec![
+            Ruleset {
+                goal: Goal::agent_near(ball_red()),
+                rules: vec![],
+                init_tiles: vec![ball_red()],
+            },
+            Ruleset {
+                goal: Goal::agent_hold(Cell::new(TILE_KEY, COLOR_BLUE)),
+                rules: vec![],
+                init_tiles: vec![Cell::new(TILE_KEY, COLOR_BLUE)],
+            },
+        ];
+        let mut s = simple_state(Goal::EMPTY, vec![], vec![ball_red()]);
+        s.max_steps = 2;
+        let mut obs = Obs::empty(5);
+        let mut scratch = ObsScratch::new();
+        let opts = EnvOptions::default();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..32 {
+            // EMPTY goal never achieves: the only boundaries are
+            // episode ends, so every boundary must resample
+            let a = step_with_tasks(&mut s, ACTION_TURN_LEFT, opts,
+                                    Some(&tasks), &mut obs, &mut scratch);
+            assert!(!a.done);
+            let b = step_with_tasks(&mut s, ACTION_TURN_LEFT, opts,
+                                    Some(&tasks), &mut obs, &mut scratch);
+            assert!(b.done && b.trial_done);
+            assert!(tasks.contains(&s.ruleset),
+                    "episode reset must draw from the task source");
+            seen.insert(s.ruleset.goal.0);
+        }
+        assert_eq!(seen.len(), 2,
+                   "32 episode resets must have sampled both tasks");
     }
 
     #[test]

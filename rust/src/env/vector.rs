@@ -16,13 +16,16 @@
 //! `Rng::sample_distinct`). `tests/vec_env_equivalence.rs` pins this
 //! contract for every registry env family across auto-reset boundaries.
 
+use std::sync::Arc;
+
 use crate::util::rng::Rng;
 
 use super::goals::{check_goal, Goal};
 use super::grid::{CellGrid, Grid};
 use super::observation::{observe_into, Obs, ObsScratch};
 use super::rules::{check_rules, Rule};
-use super::state::{apply_action, is_acting_action, EnvOptions, Ruleset};
+use super::state::{apply_action, is_acting_action, EnvOptions, Ruleset,
+                   TaskSource};
 use super::types::*;
 
 /// Borrowed view of one environment's `[H, W, 2]` slice of the batched
@@ -68,6 +71,51 @@ impl CellGrid for GridView<'_> {
     }
 }
 
+/// Owned copy of every per-env SoA buffer plus the per-env RNG states —
+/// the full observable state of a [`VecEnv`]. The parallel-engine tests
+/// compare these across thread counts: equality here means the engines
+/// are bitwise-identical, including state no output has surfaced yet.
+/// Concatenating per-chunk snapshots in chunk order reconstructs the
+/// full-batch snapshot ([`VecEnvSnapshot::append`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VecEnvSnapshot {
+    pub base: Vec<Cell>,
+    pub grid: Vec<Cell>,
+    pub agent_pos: Vec<i32>,
+    pub agent_dir: Vec<i32>,
+    pub pocket: Vec<Cell>,
+    pub rules: Vec<Rule>,
+    pub goals: Vec<Goal>,
+    pub init: Vec<Cell>,
+    pub init_len: Vec<u32>,
+    pub step_count: Vec<i32>,
+    pub max_steps: Vec<i32>,
+    pub rng_states: Vec<[u64; 4]>,
+}
+
+impl VecEnvSnapshot {
+    /// An empty snapshot to fold chunk snapshots into.
+    pub fn empty() -> VecEnvSnapshot {
+        VecEnvSnapshot::default()
+    }
+
+    /// Append another snapshot's envs after this one's (chunk order).
+    pub fn append(&mut self, other: VecEnvSnapshot) {
+        self.base.extend(other.base);
+        self.grid.extend(other.grid);
+        self.agent_pos.extend(other.agent_pos);
+        self.agent_dir.extend(other.agent_dir);
+        self.pocket.extend(other.pocket);
+        self.rules.extend(other.rules);
+        self.goals.extend(other.goals);
+        self.init.extend(other.init);
+        self.init_len.extend(other.init_len);
+        self.step_count.extend(other.step_count);
+        self.max_steps.extend(other.max_steps);
+        self.rng_states.extend(other.rng_states);
+    }
+}
+
 /// Shape of one `VecEnv` family: grid dims plus the fixed-width ruleset
 /// table capacities (the artifact-free analogue of `(H, W, MR, MI)`).
 #[derive(Clone, Copy, Debug)]
@@ -79,6 +127,24 @@ pub struct VecEnvConfig {
     /// init-tile rows per env
     pub max_init: usize,
     pub opts: EnvOptions,
+}
+
+impl VecEnvConfig {
+    /// Assert every task in `tasks` fits this config's fixed-width
+    /// tables. O(num_tasks) — run once per source, not per chunk.
+    pub fn validate_task_source(&self, tasks: &dyn TaskSource) {
+        let n = tasks.num_tasks();
+        assert!(n > 0, "task source is empty");
+        for id in 0..n {
+            let t = tasks.task(id);
+            assert!(t.rules.len() <= self.max_rules,
+                    "task {id}: {} rules > capacity {}",
+                    t.rules.len(), self.max_rules);
+            assert!(t.init_tiles.len() <= self.max_init,
+                    "task {id}: {} init objects > capacity {}",
+                    t.init_tiles.len(), self.max_init);
+        }
+    }
 }
 
 /// B environments in SoA buffers with allocation-free `reset_all` /
@@ -111,6 +177,10 @@ pub struct VecEnv {
     max_steps: Vec<i32>,
     /// one xoshiro256++ stream per env (the JAX per-env key analogue)
     rngs: Vec<Rng>,
+    /// benchmark task distribution for episode auto-reset resampling;
+    /// `None` replays each env's current ruleset forever (fixed-task
+    /// harnesses like the registry unit tests want exactly that)
+    tasks: Option<Arc<dyn TaskSource>>,
     // --- reusable scratch: steady-state kernels never allocate ---------
     free_scratch: Vec<usize>,
     obs_scratch: Obs,
@@ -138,6 +208,7 @@ impl VecEnv {
             step_count: vec![0; b],
             max_steps: vec![0; b],
             rngs: vec![Rng::new(0); b],
+            tasks: None,
             free_scratch: Vec::with_capacity(ghw),
             obs_scratch: Obs::empty(cfg.opts.view_size),
             vis_scratch: ObsScratch::new(),
@@ -156,6 +227,49 @@ impl VecEnv {
     /// `B * V * V * 2` i32s in the PJRT boundary layout.
     pub fn obs_len(&self) -> usize {
         self.b * self.cfg.opts.view_size * self.cfg.opts.view_size * 2
+    }
+
+    /// Install the benchmark task distribution: at every *episode*
+    /// auto-reset, the done env draws a fresh task from `tasks` with its
+    /// own RNG stream and re-encodes it into the SoA tables (trial
+    /// resets keep the task — the §2.1 protocol [`super::state`]'s
+    /// `step_with_tasks` defines). Every task must fit the fixed-width
+    /// tables this `VecEnv` was built with
+    /// ([`VecEnvConfig::validate_task_source`] runs here).
+    pub fn set_task_source(&mut self, tasks: Arc<dyn TaskSource>) {
+        self.cfg.validate_task_source(tasks.as_ref());
+        self.tasks = Some(tasks);
+    }
+
+    /// [`VecEnv::set_task_source`] minus the O(num_tasks) capacity
+    /// validation — for callers (the chunked parallel engine) that
+    /// already validated the source against this exact config once,
+    /// instead of once per chunk worker.
+    pub fn set_task_source_prevalidated(&mut self,
+                                        tasks: Arc<dyn TaskSource>) {
+        debug_assert!(tasks.num_tasks() > 0);
+        self.tasks = Some(tasks);
+    }
+
+    /// Deep copy of every per-env SoA buffer plus the RNG states —
+    /// scratch excluded (it carries no state across envs or steps).
+    /// Two engines that stepped the same envs are equal here iff they
+    /// are bitwise-identical forever after.
+    pub fn snapshot(&self) -> VecEnvSnapshot {
+        VecEnvSnapshot {
+            base: self.base.clone(),
+            grid: self.grid.clone(),
+            agent_pos: self.agent_pos.clone(),
+            agent_dir: self.agent_dir.clone(),
+            pocket: self.pocket.clone(),
+            rules: self.rules.clone(),
+            goals: self.goals.clone(),
+            init: self.init.clone(),
+            init_len: self.init_len.clone(),
+            step_count: self.step_count.clone(),
+            max_steps: self.max_steps.clone(),
+            rng_states: self.rngs.iter().map(|r| r.state()).collect(),
+        }
     }
 
     /// Start a fresh episode in every env slot. Mirrors the scalar
@@ -214,17 +328,7 @@ impl VecEnv {
                 "env {i}: ruleset has {} init objects > capacity {mi}",
                 ruleset.init_tiles.len());
 
-        // encode the ruleset into its fixed-width table rows
-        for j in 0..mr {
-            self.rules[i * mr + j] =
-                ruleset.rules.get(j).copied().unwrap_or(Rule::EMPTY);
-        }
-        self.goals[i] = ruleset.goal;
-        for j in 0..mi {
-            self.init[i * mi + j] = ruleset.init_tiles.get(j).copied()
-                .unwrap_or(Cell::new(0, 0));
-        }
-        self.init_len[i] = ruleset.init_tiles.len() as u32;
+        self.encode_task(i, ruleset);
 
         let g0 = i * h * w;
         self.base[g0..g0 + h * w].copy_from_slice(base.cells());
@@ -272,6 +376,18 @@ impl VecEnv {
 
         let trial_done = achieved || done;
         if trial_done {
+            // episode boundary: resample the task from the benchmark
+            // before re-placing — replaying the same ruleset forever
+            // breaks the meta-RL task-distribution protocol. Trial
+            // resets keep the task (§2.1). The draw comes from the
+            // env's own stream, so chunked parallel stepping stays
+            // bitwise-identical to serial.
+            if done {
+                if let Some(ts) = self.tasks.clone() {
+                    let t = self.rngs[i].below(ts.num_tasks());
+                    self.encode_task(i, ts.task(t));
+                }
+            }
             // same stream discipline as the scalar oracle: split the
             // env's RNG, place from the child stream
             let mut sub = self.rngs[i].split();
@@ -280,6 +396,25 @@ impl VecEnv {
         }
         self.step_count[i] = if done { 0 } else { new_step };
         (reward, done, trial_done)
+    }
+
+    /// Encode `ruleset` into env `i`'s fixed-width table rows (rules,
+    /// goal, init tiles); unused rows are inert padding.
+    fn encode_task(&mut self, i: usize, ruleset: &Ruleset) {
+        let mr = self.cfg.max_rules;
+        let mi = self.cfg.max_init;
+        debug_assert!(ruleset.rules.len() <= mr
+                      && ruleset.init_tiles.len() <= mi);
+        for j in 0..mr {
+            self.rules[i * mr + j] =
+                ruleset.rules.get(j).copied().unwrap_or(Rule::EMPTY);
+        }
+        self.goals[i] = ruleset.goal;
+        for j in 0..mi {
+            self.init[i * mi + j] = ruleset.init_tiles.get(j).copied()
+                .unwrap_or(Cell::new(0, 0));
+        }
+        self.init_len[i] = ruleset.init_tiles.len() as u32;
     }
 
     /// Trial placement for env `i`: restore the base grid, then place
@@ -419,6 +554,45 @@ mod tests {
                            "step {t} env {i}: obs");
             }
         }
+    }
+
+    /// Regression: before the task-source fix, episode auto-reset
+    /// replayed the same ruleset forever. With a multi-task source the
+    /// encoded goal/rule tables must change across episode boundaries.
+    #[test]
+    fn episode_reset_draws_fresh_task_from_source() {
+        let opts = EnvOptions::default();
+        let tasks: Vec<Ruleset> = (0..6)
+            .map(|k| Ruleset {
+                goal: Goal::agent_hold(Cell::new(TILE_BALL, 3 + k)),
+                rules: vec![],
+                init_tiles: vec![Cell::new(TILE_BALL, 3 + k)],
+            })
+            .collect();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let mut venv = VecEnv::new(cfg, 2);
+        venv.set_task_source(Arc::new(tasks.clone()));
+        let grids = vec![Grid::empty_room(9, 9), Grid::empty_room(9, 9)];
+        let refs: Vec<&Ruleset> = vec![&tasks[0], &tasks[0]];
+        let rngs = vec![Rng::new(1), Rng::new(2)];
+        let mut obs = vec![0i32; venv.obs_len()];
+        venv.reset_all(&grids, &refs, &[3, 3], &rngs, &mut obs);
+
+        let mut rewards = vec![0f32; 2];
+        let mut dones = vec![false; 2];
+        let mut trials = vec![false; 2];
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..30 {
+            venv.step_all(&[1, 2], &mut obs, &mut rewards, &mut dones,
+                          &mut trials);
+            seen.insert((venv.snapshot().goals[0], dones[0]));
+        }
+        let goals_after_reset: std::collections::HashSet<_> =
+            seen.iter().map(|&(g, _)| g).collect();
+        assert!(goals_after_reset.len() >= 2,
+                "10 episode boundaries never changed the task table — \
+                 stale-task auto-reset is back");
     }
 
     #[test]

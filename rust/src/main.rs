@@ -25,8 +25,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use xmgrid::benchgen::store::load_benchmark;
-use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::benchgen::store::{data_dir, load_benchmark_with,
+                              size_suffix_name};
+use xmgrid::benchgen::{generate_benchmark, generate_benchmark_with,
+                       BenchmarkWriter, Preset};
 use xmgrid::coordinator::metrics::{fmt_sps, CsvLog, ThroughputMeter};
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::{BackendKind, NativeEnvConfig, Overlap,
@@ -41,6 +43,24 @@ use xmgrid::util::rng::Rng;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts-dir", "artifacts"))
+}
+
+/// `--threads N|auto` → worker count (default 1; `auto` = all cores).
+/// Drives both native-backend stepping (batch chunked across workers,
+/// output bitwise-independent of the count) and first-use benchmark
+/// generation.
+fn parse_threads(args: &Args) -> Result<usize> {
+    match args.get("threads") {
+        None => Ok(1),
+        Some("auto") => Ok(std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)),
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => bail!("--threads must be a positive integer or `auto`, \
+                        got {v}"),
+        },
+    }
 }
 
 /// `--shards` / `--overlap` / `--seed` / `--rooms` → engine config.
@@ -87,8 +107,9 @@ usage: xmgrid <command> [--options]
 commands:
   envs                                list environments
   play --env NAME [--steps N]         ASCII episode
-  gen-benchmark --preset P --n N      generate benchmark
+  gen-benchmark --preset P --n N      generate benchmark (--threads)
   rollout [--backend B] [--shards N]  sharded throughput run
+          [--threads T]               (native: chunked stepping pool)
   train [--shards N] [--overlap M]    RL² PPO training
   eval --benchmark B                  evaluation protocol
   validate                            oracle cross-check
@@ -117,20 +138,34 @@ grid as ASCII before and after.
   --seed S      RNG seed (default: 0)",
         "gen-benchmark" => "\
 usage: xmgrid gen-benchmark [--preset P] [--n N] [--seed S]
+                            [--threads T|auto]
 
 Generate N unique rulesets with the §3 procedural generator and store
 them gzip-compressed under the benchmark data dir
-($XLAND_MINIGRID_DATA, default artifacts/benchmarks).
+($XLAND_MINIGRID_DATA, default artifacts/benchmarks). Generation is
+streamed straight into the chunked gzip store and deduplicated on the
+exact ruleset encoding, so million-task benchmarks (--n 1000000) run in
+a bounded memory footprint and finish in seconds with --threads auto.
+The cache name uses the size suffix (--preset medium --n 100000 ->
+medium-100k), so other commands load it via --benchmark medium-100k.
+A non-default --seed is appended to the name (medium-100k-seed7) so a
+custom generation never shadows the canonical benchmark.
 
-  --preset P    trivial | small | medium | high | high-3m (default:
-                trivial)
-  --n N         number of rulesets (default: 1000)
-  --seed S      generator seed (default: preset seed)",
+  --preset P        trivial | small | medium | high (default: trivial)
+  --n N             number of rulesets (default: 1000); errors cleanly
+                    if the preset's task space saturates below N
+  --seed S          generator seed (default: preset seed)
+  --threads T|auto  generation worker threads (default: 1; auto = all
+                    cores). Output is identical for every thread count:
+                    attempt k's candidate is a pure function of
+                    (seed, k) and the dedup merge consumes candidates
+                    in ascending k order.",
         "rollout" => "\
 usage: xmgrid rollout [--backend auto|native|xla] [--batch B]
-                      [--chunks N] [--shards K] [--overlap on|off]
-                      [--env NAME] [--steps T] [--benchmark NAME]
-                      [--seed S] [--rooms R] [--artifacts-dir DIR]
+                      [--chunks N] [--shards K] [--threads T|auto]
+                      [--overlap on|off] [--env NAME] [--steps T]
+                      [--benchmark NAME] [--seed S] [--rooms R]
+                      [--artifacts-dir DIR]
 
 Random-policy throughput run on the sharded rollout engine. Each shard
 is a persistent worker thread owning a full replica and a private RNG
@@ -145,6 +180,12 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
                      per shard (native) (default: 1024)
   --chunks N         rollout chunks per shard (default: 4)
   --shards K         number of shard replicas (default: 1)
+  --threads T|auto   native backend: stepping worker threads per shard
+                     replica — the env batch is chunked across a
+                     persistent worker pool, bitwise identical to
+                     --threads 1 for any T (default: 1; auto = all
+                     cores). Also parallelizes first-use benchmark
+                     generation.
   --overlap on|off   off: lockstep rounds with a global barrier,
                      bitwise-deterministic per seed. on: double-buffered
                      pipeline — each shard keeps a second trajectory
@@ -163,9 +204,10 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
                      native backend takes rooms from --env (default: 1)",
         "train" => "\
 usage: xmgrid train [--benchmark NAME] [--iters N] [--batch B]
-                    [--artifact NAME] [--shards K] [--overlap on|off]
-                    [--seed S] [--resample I] [--eval-every E]
-                    [--rooms R] [--log PATH] [--artifacts-dir DIR]
+                    [--artifact NAME] [--shards K] [--threads T|auto]
+                    [--overlap on|off] [--seed S] [--resample I]
+                    [--eval-every E] [--rooms R] [--log PATH]
+                    [--artifacts-dir DIR]
 
 RL² PPO training over fused train_iter artifacts. With --shards > 1 the
 data-parallel shard engine runs one full trainer replica per shard and
@@ -177,6 +219,9 @@ all-reduces parameter updates on the host in fixed shard order.
                      (default: 256; falls back to the largest)
   --artifact NAME    explicit train_iter artifact (overrides --batch)
   --shards K         trainer replicas (default: 1 = single-replica path)
+  --threads T|auto   worker threads for first-use benchmark generation
+                     (default: 1; auto = all cores) — large --benchmark
+                     names like medium-1m generate in seconds
   --overlap on|off   off: lockstep all-reduce every iteration (bitwise
                      deterministic per seed). on: double-buffered
                      pipeline — shards compute iteration t+1 while the
@@ -259,12 +304,15 @@ fn cmd_play(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 0);
     let mut rng = Rng::new(seed);
     let bp = registry::make(&name, &mut rng);
-    let ruleset = bp.ruleset.clone().unwrap_or_else(|| {
-        // XLand env: sample a trivial task
-        let (mut rs, _) =
-            generate_benchmark(&Preset::Trivial.config(), 1);
-        rs.pop().unwrap()
-    });
+    let ruleset = match bp.ruleset.clone() {
+        Some(rs) => rs,
+        None => {
+            // XLand env: sample a trivial task
+            let (mut rs, _) =
+                generate_benchmark(&Preset::Trivial.config(), 1)?;
+            rs.pop().unwrap()
+        }
+    };
     let (mut state, _) = reset(bp.base_grid, ruleset, bp.max_steps,
                                rng.split(), EnvOptions::default());
     println!("{}", render_grid(&state.grid,
@@ -290,27 +338,58 @@ fn cmd_play(args: &Args) -> Result<()> {
 fn cmd_gen_benchmark(args: &Args) -> Result<()> {
     let preset_name = args.str_or("preset", "trivial");
     let n = args.usize_or("n", 1000);
+    if n == 0 {
+        bail!("--n must be at least 1");
+    }
+    let threads = parse_threads(args)?;
     let preset = Preset::from_name(&preset_name)
         .with_context(|| format!("unknown preset {preset_name}"))?;
     let mut cfg = preset.config();
-    cfg.random_seed = args.u64_or("seed", cfg.random_seed);
+    let default_seed = cfg.random_seed;
+    cfg.random_seed = args.u64_or("seed", default_seed);
     let t0 = std::time::Instant::now();
-    let (rulesets, stats) = generate_benchmark(&cfg, n);
-    let bench = Benchmark {
-        name: format!("{preset_name}-{n}"),
-        rulesets,
+    // Streaming pipeline: rulesets flow generator -> dedup -> gzip store
+    // without ever holding the full benchmark in memory, so --n 1000000
+    // works in a bounded footprint.
+    //
+    // Cache naming: only the default-seed benchmark may claim the
+    // canonical `<preset>-<size>` name that `--benchmark` resolves and
+    // other machines would auto-generate — a custom seed gets its own
+    // `-seed<S>` suffix so it can never silently shadow the canonical
+    // content.
+    let name = if cfg.random_seed == default_seed {
+        format!("{preset_name}-{}", size_suffix_name(n))
+    } else {
+        format!("{preset_name}-{}-seed{}", size_suffix_name(n),
+                cfg.random_seed)
     };
-    let dir = xmgrid::benchgen::store::data_dir();
+    let dir = data_dir();
     std::fs::create_dir_all(&dir)?;
-    let path = dir.join(format!("{}.xmg.gz", bench.name));
-    let (raw, comp) = bench.save(&path)?;
-    let mean_rules: f64 = stats.iter().map(|s| s.num_rules as f64)
-        .sum::<f64>() / stats.len() as f64;
+    let path = dir.join(format!("{name}.xmg.gz"));
+    let mut writer = BenchmarkWriter::create(&path, n)?;
+    let mut rule_sum = 0u64;
+    let gen = generate_benchmark_with(&cfg, n, threads, |rs, st| {
+        rule_sum += st.num_rules as u64;
+        writer.push(&rs)
+    });
+    let attempts = match gen {
+        Ok(a) => a,
+        Err(e) => {
+            // remove the temp file; a previously cached complete
+            // benchmark at the final path stays intact
+            writer.discard();
+            return Err(e.context(format!(
+                "generating benchmark {name}")));
+        }
+    };
+    let (raw, comp) = writer.finish()?;
+    let secs = t0.elapsed().as_secs_f64();
     println!(
-        "generated {n} unique rulesets in {:.1}s (mean rules {mean_rules:.2}) \
-         -> {path:?} ({:.1} KiB raw, {:.1} KiB gz)",
-        t0.elapsed().as_secs_f64(), raw as f64 / 1024.0,
-        comp as f64 / 1024.0
+        "generated {n} unique rulesets in {secs:.1}s \
+         ({attempts} attempts, {threads} threads, {:.0} rulesets/s, \
+         mean rules {:.2}) -> {path:?} ({:.1} KiB raw, {:.1} KiB gz)",
+        n as f64 / secs.max(1e-9), rule_sum as f64 / n as f64,
+        raw as f64 / 1024.0, comp as f64 / 1024.0
     );
     Ok(())
 }
@@ -320,9 +399,10 @@ fn cmd_rollout(args: &Args) -> Result<()> {
     let backend = BackendKind::from_flag(&args.str_or("backend", "auto"))?;
     let batch = args.usize_or("batch", 1024);
     let chunks = args.usize_or("chunks", 4);
+    let threads = parse_threads(args)?;
     let cfg = shard_config(args)?;
-    let bench =
-        Arc::new(load_benchmark(&args.str_or("benchmark", "trivial-1k"))?);
+    let bench = Arc::new(load_benchmark_with(
+        &args.str_or("benchmark", "trivial-1k"), threads)?);
 
     // Backend selection: an explicit flag wins; `auto` takes the
     // AOT/PJRT path only when a manifest with rollout artifacts exists,
@@ -341,6 +421,11 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         if args.get("env").is_some() || args.get("steps").is_some() {
             println!("note: --env/--steps apply to the native backend \
                       only; the xla family/T come from the artifact");
+        }
+        if threads > 1 {
+            println!("note: --threads chunks the native backend's \
+                      stepping; the xla backend parallelizes over \
+                      --shards");
         }
         let rolls = manifest.of_kind("env_rollout");
         let spec = rolls
@@ -363,11 +448,13 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         let env_name =
             args.str_or("env", "XLand-MiniGrid-R1-13x13");
         let t = args.usize_or("steps", 64);
-        let ncfg = NativeEnvConfig::for_env(&env_name, batch, t, &bench)?;
+        let ncfg = NativeEnvConfig::for_env(&env_name, batch, t, &bench)?
+            .with_threads(threads);
         println!(
             "backend native: {env_name} (B={batch} T={t} grid {}x{} \
-             rooms {}) shards={} overlap={}",
-            ncfg.h, ncfg.w, ncfg.rooms, cfg.shards, cfg.overlap
+             rooms {}) shards={} threads={} overlap={}",
+            ncfg.h, ncfg.w, ncfg.rooms, cfg.shards, ncfg.threads,
+            cfg.overlap
         );
         RolloutEngine::launch_native(ncfg, bench, cfg)?
     };
@@ -426,7 +513,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         return cmd_train_sharded(args, scfg);
     }
     let rt = Runtime::new(&artifacts_dir(args))?;
-    let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
+    let bench = load_benchmark_with(
+        &args.str_or("benchmark", "trivial-1k"), parse_threads(args)?)?;
     let iters = args.usize_or("iters", 50);
     let artifact = match args.get("artifact") {
         Some(a) => a.to_string(),
@@ -504,8 +592,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
     let dir = artifacts_dir(args);
     let manifest = Manifest::load(&dir)?;
-    let bench =
-        Arc::new(load_benchmark(&args.str_or("benchmark", "trivial-1k"))?);
+    let bench = Arc::new(load_benchmark_with(
+        &args.str_or("benchmark", "trivial-1k"), parse_threads(args)?)?);
     let iters = args.usize_or("iters", 50);
     let artifact = match args.get("artifact") {
         Some(a) => a.to_string(),
@@ -589,7 +677,8 @@ fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = Runtime::new(&artifacts_dir(args))?;
-    let bench = load_benchmark(&args.str_or("benchmark", "trivial-1k"))?;
+    let bench = load_benchmark_with(
+        &args.str_or("benchmark", "trivial-1k"), parse_threads(args)?)?;
     let artifact =
         pick_train_artifact(&rt.manifest, args.usize_or("batch", 256))?;
     let rooms = args.usize_or("rooms", 1);

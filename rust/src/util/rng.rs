@@ -17,6 +17,17 @@ fn splitmix64(x: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Seed of the `k`-th decorrelated stream derived from `seed`: stream 0
+/// keeps the seed itself; higher streams are spread by a golden-ratio
+/// multiple, which [`Rng::new`]'s splitmix init diffuses into an
+/// independent sequence. The single definition behind both the shard
+/// engine's `shard_seed` and the benchmark generator's per-attempt
+/// streams — the mapping depends only on `(seed, k)`, never on
+/// scheduling or thread count.
+pub fn stream_seed(seed: u64, k: u64) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(k)
+}
+
 impl Rng {
     pub fn new(seed: u64) -> Self {
         let mut x = seed;
@@ -25,6 +36,21 @@ impl Rng {
             *v = splitmix64(&mut x);
         }
         Rng { s }
+    }
+
+    /// The `k`-th decorrelated stream derived from `seed` — see
+    /// [`stream_seed`]. Used for both the engine's per-shard streams
+    /// and the benchmark generator's per-attempt streams.
+    pub fn stream(seed: u64, k: u64) -> Rng {
+        Rng::new(stream_seed(seed, k))
+    }
+
+    /// The raw xoshiro256++ state. Two streams with equal state are
+    /// bitwise-identical forever — the equivalence tests use this to
+    /// assert that parallel and serial engines leave every per-env
+    /// stream in exactly the same position.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
     }
 
     /// Derive an independent stream (JAX `random.split` analogue).

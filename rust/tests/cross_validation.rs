@@ -233,7 +233,7 @@ fn hlo_rollout_runs_and_counts_trials() {
         xmgrid::coordinator::EnvPool::new(&rt, fam, rooms).unwrap();
     let bench = {
         let (rulesets, _) = xmgrid::benchgen::generate_benchmark(
-            &xmgrid::benchgen::Preset::Trivial.config(), 32);
+            &xmgrid::benchgen::Preset::Trivial.config(), 32).unwrap();
         xmgrid::benchgen::Benchmark { name: "t".into(), rulesets }
     };
     let mut rng = Rng::new(3);

@@ -32,7 +32,7 @@ fn trivial_bench(mr: usize, mi: usize, n: usize) -> Benchmark {
     let mut cfg = Preset::Trivial.config();
     cfg.max_rules = mr;
     cfg.max_objects = mi;
-    let (rulesets, _) = generate_benchmark(&cfg, n);
+    let (rulesets, _) = generate_benchmark(&cfg, n).unwrap();
     Benchmark { name: "trivial-test".into(), rulesets }
 }
 

@@ -1,0 +1,282 @@
+//! Thread-parallel determinism contract: chunking a `VecEnv` batch over
+//! the persistent `ParVecEnv` worker pool must be **bitwise identical**
+//! to serial execution — same observations, rewards, done/trial flags,
+//! and the same internal SoA buffers and per-env RNG states — for every
+//! thread count, including runs that cross episode auto-reset
+//! boundaries where tasks are resampled from a multi-ruleset benchmark.
+//! Likewise the parallel benchmark generator must produce exactly the
+//! serial benchmark, and the native rollout engine's per-shard streams
+//! must be independent of `--threads`.
+
+use std::sync::Arc;
+
+use xmgrid::benchgen::{generate_benchmark, generate_benchmark_par,
+                       ruleset_key, Benchmark, Preset};
+use xmgrid::coordinator::workers::ParVecEnv;
+use xmgrid::coordinator::{NativeEnvConfig, NativePool, Overlap,
+                          RolloutEngine, ShardConfig};
+use xmgrid::env::registry;
+use xmgrid::env::state::{reset, step_with_tasks, EnvOptions, Ruleset,
+                         State, TaskSource};
+use xmgrid::env::vector::{VecEnv, VecEnvConfig};
+use xmgrid::env::{Obs, ObsScratch};
+use xmgrid::util::rng::Rng;
+
+fn small_tasks(n: usize) -> Vec<Ruleset> {
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Small.config(), n).unwrap();
+    rulesets
+}
+
+/// Drive one env family through `steps` random actions on the scalar
+/// oracle (`step_with_tasks`), the serial `VecEnv`, and `ParVecEnv` at
+/// every requested thread count, asserting bitwise parity per step and
+/// snapshot equality (internal buffers + RNG states) at the end.
+/// `max_steps` is short so episode boundaries — and therefore task
+/// resampling — are crossed repeatedly.
+fn assert_thread_parity(name: &str, b: usize, steps: usize, seed: u64,
+                        max_steps: i32, tasks: Option<&[Ruleset]>,
+                        thread_counts: &[usize]) {
+    let opts = EnvOptions::default();
+    let mut rng = Rng::new(seed);
+    let mut grids = Vec::new();
+    let mut rss: Vec<Ruleset> = Vec::new();
+    let mut rngs = Vec::new();
+    for i in 0..b {
+        let bp = registry::make(name, &mut rng);
+        let rs = bp.ruleset.clone().unwrap_or_else(|| {
+            let ts = tasks.expect("XLand family needs tasks");
+            ts[i % ts.len()].clone()
+        });
+        grids.push(bp.base_grid);
+        rss.push(rs);
+        rngs.push(rng.split());
+    }
+    let (h, w) = (grids[0].h, grids[0].w);
+    // table capacities must fit both the reset-time rulesets and every
+    // resampled task
+    let extra = tasks.unwrap_or(&[]);
+    let mr = rss
+        .iter()
+        .chain(extra.iter())
+        .map(|r| r.rules.len())
+        .max()
+        .unwrap()
+        .max(1);
+    let mi = rss
+        .iter()
+        .chain(extra.iter())
+        .map(|r| r.init_tiles.len())
+        .max()
+        .unwrap()
+        .max(1);
+    let maxs = vec![max_steps; b];
+    let cfg = VecEnvConfig { h, w, max_rules: mr, max_init: mi, opts };
+    let source: Option<Arc<Vec<Ruleset>>> =
+        tasks.map(|t| Arc::new(t.to_vec()));
+    let dyn_source = |s: &Arc<Vec<Ruleset>>| -> Arc<dyn TaskSource> {
+        s.clone()
+    };
+
+    // scalar oracle
+    let mut scalar: Vec<State> = (0..b)
+        .map(|i| {
+            reset(grids[i].clone(), rss[i].clone(), maxs[i],
+                  rngs[i].clone(), opts)
+                .0
+        })
+        .collect();
+
+    // serial VecEnv reference
+    let rs_refs: Vec<&Ruleset> = rss.iter().collect();
+    let mut serial = VecEnv::new(cfg, b);
+    if let Some(s) = &source {
+        serial.set_task_source(dyn_source(s));
+    }
+    let mut obs_s = vec![0i32; serial.obs_len()];
+    serial.reset_all(&grids, &rs_refs, &maxs, &rngs, &mut obs_s);
+
+    // parallel engines, one per thread count
+    let mut pars: Vec<ParVecEnv> = thread_counts
+        .iter()
+        .map(|&t| {
+            let mut p = ParVecEnv::new(cfg, b, t);
+            if let Some(s) = &source {
+                p.set_task_source(dyn_source(s));
+            }
+            let mut obs = vec![0i32; p.obs_len()];
+            p.reset_all(&grids, &rs_refs, &maxs, &rngs, &mut obs);
+            assert_eq!(obs, obs_s, "{name}: reset obs, {t} threads");
+            p
+        })
+        .collect();
+
+    let vv2 = opts.view_size * opts.view_size * 2;
+    let mut obs_p = vec![0i32; b * vv2];
+    let mut rw_s = vec![0f32; b];
+    let mut dn_s = vec![false; b];
+    let mut tr_s = vec![false; b];
+    let (mut rw_p, mut dn_p, mut tr_p) =
+        (rw_s.clone(), dn_s.clone(), tr_s.clone());
+    let mut scalar_obs = Obs::empty(opts.view_size);
+    let mut scratch = ObsScratch::new();
+    let mut act_rng = Rng::new(seed ^ 0x5151);
+    let mut boundaries = 0usize;
+    for t in 0..steps {
+        let actions: Vec<i32> =
+            (0..b).map(|_| act_rng.below(6) as i32).collect();
+        serial.step_all(&actions, &mut obs_s, &mut rw_s, &mut dn_s,
+                        &mut tr_s);
+        // scalar oracle runs the same protocol
+        for i in 0..b {
+            let ts: Option<&dyn TaskSource> =
+                source.as_ref().map(|s| s.as_ref() as &dyn TaskSource);
+            let info = step_with_tasks(&mut scalar[i], actions[i], opts,
+                                       ts, &mut scalar_obs,
+                                       &mut scratch);
+            assert_eq!(rw_s[i].to_bits(), info.reward.to_bits(),
+                       "{name} step {t} env {i}: reward vs scalar");
+            assert_eq!(dn_s[i], info.done,
+                       "{name} step {t} env {i}: done vs scalar");
+            assert_eq!(tr_s[i], info.trial_done,
+                       "{name} step {t} env {i}: trial vs scalar");
+            assert_eq!(&obs_s[i * vv2..(i + 1) * vv2],
+                       &scalar_obs.to_flat()[..],
+                       "{name} step {t} env {i}: obs vs scalar");
+            if dn_s[i] {
+                boundaries += 1;
+            }
+        }
+        for (k, p) in pars.iter_mut().enumerate() {
+            p.step_all(&actions, &mut obs_p, &mut rw_p, &mut dn_p,
+                       &mut tr_p);
+            let threads = thread_counts[k];
+            assert_eq!(obs_s, obs_p,
+                       "{name} step {t}: obs, {threads} threads");
+            assert_eq!(
+                rw_s.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                rw_p.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                "{name} step {t}: rewards, {threads} threads"
+            );
+            assert_eq!(dn_s, dn_p,
+                       "{name} step {t}: dones, {threads} threads");
+            assert_eq!(tr_s, tr_p,
+                       "{name} step {t}: trials, {threads} threads");
+        }
+    }
+    assert!(boundaries > 0,
+            "{name}: run never crossed an episode boundary");
+    let reference = serial.snapshot();
+    for (k, p) in pars.iter().enumerate() {
+        assert_eq!(reference, p.snapshot(),
+                   "{name}: internal SoA buffers / RNG states, \
+                    {} threads", thread_counts[k]);
+    }
+}
+
+/// Three XLand registry families with task resampling across episode
+/// boundaries, threads {1, 2, 8}.
+#[test]
+fn xland_families_thread_parity_with_task_resampling() {
+    let tasks = small_tasks(12);
+    for (name, seed) in [
+        ("XLand-MiniGrid-R1-9x9", 21u64),
+        ("XLand-MiniGrid-R4-13x13", 22),
+        ("XLand-MiniGrid-R9-16x16", 23),
+    ] {
+        // b = 9: odd on purpose (uneven chunks) and > 8 so the
+        // 8-thread engine is not clamped
+        assert_thread_parity(name, 9, 30, seed, 7, Some(&tasks),
+                             &[1, 2, 8]);
+    }
+}
+
+/// A MiniGrid family (fixed task, no source) stays thread-parallel
+/// bitwise too — the no-resample path.
+#[test]
+fn minigrid_family_thread_parity_without_source() {
+    assert_thread_parity("MiniGrid-DoorKey-8x8", 8, 24, 31, 6, None,
+                         &[1, 2, 8]);
+}
+
+/// The headline bugfix, end to end through `NativePool`: the rollout
+/// runs past the 9x9 episode limit (243 steps) under a multi-ruleset
+/// benchmark, so episode boundaries — and therefore benchmark task
+/// resampling — are crossed (pre-fix, each env replayed its reset-time
+/// ruleset forever), and the whole run stays thread-count invariant.
+#[test]
+fn native_pool_resamples_tasks_and_is_thread_invariant() {
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Small.config(), 16).unwrap();
+    let bench = Arc::new(Benchmark { name: "s".into(), rulesets });
+    let run = |threads: usize| {
+        let cfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", 8,
+                                           16, &bench)
+            .unwrap()
+            .with_threads(threads);
+        let mut pool = NativePool::new(cfg);
+        let mut rng = Rng::new(5);
+        pool.reset(&bench, &mut rng);
+        let mut totals = (0.0f64, 0u64, 0u64);
+        for _ in 0..20 {
+            let (r, e, t) = pool.rollout(16, &mut rng);
+            totals.0 += r;
+            totals.1 += e;
+            totals.2 += t;
+        }
+        // 320 steps > 243 = max_steps: every env crossed an episode
+        // boundary and drew a fresh task from the benchmark
+        assert!(totals.1 >= 8, "expected every env to finish an episode");
+        (totals.0.to_bits(), totals.1, totals.2, pool.obs().to_vec())
+    };
+    let one = run(1);
+    assert_eq!(one, run(2), "threads=2 changed the rollout");
+    assert_eq!(one, run(8), "threads=8 changed the rollout");
+}
+
+/// Engine-level: per-shard chunk stats are independent of the stepping
+/// thread count (shards x threads compose without changing streams).
+#[test]
+fn native_engine_streams_independent_of_threads() {
+    let collect = |threads: usize| -> Vec<Vec<(u64, u64, u64, u64)>> {
+        let (rulesets, _) =
+            generate_benchmark(&Preset::Trivial.config(), 32).unwrap();
+        let bench = Arc::new(Benchmark { name: "t".into(), rulesets });
+        let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", 16,
+                                            8, &bench)
+            .unwrap()
+            .with_threads(threads);
+        let cfg = ShardConfig { shards: 2, overlap: Overlap::Off,
+                                seed: 11, rooms: 1 };
+        let engine =
+            RolloutEngine::launch_native(ncfg, bench, cfg).unwrap();
+        let mut out = vec![Vec::new(); 2];
+        engine
+            .collect(3, |c| {
+                out[c.shard].push((c.steps, c.episodes, c.trials,
+                                   c.reward_sum.to_bits()));
+            })
+            .unwrap();
+        out
+    };
+    let serial = collect(1);
+    assert_eq!(serial, collect(4),
+               "--threads must not change per-shard streams");
+}
+
+/// Parallel benchmark generation equals serial generation — as sets
+/// (the issue's contract) and in fact exactly, order included.
+#[test]
+fn parallel_benchmark_generation_set_equality() {
+    for preset in [Preset::Trivial, Preset::High] {
+        let cfg = preset.config();
+        let (serial, _) = generate_benchmark_par(&cfg, 500, 1).unwrap();
+        let (par, _) = generate_benchmark_par(&cfg, 500, 8).unwrap();
+        let serial_set: std::collections::HashSet<Vec<u8>> =
+            serial.iter().map(ruleset_key).collect();
+        let par_set: std::collections::HashSet<Vec<u8>> =
+            par.iter().map(ruleset_key).collect();
+        assert_eq!(serial_set, par_set, "{preset:?}: set equality");
+        assert_eq!(serial, par, "{preset:?}: exact equality");
+    }
+}

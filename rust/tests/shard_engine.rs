@@ -198,7 +198,7 @@ fn native_engine_overlap_equivalence() {
 
     let run = |overlap: Overlap| -> Vec<Vec<(u64, u64, u64, i64)>> {
         let (rulesets, _) =
-            generate_benchmark(&Preset::Trivial.config(), 32);
+            generate_benchmark(&Preset::Trivial.config(), 32).unwrap();
         let bench = Arc::new(Benchmark { name: "t".into(), rulesets });
         let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", 16,
                                             8, &bench)
@@ -252,7 +252,7 @@ fn engine_overlap_equivalence_with_artifacts() {
 
     let run = |overlap: Overlap| -> Vec<Vec<(u64, u64, u64, i64)>> {
         let (rulesets, _) =
-            generate_benchmark(&Preset::Trivial.config(), 64);
+            generate_benchmark(&Preset::Trivial.config(), 64).unwrap();
         let bench = Arc::new(Benchmark { name: "t".into(), rulesets });
         let cfg = ShardConfig { shards: 2, overlap, seed: 7, rooms: 1 };
         let engine = RolloutEngine::launch(dir.clone(), name.clone(),

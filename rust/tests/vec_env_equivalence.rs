@@ -96,7 +96,8 @@ fn assert_equivalence(name: &str, b: usize, steps: usize, seed: u64,
 }
 
 fn small_tasks(n: usize) -> Vec<Ruleset> {
-    let (rulesets, _) = generate_benchmark(&Preset::Small.config(), n);
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Small.config(), n).unwrap();
     rulesets
 }
 
