@@ -53,6 +53,13 @@ fn main() -> Result<()> {
         train_bench.num_rulesets(), TRAIN_GOALS,
         test_bench.num_rulesets()
     );
+    // train and eval share one observation contract (shared EnvParams)
+    let params = xmgrid::env::api::EnvParams::new(
+        trainer.family.h, trainer.family.w, trainer.family.mr,
+        trainer.family.mi);
+    println!("obs spec: {} | action spec: {}",
+             params.obs_spec().to_json(),
+             params.action_spec().to_json());
 
     trainer.resample_tasks(&train_bench)?;
     for i in 1..=iters {

@@ -12,8 +12,11 @@ use std::path::Path;
 use xmgrid::benchgen::{generate_benchmark, Preset};
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::EnvPool;
+use xmgrid::env::api::{BatchEnvironment, DirectionObs, EnvParams,
+                       Environment, ScalarEnv, SingleEnv};
 use xmgrid::env::registry;
 use xmgrid::env::state::{reset, step, EnvOptions};
+use xmgrid::env::Grid;
 use xmgrid::render::{render_grid, render_obs};
 use xmgrid::runtime::Runtime;
 use xmgrid::util::rng::Rng;
@@ -49,6 +52,32 @@ fn main() -> Result<()> {
         total += out.reward as f64;
     }
     println!("100 random steps -> total reward {total:.3}");
+
+    // --- the unified TimeStep API + a wrapper stack ---------------------
+    // ScalarEnv speaks the dm_env-style Environment trait; SingleEnv
+    // lifts it into the batch API so the same wrappers that extend
+    // VecEnv/NativePool observations compose over it.
+    let (mut tasks2, _) =
+        generate_benchmark(&Preset::Trivial.config(), 4)?;
+    let mut env = ScalarEnv::new(EnvParams::new(9, 9, 1, 2),
+                                 Grid::empty_room(9, 9),
+                                 tasks2.pop().unwrap(), 243,
+                                 rng.split());
+    let first = env.reset(rng.split());
+    println!("\nTimeStep API: step_type {:?}, obs spec {} (len {})",
+             first.step_type,
+             env.obs_spec().to_json(), env.obs_spec().len());
+    let ts = env.step(rng.below(6) as i32);
+    println!("one step -> reward {:.3}, discount {}, trial_done {}",
+             ts.reward, ts.discount, ts.trial_done);
+
+    let mut wrapped = DirectionObs::new(SingleEnv::new(env));
+    let mut obs_buf = vec![0i32; wrapped.obs_len()];
+    let (mut rw, mut dn, mut tr) = ([0f32], [false], [false]);
+    wrapped.step(&[0], &mut obs_buf, &mut rw, &mut dn, &mut tr)?;
+    println!("DirectionObs wrapper: spec {} -> last 4 values {:?}",
+             wrapped.obs_spec().to_json(),
+             &obs_buf[obs_buf.len() - 4..]);
 
     // --- same thing through the AOT JAX executable ----------------------
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

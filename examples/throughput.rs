@@ -16,6 +16,8 @@ use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::{EnvPool, NativeEnvConfig, NativePool};
+use xmgrid::env::api::{rollout_batch, BatchEnvironment, ObsMode,
+                       RolloutBufs};
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::env::Grid;
 use xmgrid::util::args::Args;
@@ -74,6 +76,28 @@ fn main() -> Result<()> {
             / t0.elapsed().as_secs_f64();
         println!("  native-vec threads={threads:<3}       envs=1024   \
                   sps={}", fmt_sps(sps));
+    }
+
+    // --- observation wrapper stacks (`--obs` cost model) -----------------
+    println!("\n== native rollout through obs wrapper stacks (B=256)");
+    for mode in [ObsMode::Symbolic, ObsMode::Rgb] {
+        let t = 64usize;
+        let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13",
+                                            256, t, &bench)?;
+        let pool = NativePool::with_tasks(ncfg, bench.clone());
+        let mut env = mode.wrap(pool);
+        let mut obs0 = vec![0i32; env.obs_len()];
+        env.reset(&mut rng, &mut obs0)?;
+        let mut bufs = RolloutBufs::for_env(env.as_ref());
+        rollout_batch(env.as_mut(), t, &mut rng, &mut bufs)?; // warmup
+        let t0 = Instant::now();
+        for _ in 0..chunks {
+            rollout_batch(env.as_mut(), t, &mut rng, &mut bufs)?;
+        }
+        let sps =
+            (256 * t * chunks) as f64 / t0.elapsed().as_secs_f64();
+        println!("  native obs={mode:<12} envs=256    sps={}",
+                 fmt_sps(sps));
     }
 
     // --- AOT fused rollouts, every compiled batch size -------------------

@@ -53,6 +53,12 @@ fn main() -> Result<()> {
     println!("== train_rl2: {} on {} ({}x{} grid, {} envs, T={})",
              artifact, bench.name, trainer.family.h, trainer.family.w,
              trainer.family.b, trainer.t_len);
+    // the compiled policy consumes the family's symbolic ObsSpec —
+    // derived from the same shared EnvParams the native engines use
+    let params = xmgrid::env::api::EnvParams::new(
+        trainer.family.h, trainer.family.w, trainer.family.mr,
+        trainer.family.mi);
+    println!("   policy input spec: {}", params.obs_spec().to_json());
 
     trainer.resample_tasks(&bench)?;
     if let Some(ea) = &eval_artifact {

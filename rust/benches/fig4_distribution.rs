@@ -3,11 +3,18 @@
 //! → medium → high) offers an increasingly diverse distribution with
 //! growing average rule count and tree depth, while still containing tasks
 //! from the previous benchmarks.
+//!
+//! Needs no artifacts (pure generator). `--json [PATH]` writes
+//! `BENCH_fig4.json` with per-preset mean-rules / mean-depth metrics.
 
 use xmgrid::benchgen::{generate_benchmark, Preset};
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{json_arg_path, JsonReport};
 use xmgrid::util::stats::{int_histogram, mean};
 
 fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::new("fig4");
     let n = std::env::var("FIG4_N")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -24,8 +31,13 @@ fn main() {
         let hist = int_histogram(&counts);
         let mean_rules = mean(
             &counts.iter().map(|&c| c as f64).collect::<Vec<_>>());
+        let mean_depth = mean(&depths);
         println!("\n{:<8} mean rules {:.2}  mean depth {:.2}",
-                 preset.name(), mean_rules, mean(&depths));
+                 preset.name(), mean_rules, mean_depth);
+        report.metric(&format!("mean_rules_{}", preset.name()),
+                      mean_rules);
+        report.metric(&format!("mean_depth_{}", preset.name()),
+                      mean_depth);
         let max_count =
             hist.iter().map(|&(_, c)| c).max().unwrap_or(1) as f64;
         for (rules, count) in &hist {
@@ -39,4 +51,9 @@ fn main() {
         "\n# expected shape: trivial all-zero; small mass at 0-3; medium \
          shifted right; high widest with the deepest trees"
     );
+    if let Some(path) = json_arg_path(&args, "fig4") {
+        report.note(&format!("{n} rulesets per preset"));
+        report.write(&path).expect("writing bench json");
+        println!("# wrote {}", path.display());
+    }
 }

@@ -34,15 +34,8 @@ use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::env::Grid;
 use xmgrid::runtime::Runtime;
 use xmgrid::util::args::Args;
-use xmgrid::util::bench::{bench, json_arg_path, JsonReport};
+use xmgrid::util::bench::{bench, env_usize, json_arg_path, JsonReport};
 use xmgrid::util::rng::Rng;
-
-fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
 
 fn main() {
     let args = Args::from_env();

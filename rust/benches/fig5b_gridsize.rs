@@ -1,47 +1,139 @@
 //! Fig. 5b: simulation throughput vs grid size. Paper claim: throughput
 //! degrades markedly with grid size and saturates earlier.
+//!
+//! Sections, in order:
+//! 1. native vectorized backend across registry grid sizes (always
+//!    runs, zero artifacts);
+//! 2. artifact-backed fused rollouts (skipped with a note when no PJRT
+//!    runtime / artifacts are present).
+//!
+//! `--json [PATH]` writes `BENCH_fig5b.json`. Env knobs: `XMG_MAX_B`
+//! caps the batch, `XMG_BENCH_T` sets steps per measured rollout.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::EnvPool;
+use xmgrid::coordinator::{EnvPool, NativeEnvConfig, NativePool};
 use xmgrid::runtime::Runtime;
-use xmgrid::util::bench::bench;
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{bench, env_usize, json_arg_path, JsonReport};
 use xmgrid::util::rng::Rng;
 
 fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new(&dir).expect("make artifacts first");
+    let args = Args::from_env();
+    let mut report = JsonReport::new("fig5b");
+    let max_b = env_usize("XMG_MAX_B", 1024);
+    let t_steps = env_usize("XMG_BENCH_T", 64);
+
     let (rulesets, _) =
         generate_benchmark(&Preset::Trivial.config(), 256).unwrap();
-    let tasks = Benchmark { name: "trivial".into(), rulesets };
-    let mut rng = Rng::new(0);
+    let tasks = Arc::new(Benchmark { name: "trivial".into(), rulesets });
 
     println!("# Fig 5b: simulation throughput vs grid size");
     println!("# paper: larger grids are significantly slower");
-    let mut rolls: Vec<_> =
-        rt.manifest.of_kind("env_rollout").into_iter().cloned().collect();
-    rolls.sort_by_key(|s| {
-        (s.meta_usize("H").unwrap(), s.meta_usize("B").unwrap())
-    });
-    for spec in &rolls {
-        let fam = EnvFamily::from_spec(spec).unwrap();
-        // the grid-size series: same batch, varying H
-        if fam.b != 1024 {
-            continue;
-        }
-        let t = spec.meta_usize("T").unwrap();
-        let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
-        let rs = pool.sample_rulesets(&tasks, &mut rng);
-        pool.reset(&rs, &mut rng).unwrap();
+
+    // --- native vectorized backend across grid sizes --------------------
+    let b = 1024usize.min(max_b);
+    println!("\n# native vectorized backend (B={b}, T={t_steps})");
+    for env_name in ["XLand-MiniGrid-R1-9x9", "XLand-MiniGrid-R1-13x13",
+                     "XLand-MiniGrid-R1-17x17", "XLand-MiniGrid-R6-19x19",
+                     "XLand-MiniGrid-R9-25x25"]
+    {
+        let ncfg =
+            NativeEnvConfig::for_env(env_name, b, t_steps, &tasks)
+                .unwrap();
+        let mut pool = NativePool::new(ncfg);
+        let mut rng = Rng::new(0);
+        pool.reset(&tasks, &mut rng);
         let mut r = Rng::new(7);
-        let result = bench(&spec.name, 1, 1, || {
-            pool.rollout(&rt, t, &mut r).unwrap();
+        let result = bench(env_name, 1, 2, || {
+            pool.rollout(t_steps, &mut r);
         });
-        let sps = (fam.b * t) as f64 / result.min_secs;
-        println!("grid={:<2}x{:<2} rules={:<2} envs={:<5} steps/s={:<12.0} ({})",
-                 fam.h, fam.w, fam.mr, fam.b, sps, fmt_sps(sps));
+        let sps = (b * t_steps) as f64 / result.min_secs;
+        let (h, w) = (ncfg.params.h, ncfg.params.w);
+        println!("grid={h:<2}x{w:<2} envs={b:<6} steps/s={sps:<12.0} \
+                  ({})", fmt_sps(sps));
+        report.add(&format!("native-g{h}x{w}-b{b}"), b, t_steps,
+                   &result);
+    }
+
+    // --- artifact-backed fused rollouts ---------------------------------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            let mut rng = Rng::new(0);
+            let mut rolls: Vec<_> = rt
+                .manifest
+                .of_kind("env_rollout")
+                .into_iter()
+                .cloned()
+                .collect();
+            rolls.sort_by_key(|s| {
+                (s.meta_usize("H").unwrap_or(0),
+                 s.meta_usize("B").unwrap_or(0))
+            });
+            // the grid-size series: one batch size, varying H — the
+            // largest compiled B that fits the XMG_MAX_B cap
+            let target_b = rolls
+                .iter()
+                .filter_map(|s| s.meta_usize("B").ok())
+                .filter(|&b| b <= max_b)
+                .max();
+            let target_b = match target_b {
+                Some(b) => b,
+                None => {
+                    println!("\n# xla section skipped: no env_rollout \
+                              artifact with B <= {max_b}");
+                    usize::MAX // matches no artifact below
+                }
+            };
+            if target_b != usize::MAX {
+                println!("\n# xla fused rollouts (B={target_b} \
+                          artifacts)");
+            }
+            for spec in &rolls {
+                let Ok(fam) = EnvFamily::from_spec(spec) else {
+                    continue;
+                };
+                if fam.b != target_b {
+                    continue;
+                }
+                let Ok(t) = spec.meta_usize("T") else { continue };
+                let mut pool = match EnvPool::new(&rt, fam, 1) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        println!("({}: skipped: {e})", spec.name);
+                        continue;
+                    }
+                };
+                let rs = pool.sample_rulesets(&tasks, &mut rng);
+                pool.reset(&rs, &mut rng).unwrap();
+                let mut r = Rng::new(7);
+                let result = bench(&spec.name, 1, 1, || {
+                    pool.rollout(&rt, t, &mut r).unwrap();
+                });
+                let sps = (fam.b * t) as f64 / result.min_secs;
+                println!(
+                    "grid={:<2}x{:<2} rules={:<2} envs={:<5} \
+                     steps/s={:<12.0} ({})",
+                    fam.h, fam.w, fam.mr, fam.b, sps, fmt_sps(sps)
+                );
+                report.add(&format!("xla-g{}x{}-b{}", fam.h, fam.w,
+                                    fam.b),
+                           fam.b, t, &result);
+            }
+        }
+        Err(e) => {
+            println!("\n# xla section skipped: {e}");
+            report.note("xla section skipped (no runtime)");
+        }
+    }
+
+    if let Some(path) = json_arg_path(&args, "fig5b") {
+        report.write(&path).expect("writing bench json");
+        println!("# wrote {}", path.display());
     }
 }

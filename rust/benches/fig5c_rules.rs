@@ -1,18 +1,31 @@
 //! Fig. 5c: simulation throughput vs the number of rules (16x16 grid, the
 //! paper's setup: "we simply replicated the same NEAR rule multiple
 //! times"). Paper claim: monotone decrease, no saturation up to 24 rules.
+//!
+//! Sections, in order:
+//! 1. native vectorized backend (always runs, zero artifacts): a
+//!    `VecEnv` driven through the unified `BatchEnvironment` API with
+//!    rule-table capacity = rule count;
+//! 2. artifact-backed fused rollouts (skipped with a note when absent).
+//!
+//! `--json [PATH]` writes `BENCH_fig5c.json`. Env knobs: `XMG_MAX_B`
+//! caps the batch, `XMG_BENCH_T` sets steps per measured rollout.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::EnvPool;
+use xmgrid::env::api::{rollout_batch, EnvParams, RolloutBufs};
 use xmgrid::env::rules::Rule;
-use xmgrid::env::state::Ruleset;
+use xmgrid::env::state::{default_max_steps, Ruleset, TaskSource};
 use xmgrid::env::types::*;
-use xmgrid::env::{Cell, Goal};
+use xmgrid::env::vector::VecEnv;
+use xmgrid::env::{Cell, Goal, Grid};
 use xmgrid::runtime::Runtime;
-use xmgrid::util::bench::bench;
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{bench, env_usize, json_arg_path, JsonReport};
 use xmgrid::util::rng::Rng;
 
 /// Paper protocol: the same NEAR rule replicated `n` times.
@@ -28,33 +41,100 @@ fn replicated_near_ruleset(n: usize) -> Ruleset {
 }
 
 fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = Runtime::new(&dir).expect("make artifacts first");
-    let mut rng = Rng::new(0);
+    let args = Args::from_env();
+    let mut report = JsonReport::new("fig5c");
+    let max_b = env_usize("XMG_MAX_B", 1024);
+    let t_steps = env_usize("XMG_BENCH_T", 64);
 
     println!("# Fig 5c: simulation throughput vs number of rules (16x16)");
     println!("# paper: monotone decrease with rule count");
-    let mut rolls: Vec<_> = rt
-        .manifest
-        .of_kind("env_rollout")
-        .into_iter()
-        .filter(|s| s.meta_usize("H").unwrap() == 16)
-        .cloned()
-        .collect();
-    rolls.sort_by_key(|s| s.meta_usize("MR").unwrap());
-    for spec in &rolls {
-        let fam = EnvFamily::from_spec(spec).unwrap();
-        let t = spec.meta_usize("T").unwrap();
-        let mut pool = EnvPool::new(&rt, fam, 1).unwrap();
-        let ruleset = replicated_near_ruleset(fam.mr);
-        let rulesets: Vec<&Ruleset> = (0..fam.b).map(|_| &ruleset).collect();
-        pool.reset(&rulesets, &mut rng).unwrap();
+
+    // --- native vectorized backend --------------------------------------
+    let b = 1024usize.min(max_b);
+    let (h, w) = (16usize, 16usize);
+    println!("\n# native vectorized backend (16x16, B={b}, T={t_steps})");
+    for n_rules in [1usize, 3, 6, 12, 24] {
+        let ruleset = replicated_near_ruleset(n_rules);
+        let params = EnvParams::new(h, w, n_rules, 2);
+        let mut venv = VecEnv::new(params, b);
+        let tasks: Arc<dyn TaskSource> =
+            Arc::new(vec![ruleset.clone()]);
+        venv.set_task_source(tasks);
+        let grids: Vec<Grid> =
+            (0..b).map(|_| Grid::empty_room(h, w)).collect();
+        let refs: Vec<&Ruleset> = (0..b).map(|_| &ruleset).collect();
+        let maxs = vec![default_max_steps(h, w); b];
+        let mut seed = Rng::new(0);
+        let rngs: Vec<Rng> = (0..b).map(|_| seed.split()).collect();
+        let mut obs = vec![0i32; venv.obs_len()];
+        venv.reset_all(&grids, &refs, &maxs, &rngs, &mut obs);
+
+        let mut bufs = RolloutBufs::for_env(&venv);
         let mut r = Rng::new(7);
-        let result = bench(&spec.name, 1, 1, || {
-            pool.rollout(&rt, t, &mut r).unwrap();
+        let result = bench(&format!("native-rules{n_rules}"), 1, 2, || {
+            rollout_batch(&mut venv, t_steps, &mut r, &mut bufs)
+                .unwrap();
         });
-        let sps = (fam.b * t) as f64 / result.min_secs;
-        println!("rules={:<2} envs={:<5} steps/s={:<12.0} ({})", fam.mr,
-                 fam.b, sps, fmt_sps(sps));
+        let sps = (b * t_steps) as f64 / result.min_secs;
+        println!("rules={n_rules:<2} envs={b:<6} steps/s={sps:<12.0} \
+                  ({})", fmt_sps(sps));
+        report.add(&format!("native-rules{n_rules}-b{b}"), b, t_steps,
+                   &result);
+    }
+
+    // --- artifact-backed fused rollouts ---------------------------------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("\n# xla fused rollouts (16x16 artifacts)");
+            let mut rng = Rng::new(0);
+            let mut rolls: Vec<_> = rt
+                .manifest
+                .of_kind("env_rollout")
+                .into_iter()
+                .filter(|s| s.meta_usize("H").unwrap_or(0) == 16)
+                .cloned()
+                .collect();
+            rolls.sort_by_key(|s| s.meta_usize("MR").unwrap_or(0));
+            if rolls.is_empty() {
+                println!("(no 16x16 env_rollout artifacts; run full \
+                          `make artifacts`)");
+            }
+            for spec in &rolls {
+                let Ok(fam) = EnvFamily::from_spec(spec) else {
+                    continue;
+                };
+                let Ok(t) = spec.meta_usize("T") else { continue };
+                let mut pool = match EnvPool::new(&rt, fam, 1) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        println!("({}: skipped: {e})", spec.name);
+                        continue;
+                    }
+                };
+                let ruleset = replicated_near_ruleset(fam.mr);
+                let rulesets: Vec<&Ruleset> =
+                    (0..fam.b).map(|_| &ruleset).collect();
+                pool.reset(&rulesets, &mut rng).unwrap();
+                let mut r = Rng::new(7);
+                let result = bench(&spec.name, 1, 1, || {
+                    pool.rollout(&rt, t, &mut r).unwrap();
+                });
+                let sps = (fam.b * t) as f64 / result.min_secs;
+                println!("rules={:<2} envs={:<5} steps/s={:<12.0} ({})",
+                         fam.mr, fam.b, sps, fmt_sps(sps));
+                report.add(&format!("xla-rules{}-b{}", fam.mr, fam.b),
+                           fam.b, t, &result);
+            }
+        }
+        Err(e) => {
+            println!("\n# xla section skipped: {e}");
+            report.note("xla section skipped (no runtime)");
+        }
+    }
+
+    if let Some(path) = json_arg_path(&args, "fig5c") {
+        report.write(&path).expect("writing bench json");
+        println!("# wrote {}", path.display());
     }
 }

@@ -9,31 +9,28 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::benchgen::Benchmark;
+use crate::env::api::{ActionSpec, BatchEnvironment, EnvParams, ObsSpec};
 use crate::env::layouts::xland_layout;
 use crate::env::registry::XLAND_ENVS;
-use crate::env::state::{default_max_steps, EnvOptions, Ruleset,
-                        TaskSource};
-use crate::env::vector::VecEnvConfig;
+use crate::env::state::{default_max_steps, Ruleset, TaskSource};
 use crate::env::Grid;
 use crate::util::rng::Rng;
 
 use super::workers::ParVecEnv;
 
-/// Shape of a native vectorized env family — the artifact-free analogue
-/// of [`super::pool::EnvFamily`] plus the fused step count `T` and the
-/// stepping-worker count.
+/// Shape of a native vectorized env family: the shared [`EnvParams`]
+/// (grid dims, table capacities, view options — the same struct
+/// `VecEnvConfig` aliases) plus the layout/batch/schedule knobs the
+/// coordinator adds. The artifact-free analogue of
+/// [`super::pool::EnvFamily`].
 #[derive(Clone, Copy, Debug)]
 pub struct NativeEnvConfig {
-    pub h: usize,
-    pub w: usize,
+    /// shared env-shape params (single source for H/W/MR/MI/view)
+    pub params: EnvParams,
     pub rooms: usize,
-    /// rule-table capacity (max rules over the task source)
-    pub mr: usize,
-    /// init-tile capacity (max init objects over the task source)
-    pub mi: usize,
     /// env batch per replica
     pub b: usize,
     /// steps per rollout chunk (the fused-T analogue)
@@ -65,21 +62,16 @@ impl NativeEnvConfig {
             .iter()
             .map(|r| r.rules.len())
             .max()
-            .unwrap_or(0)
-            .max(1);
+            .unwrap_or(0);
         let mi = bench
             .rulesets
             .iter()
             .map(|r| r.init_tiles.len())
             .max()
-            .unwrap_or(0)
-            .max(1);
+            .unwrap_or(0);
         Ok(NativeEnvConfig {
-            h: spec.h,
-            w: spec.w,
+            params: EnvParams::new(spec.h, spec.w, mr, mi),
             rooms: spec.rooms,
-            mr,
-            mi,
             b,
             t,
             threads: 1,
@@ -100,27 +92,35 @@ impl NativeEnvConfig {
 /// --backend native`. Data buffers (obs, per-chunk staging, action
 /// scratch) are allocated once and recycled; the rollout hot loop
 /// costs only the per-chunk job dispatch, never per-step allocation.
+///
+/// Also one of the four surfaces of the unified
+/// [`BatchEnvironment`] API: construct with
+/// [`NativePool::with_tasks`] and the trait's `reset` re-layouts and
+/// resamples from the installed benchmark.
 pub struct NativePool {
     pub cfg: NativeEnvConfig,
     venv: ParVecEnv,
     obs: Vec<i32>,
+    /// benchmark installed at construction (`with_tasks`) — the task
+    /// source the trait-level `reset` draws from
+    tasks: Option<Arc<Benchmark>>,
 }
 
 impl NativePool {
     pub fn new(cfg: NativeEnvConfig) -> NativePool {
-        let venv = ParVecEnv::new(
-            VecEnvConfig {
-                h: cfg.h,
-                w: cfg.w,
-                max_rules: cfg.mr,
-                max_init: cfg.mi,
-                opts: EnvOptions::default(),
-            },
-            cfg.b,
-            cfg.threads,
-        );
+        let venv = ParVecEnv::new(cfg.params, cfg.b, cfg.threads);
         let obs_len = venv.obs_len();
-        NativePool { cfg, venv, obs: vec![0; obs_len] }
+        NativePool { cfg, venv, obs: vec![0; obs_len], tasks: None }
+    }
+
+    /// [`NativePool::new`] with the benchmark task distribution as a
+    /// first-class constructor input, enabling the self-contained
+    /// [`BatchEnvironment::reset`].
+    pub fn with_tasks(cfg: NativeEnvConfig, bench: Arc<Benchmark>)
+                      -> NativePool {
+        let mut pool = NativePool::new(cfg);
+        pool.tasks = Some(bench);
+        pool
     }
 
     /// Latest observations, `[B, V, V, 2]` i32.
@@ -137,14 +137,13 @@ impl NativePool {
     /// replaying the reset-time ruleset forever.
     pub fn reset(&mut self, bench: &Arc<Benchmark>, rng: &mut Rng) {
         let b = self.cfg.b;
+        let (h, w) = (self.cfg.params.h, self.cfg.params.w);
         let rulesets: Vec<&Ruleset> =
             (0..b).map(|_| bench.sample_ruleset(rng)).collect();
         let grids: Vec<Grid> = (0..b)
-            .map(|_| xland_layout(self.cfg.rooms, self.cfg.h, self.cfg.w,
-                                  rng))
+            .map(|_| xland_layout(self.cfg.rooms, h, w, rng))
             .collect();
-        let max_steps =
-            vec![default_max_steps(self.cfg.h, self.cfg.w); b];
+        let max_steps = vec![default_max_steps(h, w); b];
         let rngs: Vec<Rng> = (0..b).map(|_| rng.split()).collect();
         self.venv.reset_all(&grids, &rulesets, &max_steps, &rngs,
                             &mut self.obs);
@@ -161,6 +160,59 @@ impl NativePool {
         let totals = self.venv.rollout(t, rng);
         self.venv.copy_obs_into(&mut self.obs);
         totals
+    }
+}
+
+/// The `ParVecEnv`-backed pool under the unified batch API (the
+/// "parallel native" surface). The trait `reset` requires the
+/// benchmark installed via [`NativePool::with_tasks`] and reproduces
+/// the inherent [`NativePool::reset`] bit for bit.
+impl BatchEnvironment for NativePool {
+    fn batch(&self) -> usize {
+        self.cfg.b
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.cfg.params.obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.cfg.params.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.cfg.params.max_rules
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        anyhow::ensure!(obs_out.len() == self.venv.obs_len(),
+                        "obs buffer size");
+        let bench = self
+            .tasks
+            .clone()
+            .context("NativePool: no task source installed; construct \
+                      with NativePool::with_tasks")?;
+        NativePool::reset(self, &bench, rng);
+        obs_out.copy_from_slice(&self.obs);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        // observations go to the caller's buffer only — the `obs()`
+        // cache tracks the inherent reset/rollout paths, and syncing it
+        // here would tax every wrapped step with a dead B*V*V*2 memcpy
+        self.venv.step_all(actions, obs_out, rewards, dones, trial_dones);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.venv.copy_agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.venv.copy_task_rows_into(out)
     }
 }
 
@@ -181,8 +233,8 @@ mod tests {
         let cfg = NativeEnvConfig::for_env("XLand-MiniGrid-R4-13x13", 16,
                                            8, &bench)
             .unwrap();
-        assert_eq!((cfg.h, cfg.w, cfg.rooms), (13, 13, 4));
-        assert!(cfg.mr >= 1 && cfg.mi >= 1);
+        assert_eq!((cfg.params.h, cfg.params.w, cfg.rooms), (13, 13, 4));
+        assert!(cfg.params.max_rules >= 1 && cfg.params.max_init >= 1);
         assert_eq!(cfg.threads, 1);
         assert_eq!(cfg.with_threads(0).threads, 1);
         assert_eq!(cfg.with_threads(4).threads, 4);
@@ -225,5 +277,47 @@ mod tests {
         // trials only end on goal achievement here, which random play
         // may or may not hit — just check the aggregate is sane
         assert!(trials <= 16 * 8);
+    }
+
+    /// The trait surface reproduces the inherent pool bitwise: same
+    /// reset (via the installed benchmark), same stepping.
+    #[test]
+    fn trait_surface_matches_inherent_pool() {
+        let bench = tiny_bench();
+        let cfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", 4, 4,
+                                           &bench)
+            .unwrap();
+        let mut a = NativePool::new(cfg);
+        let mut b = NativePool::with_tasks(cfg, bench.clone());
+        let mut rng_a = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        a.reset(&bench, &mut rng_a);
+        let mut obs_b = vec![0i32; 4 * a.cfg.params.obs_len()];
+        BatchEnvironment::reset(&mut b, &mut rng_b, &mut obs_b).unwrap();
+        assert_eq!(a.obs(), &obs_b[..], "trait reset == inherent reset");
+
+        let actions = [0i32, 1, 2, 3];
+        let mut obs_a = vec![0i32; obs_b.len()];
+        let (mut rw, mut dn, mut tr) =
+            (vec![0f32; 4], vec![false; 4], vec![false; 4]);
+        // step the inherent pool's engine through the trait on `a` too
+        BatchEnvironment::step(&mut a, &actions, &mut obs_a, &mut rw,
+                               &mut dn, &mut tr)
+            .unwrap();
+        let (mut rw2, mut dn2, mut tr2) =
+            (vec![0f32; 4], vec![false; 4], vec![false; 4]);
+        BatchEnvironment::step(&mut b, &actions, &mut obs_b, &mut rw2,
+                               &mut dn2, &mut tr2)
+            .unwrap();
+        assert_eq!(obs_a, obs_b);
+        assert_eq!(rw, rw2);
+
+        let mut dirs = vec![0i32; 4];
+        b.agent_dirs_into(&mut dirs);
+        assert!(dirs.iter().all(|d| (0..4).contains(d)));
+        let row = b.cfg.params.task_row_len();
+        let mut rows = vec![0i32; 4 * row];
+        b.task_rows_into(&mut rows);
+        assert!(rows.iter().any(|&x| x != 0), "encoded tasks present");
     }
 }

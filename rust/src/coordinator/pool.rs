@@ -1,15 +1,35 @@
 //! Vectorized environment pool: owns the batched state tensors for one
 //! artifact family (H, W, MR, MI, B) and drives reset / random-policy
 //! rollout executables.
+//!
+//! With a [`TaskSource`] installed ([`EnvPool::set_task_source`]), the
+//! pool closes the xla side of the §2.1 task-resampling protocol: the
+//! compiled kernels carry the ruleset tables as device state and replay
+//! them at every episode auto-reset, so the pool performs a *full
+//! host-side episode restart* for done envs — fresh task drawn from the
+//! source, new ruleset rows re-encoded, objects re-placed on the base
+//! grid and the cached observation refreshed, so the new episode's
+//! goal/rules and its placed objects always belong to the same task.
+//! This runs exactly per step on the `env_step` path, and between fused
+//! chunks on the `env_rollout` path (episode boundaries *inside* a
+//! chunk keep the previous task until the chunk ends, where the current
+//! episode is restarted under the fresh task; chunk-boundary
+//! granularity is the host-side limit of the AOT design and is
+//! documented in ARCHITECTURE.md).
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
 use crate::benchgen::Benchmark;
+use crate::env::api::{ActionSpec, BatchEnvironment, ObsSpec};
 use crate::env::grid::Grid;
 use crate::env::layouts::xland_layout;
-use crate::env::state::{default_max_steps, Ruleset};
-use crate::runtime::state::{reset_inputs, NUM_STATE_FIELDS};
+use crate::env::observation::observe;
+use crate::env::state::{default_max_steps, place_objects, EnvOptions,
+                        Ruleset, TaskSource};
+use crate::env::types::{GOAL_ENC, POCKET_EMPTY, RULE_ENC};
+use crate::runtime::state::{encode_ruleset, reset_inputs,
+                            NUM_STATE_FIELDS};
 use crate::runtime::{Artifact, Runtime, Tensor};
 use crate::util::rng::Rng;
 
@@ -49,16 +69,34 @@ impl EnvFamily {
     }
 }
 
+/// Index of each host-rewritten field in the 11 state tensors
+/// (aot.STATE_FIELDS order).
+const STATE_BASE: usize = 0;
+const STATE_GRID: usize = 1;
+const STATE_POS: usize = 2;
+const STATE_DIR: usize = 3;
+const STATE_POCKET: usize = 4;
+const STATE_RULES: usize = 5;
+const STATE_GOAL: usize = 6;
+const STATE_INIT: usize = 7;
+const STATE_STEP: usize = 8;
+
 /// Batched environment pool driving AOT executables.
 pub struct EnvPool {
     pub family: EnvFamily,
     reset_art: Arc<Artifact>,
+    /// single-step executable, loaded on demand
+    /// ([`EnvPool::load_step_artifact`]) for the per-step trait path
+    step_art: Option<Arc<Artifact>>,
     /// 11 state tensors (aot.STATE_FIELDS order)
     pub state: Vec<Tensor>,
     /// observation from the latest reset/step
     pub last_obs: Tensor,
     /// number of rooms for base-grid construction (XLand layouts)
     pub rooms: usize,
+    /// §2.1 task distribution + its private draw stream (host-side
+    /// re-encode of done envs' rows; see module docs)
+    tasks: Option<(Arc<dyn TaskSource>, Rng)>,
 }
 
 impl EnvPool {
@@ -68,10 +106,33 @@ impl EnvPool {
         Ok(EnvPool {
             family,
             reset_art,
+            step_art: None,
             state: Vec::new(),
             last_obs: Tensor::I32(vec![]),
             rooms,
+            tasks: None,
         })
+    }
+
+    /// Install the episode-reset task distribution. `rng` is the
+    /// private stream task draws come from (one `below(num_tasks)` per
+    /// done env, ascending env order — deterministic and independent of
+    /// the rollout action stream). Every task is validated against the
+    /// artifact's MR/MI capacities here, so an oversized task fails at
+    /// launch instead of mid-run at its first draw.
+    pub fn set_task_source(&mut self, tasks: Arc<dyn TaskSource>,
+                           rng: Rng) {
+        let f = self.family;
+        crate::env::api::EnvParams::new(f.h, f.w, f.mr, f.mi)
+            .validate_task_source(tasks.as_ref());
+        self.tasks = Some((tasks, rng));
+    }
+
+    /// Load the family's `env_step` artifact so the pool can serve the
+    /// per-step [`BatchEnvironment::step`] path.
+    pub fn load_step_artifact(&mut self, rt: &Runtime) -> Result<()> {
+        self.step_art = Some(rt.load(&self.family.step_name())?);
+        Ok(())
     }
 
     /// Sample one ruleset per env slot from the benchmark.
@@ -102,6 +163,92 @@ impl EnvPool {
         Ok(())
     }
 
+    /// Host-side episode restart for env `i` under `task`: re-encode
+    /// the ruleset rows, restore the base grid and place the new task's
+    /// objects + agent with the resample stream (the same
+    /// `place_objects` the oracle reset runs), clear pocket and step
+    /// count, and refresh the env's cached observation row — so the new
+    /// episode's goal/rules and its placed objects belong to one task.
+    fn restart_env_host(&mut self, i: usize, task: &Ruleset,
+                        rng: &mut Rng) -> Result<()> {
+        let f = self.family;
+        let (rules, goal, init) = encode_ruleset(task, f.mr, f.mi)?;
+        let rw = rules.len();
+        self.state[STATE_RULES].as_i32_mut()[i * rw..(i + 1) * rw]
+            .copy_from_slice(&rules);
+        let gw = goal.len();
+        self.state[STATE_GOAL].as_i32_mut()[i * gw..(i + 1) * gw]
+            .copy_from_slice(&goal);
+        let iw = init.len();
+        self.state[STATE_INIT].as_i32_mut()[i * iw..(i + 1) * iw]
+            .copy_from_slice(&init);
+
+        let ghw = f.h * f.w * 2;
+        let base = Grid::from_flat(
+            f.h, f.w,
+            &self.state[STATE_BASE].as_i32()[i * ghw..(i + 1) * ghw]);
+        let (grid, pos, dir) = place_objects(rng, &base,
+                                             &task.init_tiles);
+        self.state[STATE_GRID].as_i32_mut()[i * ghw..(i + 1) * ghw]
+            .copy_from_slice(&grid.to_flat());
+        self.state[STATE_POS].as_i32_mut()[i * 2] = pos.0;
+        self.state[STATE_POS].as_i32_mut()[i * 2 + 1] = pos.1;
+        self.state[STATE_DIR].as_i32_mut()[i] = dir;
+        self.state[STATE_POCKET].as_i32_mut()[i * 2] =
+            POCKET_EMPTY.tile;
+        self.state[STATE_POCKET].as_i32_mut()[i * 2 + 1] =
+            POCKET_EMPTY.color;
+        self.state[STATE_STEP].as_i32_mut()[i] = 0;
+
+        let opts = EnvOptions::default();
+        let obs = observe(&grid, pos, dir, opts.view_size,
+                          opts.see_through_walls);
+        let v2 = opts.view_size * opts.view_size * 2;
+        obs.write_flat_into(
+            &mut self.last_obs.as_i32_mut()[i * v2..(i + 1) * v2]);
+        Ok(())
+    }
+
+    /// Restart every env whose done flag is set (the compiled
+    /// auto-reset replayed its device-resident table) under a fresh
+    /// task. Draws come from the installed task-source stream in
+    /// ascending env order; without a source this is a no-op.
+    fn resample_done_tasks<I>(&mut self, done: I) -> Result<()>
+    where
+        I: IntoIterator<Item = bool>,
+    {
+        let Some((tasks, mut rng)) = self.tasks.take() else {
+            return Ok(());
+        };
+        let f = self.family;
+        let flags: Vec<bool> = done.into_iter().collect();
+        let mut err = None;
+        if flags.len() != f.b {
+            err = Some(anyhow::anyhow!(
+                "done flags have {} entries, batch is {}",
+                flags.len(), f.b));
+        } else {
+            let n = tasks.num_tasks();
+            for (i, &d) in flags.iter().enumerate() {
+                if !d {
+                    continue;
+                }
+                let t = rng.below(n);
+                if let Err(e) =
+                    self.restart_env_host(i, tasks.task(t), &mut rng)
+                {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        self.tasks = Some((tasks, rng));
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     /// Run one fused random-policy rollout of `t` steps; returns
     /// (reward_sum, episodes_done, trials_done) aggregated over the batch.
     pub fn rollout(&mut self, rt: &Runtime, t: usize, rng: &mut Rng)
@@ -120,7 +267,128 @@ impl EnvPool {
         let episodes: u64 =
             rest[1].as_i32().iter().map(|&x| x as u64).sum();
         let trials: u64 = rest[2].as_i32().iter().map(|&x| x as u64).sum();
+        // §2.1 task resampling, host-side: envs that crossed an episode
+        // boundary inside the chunk get fresh ruleset rows before the
+        // next chunk runs (chunk-boundary granularity; module docs).
+        let done: Vec<bool> =
+            rest[1].as_i32().iter().map(|&c| c > 0).collect();
+        self.resample_done_tasks(done)?;
         Ok((reward_sum, episodes, trials))
+    }
+}
+
+/// The AOT/PJRT pool under the unified batch API: `reset` samples tasks
+/// from the installed source and drives the `env_reset` executable;
+/// `step` drives `env_step` ([`EnvPool::load_step_artifact`] first) and
+/// re-encodes fresh tasks into done envs *exactly* at their episode
+/// boundary — on this path the adapter has per-step done flags, so the
+/// protocol granularity matches the native engines.
+impl BatchEnvironment for EnvPool {
+    fn batch(&self) -> usize {
+        self.family.b
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        // artifacts are lowered at the default view size (aot.VIEW_SIZE)
+        ObsSpec::symbolic(EnvOptions::default().view_size)
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        ActionSpec::default()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.family.mr
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        let tasks = self
+            .tasks
+            .as_ref()
+            .map(|(t, _)| t.clone())
+            .context("EnvPool: no task source installed; call \
+                      set_task_source first")?;
+        let n = tasks.num_tasks();
+        let rulesets: Vec<&Ruleset> = (0..self.family.b)
+            .map(|_| tasks.task(rng.below(n)))
+            .collect();
+        EnvPool::reset(self, &rulesets, rng)?;
+        ensure!(obs_out.len() == self.last_obs.len(), "obs buffer size");
+        obs_out.copy_from_slice(self.last_obs.as_i32());
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        let art = self
+            .step_art
+            .clone()
+            .context("EnvPool: env_step artifact not loaded; call \
+                      load_step_artifact first")?;
+        let b = self.family.b;
+        ensure!(actions.len() == b, "need one action per env");
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        ensure!(rewards.len() == b && dones.len() == b
+                    && trial_dones.len() == b,
+                "per-env output buffers must have batch length");
+        ensure!(!self.state.is_empty(), "EnvPool: reset before stepping");
+        // move the state block into the input list instead of cloning
+        // it (megabytes at B=1024; same discipline as `rollout`). On an
+        // execute error the pool is left un-reset and the next step
+        // fails fast on the emptiness check above.
+        let mut inputs = std::mem::take(&mut self.state);
+        inputs.push(Tensor::I32(actions.to_vec()));
+        let mut out = art.execute(&inputs)?;
+        // outputs: 11 state fields + obs + reward + done + trial_done
+        ensure!(out.len() >= NUM_STATE_FIELDS + 4,
+                "env_step returned {} outputs", out.len());
+        let rest = out.split_off(NUM_STATE_FIELDS);
+        self.state = out;
+        obs_out.copy_from_slice(rest[0].as_i32());
+        rewards.copy_from_slice(rest[1].as_f32());
+        for (d, &x) in dones.iter_mut().zip(rest[2].as_i32()) {
+            *d = x != 0;
+        }
+        for (d, &x) in trial_dones.iter_mut().zip(rest[3].as_i32()) {
+            *d = x != 0;
+        }
+        self.last_obs = rest.into_iter().next().expect("obs output");
+        // per-step path: exact episode-boundary task resampling — done
+        // envs restart host-side under a fresh task, and the caller's
+        // obs rows are refreshed to the restarted episodes' views
+        let done: Vec<bool> = dones.to_vec();
+        self.resample_done_tasks(done)?;
+        if self.tasks.is_some() {
+            let v2 = self.obs_len() / b;
+            let obs = self.last_obs.as_i32();
+            for (i, &d) in dones.iter().enumerate() {
+                if d {
+                    obs_out[i * v2..(i + 1) * v2]
+                        .copy_from_slice(&obs[i * v2..(i + 1) * v2]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        out.copy_from_slice(self.state[STATE_DIR].as_i32());
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        let f = self.family;
+        let rw = f.mr * RULE_ENC;
+        let row = GOAL_ENC + rw;
+        let goals = self.state[STATE_GOAL].as_i32();
+        let rules = self.state[STATE_RULES].as_i32();
+        for i in 0..f.b {
+            let dst = &mut out[i * row..(i + 1) * row];
+            dst[..GOAL_ENC].copy_from_slice(
+                &goals[i * GOAL_ENC..(i + 1) * GOAL_ENC]);
+            dst[GOAL_ENC..].copy_from_slice(
+                &rules[i * rw..(i + 1) * rw]);
+        }
     }
 }
 

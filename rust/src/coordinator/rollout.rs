@@ -36,6 +36,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::benchgen::Benchmark;
+use crate::env::api::{rollout_batch, BatchEnvironment, ObsMode,
+                      RolloutBufs};
+use crate::env::state::TaskSource;
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Rng;
 
@@ -138,24 +141,43 @@ impl RolloutReplica for ShardReplica {
     }
 }
 
+/// How a native replica steps its envs: the fused symbolic fast path
+/// (whole-T rollout shipped worker-side), or per-step through an
+/// `--obs` wrapper stack (observations actually composed every step —
+/// that cost is the point of the fig13-style measurements).
+enum NativeStepper {
+    Fused(NativePool),
+    Wrapped {
+        env: Box<dyn BatchEnvironment>,
+        bufs: RolloutBufs,
+    },
+}
+
 /// Per-shard native vectorized replica: a `VecEnv` batch stepped by the
 /// SoA kernels on the shard's own thread — no PJRT, no artifacts.
 struct NativeReplica {
     shard: usize,
-    pool: NativePool,
+    stepper: NativeStepper,
     rng: Rng,
+    b: usize,
     t: usize,
 }
 
 impl RolloutReplica for NativeReplica {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
         let t0 = Instant::now();
-        let (reward_sum, episodes, trials) =
-            self.pool.rollout(self.t, &mut self.rng);
+        let (reward_sum, episodes, trials) = match &mut self.stepper {
+            NativeStepper::Fused(pool) => {
+                pool.rollout(self.t, &mut self.rng)
+            }
+            NativeStepper::Wrapped { env, bufs } => {
+                rollout_batch(env.as_mut(), self.t, &mut self.rng, bufs)?
+            }
+        };
         Ok(ChunkStats {
             shard: self.shard,
             round,
-            steps: (self.pool.cfg.b * self.t) as u64,
+            steps: (self.b * self.t) as u64,
             reward_sum,
             episodes,
             trials,
@@ -206,6 +228,12 @@ impl RolloutEngine {
             let rulesets = pool.sample_rulesets(&bench, &mut rng);
             pool.reset(&rulesets, &mut rng)
                 .with_context(|| format!("resetting shard {i}"))?;
+            // §2.1 task resampling for the xla backend: the benchmark
+            // becomes the pool's task source and done envs' ruleset
+            // rows are re-encoded host-side between fused chunks
+            // (ROADMAP open item; see coordinator::pool module docs)
+            let tasks: Arc<dyn TaskSource> = bench.clone();
+            pool.set_task_source(tasks, rng.split());
             Ok(ShardReplica { shard: i, rt, pool, rng, t })
         })?;
         Ok(RolloutEngine { pool: EnginePool::Xla(pool), family, t, cfg })
@@ -218,18 +246,44 @@ impl RolloutEngine {
     /// as the AOT path, resets, and steps the SoA kernels.
     pub fn launch_native(ncfg: NativeEnvConfig, bench: Arc<Benchmark>,
                          cfg: ShardConfig) -> Result<RolloutEngine> {
+        RolloutEngine::launch_native_obs(ncfg, bench, cfg,
+                                         ObsMode::Symbolic)
+    }
+
+    /// [`RolloutEngine::launch_native`] with an `--obs` wrapper stack:
+    /// `symbolic` keeps the fused fast path; any other mode steps each
+    /// replica through the wrapper per step, composing the full
+    /// observation record (direction one-hots, goal+rule rows, or the
+    /// rasterized RGB image) every transition.
+    pub fn launch_native_obs(ncfg: NativeEnvConfig, bench: Arc<Benchmark>,
+                             cfg: ShardConfig, obs: ObsMode)
+                             -> Result<RolloutEngine> {
         let seed = cfg.seed;
         let pool = ShardPool::spawn(cfg.shards, move |i| {
             let mut rng = shard_rng(seed, i);
-            let mut pool = NativePool::new(ncfg);
+            let mut pool = NativePool::with_tasks(ncfg, bench.clone());
             pool.reset(&bench, &mut rng);
-            Ok(NativeReplica { shard: i, pool, rng, t: ncfg.t })
+            let stepper = match obs {
+                ObsMode::Symbolic => NativeStepper::Fused(pool),
+                mode => {
+                    let env = mode.wrap(pool);
+                    let bufs = RolloutBufs::for_env(env.as_ref());
+                    NativeStepper::Wrapped { env, bufs }
+                }
+            };
+            Ok(NativeReplica {
+                shard: i,
+                stepper,
+                rng,
+                b: ncfg.b,
+                t: ncfg.t,
+            })
         })?;
         let family = EnvFamily {
-            h: ncfg.h,
-            w: ncfg.w,
-            mr: ncfg.mr,
-            mi: ncfg.mi,
+            h: ncfg.params.h,
+            w: ncfg.params.w,
+            mr: ncfg.params.max_rules,
+            mi: ncfg.params.max_init,
             b: ncfg.b,
         };
         Ok(RolloutEngine {

@@ -30,8 +30,11 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
+use crate::env::api::{ActionSpec, BatchEnvironment, ObsSpec};
 use crate::env::state::{Ruleset, TaskSource};
-use crate::env::types::NUM_ACTIONS;
+use crate::env::types::{GOAL_ENC, NUM_ACTIONS, RULE_ENC};
 use crate::env::vector::{VecEnv, VecEnvConfig, VecEnvSnapshot};
 use crate::env::Grid;
 use crate::util::rng::Rng;
@@ -68,6 +71,9 @@ pub struct ParVecEnv {
     /// reusable `[T, B]` action staging for fused rollouts — the
     /// rollout hot path allocates nothing per chunk
     act_scratch: Vec<i32>,
+    /// whether `reset_all` has installed episode inputs (guards the
+    /// trait-level episode restart)
+    seeded: bool,
 }
 
 impl ParVecEnv {
@@ -106,7 +112,7 @@ impl ParVecEnv {
             })
             .collect();
         ParVecEnv { cfg, b, ranges, pool, bufs,
-                    act_scratch: Vec::new() }
+                    act_scratch: Vec::new(), seeded: false }
     }
 
     pub fn batch(&self) -> usize {
@@ -173,6 +179,7 @@ impl ParVecEnv {
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
             self.bufs[c] = Some(bufs);
         }
+        self.seeded = true;
     }
 
     /// Parallel [`VecEnv::step_all`]: one dispatch per chunk, outputs
@@ -302,6 +309,116 @@ impl ParVecEnv {
             out.append(s);
         }
         out
+    }
+
+    // --- unified-API surface (env::api::BatchEnvironment) ------------------
+
+    /// Parallel [`VecEnv::restart_all`]: per-env streams are split off
+    /// `rng` in *global* env order on the coordinator thread, then
+    /// shipped to the chunk workers — bitwise identical to the serial
+    /// engine for any thread count.
+    pub fn restart_all(&mut self, rng: &mut Rng, obs_out: &mut [i32]) {
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        let vv2 = self.vv2();
+        let rngs: Vec<Rng> = (0..self.b).map(|_| rng.split()).collect();
+        let mut tickets = Vec::with_capacity(self.ranges.len());
+        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let bufs = self.bufs[c].take().expect("chunk bufs in flight");
+            let rg: Vec<Rng> = rngs[lo..hi].to_vec();
+            tickets.push(self.pool.call(c, move |w| {
+                let mut bufs = bufs;
+                for (j, r) in rg.into_iter().enumerate() {
+                    w.venv.restart_env_with(j, r, &mut bufs.obs);
+                }
+                bufs
+            }));
+        }
+        for (c, ticket) in tickets.into_iter().enumerate() {
+            let bufs = ticket.wait();
+            let (lo, hi) = self.ranges[c];
+            obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
+            self.bufs[c] = Some(bufs);
+        }
+    }
+
+    /// Per-env agent facing directions, global env order (one
+    /// synchronous broadcast round-trip).
+    pub fn copy_agent_dirs_into(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.b, "direction buffer size");
+        let chunks = self.pool.broadcast(|_, w: &mut ChunkEnv| {
+            let mut v = vec![0i32; w.venv.batch()];
+            w.venv.copy_agent_dirs_into(&mut v);
+            v
+        });
+        for (c, chunk) in chunks.into_iter().enumerate() {
+            let (lo, hi) = self.ranges[c];
+            out[lo..hi].copy_from_slice(&chunk);
+        }
+    }
+
+    /// Per-env encoded task rows (goal `[5]` + rules `[MR, 7]`), global
+    /// env order (one synchronous broadcast round-trip).
+    pub fn copy_task_rows_into(&self, out: &mut [i32]) {
+        let row = GOAL_ENC + self.cfg.max_rules * RULE_ENC;
+        assert_eq!(out.len(), self.b * row, "task row buffer size");
+        let chunks = self.pool.broadcast(|_, w: &mut ChunkEnv| {
+            let mr = w.venv.config().max_rules;
+            let mut v =
+                vec![0i32; w.venv.batch() * (GOAL_ENC + mr * RULE_ENC)];
+            w.venv.copy_task_rows_into(&mut v);
+            v
+        });
+        for (c, chunk) in chunks.into_iter().enumerate() {
+            let (lo, hi) = self.ranges[c];
+            out[lo * row..hi * row].copy_from_slice(&chunk);
+        }
+    }
+}
+
+/// The chunked parallel engine under the unified batch API — the same
+/// contract as the serial [`VecEnv`] impl, thread-count invariant by
+/// the determinism argument above.
+impl BatchEnvironment for ParVecEnv {
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.cfg.obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.cfg.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.cfg.max_rules
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        anyhow::ensure!(
+            self.seeded,
+            "ParVecEnv: no episode inputs installed — seed base grids / \
+             tasks / step limits with reset_all once before the \
+             trait-level reset restarts episodes"
+        );
+        self.restart_all(rng, obs_out);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        self.step_all(actions, obs_out, rewards, dones, trial_dones);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.copy_agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.copy_task_rows_into(out)
     }
 }
 

@@ -1,0 +1,1292 @@
+//! Unified TimeStep environment API: the single protocol every stepping
+//! surface of the reproduction speaks (the gymnax/Jumanji-style seam the
+//! paper's own interface is built on).
+//!
+//! The pieces, bottom-up:
+//!
+//! - [`EnvParams`] — the one shared description of an env family's shape
+//!   (grid dims, fixed-width task-table capacities, view options).
+//!   `env::vector::VecEnvConfig` is an alias of it and
+//!   `coordinator::NativeEnvConfig` embeds it, so observation lengths and
+//!   table capacities are derived in exactly one place.
+//! - [`ObsSpec`] / [`ActionSpec`] — machine-readable I/O contracts. An
+//!   observation is a flat per-env `i32` record made of named
+//!   [`ObsSegment`]s; wrappers extend or transform the segment list and
+//!   the spec always matches the bytes an engine actually writes.
+//! - [`TimeStep`] / [`StepType`] — the dm_env-style scalar step record
+//!   returned by the [`Environment`] trait.
+//! - [`Environment`] (scalar) and [`BatchEnvironment`] (batched,
+//!   allocation-free, observations written into caller buffers) — the
+//!   traits all four stepping surfaces implement: the scalar oracle
+//!   ([`ScalarEnv`]), the serial SoA engine (`env::vector::VecEnv`), the
+//!   chunked parallel engine (`coordinator::ParVecEnv` /
+//!   `coordinator::NativePool`) and the AOT/PJRT pool
+//!   (`coordinator::EnvPool`).
+//! - The wrapper stack — [`AutoReset`], [`DirectionObs`],
+//!   [`RulesAndGoalsObs`], [`RgbImageObs`] — composable over any
+//!   `BatchEnvironment`; [`ObsMode`] maps the CLI `--obs` flag onto a
+//!   stack.
+//! - [`rollout_batch`] — the backend-generic random-policy rollout
+//!   driver used by wrapped engine replicas and the fig13 bench.
+//!
+//! Task distributions are first-class: scalar and batch envs alike carry
+//! an optional [`TaskSource`] installed at construction, and every
+//! *episode* reset draws a fresh task from it (§2.1 protocol).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::grid::Grid;
+use super::observation::{observe_into, Obs, ObsScratch};
+use super::state::{self, place_objects, EnvOptions, Ruleset, State,
+                   TaskSource};
+use super::types::{GOAL_ENC, NUM_ACTIONS, POCKET_EMPTY, RULE_ENC};
+
+// ---------------------------------------------------------------------------
+// Shared env params
+// ---------------------------------------------------------------------------
+
+/// Shape of one environment family: grid dims, fixed-width task-table
+/// capacities and view options — the single source both `VecEnvConfig`
+/// (an alias of this type) and `NativeEnvConfig` (which embeds it) are
+/// derived from, replacing the former per-layer copies of `(H, W, MR,
+/// MI)`.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvParams {
+    pub h: usize,
+    pub w: usize,
+    /// rule-table rows per env (zero rows are inert padding)
+    pub max_rules: usize,
+    /// init-tile rows per env
+    pub max_init: usize,
+    pub opts: EnvOptions,
+}
+
+impl EnvParams {
+    /// Params for an `h`×`w` family with table capacities and default
+    /// view options.
+    pub fn new(h: usize, w: usize, max_rules: usize, max_init: usize)
+               -> EnvParams {
+        EnvParams {
+            h,
+            w,
+            max_rules: max_rules.max(1),
+            max_init: max_init.max(1),
+            opts: EnvOptions::default(),
+        }
+    }
+
+    /// The scalar-level view options (derived, not duplicated).
+    pub fn options(&self) -> EnvOptions {
+        self.opts
+    }
+
+    /// The family's raw (unwrapped) observation spec: one symbolic
+    /// `[V, V, 2]` segment. Every obs-length in the crate funnels
+    /// through here.
+    pub fn obs_spec(&self) -> ObsSpec {
+        ObsSpec::symbolic(self.opts.view_size)
+    }
+
+    /// Per-env symbolic observation length `V * V * 2`
+    /// (= `self.obs_spec().len()`, allocation-free for hot asserts).
+    pub fn obs_len(&self) -> usize {
+        self.opts.view_size * self.opts.view_size * 2
+    }
+
+    pub fn action_spec(&self) -> ActionSpec {
+        ActionSpec::default()
+    }
+
+    /// Per-env encoded-task row length: goal `[5]` + rules `[MR, 7]` —
+    /// the layout of [`BatchEnvironment::task_rows_into`] and of the
+    /// [`RulesAndGoalsObs`] observation segment.
+    pub fn task_row_len(&self) -> usize {
+        GOAL_ENC + self.max_rules * RULE_ENC
+    }
+
+    /// Assert every task in `tasks` fits this family's fixed-width
+    /// tables. O(num_tasks) — run once per source, not per chunk.
+    pub fn validate_task_source(&self, tasks: &dyn TaskSource) {
+        let n = tasks.num_tasks();
+        assert!(n > 0, "task source is empty");
+        for id in 0..n {
+            let t = tasks.task(id);
+            assert!(t.rules.len() <= self.max_rules,
+                    "task {id}: {} rules > capacity {}",
+                    t.rules.len(), self.max_rules);
+            assert!(t.init_tiles.len() <= self.max_init,
+                    "task {id}: {} init objects > capacity {}",
+                    t.init_tiles.len(), self.max_init);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Specs
+// ---------------------------------------------------------------------------
+
+/// One named, shaped slice of a flat per-env observation record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsSegment {
+    pub name: &'static str,
+    pub shape: Vec<usize>,
+}
+
+impl ObsSegment {
+    pub fn new(name: &'static str, shape: &[usize]) -> ObsSegment {
+        ObsSegment { name, shape: shape.to_vec() }
+    }
+
+    /// Flattened element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Observation contract: the flat per-env `i32` record is the
+/// concatenation of these segments, in order. Engines write exactly
+/// `len()` values per env; wrappers rewrite the segment list alongside
+/// the bytes, so the spec can never drift from the data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsSpec {
+    pub segments: Vec<ObsSegment>,
+}
+
+impl ObsSpec {
+    /// The raw engine observation: egocentric symbolic `[V, V, 2]`.
+    pub fn symbolic(view_size: usize) -> ObsSpec {
+        ObsSpec {
+            segments: vec![ObsSegment::new("symbolic",
+                                           &[view_size, view_size, 2])],
+        }
+    }
+
+    /// Per-env flattened length.
+    pub fn len(&self) -> usize {
+        self.segments.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append a segment (the `DirectionObs`/`RulesAndGoalsObs` shape).
+    pub fn with_segment(mut self, seg: ObsSegment) -> ObsSpec {
+        self.segments.push(seg);
+        self
+    }
+
+    /// Replace the leading segment (the `RgbImageObs` shape).
+    pub fn with_first_replaced(mut self, seg: ObsSegment) -> ObsSpec {
+        assert!(!self.segments.is_empty(), "spec has no segments");
+        self.segments[0] = seg;
+        self
+    }
+
+    /// Machine-readable form for `xmgrid envs --json`.
+    pub fn to_json(&self) -> String {
+        let segs: Vec<String> = self
+            .segments
+            .iter()
+            .map(|s| {
+                let dims: Vec<String> =
+                    s.shape.iter().map(|d| d.to_string()).collect();
+                format!("{{\"name\":\"{}\",\"shape\":[{}]}}", s.name,
+                        dims.join(","))
+            })
+            .collect();
+        format!("{{\"segments\":[{}],\"len\":{}}}", segs.join(","),
+                self.len())
+    }
+}
+
+/// Discrete action contract (6 actions, paper §2.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ActionSpec {
+    pub num_actions: usize,
+}
+
+impl Default for ActionSpec {
+    fn default() -> Self {
+        ActionSpec { num_actions: NUM_ACTIONS }
+    }
+}
+
+impl ActionSpec {
+    pub fn to_json(&self) -> String {
+        format!("{{\"num_actions\":{}}}", self.num_actions)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TimeStep
+// ---------------------------------------------------------------------------
+
+/// Position of a transition within an episode (dm_env convention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepType {
+    /// Episode start (produced by `reset`).
+    First,
+    /// Ordinary transition.
+    Mid,
+    /// Episode boundary: the env auto-reset in place, so `obs` already
+    /// belongs to the *next* episode (the standard batched auto-reset
+    /// quirk; `reward`/`discount` belong to the finished episode).
+    Last,
+}
+
+/// One scalar environment transition under the unified API.
+#[derive(Clone, Debug)]
+pub struct TimeStep {
+    /// Flat per-env observation, laid out per the env's [`ObsSpec`].
+    pub obs: Vec<i32>,
+    pub reward: f32,
+    /// `0.0` at an episode boundary, `1.0` otherwise.
+    pub discount: f32,
+    pub step_type: StepType,
+    /// Trial boundary within the episode (meta-RL §2.1): goal achieved
+    /// or episode end; objects were re-placed, the task kept unless the
+    /// episode also ended.
+    pub trial_done: bool,
+}
+
+impl TimeStep {
+    pub fn is_first(&self) -> bool {
+        self.step_type == StepType::First
+    }
+
+    pub fn is_last(&self) -> bool {
+        self.step_type == StepType::Last
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traits
+// ---------------------------------------------------------------------------
+
+/// Scalar environment protocol: `reset`/`step` returning a [`TimeStep`],
+/// with spec accessors and the auxiliary state the observation wrappers
+/// need. [`ScalarEnv`] is the oracle implementation; [`SingleEnv`] lifts
+/// any `Environment` into the batch API as a batch of one.
+pub trait Environment {
+    fn obs_spec(&self) -> ObsSpec;
+
+    fn action_spec(&self) -> ActionSpec {
+        ActionSpec::default()
+    }
+
+    /// Rule-table capacity of the encoded-task row
+    /// (see [`EnvParams::task_row_len`]).
+    fn max_rules(&self) -> usize;
+
+    /// Start a fresh episode: draw a task from the installed
+    /// [`TaskSource`] (if any), re-place objects, adopt `rng` as the
+    /// env's stream. RNG discipline matches the batch engines' episode
+    /// reset (`below(num_tasks)` on the stream, then a `split` for
+    /// placement) so scalar and batched resets stay bitwise-parallel.
+    fn reset(&mut self, rng: Rng) -> TimeStep;
+
+    /// One transition with in-place trial/episode auto-reset.
+    fn step(&mut self, action: i32) -> TimeStep;
+
+    /// Agent facing direction (0..4) — [`DirectionObs`] input.
+    fn agent_dir(&self) -> i32;
+
+    /// Encoded current task: goal `[5]` then rules `[MR, 7]` —
+    /// [`RulesAndGoalsObs`] input. `out.len()` must equal
+    /// `GOAL_ENC + max_rules() * RULE_ENC`.
+    fn task_rows_into(&self, out: &mut [i32]);
+}
+
+/// Batched environment protocol: B envs stepped per call,
+/// allocation-free, observations written into a caller-provided flat
+/// `i32` buffer of `batch() * obs_spec().len()` values (env-major).
+///
+/// Auto-reset semantics are the engines' own (trial reset keeps the
+/// task, episode reset draws a fresh one from the constructor-installed
+/// [`TaskSource`]); [`AutoReset`] makes the resulting step types and
+/// discounts explicit.
+pub trait BatchEnvironment {
+    fn batch(&self) -> usize;
+
+    fn obs_spec(&self) -> ObsSpec;
+
+    fn action_spec(&self) -> ActionSpec {
+        ActionSpec::default()
+    }
+
+    /// Total caller-buffer length: `batch() * obs_spec().len()`.
+    fn obs_len(&self) -> usize {
+        self.batch() * self.obs_spec().len()
+    }
+
+    /// Rule-table capacity of the per-env encoded-task rows.
+    fn max_rules(&self) -> usize;
+
+    /// Start fresh episodes in every slot (tasks drawn from the
+    /// installed source, per-env streams split off `rng` in env order)
+    /// and write the first observations into `obs_out`.
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()>;
+
+    /// One batched transition; observations land in `obs_out`, per-env
+    /// reward / episode-done / trial-done flags in the remaining
+    /// buffers. Trial and episode auto-resets happen in place.
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()>;
+
+    /// Per-env agent facing direction (0..4), `out.len() == batch()`.
+    fn agent_dirs_into(&self, out: &mut [i32]);
+
+    /// Per-env encoded task rows (goal `[5]` + rules `[MR, 7]`,
+    /// env-major); `out.len() == batch() * (GOAL_ENC + max_rules()*RULE_ENC)`.
+    fn task_rows_into(&self, out: &mut [i32]);
+}
+
+/// Forwarding impl so heterogeneous engines behind `Box<dyn
+/// BatchEnvironment>` plug into the generic wrappers.
+impl<E: BatchEnvironment + ?Sized> BatchEnvironment for Box<E> {
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        (**self).obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        (**self).action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        (**self).max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        (**self).reset(rng, obs_out)
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        (**self).step(actions, obs_out, rewards, dones, trial_dones)
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        (**self).agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        (**self).task_rows_into(out)
+    }
+}
+
+/// Forwarding impl so short-lived wrapper stacks can borrow an engine
+/// (`DirectionObs::new(&mut venv)`) instead of consuming it.
+impl<E: BatchEnvironment + ?Sized> BatchEnvironment for &mut E {
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        (**self).obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        (**self).action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        (**self).max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        (**self).reset(rng, obs_out)
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        (**self).step(actions, obs_out, rewards, dones, trial_dones)
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        (**self).agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        (**self).task_rows_into(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar oracle surface
+// ---------------------------------------------------------------------------
+
+/// The scalar oracle behind the [`Environment`] trait: one `State`
+/// driven by `state::step_with_tasks`, with the task source as a
+/// first-class constructor input. Bitwise-identical to one slot of the
+/// SoA engines (both run the same kernels and RNG sequences).
+pub struct ScalarEnv {
+    params: EnvParams,
+    tasks: Option<Arc<dyn TaskSource>>,
+    state: State,
+    obs: Obs,
+    scratch: ObsScratch,
+}
+
+impl ScalarEnv {
+    /// Build and reset the env (mirrors `state::reset`): `rng` is
+    /// consumed for placement exactly like the oracle's reset stream,
+    /// then kept as the env's stream.
+    pub fn new(params: EnvParams, base_grid: Grid, ruleset: Ruleset,
+               max_steps: i32, rng: Rng) -> ScalarEnv {
+        let (state, obs) = state::reset(base_grid, ruleset, max_steps,
+                                        rng, params.opts);
+        ScalarEnv {
+            params,
+            tasks: None,
+            state,
+            obs,
+            scratch: ObsScratch::new(),
+        }
+    }
+
+    /// Install the episode-reset task distribution (§2.1 protocol):
+    /// every episode boundary draws a fresh task; trial resets keep it.
+    pub fn with_task_source(mut self, tasks: Arc<dyn TaskSource>)
+                            -> ScalarEnv {
+        self.params.validate_task_source(tasks.as_ref());
+        self.tasks = Some(tasks);
+        self
+    }
+
+    pub fn params(&self) -> &EnvParams {
+        &self.params
+    }
+
+    pub fn state(&self) -> &State {
+        &self.state
+    }
+
+    /// Current observation in the flat spec layout.
+    fn obs_flat(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.obs.cells.len() * 2];
+        self.obs.write_flat_into(&mut out);
+        out
+    }
+}
+
+impl Environment for ScalarEnv {
+    fn obs_spec(&self) -> ObsSpec {
+        self.params.obs_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.params.max_rules
+    }
+
+    fn reset(&mut self, mut rng: Rng) -> TimeStep {
+        // episode-boundary RNG discipline (matches VecEnv::restart):
+        // one task draw on the env stream, then a split for placement
+        if let Some(ts) = self.tasks.clone() {
+            let t = rng.below(ts.num_tasks());
+            self.state.ruleset = ts.task(t).clone();
+        }
+        let mut sub = rng.split();
+        let (grid, pos, dir) = place_objects(
+            &mut sub, &self.state.base_grid, &self.state.ruleset.init_tiles);
+        self.state.grid = grid;
+        self.state.agent_pos = pos;
+        self.state.agent_dir = dir;
+        self.state.pocket = POCKET_EMPTY;
+        self.state.step_count = 0;
+        self.state.rng = rng;
+        observe_into(&self.state.grid, self.state.agent_pos,
+                     self.state.agent_dir, self.params.opts.view_size,
+                     self.params.opts.see_through_walls, &mut self.obs,
+                     &mut self.scratch);
+        TimeStep {
+            obs: self.obs_flat(),
+            reward: 0.0,
+            discount: 1.0,
+            step_type: StepType::First,
+            trial_done: false,
+        }
+    }
+
+    fn step(&mut self, action: i32) -> TimeStep {
+        let info = state::step_with_tasks(
+            &mut self.state, action, self.params.opts,
+            self.tasks.as_deref(), &mut self.obs, &mut self.scratch);
+        TimeStep {
+            obs: self.obs_flat(),
+            reward: info.reward,
+            discount: if info.done { 0.0 } else { 1.0 },
+            step_type: if info.done { StepType::Last } else { StepType::Mid },
+            trial_done: info.trial_done,
+        }
+    }
+
+    fn agent_dir(&self) -> i32 {
+        self.state.agent_dir
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        write_task_row(&self.state.ruleset, self.params.max_rules, out);
+    }
+}
+
+/// Encode one ruleset as a goal `[5]` + rules `[MR, 7]` row.
+pub(crate) fn write_task_row(rs: &Ruleset, max_rules: usize,
+                             out: &mut [i32]) {
+    assert_eq!(out.len(), GOAL_ENC + max_rules * RULE_ENC,
+               "task row buffer size");
+    out[..GOAL_ENC].copy_from_slice(&rs.goal.0);
+    for j in 0..max_rules {
+        let dst = &mut out[GOAL_ENC + j * RULE_ENC
+                           ..GOAL_ENC + (j + 1) * RULE_ENC];
+        match rs.rules.get(j) {
+            Some(r) => dst.copy_from_slice(&r.0),
+            None => dst.fill(0),
+        }
+    }
+}
+
+/// Lift any scalar [`Environment`] into the batch API as a batch of
+/// one — the bridge the wrapper-stack parity tests drive (wrapped
+/// scalar vs wrapped `VecEnv`, row for row).
+pub struct SingleEnv<E: Environment> {
+    env: E,
+}
+
+impl<E: Environment> SingleEnv<E> {
+    pub fn new(env: E) -> SingleEnv<E> {
+        SingleEnv { env }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.env
+    }
+}
+
+impl<E: Environment> BatchEnvironment for SingleEnv<E> {
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.env.obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.env.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.env.max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        // same per-env stream derivation as the batch engines: one
+        // split off the caller's rng per env slot
+        let ts = self.env.reset(rng.split());
+        obs_out.copy_from_slice(&ts.obs);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        ensure!(actions.len() == 1, "need one action per env");
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        let ts = self.env.step(actions[0]);
+        obs_out.copy_from_slice(&ts.obs);
+        rewards[0] = ts.reward;
+        dones[0] = ts.is_last();
+        trial_dones[0] = ts.trial_done;
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        out[0] = self.env.agent_dir();
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.env.task_rows_into(out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wrappers
+// ---------------------------------------------------------------------------
+
+/// Explicit auto-reset semantics over any [`BatchEnvironment`]. The
+/// engines already auto-reset in place (trial reset keeps the task,
+/// episode reset draws a fresh one); this wrapper surfaces the
+/// resulting [`StepType`]s and discounts per env instead of leaving
+/// them implicit in the `dones` flags.
+pub struct AutoReset<E: BatchEnvironment> {
+    inner: E,
+    step_types: Vec<StepType>,
+    discounts: Vec<f32>,
+}
+
+impl<E: BatchEnvironment> AutoReset<E> {
+    pub fn new(inner: E) -> AutoReset<E> {
+        let b = inner.batch();
+        AutoReset {
+            inner,
+            step_types: vec![StepType::First; b],
+            discounts: vec![1.0; b],
+        }
+    }
+
+    /// Step types of the latest transition (all `First` after a reset).
+    pub fn step_types(&self) -> &[StepType] {
+        &self.step_types
+    }
+
+    /// Discounts of the latest transition (`0.0` where `done`).
+    pub fn discounts(&self) -> &[f32] {
+        &self.discounts
+    }
+}
+
+impl<E: BatchEnvironment> BatchEnvironment for AutoReset<E> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.inner.obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.inner.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.inner.max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        self.inner.reset(rng, obs_out)?;
+        self.step_types.fill(StepType::First);
+        self.discounts.fill(1.0);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        self.inner.step(actions, obs_out, rewards, dones, trial_dones)?;
+        for i in 0..self.step_types.len() {
+            self.step_types[i] =
+                if dones[i] { StepType::Last } else { StepType::Mid };
+            self.discounts[i] = if dones[i] { 0.0 } else { 1.0 };
+        }
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.inner.agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.inner.task_rows_into(out)
+    }
+}
+
+/// Appends a one-hot agent-direction segment (`[4]`) to every env's
+/// observation record.
+pub struct DirectionObs<E: BatchEnvironment> {
+    inner: E,
+    inner_len: usize,
+    inner_buf: Vec<i32>,
+    dirs: Vec<i32>,
+}
+
+impl<E: BatchEnvironment> DirectionObs<E> {
+    pub fn new(inner: E) -> DirectionObs<E> {
+        let b = inner.batch();
+        let inner_len = inner.obs_spec().len();
+        DirectionObs {
+            inner_buf: vec![0; b * inner_len],
+            dirs: vec![0; b],
+            inner,
+            inner_len,
+        }
+    }
+
+    fn compose(&mut self, obs_out: &mut [i32]) {
+        let b = self.dirs.len();
+        let out_len = self.inner_len + 4;
+        self.inner.agent_dirs_into(&mut self.dirs);
+        for i in 0..b {
+            let src = &self.inner_buf[i * self.inner_len
+                                      ..(i + 1) * self.inner_len];
+            let dst = &mut obs_out[i * out_len..(i + 1) * out_len];
+            dst[..self.inner_len].copy_from_slice(src);
+            let one_hot = &mut dst[self.inner_len..];
+            one_hot.fill(0);
+            one_hot[self.dirs[i].rem_euclid(4) as usize] = 1;
+        }
+    }
+}
+
+impl<E: BatchEnvironment> BatchEnvironment for DirectionObs<E> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.inner
+            .obs_spec()
+            .with_segment(ObsSegment::new("direction", &[4]))
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.inner.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.inner.max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        self.inner.reset(rng, &mut self.inner_buf)?;
+        self.compose(obs_out);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        self.inner.step(actions, &mut self.inner_buf, rewards, dones,
+                        trial_dones)?;
+        self.compose(obs_out);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.inner.agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.inner.task_rows_into(out)
+    }
+}
+
+/// Appends the encoded current task — goal `[5]` + rules `[MR, 7]` — to
+/// every env's observation record (the paper's RulesAndGoals wrapper).
+pub struct RulesAndGoalsObs<E: BatchEnvironment> {
+    inner: E,
+    inner_len: usize,
+    row_len: usize,
+    inner_buf: Vec<i32>,
+    rows: Vec<i32>,
+}
+
+impl<E: BatchEnvironment> RulesAndGoalsObs<E> {
+    pub fn new(inner: E) -> RulesAndGoalsObs<E> {
+        let b = inner.batch();
+        let inner_len = inner.obs_spec().len();
+        let row_len = GOAL_ENC + inner.max_rules() * RULE_ENC;
+        RulesAndGoalsObs {
+            inner_buf: vec![0; b * inner_len],
+            rows: vec![0; b * row_len],
+            inner,
+            inner_len,
+            row_len,
+        }
+    }
+
+    fn compose(&mut self, obs_out: &mut [i32]) {
+        let b = self.inner.batch();
+        let out_len = self.inner_len + self.row_len;
+        self.inner.task_rows_into(&mut self.rows);
+        for i in 0..b {
+            let src = &self.inner_buf[i * self.inner_len
+                                      ..(i + 1) * self.inner_len];
+            let row = &self.rows[i * self.row_len..(i + 1) * self.row_len];
+            let dst = &mut obs_out[i * out_len..(i + 1) * out_len];
+            dst[..self.inner_len].copy_from_slice(src);
+            dst[self.inner_len..].copy_from_slice(row);
+        }
+    }
+}
+
+impl<E: BatchEnvironment> BatchEnvironment for RulesAndGoalsObs<E> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        let mr = self.inner.max_rules();
+        self.inner
+            .obs_spec()
+            .with_segment(ObsSegment::new("goal", &[GOAL_ENC]))
+            .with_segment(ObsSegment::new("rules", &[mr, RULE_ENC]))
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.inner.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.inner.max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        self.inner.reset(rng, &mut self.inner_buf)?;
+        self.compose(obs_out);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        self.inner.step(actions, &mut self.inner_buf, rewards, dones,
+                        trial_dones)?;
+        self.compose(obs_out);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.inner.agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.inner.task_rows_into(out)
+    }
+}
+
+/// The obs spec's goal+rules segment is wrong on a `RulesAndGoalsObs`
+/// stacked on itself — composition rule: append-style wrappers compose
+/// freely, but stack each at most once (asserted here).
+fn assert_no_segment(spec: &ObsSpec, name: &str) {
+    assert!(spec.segments.iter().all(|s| s.name != name),
+            "wrapper stack already contains a `{name}` segment");
+}
+
+/// Replaces the leading symbolic segment with a rasterized RGB image
+/// `[V*P, V*P, 3]` (values 0..=255 in i32 slots), a deterministic pure
+/// function of the symbolic cells — the native analogue of the paper's
+/// RGBImageObservationWrapper, rendered by `render::rgb` at `P` pixels
+/// per tile. Appended segments from inner wrappers are passed through
+/// unchanged, so `RgbImageObs(DirectionObs(env))` composes; stacking a
+/// second `RgbImageObs` is rejected (no symbolic segment remains).
+pub struct RgbImageObs<E: BatchEnvironment> {
+    inner: E,
+    inner_len: usize,
+    sym_len: usize,
+    rgb_len: usize,
+    v: usize,
+    patch: usize,
+    inner_buf: Vec<i32>,
+}
+
+impl<E: BatchEnvironment> RgbImageObs<E> {
+    pub fn new(inner: E) -> RgbImageObs<E> {
+        RgbImageObs::with_patch(inner, crate::render::TILE_PATCH)
+    }
+
+    pub fn with_patch(inner: E, patch: usize) -> RgbImageObs<E> {
+        let b = inner.batch();
+        let spec = inner.obs_spec();
+        let first = spec.segments.first().expect("empty obs spec");
+        assert_eq!(first.name, "symbolic",
+                   "RgbImageObs needs a leading symbolic segment, found \
+                    `{}`", first.name);
+        let v = first.shape[0];
+        let sym_len = first.len();
+        let rgb_len = v * patch * v * patch * 3;
+        RgbImageObs {
+            inner_len: spec.len(),
+            inner_buf: vec![0; b * spec.len()],
+            sym_len,
+            rgb_len,
+            v,
+            patch,
+            inner,
+        }
+    }
+
+    fn compose(&mut self, obs_out: &mut [i32]) {
+        let b = self.inner.batch();
+        let out_len = self.rgb_len + (self.inner_len - self.sym_len);
+        for i in 0..b {
+            let src = &self.inner_buf[i * self.inner_len
+                                      ..(i + 1) * self.inner_len];
+            let dst = &mut obs_out[i * out_len..(i + 1) * out_len];
+            crate::render::rasterize_symbolic_into(
+                &src[..self.sym_len], self.v, self.patch,
+                &mut dst[..self.rgb_len]);
+            dst[self.rgb_len..].copy_from_slice(&src[self.sym_len..]);
+        }
+    }
+}
+
+impl<E: BatchEnvironment> BatchEnvironment for RgbImageObs<E> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        let spec = self.inner.obs_spec();
+        assert_no_segment(&spec, "rgb");
+        spec.with_first_replaced(ObsSegment::new(
+            "rgb", &[self.v * self.patch, self.v * self.patch, 3]))
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.inner.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.inner.max_rules()
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        self.inner.reset(rng, &mut self.inner_buf)?;
+        self.compose(obs_out);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        ensure!(obs_out.len() == self.obs_len(), "obs buffer size");
+        self.inner.step(actions, &mut self.inner_buf, rewards, dones,
+                        trial_dones)?;
+        self.compose(obs_out);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.inner.agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.inner.task_rows_into(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Obs-mode selection (`--obs`) and the generic rollout driver
+// ---------------------------------------------------------------------------
+
+/// Which observation wrapper stack a rollout/train run steps through
+/// (`xmgrid rollout --obs symbolic|dir|rules-goals|rgb`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ObsMode {
+    /// Raw engine observation (no wrapper; fused fast path).
+    #[default]
+    Symbolic,
+    /// `DirectionObs` appended.
+    Direction,
+    /// `RulesAndGoalsObs` appended.
+    RulesGoals,
+    /// `RgbImageObs` replacing the symbolic segment.
+    Rgb,
+}
+
+impl ObsMode {
+    pub fn from_flag(s: &str) -> Result<ObsMode> {
+        match s {
+            "symbolic" => Ok(ObsMode::Symbolic),
+            "dir" => Ok(ObsMode::Direction),
+            "rules-goals" => Ok(ObsMode::RulesGoals),
+            "rgb" => Ok(ObsMode::Rgb),
+            other => anyhow::bail!(
+                "--obs must be `symbolic`, `dir`, `rules-goals` or \
+                 `rgb`, got {other}"
+            ),
+        }
+    }
+
+    /// Build the wrapper stack over `env` as a trait object.
+    pub fn wrap<E: BatchEnvironment + 'static>(self, env: E)
+                                               -> Box<dyn BatchEnvironment> {
+        match self {
+            ObsMode::Symbolic => Box::new(env),
+            ObsMode::Direction => Box::new(DirectionObs::new(env)),
+            ObsMode::RulesGoals => Box::new(RulesAndGoalsObs::new(env)),
+            ObsMode::Rgb => Box::new(RgbImageObs::new(env)),
+        }
+    }
+}
+
+/// `Display` writes the CLI flag spelling back out.
+impl std::fmt::Display for ObsMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ObsMode::Symbolic => "symbolic",
+            ObsMode::Direction => "dir",
+            ObsMode::RulesGoals => "rules-goals",
+            ObsMode::Rgb => "rgb",
+        })
+    }
+}
+
+/// Reusable I/O buffers for [`rollout_batch`], sized once per env.
+pub struct RolloutBufs {
+    pub obs: Vec<i32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<bool>,
+    pub trial_dones: Vec<bool>,
+    reward_acc: Vec<f64>,
+}
+
+impl RolloutBufs {
+    pub fn for_env(env: &dyn BatchEnvironment) -> RolloutBufs {
+        let b = env.batch();
+        RolloutBufs {
+            obs: vec![0; env.obs_len()],
+            actions: vec![0; b],
+            rewards: vec![0.0; b],
+            dones: vec![false; b],
+            trial_dones: vec![false; b],
+            reward_acc: vec![0.0; b],
+        }
+    }
+}
+
+/// Random-policy rollout through any [`BatchEnvironment`] — the driver
+/// wrapped engine replicas and the fig13 bench share. `t` steps per
+/// env; actions drawn from `rng` in serial order (step-major,
+/// env-minor, matching the fused engines); returns
+/// `(reward_sum, episodes_done, trials_done)` with the reward reduction
+/// performed env-major (per-env `f64` sums folded in ascending env
+/// order), so the aggregates match the fused path bit for bit.
+pub fn rollout_batch(env: &mut dyn BatchEnvironment, t: usize,
+                     rng: &mut Rng, bufs: &mut RolloutBufs)
+                     -> Result<(f64, u64, u64)> {
+    let b = env.batch();
+    ensure!(bufs.actions.len() == b && bufs.obs.len() == env.obs_len(),
+            "rollout buffers sized for a different env");
+    let na = env.action_spec().num_actions;
+    bufs.reward_acc.iter_mut().for_each(|x| *x = 0.0);
+    let mut episodes = 0u64;
+    let mut trials = 0u64;
+    for _ in 0..t {
+        for a in bufs.actions.iter_mut() {
+            *a = rng.below(na) as i32;
+        }
+        env.step(&bufs.actions, &mut bufs.obs, &mut bufs.rewards,
+                 &mut bufs.dones, &mut bufs.trial_dones)?;
+        for (acc, &r) in bufs.reward_acc.iter_mut().zip(&bufs.rewards) {
+            *acc += r as f64;
+        }
+        episodes += bufs.dones.iter().filter(|&&d| d).count() as u64;
+        trials += bufs.trial_dones.iter().filter(|&&d| d).count() as u64;
+    }
+    let mut reward_sum = 0.0f64;
+    for &x in &bufs.reward_acc {
+        reward_sum += x;
+    }
+    Ok((reward_sum, episodes, trials))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::types::*;
+    use crate::env::Goal;
+
+    fn ball_red() -> Cell {
+        Cell::new(TILE_BALL, COLOR_RED)
+    }
+
+    fn sample_ruleset() -> Ruleset {
+        Ruleset {
+            goal: Goal::agent_near(ball_red()),
+            rules: vec![],
+            init_tiles: vec![ball_red()],
+        }
+    }
+
+    fn scalar_env(max_steps: i32) -> ScalarEnv {
+        ScalarEnv::new(EnvParams::new(9, 9, 1, 1), Grid::empty_room(9, 9),
+                       sample_ruleset(), max_steps, Rng::new(3))
+    }
+
+    #[test]
+    fn spec_lengths_compose() {
+        let spec = ObsSpec::symbolic(5);
+        assert_eq!(spec.len(), 50);
+        let spec = spec.with_segment(ObsSegment::new("direction", &[4]));
+        assert_eq!(spec.len(), 54);
+        assert_eq!(spec.segments.len(), 2);
+        let json = spec.to_json();
+        assert!(json.contains("\"name\":\"symbolic\""));
+        assert!(json.contains("\"shape\":[5,5,2]"));
+        assert!(json.contains("\"len\":54"));
+        assert_eq!(ActionSpec::default().num_actions, 6);
+    }
+
+    #[test]
+    fn env_params_single_source_of_shape() {
+        let p = EnvParams::new(13, 13, 9, 12);
+        assert_eq!(p.obs_len(), p.obs_spec().len());
+        assert_eq!(p.task_row_len(), 5 + 9 * 7);
+        assert_eq!(p.options().view_size, 5);
+    }
+
+    #[test]
+    fn scalar_env_timestep_protocol() {
+        let mut env = scalar_env(3);
+        let first = env.reset(Rng::new(11));
+        assert!(first.is_first());
+        assert_eq!(first.obs.len(), env.obs_spec().len());
+        let mut saw_last = false;
+        for _ in 0..6 {
+            let ts = env.step(ACTION_TURN_LEFT);
+            assert_eq!(ts.obs.len(), env.obs_spec().len());
+            if ts.is_last() {
+                assert_eq!(ts.discount, 0.0);
+                assert!(ts.trial_done);
+                saw_last = true;
+            } else {
+                assert_eq!(ts.discount, 1.0);
+            }
+        }
+        assert!(saw_last, "max_steps=3 must hit episode boundaries");
+    }
+
+    #[test]
+    fn scalar_env_resamples_tasks_on_reset() {
+        let tasks: Vec<Ruleset> = (0..5)
+            .map(|k| Ruleset {
+                goal: Goal::agent_hold(Cell::new(TILE_BALL, 3 + k)),
+                rules: vec![],
+                init_tiles: vec![Cell::new(TILE_BALL, 3 + k)],
+            })
+            .collect();
+        let mut env = scalar_env(100).with_task_source(Arc::new(tasks));
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..24 {
+            env.reset(rng.split());
+            seen.insert(env.state().ruleset.goal.0);
+        }
+        assert!(seen.len() >= 2, "resets must draw from the task source");
+    }
+
+    #[test]
+    fn single_env_bridges_scalar_to_batch() {
+        let mut env = SingleEnv::new(scalar_env(50));
+        assert_eq!(env.batch(), 1);
+        let mut obs = vec![0i32; env.obs_len()];
+        let mut rng = Rng::new(9);
+        env.reset(&mut rng, &mut obs).unwrap();
+        let mut rewards = [0f32];
+        let mut dones = [false];
+        let mut trials = [false];
+        env.step(&[ACTION_FORWARD], &mut obs, &mut rewards, &mut dones,
+                 &mut trials)
+            .unwrap();
+        let mut dirs = [0i32];
+        env.agent_dirs_into(&mut dirs);
+        assert!((0..4).contains(&dirs[0]));
+        let mut row = vec![0i32; GOAL_ENC + env.max_rules() * RULE_ENC];
+        env.task_rows_into(&mut row);
+        assert_eq!(row[0], GOAL_AGENT_NEAR);
+    }
+
+    #[test]
+    fn direction_obs_appends_one_hot() {
+        let mut env = DirectionObs::new(SingleEnv::new(scalar_env(50)));
+        assert_eq!(env.obs_spec().len(), 50 + 4);
+        let mut obs = vec![0i32; env.obs_len()];
+        let mut rng = Rng::new(4);
+        env.reset(&mut rng, &mut obs).unwrap();
+        let one_hot = &obs[50..];
+        assert_eq!(one_hot.iter().sum::<i32>(), 1);
+        let mut dirs = [0i32];
+        env.agent_dirs_into(&mut dirs);
+        assert_eq!(one_hot[dirs[0] as usize], 1);
+    }
+
+    #[test]
+    fn rules_goals_obs_appends_task_row() {
+        let mut env =
+            RulesAndGoalsObs::new(SingleEnv::new(scalar_env(50)));
+        let row_len = GOAL_ENC + env.max_rules() * RULE_ENC;
+        assert_eq!(env.obs_spec().len(), 50 + row_len);
+        let mut obs = vec![0i32; env.obs_len()];
+        let mut rng = Rng::new(4);
+        env.reset(&mut rng, &mut obs).unwrap();
+        assert_eq!(obs[50], GOAL_AGENT_NEAR, "goal id leads the row");
+    }
+
+    #[test]
+    fn rgb_obs_replaces_symbolic_segment() {
+        let mut env = RgbImageObs::new(SingleEnv::new(scalar_env(50)));
+        let spec = env.obs_spec();
+        assert_eq!(spec.segments[0].name, "rgb");
+        let p = crate::render::TILE_PATCH;
+        assert_eq!(spec.len(), 5 * p * 5 * p * 3);
+        let mut obs = vec![0i32; env.obs_len()];
+        let mut rng = Rng::new(4);
+        env.reset(&mut rng, &mut obs).unwrap();
+        assert!(obs.iter().all(|&x| (0..=255).contains(&x)));
+        assert!(obs.iter().any(|&x| x > 0), "image is not all black");
+    }
+
+    #[test]
+    fn auto_reset_marks_step_types() {
+        let mut env = AutoReset::new(SingleEnv::new(scalar_env(2)));
+        let mut obs = vec![0i32; env.obs_len()];
+        let mut rng = Rng::new(4);
+        env.reset(&mut rng, &mut obs).unwrap();
+        assert_eq!(env.step_types(), &[StepType::First]);
+        let mut rewards = [0f32];
+        let mut dones = [false];
+        let mut trials = [false];
+        env.step(&[ACTION_TURN_LEFT], &mut obs, &mut rewards, &mut dones,
+                 &mut trials)
+            .unwrap();
+        assert_eq!(env.step_types(), &[StepType::Mid]);
+        assert_eq!(env.discounts(), &[1.0]);
+        env.step(&[ACTION_TURN_LEFT], &mut obs, &mut rewards, &mut dones,
+                 &mut trials)
+            .unwrap();
+        assert_eq!(env.step_types(), &[StepType::Last]);
+        assert_eq!(env.discounts(), &[0.0]);
+    }
+
+    #[test]
+    fn rollout_batch_counts_and_obs_mode_flags() {
+        let mut env = SingleEnv::new(scalar_env(4));
+        let mut bufs = RolloutBufs::for_env(&env);
+        let mut rng = Rng::new(8);
+        let (_, episodes, trials) =
+            rollout_batch(&mut env, 8, &mut rng, &mut bufs).unwrap();
+        assert_eq!(episodes, 2, "max_steps=4 over 8 steps = 2 episodes");
+        assert!(trials >= 2);
+
+        assert_eq!(ObsMode::from_flag("rgb").unwrap(), ObsMode::Rgb);
+        assert_eq!(ObsMode::from_flag("dir").unwrap(),
+                   ObsMode::Direction);
+        assert!(ObsMode::from_flag("pixels").is_err());
+        assert_eq!(ObsMode::RulesGoals.to_string(), "rules-goals");
+        assert_eq!(ObsMode::default(), ObsMode::Symbolic);
+    }
+}

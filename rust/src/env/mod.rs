@@ -6,6 +6,7 @@
 //! no AOT artifacts, sharing the exact transition code with the scalar
 //! oracle through the [`grid::CellGrid`] trait.
 
+pub mod api;
 pub mod goals;
 pub mod grid;
 pub mod layouts;
@@ -16,6 +17,10 @@ pub mod state;
 pub mod types;
 pub mod vector;
 
+pub use api::{ActionSpec, AutoReset, BatchEnvironment, DirectionObs,
+              EnvParams, Environment, ObsMode, ObsSegment, ObsSpec,
+              RgbImageObs, RolloutBufs, RulesAndGoalsObs, ScalarEnv,
+              SingleEnv, StepType, TimeStep};
 pub use goals::Goal;
 pub use grid::{CellGrid, Grid};
 pub use observation::{Obs, ObsScratch};

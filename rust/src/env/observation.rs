@@ -37,6 +37,18 @@ impl Obs {
         out
     }
 
+    /// [`Obs::to_flat`] into a caller-owned slice — the allocation-free
+    /// form the batch engines and the unified-API surfaces share
+    /// (`out.len()` must be `cells.len() * 2`).
+    pub fn write_flat_into(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.cells.len() * 2,
+                   "flat obs buffer size");
+        for (j, cell) in self.cells.iter().enumerate() {
+            out[2 * j] = cell.tile;
+            out[2 * j + 1] = cell.color;
+        }
+    }
+
     pub fn from_flat(v: usize, flat: &[i32]) -> Self {
         assert_eq!(flat.len(), v * v * 2);
         Obs {

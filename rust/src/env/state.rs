@@ -98,8 +98,9 @@ impl Default for EnvOptions {
 /// JAX `place_objects` distribution (k+1 distinct uniform floor cells; the
 /// object list may contain conceptual padding on the JAX side — here the
 /// list is exact).
-fn place_objects(rng: &mut Rng, base_grid: &Grid, init_tiles: &[Cell])
-                 -> (Grid, (i32, i32), i32) {
+pub(crate) fn place_objects(rng: &mut Rng, base_grid: &Grid,
+                            init_tiles: &[Cell])
+                            -> (Grid, (i32, i32), i32) {
     let mut grid = base_grid.clone();
     let free = grid.free_cells();
     assert!(

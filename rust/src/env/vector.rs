@@ -18,14 +18,16 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::util::rng::Rng;
 
+use super::api::{ActionSpec, BatchEnvironment, EnvParams, ObsSpec};
 use super::goals::{check_goal, Goal};
 use super::grid::{CellGrid, Grid};
 use super::observation::{observe_into, Obs, ObsScratch};
 use super::rules::{check_rules, Rule};
-use super::state::{apply_action, is_acting_action, EnvOptions, Ruleset,
-                   TaskSource};
+use super::state::{apply_action, is_acting_action, Ruleset, TaskSource};
 use super::types::*;
 
 /// Borrowed view of one environment's `[H, W, 2]` slice of the batched
@@ -116,36 +118,11 @@ impl VecEnvSnapshot {
     }
 }
 
-/// Shape of one `VecEnv` family: grid dims plus the fixed-width ruleset
-/// table capacities (the artifact-free analogue of `(H, W, MR, MI)`).
-#[derive(Clone, Copy, Debug)]
-pub struct VecEnvConfig {
-    pub h: usize,
-    pub w: usize,
-    /// rule-table rows per env (zero rows are inert padding)
-    pub max_rules: usize,
-    /// init-tile rows per env
-    pub max_init: usize,
-    pub opts: EnvOptions,
-}
-
-impl VecEnvConfig {
-    /// Assert every task in `tasks` fits this config's fixed-width
-    /// tables. O(num_tasks) — run once per source, not per chunk.
-    pub fn validate_task_source(&self, tasks: &dyn TaskSource) {
-        let n = tasks.num_tasks();
-        assert!(n > 0, "task source is empty");
-        for id in 0..n {
-            let t = tasks.task(id);
-            assert!(t.rules.len() <= self.max_rules,
-                    "task {id}: {} rules > capacity {}",
-                    t.rules.len(), self.max_rules);
-            assert!(t.init_tiles.len() <= self.max_init,
-                    "task {id}: {} init objects > capacity {}",
-                    t.init_tiles.len(), self.max_init);
-        }
-    }
-}
+/// Shape of one `VecEnv` family — an alias of the shared
+/// [`EnvParams`] (grid dims, fixed-width table capacities, view
+/// options), so the SoA engine and every layer above derive shapes
+/// from one struct.
+pub type VecEnvConfig = EnvParams;
 
 /// B environments in SoA buffers with allocation-free `reset_all` /
 /// `step_all` kernels (in-place trial/episode auto-reset, observations
@@ -181,6 +158,10 @@ pub struct VecEnv {
     /// `None` replays each env's current ruleset forever (fixed-task
     /// harnesses like the registry unit tests want exactly that)
     tasks: Option<Arc<dyn TaskSource>>,
+    /// whether `reset_all` has installed episode inputs (base grids,
+    /// tasks, step limits) — the trait-level `reset` restarts episodes
+    /// and needs them present
+    seeded: bool,
     // --- reusable scratch: steady-state kernels never allocate ---------
     free_scratch: Vec<usize>,
     obs_scratch: Obs,
@@ -209,6 +190,7 @@ impl VecEnv {
             max_steps: vec![0; b],
             rngs: vec![Rng::new(0); b],
             tasks: None,
+            seeded: false,
             free_scratch: Vec::with_capacity(ghw),
             obs_scratch: Obs::empty(cfg.opts.view_size),
             vis_scratch: ObsScratch::new(),
@@ -224,9 +206,10 @@ impl VecEnv {
     }
 
     /// Length of the caller-provided observation buffer:
-    /// `B * V * V * 2` i32s in the PJRT boundary layout.
+    /// `B * V * V * 2` i32s in the PJRT boundary layout (derived from
+    /// the family's [`ObsSpec`] via [`EnvParams::obs_len`]).
     pub fn obs_len(&self) -> usize {
-        self.b * self.cfg.opts.view_size * self.cfg.opts.view_size * 2
+        self.b * self.cfg.obs_len()
     }
 
     /// Install the benchmark task distribution: at every *episode*
@@ -337,6 +320,7 @@ impl VecEnv {
         self.step_count[i] = 0;
         self.place(i, &mut rng);
         self.rngs[i] = rng;
+        self.seeded = true;
     }
 
     fn step_env(&mut self, i: usize, action: i32) -> (f32, bool, bool) {
@@ -463,18 +447,120 @@ impl VecEnv {
         let gv = GridView::new(h, w, &mut self.grid[g0..g0 + h * w]);
         observe_into(&gv, pos, dir, v, self.cfg.opts.see_through_walls,
                      &mut self.obs_scratch, &mut self.vis_scratch);
-        let out = &mut obs_out[i * v * v * 2..(i + 1) * v * v * 2];
-        for (j, cell) in self.obs_scratch.cells.iter().enumerate() {
-            out[2 * j] = cell.tile;
-            out[2 * j + 1] = cell.color;
+        self.obs_scratch
+            .write_flat_into(&mut obs_out[i * v * v * 2
+                                          ..(i + 1) * v * v * 2]);
+    }
+
+    // --- unified-API surface (env::api::BatchEnvironment) ------------------
+
+    /// Start a fresh *episode* in env `i` on its stored base grid,
+    /// adopting `rng` as the env's stream: one task draw on the stream
+    /// (when a source is installed), then a `split` for placement — the
+    /// same episode-boundary RNG discipline as [`VecEnv::step_all`] and
+    /// the scalar `ScalarEnv::reset`, so restarts stay bitwise-parallel
+    /// across surfaces. `obs_out` is the chunk-local `[B, V, V, 2]`
+    /// buffer (env `i`'s slice is written).
+    pub fn restart_env_with(&mut self, i: usize, mut rng: Rng,
+                            obs_out: &mut [i32]) {
+        if let Some(ts) = self.tasks.clone() {
+            let t = rng.below(ts.num_tasks());
+            self.encode_task(i, ts.task(t));
         }
+        let mut sub = rng.split();
+        self.place(i, &mut sub);
+        self.pocket[i] = POCKET_EMPTY;
+        self.step_count[i] = 0;
+        self.rngs[i] = rng;
+        self.observe_env(i, obs_out);
+    }
+
+    /// [`VecEnv::restart_env_with`] over the whole batch: env `i`'s
+    /// stream is the `i`-th `rng.split()` in env order (the derivation
+    /// `ParVecEnv` mirrors chunk by chunk).
+    pub fn restart_all(&mut self, rng: &mut Rng, obs_out: &mut [i32]) {
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        for i in 0..self.b {
+            let r = rng.split();
+            self.restart_env_with(i, r, obs_out);
+        }
+    }
+
+    /// Per-env agent facing directions (the `DirectionObs` input).
+    pub fn copy_agent_dirs_into(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.b, "direction buffer size");
+        out.copy_from_slice(&self.agent_dir);
+    }
+
+    /// Per-env encoded task rows: goal `[5]` then rules `[MR, 7]`,
+    /// env-major (the `RulesAndGoalsObs` input).
+    pub fn copy_task_rows_into(&self, out: &mut [i32]) {
+        let mr = self.cfg.max_rules;
+        let row = GOAL_ENC + mr * RULE_ENC;
+        assert_eq!(out.len(), self.b * row, "task row buffer size");
+        for i in 0..self.b {
+            let dst = &mut out[i * row..(i + 1) * row];
+            dst[..GOAL_ENC].copy_from_slice(&self.goals[i].0);
+            for j in 0..mr {
+                dst[GOAL_ENC + j * RULE_ENC
+                    ..GOAL_ENC + (j + 1) * RULE_ENC]
+                    .copy_from_slice(&self.rules[i * mr + j].0);
+            }
+        }
+    }
+}
+
+/// The serial SoA engine under the unified batch API. `reset` restarts
+/// every env on its stored base grid (drawing fresh tasks from the
+/// installed source); `step` is exactly [`VecEnv::step_all`].
+impl BatchEnvironment for VecEnv {
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.cfg.obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.cfg.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.cfg.max_rules
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
+        anyhow::ensure!(
+            self.seeded,
+            "VecEnv: no episode inputs installed — seed base grids / \
+             tasks / step limits with reset_all once before the \
+             trait-level reset restarts episodes"
+        );
+        self.restart_all(rng, obs_out);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        self.step_all(actions, obs_out, rewards, dones, trial_dones);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        self.copy_agent_dirs_into(out)
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        self.copy_task_rows_into(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::env::state::{reset, step};
+    use crate::env::state::{reset, step, EnvOptions};
 
     fn ball_red() -> Cell {
         Cell::new(TILE_BALL, COLOR_RED)

@@ -6,6 +6,10 @@
 //!   observations, layouts, and the 38-environment registry. Serves as the
 //!   cross-validation oracle for the AOT-lowered JAX environment and as the
 //!   CPU-loop baseline (EnvPool-style) in the throughput benches.
+//!   [`env::api`] is the unified TimeStep `Environment` /
+//!   `BatchEnvironment` protocol every stepping surface implements,
+//!   with spec-driven observation wrappers (`AutoReset`,
+//!   `DirectionObs`, `RulesAndGoalsObs`, `RgbImageObs`).
 //! - [`benchgen`] — the procedural benchmark generator (paper §3, Table 4):
 //!   goal-rooted production-rule trees, branch pruning, distractors, and the
 //!   compressed benchmark store with load/sample/split APIs.

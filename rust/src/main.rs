@@ -34,6 +34,7 @@ use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::{BackendKind, NativeEnvConfig, Overlap,
                           RolloutEngine, ShardConfig, ShardedTrainer,
                           TrainConfig, Trainer};
+use xmgrid::env::api::{EnvParams, ObsMode};
 use xmgrid::env::registry;
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::render::render_grid;
@@ -81,7 +82,7 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
-        "envs" => cmd_envs(),
+        "envs" => cmd_envs(&args),
         "play" => cmd_play(&args),
         "gen-benchmark" => cmd_gen_benchmark(&args),
         "rollout" => cmd_rollout(&args),
@@ -105,11 +106,12 @@ usage: xmgrid <command> [--options]
        xmgrid help <command>        per-command option docs
 
 commands:
-  envs                                list environments
+  envs [--json]                       list environments (+specs)
   play --env NAME [--steps N]         ASCII episode
   gen-benchmark --preset P --n N      generate benchmark (--threads)
   rollout [--backend B] [--shards N]  sharded throughput run
-          [--threads T]               (native: chunked stepping pool)
+          [--threads T] [--obs M]     (native: chunked stepping pool,
+                                      obs wrapper stacks incl. rgb)
   train [--shards N] [--overlap M]    RL² PPO training
   eval --benchmark B                  evaluation protocol
   validate                            oracle cross-check
@@ -122,10 +124,14 @@ global options:
 fn command_help(cmd: &str) -> Option<&'static str> {
     Some(match cmd {
         "envs" => "\
-usage: xmgrid envs
+usage: xmgrid envs [--json]
 
 List the registered environment names (MiniGrid ports + XLand family).
-Takes no options.",
+
+  --json    machine-readable registry: one record per family with grid
+            size, room count, step limit, and the ObsSpec/ActionSpec
+            derived from the shared EnvParams (segment names + shapes,
+            flattened length, action count).",
         "play" => "\
 usage: xmgrid play [--env NAME] [--steps N] [--seed S]
 
@@ -164,6 +170,7 @@ custom generation never shadows the canonical benchmark.
 usage: xmgrid rollout [--backend auto|native|xla] [--batch B]
                       [--chunks N] [--shards K] [--threads T|auto]
                       [--overlap on|off] [--env NAME] [--steps T]
+                      [--obs symbolic|dir|rules-goals|rgb]
                       [--benchmark NAME] [--seed S] [--rooms R]
                       [--artifacts-dir DIR]
 
@@ -196,6 +203,15 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
                      (default: XLand-MiniGrid-R1-13x13)
   --steps T          native backend: steps per rollout chunk
                      (default: 64; xla takes T from the artifact)
+  --obs MODE         native backend: observation wrapper stack each
+                     replica steps through (default: symbolic = raw
+                     fused fast path). dir appends a one-hot agent
+                     direction, rules-goals appends the encoded task
+                     (goal [5] + rules [MR,7]), rgb replaces the
+                     symbolic view with a rasterized [V*8, V*8, 3]
+                     image (the paper's RGBImageObservationWrapper,
+                     rendered natively — fig13's cost model). The xla
+                     backend supports symbolic only.
   --benchmark NAME   task source (default: trivial-1k, generated and
                      cached on first use)
   --seed S           run seed; shard k derives stream shard_seed(S, k)
@@ -207,7 +223,7 @@ usage: xmgrid train [--benchmark NAME] [--iters N] [--batch B]
                     [--artifact NAME] [--shards K] [--threads T|auto]
                     [--overlap on|off] [--seed S] [--resample I]
                     [--eval-every E] [--rooms R] [--log PATH]
-                    [--artifacts-dir DIR]
+                    [--obs symbolic] [--artifacts-dir DIR]
 
 RL² PPO training over fused train_iter artifacts. With --shards > 1 the
 data-parallel shard engine runs one full trainer replica per shard and
@@ -234,7 +250,10 @@ all-reduces parameter updates on the host in fixed shard order.
                      (default: 0 = never)
   --rooms R          rooms in the base grid layout (default: 1)
   --log PATH         CSV metrics path
-                     (default: artifacts/train_log.csv)",
+                     (default: artifacts/train_log.csv)
+  --obs MODE         must be `symbolic`: the train_iter artifacts are
+                     lowered against the symbolic ObsSpec (other
+                     stacks error with a pointer to aot.py)",
         "eval" => "\
 usage: xmgrid eval [--benchmark NAME] [--batch B] [--rooms R]
                    [--artifacts-dir DIR]
@@ -291,10 +310,43 @@ fn cmd_help(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_envs() -> Result<()> {
-    for name in registry::registered_environments() {
-        println!("{name}");
+fn cmd_envs(args: &Args) -> Result<()> {
+    if !args.flag("json") {
+        for name in registry::registered_environments() {
+            println!("{name}");
+        }
+        return Ok(());
     }
+    // machine-readable registry: name, kind, grid size, step limit, and
+    // the family's ObsSpec/ActionSpec (derived from the shared
+    // EnvParams — the same single source the engines size buffers from)
+    let mut entries = Vec::new();
+    for spec in registry::XLAND_ENVS.iter() {
+        let params = EnvParams::new(spec.h, spec.w, 1, 1);
+        entries.push(format!(
+            "{{\"name\":\"{}\",\"kind\":\"xland\",\"h\":{},\"w\":{},\
+             \"rooms\":{},\"max_steps\":{},\"obs\":{},\"action\":{}}}",
+            spec.name, spec.h, spec.w, spec.rooms,
+            xmgrid::env::default_max_steps(spec.h, spec.w),
+            params.obs_spec().to_json(),
+            params.action_spec().to_json()
+        ));
+    }
+    for name in registry::MINIGRID_ENVS.iter() {
+        // blueprint geometry is deterministic given a fixed seed
+        let bp = registry::make(name, &mut Rng::new(0));
+        let (h, w) = (bp.base_grid.h, bp.base_grid.w);
+        let params = EnvParams::new(h, w, 1, 1);
+        entries.push(format!(
+            "{{\"name\":\"{name}\",\"kind\":\"minigrid\",\"h\":{h},\
+             \"w\":{w},\"rooms\":0,\"max_steps\":{},\"obs\":{},\
+             \"action\":{}}}",
+            bp.max_steps,
+            params.obs_spec().to_json(),
+            params.action_spec().to_json()
+        ));
+    }
+    println!("{{\"envs\":[{}]}}", entries.join(","));
     Ok(())
 }
 
@@ -400,6 +452,7 @@ fn cmd_rollout(args: &Args) -> Result<()> {
     let batch = args.usize_or("batch", 1024);
     let chunks = args.usize_or("chunks", 4);
     let threads = parse_threads(args)?;
+    let obs_mode = ObsMode::from_flag(&args.str_or("obs", "symbolic"))?;
     let cfg = shard_config(args)?;
     let bench = Arc::new(load_benchmark_with(
         &args.str_or("benchmark", "trivial-1k"), threads)?);
@@ -418,6 +471,15 @@ fn cmd_rollout(args: &Args) -> Result<()> {
     };
 
     let engine = if let Some(manifest) = manifest {
+        if obs_mode != ObsMode::Symbolic {
+            bail!(
+                "--obs {obs_mode} needs the native backend (the xla \
+                 rollout artifacts bake the symbolic spec; image \
+                 observations on xla go through the render_rgb \
+                 artifacts — see the fig13 bench). Re-run with \
+                 --backend native."
+            );
+        }
         if args.get("env").is_some() || args.get("steps").is_some() {
             println!("note: --env/--steps apply to the native backend \
                       only; the xla family/T come from the artifact");
@@ -452,11 +514,11 @@ fn cmd_rollout(args: &Args) -> Result<()> {
             .with_threads(threads);
         println!(
             "backend native: {env_name} (B={batch} T={t} grid {}x{} \
-             rooms {}) shards={} threads={} overlap={}",
-            ncfg.h, ncfg.w, ncfg.rooms, cfg.shards, ncfg.threads,
-            cfg.overlap
+             rooms {}) shards={} threads={} overlap={} obs={obs_mode}",
+            ncfg.params.h, ncfg.params.w, ncfg.rooms, cfg.shards,
+            ncfg.threads, cfg.overlap
         );
-        RolloutEngine::launch_native(ncfg, bench, cfg)?
+        RolloutEngine::launch_native_obs(ncfg, bench, cfg, obs_mode)?
     };
 
     let totals = if cfg.shards == 1 {
@@ -503,6 +565,18 @@ fn pick_train_artifact(manifest: &Manifest, batch: usize)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // --obs: the train_iter artifacts bake the symbolic ObsSpec into
+    // the compiled policy input; other stacks need re-lowered
+    // artifacts, so anything else is an explicit error, not a silent
+    // fallback.
+    let obs_mode = ObsMode::from_flag(&args.str_or("obs", "symbolic"))?;
+    if obs_mode != ObsMode::Symbolic {
+        bail!("train --obs {obs_mode}: the train_iter artifacts are \
+               lowered against the symbolic ObsSpec; re-run \
+               python/compile/aot.py with a different obs head to train \
+               on wrapped observations (rollout --backend native \
+               supports --obs {obs_mode} today)");
+    }
     let scfg = {
         // train defaults its seed to the Table 6 seed, not 0
         let mut c = shard_config(args)?;

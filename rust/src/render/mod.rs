@@ -1,7 +1,10 @@
-//! ASCII rendering for interactive inspection (`xmgrid play`,
-//! examples/quickstart). The RGB rendering path lives in the
-//! `render_rgb_*` AOT artifacts (App. H reproduction).
+//! Rendering: ASCII for interactive inspection (`xmgrid play`,
+//! examples/quickstart) and the native RGB rasterizer behind
+//! `env::api::RgbImageObs` (App. H reproduction; the `render_rgb_*`
+//! AOT artifacts are the device-side twin).
 
 pub mod ascii;
+pub mod rgb;
 
 pub use ascii::{render_grid, render_obs};
+pub use rgb::{rasterize_symbolic, rasterize_symbolic_into, TILE_PATCH};

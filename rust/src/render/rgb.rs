@@ -1,0 +1,215 @@
+//! Native RGB rasterizer for symbolic observations — the Rust analogue
+//! of `python/compile/xmg/render.py` (the Fig. 13 / App. H image
+//! wrapper), so `RgbImageObs` runs with zero artifacts.
+//!
+//! A symbolic `[V, V, 2]` observation renders to `[V*P, V*P, 3]` with
+//! `P` pixels per tile: per cell, a binary-ish tile stencil in the
+//! cell's palette color over a dark floor background — the same
+//! stencils and palette as the JAX renderer, emitted as `0..=255`
+//! integer channels instead of `f32` in `[0, 1]` (a constant scale,
+//! not a semantic difference).
+//!
+//! The rasterizer is a *deterministic pure function* of the symbolic
+//! cells (pinned by a property test in `tests/wrapper_parity.rs`):
+//! same cells in, same pixels out, no state, no RNG.
+
+use crate::env::types::{NUM_COLORS, NUM_TILES, TILE_BALL,
+                        TILE_DOOR_CLOSED, TILE_DOOR_LOCKED,
+                        TILE_DOOR_OPEN, TILE_GOAL, TILE_HEX, TILE_KEY,
+                        TILE_PYRAMID, TILE_SQUARE, TILE_STAR,
+                        TILE_UNSEEN, TILE_WALL};
+
+/// Pixels per tile (matches the `render_rgb_*` artifacts' `P=8`).
+pub const TILE_PATCH: usize = 8;
+
+/// RGB per color id (rows index `COLOR_*`; same table as render.py).
+const PALETTE: [[u8; 3]; NUM_COLORS] = [
+    [0, 0, 0],        // END_OF_MAP
+    [40, 40, 40],     // UNSEEN
+    [0, 0, 0],        // EMPTY
+    [255, 0, 0],      // RED
+    [0, 255, 0],      // GREEN
+    [0, 0, 255],      // BLUE
+    [112, 39, 195],   // PURPLE
+    [255, 255, 0],    // YELLOW
+    [100, 100, 100],  // GREY
+    [20, 20, 20],     // BLACK
+    [255, 140, 0],    // ORANGE
+    [255, 255, 255],  // WHITE
+    [139, 69, 19],    // BROWN
+    [255, 105, 180],  // PINK
+];
+
+/// Dark floor background (render.py's `floor_bg = 0.12`).
+const FLOOR_BG: u8 = 31;
+
+/// Stencil coverage of tile `tile` at centered coordinates
+/// `(yc, xc) ∈ [-1, 1]` — the same shape formulas as
+/// `render.py::_tile_patches`, returned as a 0..=1 weight.
+fn stencil(tile: i32, yc: f32, xc: f32) -> f32 {
+    match tile {
+        TILE_UNSEEN | TILE_WALL => 1.0,
+        TILE_BALL => {
+            if yc * yc + xc * xc <= 0.64 { 1.0 } else { 0.0 }
+        }
+        TILE_SQUARE => {
+            if yc.abs() <= 0.7 && xc.abs() <= 0.7 { 1.0 } else { 0.0 }
+        }
+        TILE_PYRAMID => {
+            if yc >= -0.7 && xc.abs() <= 0.7 * (yc + 0.7) / 1.4 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        TILE_GOAL => 0.6,
+        TILE_KEY => {
+            let bow = yc * yc + xc * xc <= 0.3 && yc < 0.0;
+            let shaft = xc.abs() < 0.18 && (-0.2..=0.8).contains(&yc);
+            if bow || shaft { 1.0 } else { 0.0 }
+        }
+        TILE_DOOR_LOCKED | TILE_DOOR_CLOSED => {
+            if yc.abs() > 0.75 || xc.abs() > 0.75 { 1.0 } else { 0.0 }
+        }
+        TILE_DOOR_OPEN => {
+            if xc.abs() > 0.75 { 1.0 } else { 0.0 }
+        }
+        TILE_HEX => {
+            if yc.abs() + xc.abs() * 0.6 <= 0.8 { 1.0 } else { 0.0 }
+        }
+        TILE_STAR => {
+            if (yc.abs() <= 0.25 || xc.abs() <= 0.25)
+                && yc.abs() <= 0.8
+                && xc.abs() <= 0.8
+            {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        // END_OF_MAP, EMPTY, FLOOR: background only
+        _ => 0.0,
+    }
+}
+
+/// Rasterize a flat symbolic observation (`[V, V, 2]` as `i32`
+/// tile/color pairs, `cells.len() == v*v*2`) into `out`
+/// (`[V*P, V*P, 3]` as `i32` channels in `0..=255`,
+/// `out.len() == v*p*v*p*3`). Pixel `(vr*P+py, vc*P+px)` belongs to
+/// view cell `(vr, vc)` — the render.py memory layout.
+pub fn rasterize_symbolic_into(cells: &[i32], v: usize, p: usize,
+                               out: &mut [i32]) {
+    assert_eq!(cells.len(), v * v * 2, "symbolic obs buffer size");
+    assert_eq!(out.len(), v * p * v * p * 3, "rgb buffer size");
+    let half = p as f32 / 2.0;
+    for vr in 0..v {
+        for vc in 0..v {
+            let tile = cells[(vr * v + vc) * 2]
+                .clamp(0, NUM_TILES as i32 - 1);
+            let color = cells[(vr * v + vc) * 2 + 1]
+                .clamp(0, NUM_COLORS as i32 - 1);
+            let rgb = PALETTE[color as usize];
+            for py in 0..p {
+                let yc = (py as f32 - (p as f32 - 1.0) / 2.0) / half;
+                for px in 0..p {
+                    let xc = (px as f32 - (p as f32 - 1.0) / 2.0) / half;
+                    let fg = stencil(tile, yc, xc);
+                    let row = vr * p + py;
+                    let col = vc * p + px;
+                    let o = (row * v * p + col) * 3;
+                    for ch in 0..3 {
+                        let val = fg * rgb[ch] as f32
+                            + (1.0 - fg) * FLOOR_BG as f32;
+                        out[o + ch] = val.round() as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Allocating convenience form of [`rasterize_symbolic_into`].
+pub fn rasterize_symbolic(cells: &[i32], v: usize, p: usize) -> Vec<i32> {
+    let mut out = vec![0i32; v * p * v * p * 3];
+    rasterize_symbolic_into(cells, v, p, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::types::{COLOR_GREY, COLOR_RED, TILE_FLOOR};
+
+    fn obs_with_center(tile: i32, color: i32, v: usize) -> Vec<i32> {
+        let mut cells = Vec::with_capacity(v * v * 2);
+        for _ in 0..v * v {
+            cells.push(TILE_FLOOR);
+            cells.push(COLOR_GREY);
+        }
+        let c = (v / 2) * v + v / 2;
+        cells[c * 2] = tile;
+        cells[c * 2 + 1] = color;
+        cells
+    }
+
+    #[test]
+    fn floor_renders_background_only() {
+        let v = 3;
+        let img =
+            rasterize_symbolic(&obs_with_center(TILE_FLOOR, COLOR_GREY, v),
+                               v, TILE_PATCH);
+        assert!(img.iter().all(|&x| x == FLOOR_BG as i32));
+    }
+
+    #[test]
+    fn ball_paints_its_tile_block_red() {
+        let v = 3;
+        let p = TILE_PATCH;
+        let img = rasterize_symbolic(&obs_with_center(TILE_BALL,
+                                                      COLOR_RED, v),
+                                     v, p);
+        // center pixel of the center tile is inside the circle: pure red
+        let row = v / 2 * p + p / 2;
+        let col = v / 2 * p + p / 2;
+        let o = (row * v * p + col) * 3;
+        assert_eq!(&img[o..o + 3], &[255, 0, 0]);
+        // a corner tile stays background
+        assert_eq!(img[0], FLOOR_BG as i32);
+    }
+
+    #[test]
+    fn wall_fills_its_block() {
+        let v = 3;
+        let p = TILE_PATCH;
+        let img = rasterize_symbolic(&obs_with_center(TILE_WALL,
+                                                      COLOR_GREY, v),
+                                     v, p);
+        let base = v / 2 * p;
+        for py in 0..p {
+            for px in 0..p {
+                let o = ((base + py) * v * p + base + px) * 3;
+                assert_eq!(img[o], 100, "grey wall pixel");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_value_range() {
+        let v = 5;
+        let cells = obs_with_center(TILE_KEY, COLOR_RED, v);
+        let a = rasterize_symbolic(&cells, v, TILE_PATCH);
+        let b = rasterize_symbolic(&cells, v, TILE_PATCH);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (0..=255).contains(&x)));
+    }
+
+    #[test]
+    fn out_of_range_ids_clamp() {
+        let v = 3;
+        let mut cells = obs_with_center(TILE_BALL, COLOR_RED, v);
+        cells[0] = 999; // bogus tile id
+        cells[1] = -7; // bogus color id
+        let img = rasterize_symbolic(&cells, v, TILE_PATCH);
+        assert!(img.iter().all(|&x| (0..=255).contains(&x)));
+    }
+}

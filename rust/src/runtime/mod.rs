@@ -52,6 +52,16 @@ impl Tensor {
         }
     }
 
+    /// Mutable i32 view — the host-side re-encode path (the xla
+    /// backend's between-chunk task resampling rewrites ruleset rows
+    /// in the resident state tensors).
+    pub fn as_i32_mut(&mut self) -> &mut [i32] {
+        match self {
+            Tensor::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
     pub fn as_u32(&self) -> &[u32] {
         match self {
             Tensor::U32(v) => v,

@@ -131,6 +131,15 @@ impl JsonReport {
     }
 }
 
+/// Read a `usize` bench knob from the environment (the `XMG_*`
+/// variables the CI smoke runs use to cap batch/steps/threads).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Resolve the `--json [PATH]` bench flag: an explicit path wins; the
 /// bare flag means `BENCH_<name>.json` in the working directory; absent
 /// means no JSON output.

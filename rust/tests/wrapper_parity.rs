@@ -1,0 +1,299 @@
+//! Wrapper-stack parity: the composable observation wrappers of
+//! `env::api` must produce **bitwise identical** records over every
+//! stepping surface — wrapped scalar oracle (`SingleEnv<ScalarEnv>`)
+//! vs wrapped serial `VecEnv` vs wrapped chunked `ParVecEnv` — across
+//! registry families, thread counts and auto-reset boundaries. Plus
+//! the `RgbImageObs` purity contract: the rasterized image is a
+//! deterministic pure function of the symbolic observation.
+
+use std::sync::Arc;
+
+use xmgrid::benchgen::{generate_benchmark, Preset};
+use xmgrid::coordinator::workers::ParVecEnv;
+use xmgrid::env::api::{BatchEnvironment, ObsMode, ScalarEnv, SingleEnv};
+use xmgrid::env::registry;
+use xmgrid::env::state::{Ruleset, TaskSource};
+use xmgrid::env::vector::{VecEnv, VecEnvConfig};
+use xmgrid::env::Grid;
+use xmgrid::render::{rasterize_symbolic, TILE_PATCH};
+use xmgrid::util::property_test;
+use xmgrid::util::rng::Rng;
+
+fn small_tasks(n: usize) -> Vec<Ruleset> {
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Small.config(), n).unwrap();
+    rulesets
+}
+
+/// Inputs for `b` instances of one registry family (the
+/// vec_env_equivalence recipe): base grids, rulesets, step limits and
+/// per-env reset streams, plus the family's fixed-width capacities
+/// covering both the initial rulesets and the task source.
+struct FamilyInputs {
+    grids: Vec<Grid>,
+    rss: Vec<Ruleset>,
+    maxs: Vec<i32>,
+    rngs: Vec<Rng>,
+    cfg: VecEnvConfig,
+}
+
+fn family_inputs(name: &str, b: usize, seed: u64,
+                 max_steps_override: Option<i32>,
+                 xland_tasks: &[Ruleset]) -> FamilyInputs {
+    let mut rng = Rng::new(seed);
+    let mut grids = Vec::new();
+    let mut rss: Vec<Ruleset> = Vec::new();
+    let mut maxs = Vec::new();
+    let mut rngs = Vec::new();
+    for i in 0..b {
+        let bp = registry::make(name, &mut rng);
+        let rs = bp.ruleset.clone().unwrap_or_else(|| {
+            xland_tasks[i % xland_tasks.len().max(1)].clone()
+        });
+        maxs.push(max_steps_override.unwrap_or(bp.max_steps));
+        grids.push(bp.base_grid);
+        rss.push(rs);
+        rngs.push(rng.split());
+    }
+    let mr = rss
+        .iter()
+        .chain(xland_tasks.iter())
+        .map(|r| r.rules.len())
+        .max()
+        .unwrap()
+        .max(1);
+    let mi = rss
+        .iter()
+        .chain(xland_tasks.iter())
+        .map(|r| r.init_tiles.len())
+        .max()
+        .unwrap()
+        .max(1);
+    let cfg = VecEnvConfig::new(grids[0].h, grids[0].w, mr, mi);
+    FamilyInputs { grids, rss, maxs, rngs, cfg }
+}
+
+/// Drive a wrapped batch engine and `b` wrapped scalar oracles in
+/// lockstep through `steps` random actions (crossing trial and episode
+/// auto-reset boundaries) and a wrapper-level reset, asserting bitwise
+/// parity of composed observations, rewards, done and trial_done flags
+/// per step and per env.
+fn assert_wrapper_parity(name: &str, b: usize, steps: usize, seed: u64,
+                         max_steps_override: Option<i32>,
+                         xland_tasks: &[Ruleset], threads: usize,
+                         mode: ObsMode) {
+    let inp = family_inputs(name, b, seed, max_steps_override,
+                            xland_tasks);
+    let source: Option<Arc<dyn TaskSource>> = if xland_tasks.is_empty() {
+        None
+    } else {
+        Some(Arc::new(xland_tasks.to_vec()))
+    };
+    let refs: Vec<&Ruleset> = inp.rss.iter().collect();
+
+    // batch side: serial VecEnv at threads==1, chunked ParVecEnv above
+    let engine: Box<dyn BatchEnvironment> = if threads == 1 {
+        let mut venv = VecEnv::new(inp.cfg, b);
+        if let Some(src) = &source {
+            venv.set_task_source(src.clone());
+        }
+        let mut obs = vec![0i32; venv.obs_len()];
+        venv.reset_all(&inp.grids, &refs, &inp.maxs, &inp.rngs,
+                       &mut obs);
+        Box::new(venv)
+    } else {
+        let mut par = ParVecEnv::new(inp.cfg, b, threads);
+        if let Some(src) = &source {
+            par.set_task_source(src.clone());
+        }
+        let mut obs = vec![0i32; par.obs_len()];
+        par.reset_all(&inp.grids, &refs, &inp.maxs, &inp.rngs,
+                      &mut obs);
+        Box::new(par)
+    };
+    let mut batch_env = mode.wrap(engine);
+
+    // scalar side: one wrapped oracle per env slot, same inputs/streams
+    let mut scalars: Vec<Box<dyn BatchEnvironment>> = (0..b)
+        .map(|i| {
+            let mut env = ScalarEnv::new(inp.cfg, inp.grids[i].clone(),
+                                         inp.rss[i].clone(),
+                                         inp.maxs[i],
+                                         inp.rngs[i].clone());
+            if let Some(src) = &source {
+                env = env.with_task_source(src.clone());
+            }
+            mode.wrap(SingleEnv::new(env))
+        })
+        .collect();
+
+    let len = batch_env.obs_spec().len();
+    assert_eq!(scalars[0].obs_spec(), batch_env.obs_spec(),
+               "{name}: specs diverge");
+    let mut bobs = vec![0i32; b * len];
+    let mut brw = vec![0f32; b];
+    let mut bdn = vec![false; b];
+    let mut btr = vec![false; b];
+    let mut sobs = vec![0i32; len];
+    let mut srw = [0f32];
+    let mut sdn = [false];
+    let mut str_ = [false];
+    let mut act = Rng::new(seed ^ 0x5eed);
+
+    for t in 0..steps {
+        let actions: Vec<i32> =
+            (0..b).map(|_| act.below(6) as i32).collect();
+        batch_env
+            .step(&actions, &mut bobs, &mut brw, &mut bdn, &mut btr)
+            .unwrap();
+        for i in 0..b {
+            scalars[i]
+                .step(&actions[i..i + 1], &mut sobs, &mut srw,
+                      &mut sdn, &mut str_)
+                .unwrap();
+            assert_eq!(&bobs[i * len..(i + 1) * len], &sobs[..],
+                       "{name} t{threads} {mode}: step {t} env {i} obs");
+            assert_eq!(brw[i].to_bits(), srw[0].to_bits(),
+                       "{name} t{threads} {mode}: step {t} env {i} \
+                        reward");
+            assert_eq!(bdn[i], sdn[0],
+                       "{name} t{threads} {mode}: step {t} env {i} done");
+            assert_eq!(btr[i], str_[0],
+                       "{name} t{threads} {mode}: step {t} env {i} \
+                        trial");
+        }
+    }
+
+    // wrapper-level reset parity: batch restarts split per-env streams
+    // off one rng in env order; the scalar loop consumes the same rng
+    // in the same order
+    let mut rng_a = Rng::new(seed ^ 0xABCD);
+    let mut rng_b = Rng::new(seed ^ 0xABCD);
+    batch_env.reset(&mut rng_a, &mut bobs).unwrap();
+    for i in 0..b {
+        scalars[i].reset(&mut rng_b, &mut sobs).unwrap();
+        assert_eq!(&bobs[i * len..(i + 1) * len], &sobs[..],
+                   "{name} t{threads} {mode}: reset env {i} obs");
+    }
+}
+
+/// The full matrix one family at a time: every wrapper mode over the
+/// serial engine and the chunked engine at 8 threads. Short episode
+/// limits force trial and episode boundaries (and task resampling on
+/// the XLand family).
+fn family_matrix(name: &str, xland_tasks: &[Ruleset], seed: u64,
+                 max_steps_override: Option<i32>) {
+    for threads in [1usize, 8] {
+        for mode in [ObsMode::Symbolic, ObsMode::Direction,
+                     ObsMode::RulesGoals, ObsMode::Rgb]
+        {
+            assert_wrapper_parity(name, 4, 26, seed, max_steps_override,
+                                  xland_tasks, threads, mode);
+        }
+    }
+}
+
+#[test]
+fn xland_family_wrapped_parity_with_task_resampling() {
+    let tasks = small_tasks(6);
+    family_matrix("XLand-MiniGrid-R1-9x9", &tasks, 17, Some(7));
+}
+
+#[test]
+fn minigrid_door_key_wrapped_parity() {
+    family_matrix("MiniGrid-DoorKey-8x8", &[], 29, Some(9));
+}
+
+#[test]
+fn minigrid_memory_wrapped_parity_nonsquare_grid() {
+    family_matrix("MiniGrid-MemoryS16", &[], 41, Some(8));
+}
+
+/// `RgbImageObs` purity, engine-level: a wrapped engine's image equals
+/// rasterizing the raw engine's symbolic observation, step for step —
+/// the wrapper adds no state of its own.
+#[test]
+fn rgb_image_obs_is_pure_function_of_symbolic_obs() {
+    let tasks = small_tasks(4);
+    let inp = family_inputs("XLand-MiniGrid-R1-9x9", 3, 5, Some(6),
+                            &tasks);
+    let refs: Vec<&Ruleset> = inp.rss.iter().collect();
+    let src: Arc<dyn TaskSource> = Arc::new(tasks.clone());
+
+    let mut raw = VecEnv::new(inp.cfg, 3);
+    raw.set_task_source(src.clone());
+    let mut wrapped_inner = VecEnv::new(inp.cfg, 3);
+    wrapped_inner.set_task_source(src);
+    let v = inp.cfg.opts.view_size;
+    let sym_len = inp.cfg.obs_len();
+
+    let mut raw_obs = vec![0i32; raw.obs_len()];
+    raw.reset_all(&inp.grids, &refs, &inp.maxs, &inp.rngs,
+                  &mut raw_obs);
+    let mut w_obs0 = vec![0i32; wrapped_inner.obs_len()];
+    wrapped_inner.reset_all(&inp.grids, &refs, &inp.maxs, &inp.rngs,
+                            &mut w_obs0);
+    let mut wrapped = ObsMode::Rgb.wrap(wrapped_inner);
+
+    let img_len = wrapped.obs_spec().len();
+    let mut img = vec![0i32; 3 * img_len];
+    let (mut rw, mut dn, mut tr) =
+        (vec![0f32; 3], vec![false; 3], vec![false; 3]);
+    let (mut rw2, mut dn2, mut tr2) =
+        (rw.clone(), dn.clone(), tr.clone());
+    let mut act = Rng::new(2);
+    for step in 0..18 {
+        let actions: Vec<i32> =
+            (0..3).map(|_| act.below(6) as i32).collect();
+        raw.step_all(&actions, &mut raw_obs, &mut rw, &mut dn, &mut tr);
+        wrapped
+            .step(&actions, &mut img, &mut rw2, &mut dn2, &mut tr2)
+            .unwrap();
+        for i in 0..3 {
+            let sym = &raw_obs[i * sym_len..(i + 1) * sym_len];
+            let expect = rasterize_symbolic(sym, v, TILE_PATCH);
+            assert_eq!(&img[i * img_len..(i + 1) * img_len],
+                       &expect[..],
+                       "step {step} env {i}: image != f(symbolic)");
+        }
+    }
+}
+
+/// Rasterizer purity on arbitrary (even invalid) symbolic records:
+/// deterministic, range-bounded, and local — editing one cell touches
+/// only that cell's `P×P` pixel block.
+#[test]
+fn rasterizer_property_deterministic_and_local() {
+    property_test("rgb-rasterizer", 30, |rng| {
+        let v = 5;
+        let p = TILE_PATCH;
+        let mut cells: Vec<i32> = (0..v * v)
+            .flat_map(|_| {
+                [rng.below(20) as i32 - 2, rng.below(20) as i32 - 2]
+            })
+            .collect();
+        let a = rasterize_symbolic(&cells, v, p);
+        let b = rasterize_symbolic(&cells, v, p);
+        assert_eq!(a, b, "deterministic");
+        assert!(a.iter().all(|&x| (0..=255).contains(&x)), "range");
+
+        // locality: flip one cell, diff confined to its pixel block
+        let edit = rng.below(v * v);
+        cells[edit * 2] = rng.below(15) as i32;
+        cells[edit * 2 + 1] = rng.below(14) as i32;
+        let c = rasterize_symbolic(&cells, v, p);
+        let (er, ec) = (edit / v, edit % v);
+        for row in 0..v * p {
+            for col in 0..v * p {
+                let inside = (er * p..(er + 1) * p).contains(&row)
+                    && (ec * p..(ec + 1) * p).contains(&col);
+                if !inside {
+                    let o = (row * v * p + col) * 3;
+                    assert_eq!(&a[o..o + 3], &c[o..o + 3],
+                               "pixel ({row},{col}) outside the edited \
+                                block changed");
+                }
+            }
+        }
+    });
+}
