@@ -6,21 +6,29 @@
 //! Sections, in order:
 //! 1. native vectorized backend — `VecEnv` SoA batch kernels (always
 //!    runs, no artifacts needed);
-//! 2. native threads scaling — the same batch chunked over the
+//! 2. occluded 9x9 hot path — the zero-redundancy kernels (gather
+//!    tables, bitmask occlusion, direct i32 obs writes, cached
+//!    placement, packed cells) timed against an in-bench replica of the
+//!    pre-overhaul step path ([`LegacyVecEnv`]) on the same inputs in
+//!    the same run; also measures the obs-write share of step time;
+//! 3. native threads scaling — the same batch chunked over the
 //!    `ParVecEnv` persistent worker pool (`--threads` axis; steps/s vs
 //!    thread count, bitwise-identical output by construction);
-//! 3. benchmark-generation throughput — rulesets/s vs thread count for
+//! 4. benchmark-generation throughput — rulesets/s vs thread count for
 //!    the parallel §3 generator;
-//! 4. scalar per-env loop baseline — the allocating `step()` oracle, the
+//! 5. scalar per-env loop baseline — the allocating `step()` oracle, the
 //!    EnvPool-style comparison point;
-//! 5. artifact-backed fused rollout + per-step dispatch (skipped with a
+//! 6. artifact-backed fused rollout + per-step dispatch (skipped with a
 //!    note when no PJRT runtime / artifacts are present).
 //!
 //! `--json [PATH]` writes `BENCH_fig5a_native.json` (machine-readable
-//! perf trajectory; validated by the CI smoke run). Env knobs:
-//! `XMG_MAX_B` caps the batch sweep, `XMG_BENCH_T` sets steps/chunk,
-//! `XMG_MAX_THREADS` caps the thread sweep, `XMG_GEN_N` sizes the
-//! generation-throughput run.
+//! perf trajectory; validated by the CI smoke run). Every row carries
+//! `steps_per_sec`; the `obs_fraction` metric is the observation-write
+//! share of new-path step time, and `occluded_new_vs_legacy` is the
+//! same-run speedup of the zero-redundancy kernels over the pre-PR
+//! path. Env knobs: `XMG_MAX_B` caps the batch sweep, `XMG_BENCH_T`
+//! sets steps/chunk, `XMG_MAX_THREADS` caps the thread sweep,
+//! `XMG_GEN_N` sizes the generation-throughput run.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -30,8 +38,17 @@ use xmgrid::benchgen::{generate_benchmark, generate_benchmark_par,
 use xmgrid::coordinator::metrics::fmt_sps;
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::{EnvPool, NativeEnvConfig, NativePool};
-use xmgrid::env::state::{reset, step, EnvOptions};
-use xmgrid::env::Grid;
+use xmgrid::env::goals::check_goal;
+use xmgrid::env::layouts::xland_layout;
+use xmgrid::env::observation::{reference, Obs};
+use xmgrid::env::rules::check_rules;
+use xmgrid::env::state::{apply_action, default_max_steps,
+                         is_acting_action, reset, step, EnvOptions,
+                         Ruleset, TaskSource};
+use xmgrid::env::types::{Cell, END_OF_MAP_CELL, NUM_ACTIONS,
+                         POCKET_EMPTY, TILE_FLOOR};
+use xmgrid::env::vector::{VecEnv, VecEnvConfig};
+use xmgrid::env::{CellGrid, Goal, Grid, Rule};
 use xmgrid::runtime::Runtime;
 use xmgrid::util::args::Args;
 use xmgrid::util::bench::{bench, env_usize, json_arg_path, JsonReport};
@@ -78,6 +95,112 @@ fn main() {
             native_1024 = Some(sps);
         }
     }
+
+    // --- occluded 9x9 hot path: new kernels vs pre-PR replica -----------
+    // Occlusion exercises the full kernel stack (gather table + bitmask
+    // visibility); the legacy replica runs the pre-overhaul per-step
+    // work — branchy gather, multi-sweep flood fill, Obs fill + flatten
+    // second pass, full rule table, O(H·W) placement rescans, Cell-wide
+    // grids, per-boundary Arc clones — on identical inputs, same run.
+    let ob = 1024usize.min(max_b);
+    println!("\n# occluded 9x9 hot path (view 5, see_through_walls=off), \
+              single thread, B={ob}");
+    let opts_occ = EnvOptions { view_size: 5, see_through_walls: false };
+    let occ_mr = bench_tasks.rulesets.iter().map(|r| r.rules.len())
+        .max().unwrap_or(0).max(1);
+    let occ_mi = bench_tasks.rulesets.iter().map(|r| r.init_tiles.len())
+        .max().unwrap_or(0).max(1);
+    let occ_cfg = VecEnvConfig { h: 9, w: 9, max_rules: occ_mr,
+                                 max_init: occ_mi, opts: opts_occ };
+    let mut lay_rng = Rng::new(11);
+    let occ_grids: Vec<Grid> =
+        (0..ob).map(|_| xland_layout(1, 9, 9, &mut lay_rng)).collect();
+    let occ_rs: Vec<&Ruleset> = (0..ob)
+        .map(|i| &bench_tasks.rulesets[i % bench_tasks.num_rulesets()])
+        .collect();
+    let occ_maxs = vec![default_max_steps(9, 9); ob];
+    let occ_rngs: Vec<Rng> =
+        (0..ob).map(|k| Rng::new(9_000 + k as u64)).collect();
+    let occ_tasks: Arc<dyn TaskSource> =
+        Arc::new(bench_tasks.rulesets.clone());
+
+    let mut venv = VecEnv::new(occ_cfg, ob);
+    venv.set_task_source(occ_tasks.clone());
+    let mut legacy = LegacyVecEnv::new(occ_cfg, ob);
+    legacy.set_task_source(occ_tasks.clone());
+    let mut obs_n = vec![0i32; venv.obs_len()];
+    let mut obs_l = vec![0i32; legacy.obs_len()];
+    venv.reset_all(&occ_grids, &occ_rs, &occ_maxs, &occ_rngs,
+                   &mut obs_n);
+    legacy.reset_all(&occ_grids, &occ_rs, &occ_maxs, &occ_rngs,
+                     &mut obs_l);
+    assert_eq!(obs_n, obs_l,
+               "legacy replica diverged from the engine at reset");
+    let mut rewards = vec![0f32; ob];
+    let mut dones = vec![false; ob];
+    let mut trials = vec![false; ob];
+    {
+        // one lockstep step pins the replica before the timed runs
+        let mut ar = Rng::new(3);
+        let acts: Vec<i32> =
+            (0..ob).map(|_| ar.below(NUM_ACTIONS) as i32).collect();
+        venv.step_all(&acts, &mut obs_n, &mut rewards, &mut dones,
+                      &mut trials);
+        let (mut r2, mut d2, mut t2) =
+            (rewards.clone(), dones.clone(), trials.clone());
+        legacy.step_all(&acts, &mut obs_l, &mut r2, &mut d2, &mut t2);
+        assert_eq!(obs_n, obs_l,
+                   "legacy replica diverged from the engine at step 1");
+        assert_eq!(rewards.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                   r2.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                   "legacy replica reward divergence");
+    }
+    let mut actions = vec![0i32; ob];
+    let mut act_n = Rng::new(7);
+    let res_new = bench("occluded-new", 1, 3, || {
+        for _ in 0..t_steps {
+            for a in actions.iter_mut() {
+                *a = act_n.below(NUM_ACTIONS) as i32;
+            }
+            venv.step_all(&actions, &mut obs_n, &mut rewards,
+                          &mut dones, &mut trials);
+        }
+    });
+    let sps_new = (ob * t_steps) as f64 / res_new.min_secs;
+    println!("new    envs={ob:<6} steps/s={sps_new:<12.0} ({})",
+             fmt_sps(sps_new));
+    report.add(&format!("native-occluded-9x9-new-b{ob}"), ob, t_steps,
+               &res_new);
+
+    let mut act_l = Rng::new(7);
+    let res_old = bench("occluded-legacy", 1, 3, || {
+        for _ in 0..t_steps {
+            for a in actions.iter_mut() {
+                *a = act_l.below(NUM_ACTIONS) as i32;
+            }
+            legacy.step_all(&actions, &mut obs_l, &mut rewards,
+                            &mut dones, &mut trials);
+        }
+    });
+    let sps_old = (ob * t_steps) as f64 / res_old.min_secs;
+    println!("legacy envs={ob:<6} steps/s={sps_old:<12.0} ({})",
+             fmt_sps(sps_old));
+    report.add(&format!("native-occluded-9x9-legacy-b{ob}"), ob,
+               t_steps, &res_old);
+    println!("# zero-redundancy vs pre-PR hot path at B={ob}: {:.2}x",
+             sps_new / sps_old);
+    report.metric("occluded_new_vs_legacy", sps_new / sps_old);
+
+    // obs-write share of step time: one full-batch obs render timed
+    // against one full-batch step (whose cost includes that render)
+    let res_obs = bench("occluded-obs-only", 1, 3, || {
+        venv.write_obs_all(&mut obs_n);
+    });
+    let obs_fraction =
+        res_obs.min_secs / (res_new.min_secs / t_steps as f64);
+    println!("# obs-write share of new-path step time: {:.1}%",
+             obs_fraction * 100.0);
+    report.metric("obs_fraction", obs_fraction);
 
     // --- threads scaling: chunked ParVecEnv worker pool -----------------
     let max_threads = env_usize("XMG_MAX_THREADS", 8);
@@ -276,5 +399,256 @@ fn main() {
     if let Some(path) = json_arg_path(&args, "fig5a_native") {
         report.write(&path).expect("writing bench json");
         println!("# wrote {}", path.display());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pre-PR step-path replica (the measured "before")
+// ---------------------------------------------------------------------------
+
+/// `CellGrid` over one env's slice of a `(i32, i32)` `Cell` grid tensor
+/// — the pre-packed-cell storage format the legacy replica steps on.
+struct CellView<'a> {
+    h: usize,
+    w: usize,
+    cells: &'a mut [Cell],
+}
+
+impl CellGrid for CellView<'_> {
+    fn h(&self) -> usize {
+        self.h
+    }
+
+    fn w(&self) -> usize {
+        self.w
+    }
+
+    fn get_i(&self, r: i32, c: i32) -> Cell {
+        if self.in_bounds(r, c) {
+            self.cells[r as usize * self.w + c as usize]
+        } else {
+            END_OF_MAP_CELL
+        }
+    }
+
+    fn set_i(&mut self, r: i32, c: i32, cell: Cell) {
+        if self.in_bounds(r, c) {
+            self.cells[r as usize * self.w + c as usize] = cell;
+        }
+    }
+}
+
+/// In-bench replica of the pre-overhaul `VecEnv` step path, built from
+/// the same shared transition kernels (`apply_action` / `check_rules` /
+/// `check_goal`) so the semantics are bitwise-identical to the engine —
+/// only the per-step *work* differs, reproducing what this PR deleted:
+///
+/// - `(i32, i32)` `Cell` grids (double the memory traffic of packed);
+/// - branchy per-cell gather + multi-sweep flood-fill occlusion
+///   (`observation::reference`), then an `Obs` fill plus a
+///   `write_flat_into` second pass per observation;
+/// - the full fixed-width rule table on every acting step;
+/// - an O(H·W) floor rescan on every trial placement;
+/// - a task-source `Arc` clone at every episode boundary.
+struct LegacyVecEnv {
+    cfg: VecEnvConfig,
+    b: usize,
+    base: Vec<Cell>,
+    grid: Vec<Cell>,
+    agent_pos: Vec<i32>,
+    agent_dir: Vec<i32>,
+    pocket: Vec<Cell>,
+    rules: Vec<Rule>,
+    goals: Vec<Goal>,
+    init: Vec<Cell>,
+    init_len: Vec<u32>,
+    step_count: Vec<i32>,
+    max_steps: Vec<i32>,
+    rngs: Vec<Rng>,
+    tasks: Option<Arc<dyn TaskSource>>,
+    free_scratch: Vec<usize>,
+    obs_scratch: Obs,
+    transparent: Vec<bool>,
+    vis: Vec<bool>,
+}
+
+impl LegacyVecEnv {
+    fn new(cfg: VecEnvConfig, b: usize) -> LegacyVecEnv {
+        let ghw = cfg.h * cfg.w;
+        let zero = Cell::new(0, 0);
+        LegacyVecEnv {
+            cfg,
+            b,
+            base: vec![zero; b * ghw],
+            grid: vec![zero; b * ghw],
+            agent_pos: vec![0; b * 2],
+            agent_dir: vec![0; b],
+            pocket: vec![POCKET_EMPTY; b],
+            rules: vec![Rule::EMPTY; b * cfg.max_rules],
+            goals: vec![Goal::EMPTY; b],
+            init: vec![zero; b * cfg.max_init],
+            init_len: vec![0; b],
+            step_count: vec![0; b],
+            max_steps: vec![0; b],
+            rngs: vec![Rng::new(0); b],
+            tasks: None,
+            free_scratch: Vec::with_capacity(ghw),
+            obs_scratch: Obs::empty(cfg.opts.view_size),
+            transparent: Vec::new(),
+            vis: Vec::new(),
+        }
+    }
+
+    fn set_task_source(&mut self, tasks: Arc<dyn TaskSource>) {
+        self.tasks = Some(tasks);
+    }
+
+    fn obs_len(&self) -> usize {
+        self.b * self.cfg.obs_len()
+    }
+
+    fn reset_all(&mut self, grids: &[Grid], rulesets: &[&Ruleset],
+                 max_steps: &[i32], rngs: &[Rng], obs_out: &mut [i32]) {
+        assert_eq!(grids.len(), self.b);
+        assert_eq!(obs_out.len(), self.obs_len());
+        for i in 0..self.b {
+            self.reset_env(i, &grids[i], rulesets[i], max_steps[i],
+                           rngs[i].clone());
+            self.observe_env(i, obs_out);
+        }
+    }
+
+    fn step_all(&mut self, actions: &[i32], obs_out: &mut [i32],
+                rewards: &mut [f32], dones: &mut [bool],
+                trial_dones: &mut [bool]) {
+        for i in 0..self.b {
+            let (reward, done, trial_done) = self.step_env(i, actions[i]);
+            rewards[i] = reward;
+            dones[i] = done;
+            trial_dones[i] = trial_done;
+            self.observe_env(i, obs_out);
+        }
+    }
+
+    fn reset_env(&mut self, i: usize, base: &Grid, ruleset: &Ruleset,
+                 max_steps: i32, mut rng: Rng) {
+        self.encode_task(i, ruleset);
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let g0 = i * h * w;
+        self.base[g0..g0 + h * w].copy_from_slice(base.cells());
+        self.max_steps[i] = max_steps;
+        self.pocket[i] = POCKET_EMPTY;
+        self.step_count[i] = 0;
+        self.place(i, &mut rng);
+        self.rngs[i] = rng;
+    }
+
+    fn step_env(&mut self, i: usize, action: i32) -> (f32, bool, bool) {
+        let action = action.clamp(0, NUM_ACTIONS as i32 - 1);
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let g0 = i * h * w;
+        let mr = self.cfg.max_rules;
+        let mut pos = (self.agent_pos[i * 2], self.agent_pos[i * 2 + 1]);
+        let mut dir = self.agent_dir[i];
+        let mut pocket = self.pocket[i];
+        let achieved;
+        {
+            let mut g = CellView {
+                h,
+                w,
+                cells: &mut self.grid[g0..g0 + h * w],
+            };
+            apply_action(&mut g, &mut pos, &mut dir, &mut pocket,
+                         action);
+            // pre-PR: the whole fixed-width table, padding included
+            if is_acting_action(action) {
+                check_rules(&mut g, pos, &mut pocket,
+                            &self.rules[i * mr..(i + 1) * mr]);
+            }
+            achieved = check_goal(&g, pos, pocket, &self.goals[i]);
+        }
+        let new_step = self.step_count[i] + 1;
+        let done = new_step >= self.max_steps[i];
+        let reward = if achieved {
+            1.0 - 0.9 * new_step as f32
+                / self.max_steps[i].max(1) as f32
+        } else {
+            0.0
+        };
+        self.agent_pos[i * 2] = pos.0;
+        self.agent_pos[i * 2 + 1] = pos.1;
+        self.agent_dir[i] = dir;
+        self.pocket[i] = pocket;
+        let trial_done = achieved || done;
+        if trial_done {
+            if done {
+                // pre-PR: Arc clone per episode boundary
+                if let Some(ts) = self.tasks.clone() {
+                    let t = self.rngs[i].below(ts.num_tasks());
+                    self.encode_task(i, ts.task(t));
+                }
+            }
+            let mut sub = self.rngs[i].split();
+            self.place(i, &mut sub);
+            self.pocket[i] = POCKET_EMPTY;
+        }
+        self.step_count[i] = if done { 0 } else { new_step };
+        (reward, done, trial_done)
+    }
+
+    fn encode_task(&mut self, i: usize, ruleset: &Ruleset) {
+        let mr = self.cfg.max_rules;
+        let mi = self.cfg.max_init;
+        for j in 0..mr {
+            self.rules[i * mr + j] =
+                ruleset.rules.get(j).copied().unwrap_or(Rule::EMPTY);
+        }
+        self.goals[i] = ruleset.goal;
+        for j in 0..mi {
+            self.init[i * mi + j] = ruleset.init_tiles.get(j).copied()
+                .unwrap_or(Cell::new(0, 0));
+        }
+        self.init_len[i] = ruleset.init_tiles.len() as u32;
+    }
+
+    fn place(&mut self, i: usize, rng: &mut Rng) {
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let g0 = i * h * w;
+        let grid = &mut self.grid[g0..g0 + h * w];
+        grid.copy_from_slice(&self.base[g0..g0 + h * w]);
+        // pre-PR: rescan the whole grid for floor cells on every trial
+        self.free_scratch.clear();
+        for (p, cell) in grid.iter().enumerate() {
+            if cell.tile == TILE_FLOOR {
+                self.free_scratch.push(p);
+            }
+        }
+        let k = self.init_len[i] as usize;
+        assert!(self.free_scratch.len() > k);
+        rng.partial_shuffle(&mut self.free_scratch, k + 1);
+        let init = &self.init[i * self.cfg.max_init..];
+        for j in 0..k {
+            grid[self.free_scratch[j]] = init[j];
+        }
+        let agent_flat = self.free_scratch[k];
+        self.agent_pos[i * 2] = (agent_flat / w) as i32;
+        self.agent_pos[i * 2 + 1] = (agent_flat % w) as i32;
+        self.agent_dir[i] = rng.below(4) as i32;
+    }
+
+    fn observe_env(&mut self, i: usize, obs_out: &mut [i32]) {
+        let (h, w) = (self.cfg.h, self.cfg.w);
+        let v = self.cfg.opts.view_size;
+        let g0 = i * h * w;
+        let pos = (self.agent_pos[i * 2], self.agent_pos[i * 2 + 1]);
+        let dir = self.agent_dir[i];
+        let cv = CellView { h, w, cells: &mut self.grid[g0..g0 + h * w] };
+        // pre-PR: Obs fill, then a flatten second pass
+        reference::observe_into(&cv, pos, dir, v,
+                                self.cfg.opts.see_through_walls,
+                                &mut self.obs_scratch,
+                                &mut self.transparent, &mut self.vis);
+        self.obs_scratch.write_flat_into(
+            &mut obs_out[i * v * v * 2..(i + 1) * v * v * 2]);
     }
 }

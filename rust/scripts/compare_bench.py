@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Advisory throughput diff between a freshly regenerated bench JSON and
+the committed baseline.
+
+Usage: compare_bench.py NEW_JSON BASELINE_JSON [--threshold 0.10]
+
+Matches rows by label and compares `steps_per_sec` (falling back to the
+older `sps` key for pre-rename baselines). Regressions beyond the
+threshold are printed as GitHub Actions `::warning::` annotations;
+improvements and small moves are listed informationally. Exits 0 always
+— this step is advisory (CI marks it continue-on-error anyway): absolute
+throughput on shared runners is noisy, so regressions flag for a human
+rather than gate the merge.
+"""
+import json
+import sys
+
+
+def rows_by_label(path):
+    """label -> (steps_per_sec, envs, steps). A throughput only means
+    anything relative to its batch size, so envs rides along and rows
+    measured at different batch sizes are never compared."""
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        sps = row.get("steps_per_sec", row.get("sps"))
+        if isinstance(sps, (int, float)) and sps > 0:
+            out[row["label"]] = (float(sps), row.get("envs"),
+                                 row.get("steps"))
+    return out
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 0
+    new_path, base_path = argv[1], argv[2]
+    threshold = 0.10
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+
+    new = rows_by_label(new_path)
+    base = rows_by_label(base_path)
+    if not base:
+        print(f"baseline {base_path} has no measured rows; "
+              "skipping the throughput diff (first measured run "
+              "should be committed as the new baseline)")
+        return 0
+    if not new:
+        print(f"::warning::{new_path} has no measured rows to compare")
+        return 0
+
+    regressions = 0
+    compared = 0
+    for label in sorted(new):
+        n_sps, n_envs, n_steps = new[label]
+        if label not in base:
+            print(f"  {label:<34} new row ({n_sps:,.0f} steps/s)")
+            continue
+        b_sps, b_envs, b_steps = base[label]
+        if n_envs != b_envs:
+            # different batch size (e.g. CI smoke XMG_MAX_B vs a full
+            # local run): throughputs are not comparable — skip, loudly
+            print(f"  {label:<34} skipped: envs {b_envs} -> {n_envs} "
+                  "(different benchmark config, not comparable)")
+            continue
+        compared += 1
+        ratio = n_sps / b_sps
+        note = ""
+        if n_steps != b_steps:
+            note = f"  [steps/chunk {b_steps} -> {n_steps}]"
+        if ratio < 1.0 - threshold:
+            regressions += 1
+            print(f"::warning title=throughput regression::{label}: "
+                  f"{b_sps:,.0f} -> {n_sps:,.0f} steps/s "
+                  f"({(1.0 - ratio) * 100.0:.1f}% slower than the "
+                  f"committed baseline)")
+        print(f"  {label:<34} {b_sps:>14,.0f} -> "
+              f"{n_sps:>14,.0f} steps/s  ({ratio:5.2f}x){note}")
+    dropped = sorted(set(base) - set(new))
+    for label in dropped:
+        print(f"  {label:<34} missing from the new run")
+    print(f"compared {compared} rows; "
+          f"{regressions} regression(s) beyond "
+          f"{threshold * 100:.0f}% (advisory)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -26,7 +26,10 @@
 //! worker (owned, recycled — no steady-state allocation) and collects
 //! them back in chunk order. For rollout chunks the whole `T`-step loop
 //! runs worker-side off one dispatch, so synchronization cost is per
-//! chunk, not per step.
+//! chunk, not per step. Each chunk's `VecEnv` carries its own packed
+//! grids, gather-table cache and free-cell lists (docs/ARCHITECTURE.md
+//! "Hot-path anatomy"), so the zero-redundancy per-step kernels run
+//! unchanged inside every worker.
 
 use std::sync::Arc;
 

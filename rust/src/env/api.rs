@@ -496,8 +496,10 @@ impl Environment for ScalarEnv {
 
     fn reset(&mut self, mut rng: Rng) -> TimeStep {
         // episode-boundary RNG discipline (matches VecEnv::restart):
-        // one task draw on the env stream, then a split for placement
-        if let Some(ts) = self.tasks.clone() {
+        // one task draw on the env stream, then a split for placement.
+        // The source is borrowed, not Arc-cloned (same episode-boundary
+        // rule as the batch engines).
+        if let Some(ts) = self.tasks.as_deref() {
             let t = rng.below(ts.num_tasks());
             self.state.ruleset = ts.task(t).clone();
         }

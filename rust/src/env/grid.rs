@@ -109,7 +109,12 @@ impl Grid {
         &self.cells
     }
 
-    /// Row-major indices of floor cells (candidate object/agent positions).
+    /// Row-major indices of floor cells (candidate object/agent
+    /// positions). The scalar reset path scans here; the SoA engines
+    /// cache the same row-major list per env at reset time
+    /// (`VecEnv::free_base`) so trial placements never rescan — both
+    /// orders are identical, which keeps the placement RNG draws
+    /// bitwise-parallel across surfaces.
     pub fn free_cells(&self) -> Vec<usize> {
         self.cells
             .iter()

@@ -28,5 +28,5 @@ pub use rules::Rule;
 pub use state::{default_max_steps, reset, step, step_with,
                 step_with_tasks, EnvOptions, Ruleset, State, StepInfo,
                 StepOutput, TaskSource};
-pub use types::Cell;
+pub use types::{Cell, PackedCell};
 pub use vector::{VecEnv, VecEnvConfig, VecEnvSnapshot};

@@ -3,8 +3,35 @@
 //!
 //! V×V window, agent at bottom-center `(V-1, V/2)` facing up; cells are
 //! `(tile, color)` symbol pairs; outside the grid reads END_OF_MAP; with
-//! `see_through_walls == false`, a flood-fill visibility pass marks
-//! occluded cells UNSEEN (identical fixed-point to the JAX version).
+//! `see_through_walls == false`, a visibility pass marks occluded cells
+//! UNSEEN (identical fixed point to the JAX flood fill).
+//!
+//! # Hot-path kernels (docs/ARCHITECTURE.md "Hot-path anatomy")
+//!
+//! The per-step kernels here are branch-free where the naive forms
+//! branch per cell:
+//!
+//! - **gather tables**: the view→world offset `(dr, dc)` of every view
+//!   cell is a pure function of `(agent_dir, view_size, vr, vc)`; the
+//!   per-cell `match agent_dir` of the original kernel is replaced by a
+//!   `[4, V, V]` offset table built once per view size and cached in
+//!   [`ObsScratch`] ([`reference::gather_offset`] is the generating
+//!   formula and the property-test oracle);
+//! - **bitmask occlusion**: visibility over the V×V window is one `u64`
+//!   (V ≤ 8 ⇒ V² ≤ 64 bits). [`visibility_mask`] propagates light with
+//!   four shifts per round (up/down = `>> V`/`<< V`, left/right = `>> 1`
+//!   /`<< 1` under column-edge masks) to the same monotone fixed point
+//!   as the original O(V²)-sweep flood fill
+//!   ([`reference::flood_fill_vis`]), in O(V) word ops;
+//! - **direct i32 writes**: [`observe_flat_into`] renders straight into
+//!   the caller's `[V, V, 2]` i32 slice — the batch engines' path,
+//!   which deletes the intermediate `Obs{Vec<Cell>}` fill plus
+//!   `write_flat_into` second pass the old `observe_env` did.
+//!
+//! Every kernel is pinned bitwise to the [`reference`] implementations
+//! by `tests/obs_kernels.rs`, and the engine-level parity suites
+//! (`vec_env_equivalence`, `wrapper_parity`, `native_threads`) pin the
+//! composition.
 
 use super::grid::{CellGrid, Grid};
 use super::types::*;
@@ -37,9 +64,11 @@ impl Obs {
         out
     }
 
-    /// [`Obs::to_flat`] into a caller-owned slice — the allocation-free
-    /// form the batch engines and the unified-API surfaces share
-    /// (`out.len()` must be `cells.len() * 2`).
+    /// [`Obs::to_flat`] into a caller-owned slice (`out.len()` must be
+    /// `cells.len() * 2`). The batch engines no longer pass through
+    /// here — they render with [`observe_flat_into`] — but the scalar
+    /// [`TimeStep`](super::api::TimeStep) surface still flattens its
+    /// `Obs`.
     pub fn write_flat_into(&self, out: &mut [i32]) {
         assert_eq!(out.len(), self.cells.len() * 2,
                    "flat obs buffer size");
@@ -59,93 +88,174 @@ impl Obs {
     }
 }
 
-/// Reusable occlusion scratch for [`observe_into`]: after warm-up, the
-/// flood-fill runs without touching the allocator.
+/// Reusable per-engine scratch for the observe kernels: caches the
+/// `[4, V, V]` gather-offset table for the engine's view size, so the
+/// steady-state kernels do table lookups only — no per-cell direction
+/// branches, no allocation. Occlusion state is a `u64` on the stack and
+/// needs no scratch at all.
 #[derive(Default)]
 pub struct ObsScratch {
-    transparent: Vec<bool>,
-    vis: Vec<bool>,
+    /// flat `[dir][vr][vc] -> (dr, dc)` table, `4 * gather_v²` entries
+    gather: Vec<(i32, i32)>,
+    /// view size the table was built for (0 = not built yet)
+    gather_v: usize,
 }
 
 impl ObsScratch {
     pub fn new() -> ObsScratch {
         ObsScratch::default()
     }
+
+    /// Build the gather table for `v` if the cache holds a different
+    /// view size (engines have one fixed view size, so this runs once).
+    fn ensure_gather(&mut self, v: usize) {
+        if self.gather_v == v {
+            return;
+        }
+        self.gather.clear();
+        self.gather.reserve(4 * v * v);
+        for dir in 0..4i32 {
+            for vr in 0..v as i32 {
+                for vc in 0..v as i32 {
+                    self.gather
+                        .push(reference::gather_offset(dir, v as i32, vr,
+                                                       vc));
+                }
+            }
+        }
+        self.gather_v = v;
+    }
+}
+
+/// Visibility mask over an `n`×`n` window as a `u64` bitset (bit `r*n +
+/// c`; requires `n*n <= 64`). Light starts at the agent cell `(n-1,
+/// n/2)` and each round propagates from every visible-and-transparent
+/// cell to its four orthogonal neighbors — the same monotone operator
+/// as [`reference::flood_fill_vis`], so the fixed points are identical
+/// — but one round is four shift-OR word ops instead of an O(n²) sweep,
+/// and the fixed point arrives in at most `2n - 1` rounds (the longest
+/// shortest path in the window).
+pub fn visibility_mask(transparent: u64, n: usize) -> u64 {
+    debug_assert!(n >= 1 && n * n <= 64, "bitmask occlusion needs V*V <= 64");
+    let cells = n * n;
+    let full: u64 = if cells == 64 { u64::MAX } else { (1u64 << cells) - 1 };
+    // column-edge masks keep lateral shifts from wrapping across rows
+    let mut col0: u64 = 0;
+    for r in 0..n {
+        col0 |= 1u64 << (r * n);
+    }
+    let coln = col0 << (n - 1);
+    let mut vis: u64 = 1u64 << ((n - 1) * n + n / 2);
+    loop {
+        let f = vis & transparent;
+        let grown = (vis
+            | (f >> n)                  // up in the view window
+            | (f << n)                  // down
+            | ((f & !col0) >> 1)        // left
+            | ((f & !coln) << 1))       // right
+            & full;
+        if grown == vis {
+            return vis;
+        }
+        vis = grown;
+    }
 }
 
 /// [`observe`] writing into caller-owned buffers: `out.cells` is cleared
-/// and refilled (capacity reused), occlusion state lives in `scratch`.
-/// Generic over [`CellGrid`] so the scalar oracle and the SoA engine of
-/// `env::vector` share the kernel.
+/// and refilled (capacity reused). Generic over [`CellGrid`] so the
+/// scalar oracle and the SoA engine of `env::vector` share the kernel.
+/// Gather offsets come from the `scratch`-cached table; occlusion is the
+/// bitmask fixed point of [`visibility_mask`] (views larger than 8×8
+/// fall back to the reference flood fill — no engine configures one).
 pub fn observe_into<G: CellGrid>(grid: &G, agent_pos: (i32, i32),
                                  agent_dir: i32, view_size: usize,
                                  see_through_walls: bool, out: &mut Obs,
                                  scratch: &mut ObsScratch) {
-    let v = view_size as i32;
+    let n = view_size * view_size;
+    if !see_through_walls && n > 64 {
+        // cold fallback outside the bitmask domain (allocates)
+        reference::observe_into(grid, agent_pos, agent_dir, view_size,
+                                false, out, &mut Vec::new(),
+                                &mut Vec::new());
+        return;
+    }
     out.v = view_size;
     out.cells.clear();
-    for vr in 0..v {
-        for vc in 0..v {
-            let fwd = (v - 1) - vr;
-            let lat = vc - v / 2;
-            let (dr, dc) = match agent_dir {
-                0 => (-fwd, lat),
-                1 => (lat, fwd),
-                2 => (fwd, -lat),
-                _ => (-lat, -fwd),
-            };
-            out.cells.push(grid.get_i(agent_pos.0 + dr, agent_pos.1 + dc));
+    scratch.ensure_gather(view_size);
+    // same arm selection as the reference `match`: 0/1/2 exact, every
+    // other value (engines only ever produce 0..4) takes the last arm
+    let d = if (0..3).contains(&agent_dir) { agent_dir as usize } else { 3 };
+    let offs = &scratch.gather[d * n..(d + 1) * n];
+    let (pr, pc) = agent_pos;
+    if see_through_walls {
+        for &(dr, dc) in offs {
+            out.cells.push(grid.get_i(pr + dr, pc + dc));
         }
+        return;
     }
+    let mut transparent = 0u64;
+    for (j, &(dr, dc)) in offs.iter().enumerate() {
+        let cell = grid.get_i(pr + dr, pc + dc);
+        transparent |= u64::from(!blocks_sight(cell.tile)) << j;
+        out.cells.push(cell);
+    }
+    let full: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let mut hidden = !visibility_mask(transparent, view_size) & full;
+    while hidden != 0 {
+        out.cells[hidden.trailing_zeros() as usize] = UNSEEN_CELL;
+        hidden &= hidden - 1;
+    }
+}
 
-    if !see_through_walls {
-        let n = view_size;
-        let idx = |r: usize, c: usize| r * n + c;
-        scratch.transparent.clear();
-        scratch
-            .transparent
-            .extend(out.cells.iter().map(|c| !blocks_sight(c.tile)));
-        scratch.vis.clear();
-        scratch.vis.resize(n * n, false);
-        scratch.vis[idx(n - 1, n / 2)] = true;
-        // flood to fixed point (bounded by cell count)
-        loop {
-            let mut changed = false;
-            for r in 0..n {
-                for c in 0..n {
-                    if scratch.vis[idx(r, c)] {
-                        continue;
-                    }
-                    let vis = &scratch.vis;
-                    let transparent = &scratch.transparent;
-                    let mut lit = false;
-                    if r > 0 {
-                        lit |= vis[idx(r - 1, c)] && transparent[idx(r - 1, c)];
-                    }
-                    if r + 1 < n {
-                        lit |= vis[idx(r + 1, c)] && transparent[idx(r + 1, c)];
-                    }
-                    if c > 0 {
-                        lit |= vis[idx(r, c - 1)] && transparent[idx(r, c - 1)];
-                    }
-                    if c + 1 < n {
-                        lit |= vis[idx(r, c + 1)] && transparent[idx(r, c + 1)];
-                    }
-                    if lit {
-                        scratch.vis[idx(r, c)] = true;
-                        changed = true;
-                    }
-                }
-            }
-            if !changed {
-                break;
-            }
+/// [`observe_into`] rendering straight into a caller-owned `[V, V, 2]`
+/// i32 slice — the batch engines' single-pass path (no intermediate
+/// `Obs` fill, no flatten second pass). Bitwise-identical values to
+/// [`observe_into`] + [`Obs::write_flat_into`], pinned by
+/// `tests/obs_kernels.rs`.
+pub fn observe_flat_into<G: CellGrid>(grid: &G, agent_pos: (i32, i32),
+                                      agent_dir: i32, view_size: usize,
+                                      see_through_walls: bool,
+                                      out: &mut [i32],
+                                      scratch: &mut ObsScratch) {
+    let n = view_size * view_size;
+    assert_eq!(out.len(), n * 2, "flat obs slice size");
+    if !see_through_walls && n > 64 {
+        // cold fallback outside the bitmask domain (allocates)
+        let mut obs = Obs::empty(view_size);
+        reference::observe_into(grid, agent_pos, agent_dir, view_size,
+                                false, &mut obs, &mut Vec::new(),
+                                &mut Vec::new());
+        obs.write_flat_into(out);
+        return;
+    }
+    scratch.ensure_gather(view_size);
+    // same arm selection as the reference `match`: 0/1/2 exact, every
+    // other value (engines only ever produce 0..4) takes the last arm
+    let d = if (0..3).contains(&agent_dir) { agent_dir as usize } else { 3 };
+    let offs = &scratch.gather[d * n..(d + 1) * n];
+    let (pr, pc) = agent_pos;
+    if see_through_walls {
+        for (j, &(dr, dc)) in offs.iter().enumerate() {
+            let cell = grid.get_i(pr + dr, pc + dc);
+            out[2 * j] = cell.tile;
+            out[2 * j + 1] = cell.color;
         }
-        for (i, cell) in out.cells.iter_mut().enumerate() {
-            if !scratch.vis[i] {
-                *cell = UNSEEN_CELL;
-            }
-        }
+        return;
+    }
+    let mut transparent = 0u64;
+    for (j, &(dr, dc)) in offs.iter().enumerate() {
+        let cell = grid.get_i(pr + dr, pc + dc);
+        transparent |= u64::from(!blocks_sight(cell.tile)) << j;
+        out[2 * j] = cell.tile;
+        out[2 * j + 1] = cell.color;
+    }
+    let full: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let mut hidden = !visibility_mask(transparent, view_size) & full;
+    while hidden != 0 {
+        let j = hidden.trailing_zeros() as usize;
+        out[2 * j] = TILE_UNSEEN;
+        out[2 * j + 1] = COLOR_UNSEEN;
+        hidden &= hidden - 1;
     }
 }
 
@@ -155,6 +265,118 @@ pub fn observe(grid: &Grid, agent_pos: (i32, i32), agent_dir: i32,
     observe_into(grid, agent_pos, agent_dir, view_size, see_through_walls,
                  &mut obs, &mut ObsScratch::new());
     obs
+}
+
+/// Pre-optimization observation kernels, kept verbatim as oracles: the
+/// property suite (`tests/obs_kernels.rs`) pins the fast kernels above
+/// to these bit for bit, and the fig5a bench's legacy-path section
+/// measures them as the "before" of the zero-redundancy overhaul. Not
+/// `#[cfg(test)]` for exactly that second reason — benches compile
+/// without the test cfg.
+pub mod reference {
+    use crate::env::grid::CellGrid;
+    use crate::env::types::*;
+
+    use super::Obs;
+
+    /// View-cell → world offset: the branchy per-cell form the gather
+    /// tables are generated from (and checked against).
+    pub fn gather_offset(agent_dir: i32, v: i32, vr: i32, vc: i32)
+                         -> (i32, i32) {
+        let fwd = (v - 1) - vr;
+        let lat = vc - v / 2;
+        match agent_dir {
+            0 => (-fwd, lat),
+            1 => (lat, fwd),
+            2 => (fwd, -lat),
+            _ => (-lat, -fwd),
+        }
+    }
+
+    /// The original fixed-point visibility flood fill: full O(n²)
+    /// sweeps until no cell changes. `vis` is cleared and refilled
+    /// (reusable scratch, the pre-optimization calling convention).
+    pub fn flood_fill_into(transparent: &[bool], n: usize,
+                           vis: &mut Vec<bool>) {
+        assert_eq!(transparent.len(), n * n);
+        let idx = |r: usize, c: usize| r * n + c;
+        vis.clear();
+        vis.resize(n * n, false);
+        vis[idx(n - 1, n / 2)] = true;
+        // flood to fixed point (bounded by cell count)
+        loop {
+            let mut changed = false;
+            for r in 0..n {
+                for c in 0..n {
+                    if vis[idx(r, c)] {
+                        continue;
+                    }
+                    let mut lit = false;
+                    if r > 0 {
+                        lit |= vis[idx(r - 1, c)]
+                            && transparent[idx(r - 1, c)];
+                    }
+                    if r + 1 < n {
+                        lit |= vis[idx(r + 1, c)]
+                            && transparent[idx(r + 1, c)];
+                    }
+                    if c > 0 {
+                        lit |= vis[idx(r, c - 1)]
+                            && transparent[idx(r, c - 1)];
+                    }
+                    if c + 1 < n {
+                        lit |= vis[idx(r, c + 1)]
+                            && transparent[idx(r, c + 1)];
+                    }
+                    if lit {
+                        vis[idx(r, c)] = true;
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                return;
+            }
+        }
+    }
+
+    /// [`flood_fill_into`] returning a fresh `Vec` (test convenience).
+    pub fn flood_fill_vis(transparent: &[bool], n: usize) -> Vec<bool> {
+        let mut vis = Vec::new();
+        flood_fill_into(transparent, n, &mut vis);
+        vis
+    }
+
+    /// The pre-optimization `observe_into`: branchy per-cell gather,
+    /// then the multi-sweep flood fill over `bool` scratch vectors.
+    pub fn observe_into<G: CellGrid>(grid: &G, agent_pos: (i32, i32),
+                                     agent_dir: i32, view_size: usize,
+                                     see_through_walls: bool,
+                                     out: &mut Obs,
+                                     transparent: &mut Vec<bool>,
+                                     vis: &mut Vec<bool>) {
+        let v = view_size as i32;
+        out.v = view_size;
+        out.cells.clear();
+        for vr in 0..v {
+            for vc in 0..v {
+                let (dr, dc) = gather_offset(agent_dir, v, vr, vc);
+                out.cells
+                    .push(grid.get_i(agent_pos.0 + dr, agent_pos.1 + dc));
+            }
+        }
+        if !see_through_walls {
+            transparent.clear();
+            transparent
+                .extend(out.cells.iter().map(|c| !blocks_sight(c.tile)));
+            flood_fill_into(transparent, view_size, vis);
+            for (i, cell) in out.cells.iter_mut().enumerate() {
+                if !vis[i] {
+                    *cell = UNSEEN_CELL;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -264,5 +486,41 @@ mod tests {
         let obs = observe(&g, (4, 4), 1, 5, true);
         let flat = obs.to_flat();
         assert_eq!(Obs::from_flat(5, &flat), obs);
+    }
+
+    #[test]
+    fn flat_kernel_matches_obs_kernel() {
+        // the one-pass i32 path == the Obs path + flatten (the full
+        // randomized sweep lives in tests/obs_kernels.rs)
+        let mut g = Grid::empty_room(9, 9);
+        g.set(3, 4, ball_red());
+        for c in 0..9 {
+            g.set(2, c, WALL_CELL);
+        }
+        let mut scratch = ObsScratch::new();
+        for dir in 0..4 {
+            for stw in [true, false] {
+                let mut obs = Obs::empty(5);
+                observe_into(&g, (4, 4), dir, 5, stw, &mut obs,
+                             &mut scratch);
+                let mut flat = vec![0i32; 5 * 5 * 2];
+                observe_flat_into(&g, (4, 4), dir, 5, stw, &mut flat,
+                                  &mut scratch);
+                assert_eq!(flat, obs.to_flat(), "dir={dir} stw={stw}");
+            }
+        }
+    }
+
+    #[test]
+    fn visibility_mask_basics() {
+        // everything transparent: the whole window lights up
+        let n = 5usize;
+        let full = (1u64 << (n * n)) - 1;
+        assert_eq!(visibility_mask(full, n), full);
+        // nothing transparent: only the agent cell is visible
+        let start = 1u64 << ((n - 1) * n + n / 2);
+        assert_eq!(visibility_mask(0, n), start);
+        // 8x8 uses all 64 bits without overflow
+        assert_eq!(visibility_mask(u64::MAX, 8), u64::MAX);
     }
 }

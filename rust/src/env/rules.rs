@@ -138,8 +138,11 @@ pub fn check_rule<G: CellGrid>(grid: &mut G, agent_pos: (i32, i32),
     }
 }
 
-/// Apply a full ruleset sequentially (padding `RULE_EMPTY` rows are
-/// inert, so encoded fixed-width rule tables can be passed directly).
+/// Apply a full ruleset sequentially. Padding `RULE_EMPTY` rows are
+/// inert, so callers may pass an entire fixed-width rule table — or,
+/// like the SoA engines, only the live `rules_len` prefix of one: the
+/// two are semantically identical, and skipping the padding is the
+/// cheaper call (docs/ARCHITECTURE.md "Hot-path anatomy").
 pub fn check_rules<G: CellGrid>(grid: &mut G, agent_pos: (i32, i32),
                                 pocket: &mut Cell, rules: &[Rule]) {
     for rule in rules {

@@ -4,6 +4,12 @@
 //! - 6 discrete actions; rules fire after forward/pick/put/toggle only;
 //! - reward `1 - 0.9*step/max_steps` on goal;
 //! - trial auto-reset on goal, episode auto-reset at `max_steps`.
+//!
+//! The oracle steps through the same hot-path kernels as the SoA
+//! engines (`apply_action`/`check_rules`/`check_goal` over [`CellGrid`],
+//! the gather-table + bitmask-occlusion observe kernels of
+//! [`super::observation`]), so scalar-vs-batched bitwise parity is a
+//! property of shared code, not of two implementations agreeing.
 
 use crate::util::rng::Rng;
 

@@ -118,6 +118,47 @@ impl Cell {
     }
 }
 
+/// Grid-interior cell packed into 16 bits: `tile` in the low byte,
+/// `color` in the high byte. The SoA batch engines store their `[B, H,
+/// W]` grid tensors as `PackedCell` — half the memory traffic of the
+/// `(i32, i32)` [`Cell`] at large B — and unpack only at the i32
+/// PJRT/observation boundary. Lossless for every id the engine can
+/// produce (Tables 1-3 ids are < 15; [`PackedCell::pack`] asserts the
+/// byte domain so corrupt stores fail loudly instead of truncating).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+#[repr(transparent)]
+pub struct PackedCell(u16);
+
+impl PackedCell {
+    pub const ZERO: PackedCell = PackedCell(0);
+
+    #[inline]
+    pub fn pack(cell: Cell) -> PackedCell {
+        assert!(
+            (0..256).contains(&cell.tile) && (0..256).contains(&cell.color),
+            "cell ({}, {}) outside the u8 id domain",
+            cell.tile,
+            cell.color
+        );
+        PackedCell((cell.tile as u16) | ((cell.color as u16) << 8))
+    }
+
+    #[inline]
+    pub fn tile(self) -> i32 {
+        (self.0 & 0xff) as i32
+    }
+
+    #[inline]
+    pub fn color(self) -> i32 {
+        (self.0 >> 8) as i32
+    }
+
+    #[inline]
+    pub fn unpack(self) -> Cell {
+        Cell::new(self.tile(), self.color())
+    }
+}
+
 pub const FLOOR_CELL: Cell = Cell::new(TILE_FLOOR, COLOR_BLACK);
 pub const WALL_CELL: Cell = Cell::new(TILE_WALL, COLOR_GREY);
 pub const END_OF_MAP_CELL: Cell = Cell::new(TILE_END_OF_MAP, COLOR_END_OF_MAP);
@@ -189,5 +230,29 @@ mod tests {
     fn generator_palettes_match_appendix_j() {
         assert_eq!(GEN_COLORS.len(), 10);
         assert_eq!(GEN_TILES.len(), 7);
+    }
+
+    #[test]
+    fn packed_cell_roundtrip() {
+        for tile in 0..NUM_TILES as i32 {
+            for color in 0..NUM_COLORS as i32 {
+                let cell = Cell::new(tile, color);
+                let p = PackedCell::pack(cell);
+                assert_eq!(p.unpack(), cell);
+                assert_eq!((p.tile(), p.color()), (tile, color));
+            }
+        }
+        // full byte domain, including the corners
+        for v in [0, 1, 127, 128, 255] {
+            let cell = Cell::new(v, 255 - v);
+            assert_eq!(PackedCell::pack(cell).unpack(), cell);
+        }
+        assert_eq!(PackedCell::ZERO.unpack(), END_OF_MAP_CELL);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the u8 id domain")]
+    fn packed_cell_rejects_out_of_domain_ids() {
+        PackedCell::pack(Cell::new(256, 0));
     }
 }

@@ -4,15 +4,20 @@
 //! stepping fast on the host, with no AOT artifacts involved.
 //!
 //! Layout mirrors `python/compile/aot.py`'s STATE_FIELDS: one contiguous
-//! grid tensor `[B, H, W, 2]` (as `Cell` pairs — `repr(C)`, bit-identical
-//! to the i32 boundary layout), flat arrays for agent pos/dir/pocket/
-//! step_count/max_steps, and rulesets encoded into fixed-width tables
-//! (`rules [B, MR, 7]`, `goal [B, 5]`, `init [B, MI, 2]`).
+//! grid tensor `[B, H, W]` of [`PackedCell`]s (tile and color packed
+//! into one `u16` — half the memory traffic of the `(i32, i32)` pair at
+//! large B; unpacked to i32 only at the observation/PJRT boundary), flat
+//! arrays for agent pos/dir/pocket/step_count/max_steps, and rulesets
+//! encoded into fixed-width tables (`rules [B, MR, 7]`, `goal [B, 5]`,
+//! `init [B, MI, 2]`). Per-env reset-derived caches (the base grid's
+//! free-cell list, the live rule count) keep the per-step and per-trial
+//! kernels free of rescans — see docs/ARCHITECTURE.md "Hot-path
+//! anatomy".
 //!
 //! Semantics are *bitwise identical* to the scalar oracle in
 //! [`super::state`]: both run the same generic kernels (`apply_action`,
-//! `check_rules`, `check_goal`, `observe_into` over [`CellGrid`]) and the
-//! same RNG call sequence (`Rng::partial_shuffle` mirrors
+//! `check_rules`, `check_goal`, the observe kernels over [`CellGrid`])
+//! and the same RNG call sequence (`Rng::partial_shuffle` mirrors
 //! `Rng::sample_distinct`). `tests/vec_env_equivalence.rs` pins this
 //! contract for every registry env family across auto-reset boundaries.
 
@@ -25,21 +30,24 @@ use crate::util::rng::Rng;
 use super::api::{ActionSpec, BatchEnvironment, EnvParams, ObsSpec};
 use super::goals::{check_goal, Goal};
 use super::grid::{CellGrid, Grid};
-use super::observation::{observe_into, Obs, ObsScratch};
+use super::observation::{observe_flat_into, ObsScratch};
 use super::rules::{check_rules, Rule};
 use super::state::{apply_action, is_acting_action, Ruleset, TaskSource};
 use super::types::*;
 
-/// Borrowed view of one environment's `[H, W, 2]` slice of the batched
-/// grid tensor — the `CellGrid` the shared kernels run on.
+/// Borrowed view of one environment's `[H, W]` slice of the batched
+/// packed grid tensor — the `CellGrid` the shared kernels run on
+/// (packing/unpacking at the accessor boundary, so the kernels stay
+/// generic over the storage format).
 pub struct GridView<'a> {
     h: usize,
     w: usize,
-    cells: &'a mut [Cell],
+    cells: &'a mut [PackedCell],
 }
 
 impl<'a> GridView<'a> {
-    pub fn new(h: usize, w: usize, cells: &'a mut [Cell]) -> GridView<'a> {
+    pub fn new(h: usize, w: usize, cells: &'a mut [PackedCell])
+               -> GridView<'a> {
         debug_assert_eq!(cells.len(), h * w);
         GridView { h, w, cells }
     }
@@ -59,7 +67,7 @@ impl CellGrid for GridView<'_> {
     #[inline]
     fn get_i(&self, r: i32, c: i32) -> Cell {
         if self.in_bounds(r, c) {
-            self.cells[r as usize * self.w + c as usize]
+            self.cells[r as usize * self.w + c as usize].unpack()
         } else {
             END_OF_MAP_CELL
         }
@@ -68,15 +76,19 @@ impl CellGrid for GridView<'_> {
     #[inline]
     fn set_i(&mut self, r: i32, c: i32, cell: Cell) {
         if self.in_bounds(r, c) {
-            self.cells[r as usize * self.w + c as usize] = cell;
+            self.cells[r as usize * self.w + c as usize] =
+                PackedCell::pack(cell);
         }
     }
 }
 
 /// Owned copy of every per-env SoA buffer plus the per-env RNG states —
-/// the full observable state of a [`VecEnv`]. The parallel-engine tests
-/// compare these across thread counts: equality here means the engines
-/// are bitwise-identical, including state no output has surfaced yet.
+/// the full observable state of a [`VecEnv`] (grids unpacked back to
+/// `Cell` at this boundary; the reset-derived caches — free-cell lists,
+/// live rule counts — are pure functions of the captured buffers and
+/// carry no extra information). The parallel-engine tests compare these
+/// across thread counts: equality here means the engines are
+/// bitwise-identical, including state no output has surfaced yet.
 /// Concatenating per-chunk snapshots in chunk order reconstructs the
 /// full-batch snapshot ([`VecEnvSnapshot::append`]).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -130,10 +142,10 @@ pub type VecEnvConfig = EnvParams;
 pub struct VecEnv {
     cfg: VecEnvConfig,
     b: usize,
-    /// episode-start grids `[B, H, W, 2]`
-    base: Vec<Cell>,
-    /// live grids `[B, H, W, 2]`
-    grid: Vec<Cell>,
+    /// episode-start grids `[B, H, W]`, packed
+    base: Vec<PackedCell>,
+    /// live grids `[B, H, W]`, packed
+    grid: Vec<PackedCell>,
     /// `[B, 2]` (row, col)
     agent_pos: Vec<i32>,
     /// `[B]`
@@ -142,6 +154,10 @@ pub struct VecEnv {
     pocket: Vec<Cell>,
     /// `[B, MR, 7]` fixed-width rule table
     rules: Vec<Rule>,
+    /// number of live rows in each env's rule table — `check_rules`
+    /// runs over exactly this prefix, skipping the inert
+    /// `Rule::EMPTY` padding (identical semantics: padding never fires)
+    rules_len: Vec<u32>,
     /// `[B, 5]` encoded goals
     goals: Vec<Goal>,
     /// `[B, MI, 2]` init-tile table
@@ -152,6 +168,13 @@ pub struct VecEnv {
     step_count: Vec<i32>,
     /// `[B]`
     max_steps: Vec<i32>,
+    /// `[B, H*W]` cached row-major free-cell lists of the base grids
+    /// (filled at `reset_env`; `free_len[i]` rows are live). Every
+    /// trial placement memcpys this prefix instead of rescanning the
+    /// H·W grid — base grids only change when `reset_env` installs one.
+    free_base: Vec<u32>,
+    /// `[B]` live rows in `free_base`
+    free_len: Vec<u32>,
     /// one xoshiro256++ stream per env (the JAX per-env key analogue)
     rngs: Vec<Rng>,
     /// benchmark task distribution for episode auto-reset resampling;
@@ -163,9 +186,8 @@ pub struct VecEnv {
     /// and needs them present
     seeded: bool,
     // --- reusable scratch: steady-state kernels never allocate ---------
-    free_scratch: Vec<usize>,
-    obs_scratch: Obs,
-    vis_scratch: ObsScratch,
+    free_scratch: Vec<u32>,
+    obs_scratch: ObsScratch,
 }
 
 impl VecEnv {
@@ -177,23 +199,25 @@ impl VecEnv {
         VecEnv {
             cfg,
             b,
-            base: vec![zero; b * ghw],
-            grid: vec![zero; b * ghw],
+            base: vec![PackedCell::ZERO; b * ghw],
+            grid: vec![PackedCell::ZERO; b * ghw],
             agent_pos: vec![0; b * 2],
             agent_dir: vec![0; b],
             pocket: vec![POCKET_EMPTY; b],
             rules: vec![Rule::EMPTY; b * cfg.max_rules],
+            rules_len: vec![0; b],
             goals: vec![Goal::EMPTY; b],
             init: vec![zero; b * cfg.max_init],
             init_len: vec![0; b],
             step_count: vec![0; b],
             max_steps: vec![0; b],
+            free_base: vec![0; b * ghw],
+            free_len: vec![0; b],
             rngs: vec![Rng::new(0); b],
             tasks: None,
             seeded: false,
             free_scratch: Vec::with_capacity(ghw),
-            obs_scratch: Obs::empty(cfg.opts.view_size),
-            vis_scratch: ObsScratch::new(),
+            obs_scratch: ObsScratch::new(),
         }
     }
 
@@ -240,8 +264,8 @@ impl VecEnv {
     /// are bitwise-identical forever after.
     pub fn snapshot(&self) -> VecEnvSnapshot {
         VecEnvSnapshot {
-            base: self.base.clone(),
-            grid: self.grid.clone(),
+            base: self.base.iter().map(|c| c.unpack()).collect(),
+            grid: self.grid.iter().map(|c| c.unpack()).collect(),
             agent_pos: self.agent_pos.clone(),
             agent_dir: self.agent_dir.clone(),
             pocket: self.pocket.clone(),
@@ -314,7 +338,22 @@ impl VecEnv {
         self.encode_task(i, ruleset);
 
         let g0 = i * h * w;
-        self.base[g0..g0 + h * w].copy_from_slice(base.cells());
+        for (dst, &src) in
+            self.base[g0..g0 + h * w].iter_mut().zip(base.cells())
+        {
+            *dst = PackedCell::pack(src);
+        }
+        // cache the base grid's row-major free-cell list once per
+        // episode-input install; every trial placement copies this
+        // prefix instead of rescanning the H·W grid
+        let mut fl = 0usize;
+        for p in 0..h * w {
+            if self.base[g0 + p].tile() == TILE_FLOOR {
+                self.free_base[g0 + fl] = p as u32;
+                fl += 1;
+            }
+        }
+        self.free_len[i] = fl as u32;
         self.max_steps[i] = max_steps;
         self.pocket[i] = POCKET_EMPTY;
         self.step_count[i] = 0;
@@ -336,11 +375,14 @@ impl VecEnv {
         {
             let mut g = GridView::new(h, w, &mut self.grid[g0..g0 + h * w]);
             apply_action(&mut g, &mut pos, &mut dir, &mut pocket, action);
-            // rules fire only after acting actions (§2.1); padded zero
-            // rows are inert, so the whole fixed-width table is applied
+            // rules fire only after acting actions (§2.1); only the
+            // rules_len live rows are scanned — the fixed-width padding
+            // is inert Rule::EMPTY by construction, so skipping it is
+            // semantics-free
             if is_acting_action(action) {
+                let rl = self.rules_len[i] as usize;
                 check_rules(&mut g, pos, &mut pocket,
-                            &self.rules[i * mr..(i + 1) * mr]);
+                            &self.rules[i * mr..i * mr + rl]);
             }
             achieved = check_goal(&g, pos, pocket, &self.goals[i]);
         }
@@ -365,11 +407,17 @@ impl VecEnv {
             // breaks the meta-RL task-distribution protocol. Trial
             // resets keep the task (§2.1). The draw comes from the
             // env's own stream, so chunked parallel stepping stays
-            // bitwise-identical to serial.
+            // bitwise-identical to serial. The source is borrowed, not
+            // Arc-cloned: `encode_task_into` takes the table columns
+            // directly, so no refcount traffic per boundary.
             if done {
-                if let Some(ts) = self.tasks.clone() {
+                if let Some(ts) = self.tasks.as_deref() {
                     let t = self.rngs[i].below(ts.num_tasks());
-                    self.encode_task(i, ts.task(t));
+                    Self::encode_task_into(
+                        self.cfg.max_rules, self.cfg.max_init,
+                        &mut self.rules, &mut self.rules_len,
+                        &mut self.goals, &mut self.init,
+                        &mut self.init_len, i, ts.task(t));
                 }
             }
             // same stream discipline as the scalar oracle: split the
@@ -385,59 +433,74 @@ impl VecEnv {
     /// Encode `ruleset` into env `i`'s fixed-width table rows (rules,
     /// goal, init tiles); unused rows are inert padding.
     fn encode_task(&mut self, i: usize, ruleset: &Ruleset) {
-        let mr = self.cfg.max_rules;
-        let mi = self.cfg.max_init;
+        Self::encode_task_into(self.cfg.max_rules, self.cfg.max_init,
+                               &mut self.rules, &mut self.rules_len,
+                               &mut self.goals, &mut self.init,
+                               &mut self.init_len, i, ruleset);
+    }
+
+    /// [`VecEnv::encode_task`] over explicitly borrowed table columns,
+    /// so episode-boundary call sites can re-encode while the task
+    /// source stays borrowed from `self.tasks` — the disjoint field
+    /// borrows replace the former per-boundary `Arc` clone.
+    #[allow(clippy::too_many_arguments)]
+    fn encode_task_into(mr: usize, mi: usize, rules: &mut [Rule],
+                        rules_len: &mut [u32], goals: &mut [Goal],
+                        init: &mut [Cell], init_len: &mut [u32],
+                        i: usize, ruleset: &Ruleset) {
         debug_assert!(ruleset.rules.len() <= mr
                       && ruleset.init_tiles.len() <= mi);
         for j in 0..mr {
-            self.rules[i * mr + j] =
+            rules[i * mr + j] =
                 ruleset.rules.get(j).copied().unwrap_or(Rule::EMPTY);
         }
-        self.goals[i] = ruleset.goal;
+        rules_len[i] = ruleset.rules.len() as u32;
+        goals[i] = ruleset.goal;
         for j in 0..mi {
-            self.init[i * mi + j] = ruleset.init_tiles.get(j).copied()
+            init[i * mi + j] = ruleset.init_tiles.get(j).copied()
                 .unwrap_or(Cell::new(0, 0));
         }
-        self.init_len[i] = ruleset.init_tiles.len() as u32;
+        init_len[i] = ruleset.init_tiles.len() as u32;
     }
 
     /// Trial placement for env `i`: restore the base grid, then place
     /// init tiles + agent on distinct random floor cells. Mirrors
     /// `state::place_objects` including its RNG call sequence
     /// (`partial_shuffle` == `sample_distinct`, then `below(4)`), but
-    /// works in place on the SoA buffers with reusable scratch.
+    /// works in place on the SoA buffers with reusable scratch. The
+    /// candidate list is the cached `free_base` prefix (same row-major
+    /// order the scalar `free_cells` scan produces, so the shuffled
+    /// draws are bitwise identical) — no O(H·W) rescan per trial.
     fn place(&mut self, i: usize, rng: &mut Rng) {
         let (h, w) = (self.cfg.h, self.cfg.w);
         let g0 = i * h * w;
         let grid = &mut self.grid[g0..g0 + h * w];
         grid.copy_from_slice(&self.base[g0..g0 + h * w]);
 
+        let fl = self.free_len[i] as usize;
         self.free_scratch.clear();
-        for (p, cell) in grid.iter().enumerate() {
-            if cell.tile == TILE_FLOOR {
-                self.free_scratch.push(p);
-            }
-        }
+        self.free_scratch
+            .extend_from_slice(&self.free_base[g0..g0 + fl]);
         let k = self.init_len[i] as usize;
         assert!(
-            self.free_scratch.len() > k,
-            "grid has {} free cells but needs {}",
-            self.free_scratch.len(),
+            fl > k,
+            "grid has {fl} free cells but needs {}",
             k + 1
         );
         rng.partial_shuffle(&mut self.free_scratch, k + 1);
         let init = &self.init[i * self.cfg.max_init..];
         for j in 0..k {
-            grid[self.free_scratch[j]] = init[j];
+            grid[self.free_scratch[j] as usize] =
+                PackedCell::pack(init[j]);
         }
-        let agent_flat = self.free_scratch[k];
+        let agent_flat = self.free_scratch[k] as usize;
         self.agent_pos[i * 2] = (agent_flat / w) as i32;
         self.agent_pos[i * 2 + 1] = (agent_flat % w) as i32;
         self.agent_dir[i] = rng.below(4) as i32;
     }
 
-    /// Render env `i`'s observation into its `[V, V, 2]` slice of
-    /// `obs_out`, reusing the shared obs/occlusion scratch.
+    /// Render env `i`'s observation straight into its `[V, V, 2]` slice
+    /// of `obs_out` — one pass, no intermediate `Obs` fill or flatten.
     fn observe_env(&mut self, i: usize, obs_out: &mut [i32]) {
         let (h, w) = (self.cfg.h, self.cfg.w);
         let v = self.cfg.opts.view_size;
@@ -445,11 +508,22 @@ impl VecEnv {
         let pos = (self.agent_pos[i * 2], self.agent_pos[i * 2 + 1]);
         let dir = self.agent_dir[i];
         let gv = GridView::new(h, w, &mut self.grid[g0..g0 + h * w]);
-        observe_into(&gv, pos, dir, v, self.cfg.opts.see_through_walls,
-                     &mut self.obs_scratch, &mut self.vis_scratch);
-        self.obs_scratch
-            .write_flat_into(&mut obs_out[i * v * v * 2
-                                          ..(i + 1) * v * v * 2]);
+        observe_flat_into(&gv, pos, dir, v,
+                          self.cfg.opts.see_through_walls,
+                          &mut obs_out[i * v * v * 2
+                                       ..(i + 1) * v * v * 2],
+                          &mut self.obs_scratch);
+    }
+
+    /// Re-render every env's current observation into `obs_out`
+    /// (`[B, V, V, 2]` i32) without stepping — the obs-write share of
+    /// step time falls out of timing this against `step_all` (the
+    /// fig5a `obs_fraction` metric).
+    pub fn write_obs_all(&mut self, obs_out: &mut [i32]) {
+        assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
+        for i in 0..self.b {
+            self.observe_env(i, obs_out);
+        }
     }
 
     // --- unified-API surface (env::api::BatchEnvironment) ------------------
@@ -463,9 +537,12 @@ impl VecEnv {
     /// buffer (env `i`'s slice is written).
     pub fn restart_env_with(&mut self, i: usize, mut rng: Rng,
                             obs_out: &mut [i32]) {
-        if let Some(ts) = self.tasks.clone() {
+        if let Some(ts) = self.tasks.as_deref() {
             let t = rng.below(ts.num_tasks());
-            self.encode_task(i, ts.task(t));
+            Self::encode_task_into(self.cfg.max_rules, self.cfg.max_init,
+                                   &mut self.rules, &mut self.rules_len,
+                                   &mut self.goals, &mut self.init,
+                                   &mut self.init_len, i, ts.task(t));
         }
         let mut sub = rng.split();
         self.place(i, &mut sub);

@@ -72,13 +72,18 @@ impl JsonReport {
     }
 
     /// One timed row: `envs * steps` work units per invocation.
+    /// `steps_per_sec` duplicates `sps` under the explicit name the
+    /// perf-trajectory tooling (CI regression diff) keys on; `sps`
+    /// stays for older readers of the committed files.
     pub fn add(&mut self, label: &str, envs: usize, steps: usize,
                r: &BenchResult) {
         let sps = r.throughput(envs * steps);
         self.rows.push(format!(
             "{{\"label\":\"{}\",\"envs\":{envs},\"steps\":{steps},\
-             \"sps\":{},\"min_secs\":{},\"mean_secs\":{},\"repeats\":{}}}",
+             \"sps\":{},\"steps_per_sec\":{},\"min_secs\":{},\
+             \"mean_secs\":{},\"repeats\":{}}}",
             json_escape(label),
+            json_num(sps),
             json_num(sps),
             json_num(r.min_secs),
             json_num(r.mean_secs),
@@ -92,8 +97,9 @@ impl JsonReport {
                    sps: f64) {
         self.rows.push(format!(
             "{{\"label\":\"{}\",\"envs\":{envs},\"steps\":{steps},\
-             \"sps\":{}}}",
+             \"sps\":{},\"steps_per_sec\":{}}}",
             json_escape(label),
+            json_num(sps),
             json_num(sps)
         ));
     }
@@ -245,6 +251,11 @@ mod tests {
         assert!(text.starts_with("{\"bench\":\"fig5a_native\""));
         assert!(text.contains("\"label\":\"native-vec-b16\""));
         assert!(text.contains("\"sps\":2048")); // 16*64/0.5
+        assert!(text.contains("\"steps_per_sec\":2048"));
+        // the external-sps row carries the explicit name too
+        assert!(text.contains("\"label\":\"engine\",\"envs\":8,\
+                               \"steps\":32,\"sps\":1000,\
+                               \"steps_per_sec\":1000"));
         assert!(text.contains("\"native_vs_scalar_b1024\":6.5"));
         assert!(text.contains("\\\"quoted\\\""));
         assert!(text.ends_with("}\n"));

@@ -1,0 +1,216 @@
+//! Property suite pinning the zero-redundancy observation kernels to
+//! their pre-optimization reference implementations
+//! (`env::observation::reference`):
+//!
+//! - bitmask occlusion (`visibility_mask`, u64 shift propagation) ==
+//!   the fixed-point multi-sweep flood fill, exhaustively for small
+//!   windows and over randomized + structured (wall rows, door gaps)
+//!   masks up to the full 8×8 = 64-bit domain;
+//! - gather-table lookup == the branchy per-cell `match agent_dir`
+//!   reference, for all 4 directions and view sizes {3, 5, 7}, pinned
+//!   exactly with coordinate-encoded grids;
+//! - the one-pass `observe_flat_into` == `observe_into` + flatten ==
+//!   the reference observe, on randomized grids with walls, doors
+//!   (open/closed/locked) and objects, agents anywhere including map
+//!   edges, occlusion on and off.
+//!
+//! These kernels feed every engine surface, so the engine-level parity
+//! suites (`vec_env_equivalence`, `wrapper_parity`, `native_threads`)
+//! pin the composition while this file pins the kernels themselves.
+
+use xmgrid::env::observation::{observe_flat_into, observe_into,
+                              reference, visibility_mask, Obs,
+                              ObsScratch};
+use xmgrid::env::types::*;
+use xmgrid::env::Grid;
+use xmgrid::util::rng::Rng;
+
+/// Assert the bitmask fixed point equals the flood-fill fixed point for
+/// one transparency mask.
+fn assert_mask_matches(transparent: u64, n: usize) {
+    let bits: Vec<bool> =
+        (0..n * n).map(|j| (transparent >> j) & 1 == 1).collect();
+    let want = reference::flood_fill_vis(&bits, n);
+    let got = visibility_mask(transparent, n);
+    let got_bits: Vec<bool> =
+        (0..n * n).map(|j| (got >> j) & 1 == 1).collect();
+    assert_eq!(got_bits, want,
+               "visibility divergence at n={n}, mask={transparent:#b}");
+}
+
+#[test]
+fn bitmask_occlusion_exhaustive_small_windows() {
+    for n in 1..=3usize {
+        for t in 0..1u64 << (n * n) {
+            assert_mask_matches(t, n);
+        }
+    }
+}
+
+#[test]
+fn bitmask_occlusion_random_masks_all_sizes() {
+    let mut rng = Rng::new(0x0cc1);
+    for n in 4..=8usize {
+        let cells = n * n;
+        for _ in 0..2000 {
+            let mut t = rng.next_u64();
+            if cells < 64 {
+                t &= (1u64 << cells) - 1;
+            }
+            assert_mask_matches(t, n);
+        }
+        // degenerate extremes
+        assert_mask_matches(0, n);
+        let full = if cells == 64 { u64::MAX } else { (1 << cells) - 1 };
+        assert_mask_matches(full, n);
+    }
+}
+
+#[test]
+fn bitmask_occlusion_wall_rows_and_door_gaps() {
+    // a full opaque row at every height, with and without a one-cell
+    // gap (the open-door case) at every column
+    for n in 3..=8usize {
+        let cells = n * n;
+        let full: u64 =
+            if cells == 64 { u64::MAX } else { (1 << cells) - 1 };
+        for wall_row in 0..n {
+            let mut blocked = full;
+            for c in 0..n {
+                blocked &= !(1u64 << (wall_row * n + c));
+            }
+            assert_mask_matches(blocked, n);
+            for gap in 0..n {
+                assert_mask_matches(
+                    blocked | (1u64 << (wall_row * n + gap)), n);
+            }
+        }
+        // opaque columns likewise (lateral propagation edge cases)
+        for wall_col in 0..n {
+            let mut blocked = full;
+            for r in 0..n {
+                blocked &= !(1u64 << (r * n + wall_col));
+            }
+            assert_mask_matches(blocked, n);
+        }
+    }
+}
+
+/// A grid whose cells encode their own coordinates: any gather-offset
+/// mistake surfaces as the wrong coordinate pair in the view, so this
+/// pins the table against the branchy reference exactly, per direction
+/// and per view cell.
+#[test]
+fn gather_table_matches_branchy_reference_exactly() {
+    let (h, w) = (31usize, 29usize);
+    let mut g = Grid::filled(h, w, FLOOR_CELL);
+    for r in 0..h {
+        for c in 0..w {
+            g.set(r, c, Cell::new(r as i32, c as i32));
+        }
+    }
+    let mut scratch = ObsScratch::new();
+    for v in [3usize, 5, 7] {
+        for dir in 0..4i32 {
+            let pos = (15i32, 14i32); // interior: every view cell lands
+            let mut obs = Obs::empty(v);
+            observe_into(&g, pos, dir, v, true, &mut obs, &mut scratch);
+            for vr in 0..v {
+                for vc in 0..v {
+                    let (dr, dc) = reference::gather_offset(
+                        dir, v as i32, vr as i32, vc as i32);
+                    assert_eq!(
+                        obs.get(vr, vc),
+                        Cell::new(pos.0 + dr, pos.1 + dc),
+                        "v={v} dir={dir} view cell ({vr},{vc})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn random_grid(rng: &mut Rng, h: usize, w: usize) -> Grid {
+    let tiles = [
+        TILE_FLOOR, TILE_FLOOR, TILE_FLOOR, TILE_FLOOR, TILE_WALL,
+        TILE_WALL, TILE_DOOR_OPEN, TILE_DOOR_CLOSED, TILE_DOOR_LOCKED,
+        TILE_BALL, TILE_SQUARE, TILE_KEY, TILE_GOAL,
+    ];
+    let mut g = Grid::filled(h, w, FLOOR_CELL);
+    for r in 0..h {
+        for c in 0..w {
+            let tile = tiles[rng.below(tiles.len())];
+            let color = rng.below(NUM_COLORS) as i32;
+            g.set(r, c, Cell::new(tile, color));
+        }
+    }
+    g
+}
+
+/// Randomized end-to-end sweep: fast kernels (table gather + bitmask
+/// occlusion, Obs and direct-i32 flavors) == the reference observe,
+/// over random walls/doors/objects grids, all directions, view sizes
+/// {3, 5, 7}, agents anywhere (edges included), occlusion on and off.
+#[test]
+fn observe_kernels_match_reference_on_random_grids() {
+    let mut rng = Rng::new(0x0b5e);
+    let mut scratch = ObsScratch::new();
+    let (mut tr, mut vis) = (Vec::new(), Vec::new());
+    for case in 0..1500 {
+        let h = 3 + rng.below(10);
+        let w = 3 + rng.below(10);
+        let g = random_grid(&mut rng, h, w);
+        let pos = (rng.below(h) as i32, rng.below(w) as i32);
+        let dir = rng.below(4) as i32;
+        let v = [3usize, 5, 7][rng.below(3)];
+        let stw = rng.below(2) == 0;
+
+        let mut want = Obs::empty(v);
+        reference::observe_into(&g, pos, dir, v, stw, &mut want,
+                                &mut tr, &mut vis);
+
+        let mut got = Obs::empty(v);
+        observe_into(&g, pos, dir, v, stw, &mut got, &mut scratch);
+        assert_eq!(got, want,
+                   "case {case}: Obs kernel vs reference \
+                    (h={h} w={w} pos={pos:?} dir={dir} v={v} stw={stw})");
+
+        let mut flat = vec![0i32; v * v * 2];
+        observe_flat_into(&g, pos, dir, v, stw, &mut flat,
+                          &mut scratch);
+        assert_eq!(flat, want.to_flat(),
+                   "case {case}: flat kernel vs reference");
+    }
+}
+
+/// Occlusion-heavy structured scenes: rooms split by a wall with a
+/// door, observed from both sides through every door state.
+#[test]
+fn observe_kernels_match_reference_behind_doors() {
+    let mut scratch = ObsScratch::new();
+    let (mut tr, mut vis) = (Vec::new(), Vec::new());
+    for door_tile in [TILE_DOOR_OPEN, TILE_DOOR_CLOSED, TILE_DOOR_LOCKED] {
+        let mut g = Grid::empty_room(11, 11);
+        for c in 0..11 {
+            g.set(5, c, WALL_CELL);
+        }
+        g.set(5, 5, Cell::new(door_tile, COLOR_BLUE));
+        g.set(3, 5, Cell::new(TILE_BALL, COLOR_RED));
+        for pos in [(7, 5), (6, 5), (2, 5), (7, 1)] {
+            for dir in 0..4 {
+                for v in [3usize, 5, 7] {
+                    let mut want = Obs::empty(v);
+                    reference::observe_into(&g, pos, dir, v, false,
+                                            &mut want, &mut tr,
+                                            &mut vis);
+                    let mut got = Obs::empty(v);
+                    observe_into(&g, pos, dir, v, false, &mut got,
+                                 &mut scratch);
+                    assert_eq!(got, want,
+                               "door={door_tile} pos={pos:?} \
+                                dir={dir} v={v}");
+                }
+            }
+        }
+    }
+}
