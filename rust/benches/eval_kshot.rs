@@ -1,0 +1,98 @@
+//! k-shot evaluation bench: the `xmgrid eval` harness run as a bench —
+//! per-trial (shot 1..k) return curves for the shipped baseline
+//! policies on a held-out split, plus harness throughput. The JSON this
+//! emits (`--json [PATH]` -> `BENCH_eval_native.json`) is the same
+//! fig-schema file the CLI writes and CI validates/diffs, so the repo's
+//! eval trajectory is machine-readable like its perf trajectory.
+//!
+//! Env knobs (CI smoke caps): `XMG_EVAL_B` env batch, `XMG_EVAL_N`
+//! benchmark size, `XMG_SHOTS` trials per task, `XMG_MAX_THREADS`
+//! stepping workers.
+
+use std::sync::Arc;
+
+use xmgrid::benchgen::{generate_benchmark_par, Benchmark, Preset,
+                       TaskSlice};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::coordinator::{eval_kshot, EvalPolicy, KShotConfig,
+                          NativeEnvConfig};
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{env_usize, json_arg_path, JsonReport};
+
+fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::new("eval_native");
+
+    let n = env_usize("XMG_EVAL_N", 512);
+    let b = env_usize("XMG_EVAL_B", 128);
+    let shots = env_usize("XMG_SHOTS", 5);
+    let threads = env_usize("XMG_MAX_THREADS", 1);
+
+    let (rulesets, _) =
+        generate_benchmark_par(&Preset::Trivial.config(), n, threads)
+            .expect("benchmark generation");
+    let bench = Arc::new(Benchmark { name: format!("trivial-{n}"),
+                                     rulesets });
+    // the canonical derivation: shuffle(42).split(0.8), evaluate test
+    let (_, test) = TaskSlice::full(bench).shuffle(42).split(0.8);
+    println!(
+        "k-shot eval bench: {} held-out tasks, {b} envs, {shots} \
+         shots, {threads} threads",
+        test.len()
+    );
+
+    let ncfg = NativeEnvConfig::for_tasks("XLand-MiniGrid-R1-9x9", b, 1,
+                                          &test)
+        .expect("env family");
+    let cfg = KShotConfig {
+        params: ncfg.params,
+        rooms: ncfg.rooms,
+        b,
+        shots,
+        threads,
+        seed: 7,
+    };
+    for policy in [EvalPolicy::Random, EvalPolicy::Greedy] {
+        let rep = eval_kshot(&test, policy, &cfg).expect("harness");
+        let sps = rep.steps_per_sec();
+        println!("{}: {} steps/s", rep.policy, fmt_sps(sps));
+        for st in &rep.shots {
+            println!(
+                "  shot {:>2}: return mean {:.4} P20 {:.4} solved \
+                 {:>5.1}% len {:>6.1}",
+                st.shot, st.return_mean, st.return_p20,
+                st.solved_frac * 100.0, st.len_mean
+            );
+            report.add_sps_extra(
+                &format!("eval-{}-shot{}", rep.policy, st.shot),
+                rep.envs,
+                st.len_mean.round() as usize,
+                sps,
+                &format!(
+                    "\"shot\":{},\"return_mean\":{:.6},\
+                     \"return_p20\":{:.6},\"solved_frac\":{:.6},\
+                     \"tasks\":{}",
+                    st.shot, st.return_mean, st.return_p20,
+                    st.solved_frac, rep.tasks
+                ),
+            );
+        }
+        report.add_sps(&format!("eval-{}-total", rep.policy), rep.envs,
+                       (rep.total_steps / rep.envs.max(1) as u64)
+                           as usize,
+                       sps);
+        report.metric(&format!("{}_final_shot_return", rep.policy),
+                      rep.shots.last().map_or(0.0, |s| s.return_mean));
+    }
+    report.metric("shots", shots as f64);
+    report.note(
+        "k-shot eval on trivial shuffle(42).split(0.8) test split; one \
+         pinned task per env, shot j = trial j per §2.1; returns are \
+         policy metrics (flat curves for memoryless baselines), sps is \
+         harness throughput",
+    );
+    if let Some(path) = json_arg_path(&args, "eval_native") {
+        report.write(&path).expect("writing bench json");
+        println!("wrote {path:?}");
+    }
+}

@@ -3,10 +3,12 @@
 
 pub mod config;
 pub mod generator;
+pub mod ops;
 pub mod store;
 
 pub use config::{GenConfig, Preset};
 pub use generator::{generate_benchmark, generate_benchmark_par,
                     generate_benchmark_with, generate_ruleset,
                     ruleset_key, RulesetStats};
+pub use ops::{rule_depth, task_meta, TaskMeta, TaskSlice};
 pub use store::{Benchmark, BenchmarkWriter};

@@ -1,0 +1,397 @@
+//! Deterministic task-set ops over the benchmark store — the train/test
+//! discipline of the paper's §4 generalization analysis (and of every
+//! downstream consumer: AMAGO's adapter opens with
+//! `benchmark.shuffle(key).split(prop=0.8)`).
+//!
+//! A [`TaskSlice`] is an *index permutation* over a shared
+//! [`Benchmark`]: ops permute or narrow a `Vec<u32>` of task ids and
+//! never clone a ruleset, so deriving arbitrarily many splits from a
+//! million-task store costs 4 bytes per selected task, not a second
+//! copy of the store. Saving a slice streams the selected rulesets
+//! through [`BenchmarkWriter`] in slice order — derived splits
+//! round-trip through the exact chunked-gzip wire format the store
+//! already speaks, and load back as ordinary benchmarks.
+//!
+//! # Determinism contract
+//!
+//! Every op is a pure function of (base benchmark content, op
+//! arguments). [`TaskSlice::shuffle`] is keyed by an explicit `seed`
+//! (one Fisher–Yates pass on a private `Rng::new(seed)` stream), never
+//! by an ambient RNG position, and no op spawns threads — so the
+//! resulting id order (and therefore the byte stream a save emits) is
+//! bitwise identical on every machine, for every `--threads` count the
+//! base benchmark was generated or loaded with, and across
+//! save→load→re-derive round-trips. `tests/benchmark_ops.rs` pins all
+//! of this.
+//!
+//! # Per-task metadata
+//!
+//! [`TaskMeta`] is computed from the structural encoding alone (the
+//! same bytes `ruleset_key` hashes): the goal family id, the non-empty
+//! rule count, and [`rule_depth`] — the production-chain depth needed
+//! to obtain the goal's required objects from the initial tiles. Depth
+//! 0 means the goal objects are already on the grid at trial start;
+//! depth d means at least one goal object only exists after a chain of
+//! d rule firings. [`TaskSlice::filter`] selects on this metadata, so
+//! "hold out the deep-chained tasks" or "train on goal families
+//! {1,3,4}" (the Fig. 8 protocol) are one-liners that compose with
+//! shuffle/split/subset.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::env::state::{Ruleset, TaskSource};
+use crate::env::types::RULE_EMPTY;
+
+use super::store::{Benchmark, BenchmarkWriter};
+
+/// Structural metadata of one task, derived from the wire encoding (no
+/// simulation): the filter dimensions of [`TaskSlice::filter`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskMeta {
+    /// goal family id (`Goal::id()`, the first encoded byte)
+    pub goal_id: i32,
+    /// non-empty rules (the Fig. 4 statistic)
+    pub num_rules: usize,
+    /// production-chain depth to the goal objects — see [`rule_depth`]
+    pub rule_depth: usize,
+    /// initial object tiles placed at trial start
+    pub num_init: usize,
+}
+
+/// Production-chain depth of a ruleset: the minimal number of chained
+/// rule firings needed to produce each of the goal's required objects
+/// from the initial tiles, maximized over those objects.
+///
+/// Computed as a shortest-path fixpoint over the object-dependency
+/// graph: an initial tile has depth 0; a rule's output is reachable at
+/// `1 + max(depth of its inputs)`; relaxation repeats until no depth
+/// improves (depths only decrease, so this terminates). Goal objects
+/// the rules never produce and the init tiles never place contribute 0
+/// — the §3 generator guarantees solvability, so that case only arises
+/// for goals with no object arguments (e.g. `agent_on_position`).
+pub fn rule_depth(rs: &Ruleset) -> usize {
+    let mut depth: HashMap<(i32, i32), usize> = rs
+        .init_tiles
+        .iter()
+        .map(|c| ((c.tile, c.color), 0usize))
+        .collect();
+    loop {
+        let mut changed = false;
+        for r in &rs.rules {
+            if r.id() == RULE_EMPTY {
+                continue;
+            }
+            let inputs = r.inputs();
+            let mut d = 0usize;
+            let mut ready = true;
+            for c in &inputs {
+                match depth.get(&(c.tile, c.color)) {
+                    Some(&x) => d = d.max(x),
+                    None => {
+                        ready = false;
+                        break;
+                    }
+                }
+            }
+            if !ready {
+                continue;
+            }
+            let out = r.c();
+            let nd = d + 1;
+            let e = depth.entry((out.tile, out.color)).or_insert(usize::MAX);
+            if nd < *e {
+                *e = nd;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    rs.goal
+        .required_objects()
+        .iter()
+        .map(|c| depth.get(&(c.tile, c.color)).copied().unwrap_or(0))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Compute the structural metadata of one task.
+pub fn task_meta(rs: &Ruleset) -> TaskMeta {
+    TaskMeta {
+        goal_id: rs.goal.id(),
+        num_rules: rs.num_rules(),
+        rule_depth: rule_depth(rs),
+        num_init: rs.init_tiles.len(),
+    }
+}
+
+/// An ordered selection of tasks from a shared [`Benchmark`]: the
+/// index-permutation view all the deterministic ops operate on. Cheap
+/// to clone and to derive from (ids only); installable directly as any
+/// backend's task pool through its [`TaskSource`] impl.
+#[derive(Clone, Debug)]
+pub struct TaskSlice {
+    /// display / derived-split name (`<base>-train`, ...)
+    pub name: String,
+    base: Arc<Benchmark>,
+    ids: Vec<u32>,
+}
+
+impl TaskSlice {
+    /// The identity slice: every task of `base`, in store order.
+    pub fn full(base: Arc<Benchmark>) -> TaskSlice {
+        let n = base.rulesets.len();
+        assert!(n <= u32::MAX as usize, "benchmark exceeds u32 ids");
+        TaskSlice {
+            name: base.name.clone(),
+            base,
+            ids: (0..n as u32).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Store ids in slice order (the permutation itself).
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// The shared base benchmark.
+    pub fn base(&self) -> &Arc<Benchmark> {
+        &self.base
+    }
+
+    /// Ruleset of the `i`-th task of the slice.
+    pub fn get(&self, i: usize) -> &Ruleset {
+        &self.base.rulesets[self.ids[i] as usize]
+    }
+
+    /// Metadata of the `i`-th task of the slice.
+    pub fn meta(&self, i: usize) -> TaskMeta {
+        task_meta(self.get(i))
+    }
+
+    /// Rename (derived splits get `-train`/`-test` suffixes by default).
+    pub fn named(mut self, name: &str) -> TaskSlice {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Seed-keyed Fisher–Yates permutation of the slice order. The only
+    /// randomized op; the key is explicit so the result is a pure
+    /// function of `(slice, seed)` — never of thread count or of how
+    /// many draws some shared stream already made.
+    pub fn shuffle(mut self, seed: u64) -> TaskSlice {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        rng.shuffle(&mut self.ids);
+        self
+    }
+
+    /// Split into (train, test) by proportion: the first
+    /// `round(len * prop)` tasks of the slice order become train, the
+    /// rest test — disjoint and exhaustive by construction, App. D
+    /// semantics (compose with [`TaskSlice::shuffle`] for a randomized
+    /// split).
+    pub fn split(self, prop: f64) -> (TaskSlice, TaskSlice) {
+        let k = ((self.ids.len() as f64) * prop).round() as usize;
+        let k = k.min(self.ids.len());
+        let mut train_ids = self.ids;
+        let test_ids = train_ids.split_off(k);
+        (
+            TaskSlice {
+                name: format!("{}-train", self.name),
+                base: self.base.clone(),
+                ids: train_ids,
+            },
+            TaskSlice {
+                name: format!("{}-test", self.name),
+                base: self.base,
+                ids: test_ids,
+            },
+        )
+    }
+
+    /// Narrow to `range` positions of the current slice order (clamped
+    /// to the slice length).
+    pub fn subset(mut self, range: Range<usize>) -> TaskSlice {
+        let lo = range.start.min(self.ids.len());
+        let hi = range.end.min(self.ids.len()).max(lo);
+        self.ids = self.ids[lo..hi].to_vec();
+        self.name = format!("{}-sub{lo}..{hi}", self.name);
+        self
+    }
+
+    /// Keep tasks whose metadata satisfies `pred`, preserving order.
+    pub fn filter<F: FnMut(&TaskMeta) -> bool>(mut self, mut pred: F)
+                                               -> TaskSlice {
+        let base = &self.base;
+        self.ids.retain(|&id| {
+            pred(&task_meta(&base.rulesets[id as usize]))
+        });
+        self
+    }
+
+    /// Keep tasks whose goal family id is in `goal_ids` (Fig. 8:
+    /// train on goals {1,3,4}, hold out the rest via the complement).
+    pub fn filter_goals(self, goal_ids: &[i32]) -> TaskSlice {
+        self.filter(|m| goal_ids.contains(&m.goal_id))
+    }
+
+    /// Keep tasks with `lo <= rule_depth < hi`.
+    pub fn filter_depth(self, depths: Range<usize>) -> TaskSlice {
+        self.filter(|m| depths.contains(&m.rule_depth))
+    }
+
+    /// Stream the slice through the chunked-gzip wire format (one
+    /// ruleset at a time, slice order — bounded memory like every
+    /// store write). The saved file loads back with [`Benchmark::load`]
+    /// / `load_benchmark` as an ordinary benchmark whose store order is
+    /// this slice's order. Returns `(raw_bytes, compressed_bytes)`.
+    pub fn save(&self, path: &Path) -> Result<(usize, usize)> {
+        let mut w = BenchmarkWriter::create(path, self.ids.len())?;
+        for &id in &self.ids {
+            w.push(&self.base.rulesets[id as usize])?;
+        }
+        w.finish()
+    }
+
+    /// Copy out an owned [`Benchmark`] in slice order (for callers that
+    /// need the concrete type; backends take the slice itself via
+    /// [`TaskSource`]).
+    pub fn materialize(&self) -> Benchmark {
+        Benchmark {
+            name: self.name.clone(),
+            rulesets: self
+                .ids
+                .iter()
+                .map(|&id| self.base.rulesets[id as usize].clone())
+                .collect(),
+        }
+    }
+}
+
+/// A slice *is* a task pool: episode auto-reset draws uniformly over
+/// the slice, so a held-out split installs directly into
+/// `VecEnv`/`ParVecEnv`/`NativePool` (`set_task_source`,
+/// `NativePool::with_task_source`) with no copying.
+impl TaskSource for TaskSlice {
+    fn num_tasks(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn task(&self, id: usize) -> &Ruleset {
+        &self.base.rulesets[self.ids[id] as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchgen::config::Preset;
+    use crate::benchgen::generator::{generate_benchmark_par,
+                                     ruleset_key};
+
+    fn bench(n: usize) -> Arc<Benchmark> {
+        let (rulesets, _) =
+            generate_benchmark_par(&Preset::Small.config(), n, 1)
+                .unwrap();
+        Arc::new(Benchmark { name: "ops-test".into(), rulesets })
+    }
+
+    #[test]
+    fn full_slice_is_identity() {
+        let b = bench(32);
+        let s = TaskSlice::full(b.clone());
+        assert_eq!(s.len(), 32);
+        for i in 0..32 {
+            assert_eq!(s.get(i), &b.rulesets[i]);
+        }
+    }
+
+    #[test]
+    fn shuffle_same_seed_is_identical() {
+        let b = bench(64);
+        let a = TaskSlice::full(b.clone()).shuffle(7);
+        let c = TaskSlice::full(b.clone()).shuffle(7);
+        assert_eq!(a.ids(), c.ids());
+        let d = TaskSlice::full(b).shuffle(8);
+        assert_ne!(a.ids(), d.ids(), "different seed, different order");
+    }
+
+    #[test]
+    fn split_counts_and_names() {
+        let b = bench(64);
+        let (tr, te) = TaskSlice::full(b).shuffle(3).split(0.75);
+        assert_eq!(tr.len(), 48);
+        assert_eq!(te.len(), 16);
+        assert_eq!(tr.name, "ops-test-train");
+        assert_eq!(te.name, "ops-test-test");
+    }
+
+    #[test]
+    fn subset_clamps() {
+        let b = bench(16);
+        assert_eq!(TaskSlice::full(b.clone()).subset(4..12).len(), 8);
+        assert_eq!(TaskSlice::full(b.clone()).subset(10..100).len(), 6);
+        assert_eq!(TaskSlice::full(b).subset(20..30).len(), 0);
+    }
+
+    #[test]
+    fn slice_is_task_source() {
+        let b = bench(16);
+        let s = TaskSlice::full(b.clone()).shuffle(1).subset(0..5);
+        assert_eq!(s.num_tasks(), 5);
+        assert_eq!(ruleset_key(s.task(2)), ruleset_key(s.get(2)));
+    }
+
+    #[test]
+    fn depth_zero_when_goal_objects_initial() {
+        // every goal object placed at trial start -> depth 0
+        let b = bench(64);
+        let s = TaskSlice::full(b);
+        for i in 0..s.len() {
+            let m = s.meta(i);
+            assert_eq!(m.goal_id, s.get(i).goal.id());
+            assert_eq!(m.num_rules, s.get(i).num_rules());
+            assert!(m.rule_depth <= m.num_rules,
+                    "a chain cannot be longer than the rule count");
+        }
+    }
+
+    #[test]
+    fn rule_depth_hand_built_chain() {
+        use crate::env::goals::Goal;
+        use crate::env::rules::Rule;
+        use crate::env::types::Cell;
+        let a = Cell::new(5, 3); // ball red
+        let b = Cell::new(6, 4); // square green
+        let c = Cell::new(7, 5); // pyramid blue
+        let d = Cell::new(13, 6); // hex purple
+        // a near b -> c;  c held -> d;  goal: hold d
+        let rs = Ruleset {
+            goal: Goal::agent_hold(d),
+            rules: vec![Rule::tile_near(a, b, c), Rule::agent_hold(c, d)],
+            init_tiles: vec![a, b],
+        };
+        assert_eq!(rule_depth(&rs), 2);
+        // goal on an initial object -> depth 0
+        let rs0 = Ruleset {
+            goal: Goal::agent_hold(a),
+            rules: vec![Rule::tile_near(a, b, c)],
+            init_tiles: vec![a, b],
+        };
+        assert_eq!(rule_depth(&rs0), 0);
+    }
+}

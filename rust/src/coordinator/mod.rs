@@ -14,6 +14,7 @@
 //! for the threading model.
 
 pub mod config;
+pub mod eval;
 pub mod metrics;
 pub mod native;
 pub mod pool;
@@ -23,6 +24,8 @@ pub mod trainer;
 pub mod workers;
 
 pub use config::{BackendKind, Overlap, ShardConfig, TrainConfig};
+pub use eval::{eval_kshot, EvalPolicy, KShotConfig, KShotReport,
+               ShotStats};
 pub use native::{NativeEnvConfig, NativePool};
 pub use pool::EnvPool;
 pub use rollout::RolloutEngine;

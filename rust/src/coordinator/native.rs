@@ -47,6 +47,15 @@ impl NativeEnvConfig {
     /// see [`NativeEnvConfig::with_threads`].
     pub fn for_env(name: &str, b: usize, t: usize, bench: &Benchmark)
                    -> Result<NativeEnvConfig> {
+        NativeEnvConfig::for_tasks(name, b, t, bench)
+    }
+
+    /// [`NativeEnvConfig::for_env`] over any [`TaskSource`] — a whole
+    /// benchmark or a derived `TaskSlice` split: the rule / init-tile
+    /// table capacities are sized to the maxima of exactly the tasks
+    /// the pool will draw.
+    pub fn for_tasks(name: &str, b: usize, t: usize,
+                     tasks: &dyn TaskSource) -> Result<NativeEnvConfig> {
         let spec = match XLAND_ENVS.iter().find(|e| e.name == name) {
             Some(s) => s,
             None => bail!(
@@ -57,18 +66,12 @@ impl NativeEnvConfig {
         if b == 0 || t == 0 {
             bail!("native backend needs batch and steps >= 1");
         }
-        let mr = bench
-            .rulesets
-            .iter()
-            .map(|r| r.rules.len())
-            .max()
-            .unwrap_or(0);
-        let mi = bench
-            .rulesets
-            .iter()
-            .map(|r| r.init_tiles.len())
-            .max()
-            .unwrap_or(0);
+        let (mut mr, mut mi) = (0usize, 0usize);
+        for i in 0..tasks.num_tasks() {
+            let rs = tasks.task(i);
+            mr = mr.max(rs.rules.len());
+            mi = mi.max(rs.init_tiles.len());
+        }
         Ok(NativeEnvConfig {
             params: EnvParams::new(spec.h, spec.w, mr, mi),
             rooms: spec.rooms,
@@ -101,9 +104,9 @@ pub struct NativePool {
     pub cfg: NativeEnvConfig,
     venv: ParVecEnv,
     obs: Vec<i32>,
-    /// benchmark installed at construction (`with_tasks`) — the task
-    /// source the trait-level `reset` draws from
-    tasks: Option<Arc<Benchmark>>,
+    /// task source installed at construction (`with_tasks` /
+    /// `with_task_source`) — what the trait-level `reset` draws from
+    tasks: Option<Arc<dyn TaskSource>>,
 }
 
 impl NativePool {
@@ -118,8 +121,16 @@ impl NativePool {
     /// [`BatchEnvironment::reset`].
     pub fn with_tasks(cfg: NativeEnvConfig, bench: Arc<Benchmark>)
                       -> NativePool {
+        NativePool::with_task_source(cfg, bench)
+    }
+
+    /// [`NativePool::with_tasks`] over any shared [`TaskSource`] — in
+    /// particular a `TaskSlice` split, which installs a held-out task
+    /// pool without materializing a second benchmark.
+    pub fn with_task_source(cfg: NativeEnvConfig,
+                            tasks: Arc<dyn TaskSource>) -> NativePool {
         let mut pool = NativePool::new(cfg);
-        pool.tasks = Some(bench);
+        pool.tasks = Some(tasks);
         pool
     }
 
@@ -136,10 +147,21 @@ impl NativePool {
     /// episode draws a fresh task (the §2.1 protocol) instead of
     /// replaying the reset-time ruleset forever.
     pub fn reset(&mut self, bench: &Arc<Benchmark>, rng: &mut Rng) {
+        let tasks: Arc<dyn TaskSource> = bench.clone();
+        self.reset_from(&tasks, rng);
+    }
+
+    /// [`NativePool::reset`] over any shared [`TaskSource`] (the RNG
+    /// draw sequence is identical, so a whole-benchmark source
+    /// reproduces the historical `reset` bit for bit).
+    pub fn reset_from(&mut self, tasks: &Arc<dyn TaskSource>,
+                      rng: &mut Rng) {
         let b = self.cfg.b;
         let (h, w) = (self.cfg.params.h, self.cfg.params.w);
+        let n = tasks.num_tasks();
+        assert!(n > 0, "empty task source");
         let rulesets: Vec<&Ruleset> =
-            (0..b).map(|_| bench.sample_ruleset(rng)).collect();
+            (0..b).map(|_| tasks.task(rng.below(n))).collect();
         let grids: Vec<Grid> = (0..b)
             .map(|_| xland_layout(self.cfg.rooms, h, w, rng))
             .collect();
@@ -147,8 +169,7 @@ impl NativePool {
         let rngs: Vec<Rng> = (0..b).map(|_| rng.split()).collect();
         self.venv.reset_all(&grids, &rulesets, &max_steps, &rngs,
                             &mut self.obs);
-        let tasks: Arc<dyn TaskSource> = bench.clone();
-        self.venv.set_task_source(tasks);
+        self.venv.set_task_source(tasks.clone());
     }
 
     /// One random-policy rollout chunk of `t` steps; returns
@@ -187,12 +208,12 @@ impl BatchEnvironment for NativePool {
     fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32]) -> Result<()> {
         anyhow::ensure!(obs_out.len() == self.venv.obs_len(),
                         "obs buffer size");
-        let bench = self
+        let tasks = self
             .tasks
             .clone()
             .context("NativePool: no task source installed; construct \
                       with NativePool::with_tasks")?;
-        NativePool::reset(self, &bench, rng);
+        self.reset_from(&tasks, rng);
         obs_out.copy_from_slice(&self.obs);
         Ok(())
     }
@@ -277,6 +298,30 @@ mod tests {
         // trials only end on goal achievement here, which random play
         // may or may not hit — just check the aggregate is sane
         assert!(trials <= 16 * 8);
+    }
+
+    /// A derived `TaskSlice` split installs directly as the pool's
+    /// task source, and the rollout stays bitwise thread-invariant.
+    #[test]
+    fn slice_installs_as_task_pool() {
+        use crate::benchgen::TaskSlice;
+        let bench = tiny_bench();
+        let slice = Arc::new(
+            TaskSlice::full(bench).shuffle(5).subset(0..4));
+        let cfg = NativeEnvConfig::for_tasks("XLand-MiniGrid-R1-9x9", 8,
+                                             4, slice.as_ref())
+            .unwrap();
+        let run = |threads: usize| {
+            let src: Arc<dyn TaskSource> = slice.clone();
+            let mut pool = NativePool::with_task_source(
+                cfg.with_threads(threads), src.clone());
+            let mut rng = Rng::new(11);
+            pool.reset_from(&src, &mut rng);
+            let totals = pool.rollout(6, &mut rng);
+            (totals.0.to_bits(), totals.1, totals.2,
+             pool.obs().to_vec())
+        };
+        assert_eq!(run(1), run(2), "split pool thread-invariant");
     }
 
     /// The trait surface reproduces the inherent pool bitwise: same

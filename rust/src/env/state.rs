@@ -58,6 +58,20 @@ impl TaskSource for Vec<Ruleset> {
     }
 }
 
+/// Shared sources pass through: `Arc<Benchmark>`, `Arc<TaskSlice>` and
+/// `Arc<dyn TaskSource>` are themselves sources, so the coordinator can
+/// hold one `Arc` and hand it to engines that take either a borrow or
+/// an owned source.
+impl<T: TaskSource + ?Sized> TaskSource for std::sync::Arc<T> {
+    fn num_tasks(&self) -> usize {
+        (**self).num_tasks()
+    }
+
+    fn task(&self, id: usize) -> &Ruleset {
+        (**self).task(id)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct State {
     pub base_grid: Grid,

@@ -28,12 +28,14 @@ use anyhow::{bail, Context, Result};
 use xmgrid::benchgen::store::{data_dir, load_benchmark_with,
                               size_suffix_name};
 use xmgrid::benchgen::{generate_benchmark, generate_benchmark_with,
-                       BenchmarkWriter, Preset};
+                       BenchmarkWriter, Preset, TaskSlice};
 use xmgrid::coordinator::metrics::{fmt_sps, CsvLog, ThroughputMeter};
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::{BackendKind, NativeEnvConfig, Overlap,
+use xmgrid::coordinator::{eval_kshot, BackendKind, EvalPolicy,
+                          KShotConfig, NativeEnvConfig, Overlap,
                           RolloutEngine, ShardConfig, ShardedTrainer,
                           TrainConfig, Trainer};
+use xmgrid::util::bench::{json_arg_path, JsonReport};
 use xmgrid::env::api::{EnvParams, ObsMode};
 use xmgrid::env::registry;
 use xmgrid::env::state::{reset, step, EnvOptions};
@@ -85,6 +87,7 @@ fn main() -> Result<()> {
         "envs" => cmd_envs(&args),
         "play" => cmd_play(&args),
         "gen-benchmark" => cmd_gen_benchmark(&args),
+        "split" => cmd_split(&args),
         "rollout" => cmd_rollout(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
@@ -109,11 +112,16 @@ commands:
   envs [--json]                       list environments (+specs)
   play --env NAME [--steps N]         ASCII episode
   gen-benchmark --preset P --n N      generate benchmark (--threads)
+  split --benchmark B [--shuffle S]   deterministic shuffle/filter/
+        [--prop P] [--goals IDS]      subset + train/test split, saved
+        [--depth LO..HI]              through the benchmark store
   rollout [--backend B] [--shards N]  sharded throughput run
           [--threads T] [--obs M]     (native: chunked stepping pool,
                                       obs wrapper stacks incl. rgb)
   train [--shards N] [--overlap M]    RL² PPO training
-  eval --benchmark B                  evaluation protocol
+  eval --benchmark B [--shots K]      k-shot evaluation on a held-out
+       [--policy random|greedy]       split (per-trial return curves,
+                                      BENCH_eval JSON via --json)
   validate                            oracle cross-check
   artifacts                           list manifest
 
@@ -166,6 +174,31 @@ custom generation never shadows the canonical benchmark.
                     attempt k's candidate is a pure function of
                     (seed, k) and the dedup merge consumes candidates
                     in ascending k order.",
+        "split" => "\
+usage: xmgrid split --benchmark NAME [--shuffle S] [--prop P]
+                    [--goals IDS] [--depth LO..HI] [--subset LO..HI]
+                    [--out PREFIX] [--threads T|auto]
+
+Derive deterministic train/test splits from a stored benchmark and save
+them through the chunked-gzip store, loadable by name from any other
+command (--benchmark <PREFIX>-train / <PREFIX>-test). Ops apply in a
+fixed pipeline — filter by goals, filter by rule depth, subset, shuffle,
+split — each a pure function of (store content, arguments): the same
+invocation produces byte-identical files on every machine, for every
+--threads count, pinned by tests/benchmark_ops.rs.
+
+  --benchmark NAME   source benchmark (generated/cached on first use)
+  --shuffle S        Fisher-Yates permutation keyed by seed S before
+                     splitting (omit for store order)
+  --prop P           train proportion (default: 0.8); test gets the rest
+  --goals IDS        keep only goal family ids in the comma list, e.g.
+                     --goals 1,3,4 (the Fig. 8 train goals); see
+                     docs/ARCHITECTURE.md for the id table
+  --depth LO..HI     keep tasks with LO <= rule depth < HI (production-
+                     chain depth from init tiles to the goal objects)
+  --subset LO..HI    keep slice positions [LO, HI) before shuffling
+  --out PREFIX       output name prefix (default: the benchmark name)
+  --threads T|auto   first-use generation threads (default: 1)",
         "rollout" => "\
 usage: xmgrid rollout [--backend auto|native|xla] [--batch B]
                       [--chunks N] [--shards K] [--threads T|auto]
@@ -255,17 +288,42 @@ all-reduces parameter updates on the host in fixed shard order.
                      lowered against the symbolic ObsSpec (other
                      stacks error with a pointer to aot.py)",
         "eval" => "\
-usage: xmgrid eval [--benchmark NAME] [--batch B] [--rooms R]
-                   [--artifacts-dir DIR]
+usage: xmgrid eval [--benchmark NAME] [--policy random|greedy|artifact]
+                   [--shots K] [--batch B] [--env NAME]
+                   [--shuffle S] [--prop P] [--split train|test]
+                   [--threads T|auto] [--seed S] [--json [PATH]]
+                   [--rooms R] [--artifacts-dir DIR]
 
-§4.2 evaluation protocol: roll the (freshly initialised) policy over the
-eval artifact's batch of held-out tasks; report mean and 20th-percentile
-return and per-trial numbers.
+k-shot evaluation harness: pin one held-out task per env (round-robin
+over the split), run the policy for K consecutive trials of that task
+(§2.1: trial resets keep the task), and report the per-shot return
+curve — mean, P20, solved fraction per trial index. Runs on the native
+ParVecEnv batch: no artifacts needed, bitwise deterministic per seed
+for any --threads. --json writes fig-schema BENCH_eval_native.json
+(one row per shot plus a throughput total, the format
+scripts/compare_bench.py diffs).
 
-  --benchmark NAME   task source (default: trivial-1k)
-  --batch B          train_iter artifact to build the trainer around
-                     (default: 256)
-  --rooms R          rooms in the base grid layout (default: 1)",
+  --benchmark NAME   task source (default: trivial-1k); point it at a
+                     saved `xmgrid split` output to evaluate that split
+                     directly
+  --policy P         random (default) | greedy (scripted baseline that
+                     homes on visible goal objects) | artifact (the
+                     legacy §4.2 protocol through the eval_rollout
+                     artifact — needs make artifacts + PJRT)
+  --shots K          trials recorded per task (default: 5)
+  --batch B          env batch; tasks assign round-robin, so B >= the
+                     split size covers every task (default: 256)
+  --env NAME         XLand registry family to evaluate in
+                     (default: XLand-MiniGrid-R1-9x9)
+  --shuffle S        shuffle the benchmark with seed S before splitting
+  --prop P           train proportion for --split (default: 0.8)
+  --split PART       evaluate the train or test part of an in-process
+                     shuffle/split instead of the whole benchmark
+  --threads T|auto   stepping workers (default: 1; output identical)
+  --seed S           harness seed: layouts, env streams, random policy
+                     (default: 0)
+  --json [PATH]      write BENCH_eval_native.json (or PATH)
+  --rooms R          rooms — artifact policy only (default: 1)",
         "validate" => "\
 usage: xmgrid validate [--artifacts-dir DIR]
 
@@ -749,7 +807,187 @@ fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
     Ok(())
 }
 
+/// `"LO..HI"` → `LO..HI` (half-open, usize).
+fn parse_range(s: &str) -> Result<std::ops::Range<usize>> {
+    let (lo, hi) = s
+        .split_once("..")
+        .with_context(|| format!("range must be LO..HI, got {s}"))?;
+    let lo: usize = lo.parse()
+        .with_context(|| format!("bad range start in {s}"))?;
+    let hi: usize = hi.parse()
+        .with_context(|| format!("bad range end in {s}"))?;
+    if hi < lo {
+        bail!("empty range {s}");
+    }
+    Ok(lo..hi)
+}
+
+/// Comma-separated goal id list (`1,3,4`).
+fn parse_goal_ids(s: &str) -> Result<Vec<i32>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<i32>()
+                .with_context(|| format!("bad goal id `{t}` in {s}"))
+        })
+        .collect()
+}
+
+/// Shared op pipeline of `split`/`eval`: filter by goals, filter by
+/// depth, subset, shuffle — fixed order, every stage a pure function
+/// of (slice, flag values).
+fn apply_slice_ops(mut slice: TaskSlice, args: &Args)
+                   -> Result<TaskSlice> {
+    if let Some(g) = args.get("goals") {
+        slice = slice.filter_goals(&parse_goal_ids(g)?);
+    }
+    if let Some(d) = args.get("depth") {
+        slice = slice.filter_depth(parse_range(d)?);
+    }
+    if let Some(r) = args.get("subset") {
+        slice = slice.subset(parse_range(r)?);
+    }
+    if let Some(seed) = args.get("shuffle") {
+        let seed: u64 = seed.parse()
+            .with_context(|| format!("--shuffle needs a u64 seed, \
+                                      got {seed}"))?;
+        slice = slice.shuffle(seed);
+    }
+    Ok(slice)
+}
+
+fn cmd_split(args: &Args) -> Result<()> {
+    let name = args.str_or("benchmark", "trivial-1k");
+    let bench = Arc::new(load_benchmark_with(&name,
+                                             parse_threads(args)?)?);
+    let total = bench.num_rulesets();
+    let slice = apply_slice_ops(TaskSlice::full(bench), args)?;
+    if slice.is_empty() {
+        bail!("the op pipeline selected 0 of {total} tasks — nothing \
+               to split");
+    }
+    let prop = args.f64_or("prop", 0.8);
+    if !(0.0..=1.0).contains(&prop) {
+        bail!("--prop must be in [0, 1], got {prop}");
+    }
+    let selected = slice.len();
+    let (train, test) = slice.split(prop);
+    let prefix = args.str_or("out", &name);
+    let dir = data_dir();
+    std::fs::create_dir_all(&dir)?;
+    for (part, s) in [("train", &train), ("test", &test)] {
+        if s.is_empty() {
+            println!("{part}: 0 tasks — not saved");
+            continue;
+        }
+        let path = dir.join(format!("{prefix}-{part}.xmg.gz"));
+        let (raw, comp) = s.save(&path)?;
+        println!(
+            "{part}: {} tasks -> {path:?} ({:.1} KiB raw, {:.1} KiB gz)",
+            s.len(), raw as f64 / 1024.0, comp as f64 / 1024.0
+        );
+    }
+    println!(
+        "selected {selected}/{total} tasks, split {}/{} at prop {prop}; \
+         load with --benchmark {prefix}-train / {prefix}-test",
+        train.len(), test.len()
+    );
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
+    if args.str_or("policy", "random") == "artifact" {
+        return cmd_eval_artifact(args);
+    }
+    let policy = EvalPolicy::from_flag(&args.str_or("policy", "random"))?;
+    let name = args.str_or("benchmark", "trivial-1k");
+    let bench = Arc::new(load_benchmark_with(&name,
+                                             parse_threads(args)?)?);
+    let mut slice = apply_slice_ops(TaskSlice::full(bench), args)?;
+    if let Some(part) = args.get("split") {
+        let prop = args.f64_or("prop", 0.8);
+        let (train, test) = slice.split(prop);
+        slice = match part {
+            "train" => train,
+            "test" => test,
+            other => bail!("--split must be train | test, got {other}"),
+        };
+    }
+    if slice.is_empty() {
+        bail!("the selected split is empty — nothing to evaluate");
+    }
+    let shots = args.usize_or("shots", 5);
+    let batch = args.usize_or("batch", 256);
+    let env_name = args.str_or("env", "XLand-MiniGrid-R1-9x9");
+    let ncfg = NativeEnvConfig::for_tasks(&env_name, batch, 1, &slice)?;
+    let cfg = KShotConfig {
+        params: ncfg.params,
+        rooms: ncfg.rooms,
+        b: batch,
+        shots,
+        threads: parse_threads(args)?,
+        seed: args.u64_or("seed", 0),
+    };
+    println!(
+        "k-shot eval: {} on {} ({} tasks, {} envs, {shots} shots, \
+         {} threads, seed {})",
+        policy.name(), slice.name, slice.len(), batch, cfg.threads,
+        cfg.seed
+    );
+    let rep = eval_kshot(&slice, policy, &cfg)?;
+    for st in &rep.shots {
+        println!(
+            "  shot {:>2}: return mean {:.4} | P20 {:.4} | solved \
+             {:>5.1}% | len {:>6.1}",
+            st.shot, st.return_mean, st.return_p20,
+            st.solved_frac * 100.0, st.len_mean
+        );
+    }
+    println!(
+        "  total: {} env steps in {:.2}s ({} steps/s)",
+        rep.total_steps, rep.elapsed_secs, fmt_sps(rep.steps_per_sec())
+    );
+    if let Some(path) = json_arg_path(args, "eval_native") {
+        let mut report = JsonReport::new("eval_native");
+        let sps = rep.steps_per_sec();
+        for st in &rep.shots {
+            report.add_sps_extra(
+                &format!("eval-{}-shot{}", rep.policy, st.shot),
+                rep.envs,
+                st.len_mean.round() as usize,
+                sps,
+                &format!(
+                    "\"shot\":{},\"return_mean\":{:.6},\
+                     \"return_p20\":{:.6},\"solved_frac\":{:.6},\
+                     \"tasks\":{}",
+                    st.shot, st.return_mean, st.return_p20,
+                    st.solved_frac, rep.tasks
+                ),
+            );
+        }
+        report.add_sps(&format!("eval-{}-total", rep.policy), rep.envs,
+                       (rep.total_steps / rep.envs.max(1) as u64)
+                           as usize,
+                       sps);
+        report.metric("shots", shots as f64);
+        report.metric("tasks", rep.tasks as f64);
+        report.metric(&format!("{}_first_shot_return", rep.policy),
+                      rep.shots.first().map_or(0.0, |s| s.return_mean));
+        report.metric(&format!("{}_final_shot_return", rep.policy),
+                      rep.shots.last().map_or(0.0, |s| s.return_mean));
+        report.note(&format!(
+            "k-shot eval on {}: one pinned task per env (round-robin), \
+             shot j = trial j per §2.1; deterministic per seed for any \
+             --threads", slice.name
+        ));
+        report.write(&path)?;
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+/// The legacy artifact-backed §4.2 protocol (`--policy artifact`).
+fn cmd_eval_artifact(args: &Args) -> Result<()> {
     let rt = Runtime::new(&artifacts_dir(args))?;
     let bench = load_benchmark_with(
         &args.str_or("benchmark", "trivial-1k"), parse_threads(args)?)?;

@@ -104,6 +104,23 @@ impl JsonReport {
         ));
     }
 
+    /// [`JsonReport::add_sps`] with extra schema fields appended
+    /// verbatim after the standard keys (e.g. the eval harness's
+    /// per-shot `"shot":1,"return_mean":0.42` columns). `extra` must be
+    /// a comma-separated list of JSON key:value pairs without braces;
+    /// the standard keys stay first so label-keyed tooling
+    /// (scripts/compare_bench.py) reads these rows unchanged.
+    pub fn add_sps_extra(&mut self, label: &str, envs: usize,
+                         steps: usize, sps: f64, extra: &str) {
+        self.rows.push(format!(
+            "{{\"label\":\"{}\",\"envs\":{envs},\"steps\":{steps},\
+             \"sps\":{},\"steps_per_sec\":{},{extra}}}",
+            json_escape(label),
+            json_num(sps),
+            json_num(sps)
+        ));
+    }
+
     /// A named summary figure (speedups, ratios).
     pub fn metric(&mut self, key: &str, value: f64) {
         self.metrics.push((key.to_string(), value));
@@ -257,6 +274,13 @@ mod tests {
                                \"steps\":32,\"sps\":1000,\
                                \"steps_per_sec\":1000"));
         assert!(text.contains("\"native_vs_scalar_b1024\":6.5"));
+        rep.add_sps_extra("eval-random-shot1", 8, 32, 500.0,
+                          "\"shot\":1,\"return_mean\":0.25");
+        let text = rep.to_json();
+        assert!(text.contains("\"label\":\"eval-random-shot1\",\
+                               \"envs\":8,\"steps\":32,\"sps\":500,\
+                               \"steps_per_sec\":500,\"shot\":1,\
+                               \"return_mean\":0.25"));
         assert!(text.contains("\\\"quoted\\\""));
         assert!(text.ends_with("}\n"));
     }

@@ -1,0 +1,181 @@
+//! End-to-end CLI round trip over the split/eval pipeline:
+//! `gen-benchmark --n 2000` → `split --shuffle 42 --prop 0.8` →
+//! `xmgrid eval` on the held-out part, then validate the emitted
+//! fig-schema JSON (shot count, monotone 1-based trial indices, finite
+//! returns) and pin that evaluating the *saved* test file equals
+//! evaluating the same split derived in memory.
+//!
+//! Everything runs against the real binary (`CARGO_BIN_EXE_xmgrid`)
+//! with `XLAND_MINIGRID_DATA` pointed at a per-process temp dir, so no
+//! test pollutes the user's benchmark cache.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn data_dir() -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("xmg_cli_roundtrip_{}", std::process::id()))
+}
+
+/// Run `xmgrid <args>` against the temp cache; panic with the full
+/// stderr on a non-zero exit so CI logs show the actual CLI error.
+fn xmgrid(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_xmgrid"))
+        .args(args)
+        .env("XLAND_MINIGRID_DATA", data_dir())
+        .output()
+        .expect("spawning the xmgrid binary");
+    assert!(
+        out.status.success(),
+        "`xmgrid {}` failed ({}):\n{}",
+        args.join(" "),
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// All `"key":<number>` values in the raw JSON, in document order
+/// (hand-rolled extraction — the repo has no JSON parser dependency).
+fn json_numbers(text: &str, key: &str) -> Vec<f64> {
+    let needle = format!("\"{key}\":");
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find(&needle) {
+        rest = &rest[pos + needle.len()..];
+        let end = rest
+            .find(|c: char| !(c.is_ascii_digit()
+                              || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+            .unwrap_or(rest.len());
+        out.push(rest[..end].parse::<f64>().unwrap_or_else(|_| {
+            panic!("non-numeric value for {key}: {:?}", &rest[..end])
+        }));
+        rest = &rest[end..];
+    }
+    out
+}
+
+/// The per-shot result columns of an eval JSON, for cross-run
+/// comparison (sps/timing fields excluded — those legitimately vary).
+fn shot_columns(text: &str) -> Vec<Vec<f64>> {
+    ["shot", "return_mean", "return_p20", "solved_frac", "tasks"]
+        .iter()
+        .map(|k| json_numbers(text, k))
+        .collect()
+}
+
+fn validate_eval_json(text: &str, shots: usize, envs: usize) {
+    assert!(text.starts_with("{\"bench\":\"eval_native\""),
+            "fig-schema header missing: {text}");
+    let shot_ids = json_numbers(text, "shot");
+    assert_eq!(shot_ids.len(), shots, "one row per shot");
+    for (i, s) in shot_ids.iter().enumerate() {
+        assert_eq!(*s, (i + 1) as f64,
+                   "trial indices must be 1-based and monotone");
+    }
+    for key in ["return_mean", "return_p20", "solved_frac", "len_mean"] {
+        for v in json_numbers(text, key) {
+            assert!(v.is_finite(), "{key} must be finite, got {v}");
+        }
+    }
+    for frac in json_numbers(text, "solved_frac") {
+        assert!((0.0..=1.0).contains(&frac));
+    }
+    let env_cols = json_numbers(text, "envs");
+    assert!(!env_cols.is_empty());
+    for e in env_cols {
+        assert_eq!(e, envs as f64);
+    }
+    // throughput rows keep the compare_bench.py key
+    assert!(text.contains("\"steps_per_sec\":"),
+            "rows must carry the perf-trajectory key");
+    assert!(text.contains("\"label\":\"eval-random-shot1\"")
+            || text.contains("\"label\":\"eval-greedy-shot1\""),
+            "label-keyed rows missing");
+}
+
+#[test]
+fn gen_split_eval_roundtrip() {
+    let dir = data_dir();
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // 1. generate the base benchmark through the real CLI
+    let out = xmgrid(&["gen-benchmark", "--preset", "trivial", "--n",
+                       "2000", "--threads", "2"]);
+    assert!(out.contains("2000 unique rulesets"), "{out}");
+    assert!(dir.join("trivial-2k.xmg.gz").exists());
+
+    // 2. deterministic 80/20 split, saved through the wire format
+    let out = xmgrid(&["split", "--benchmark", "trivial-2k",
+                       "--shuffle", "42", "--prop", "0.8"]);
+    assert!(out.contains("split 1600/400"), "{out}");
+    assert!(dir.join("trivial-2k-train.xmg.gz").exists());
+    assert!(dir.join("trivial-2k-test.xmg.gz").exists());
+
+    // 3. k-shot eval on the held-out file, JSON out
+    let json_path = dir.join("eval_random.json");
+    let shots = 3;
+    let envs = 64;
+    let out = xmgrid(&["eval", "--benchmark", "trivial-2k-test",
+                       "--policy", "random", "--shots", "3", "--batch",
+                       "64", "--seed", "5", "--threads", "2", "--json",
+                       json_path.to_str().unwrap()]);
+    assert!(out.contains("shot  1"), "per-shot lines expected: {out}");
+    let text = std::fs::read_to_string(&json_path).unwrap();
+    validate_eval_json(&text, shots, envs);
+
+    // the greedy baseline flows through the same schema
+    let greedy_path = dir.join("eval_greedy.json");
+    xmgrid(&["eval", "--benchmark", "trivial-2k-test", "--policy",
+             "greedy", "--shots", "3", "--batch", "64", "--seed", "5",
+             "--json", greedy_path.to_str().unwrap()]);
+    let greedy = std::fs::read_to_string(&greedy_path).unwrap();
+    validate_eval_json(&greedy, shots, envs);
+    assert!(greedy.contains("\"label\":\"eval-greedy-shot1\""));
+
+    // 4. determinism across the store boundary and across threads:
+    // deriving the split in memory (--shuffle 42 --split test) must
+    // give the same task set in the same order as the saved file, and
+    // the harness seed fixes the result for any --threads — so the
+    // per-shot result columns agree exactly in all three runs.
+    let derived_path = dir.join("eval_derived.json");
+    xmgrid(&["eval", "--benchmark", "trivial-2k", "--shuffle", "42",
+             "--split", "test", "--prop", "0.8", "--policy", "random",
+             "--shots", "3", "--batch", "64", "--seed", "5", "--json",
+             derived_path.to_str().unwrap()]);
+    let derived = std::fs::read_to_string(&derived_path).unwrap();
+    validate_eval_json(&derived, shots, envs);
+    assert_eq!(shot_columns(&text), shot_columns(&derived),
+               "saved-file eval != in-memory-derived eval");
+
+    let t1_path = dir.join("eval_t1.json");
+    xmgrid(&["eval", "--benchmark", "trivial-2k-test", "--policy",
+             "random", "--shots", "3", "--batch", "64", "--seed", "5",
+             "--threads", "1", "--json", t1_path.to_str().unwrap()]);
+    let t1 = std::fs::read_to_string(&t1_path).unwrap();
+    assert_eq!(shot_columns(&text), shot_columns(&t1),
+               "--threads 2 and --threads 1 must agree bitwise");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn split_rejects_empty_selection() {
+    // separate cache dir so the two tests stay independent
+    let dir = std::env::temp_dir()
+        .join(format!("xmg_cli_empty_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_xmgrid"))
+        .args(["split", "--benchmark", "trivial-100", "--subset",
+               "0..0"])
+        .env("XLAND_MINIGRID_DATA", &dir)
+        .output()
+        .expect("spawning the xmgrid binary");
+    assert!(!out.status.success(),
+            "an empty selection must be an error, not an empty file");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("0 of 100"), "diagnostic names the counts: \
+                                       {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,31 @@
+//! Helpers shared by the integration test crates. This directory is
+//! the standard `tests/common/mod.rs` pattern: subdirectories of
+//! `tests/` are not compiled as test crates, so each suite pulls this
+//! in with `mod common;`.
+
+use std::path::Path;
+
+use xmgrid::runtime::Runtime;
+
+/// The single source of truth for why every artifact-backed test is
+/// `#[ignore]`d. `#[ignore = "..."]` attributes must be string
+/// literals, so the suites repeat this text verbatim — keep them in
+/// sync with this constant (see tests/README.md for the suite map).
+pub const ARTIFACT_SKIP_REASON: &str =
+    "requires compiled AOT artifacts (make artifacts) and the \
+     xla_extension PJRT runtime, neither of which exists in the \
+     offline CI image";
+
+/// The artifact-backed PJRT runtime the ignored suites load. Panics
+/// with the centralized skip reason so a failure on a host *with* the
+/// toolchain still explains what is missing.
+pub fn runtime() -> Runtime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::new(&dir).unwrap_or_else(|e| {
+        panic!(
+            "{ARTIFACT_SKIP_REASON}; run `make artifacts` on a host \
+             with the JAX toolchain, then \
+             `cargo test -- --ignored`: {e:#}"
+        )
+    })
+}

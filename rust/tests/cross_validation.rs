@@ -5,14 +5,16 @@
 //! implementations of the paper's semantics (Tables 1-3, §2) agree
 //! transition-for-transition.
 //!
-//! Every test here executes compiled HLO through PJRT, so the whole file
-//! is `#[ignore]`d: the offline CI image has neither the AOT artifacts
-//! (`make artifacts` needs the JAX toolchain) nor the xla_extension
-//! runtime. Run with `cargo test --test cross_validation -- --ignored`
-//! on a host with both.
+//! Every test here executes compiled HLO through PJRT, so the whole
+//! file is `#[ignore]`d with the skip reason centralized in
+//! `common::ARTIFACT_SKIP_REASON` (the attribute text must be a
+//! literal; keep them in sync). See tests/README.md for the suite map.
+//! Run with `cargo test --test cross_validation -- --ignored` on a
+//! host with the artifacts and the runtime.
 
-use std::path::Path;
+mod common;
 
+use common::runtime;
 use xmgrid::env::goals::Goal;
 use xmgrid::env::rules::Rule;
 use xmgrid::env::state::{EnvOptions, Ruleset, State};
@@ -21,11 +23,6 @@ use xmgrid::env::{Cell, Grid};
 use xmgrid::runtime::state::{pack_states, state_view, NUM_STATE_FIELDS};
 use xmgrid::runtime::{Runtime, Tensor};
 use xmgrid::util::rng::Rng;
-
-fn runtime() -> Runtime {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::new(&dir).expect("run `make artifacts` before cargo test")
-}
 
 /// Smallest-batch env_step artifact in the manifest.
 fn smallest_step(rt: &Runtime) -> (String, usize, usize, usize, usize,

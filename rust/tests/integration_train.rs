@@ -1,22 +1,19 @@
 //! Integration: the full training stack — benchmark generation → env pool
 //! reset → fused train_iter (collect + PPO update) → evaluation protocol.
 //!
-//! Every test here executes compiled HLO through PJRT, so the whole file
-//! is `#[ignore]`d: the offline CI image has neither the AOT artifacts
-//! (`make artifacts` needs the JAX toolchain) nor the xla_extension
-//! runtime. Run with `cargo test --test integration_train -- --ignored`
-//! on a host with both.
+//! Every test here executes compiled HLO through PJRT, so the whole
+//! file is `#[ignore]`d with the skip reason centralized in
+//! `common::ARTIFACT_SKIP_REASON` (the attribute text must be a
+//! literal; keep them in sync). See tests/README.md for the suite map.
+//! Run with `cargo test --test integration_train -- --ignored` on a
+//! host with the artifacts and the runtime.
 
-use std::path::Path;
+mod common;
 
+use common::runtime;
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::{TrainConfig, Trainer};
 use xmgrid::runtime::Runtime;
-
-fn runtime() -> Runtime {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::new(&dir).expect("run `make artifacts` before cargo test")
-}
 
 fn smallest_train_artifact(rt: &Runtime) -> String {
     rt.manifest
