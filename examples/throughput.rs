@@ -39,11 +39,11 @@ fn main() -> Result<()> {
         let ncfg = NativeEnvConfig::for_env("XLand-MiniGrid-R1-13x13",
                                             batch, t, &bench)?;
         let mut pool = NativePool::new(ncfg);
-        pool.reset(&bench, &mut rng);
-        pool.rollout(t, &mut rng); // warmup (buffer first-touch)
+        pool.reset(&bench, &mut rng)?;
+        pool.rollout(t, &mut rng)?; // warmup (buffer first-touch)
         let t0 = Instant::now();
         for _ in 0..chunks {
-            pool.rollout(t, &mut rng);
+            pool.rollout(t, &mut rng)?;
         }
         let sps = (batch * t * chunks) as f64
             / t0.elapsed().as_secs_f64();
@@ -66,11 +66,11 @@ fn main() -> Result<()> {
                                             1024, t, &bench)?
             .with_threads(threads);
         let mut pool = NativePool::new(ncfg);
-        pool.reset(&bench, &mut rng);
-        pool.rollout(t, &mut rng); // warmup
+        pool.reset(&bench, &mut rng)?;
+        pool.rollout(t, &mut rng)?; // warmup
         let t0 = Instant::now();
         for _ in 0..chunks {
-            pool.rollout(t, &mut rng);
+            pool.rollout(t, &mut rng)?;
         }
         let sps = (1024 * t * chunks) as f64
             / t0.elapsed().as_secs_f64();

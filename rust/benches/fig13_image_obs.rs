@@ -54,10 +54,10 @@ fn main() {
         .unwrap();
     let mut pool = NativePool::with_tasks(ncfg, tasks.clone());
     let mut rng = Rng::new(0);
-    pool.reset(&tasks, &mut rng);
+    pool.reset(&tasks, &mut rng).unwrap();
     let mut r = Rng::new(7);
     let result = bench("native-symbolic", 1, 2, || {
-        pool.rollout(t_steps, &mut r);
+        pool.rollout(t_steps, &mut r).unwrap();
     });
     let sym_sps = (b * t_steps) as f64 / result.min_secs;
     println!("{:<12} envs={b:<6} obs-i32s/env={:<6} \

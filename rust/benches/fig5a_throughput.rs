@@ -82,11 +82,11 @@ fn main() {
             .unwrap();
         let mut pool = NativePool::new(ncfg);
         let mut seed_rng = Rng::new(0);
-        pool.reset(&bench_tasks, &mut seed_rng);
+        pool.reset(&bench_tasks, &mut seed_rng).unwrap();
         let mut r = Rng::new(7);
         let repeats = if b >= 1024 { 2 } else { 3 };
         let result = bench("native-vec", 1, repeats, || {
-            pool.rollout(t_steps, &mut r);
+            pool.rollout(t_steps, &mut r).unwrap();
         });
         let sps = (b * t_steps) as f64 / result.min_secs;
         println!("envs={b:<6} steps/s={sps:<12.0} ({})", fmt_sps(sps));
@@ -218,10 +218,10 @@ fn main() {
             .with_threads(threads);
         let mut pool = NativePool::new(ncfg);
         let mut seed_rng = Rng::new(0);
-        pool.reset(&bench_tasks, &mut seed_rng);
+        pool.reset(&bench_tasks, &mut seed_rng).unwrap();
         let mut r = Rng::new(7);
         let result = bench("native-threads", 1, 2, || {
-            pool.rollout(t_steps, &mut r);
+            pool.rollout(t_steps, &mut r).unwrap();
         });
         let sps = (tb * t_steps) as f64 / result.min_secs;
         println!("threads={threads:<3} envs={tb:<6} \

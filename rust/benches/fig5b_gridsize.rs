@@ -47,10 +47,10 @@ fn main() {
                 .unwrap();
         let mut pool = NativePool::new(ncfg);
         let mut rng = Rng::new(0);
-        pool.reset(&tasks, &mut rng);
+        pool.reset(&tasks, &mut rng).unwrap();
         let mut r = Rng::new(7);
         let result = bench(env_name, 1, 2, || {
-            pool.rollout(t_steps, &mut r);
+            pool.rollout(t_steps, &mut r).unwrap();
         });
         let sps = (b * t_steps) as f64 / result.min_secs;
         let (h, w) = (ncfg.params.h, ncfg.params.w);

@@ -11,4 +11,4 @@ pub use generator::{generate_benchmark, generate_benchmark_par,
                     generate_benchmark_with, generate_ruleset,
                     ruleset_key, RulesetStats};
 pub use ops::{rule_depth, task_meta, TaskMeta, TaskSlice};
-pub use store::{Benchmark, BenchmarkWriter};
+pub use store::{verify_file, Benchmark, BenchmarkWriter, VerifyReport};

@@ -115,43 +115,15 @@ impl Benchmark {
 
     pub fn from_bytes(name: &str, data: &[u8]) -> Result<Benchmark> {
         let mut p = 0usize;
-        let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
-            if *p + n > data.len() {
-                bail!("truncated benchmark file");
-            }
-            let s = &data[*p..*p + n];
-            *p += n;
-            Ok(s)
-        };
-        if take(&mut p, 4)? != MAGIC {
-            bail!("bad magic (not an XMG1 benchmark)");
-        }
-        let n = u32::from_le_bytes(take(&mut p, 4)?.try_into().unwrap());
-        let mut rulesets = Vec::with_capacity(n as usize);
-        for _ in 0..n {
-            let gb = take(&mut p, GOAL_ENC)?;
-            let mut goal = [0i32; GOAL_ENC];
-            for (g, &b) in goal.iter_mut().zip(gb) {
-                *g = b as i32;
-            }
-            let nr = take(&mut p, 1)?[0] as usize;
-            let mut rules = Vec::with_capacity(nr);
-            for _ in 0..nr {
-                let rb = take(&mut p, RULE_ENC)?;
-                let mut enc = [0i32; RULE_ENC];
-                for (e, &b) in enc.iter_mut().zip(rb) {
-                    *e = b as i32;
-                }
-                rules.push(Rule(enc));
-            }
-            let ni = take(&mut p, 1)?[0] as usize;
-            let mut init = Vec::with_capacity(ni);
-            for _ in 0..ni {
-                let cb = take(&mut p, 2)?;
-                init.push(Cell::new(cb[0] as i32, cb[1] as i32));
-            }
-            rulesets.push(Ruleset { goal: Goal(goal), rules,
-                                    init_tiles: init });
+        let n = decode_header(data, &mut p)?;
+        let mut rulesets = Vec::with_capacity(n);
+        for i in 0..n {
+            let start = p;
+            let rs = decode_ruleset(data, &mut p).with_context(|| {
+                format!("task {i} of {n} (starting at byte offset \
+                         {start})")
+            })?;
+            rulesets.push(rs);
         }
         Ok(Benchmark { name: name.to_string(), rulesets })
     }
@@ -175,9 +147,123 @@ impl Benchmark {
         // GzDecoder stops after the first member.
         let mut dec = flate2::read::MultiGzDecoder::new(file);
         let mut raw = Vec::new();
-        dec.read_to_mut(&mut raw)?;
+        dec.read_to_mut(&mut raw).with_context(|| {
+            format!("decompressing {path:?} (corrupt gzip stream?)")
+        })?;
         Benchmark::from_bytes(name, &raw)
+            .with_context(|| format!("decoding benchmark {path:?}"))
     }
+}
+
+/// Decode the `XMG1` header; returns the promised ruleset count.
+fn decode_header(data: &[u8], p: &mut usize) -> Result<usize> {
+    if data.len() < 8 {
+        bail!("truncated benchmark file: {} bytes is too short for the \
+               8-byte XMG1 header", data.len());
+    }
+    if &data[..4] != MAGIC {
+        bail!("bad magic (not an XMG1 benchmark)");
+    }
+    *p = 8;
+    Ok(u32::from_le_bytes(data[4..8].try_into().unwrap()) as usize)
+}
+
+/// Decode one ruleset at `*p`, advancing it. Truncation errors name the
+/// exact byte offset so a corrupt store is diagnosable.
+fn decode_ruleset(data: &[u8], p: &mut usize) -> Result<Ruleset> {
+    let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+        if *p + n > data.len() {
+            bail!("truncated benchmark file: wanted {n} bytes at byte \
+                   offset {}, file has {}", *p, data.len());
+        }
+        let s = &data[*p..*p + n];
+        *p += n;
+        Ok(s)
+    };
+    let gb = take(p, GOAL_ENC)?;
+    let mut goal = [0i32; GOAL_ENC];
+    for (g, &b) in goal.iter_mut().zip(gb) {
+        *g = b as i32;
+    }
+    let nr = take(p, 1)?[0] as usize;
+    let mut rules = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        let rb = take(p, RULE_ENC)?;
+        let mut enc = [0i32; RULE_ENC];
+        for (e, &b) in enc.iter_mut().zip(rb) {
+            *e = b as i32;
+        }
+        rules.push(Rule(enc));
+    }
+    let ni = take(p, 1)?[0] as usize;
+    let mut init = Vec::with_capacity(ni);
+    for _ in 0..ni {
+        let cb = take(p, 2)?;
+        init.push(Cell::new(cb[0] as i32, cb[1] as i32));
+    }
+    Ok(Ruleset { goal: Goal(goal), rules, init_tiles: init })
+}
+
+/// What [`verify_file`] found in a healthy store file.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerifyReport {
+    /// rulesets promised by the header and successfully decoded
+    pub tasks: usize,
+    /// decompressed payload size
+    pub raw_bytes: usize,
+    /// on-disk (gzip) size
+    pub compressed_bytes: usize,
+}
+
+/// Integrity-check a benchmark store file end to end: gzip stream,
+/// magic, header count vs decoded rulesets, per-task decode (errors
+/// name the task index and byte offset), trailing garbage, and
+/// duplicate `ruleset_key`s (the store promises a bag of *unique*
+/// rulesets — a duplicate means generation or storage corrupted it).
+pub fn verify_file(path: &Path) -> Result<VerifyReport> {
+    let compressed_bytes = std::fs::metadata(path)
+        .with_context(|| format!("reading {path:?}"))?
+        .len() as usize;
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let mut dec = flate2::read::MultiGzDecoder::new(file);
+    let mut raw = Vec::new();
+    dec.read_to_mut(&mut raw).with_context(|| {
+        format!("decompressing {path:?} (corrupt or truncated gzip \
+                 stream?)")
+    })?;
+
+    let mut p = 0usize;
+    let n = decode_header(&raw, &mut p)
+        .with_context(|| format!("verifying {path:?}"))?;
+    let mut seen = std::collections::HashMap::new();
+    let mut dups: Vec<(usize, usize)> = Vec::new();
+    for i in 0..n {
+        let start = p;
+        let rs = decode_ruleset(&raw, &mut p).with_context(|| {
+            format!("verifying {path:?}: task {i} of {n} (starting at \
+                     byte offset {start})")
+        })?;
+        if let Some(first) = seen.insert(super::ruleset_key(&rs), i) {
+            dups.push((first, i));
+        }
+    }
+    if p != raw.len() {
+        bail!("verifying {path:?}: {} trailing bytes after the last of \
+               {n} tasks (header count too small, or appended garbage)",
+              raw.len() - p);
+    }
+    if !dups.is_empty() {
+        let shown: Vec<String> = dups
+            .iter()
+            .take(5)
+            .map(|(a, b)| format!("{a}={b}"))
+            .collect();
+        bail!("verifying {path:?}: {} duplicate ruleset(s) — the store \
+               promises unique tasks (first duplicates: {})",
+              dups.len(), shown.join(", "));
+    }
+    Ok(VerifyReport { tasks: n, raw_bytes: raw.len(), compressed_bytes })
 }
 
 /// The episode auto-reset task distribution (`env::state::TaskSource`):
@@ -573,6 +659,85 @@ mod tests {
         let mut w = BenchmarkWriter::create(&path, 1).unwrap();
         w.push(&b.rulesets[0]).unwrap();
         assert!(w.push(&b.rulesets[1]).is_err(), "over-push must fail");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// gzip-compress raw bytes the way a (possibly corrupt) store file
+    /// would hold them.
+    fn gz_write(path: &Path, raw: &[u8]) {
+        let file = std::fs::File::create(path).unwrap();
+        let mut enc = flate2::write::GzEncoder::new(
+            file, flate2::Compression::new(6));
+        enc.write_all(raw).unwrap();
+        enc.finish().unwrap();
+    }
+
+    #[test]
+    fn verify_accepts_healthy_store() {
+        let b = small_bench();
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_verify_ok_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ok.xmg.gz");
+        b.save(&path).unwrap();
+        let report = verify_file(&path).unwrap();
+        assert_eq!(report.tasks, 64);
+        assert!(report.raw_bytes > 8);
+        assert!(report.compressed_bytes > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_rejects_truncation_with_task_index() {
+        let b = small_bench();
+        let raw = b.to_bytes();
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_verify_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.xmg.gz");
+        // cut mid-payload: the header still promises 64 tasks
+        gz_write(&path, &raw[..raw.len() * 2 / 3]);
+        let msg = format!("{:#}", verify_file(&path).unwrap_err());
+        assert!(msg.contains("truncated"), "{msg}");
+        assert!(msg.contains("task "), "should name the task: {msg}");
+        assert!(msg.contains("offset"), "should name the offset: {msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_rejects_duplicates_and_trailing_garbage() {
+        let mut b = small_bench();
+        b.rulesets[10] = b.rulesets[3].clone();
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_verify_dup_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dup.xmg.gz");
+        gz_write(&path, &b.to_bytes());
+        let msg = format!("{:#}", verify_file(&path).unwrap_err());
+        assert!(msg.contains("duplicate"), "{msg}");
+        assert!(msg.contains("3=10"), "{msg}");
+
+        let ok = small_bench();
+        let mut raw = ok.to_bytes();
+        raw.extend_from_slice(&[7, 7, 7]);
+        let path2 = dir.join("trailing.xmg.gz");
+        gz_write(&path2, &raw);
+        let msg = format!("{:#}", verify_file(&path2).unwrap_err());
+        assert!(msg.contains("trailing"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_errors_name_the_path() {
+        let dir = std::env::temp_dir().join(format!(
+            "xmg_load_ctx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.xmg.gz");
+        gz_write(&path, b"ZZZZ not a benchmark");
+        let msg =
+            format!("{:#}", Benchmark::load("bad", &path).unwrap_err());
+        assert!(msg.contains("bad.xmg.gz"), "{msg}");
+        assert!(msg.contains("magic"), "{msg}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

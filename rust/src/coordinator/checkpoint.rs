@@ -1,0 +1,505 @@
+//! Crash-safe training checkpoints.
+//!
+//! A checkpoint captures *everything* the training loop's future depends
+//! on — master parameters, per-shard learner state (params + Adam
+//! moments + step counter), the device-resident env state tensors, the
+//! RL² carry, and every RNG stream position — so `xmgrid train --resume`
+//! reproduces the uninterrupted run **bit for bit** (the fused HLO
+//! iteration is a pure function of these inputs).
+//!
+//! # File format
+//!
+//! ```text
+//! magic   "XMGC"          4 bytes
+//! version u32 LE          (currently 1)
+//! len     u64 LE          body length in bytes
+//! body    [u8; len]       serialized TrainCheckpoint (see encode_*)
+//! check   u64 LE          FNV-1a 64 of body
+//! ```
+//!
+//! The explicit length and trailing checksum make *torn* writes
+//! (truncation) and silent corruption detectable on load — a damaged
+//! checkpoint is a clean error naming the file and the defect, never a
+//! garbage resume.
+//!
+//! # Atomicity
+//!
+//! [`save_checkpoint`] streams to a process-unique `.tmp-<pid>` sibling
+//! and `rename`s onto the final path (the same discipline as
+//! `BenchmarkWriter`), so a crash mid-write leaves the previous
+//! checkpoint intact. The `torn-checkpoint@iter=I` fault
+//! ([`crate::util::fault::FaultPlan`]) deliberately bypasses this and
+//! writes a truncated file at the final path, so the detection path is
+//! provable in tests and CI.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::util::fault::FaultPlan;
+
+const MAGIC: &[u8; 4] = b"XMGC";
+const VERSION: u32 = 1;
+
+/// One trainer replica's complete resumable state (the host copies of
+/// everything [`super::trainer::Trainer`] threads through the fused
+/// iteration).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainerState {
+    pub params: Vec<Tensor>,
+    /// Adam first moments
+    pub m: Vec<Tensor>,
+    /// Adam second moments
+    pub v: Vec<Tensor>,
+    /// Adam step counter tensor
+    pub t: Tensor,
+    /// device-resident env state tensors (aot.STATE_FIELDS order)
+    pub env_state: Vec<Tensor>,
+    /// pool's latest observation (re-read at task resample)
+    pub last_obs: Tensor,
+    // RL² carry
+    pub obs: Tensor,
+    pub prev_a: Tensor,
+    pub prev_r: Tensor,
+    pub done_prev: Tensor,
+    pub h: Tensor,
+    /// trainer RNG stream position
+    pub rng: [u64; 4],
+    /// env pool's task-draw stream, when a source is installed
+    pub task_rng: Option<[u64; 4]>,
+    /// iterations this replica has completed
+    pub iter: u64,
+}
+
+/// A full training-run checkpoint: the host master parameters plus one
+/// [`TrainerState`] per shard, tagged with the reduced iteration count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainCheckpoint {
+    /// iterations reduced into the master when this was taken
+    pub iters_done: u64,
+    /// host-side master parameters
+    pub master: Vec<Tensor>,
+    /// per-shard replica states, shard order
+    pub shards: Vec<TrainerState>,
+}
+
+// --- primitive encoding ---------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    match t {
+        Tensor::I32(v) => {
+            out.push(0);
+            put_u64(out, v.len() as u64);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Tensor::U32(v) => {
+            out.push(1);
+            put_u64(out, v.len() as u64);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Tensor::F32(v) => {
+            out.push(2);
+            put_u64(out, v.len() as u64);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn put_tensors(out: &mut Vec<u8>, ts: &[Tensor]) {
+    put_u64(out, ts.len() as u64);
+    for t in ts {
+        put_tensor(out, t);
+    }
+}
+
+fn put_rng(out: &mut Vec<u8>, s: &[u64; 4]) {
+    for &x in s {
+        put_u64(out, x);
+    }
+}
+
+/// Bounded little-endian reader over the checkpoint body; every read is
+/// length-checked so truncation surfaces as an error, never a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated checkpoint body (wanted {} bytes at offset {}, \
+             have {})",
+            n,
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// A u64 that is about to size an allocation: bound it by the bytes
+    /// actually remaining so a corrupt length can't OOM the process.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let cap = (self.buf.len() - self.pos) / elem_bytes.max(1) + 1;
+        ensure!(n as usize <= cap,
+                "corrupt checkpoint: implausible element count {n}");
+        Ok(n as usize)
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let tag = self.u8()?;
+        let n = self.count(4)?;
+        let raw = self.take(n * 4)?;
+        let mut chunks = raw.chunks_exact(4);
+        Ok(match tag {
+            0 => Tensor::I32(
+                chunks
+                    .by_ref()
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            1 => Tensor::U32(
+                chunks
+                    .by_ref()
+                    .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            2 => Tensor::F32(
+                chunks
+                    .by_ref()
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            other => bail!("corrupt checkpoint: unknown tensor tag {other}"),
+        })
+    }
+
+    fn tensors(&mut self) -> Result<Vec<Tensor>> {
+        // 9 = tag + u64 len, the minimum encoded tensor size
+        let n = self.count(9)?;
+        (0..n).map(|_| self.tensor()).collect()
+    }
+
+    fn rng(&mut self) -> Result<[u64; 4]> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+}
+
+fn put_trainer_state(out: &mut Vec<u8>, s: &TrainerState) {
+    put_tensors(out, &s.params);
+    put_tensors(out, &s.m);
+    put_tensors(out, &s.v);
+    put_tensor(out, &s.t);
+    put_tensors(out, &s.env_state);
+    put_tensor(out, &s.last_obs);
+    put_tensor(out, &s.obs);
+    put_tensor(out, &s.prev_a);
+    put_tensor(out, &s.prev_r);
+    put_tensor(out, &s.done_prev);
+    put_tensor(out, &s.h);
+    put_rng(out, &s.rng);
+    match &s.task_rng {
+        Some(r) => {
+            out.push(1);
+            put_rng(out, r);
+        }
+        None => out.push(0),
+    }
+    put_u64(out, s.iter);
+}
+
+fn read_trainer_state(r: &mut Reader) -> Result<TrainerState> {
+    Ok(TrainerState {
+        params: r.tensors()?,
+        m: r.tensors()?,
+        v: r.tensors()?,
+        t: r.tensor()?,
+        env_state: r.tensors()?,
+        last_obs: r.tensor()?,
+        obs: r.tensor()?,
+        prev_a: r.tensor()?,
+        prev_r: r.tensor()?,
+        done_prev: r.tensor()?,
+        h: r.tensor()?,
+        rng: r.rng()?,
+        task_rng: match r.u8()? {
+            0 => None,
+            1 => Some(r.rng()?),
+            other => bail!(
+                "corrupt checkpoint: bad task-rng tag {other}"
+            ),
+        },
+        iter: r.u64()?,
+    })
+}
+
+/// FNV-1a 64 — tiny, dependency-free, and plenty to catch torn writes
+/// and bit rot (this is an integrity check, not an authenticity one).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a checkpoint to its on-disk byte image (header + body +
+/// checksum).
+pub fn encode_checkpoint(ckpt: &TrainCheckpoint) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, ckpt.iters_done);
+    put_tensors(&mut body, &ckpt.master);
+    put_u64(&mut body, ckpt.shards.len() as u64);
+    for s in &ckpt.shards {
+        put_trainer_state(&mut body, s);
+    }
+    let mut out = Vec::with_capacity(body.len() + 24);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u64(&mut out, body.len() as u64);
+    out.extend_from_slice(&body);
+    put_u64(&mut out, fnv1a(&body));
+    out
+}
+
+/// Parse an on-disk byte image. Every defect — wrong magic, truncation
+/// anywhere, checksum mismatch, corrupt structure — is a descriptive
+/// error.
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<TrainCheckpoint> {
+    ensure!(bytes.len() >= 16, "file too short to be a checkpoint \
+                                ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == MAGIC,
+            "not a checkpoint file (bad magic; expected \"XMGC\")");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    ensure!(version == VERSION,
+            "checkpoint version {version} unsupported (expected \
+             {VERSION})");
+    let len64 = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let have = bytes.len().saturating_sub(24);
+    ensure!(
+        len64 <= have as u64,
+        "torn checkpoint: header promises a {len64}-byte body but only \
+         {have} bytes follow (interrupted write?)"
+    );
+    let len = len64 as usize;
+    let body = &bytes[16..16 + len];
+    let stored =
+        u64::from_le_bytes(bytes[16 + len..24 + len].try_into().unwrap());
+    let actual = fnv1a(body);
+    ensure!(stored == actual,
+            "checkpoint checksum mismatch (stored {stored:#018x}, \
+             computed {actual:#018x}) — the file is corrupt");
+    let mut r = Reader { buf: body, pos: 0 };
+    let iters_done = r.u64()?;
+    let master = r.tensors()?;
+    let nshards = r.count(1)?;
+    let shards = (0..nshards)
+        .map(|_| read_trainer_state(&mut r))
+        .collect::<Result<Vec<_>>>()?;
+    ensure!(r.pos == body.len(),
+            "corrupt checkpoint: {} trailing bytes after the last \
+             shard state", body.len() - r.pos);
+    Ok(TrainCheckpoint { iters_done, master, shards })
+}
+
+/// Atomically write `ckpt` to `path`: stream to a `.tmp-<pid>` sibling,
+/// then rename onto the final path, so a crash mid-write can never
+/// destroy the previous checkpoint.
+///
+/// If `faults` schedules `torn-checkpoint@iter=<ckpt.iters_done>`, the
+/// file is instead written *truncated at the final path* — simulating
+/// exactly the torn write the atomic rename protects against — so tests
+/// and CI can prove `--resume` detects the damage.
+pub fn save_checkpoint(path: &Path, ckpt: &TrainCheckpoint,
+                       faults: &FaultPlan) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {dir:?}"))?;
+        }
+    }
+    let bytes = encode_checkpoint(ckpt);
+    if faults.torn_checkpoint(ckpt.iters_done) {
+        let cut = bytes.len() / 2;
+        std::fs::write(path, &bytes[..cut])
+            .with_context(|| format!("writing torn checkpoint {path:?}"))?;
+        eprintln!(
+            "xmgrid: injected torn checkpoint at iteration {} \
+             ({} of {} bytes)",
+            ckpt.iters_done, cut, bytes.len()
+        );
+        return Ok(());
+    }
+    let mut tmp = path.to_path_buf();
+    let mut name = tmp
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".into());
+    name.push_str(&format!(".tmp-{}", std::process::id()));
+    tmp.set_file_name(name);
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {tmp:?} into place at {path:?}")
+    })?;
+    Ok(())
+}
+
+/// Load and validate a checkpoint file.
+pub fn load_checkpoint(path: &Path) -> Result<TrainCheckpoint> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {path:?}"))?;
+    decode_checkpoint(&bytes)
+        .with_context(|| format!("loading checkpoint {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn sample() -> TrainCheckpoint {
+        let ts = TrainerState {
+            params: vec![Tensor::F32(vec![0.5, -1.25]),
+                         Tensor::F32(vec![3.0])],
+            m: vec![Tensor::F32(vec![0.0, 0.0]), Tensor::F32(vec![0.0])],
+            v: vec![Tensor::F32(vec![1.0, 2.0]), Tensor::F32(vec![4.0])],
+            t: Tensor::I32(vec![7]),
+            env_state: vec![Tensor::I32(vec![1, 2, 3]),
+                            Tensor::U32(vec![9, 8])],
+            last_obs: Tensor::I32(vec![5; 8]),
+            obs: Tensor::I32(vec![5; 8]),
+            prev_a: Tensor::I32(vec![0, 1]),
+            prev_r: Tensor::F32(vec![0.25, 0.0]),
+            done_prev: Tensor::I32(vec![1, 0]),
+            h: Tensor::F32(vec![0.125; 4]),
+            rng: [1, 2, 3, 4],
+            task_rng: Some([5, 6, 7, 8]),
+            iter: 12,
+        };
+        let mut other = ts.clone();
+        other.task_rng = None;
+        other.rng = [9, 9, 9, 9];
+        TrainCheckpoint {
+            iters_done: 12,
+            master: vec![Tensor::F32(vec![0.5, -1.25]),
+                         Tensor::F32(vec![3.0])],
+            shards: vec![ts, other],
+        }
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "xmgrid_ckpt_test_{}_{tag}.bin",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let ckpt = sample();
+        let bytes = encode_checkpoint(&ckpt);
+        let back = decode_checkpoint(&bytes).unwrap();
+        assert_eq!(ckpt, back);
+    }
+
+    #[test]
+    fn save_load_via_disk_and_no_tmp_left() {
+        let path = tmp_path("disk");
+        let ckpt = sample();
+        save_checkpoint(&path, &ckpt, &FaultPlan::none()).unwrap();
+        assert_eq!(load_checkpoint(&path).unwrap(), ckpt);
+        let dir = path.parent().unwrap();
+        let leftovers = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().contains(
+                    &format!("xmgrid_ckpt_test_{}_disk",
+                             std::process::id()),
+                ) && e.file_name().to_string_lossy().contains(".tmp-")
+            })
+            .count();
+        assert_eq!(leftovers, 0, "tmp file leaked past the rename");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Truncation at *every* prefix length must be a clean error — no
+    /// panic, no bogus success.
+    #[test]
+    fn any_truncation_is_detected() {
+        let bytes = encode_checkpoint(&sample());
+        for cut in 0..bytes.len() {
+            match decode_checkpoint(&bytes[..cut]) {
+                Err(_) => {}
+                Ok(_) => panic!("truncation to {cut} bytes decoded"),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut bytes = encode_checkpoint(&sample());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = decode_checkpoint(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum") || msg.contains("corrupt"),
+                "{msg}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut bytes = encode_checkpoint(&sample());
+        bytes[0] = b'Z';
+        let msg =
+            format!("{:#}", decode_checkpoint(&bytes).unwrap_err());
+        assert!(msg.contains("magic"), "{msg}");
+    }
+
+    /// The torn-checkpoint fault writes a half file at the final path,
+    /// and loading it reports a torn/truncated checkpoint.
+    #[test]
+    fn torn_fault_produces_detectable_damage() {
+        let path = tmp_path("torn");
+        let ckpt = sample();
+        let faults = FaultPlan::parse("torn-checkpoint@iter=12").unwrap();
+        save_checkpoint(&path, &ckpt, &faults).unwrap();
+        let msg = format!("{:#}", load_checkpoint(&path).unwrap_err());
+        assert!(msg.contains("torn") || msg.contains("truncated"),
+                "{msg}");
+        // the fault budget is consumed: the next save is clean
+        save_checkpoint(&path, &ckpt, &faults).unwrap();
+        assert_eq!(load_checkpoint(&path).unwrap(), ckpt);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

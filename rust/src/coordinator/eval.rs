@@ -153,7 +153,7 @@ pub fn eval_kshot(tasks: &dyn TaskSource, policy: EvalPolicy,
 
     let mut venv = ParVecEnv::new(cfg.params, b, cfg.threads);
     let mut obs = vec![0i32; venv.obs_len()];
-    venv.reset_all(&grids, &rulesets, &limits, &rngs, &mut obs);
+    venv.reset_all(&grids, &rulesets, &limits, &rngs, &mut obs)?;
     // NOTE: no set_task_source — auto-reset replays the pinned task
 
     let goals: Vec<Goal> = rulesets.iter().map(|r| r.goal).collect();
@@ -195,7 +195,7 @@ pub fn eval_kshot(tasks: &dyn TaskSource, policy: EvalPolicy,
             }
         }
         venv.step_all(&actions, &mut obs, &mut rewards, &mut dones,
-                      &mut trial_dones);
+                      &mut trial_dones)?;
         steps_run += b as u64;
         for i in 0..b {
             if shot_idx[i] >= cfg.shots {

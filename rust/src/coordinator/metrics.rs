@@ -89,6 +89,28 @@ impl CsvLog {
         Ok(CsvLog { file })
     }
 
+    /// Open for appending — used by `train --resume` so the interrupted
+    /// run's rows survive. Writes the header only when the file is new
+    /// or empty.
+    pub fn append(path: &Path, header: &[&str]) -> Result<CsvLog> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {path:?} for append"))?;
+        let empty = file
+            .metadata()
+            .map(|m| m.len() == 0)
+            .unwrap_or(true);
+        if empty {
+            writeln!(file, "{}", header.join(","))?;
+        }
+        Ok(CsvLog { file })
+    }
+
     pub fn row(&mut self, values: &[String]) -> Result<()> {
         writeln!(self.file, "{}", values.join(","))?;
         Ok(())

@@ -13,6 +13,7 @@
 //! consumes, double-buffered when overlap is on. See `docs/ARCHITECTURE.md`
 //! for the threading model.
 
+pub mod checkpoint;
 pub mod config;
 pub mod eval;
 pub mod metrics;
@@ -23,6 +24,8 @@ pub mod shard;
 pub mod trainer;
 pub mod workers;
 
+pub use checkpoint::{load_checkpoint, save_checkpoint, TrainCheckpoint,
+                     TrainerState};
 pub use config::{BackendKind, Overlap, ShardConfig, TrainConfig};
 pub use eval::{eval_kshot, EvalPolicy, KShotConfig, KShotReport,
                ShotStats};
@@ -30,5 +33,5 @@ pub use native::{NativeEnvConfig, NativePool};
 pub use pool::EnvPool;
 pub use rollout::RolloutEngine;
 pub use shard::ShardPool;
-pub use trainer::{EvalStats, ShardedTrainer, Trainer};
+pub use trainer::{CheckpointPlan, EvalStats, ShardedTrainer, Trainer};
 pub use workers::ParVecEnv;

@@ -17,6 +17,7 @@ use crate::env::layouts::xland_layout;
 use crate::env::registry::XLAND_ENVS;
 use crate::env::state::{default_max_steps, Ruleset, TaskSource};
 use crate::env::Grid;
+use crate::util::fault::RetryPolicy;
 use crate::util::rng::Rng;
 
 use super::workers::ParVecEnv;
@@ -38,6 +39,10 @@ pub struct NativeEnvConfig {
     /// stepping worker threads per replica (`--threads`); the batch is
     /// chunked across them, output bitwise-independent of the count
     pub threads: usize,
+    /// supervised-recovery policy for worker panics (`--max-retries` /
+    /// `--retry-backoff-ms`); recovery replays deterministically, so it
+    /// never changes results — only how many worker deaths are survived
+    pub retry: RetryPolicy,
 }
 
 impl NativeEnvConfig {
@@ -78,6 +83,7 @@ impl NativeEnvConfig {
             b,
             t,
             threads: 1,
+            retry: RetryPolicy::default(),
         })
     }
 
@@ -85,6 +91,12 @@ impl NativeEnvConfig {
     /// (clamped to at least 1; `ParVecEnv` further clamps to the batch).
     pub fn with_threads(mut self, threads: usize) -> NativeEnvConfig {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Override the supervised worker-recovery policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> NativeEnvConfig {
+        self.retry = retry;
         self
     }
 }
@@ -111,7 +123,9 @@ pub struct NativePool {
 
 impl NativePool {
     pub fn new(cfg: NativeEnvConfig) -> NativePool {
-        let venv = ParVecEnv::new(cfg.params, cfg.b, cfg.threads);
+        let venv =
+            ParVecEnv::with_retry(cfg.params, cfg.b, cfg.threads,
+                                  cfg.retry);
         let obs_len = venv.obs_len();
         NativePool { cfg, venv, obs: vec![0; obs_len], tasks: None }
     }
@@ -146,16 +160,17 @@ impl NativePool {
     /// is also installed as the episode-reset task source, so every
     /// episode draws a fresh task (the §2.1 protocol) instead of
     /// replaying the reset-time ruleset forever.
-    pub fn reset(&mut self, bench: &Arc<Benchmark>, rng: &mut Rng) {
+    pub fn reset(&mut self, bench: &Arc<Benchmark>, rng: &mut Rng)
+                 -> Result<()> {
         let tasks: Arc<dyn TaskSource> = bench.clone();
-        self.reset_from(&tasks, rng);
+        self.reset_from(&tasks, rng)
     }
 
     /// [`NativePool::reset`] over any shared [`TaskSource`] (the RNG
     /// draw sequence is identical, so a whole-benchmark source
     /// reproduces the historical `reset` bit for bit).
     pub fn reset_from(&mut self, tasks: &Arc<dyn TaskSource>,
-                      rng: &mut Rng) {
+                      rng: &mut Rng) -> Result<()> {
         let b = self.cfg.b;
         let (h, w) = (self.cfg.params.h, self.cfg.params.w);
         let n = tasks.num_tasks();
@@ -168,8 +183,8 @@ impl NativePool {
         let max_steps = vec![default_max_steps(h, w); b];
         let rngs: Vec<Rng> = (0..b).map(|_| rng.split()).collect();
         self.venv.reset_all(&grids, &rulesets, &max_steps, &rngs,
-                            &mut self.obs);
-        self.venv.set_task_source(tasks.clone());
+                            &mut self.obs)?;
+        self.venv.set_task_source(tasks.clone())
     }
 
     /// One random-policy rollout chunk of `t` steps; returns
@@ -177,10 +192,10 @@ impl NativePool {
     /// batch — the same aggregates as `EnvPool::rollout`, reduced
     /// env-major so the value is identical for every thread count.
     pub fn rollout(&mut self, t: usize, rng: &mut Rng)
-                   -> (f64, u64, u64) {
-        let totals = self.venv.rollout(t, rng);
+                   -> Result<(f64, u64, u64)> {
+        let totals = self.venv.rollout(t, rng)?;
         self.venv.copy_obs_into(&mut self.obs);
-        totals
+        Ok(totals)
     }
 }
 
@@ -213,7 +228,7 @@ impl BatchEnvironment for NativePool {
             .clone()
             .context("NativePool: no task source installed; construct \
                       with NativePool::with_tasks")?;
-        self.reset_from(&tasks, rng);
+        self.reset_from(&tasks, rng)?;
         obs_out.copy_from_slice(&self.obs);
         Ok(())
     }
@@ -224,8 +239,7 @@ impl BatchEnvironment for NativePool {
         // observations go to the caller's buffer only — the `obs()`
         // cache tracks the inherent reset/rollout paths, and syncing it
         // here would tax every wrapped step with a dead B*V*V*2 memcpy
-        self.venv.step_all(actions, obs_out, rewards, dones, trial_dones);
-        Ok(())
+        self.venv.step_all(actions, obs_out, rewards, dones, trial_dones)
     }
 
     fn agent_dirs_into(&self, out: &mut [i32]) {
@@ -273,8 +287,8 @@ mod tests {
         let run = |threads: usize| {
             let mut pool = NativePool::new(cfg.with_threads(threads));
             let mut rng = Rng::new(9);
-            pool.reset(&bench, &mut rng);
-            let totals = pool.rollout(4, &mut rng);
+            pool.reset(&bench, &mut rng).unwrap();
+            let totals = pool.rollout(4, &mut rng).unwrap();
             (totals.0.to_bits(), totals.1, totals.2,
              pool.obs().to_vec())
         };
@@ -291,9 +305,9 @@ mod tests {
             .unwrap();
         let mut pool = NativePool::new(cfg);
         let mut rng = Rng::new(1);
-        pool.reset(&bench, &mut rng);
+        pool.reset(&bench, &mut rng).unwrap();
         // 9x9 default max_steps = 243: no episode boundary in 8 steps
-        let (_, episodes, trials) = pool.rollout(8, &mut rng);
+        let (_, episodes, trials) = pool.rollout(8, &mut rng).unwrap();
         assert_eq!(episodes, 0);
         // trials only end on goal achievement here, which random play
         // may or may not hit — just check the aggregate is sane
@@ -316,8 +330,8 @@ mod tests {
             let mut pool = NativePool::with_task_source(
                 cfg.with_threads(threads), src.clone());
             let mut rng = Rng::new(11);
-            pool.reset_from(&src, &mut rng);
-            let totals = pool.rollout(6, &mut rng);
+            pool.reset_from(&src, &mut rng).unwrap();
+            let totals = pool.rollout(6, &mut rng).unwrap();
             (totals.0.to_bits(), totals.1, totals.2,
              pool.obs().to_vec())
         };
@@ -336,7 +350,7 @@ mod tests {
         let mut b = NativePool::with_tasks(cfg, bench.clone());
         let mut rng_a = Rng::new(3);
         let mut rng_b = Rng::new(3);
-        a.reset(&bench, &mut rng_a);
+        a.reset(&bench, &mut rng_a).unwrap();
         let mut obs_b = vec![0i32; 4 * a.cfg.params.obs_len()];
         BatchEnvironment::reset(&mut b, &mut rng_b, &mut obs_b).unwrap();
         assert_eq!(a.obs(), &obs_b[..], "trait reset == inherent reset");

@@ -128,6 +128,30 @@ impl EnvPool {
         self.tasks = Some((tasks, rng));
     }
 
+    /// Capture the task-draw stream's state for checkpointing (`None`
+    /// when no task source is installed). The source itself is not
+    /// serialized — a resumed run re-installs the same benchmark and
+    /// only the stream position needs restoring.
+    pub fn task_rng_state(&self) -> Option<[u64; 4]> {
+        self.tasks.as_ref().map(|(_, r)| r.state())
+    }
+
+    /// Restore a task-draw stream captured by
+    /// [`EnvPool::task_rng_state`]. Requires a task source to already be
+    /// installed (checkpoints store the stream, not the distribution).
+    pub fn restore_task_rng(&mut self, s: [u64; 4]) -> Result<()> {
+        match self.tasks.as_mut() {
+            Some((_, r)) => {
+                *r = Rng::from_state(s);
+                Ok(())
+            }
+            None => anyhow::bail!(
+                "restoring a task-draw stream, but no task source is \
+                 installed — install the benchmark first"
+            ),
+        }
+    }
+
     /// Load the family's `env_step` artifact so the pool can serve the
     /// per-step [`BatchEnvironment::step`] path.
     pub fn load_step_artifact(&mut self, rt: &Runtime) -> Result<()> {

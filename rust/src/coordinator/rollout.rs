@@ -40,12 +40,13 @@ use crate::env::api::{rollout_batch, BatchEnvironment, ObsMode,
                       RolloutBufs};
 use crate::env::state::TaskSource;
 use crate::runtime::{Manifest, Runtime};
+use crate::util::fault::FaultPlan;
 use crate::util::rng::Rng;
 
 use super::config::{Overlap, ShardConfig};
 use super::native::{NativeEnvConfig, NativePool};
 use super::pool::{EnvFamily, EnvPool};
-use super::shard::ShardPool;
+use super::shard::{panic_message, ShardPool};
 
 /// Rounds in flight per shard with overlap on: the double buffer.
 pub const PIPELINE_DEPTH: usize = 2;
@@ -115,6 +116,18 @@ trait RolloutReplica: 'static {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats>;
 }
 
+/// `panic@shard=K,round=R` fault site, shared by both backends: a
+/// shard-level injected panic exercises the engine's coarse failure
+/// path (clean error from `collect`, never a hang or abort) as opposed
+/// to the chunk-level faults `ParVecEnv` recovers from internally.
+fn maybe_shard_fault(faults: &FaultPlan, shard: usize, round: usize) {
+    if !faults.is_empty()
+        && faults.shard_round_panic(shard, round as u64)
+    {
+        panic!("injected fault: shard {shard} at round {round}");
+    }
+}
+
 /// Per-shard AOT/PJRT replica state, constructed inside the shard thread.
 struct ShardReplica {
     shard: usize,
@@ -122,10 +135,12 @@ struct ShardReplica {
     pool: EnvPool,
     rng: Rng,
     t: usize,
+    faults: Arc<FaultPlan>,
 }
 
 impl RolloutReplica for ShardReplica {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
+        maybe_shard_fault(&self.faults, self.shard, round);
         let t0 = Instant::now();
         let (reward_sum, episodes, trials) =
             self.pool.rollout(&self.rt, self.t, &mut self.rng)?;
@@ -161,14 +176,16 @@ struct NativeReplica {
     rng: Rng,
     b: usize,
     t: usize,
+    faults: Arc<FaultPlan>,
 }
 
 impl RolloutReplica for NativeReplica {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
+        maybe_shard_fault(&self.faults, self.shard, round);
         let t0 = Instant::now();
         let (reward_sum, episodes, trials) = match &mut self.stepper {
             NativeStepper::Fused(pool) => {
-                pool.rollout(self.t, &mut self.rng)
+                pool.rollout(self.t, &mut self.rng)?
             }
             NativeStepper::Wrapped { env, bufs } => {
                 rollout_batch(env.as_mut(), self.t, &mut self.rng, bufs)?
@@ -220,7 +237,9 @@ impl RolloutEngine {
         let seed = cfg.seed;
         let rooms = cfg.rooms;
         let name = artifact.clone();
+        let faults = Arc::new(FaultPlan::from_env()?);
         let pool = ShardPool::spawn(cfg.shards, move |i| {
+            let faults = faults.clone();
             let rt = Runtime::new(&artifacts_dir)?;
             rt.preload(&[name.as_str()])?;
             let mut rng = shard_rng(seed, i);
@@ -234,7 +253,7 @@ impl RolloutEngine {
             // (ROADMAP open item; see coordinator::pool module docs)
             let tasks: Arc<dyn TaskSource> = bench.clone();
             pool.set_task_source(tasks, rng.split());
-            Ok(ShardReplica { shard: i, rt, pool, rng, t })
+            Ok(ShardReplica { shard: i, rt, pool, rng, t, faults })
         })?;
         Ok(RolloutEngine { pool: EnginePool::Xla(pool), family, t, cfg })
     }
@@ -259,10 +278,13 @@ impl RolloutEngine {
                              cfg: ShardConfig, obs: ObsMode)
                              -> Result<RolloutEngine> {
         let seed = cfg.seed;
+        let faults = Arc::new(FaultPlan::from_env()?);
         let pool = ShardPool::spawn(cfg.shards, move |i| {
+            let faults = faults.clone();
             let mut rng = shard_rng(seed, i);
             let mut pool = NativePool::with_tasks(ncfg, bench.clone());
-            pool.reset(&bench, &mut rng);
+            pool.reset(&bench, &mut rng)
+                .with_context(|| format!("resetting native shard {i}"))?;
             let stepper = match obs {
                 ObsMode::Symbolic => NativeStepper::Fused(pool),
                 mode => {
@@ -277,6 +299,7 @@ impl RolloutEngine {
                 rng,
                 b: ncfg.b,
                 t: ncfg.t,
+                faults,
             })
         })?;
         let family = EnvFamily {
@@ -374,8 +397,14 @@ where
     match overlap {
         Overlap::Off => {
             for round in 0..rounds {
-                let stats =
-                    pool.broadcast(move |_, w| w.rollout_chunk(round));
+                // broadcast errors cleanly if a shard worker died (the
+                // panic cause is reported once by the pool teardown);
+                // a replica-level Err rides inside the per-shard result
+                let stats = pool
+                    .broadcast(move |_, w| w.rollout_chunk(round))
+                    .with_context(|| {
+                        format!("rollout collection round {round}")
+                    })?;
                 for s in stats {
                     let s = s?;
                     totals.absorb(&s);
@@ -389,7 +418,10 @@ where
             let mut next_round = vec![0usize; shards];
             let dispatch = |shard: usize, round: usize| {
                 let tx = res_tx.clone();
-                pool.submit(shard, move |w| {
+                // a failed submit means the worker already died; its
+                // earlier panic Err is in flight on res_rx, so dropping
+                // this job is safe — the consumer errors out below
+                let _ = pool.submit(shard, move |w| {
                     // Every dispatched job sends exactly once, even
                     // if the chunk panics — otherwise the consumer
                     // below would wait forever for a message from a
@@ -406,8 +438,9 @@ where
                         }
                         Err(p) => {
                             let _ = tx.send(Err(anyhow::anyhow!(
-                                "shard {shard} panicked during \
-                                 rollout round {round}"
+                                "shard {shard} panicked during rollout \
+                                 round {round}: {}",
+                                panic_message(p.as_ref())
                             )));
                             std::panic::resume_unwind(p);
                         }

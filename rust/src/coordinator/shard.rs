@@ -15,17 +15,54 @@
 //! - [`crate::coordinator::trainer::ShardedTrainer`] — data-parallel RL²
 //!   PPO with fixed-order parameter averaging (the pmap all-reduce).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::Tensor;
 
 /// A unit of work shipped to one shard thread. The worker state `W` stays
 /// on its thread; only the closure (and its captures) cross.
 type Job<W> = Box<dyn FnOnce(&mut W) + Send + 'static>;
+
+/// Best-effort text of a panic payload (the `&str`/`String` forms cover
+/// every `panic!`/`assert!` in this crate).
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Structured record of one worker death: which worker, which job (index
+/// in that worker's since-(re)spawn submission order), and the panic or
+/// error message. Recorded by the dying worker thread itself and read by
+/// the supervisor after joining the thread (join is the happens-before
+/// edge), so the cause is never lost to a racing channel close.
+#[derive(Debug, Clone)]
+pub struct WorkerError {
+    pub worker: usize,
+    pub job: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for WorkerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} panicked in job {}: {}", self.worker,
+               self.job, self.message)
+    }
+}
+
+impl std::error::Error for WorkerError {}
+
+/// Per-shard slot for the last death cause.
+type CauseSlots = Arc<Vec<Mutex<Option<WorkerError>>>>;
 
 /// Pool of persistent shard worker threads, each owning a worker state `W`
 /// built in-thread by the init closure (so `W` need not be `Send` — PJRT
@@ -35,9 +72,20 @@ type Job<W> = Box<dyn FnOnce(&mut W) + Send + 'static>;
 /// the double-buffered engines rely on for deterministic per-shard RNG
 /// streams: a shard's trajectory depends only on its own job sequence,
 /// never on cross-shard scheduling.
+///
+/// Failure model: every job body runs under `catch_unwind`. A panicking
+/// job records a [`WorkerError`] in the shard's cause slot and retires
+/// the thread (its state `W` may be poisoned mid-update, so it is never
+/// reused); pending [`Ticket`]s and later submissions observe the closed
+/// channel and return errors instead of aborting the process. A
+/// supervisor holding `&mut` may then [`ShardPool::respawn`] the shard —
+/// rebuilding `W` with the original init closure — and replay from its
+/// own last synchronization point.
 pub struct ShardPool<W> {
     txs: Vec<Sender<Job<W>>>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Vec<Option<JoinHandle<()>>>,
+    init: Arc<dyn Fn(usize) -> Result<W> + Send + Sync>,
+    causes: CauseSlots,
 }
 
 impl<W: 'static> ShardPool<W> {
@@ -49,46 +97,30 @@ impl<W: 'static> ShardPool<W> {
         F: Fn(usize) -> Result<W> + Send + Sync + 'static,
     {
         assert!(n > 0, "shard pool needs at least one shard");
-        let init = Arc::new(init);
-        let (ready_tx, ready_rx) = channel::<(usize, Result<()>)>();
+        let init: Arc<dyn Fn(usize) -> Result<W> + Send + Sync> =
+            Arc::new(init);
+        let causes: CauseSlots =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
         let mut txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
+        let mut readies = Vec::with_capacity(n);
         for i in 0..n {
-            let (tx, rx) = channel::<Job<W>>();
-            let init = init.clone();
-            let ready = ready_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("xmgrid-shard-{i}"))
-                .spawn(move || {
-                    let mut w = match init(i) {
-                        Ok(w) => {
-                            let _ = ready.send((i, Ok(())));
-                            w
-                        }
-                        Err(e) => {
-                            let _ = ready.send((i, Err(e)));
-                            return;
-                        }
-                    };
-                    // Drop the ready sender now: if a *sibling* shard
-                    // panics during init (sending nothing), the channel
-                    // must close once the survivors are done with it,
-                    // so spawn() fails loudly instead of hanging.
-                    drop(ready);
-                    while let Ok(job) = rx.recv() {
-                        job(&mut w);
-                    }
-                })
-                .expect("spawning shard thread");
+            let (tx, handle, ready) =
+                spawn_worker(i, init.clone(), causes.clone())?;
             txs.push(tx);
-            handles.push(handle);
+            handles.push(Some(handle));
+            readies.push(ready);
         }
-        drop(ready_tx);
-        let pool = ShardPool { txs, handles };
-        for _ in 0..n {
-            let (i, r) =
-                ready_rx.recv().expect("shard init channel closed");
-            r.with_context(|| format!("initialising shard {i}"))?;
+        let pool = ShardPool { txs, handles, init, causes };
+        // Inits run concurrently (one PJRT client each); collect their
+        // verdicts afterwards. A worker that panics inside init drops
+        // its ready sender without sending, so recv() errors instead of
+        // hanging.
+        for (i, ready) in readies.into_iter().enumerate() {
+            ready
+                .recv()
+                .map_err(|_| anyhow!("shard {i} died during init"))?
+                .with_context(|| format!("initialising shard {i}"))?;
         }
         Ok(pool)
     }
@@ -97,19 +129,20 @@ impl<W: 'static> ShardPool<W> {
         self.txs.len()
     }
 
-    /// Enqueue `f` on one shard without waiting for a result. Panics if
-    /// the shard thread has died (a previous job panicked).
-    pub fn submit<F>(&self, shard: usize, f: F)
+    /// Enqueue `f` on one shard without waiting for a result. Errors if
+    /// the shard thread has died (a previous job panicked) — see
+    /// [`ShardPool::respawn`] for recovery.
+    pub fn submit<F>(&self, shard: usize, f: F) -> Result<()>
     where
         F: FnOnce(&mut W) + Send + 'static,
     {
-        self.txs[shard]
-            .send(Box::new(f))
-            .expect("shard thread has exited");
+        self.txs[shard].send(Box::new(f)).map_err(|_| {
+            anyhow!("shard {shard} worker is dead (a prior job panicked)")
+        })
     }
 
     /// Enqueue `f` on one shard and return a [`Ticket`] for its result.
-    pub fn call<R, F>(&self, shard: usize, f: F) -> Ticket<R>
+    pub fn call<R, F>(&self, shard: usize, f: F) -> Result<Ticket<R>>
     where
         R: Send + 'static,
         F: FnOnce(&mut W) -> R + Send + 'static,
@@ -117,35 +150,177 @@ impl<W: 'static> ShardPool<W> {
         let (tx, rx) = channel();
         self.submit(shard, move |w| {
             let _ = tx.send(f(w));
-        });
-        Ticket { rx }
+        })?;
+        Ok(Ticket { rx, shard })
     }
 
     /// Lockstep collective: run `f(shard_index, worker)` on every shard
     /// concurrently, wait for all, and return results in shard order.
-    pub fn broadcast<R, F>(&self, f: F) -> Vec<R>
+    /// All shards are dispatched before any is awaited; on worker death
+    /// the surviving shards still finish their jobs, and the first
+    /// error is returned.
+    pub fn broadcast<R, F>(&self, f: F) -> Result<Vec<R>>
     where
         R: Send + 'static,
         F: Fn(usize, &mut W) -> R + Send + Sync + 'static,
     {
         let f = Arc::new(f);
-        let tickets: Vec<Ticket<R>> = (0..self.shards())
+        let tickets: Vec<Result<Ticket<R>>> = (0..self.shards())
             .map(|i| {
                 let f = f.clone();
                 self.call(i, move |w| f(i, w))
             })
             .collect();
-        tickets.into_iter().map(|t| t.wait()).collect()
+        let mut out = Vec::with_capacity(self.shards());
+        let mut first_err = None;
+        for t in tickets {
+            match t.and_then(|t| t.wait()) {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
     }
+
+    /// Take the recorded death cause for `shard`, if any. Joins the dead
+    /// handle first so the read is ordered after the dying thread's
+    /// write. Consuming reads: each cause is surfaced at most once.
+    pub fn take_cause(&mut self, shard: usize) -> Option<WorkerError> {
+        if let Some(h) = self.handles[shard].take() {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                // still alive — put it back untouched
+                self.handles[shard] = Some(h);
+                return None;
+            }
+        }
+        self.causes[shard].lock().ok()?.take()
+    }
+
+    /// Replace a dead shard worker with a fresh one built by the
+    /// original init closure, and return the recorded cause of death.
+    /// The supervisor that calls this owns replay: the new worker's `W`
+    /// is a *fresh init-state*, not the dead worker's state — callers
+    /// must re-establish it deterministically (snapshot restore + replay
+    /// of logged inputs) before resuming.
+    pub fn respawn(&mut self, shard: usize) -> Result<WorkerError> {
+        let (tx, handle, ready) =
+            spawn_worker(shard, self.init.clone(), self.causes.clone())?;
+        // Swap the job channel first: dropping the old sender closes the
+        // old worker's queue (so even a still-alive worker exits its
+        // loop), making the following join deadlock-free. The join is
+        // the happens-before edge that makes the dying thread's
+        // cause-slot write visible — and guarantees the old worker can
+        // no longer race the new one on the slot.
+        drop(std::mem::replace(&mut self.txs[shard], tx));
+        if let Some(h) = self.handles[shard].replace(handle) {
+            let _ = h.join();
+        }
+        let cause = self.causes[shard]
+            .lock()
+            .map(|mut g| g.take())
+            .unwrap_or(None)
+            .unwrap_or_else(|| WorkerError {
+                worker: shard,
+                job: 0,
+                message: "worker exited without a recorded cause".into(),
+            });
+        ready
+            .recv()
+            .map_err(|_| anyhow!("shard {shard} died during respawn init"))?
+            .with_context(|| format!("re-initialising shard {shard}"))?;
+        Ok(cause)
+    }
+}
+
+/// Spawn one worker thread: init in-thread (verdict over the returned
+/// ready channel), then run jobs in order, each under `catch_unwind`. A
+/// panicking job records its [`WorkerError`] in `causes[i]` and retires
+/// the thread.
+fn spawn_worker<W: 'static>(
+    i: usize,
+    init: Arc<dyn Fn(usize) -> Result<W> + Send + Sync>,
+    causes: CauseSlots,
+) -> Result<(Sender<Job<W>>, JoinHandle<()>, Receiver<Result<()>>)> {
+    let (tx, rx) = channel::<Job<W>>();
+    let (ready_tx, ready_rx) = channel::<Result<()>>();
+    let handle = std::thread::Builder::new()
+        .name(format!("xmgrid-shard-{i}"))
+        .spawn(move || {
+            let mut w = match catch_unwind(AssertUnwindSafe(|| init(i))) {
+                Ok(Ok(w)) => {
+                    let _ = ready_tx.send(Ok(()));
+                    w
+                }
+                Ok(Err(e)) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+                Err(p) => {
+                    let _ = ready_tx.send(Err(anyhow!(
+                        "init panicked: {}",
+                        panic_message(p.as_ref())
+                    )));
+                    return;
+                }
+            };
+            drop(ready_tx);
+            let mut job_idx: u64 = 0;
+            while let Ok(job) = rx.recv() {
+                if let Err(p) =
+                    catch_unwind(AssertUnwindSafe(|| job(&mut w)))
+                {
+                    if let Ok(mut slot) = causes[i].lock() {
+                        *slot = Some(WorkerError {
+                            worker: i,
+                            job: job_idx,
+                            message: panic_message(p.as_ref()),
+                        });
+                    }
+                    // W may be poisoned mid-update: retire the thread
+                    // (and drop W) instead of running more jobs on it.
+                    return;
+                }
+                job_idx += 1;
+            }
+        })
+        .context("spawning shard thread")?;
+    Ok((tx, handle, ready_rx))
 }
 
 impl<W> Drop for ShardPool<W> {
     fn drop(&mut self) {
         // Closing the job channels ends each worker loop; queued jobs
-        // still run to completion before the thread exits.
+        // still run to completion before the thread exits. Dead shards'
+        // channels drain silently — teardown must never turn one worker
+        // panic into a second panic mid-unwind.
         self.txs.clear();
         for h in self.handles.drain(..) {
-            let _ = h.join();
+            if let Some(h) = h {
+                let _ = h.join();
+            }
+        }
+        // Surface the first unconsumed death cause exactly once (causes
+        // already taken by a supervisor via respawn()/take_cause() were
+        // reported there and stay silent here).
+        let mut first: Option<WorkerError> = None;
+        for slot in self.causes.iter() {
+            if let Ok(mut g) = slot.lock() {
+                if let Some(e) = g.take() {
+                    first.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first {
+            eprintln!("xmgrid: shard {e}");
         }
     }
 }
@@ -153,15 +328,22 @@ impl<W> Drop for ShardPool<W> {
 /// Receipt for an in-flight shard job.
 pub struct Ticket<R> {
     rx: Receiver<R>,
+    shard: usize,
 }
 
 impl<R> Ticket<R> {
-    /// Block until the job completes. Panics if the shard thread died
-    /// before sending (i.e. the job itself panicked).
-    pub fn wait(self) -> R {
-        self.rx
-            .recv()
-            .expect("shard dropped its result (worker panicked)")
+    /// Block until the job completes. Errors if the shard thread died
+    /// before sending (i.e. the job itself panicked) — the pool's
+    /// [`ShardPool::respawn`]/[`ShardPool::take_cause`] then yields the
+    /// authoritative [`WorkerError`].
+    pub fn wait(self) -> Result<R> {
+        let shard = self.shard;
+        self.rx.recv().map_err(|_| {
+            anyhow!(
+                "shard {shard} worker died before returning a result \
+                 (job panicked)"
+            )
+        })
     }
 }
 
@@ -169,8 +351,9 @@ impl<R> Ticket<R> {
 /// shard order. The original fork-join primitive, superseded on the hot
 /// paths by the persistent [`ShardPool`]; retained as the simple
 /// borrow-friendly escape hatch (scoped threads may capture non-`'static`
-/// state, which pool jobs cannot).
-pub fn run_sharded<F, R>(n: usize, f: F) -> Vec<R>
+/// state, which pool jobs cannot). A panicking thread surfaces as an
+/// `Err` naming the shard — never a coordinator abort.
+pub fn run_sharded<F, R>(n: usize, f: F) -> Result<Vec<R>>
 where
     F: Fn(usize) -> R + Send + Sync,
     R: Send,
@@ -179,10 +362,26 @@ where
         let handles: Vec<_> = (0..n)
             .map(|i| {
                 let f = &f;
-                scope.spawn(move || f(i))
+                scope.spawn(move || {
+                    catch_unwind(AssertUnwindSafe(|| f(i)))
+                })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(i, h)| match h.join() {
+                Ok(Ok(r)) => Ok(r),
+                Ok(Err(p)) => Err(anyhow!(
+                    "shard {i} panicked: {}",
+                    panic_message(p.as_ref())
+                )),
+                Err(p) => Err(anyhow!(
+                    "shard {i} panicked: {}",
+                    panic_message(p.as_ref())
+                )),
+            })
+            .collect()
     })
 }
 
@@ -275,8 +474,21 @@ mod tests {
 
     #[test]
     fn shards_run_and_collect_in_order() {
-        let out = run_sharded(4, |i| i * 10);
+        let out = run_sharded(4, |i| i * 10).unwrap();
         assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn run_sharded_propagates_panic_as_error() {
+        let r = run_sharded(3, |i| {
+            if i == 1 {
+                panic!("shard {i} exploded");
+            }
+            i
+        });
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("shard 1"), "{msg}");
+        assert!(msg.contains("exploded"), "{msg}");
     }
 
     #[test]
@@ -289,7 +501,8 @@ mod tests {
             peak.fetch_max(now, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_millis(30));
             live.fetch_sub(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         assert!(peak.load(Ordering::SeqCst) >= 2, "threads overlapped");
     }
 
@@ -306,7 +519,7 @@ mod tests {
     #[test]
     fn pool_broadcast_collects_in_shard_order() {
         let pool = ShardPool::spawn(4, |i| Ok(i * 100)).unwrap();
-        let out = pool.broadcast(|i, w| *w + i);
+        let out = pool.broadcast(|i, w| *w + i).unwrap();
         assert_eq!(out, vec![0, 101, 202, 303]);
     }
 
@@ -314,9 +527,9 @@ mod tests {
     fn pool_jobs_run_in_submission_order_per_shard() {
         let pool = ShardPool::spawn(1, |_| Ok(Vec::<usize>::new())).unwrap();
         for k in 0..16 {
-            pool.submit(0, move |log| log.push(k));
+            pool.submit(0, move |log| log.push(k)).unwrap();
         }
-        let log = pool.call(0, |log| log.clone()).wait();
+        let log = pool.call(0, |log| log.clone()).unwrap().wait().unwrap();
         assert_eq!(log, (0..16).collect::<Vec<_>>());
     }
 
@@ -324,9 +537,9 @@ mod tests {
     fn pool_worker_state_persists_across_calls() {
         let pool = ShardPool::spawn(2, |_| Ok(0u64)).unwrap();
         for _ in 0..5 {
-            pool.broadcast(|_, w| *w += 1);
+            pool.broadcast(|_, w| *w += 1).unwrap();
         }
-        let counts = pool.broadcast(|_, w| *w);
+        let counts = pool.broadcast(|_, w| *w).unwrap();
         assert_eq!(counts, vec![5, 5]);
     }
 
@@ -339,6 +552,72 @@ mod tests {
             Ok(0)
         });
         assert!(r.is_err());
+    }
+
+    /// A panicking job is isolated: the ticket and later submissions
+    /// error (no abort), sibling shards keep working, and teardown is
+    /// clean — one panic never becomes a second panic in Drop.
+    #[test]
+    fn pool_job_panic_is_isolated() {
+        let pool = ShardPool::spawn(2, |_| Ok(7u64)).unwrap();
+        let t = pool
+            .call(0, |_: &mut u64| -> u64 { panic!("chunk kaboom") })
+            .unwrap();
+        assert!(t.wait().is_err());
+        // dead shard rejects new work with an error, not a panic. The
+        // ticket fails as soon as the panic unwinds; the channel closes
+        // when the thread retires moments later — poll for it.
+        while pool.submit(0, |_| {}).is_ok() {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // sibling shard is unaffected
+        let v = pool.call(1, |w| *w).unwrap().wait().unwrap();
+        assert_eq!(v, 7);
+        drop(pool); // must not panic while unwinding channels/handles
+    }
+
+    /// respawn() rebuilds the dead worker from the init closure and
+    /// reports the recorded cause (worker id + panic message) exactly
+    /// once.
+    #[test]
+    fn pool_respawn_recovers_and_reports_cause() {
+        let mut pool = ShardPool::spawn(2, |i| Ok(i as u64)).unwrap();
+        pool.broadcast(|_, w| *w += 10).unwrap();
+        let t = pool
+            .call(1, |_: &mut u64| -> u64 { panic!("injected fault") })
+            .unwrap();
+        assert!(t.wait().is_err());
+        let cause = pool.respawn(1).unwrap();
+        assert_eq!(cause.worker, 1);
+        assert!(cause.message.contains("injected fault"), "{cause}");
+        // the respawned worker is fresh init-state (1), not 11 — replay
+        // is the supervisor's job
+        let v = pool.call(1, |w| *w).unwrap().wait().unwrap();
+        assert_eq!(v, 1);
+        // cause was consumed: nothing left to take
+        assert!(pool.take_cause(1).is_none());
+        // shard 0 kept its state across the sibling's death
+        let v0 = pool.call(0, |w| *w).unwrap().wait().unwrap();
+        assert_eq!(v0, 10);
+    }
+
+    /// broadcast() over a pool with one dead shard returns an error
+    /// while surviving shards still ran their jobs.
+    #[test]
+    fn pool_broadcast_with_dead_shard_errors_cleanly() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = ShardPool::spawn(3, |_| Ok(0u8)).unwrap();
+        let t = pool
+            .call(1, |_: &mut u8| panic!("dead"))
+            .unwrap();
+        assert!(t.wait().is_err());
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        let r = pool.broadcast(move |_, _| {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(r.is_err());
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "survivors ran");
     }
 
     #[test]

@@ -13,15 +13,17 @@
 use std::collections::VecDeque;
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
 
 use crate::benchgen::Benchmark;
 use crate::runtime::state::NUM_STATE_FIELDS;
 use crate::runtime::{Artifact, Manifest, Runtime, Tensor};
+use crate::util::fault::FaultPlan;
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, percentile};
 
+use super::checkpoint::{save_checkpoint, TrainCheckpoint, TrainerState};
 use super::config::{ShardConfig, TrainConfig};
 use super::pool::{EnvFamily, EnvPool};
 use super::rollout::{shard_seed, PIPELINE_DEPTH};
@@ -207,6 +209,64 @@ impl Trainer {
         })
     }
 
+    /// Capture everything the next `train_iter` depends on, so a restored
+    /// replica continues bit-for-bit where this one left off.
+    pub fn state_snapshot(&self) -> TrainerState {
+        TrainerState {
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            t: self.t.clone(),
+            env_state: self.pool.state.clone(),
+            last_obs: self.pool.last_obs.clone(),
+            obs: self.obs.clone(),
+            prev_a: self.prev_a.clone(),
+            prev_r: self.prev_r.clone(),
+            done_prev: self.done_prev.clone(),
+            h: self.h.clone(),
+            rng: self.rng.state(),
+            task_rng: self.pool.task_rng_state(),
+            iter: self.iter as u64,
+        }
+    }
+
+    /// Restore a [`state_snapshot`](Self::state_snapshot). The trainer
+    /// must have been built from the same artifact (same parameter and
+    /// env-state shapes) — mismatches are a clean error, never a
+    /// silently-wrong resume.
+    pub fn restore_state(&mut self, s: &TrainerState) -> Result<()> {
+        ensure!(
+            s.params.len() == self.params.len(),
+            "checkpoint has {} parameter tensors, this artifact has {} \
+             — was it written by a different model?",
+            s.params.len(),
+            self.params.len()
+        );
+        ensure!(
+            s.env_state.len() == self.pool.state.len(),
+            "checkpoint has {} env-state tensors, expected {}",
+            s.env_state.len(),
+            self.pool.state.len()
+        );
+        self.params = s.params.clone();
+        self.m = s.m.clone();
+        self.v = s.v.clone();
+        self.t = s.t.clone();
+        self.pool.state = s.env_state.clone();
+        self.pool.last_obs = s.last_obs.clone();
+        self.obs = s.obs.clone();
+        self.prev_a = s.prev_a.clone();
+        self.prev_r = s.prev_r.clone();
+        self.done_prev = s.done_prev.clone();
+        self.h = s.h.clone();
+        self.rng = Rng::from_state(s.rng);
+        if let Some(tr) = s.task_rng {
+            self.pool.restore_task_rng(tr)?;
+        }
+        self.iter = s.iter as usize;
+        Ok(())
+    }
+
     /// §4.2 evaluation: roll the current policy over `eval_art`'s batch of
     /// held-out tasks and report mean / 20th-percentile return.
     pub fn evaluate(&mut self, rt: &Runtime, eval_artifact: &str,
@@ -312,6 +372,25 @@ impl TrainerReplica {
 /// iteration *t*. All updates are still applied exactly once; they are
 /// merely computed at a one-iteration-stale basis, the usual
 /// stale-synchronous data-parallel trade.
+/// Periodic crash-safe checkpointing for [`ShardedTrainer::train`].
+///
+/// When set, a [`TrainCheckpoint`] is written atomically to `path` every
+/// `every` iterations. Checkpoint boundaries are *synchronization
+/// points*: with overlap on, the pipeline never dispatches past an
+/// unwritten boundary, so the snapshot observes a quiescent, fully
+/// reduced state. This means the cadence is part of the run's schedule —
+/// the determinism contract is "same seed, same shards, same cadence ⇒
+/// same run", and `--resume` reproduces the interrupted schedule
+/// exactly.
+pub struct CheckpointPlan {
+    /// final checkpoint path (written via tmp + rename)
+    pub path: PathBuf,
+    /// checkpoint every N iterations (0 disables)
+    pub every: usize,
+    /// fault-injection plan (drives `torn-checkpoint@iter=I`)
+    pub faults: Arc<FaultPlan>,
+}
+
 pub struct ShardedTrainer {
     pool: ShardPool<TrainerReplica>,
     pub cfg: ShardConfig,
@@ -322,6 +401,8 @@ pub struct ShardedTrainer {
     pub t_len: usize,
     /// iterations completed (reduced into the master)
     pub iters_done: usize,
+    /// optional periodic crash-safe checkpointing
+    pub checkpoint: Option<CheckpointPlan>,
 }
 
 impl ShardedTrainer {
@@ -364,7 +445,47 @@ impl ShardedTrainer {
             family,
             t_len,
             iters_done: 0,
+            checkpoint: None,
         })
+    }
+
+    /// Restore a previously saved [`TrainCheckpoint`]: master parameters,
+    /// reduced iteration count, and every shard replica's full state. The
+    /// trainer must have been launched with the same artifact and shard
+    /// count the checkpoint was written with.
+    pub fn restore(&mut self, ckpt: &TrainCheckpoint) -> Result<()> {
+        ensure!(
+            ckpt.shards.len() == self.shards(),
+            "checkpoint holds {} shard states but the trainer is running \
+             {} shards — resume with --shards {}",
+            ckpt.shards.len(),
+            self.shards(),
+            ckpt.shards.len()
+        );
+        ensure!(
+            ckpt.master.len() == self.master.len(),
+            "checkpoint has {} master tensors, this artifact has {}",
+            ckpt.master.len(),
+            self.master.len()
+        );
+        let tickets: Vec<Ticket<Result<()>>> = ckpt
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                let st = st.clone();
+                self.pool.call(s, move |w| w.trainer.restore_state(&st))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for (s, ticket) in tickets.into_iter().enumerate() {
+            ticket
+                .wait()
+                .and_then(|r| r)
+                .with_context(|| format!("restoring shard {s}"))?;
+        }
+        self.master = ckpt.master.clone();
+        self.iters_done = ckpt.iters_done as usize;
+        Ok(())
     }
 
     pub fn shards(&self) -> usize {
@@ -388,8 +509,16 @@ impl ShardedTrainer {
         let depth = if self.cfg.overlap.is_on() { PIPELINE_DEPTH } else { 1 };
         let shards = self.shards();
         let resample_every = self.train_cfg.task_resample_iters.max(1);
+        let every = match &self.checkpoint {
+            Some(p) if p.every > 0 => Some(p.every),
+            _ => None,
+        };
         let first = self.iters_done + 1;
         let last = self.iters_done + iters;
+        // Last iteration already captured on disk (or implicitly captured
+        // by being in the past when training started). The pipeline never
+        // dispatches past an unwritten checkpoint boundary — see below.
+        let mut ckpt_done = self.iters_done;
         let mut inflight: VecDeque<(usize, Vec<Ticket<ShardIterOut>>)> =
             VecDeque::new();
         let mut next = first;
@@ -397,7 +526,21 @@ impl ShardedTrainer {
             // Keep the pipeline full: with depth 2 the dispatch of t+1
             // happens before t is reduced, so shards never idle on the
             // host's averaging / logging.
+            //
+            // Checkpoint barrier: iteration `next` may be dispatched only
+            // once the latest checkpoint boundary strictly before it has
+            // been written. Boundaries are therefore quiescent points —
+            // when boundary t is reduced, no t+1 work has touched any
+            // replica, so the snapshot is exactly "the run after t". The
+            // cadence deterministically shapes the overlap schedule;
+            // resuming reproduces that same schedule bit for bit.
             while next <= last && inflight.len() < depth {
+                if let Some(e) = every {
+                    let boundary = (next - 1) / e * e;
+                    if boundary > ckpt_done {
+                        break;
+                    }
+                }
                 let basis = Arc::new(self.master.clone());
                 let resample = next > 1 && (next - 1) % resample_every == 0;
                 let tickets: Vec<Ticket<ShardIterOut>> = (0..shards)
@@ -407,7 +550,10 @@ impl ShardedTrainer {
                             w.shard_iter(basis, resample)
                         })
                     })
-                    .collect();
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| {
+                        format!("dispatching training iteration {next}")
+                    })?;
                 inflight.push_back((next, tickets));
                 next += 1;
             }
@@ -417,6 +563,7 @@ impl ShardedTrainer {
             for ticket in tickets {
                 let (d, m) = ticket
                     .wait()
+                    .and_then(|r| r)
                     .with_context(|| format!("training iteration {t}"))?;
                 deltas.push(d);
                 metrics.push(m);
@@ -426,10 +573,44 @@ impl ShardedTrainer {
             let mean_delta = average_param_tensors(deltas);
             add_params(&mut self.master, &mean_delta);
             self.iters_done = t;
+            if let Some(e) = every {
+                if t % e == 0 {
+                    self.write_checkpoint()?;
+                    ckpt_done = t;
+                }
+            }
             let reduced = super::metrics::reduce_iter_metrics(&metrics);
             consume(t, &reduced)?;
         }
         Ok(())
+    }
+
+    /// Snapshot every replica and write an atomic checkpoint for the
+    /// current `iters_done`. Callers must guarantee quiescence (no
+    /// in-flight iterations past `iters_done`) — `train`'s barrier rule
+    /// does.
+    fn write_checkpoint(&self) -> Result<()> {
+        let Some(plan) = &self.checkpoint else { return Ok(()) };
+        let tickets: Vec<Ticket<TrainerState>> = (0..self.shards())
+            .map(|s| self.pool.call(s, |w| w.trainer.state_snapshot()))
+            .collect::<Result<Vec<_>>>()
+            .context("dispatching checkpoint snapshots")?;
+        let shards = tickets
+            .into_iter()
+            .enumerate()
+            .map(|(s, t)| {
+                t.wait()
+                    .with_context(|| format!("snapshotting shard {s}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ckpt = TrainCheckpoint {
+            iters_done: self.iters_done as u64,
+            master: self.master.clone(),
+            shards,
+        };
+        save_checkpoint(&plan.path, &ckpt, &plan.faults).with_context(
+            || format!("checkpointing at iteration {}", self.iters_done),
+        )
     }
 
     /// §4.2 evaluation of the *master* parameters, run on shard 0's
@@ -445,6 +626,8 @@ impl ShardedTrainer {
                 let bench = w.bench.clone();
                 w.trainer.evaluate(&w.rt, &name, &bench, rooms)
             })
+            .context("dispatching evaluation")?
             .wait()
+            .and_then(|r| r)
     }
 }

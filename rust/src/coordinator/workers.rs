@@ -30,27 +30,72 @@
 //! grids, gather-table cache and free-cell lists (docs/ARCHITECTURE.md
 //! "Hot-path anatomy"), so the zero-redundancy per-step kernels run
 //! unchanged inside every worker.
+//!
+//! # Failure model (docs/ARCHITECTURE.md "Failure model & recovery")
+//!
+//! Every chunk job runs under `catch_unwind` inside its worker thread
+//! ([`ShardPool`]); a panic retires the worker and surfaces as a channel
+//! error, never a process abort. The coordinator then *supervises*: it
+//! respawns the worker ([`ShardPool::respawn`]), deterministically
+//! rebuilds the chunk's state by replaying the engine's input log (the
+//! last reset/snapshot base plus every action batch, restart stream and
+//! task-source install since — all pure data the coordinator already
+//! owned), and re-dispatches the failed job, under a bounded
+//! [`RetryPolicy`]. Because the replay re-runs the *same computation*
+//! on the *same inputs*, a faulted-then-recovered run is bitwise
+//! identical to an unfaulted one — `tests/fault_tolerance.rs` pins
+//! this across thread counts and fault sites. The log is compacted to a
+//! per-chunk [`VecEnv::snapshot`] base every `COMPACT_AFTER_STEPS`
+//! logged steps, so replay cost and log memory stay bounded.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::env::api::{ActionSpec, BatchEnvironment, ObsSpec};
 use crate::env::state::{Ruleset, TaskSource};
 use crate::env::types::{GOAL_ENC, NUM_ACTIONS, RULE_ENC};
 use crate::env::vector::{VecEnv, VecEnvConfig, VecEnvSnapshot};
 use crate::env::Grid;
+use crate::util::fault::{FaultPlan, RetryPolicy};
 use crate::util::rng::Rng;
 
-use super::shard::ShardPool;
+use super::shard::{ShardPool, Ticket};
+
+/// Replay from the base is compacted into a fresh snapshot base once the
+/// log exceeds this many steps, bounding recovery time and log memory.
+const COMPACT_AFTER_STEPS: usize = 1024;
 
 /// One worker's owned slice of the batch.
 struct ChunkEnv {
     venv: VecEnv,
+    /// chunk index — the `worker=` coordinate of the fault grammar
+    worker: usize,
+    faults: Arc<FaultPlan>,
+}
+
+impl ChunkEnv {
+    /// Fault-injection site: consulted once per env-batch step with the
+    /// *global* step index, identical on first execution and on replay,
+    /// so a one-shot fault fires at the same logical point for any
+    /// thread count and a `count=*` fault keeps a worker down through
+    /// every retry.
+    #[inline]
+    fn maybe_fault(&self, step: u64) {
+        if !self.faults.is_empty()
+            && self.faults.chunk_step_panic(self.worker, step)
+        {
+            panic!(
+                "injected fault: worker {} at step {}",
+                self.worker, step
+            );
+        }
+    }
 }
 
 /// Recyclable I/O staging for one chunk: shipped into the worker job,
-/// filled there, shipped back, and stored for the next call.
+/// filled there, shipped back, and stored for the next call. Lost with
+/// the worker on a panic (the job owned it); the supervisor reallocates.
 struct ChunkBufs {
     actions: Vec<i32>,
     obs: Vec<i32>,
@@ -61,9 +106,96 @@ struct ChunkBufs {
     reward_acc: Vec<f64>,
 }
 
+/// Full-batch base of the replay log: the last full synchronization
+/// point every chunk's state is a pure function of.
+enum ReplayBase {
+    /// construction state — a fresh `VecEnv::new`
+    Unseeded,
+    /// the inputs of the last `reset_all` (full-batch clones)
+    Reset {
+        grids: Vec<Grid>,
+        rulesets: Vec<Ruleset>,
+        max_steps: Vec<i32>,
+        rngs: Vec<Rng>,
+    },
+    /// compacted per-chunk snapshots, chunk order
+    Snapshots(Vec<VecEnvSnapshot>),
+}
+
+/// One logged engine input since the base, in execution order.
+enum ReplayEvent {
+    /// a `step_all`/`rollout` action slab, step-major `[t, B]` global
+    /// layout, tagged with its starting global step index so replays
+    /// consult the fault plan at the original coordinates
+    Steps { start: u64, t: usize, actions: Vec<i32> },
+    /// pre-split per-env restart streams, global env order
+    Restart(Vec<Rng>),
+    /// task-source install (order relative to steps matters: draws
+    /// after this point come from the new source)
+    SetTasks(Arc<dyn TaskSource>),
+}
+
+/// The deterministic input log: `base`, then `base_tasks` (the source
+/// in effect at the base), then `events` in order, reproduces every
+/// chunk's state exactly.
+struct ReplayLog {
+    base: ReplayBase,
+    base_tasks: Option<Arc<dyn TaskSource>>,
+    events: Vec<ReplayEvent>,
+    logged_steps: usize,
+}
+
+impl ReplayLog {
+    fn new() -> ReplayLog {
+        ReplayLog {
+            base: ReplayBase::Unseeded,
+            base_tasks: None,
+            events: Vec::new(),
+            logged_steps: 0,
+        }
+    }
+
+    /// The task source in effect after the full log ran.
+    fn effective_tasks(&self) -> Option<Arc<dyn TaskSource>> {
+        for ev in self.events.iter().rev() {
+            if let ReplayEvent::SetTasks(ts) = ev {
+                return Some(ts.clone());
+            }
+        }
+        self.base_tasks.clone()
+    }
+}
+
+/// Chunk-sliced copy of base + events, shipped into a replay job.
+enum ChunkBase {
+    Unseeded,
+    Reset {
+        grids: Vec<Grid>,
+        rulesets: Vec<Ruleset>,
+        max_steps: Vec<i32>,
+        rngs: Vec<Rng>,
+    },
+    Snapshot(VecEnvSnapshot),
+}
+
+enum ChunkEvent {
+    Steps { start: u64, t: usize, actions: Vec<i32> },
+    Restart(Vec<Rng>),
+    SetTasks(Arc<dyn TaskSource>),
+}
+
+/// A supervised chunk job: returns the chunk's staging buffers plus the
+/// op-specific output.
+type ChunkJob<R> = Box<dyn FnOnce(&mut ChunkEnv) -> (ChunkBufs, R) + Send>;
+
 /// `B` envs chunked over `threads` persistent workers, with the serial
 /// [`VecEnv`] API plus a fused [`ParVecEnv::rollout`]. `threads == 1`
 /// runs the identical machinery with a single worker.
+///
+/// All state-advancing operations return `Result`: a worker panic is
+/// recovered by respawn + deterministic replay under the configured
+/// [`RetryPolicy`], and only after retries are exhausted does the
+/// operation surface a clean error naming the worker and step.
 pub struct ParVecEnv {
     cfg: VecEnvConfig,
     b: usize,
@@ -77,12 +209,41 @@ pub struct ParVecEnv {
     /// whether `reset_all` has installed episode inputs (guards the
     /// trait-level episode restart)
     seeded: bool,
+    /// deterministic input log for replay-based recovery
+    log: ReplayLog,
+    /// global step index of the next env-batch step (fault coordinates)
+    steps_done: u64,
+    retry: RetryPolicy,
+    faults: Arc<FaultPlan>,
 }
 
 impl ParVecEnv {
     /// Chunk `b` envs over `threads` workers (clamped to `[1, b]`);
-    /// chunk sizes differ by at most one env.
+    /// chunk sizes differ by at most one env. Reads the ambient fault
+    /// plan from `XMG_FAULTS` (pre-validate it with
+    /// [`FaultPlan::from_env`] for a clean CLI error; a malformed value
+    /// here panics rather than silently running unfaulted) and uses the
+    /// default [`RetryPolicy`].
     pub fn new(cfg: VecEnvConfig, b: usize, threads: usize) -> ParVecEnv {
+        Self::with_retry(cfg, b, threads, RetryPolicy::default())
+    }
+
+    /// [`ParVecEnv::new`] with an explicit recovery policy (the
+    /// `--max-retries` / `--retry-backoff-ms` CLI knobs); the fault
+    /// plan still comes from the ambient `XMG_FAULTS`.
+    pub fn with_retry(cfg: VecEnvConfig, b: usize, threads: usize,
+                      retry: RetryPolicy) -> ParVecEnv {
+        let faults = FaultPlan::from_env().unwrap_or_else(|e| {
+            panic!("malformed {}: {e:#}", crate::util::fault::FAULTS_ENV)
+        });
+        Self::with_faults(cfg, b, threads, Arc::new(faults), retry)
+    }
+
+    /// [`ParVecEnv::new`] with an explicit fault plan and retry policy
+    /// (the fault-tolerance tests inject through this constructor).
+    pub fn with_faults(cfg: VecEnvConfig, b: usize, threads: usize,
+                       faults: Arc<FaultPlan>, retry: RetryPolicy)
+                       -> ParVecEnv {
         assert!(b > 0, "ParVecEnv needs at least one env");
         let threads = threads.max(1).min(b);
         let (base, extra) = (b / threads, b % threads);
@@ -94,9 +255,14 @@ impl ParVecEnv {
             lo += len;
         }
         let spawn_ranges = ranges.clone();
+        let spawn_faults = faults.clone();
         let pool = ShardPool::spawn(threads, move |c| {
             let (lo, hi) = spawn_ranges[c];
-            Ok(ChunkEnv { venv: VecEnv::new(cfg, hi - lo) })
+            Ok(ChunkEnv {
+                venv: VecEnv::new(cfg, hi - lo),
+                worker: c,
+                faults: spawn_faults.clone(),
+            })
         })
         .expect("spawning vec-env chunk workers");
         let vv2 = cfg.opts.view_size * cfg.opts.view_size * 2;
@@ -114,8 +280,19 @@ impl ParVecEnv {
                 })
             })
             .collect();
-        ParVecEnv { cfg, b, ranges, pool, bufs,
-                    act_scratch: Vec::new(), seeded: false }
+        ParVecEnv {
+            cfg,
+            b,
+            ranges,
+            pool,
+            bufs,
+            act_scratch: Vec::new(),
+            seeded: false,
+            log: ReplayLog::new(),
+            steps_done: 0,
+            retry,
+            faults,
+        }
     }
 
     pub fn batch(&self) -> usize {
@@ -130,6 +307,12 @@ impl ParVecEnv {
         &self.cfg
     }
 
+    /// Global step index of the next env-batch step — the `step=`
+    /// coordinate of the fault grammar, and part of error messages.
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
     /// `B * V * V * 2`, as in [`VecEnv::obs_len`].
     pub fn obs_len(&self) -> usize {
         self.b * self.vv2()
@@ -139,14 +322,260 @@ impl ParVecEnv {
         self.cfg.opts.view_size * self.cfg.opts.view_size * 2
     }
 
+    fn alloc_bufs(&self, c: usize) -> ChunkBufs {
+        let (lo, hi) = self.ranges[c];
+        let cb = hi - lo;
+        let vv2 = self.vv2();
+        ChunkBufs {
+            actions: Vec::with_capacity(cb),
+            obs: vec![0; cb * vv2],
+            rewards: vec![0.0; cb],
+            dones: vec![false; cb],
+            trials: vec![false; cb],
+            reward_acc: vec![0.0; cb],
+        }
+    }
+
+    fn take_bufs(&mut self, c: usize) -> ChunkBufs {
+        match self.bufs[c].take() {
+            Some(b) => b,
+            None => self.alloc_bufs(c),
+        }
+    }
+
+    // --- supervised dispatch ----------------------------------------------
+
+    /// Run one operation across every chunk with supervision: dispatch
+    /// all chunks, await them in chunk order, and for any chunk whose
+    /// worker died, respawn + replay the input log + re-dispatch the
+    /// same job (built fresh by `make_job`), up to `retry.max_retries`
+    /// recovery rounds with linear backoff. Chunks that succeeded keep
+    /// their advanced state — recovery replays exactly the failed
+    /// chunk's envs, so the batch stays consistent. Returns per-chunk
+    /// outputs in chunk order, or a clean error naming the worker after
+    /// retries are exhausted.
+    fn run_op<R, J>(&mut self, label: &str, make_job: J) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        J: Fn(usize, ChunkBufs) -> ChunkJob<R>,
+    {
+        let n = self.ranges.len();
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut tickets: Vec<Option<Ticket<(ChunkBufs, R)>>> =
+            Vec::with_capacity(n);
+        for c in 0..n {
+            let bufs = self.take_bufs(c);
+            tickets.push(self.pool.call(c, make_job(c, bufs)).ok());
+        }
+        let mut failed: Vec<usize> = Vec::new();
+        for (c, t) in tickets.into_iter().enumerate() {
+            match t.map(Ticket::wait) {
+                Some(Ok((bufs, r))) => {
+                    self.bufs[c] = Some(bufs);
+                    results[c] = Some(r);
+                }
+                _ => failed.push(c),
+            }
+        }
+        let mut attempt = 0u32;
+        while !failed.is_empty() {
+            attempt += 1;
+            if attempt > self.retry.max_retries {
+                let c = failed[0];
+                // respawn once more purely to harvest the authoritative
+                // cause (the join inside makes the dying thread's record
+                // visible) and leave the pool teardown-safe
+                let cause = match self.pool.respawn(c) {
+                    Ok(e) => format!(": {e}"),
+                    Err(_) => String::new(),
+                };
+                let (lo, hi) = self.ranges[c];
+                for &f in &failed {
+                    if self.bufs[f].is_none() {
+                        self.bufs[f] = Some(self.alloc_bufs(f));
+                    }
+                }
+                bail!(
+                    "chunk worker {c} (envs {lo}..{hi}) failed \
+                     `{label}` at global step {} after {} retries{cause}",
+                    self.steps_done,
+                    self.retry.max_retries
+                );
+            }
+            self.retry.sleep(attempt);
+            let mut still = Vec::new();
+            for &c in &failed {
+                if self.recover_chunk(c).is_err() {
+                    still.push(c);
+                    continue;
+                }
+                let bufs = self.take_bufs(c);
+                let ok = match self.pool.call(c, make_job(c, bufs)) {
+                    Ok(t) => match t.wait() {
+                        Ok((bufs, r)) => {
+                            self.bufs[c] = Some(bufs);
+                            results[c] = Some(r);
+                            true
+                        }
+                        Err(_) => false,
+                    },
+                    Err(_) => false,
+                };
+                if !ok {
+                    still.push(c);
+                }
+            }
+            failed = still;
+        }
+        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+    }
+
+    /// Respawn chunk worker `c` and deterministically rebuild its state:
+    /// install the base (reset inputs or snapshot) and re-run every
+    /// logged event, consulting the fault plan at the original global
+    /// step coordinates. On success the chunk's staging buffers are
+    /// rebuilt too (current observations re-rendered), so recovery is
+    /// invisible to `copy_obs_into`.
+    fn recover_chunk(&mut self, c: usize) -> Result<()> {
+        let cause = self.pool.respawn(c)?;
+        eprintln!(
+            "xmgrid: recovering chunk worker {c}: {cause} \
+             (replaying {} logged steps)",
+            self.log.logged_steps
+        );
+        let (lo, hi) = self.ranges[c];
+        let cb = hi - lo;
+        let cfg = self.cfg;
+        let vv2 = self.vv2();
+        let base = match &self.log.base {
+            ReplayBase::Unseeded => ChunkBase::Unseeded,
+            ReplayBase::Reset { grids, rulesets, max_steps, rngs } => {
+                ChunkBase::Reset {
+                    grids: grids[lo..hi].to_vec(),
+                    rulesets: rulesets[lo..hi].to_vec(),
+                    max_steps: max_steps[lo..hi].to_vec(),
+                    rngs: rngs[lo..hi].to_vec(),
+                }
+            }
+            ReplayBase::Snapshots(s) => ChunkBase::Snapshot(s[c].clone()),
+        };
+        let base_tasks = self.log.base_tasks.clone();
+        let b = self.b;
+        let events: Vec<ChunkEvent> = self
+            .log
+            .events
+            .iter()
+            .map(|ev| match ev {
+                ReplayEvent::Steps { start, t, actions } => {
+                    let mut a = Vec::with_capacity(*t * cb);
+                    for step in 0..*t {
+                        a.extend_from_slice(
+                            &actions[step * b + lo..step * b + hi],
+                        );
+                    }
+                    ChunkEvent::Steps { start: *start, t: *t, actions: a }
+                }
+                ReplayEvent::Restart(rngs) => {
+                    ChunkEvent::Restart(rngs[lo..hi].to_vec())
+                }
+                ReplayEvent::SetTasks(ts) => {
+                    ChunkEvent::SetTasks(ts.clone())
+                }
+            })
+            .collect();
+        let ticket = self.pool.call(c, move |w: &mut ChunkEnv| {
+            w.venv = VecEnv::new(cfg, cb);
+            if let Some(ts) = base_tasks {
+                w.venv.set_task_source_prevalidated(ts);
+            }
+            let mut bufs = ChunkBufs {
+                actions: Vec::with_capacity(cb),
+                obs: vec![0; cb * vv2],
+                rewards: vec![0.0; cb],
+                dones: vec![false; cb],
+                trials: vec![false; cb],
+                reward_acc: vec![0.0; cb],
+            };
+            match base {
+                ChunkBase::Unseeded => {}
+                ChunkBase::Reset { grids, rulesets, max_steps, rngs } => {
+                    let refs: Vec<&Ruleset> = rulesets.iter().collect();
+                    w.venv.reset_all(&grids, &refs, &max_steps, &rngs,
+                                     &mut bufs.obs);
+                }
+                ChunkBase::Snapshot(snap) => w.venv.restore(&snap),
+            }
+            for ev in events {
+                match ev {
+                    ChunkEvent::Steps { start, t, actions } => {
+                        for step in 0..t {
+                            w.maybe_fault(start + step as u64);
+                            let a = &actions[step * cb..(step + 1) * cb];
+                            let ChunkBufs {
+                                obs, rewards, dones, trials, ..
+                            } = &mut bufs;
+                            w.venv.step_all(a, obs, rewards, dones,
+                                            trials);
+                        }
+                    }
+                    ChunkEvent::Restart(rngs) => {
+                        for (j, r) in rngs.into_iter().enumerate() {
+                            w.venv.restart_env_with(j, r, &mut bufs.obs);
+                        }
+                    }
+                    ChunkEvent::SetTasks(ts) => {
+                        w.venv.set_task_source_prevalidated(ts);
+                    }
+                }
+            }
+            // re-render current observations so the recovered staging
+            // buffers equal the survivors' (snapshot bases carry no obs)
+            w.venv.write_obs_all(&mut bufs.obs);
+            bufs
+        })?;
+        let bufs = ticket.wait().map_err(|_| {
+            anyhow!("chunk worker {c} died again during replay")
+        })?;
+        self.bufs[c] = Some(bufs);
+        Ok(())
+    }
+
+    /// Compact the replay log into fresh per-chunk snapshot bases once
+    /// it exceeds [`COMPACT_AFTER_STEPS`], bounding replay time and log
+    /// memory. Runs at a synchronization point (all chunks idle and
+    /// consistent), itself supervised.
+    fn maybe_compact(&mut self) -> Result<()> {
+        if self.log.logged_steps <= COMPACT_AFTER_STEPS {
+            return Ok(());
+        }
+        let snaps = self.run_op("snapshot-compact", |_, bufs| {
+            Box::new(move |w: &mut ChunkEnv| (bufs, w.venv.snapshot()))
+        })?;
+        self.log.base_tasks = self.log.effective_tasks();
+        self.log.base = ReplayBase::Snapshots(snaps);
+        self.log.events.clear();
+        self.log.logged_steps = 0;
+        Ok(())
+    }
+
+    // --- public engine surface --------------------------------------------
+
     /// Install the episode-reset task distribution on every chunk
     /// (see [`VecEnv::set_task_source`]). The O(num_tasks) capacity
     /// validation runs once here, not once per chunk worker.
-    pub fn set_task_source(&mut self, tasks: Arc<dyn TaskSource>) {
+    pub fn set_task_source(&mut self, tasks: Arc<dyn TaskSource>)
+                           -> Result<()> {
         self.cfg.validate_task_source(tasks.as_ref());
-        self.pool.broadcast(move |_, w: &mut ChunkEnv| {
-            w.venv.set_task_source_prevalidated(tasks.clone());
-        });
+        let install = tasks.clone();
+        self.run_op("set_task_source", move |_, bufs| {
+            let ts = install.clone();
+            Box::new(move |w: &mut ChunkEnv| {
+                w.venv.set_task_source_prevalidated(ts);
+                (bufs, ())
+            })
+        })?;
+        self.log.events.push(ReplayEvent::SetTasks(tasks));
+        Ok(())
     }
 
     /// Parallel [`VecEnv::reset_all`]: inputs are split by chunk and
@@ -154,35 +583,53 @@ impl ParVecEnv {
     /// land in `obs_out` in global env order.
     pub fn reset_all(&mut self, grids: &[Grid], rulesets: &[&Ruleset],
                      max_steps: &[i32], rngs: &[Rng],
-                     obs_out: &mut [i32]) {
+                     obs_out: &mut [i32]) -> Result<()> {
         assert_eq!(grids.len(), self.b, "need one base grid per env");
         assert_eq!(rulesets.len(), self.b, "need one ruleset per env");
         assert_eq!(max_steps.len(), self.b);
         assert_eq!(rngs.len(), self.b);
         assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
         let vv2 = self.vv2();
-        let mut tickets = Vec::with_capacity(self.ranges.len());
+        let owned_rulesets: Vec<Ruleset> =
+            rulesets.iter().map(|&r| r.clone()).collect();
+        let ranges = self.ranges.clone();
+        {
+            let grids = &grids;
+            let owned = &owned_rulesets;
+            let max_steps = &max_steps;
+            let rngs = &rngs;
+            let ranges = &ranges;
+            self.run_op("reset_all", move |c, bufs| {
+                let (lo, hi) = ranges[c];
+                let g: Vec<Grid> = grids[lo..hi].to_vec();
+                let rs: Vec<Ruleset> = owned[lo..hi].to_vec();
+                let ms: Vec<i32> = max_steps[lo..hi].to_vec();
+                let rg: Vec<Rng> = rngs[lo..hi].to_vec();
+                Box::new(move |w: &mut ChunkEnv| {
+                    let mut bufs = bufs;
+                    let refs: Vec<&Ruleset> = rs.iter().collect();
+                    w.venv.reset_all(&g, &refs, &ms, &rg, &mut bufs.obs);
+                    (bufs, ())
+                })
+            })?;
+        }
         for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let bufs = self.bufs[c].take().expect("chunk bufs in flight");
-            let g: Vec<Grid> = grids[lo..hi].to_vec();
-            let rs: Vec<Ruleset> =
-                rulesets[lo..hi].iter().map(|&r| r.clone()).collect();
-            let ms: Vec<i32> = max_steps[lo..hi].to_vec();
-            let rg: Vec<Rng> = rngs[lo..hi].to_vec();
-            tickets.push(self.pool.call(c, move |w| {
-                let mut bufs = bufs;
-                let refs: Vec<&Ruleset> = rs.iter().collect();
-                w.venv.reset_all(&g, &refs, &ms, &rg, &mut bufs.obs);
-                bufs
-            }));
-        }
-        for (c, ticket) in tickets.into_iter().enumerate() {
-            let bufs = ticket.wait();
-            let (lo, hi) = self.ranges[c];
+            let bufs = self.bufs[c].as_ref().unwrap();
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
-            self.bufs[c] = Some(bufs);
         }
+        // a reset is a full synchronization point: everything before it
+        // is dead state, so the log restarts here (tasks carry over)
+        self.log.base_tasks = self.log.effective_tasks();
+        self.log.base = ReplayBase::Reset {
+            grids: grids.to_vec(),
+            rulesets: owned_rulesets,
+            max_steps: max_steps.to_vec(),
+            rngs: rngs.to_vec(),
+        };
+        self.log.events.clear();
+        self.log.logged_steps = 0;
         self.seeded = true;
+        Ok(())
     }
 
     /// Parallel [`VecEnv::step_all`]: one dispatch per chunk, outputs
@@ -190,37 +637,48 @@ impl ParVecEnv {
     /// bitwise identical to the serial engine for any thread count.
     pub fn step_all(&mut self, actions: &[i32], obs_out: &mut [i32],
                     rewards: &mut [f32], dones: &mut [bool],
-                    trial_dones: &mut [bool]) {
+                    trial_dones: &mut [bool]) -> Result<()> {
         assert_eq!(actions.len(), self.b, "need one action per env");
         assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
         assert_eq!(rewards.len(), self.b);
         assert_eq!(dones.len(), self.b);
         assert_eq!(trial_dones.len(), self.b);
         let vv2 = self.vv2();
-        let mut tickets = Vec::with_capacity(self.ranges.len());
-        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let mut bufs =
-                self.bufs[c].take().expect("chunk bufs in flight");
-            bufs.actions.clear();
-            bufs.actions.extend_from_slice(&actions[lo..hi]);
-            tickets.push(self.pool.call(c, move |w| {
-                let mut bufs = bufs;
-                let ChunkBufs {
-                    actions, obs, rewards, dones, trials, ..
-                } = &mut bufs;
-                w.venv.step_all(actions, obs, rewards, dones, trials);
-                bufs
-            }));
+        let step_idx = self.steps_done;
+        let ranges = self.ranges.clone();
+        {
+            let actions = &actions;
+            let ranges = &ranges;
+            self.run_op("step_all", move |c, mut bufs| {
+                let (lo, hi) = ranges[c];
+                bufs.actions.clear();
+                bufs.actions.extend_from_slice(&actions[lo..hi]);
+                Box::new(move |w: &mut ChunkEnv| {
+                    w.maybe_fault(step_idx);
+                    let mut bufs = bufs;
+                    let ChunkBufs {
+                        actions, obs, rewards, dones, trials, ..
+                    } = &mut bufs;
+                    w.venv.step_all(actions, obs, rewards, dones, trials);
+                    (bufs, ())
+                })
+            })?;
         }
-        for (c, ticket) in tickets.into_iter().enumerate() {
-            let bufs = ticket.wait();
-            let (lo, hi) = self.ranges[c];
+        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
+            let bufs = self.bufs[c].as_ref().unwrap();
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
             rewards[lo..hi].copy_from_slice(&bufs.rewards);
             dones[lo..hi].copy_from_slice(&bufs.dones);
             trial_dones[lo..hi].copy_from_slice(&bufs.trials);
-            self.bufs[c] = Some(bufs);
         }
+        self.log.events.push(ReplayEvent::Steps {
+            start: step_idx,
+            t: 1,
+            actions: actions.to_vec(),
+        });
+        self.log.logged_steps += 1;
+        self.steps_done += 1;
+        self.maybe_compact()
     }
 
     /// Fused random-policy rollout: `t` steps per env with actions drawn
@@ -233,59 +691,81 @@ impl ParVecEnv {
     /// ascending env order here — so the result is bit-identical for
     /// every thread count.
     pub fn rollout(&mut self, t: usize, rng: &mut Rng)
-                   -> (f64, u64, u64) {
+                   -> Result<(f64, u64, u64)> {
         let b = self.b;
         self.act_scratch.resize(t * b, 0);
         for a in self.act_scratch.iter_mut() {
             *a = rng.below(NUM_ACTIONS) as i32;
         }
-        let acts = &self.act_scratch;
-        let mut tickets = Vec::with_capacity(self.ranges.len());
-        for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let cb = hi - lo;
-            let mut bufs =
-                self.bufs[c].take().expect("chunk bufs in flight");
-            bufs.actions.clear();
+        let start = self.steps_done;
+        // step-major per-chunk slabs, rebuilt fresh for any re-dispatch
+        // (the original slab rode into the dead worker)
+        let mut slabs: Vec<Vec<i32>> =
+            Vec::with_capacity(self.ranges.len());
+        for &(lo, hi) in &self.ranges {
+            let mut v = Vec::with_capacity(t * (hi - lo));
             for step in 0..t {
-                bufs.actions
-                    .extend_from_slice(&acts[step * b + lo..step * b + hi]);
+                v.extend_from_slice(
+                    &self.act_scratch[step * b + lo..step * b + hi],
+                );
             }
-            tickets.push(self.pool.call(c, move |w| {
-                let mut bufs = bufs;
-                bufs.reward_acc.iter_mut().for_each(|x| *x = 0.0);
-                let mut episodes = 0u64;
-                let mut trials = 0u64;
-                for step in 0..t {
-                    let ChunkBufs {
-                        actions, obs, rewards, dones, trials: tr,
-                        reward_acc,
-                    } = &mut bufs;
-                    let a = &actions[step * cb..(step + 1) * cb];
-                    w.venv.step_all(a, obs, rewards, dones, tr);
-                    for (acc, &r) in reward_acc.iter_mut().zip(&*rewards)
-                    {
-                        *acc += r as f64;
-                    }
-                    episodes +=
-                        dones.iter().filter(|&&d| d).count() as u64;
-                    trials += tr.iter().filter(|&&d| d).count() as u64;
-                }
-                (bufs, episodes, trials)
-            }));
+            slabs.push(v);
         }
+        let ranges = self.ranges.clone();
+        let per_chunk: Vec<(u64, u64)> = {
+            let slabs = &slabs;
+            let ranges = &ranges;
+            self.run_op("rollout", move |c, mut bufs| {
+                let (lo, hi) = ranges[c];
+                let cb = hi - lo;
+                bufs.actions.clear();
+                bufs.actions.extend_from_slice(&slabs[c]);
+                Box::new(move |w: &mut ChunkEnv| {
+                    let mut bufs = bufs;
+                    bufs.reward_acc.iter_mut().for_each(|x| *x = 0.0);
+                    let mut episodes = 0u64;
+                    let mut trials = 0u64;
+                    for step in 0..t {
+                        w.maybe_fault(start + step as u64);
+                        let ChunkBufs {
+                            actions, obs, rewards, dones, trials: tr,
+                            reward_acc,
+                        } = &mut bufs;
+                        let a = &actions[step * cb..(step + 1) * cb];
+                        w.venv.step_all(a, obs, rewards, dones, tr);
+                        for (acc, &r) in
+                            reward_acc.iter_mut().zip(&*rewards)
+                        {
+                            *acc += r as f64;
+                        }
+                        episodes +=
+                            dones.iter().filter(|&&d| d).count() as u64;
+                        trials +=
+                            tr.iter().filter(|&&d| d).count() as u64;
+                    }
+                    (bufs, (episodes, trials))
+                })
+            })?
+        };
         let mut reward_sum = 0.0f64;
         let mut episodes = 0u64;
         let mut trials = 0u64;
-        for (c, ticket) in tickets.into_iter().enumerate() {
-            let (bufs, ep, tr) = ticket.wait();
-            for &x in &bufs.reward_acc {
+        for (c, (ep, tr)) in per_chunk.into_iter().enumerate() {
+            for &x in &self.bufs[c].as_ref().unwrap().reward_acc {
                 reward_sum += x;
             }
             episodes += ep;
             trials += tr;
-            self.bufs[c] = Some(bufs);
         }
-        (reward_sum, episodes, trials)
+        self.log.events.push(ReplayEvent::Steps {
+            start,
+            t,
+            actions: self.act_scratch.clone(),
+        });
+        self.log.logged_steps += t;
+        self.steps_done += t as u64;
+        self.maybe_compact()?;
+        Ok((reward_sum, episodes, trials))
     }
 
     /// Copy the most recent observations (from the last `reset_all`,
@@ -303,15 +783,15 @@ impl ParVecEnv {
     /// Full-batch snapshot: per-chunk snapshots concatenated in chunk
     /// (= global env) order. Equal across thread counts iff the engines
     /// are bitwise-identical.
-    pub fn snapshot(&self) -> VecEnvSnapshot {
-        let chunks = self.pool.broadcast(|_, w: &mut ChunkEnv| {
-            w.venv.snapshot()
-        });
+    pub fn snapshot(&mut self) -> Result<VecEnvSnapshot> {
+        let chunks = self.run_op("snapshot", |_, bufs| {
+            Box::new(move |w: &mut ChunkEnv| (bufs, w.venv.snapshot()))
+        })?;
         let mut out = VecEnvSnapshot::empty();
         for s in chunks {
             out.append(s);
         }
-        out
+        Ok(out)
     }
 
     // --- unified-API surface (env::api::BatchEnvironment) ------------------
@@ -320,39 +800,48 @@ impl ParVecEnv {
     /// `rng` in *global* env order on the coordinator thread, then
     /// shipped to the chunk workers — bitwise identical to the serial
     /// engine for any thread count.
-    pub fn restart_all(&mut self, rng: &mut Rng, obs_out: &mut [i32]) {
+    pub fn restart_all(&mut self, rng: &mut Rng, obs_out: &mut [i32])
+                       -> Result<()> {
         assert_eq!(obs_out.len(), self.obs_len(), "obs buffer size");
         let vv2 = self.vv2();
         let rngs: Vec<Rng> = (0..self.b).map(|_| rng.split()).collect();
-        let mut tickets = Vec::with_capacity(self.ranges.len());
+        let ranges = self.ranges.clone();
+        {
+            let rngs = &rngs;
+            let ranges = &ranges;
+            self.run_op("restart_all", move |c, bufs| {
+                let (lo, hi) = ranges[c];
+                let rg: Vec<Rng> = rngs[lo..hi].to_vec();
+                Box::new(move |w: &mut ChunkEnv| {
+                    let mut bufs = bufs;
+                    for (j, r) in rg.into_iter().enumerate() {
+                        w.venv.restart_env_with(j, r, &mut bufs.obs);
+                    }
+                    (bufs, ())
+                })
+            })?;
+        }
         for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let bufs = self.bufs[c].take().expect("chunk bufs in flight");
-            let rg: Vec<Rng> = rngs[lo..hi].to_vec();
-            tickets.push(self.pool.call(c, move |w| {
-                let mut bufs = bufs;
-                for (j, r) in rg.into_iter().enumerate() {
-                    w.venv.restart_env_with(j, r, &mut bufs.obs);
-                }
-                bufs
-            }));
-        }
-        for (c, ticket) in tickets.into_iter().enumerate() {
-            let bufs = ticket.wait();
-            let (lo, hi) = self.ranges[c];
+            let bufs = self.bufs[c].as_ref().unwrap();
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
-            self.bufs[c] = Some(bufs);
         }
+        self.log.events.push(ReplayEvent::Restart(rngs));
+        Ok(())
     }
 
     /// Per-env agent facing directions, global env order (one
     /// synchronous broadcast round-trip).
     pub fn copy_agent_dirs_into(&self, out: &mut [i32]) {
         assert_eq!(out.len(), self.b, "direction buffer size");
-        let chunks = self.pool.broadcast(|_, w: &mut ChunkEnv| {
-            let mut v = vec![0i32; w.venv.batch()];
-            w.venv.copy_agent_dirs_into(&mut v);
-            v
-        });
+        let chunks = self
+            .pool
+            .broadcast(|_, w: &mut ChunkEnv| {
+                let mut v = vec![0i32; w.venv.batch()];
+                w.venv.copy_agent_dirs_into(&mut v);
+                v
+            })
+            .expect("chunk workers dead — a prior operation failed \
+                     and its error was ignored");
         for (c, chunk) in chunks.into_iter().enumerate() {
             let (lo, hi) = self.ranges[c];
             out[lo..hi].copy_from_slice(&chunk);
@@ -364,13 +853,17 @@ impl ParVecEnv {
     pub fn copy_task_rows_into(&self, out: &mut [i32]) {
         let row = GOAL_ENC + self.cfg.max_rules * RULE_ENC;
         assert_eq!(out.len(), self.b * row, "task row buffer size");
-        let chunks = self.pool.broadcast(|_, w: &mut ChunkEnv| {
-            let mr = w.venv.config().max_rules;
-            let mut v =
-                vec![0i32; w.venv.batch() * (GOAL_ENC + mr * RULE_ENC)];
-            w.venv.copy_task_rows_into(&mut v);
-            v
-        });
+        let chunks = self
+            .pool
+            .broadcast(|_, w: &mut ChunkEnv| {
+                let mr = w.venv.config().max_rules;
+                let mut v =
+                    vec![0i32; w.venv.batch() * (GOAL_ENC + mr * RULE_ENC)];
+                w.venv.copy_task_rows_into(&mut v);
+                v
+            })
+            .expect("chunk workers dead — a prior operation failed \
+                     and its error was ignored");
         for (c, chunk) in chunks.into_iter().enumerate() {
             let (lo, hi) = self.ranges[c];
             out[lo * row..hi * row].copy_from_slice(&chunk);
@@ -405,15 +898,13 @@ impl BatchEnvironment for ParVecEnv {
              tasks / step limits with reset_all once before the \
              trait-level reset restarts episodes"
         );
-        self.restart_all(rng, obs_out);
-        Ok(())
+        self.restart_all(rng, obs_out)
     }
 
     fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
             rewards: &mut [f32], dones: &mut [bool],
             trial_dones: &mut [bool]) -> Result<()> {
-        self.step_all(actions, obs_out, rewards, dones, trial_dones);
-        Ok(())
+        self.step_all(actions, obs_out, rewards, dones, trial_dones)
     }
 
     fn agent_dirs_into(&self, out: &mut [i32]) {
@@ -466,7 +957,7 @@ mod tests {
         let mut obs_s = vec![0i32; serial.obs_len()];
         let mut obs_p = vec![0i32; par.obs_len()];
         serial.reset_all(&grids, &refs, &maxs, &rngs, &mut obs_s);
-        par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs_p);
+        par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs_p).unwrap();
         assert_eq!(obs_s, obs_p, "reset obs");
 
         let mut rw_s = vec![0f32; b];
@@ -481,7 +972,8 @@ mod tests {
             serial.step_all(&actions, &mut obs_s, &mut rw_s, &mut dn_s,
                             &mut tr_s);
             par.step_all(&actions, &mut obs_p, &mut rw_p, &mut dn_p,
-                         &mut tr_p);
+                         &mut tr_p)
+                .unwrap();
             assert_eq!(obs_s, obs_p, "step {t}: obs");
             assert_eq!(rw_s.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
                        rw_p.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
@@ -489,7 +981,7 @@ mod tests {
             assert_eq!(dn_s, dn_p, "step {t}: dones");
             assert_eq!(tr_s, tr_p, "step {t}: trials");
         }
-        assert_eq!(serial.snapshot(), par.snapshot(),
+        assert_eq!(serial.snapshot(), par.snapshot().unwrap(),
                    "internal SoA buffers and RNG states");
     }
 
@@ -506,12 +998,13 @@ mod tests {
             let refs: Vec<&Ruleset> = (0..b).map(|_| &rs).collect();
             let mut par = ParVecEnv::new(cfg, b, threads);
             let mut obs = vec![0i32; par.obs_len()];
-            par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs);
+            par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs)
+                .unwrap();
             let mut rng = Rng::new(77);
-            let totals = par.rollout(12, &mut rng);
+            let totals = par.rollout(12, &mut rng).unwrap();
             par.copy_obs_into(&mut obs);
             (totals.0.to_bits(), totals.1, totals.2, obs,
-             par.snapshot())
+             par.snapshot().unwrap())
         };
         let one = run(1);
         assert_eq!(one, run(2));
@@ -527,5 +1020,64 @@ mod tests {
         assert_eq!(par.threads(), 2);
         assert_eq!(par.batch(), 2);
         assert_eq!(par.obs_len(), 2 * 5 * 5 * 2);
+    }
+
+    /// An injected worker panic mid-step recovers via respawn + replay
+    /// and the run stays bitwise-identical to an unfaulted one. (The
+    /// full site × thread-count matrix is `tests/fault_tolerance.rs`.)
+    #[test]
+    fn injected_panic_recovers_bitwise() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let b = 6usize;
+        let run = |faults: Arc<FaultPlan>| {
+            let (grids, rs, maxs, rngs) = reset_inputs(b);
+            let refs: Vec<&Ruleset> = (0..b).map(|_| &rs).collect();
+            let mut par = ParVecEnv::with_faults(
+                cfg, b, 2, faults, RetryPolicy {
+                    max_retries: 2,
+                    backoff_ms: 0,
+                });
+            let mut obs = vec![0i32; par.obs_len()];
+            par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs)
+                .unwrap();
+            let mut rng = Rng::new(9);
+            let totals = par.rollout(10, &mut rng).unwrap();
+            (totals.0.to_bits(), totals.1, totals.2,
+             par.snapshot().unwrap())
+        };
+        let clean = run(Arc::new(FaultPlan::none()));
+        let faulted = run(Arc::new(
+            FaultPlan::parse("panic@worker=1,step=4").unwrap(),
+        ));
+        assert_eq!(clean, faulted);
+    }
+
+    /// A permanently-broken worker (`count=*`) exhausts retries and
+    /// surfaces a clean error naming the worker — no hang, no abort.
+    #[test]
+    fn retries_exhausted_errors_cleanly() {
+        let opts = EnvOptions::default();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let b = 4usize;
+        let (grids, rs, maxs, rngs) = reset_inputs(b);
+        let refs: Vec<&Ruleset> = (0..b).map(|_| &rs).collect();
+        let faults = Arc::new(
+            FaultPlan::parse("panic@worker=0,step=2,count=*").unwrap(),
+        );
+        let mut par = ParVecEnv::with_faults(
+            cfg, b, 2, faults, RetryPolicy {
+                max_retries: 1,
+                backoff_ms: 0,
+            });
+        let mut obs = vec![0i32; par.obs_len()];
+        par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs).unwrap();
+        let mut rng = Rng::new(9);
+        let err = par.rollout(8, &mut rng).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chunk worker 0"), "{msg}");
+        assert!(msg.contains("rollout"), "{msg}");
     }
 }

@@ -279,6 +279,67 @@ impl VecEnv {
         }
     }
 
+    /// Install a captured [`VecEnvSnapshot`], the inverse of
+    /// [`VecEnv::snapshot`]: afterwards this engine is bitwise-identical
+    /// to the one the snapshot was taken from (same buffers, same RNG
+    /// positions), so stepping it replays the original run exactly. The
+    /// reset-derived caches the snapshot deliberately omits (free-cell
+    /// lists, live rule counts) are recomputed here from the captured
+    /// buffers. The installed task source is kept — snapshots carry
+    /// state, not the task distribution. This is the recovery primitive:
+    /// a supervisor restores a respawned chunk worker from the last
+    /// synchronization point and replays the logged actions.
+    pub fn restore(&mut self, snap: &VecEnvSnapshot) {
+        let ghw = self.cfg.h * self.cfg.w;
+        let mr = self.cfg.max_rules;
+        assert_eq!(snap.base.len(), self.b * ghw, "snapshot batch size");
+        assert_eq!(snap.grid.len(), self.b * ghw);
+        assert_eq!(snap.rules.len(), self.b * mr);
+        assert_eq!(snap.init.len(), self.b * self.cfg.max_init);
+        assert_eq!(snap.rng_states.len(), self.b);
+        for (dst, &src) in self.base.iter_mut().zip(&snap.base) {
+            *dst = PackedCell::pack(src);
+        }
+        for (dst, &src) in self.grid.iter_mut().zip(&snap.grid) {
+            *dst = PackedCell::pack(src);
+        }
+        self.agent_pos.copy_from_slice(&snap.agent_pos);
+        self.agent_dir.copy_from_slice(&snap.agent_dir);
+        self.pocket.copy_from_slice(&snap.pocket);
+        self.rules.copy_from_slice(&snap.rules);
+        self.goals.copy_from_slice(&snap.goals);
+        self.init.copy_from_slice(&snap.init);
+        self.init_len.copy_from_slice(&snap.init_len);
+        self.step_count.copy_from_slice(&snap.step_count);
+        self.max_steps.copy_from_slice(&snap.max_steps);
+        for (rng, &s) in self.rngs.iter_mut().zip(&snap.rng_states) {
+            *rng = Rng::from_state(s);
+        }
+        // recompute the reset-derived caches exactly as reset_env /
+        // encode_task build them: the free-cell list is the base grid's
+        // row-major TILE_FLOOR scan, the live rule count is the length
+        // of the non-EMPTY prefix (encode packs live rows first and
+        // pads with Rule::EMPTY)
+        for i in 0..self.b {
+            let g0 = i * ghw;
+            let mut fl = 0usize;
+            for p in 0..ghw {
+                if self.base[g0 + p].tile() == TILE_FLOOR {
+                    self.free_base[g0 + fl] = p as u32;
+                    fl += 1;
+                }
+            }
+            self.free_len[i] = fl as u32;
+            let r0 = i * mr;
+            let rl = self.rules[r0..r0 + mr]
+                .iter()
+                .take_while(|r| **r != Rule::EMPTY)
+                .count();
+            self.rules_len[i] = rl as u32;
+        }
+        self.seeded = true;
+    }
+
     /// Start a fresh episode in every env slot. Mirrors the scalar
     /// `state::reset` per slot: env `i` consumes `rngs[i]` exactly like
     /// the oracle consumes its reset RNG, then keeps it as its stream.
@@ -756,6 +817,67 @@ mod tests {
         assert!(goals_after_reset.len() >= 2,
                 "10 episode boundaries never changed the task table — \
                  stale-task auto-reset is back");
+    }
+
+    /// snapshot → restore into a *fresh* engine → both continue
+    /// bitwise-identically (obs, rewards, dones, and final state). This
+    /// is the invariant worker recovery stands on: a respawned chunk
+    /// restored from the last sync point replays the original run.
+    #[test]
+    fn restore_resumes_bitwise_identically() {
+        let opts = EnvOptions::default();
+        let tasks: Vec<Ruleset> = (0..4)
+            .map(|k| Ruleset {
+                goal: Goal::agent_hold(Cell::new(TILE_BALL, 3 + k)),
+                rules: vec![],
+                init_tiles: vec![Cell::new(TILE_BALL, 3 + k)],
+            })
+            .collect();
+        let cfg = VecEnvConfig { h: 9, w: 9, max_rules: 1, max_init: 1,
+                                 opts };
+        let b = 3;
+        let mut venv = VecEnv::new(cfg, b);
+        venv.set_task_source(Arc::new(tasks.clone()));
+        let grids: Vec<Grid> =
+            (0..b).map(|_| Grid::empty_room(9, 9)).collect();
+        let refs: Vec<&Ruleset> = (0..b).map(|_| &tasks[0]).collect();
+        let rngs: Vec<Rng> =
+            (0..b).map(|i| Rng::new(40 + i as u64)).collect();
+        let mut obs = vec![0i32; venv.obs_len()];
+        venv.reset_all(&grids, &refs, &[5, 5, 5], &rngs, &mut obs);
+
+        let mut rewards = vec![0f32; b];
+        let mut dones = vec![false; b];
+        let mut trials = vec![false; b];
+        // advance past several trial/episode boundaries
+        for t in 0..17 {
+            let a = vec![(t % 6) as i32; b];
+            venv.step_all(&a, &mut obs, &mut rewards, &mut dones,
+                          &mut trials);
+        }
+        let snap = venv.snapshot();
+
+        let mut fresh = VecEnv::new(cfg, b);
+        fresh.set_task_source(Arc::new(tasks));
+        fresh.restore(&snap);
+        assert_eq!(fresh.snapshot(), snap, "restore must round-trip");
+
+        let mut obs2 = vec![0i32; fresh.obs_len()];
+        let mut rewards2 = vec![0f32; b];
+        let mut dones2 = vec![false; b];
+        let mut trials2 = vec![false; b];
+        for t in 0..23 {
+            let a = vec![((t * 5) % 6) as i32; b];
+            venv.step_all(&a, &mut obs, &mut rewards, &mut dones,
+                          &mut trials);
+            fresh.step_all(&a, &mut obs2, &mut rewards2, &mut dones2,
+                           &mut trials2);
+            assert_eq!(obs, obs2, "step {t}: obs");
+            assert_eq!(rewards, rewards2, "step {t}: rewards");
+            assert_eq!(dones, dones2, "step {t}: dones");
+            assert_eq!(trials, trials2, "step {t}: trial dones");
+        }
+        assert_eq!(venv.snapshot(), fresh.snapshot());
     }
 
     #[test]

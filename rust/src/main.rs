@@ -12,6 +12,7 @@
 //!   train           RL² PPO training (Fig. 6/7 harness; --shards N runs
 //!                   the data-parallel shard engine)
 //!   eval            evaluation protocol on a benchmark
+//!   verify          benchmark store integrity check
 //!   validate        Rust-oracle vs HLO cross-check
 //!   artifacts       list manifest artifacts
 //!   help            global or per-command usage
@@ -28,13 +29,15 @@ use anyhow::{bail, Context, Result};
 use xmgrid::benchgen::store::{data_dir, load_benchmark_with,
                               size_suffix_name};
 use xmgrid::benchgen::{generate_benchmark, generate_benchmark_with,
-                       BenchmarkWriter, Preset, TaskSlice};
+                       verify_file, BenchmarkWriter, Preset, TaskSlice};
 use xmgrid::coordinator::metrics::{fmt_sps, CsvLog, ThroughputMeter};
 use xmgrid::coordinator::pool::EnvFamily;
-use xmgrid::coordinator::{eval_kshot, BackendKind, EvalPolicy,
-                          KShotConfig, NativeEnvConfig, Overlap,
-                          RolloutEngine, ShardConfig, ShardedTrainer,
-                          TrainConfig, Trainer};
+use xmgrid::coordinator::{eval_kshot, load_checkpoint, BackendKind,
+                          CheckpointPlan, EvalPolicy, KShotConfig,
+                          NativeEnvConfig, Overlap, RolloutEngine,
+                          ShardConfig, ShardedTrainer, TrainConfig,
+                          Trainer};
+use xmgrid::util::fault::{FaultPlan, RetryPolicy, FAULTS_ENV};
 use xmgrid::util::bench::{json_arg_path, JsonReport};
 use xmgrid::env::api::{EnvParams, ObsMode};
 use xmgrid::env::registry;
@@ -80,8 +83,24 @@ fn shard_config(args: &Args) -> Result<ShardConfig> {
     })
 }
 
+/// `--max-retries` / `--retry-backoff-ms` → chunk-worker retry policy
+/// (native backend supervision: a panicked chunk worker is respawned
+/// and its chunk deterministically replayed up to this many times).
+fn retry_policy(args: &Args) -> RetryPolicy {
+    let d = RetryPolicy::default();
+    RetryPolicy {
+        max_retries: args.usize_or("max-retries",
+                                   d.max_retries as usize) as u32,
+        backoff_ms: args.u64_or("retry-backoff-ms", d.backoff_ms),
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // Validate the fault-injection plan up front: a malformed XMG_FAULTS
+    // must be a clean CLI error here, not a panic inside a worker pool.
+    FaultPlan::from_env()
+        .with_context(|| format!("invalid {FAULTS_ENV}"))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "envs" => cmd_envs(&args),
@@ -91,6 +110,7 @@ fn main() -> Result<()> {
         "rollout" => cmd_rollout(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "verify" => cmd_verify(&args),
         "validate" => cmd_validate(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" => cmd_help(&args),
@@ -122,11 +142,22 @@ commands:
   eval --benchmark B [--shots K]      k-shot evaluation on a held-out
        [--policy random|greedy]       split (per-trial return curves,
                                       BENCH_eval JSON via --json)
+  verify --benchmark B                integrity-check a stored benchmark
+                                      (magic, count, per-task decode,
+                                      duplicate detection)
   validate                            oracle cross-check
   artifacts                           list manifest
 
 global options:
-  --artifacts-dir DIR   AOT artifact directory (default: artifacts)";
+  --artifacts-dir DIR   AOT artifact directory (default: artifacts)
+
+fault tolerance:
+  Native-backend chunk workers run supervised: a panicking worker is
+  respawned and its chunk replayed deterministically (--max-retries,
+  --retry-backoff-ms on rollout). train --checkpoint-every N writes
+  atomic crash-safe checkpoints; train --resume continues bit for bit.
+  XMG_FAULTS (e.g. 'panic@worker=2,step=17') injects deterministic
+  faults for testing — see docs/ARCHITECTURE.md.";
 
 /// Per-command option documentation for `xmgrid help <cmd>`.
 fn command_help(cmd: &str) -> Option<&'static str> {
@@ -250,13 +281,19 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
   --seed S           run seed; shard k derives stream shard_seed(S, k)
                      (default: 0)
   --rooms R          rooms in the base grid layout — xla backend; the
-                     native backend takes rooms from --env (default: 1)",
+                     native backend takes rooms from --env (default: 1)
+  --max-retries N    native backend: times a panicked chunk worker is
+                     respawned and its chunk deterministically replayed
+                     before the run fails cleanly (default: 2)
+  --retry-backoff-ms M  linear backoff between retries: attempt k sleeps
+                     k*M ms (default: 50)",
         "train" => "\
 usage: xmgrid train [--benchmark NAME] [--iters N] [--batch B]
                     [--artifact NAME] [--shards K] [--threads T|auto]
                     [--overlap on|off] [--seed S] [--resample I]
                     [--eval-every E] [--rooms R] [--log PATH]
-                    [--obs symbolic] [--artifacts-dir DIR]
+                    [--checkpoint PATH] [--checkpoint-every N]
+                    [--resume] [--obs symbolic] [--artifacts-dir DIR]
 
 RL² PPO training over fused train_iter artifacts. With --shards > 1 the
 data-parallel shard engine runs one full trainer replica per shard and
@@ -284,6 +321,20 @@ all-reduces parameter updates on the host in fixed shard order.
   --rooms R          rooms in the base grid layout (default: 1)
   --log PATH         CSV metrics path
                      (default: artifacts/train_log.csv)
+  --checkpoint PATH  crash-safe checkpoint path
+                     (default: artifacts/train_ckpt.bin)
+  --checkpoint-every N  write an atomic checkpoint (master params, every
+                     shard's learner + env state, all RNG streams) every
+                     N iterations. Checkpoint boundaries are pipeline
+                     sync points, so the cadence is part of the run's
+                     schedule: same seed + shards + cadence => same run.
+                     (default: 0 = off). Uses the shard-engine path even
+                     with --shards 1.
+  --resume           restore --checkpoint and continue toward --iters
+                     (a total, not an increment), reproducing the
+                     uninterrupted run bit for bit; CSV rows append to
+                     --log. Missing or torn checkpoints are a clean
+                     error.
   --obs MODE         must be `symbolic`: the train_iter artifacts are
                      lowered against the symbolic ObsSpec (other
                      stacks error with a pointer to aot.py)",
@@ -324,6 +375,19 @@ scripts/compare_bench.py diffs).
                      (default: 0)
   --json [PATH]      write BENCH_eval_native.json (or PATH)
   --rooms R          rooms — artifact policy only (default: 1)",
+        "verify" => "\
+usage: xmgrid verify --benchmark NAME | --file PATH
+
+Integrity-check a stored benchmark end to end: gzip stream, XMG1 magic,
+header count vs decoded rulesets, per-task decode (errors name the task
+index and byte offset), trailing garbage, and duplicate rulesets (the
+store promises unique tasks). Exits non-zero on any defect.
+
+  --benchmark NAME   check <data-dir>/NAME.xmg.gz (the same resolution
+                     other commands use; $XLAND_MINIGRID_DATA overrides
+                     the data dir). The file must already exist — verify
+                     never generates.
+  --file PATH        check an explicit store file instead",
         "validate" => "\
 usage: xmgrid validate [--artifacts-dir DIR]
 
@@ -569,7 +633,8 @@ fn cmd_rollout(args: &Args) -> Result<()> {
             args.str_or("env", "XLand-MiniGrid-R1-13x13");
         let t = args.usize_or("steps", 64);
         let ncfg = NativeEnvConfig::for_env(&env_name, batch, t, &bench)?
-            .with_threads(threads);
+            .with_threads(threads)
+            .with_retry(retry_policy(args));
         println!(
             "backend native: {env_name} (B={batch} T={t} grid {}x{} \
              rooms {}) shards={} threads={} overlap={} obs={obs_mode}",
@@ -641,7 +706,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         c.seed = args.u64_or("seed", TrainConfig::default().train_seed);
         c
     };
-    if scfg.shards > 1 {
+    // Checkpointing and resume live in the shard-engine path (the
+    // checkpoint format captures per-shard replica states); route there
+    // even for one shard when either is requested.
+    if scfg.shards > 1 || args.flag("resume")
+        || args.usize_or("checkpoint-every", 0) > 0
+    {
         return cmd_train_sharded(args, scfg);
     }
     let rt = Runtime::new(&artifacts_dir(args))?;
@@ -750,15 +820,48 @@ fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
     let mut engine = ShardedTrainer::launch(dir, artifact, bench, scfg,
                                             cfg)?;
 
+    let ckpt_path = PathBuf::from(
+        args.str_or("checkpoint", "artifacts/train_ckpt.bin"));
+    let resume = args.flag("resume");
+    if resume {
+        let ckpt = load_checkpoint(&ckpt_path).context(
+            "cannot resume (re-run without --resume to start fresh)")?;
+        engine.restore(&ckpt)?;
+        println!("resumed from {ckpt_path:?} at iteration {}",
+                 engine.iters_done);
+    }
+    let ckpt_every = args.usize_or("checkpoint-every", 0);
+    if ckpt_every > 0 {
+        engine.checkpoint = Some(CheckpointPlan {
+            path: ckpt_path.clone(),
+            every: ckpt_every,
+            faults: Arc::new(FaultPlan::from_env()?),
+        });
+        println!("checkpointing to {ckpt_path:?} every {ckpt_every} \
+                  iteration(s)");
+    }
+
     let csv_path = PathBuf::from(
         args.str_or("log", "artifacts/train_log.csv"));
-    let mut log = CsvLog::create(&csv_path, &[
+    let header = [
         "iter", "env_steps", "loss", "pi_loss", "v_loss", "entropy",
         "approx_kl", "reward_per_step", "trials", "sps",
-    ])?;
+    ];
+    let mut log = if resume {
+        CsvLog::append(&csv_path, &header)?
+    } else {
+        CsvLog::create(&csv_path, &header)?
+    };
 
     let mut meter = ThroughputMeter::new();
-    let mut done = 0usize;
+    // --iters is the run's total; on resume, only the remainder runs.
+    let mut done = engine.iters_done;
+    if done >= iters {
+        println!("checkpoint already at iteration {done} >= --iters \
+                  {iters}; nothing to do");
+        return Ok(());
+    }
+    let base_steps = engine.steps_per_iter() * done as u64;
     while done < iters {
         let n = if eval_every > 0 {
             eval_every.min(iters - done)
@@ -769,7 +872,7 @@ fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
             meter.add(m.env_steps);
             let sps = meter.sps();
             log.row(&[
-                i.to_string(), meter.steps().to_string(),
+                i.to_string(), (base_steps + meter.steps()).to_string(),
                 format!("{:.4}", m.total_loss),
                 format!("{:.4}", m.pi_loss),
                 format!("{:.4}", m.v_loss),
@@ -783,7 +886,7 @@ fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
                 println!(
                     "iter {i:>4} steps {:>9} loss {:+.4} ent {:.3} \
                      r/step {:.4} trials {:>5} sps {}",
-                    meter.steps(), m.total_loss, m.entropy,
+                    base_steps + meter.steps(), m.total_loss, m.entropy,
                     m.reward_sum / m.env_steps as f32, m.trials,
                     fmt_sps(sps)
                 );
@@ -1010,6 +1113,33 @@ fn cmd_eval_artifact(args: &Args) -> Result<()> {
          | per-trial P20 {:.3} | trials/task {:.1} | tasks {}",
         bench.name, st.return_mean, st.return_p20, st.per_trial_mean,
         st.per_trial_p20, st.trials_mean, st.num_tasks
+    );
+    Ok(())
+}
+
+/// `xmgrid verify`: benchmark store integrity check (satellite of the
+/// fault-tolerance work — a corrupted task store should fail loudly and
+/// diagnosably, not train on garbage).
+fn cmd_verify(args: &Args) -> Result<()> {
+    let path = match (args.get("file"), args.get("benchmark")) {
+        (Some(f), _) => PathBuf::from(f),
+        (None, Some(name)) => {
+            data_dir().join(format!("{name}.xmg.gz"))
+        }
+        (None, None) => {
+            bail!("verify needs --benchmark NAME or --file PATH \
+                   (see `xmgrid help verify`)")
+        }
+    };
+    if !path.exists() {
+        bail!("{path:?} does not exist — verify checks an existing \
+               store file and never generates one");
+    }
+    let report = verify_file(&path)?;
+    println!(
+        "{path:?}: OK — {} unique tasks, {} bytes raw, {} bytes \
+         compressed",
+        report.tasks, report.raw_bytes, report.compressed_bytes
     );
     Ok(())
 }

@@ -1,0 +1,301 @@
+//! Deterministic fault-injection harness.
+//!
+//! A [`FaultPlan`] is a small parsed schedule of failures that the worker
+//! pools and the checkpoint writer consult at well-defined sites. It lets
+//! the fault-tolerance tests (and CI) *prove* the recovery paths — a
+//! worker panic at a named step, a torn checkpoint at a named iteration —
+//! instead of hoping they work.
+//!
+//! Grammar (`;`-separated entries, parsed from the `XMG_FAULTS` env var
+//! or an explicit string):
+//!
+//! ```text
+//! panic@worker=W,step=S[,count=N|*]     chunk worker W panics when it
+//!                                       executes global step index S
+//! panic@shard=K,round=R[,count=N|*]     shard worker K panics in
+//!                                       collection round R
+//! torn-checkpoint@iter=I                checkpoint at iteration I is
+//!                                       written torn (truncated, at the
+//!                                       final path) instead of atomically
+//! ```
+//!
+//! Every entry carries a *consumption budget* (default 1): once it has
+//! fired `count` times it goes inert. One-shot semantics are what make
+//! recovery testable — the supervisor's deterministic replay of the same
+//! step must NOT re-trigger the same fault, while `count=*` (infinite)
+//! expresses "this worker is permanently broken" for retries-exhausted
+//! tests.
+//!
+//! Matching is by deterministic coordinates (worker id + global step
+//! index, shard id + round, iteration) so a plan fires at the same
+//! logical point for any thread count and any interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable holding the fault plan for CLI runs.
+pub const FAULTS_ENV: &str = "XMG_FAULTS";
+
+const INFINITE: u64 = u64::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Site {
+    /// `panic@worker=W,step=S` — chunk worker W at global env-step S.
+    ChunkStep { worker: usize, step: u64 },
+    /// `panic@shard=K,round=R` — shard worker K at collection round R.
+    ShardRound { shard: usize, round: u64 },
+    /// `torn-checkpoint@iter=I` — checkpoint write at iteration I.
+    TornCheckpoint { iter: u64 },
+}
+
+#[derive(Debug)]
+struct Entry {
+    site: Site,
+    /// Remaining firings; decremented atomically so concurrent workers
+    /// racing on the same entry consume it exactly `count` times.
+    remaining: AtomicU64,
+}
+
+/// A parsed, consumable schedule of injected failures. Shared across
+/// worker threads behind an `Arc`; an empty plan is free to consult.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<Entry>,
+}
+
+impl FaultPlan {
+    /// The empty plan: nothing ever fires.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parse a plan string (the `XMG_FAULTS` grammar above).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for raw in spec.split(';') {
+            let part = raw.trim();
+            if part.is_empty() {
+                continue;
+            }
+            entries.push(
+                parse_entry(part)
+                    .with_context(|| format!("fault entry `{part}`"))?,
+            );
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// Read the plan from `XMG_FAULTS`; unset or empty means no faults.
+    /// A malformed value is an error (silently ignoring a typo'd fault
+    /// plan would make a failing injection test look like a pass).
+    pub fn from_env() -> Result<FaultPlan> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec)
+                .with_context(|| format!("parsing ${FAULTS_ENV}")),
+            _ => Ok(FaultPlan::none()),
+        }
+    }
+
+    /// Should chunk worker `worker` panic while executing global step
+    /// index `step`? Consumes one firing on a hit.
+    pub fn chunk_step_panic(&self, worker: usize, step: u64) -> bool {
+        self.fire(Site::ChunkStep { worker, step })
+    }
+
+    /// Should shard worker `shard` panic in collection round `round`?
+    pub fn shard_round_panic(&self, shard: usize, round: u64) -> bool {
+        self.fire(Site::ShardRound { shard, round })
+    }
+
+    /// Should the checkpoint at iteration `iter` be written torn?
+    pub fn torn_checkpoint(&self, iter: u64) -> bool {
+        self.fire(Site::TornCheckpoint { iter })
+    }
+
+    fn fire(&self, site: Site) -> bool {
+        for e in &self.entries {
+            if e.site != site {
+                continue;
+            }
+            // Decrement-if-positive; INFINITE never decrements.
+            loop {
+                let cur = e.remaining.load(Ordering::Relaxed);
+                if cur == 0 {
+                    break;
+                }
+                if cur == INFINITE {
+                    return true;
+                }
+                if e.remaining
+                    .compare_exchange(
+                        cur,
+                        cur - 1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+fn parse_entry(part: &str) -> Result<Entry> {
+    let (kind, rest) = part
+        .split_once('@')
+        .context("expected `<kind>@<key>=<val>,...`")?;
+    let mut keys: Vec<(&str, &str)> = Vec::new();
+    let mut count = 1u64;
+    for kv in rest.split(',') {
+        let (k, v) = kv
+            .trim()
+            .split_once('=')
+            .with_context(|| format!("expected `key=value`, got `{kv}`"))?;
+        let (k, v) = (k.trim(), v.trim());
+        if k == "count" {
+            count = if v == "*" {
+                INFINITE
+            } else {
+                parse_u64(v).context("count")?
+            };
+        } else {
+            keys.push((k, v));
+        }
+    }
+    keys.sort_by_key(|&(k, _)| k);
+    let site = match kind.trim() {
+        "panic" => match keys.as_slice() {
+            [("step", s), ("worker", w)] => Site::ChunkStep {
+                worker: parse_u64(w).context("worker")? as usize,
+                step: parse_u64(s).context("step")?,
+            },
+            [("round", r), ("shard", k)] => Site::ShardRound {
+                shard: parse_u64(k).context("shard")? as usize,
+                round: parse_u64(r).context("round")?,
+            },
+            _ => bail!(
+                "panic@ needs `worker=W,step=S` or `shard=K,round=R`"
+            ),
+        },
+        "torn-checkpoint" => match keys.as_slice() {
+            [("iter", i)] => Site::TornCheckpoint {
+                iter: parse_u64(i).context("iter")?,
+            },
+            _ => bail!("torn-checkpoint@ needs `iter=I`"),
+        },
+        other => bail!(
+            "unknown fault kind `{other}` \
+             (expected `panic` or `torn-checkpoint`)"
+        ),
+    };
+    if count == 0 {
+        bail!("count=0 would never fire");
+    }
+    Ok(Entry { site, remaining: AtomicU64::new(count) })
+}
+
+fn parse_u64(v: &str) -> Result<u64> {
+    v.parse::<u64>()
+        .with_context(|| format!("`{v}` is not a non-negative integer"))
+}
+
+/// Bounded retry-with-backoff policy for supervised worker recovery.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Respawn attempts per failed job before giving up (0 = fail on
+    /// the first worker death).
+    pub max_retries: u32,
+    /// Sleep before the k-th respawn: `backoff_ms * k` (linear).
+    pub backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff_ms: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep for the `attempt`-th retry (1-based). No-op at 0 backoff.
+    pub fn sleep(&self, attempt: u32) {
+        let ms = self.backoff_ms.saturating_mul(attempt as u64);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_worker_step_panic() {
+        let p = FaultPlan::parse("panic@worker=2,step=17").unwrap();
+        assert!(!p.is_empty());
+        assert!(!p.chunk_step_panic(1, 17));
+        assert!(!p.chunk_step_panic(2, 16));
+        assert!(p.chunk_step_panic(2, 17));
+        // one-shot: a deterministic replay of the same step is clean
+        assert!(!p.chunk_step_panic(2, 17));
+    }
+
+    #[test]
+    fn parses_multi_entry_and_shard_round() {
+        let p = FaultPlan::parse(
+            "panic@worker=0,step=3; panic@shard=1,round=2;\
+             torn-checkpoint@iter=4",
+        )
+        .unwrap();
+        assert!(p.chunk_step_panic(0, 3));
+        assert!(p.shard_round_panic(1, 2));
+        assert!(!p.shard_round_panic(1, 3));
+        assert!(p.torn_checkpoint(4));
+        assert!(!p.torn_checkpoint(4));
+    }
+
+    #[test]
+    fn count_budget_and_infinite() {
+        let p = FaultPlan::parse("panic@worker=1,step=5,count=2").unwrap();
+        assert!(p.chunk_step_panic(1, 5));
+        assert!(p.chunk_step_panic(1, 5));
+        assert!(!p.chunk_step_panic(1, 5));
+
+        let q = FaultPlan::parse("panic@worker=1,step=5,count=*").unwrap();
+        for _ in 0..10 {
+            assert!(q.chunk_step_panic(1, 5));
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        for bad in [
+            "panic@worker=2",
+            "panic@step=17,worker=2,extra=1",
+            "explode@worker=1,step=2",
+            "torn-checkpoint@step=3",
+            "panic@worker=x,step=1",
+            "panic@worker=1,step=2,count=0",
+            "panic",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(!p.chunk_step_panic(0, 0));
+        assert!(!p.shard_round_panic(0, 0));
+        assert!(!p.torn_checkpoint(0));
+    }
+}

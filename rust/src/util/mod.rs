@@ -3,6 +3,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod fault;
 pub mod rng;
 pub mod stats;
 

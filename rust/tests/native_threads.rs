@@ -102,10 +102,11 @@ fn assert_thread_parity(name: &str, b: usize, steps: usize, seed: u64,
         .map(|&t| {
             let mut p = ParVecEnv::new(cfg, b, t);
             if let Some(s) = &source {
-                p.set_task_source(dyn_source(s));
+                p.set_task_source(dyn_source(s)).unwrap();
             }
             let mut obs = vec![0i32; p.obs_len()];
-            p.reset_all(&grids, &rs_refs, &maxs, &rngs, &mut obs);
+            p.reset_all(&grids, &rs_refs, &maxs, &rngs, &mut obs)
+                .unwrap();
             assert_eq!(obs, obs_s, "{name}: reset obs, {t} threads");
             p
         })
@@ -149,7 +150,8 @@ fn assert_thread_parity(name: &str, b: usize, steps: usize, seed: u64,
         }
         for (k, p) in pars.iter_mut().enumerate() {
             p.step_all(&actions, &mut obs_p, &mut rw_p, &mut dn_p,
-                       &mut tr_p);
+                       &mut tr_p)
+                .unwrap();
             let threads = thread_counts[k];
             assert_eq!(obs_s, obs_p,
                        "{name} step {t}: obs, {threads} threads");
@@ -167,8 +169,8 @@ fn assert_thread_parity(name: &str, b: usize, steps: usize, seed: u64,
     assert!(boundaries > 0,
             "{name}: run never crossed an episode boundary");
     let reference = serial.snapshot();
-    for (k, p) in pars.iter().enumerate() {
-        assert_eq!(reference, p.snapshot(),
+    for (k, p) in pars.iter_mut().enumerate() {
+        assert_eq!(reference, p.snapshot().unwrap(),
                    "{name}: internal SoA buffers / RNG states, \
                     {} threads", thread_counts[k]);
     }
@@ -216,10 +218,10 @@ fn native_pool_resamples_tasks_and_is_thread_invariant() {
             .with_threads(threads);
         let mut pool = NativePool::new(cfg);
         let mut rng = Rng::new(5);
-        pool.reset(&bench, &mut rng);
+        pool.reset(&bench, &mut rng).unwrap();
         let mut totals = (0.0f64, 0u64, 0u64);
         for _ in 0..20 {
-            let (r, e, t) = pool.rollout(16, &mut rng);
+            let (r, e, t) = pool.rollout(16, &mut rng).unwrap();
             totals.0 += r;
             totals.1 += e;
             totals.2 += t;

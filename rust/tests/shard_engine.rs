@@ -46,7 +46,8 @@ fn collect_lockstep(shards: usize, rounds: usize, seed: u64)
     let pool = spawn_mock(shards, seed);
     let mut out = vec![Vec::new(); shards];
     for _ in 0..rounds {
-        for (i, v) in pool.broadcast(|_, w| w.chunk()).into_iter()
+        for (i, v) in pool.broadcast(|_, w| w.chunk()).unwrap()
+            .into_iter()
             .enumerate()
         {
             out[i].push(v);
@@ -67,7 +68,8 @@ fn collect_pipelined(shards: usize, rounds: usize, seed: u64)
         let tx = tx.clone();
         pool.submit(shard, move |w| {
             let _ = tx.send((shard, w.chunk()));
-        });
+        })
+        .unwrap();
     };
     for shard in 0..shards {
         for _ in 0..PIPELINE_DEPTH.min(rounds) {
@@ -161,7 +163,8 @@ fn straggler_does_not_corrupt_fast_shards() {
                 std::thread::sleep(Duration::from_millis(20));
             }
             let _ = tx.send((w.0, v));
-        });
+        })
+        .unwrap();
     };
     for shard in 0..shards {
         for _ in 0..PIPELINE_DEPTH.min(rounds) {

@@ -104,11 +104,12 @@ fn assert_wrapper_parity(name: &str, b: usize, steps: usize, seed: u64,
     } else {
         let mut par = ParVecEnv::new(inp.cfg, b, threads);
         if let Some(src) = &source {
-            par.set_task_source(src.clone());
+            par.set_task_source(src.clone()).unwrap();
         }
         let mut obs = vec![0i32; par.obs_len()];
         par.reset_all(&inp.grids, &refs, &inp.maxs, &inp.rngs,
-                      &mut obs);
+                      &mut obs)
+            .unwrap();
         Box::new(par)
     };
     let mut batch_env = mode.wrap(engine);
