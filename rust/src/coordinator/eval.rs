@@ -24,8 +24,6 @@
 //! are bitwise thread-invariant. Same seed + same split ⇒ same curve,
 //! for any `--threads`.
 
-use std::time::Instant;
-
 use anyhow::{ensure, Result};
 
 use crate::env::api::EnvParams;
@@ -36,6 +34,7 @@ use crate::env::types::*;
 use crate::env::Grid;
 use crate::util::rng::Rng;
 
+use super::metrics::WallTimer;
 use super::workers::ParVecEnv;
 
 /// Baseline policies the harness ships. `Random` samples uniform
@@ -175,7 +174,7 @@ pub fn eval_kshot(tasks: &dyn TaskSource, policy: EvalPolicy,
     // every episode of max_steps steps ends >= 1 trial, so this cap
     // guarantees completion even for a policy that never scores
     let step_cap = cfg.shots * max_steps as usize + 1;
-    let t0 = Instant::now();
+    let t0 = WallTimer::start();
     let mut steps_run = 0u64;
     for _ in 0..step_cap {
         if pending == 0 {
@@ -217,7 +216,7 @@ pub fn eval_kshot(tasks: &dyn TaskSource, policy: EvalPolicy,
             }
         }
     }
-    let elapsed = t0.elapsed().as_secs_f64();
+    let elapsed = t0.elapsed_secs();
     ensure!(pending == 0,
             "k-shot harness did not complete within the step cap \
              ({pending} envs short) — this is a bug, the cap covers \

@@ -41,6 +41,32 @@ pub fn reduce_iter_metrics(shard_metrics: &[IterMetrics]) -> IterMetrics {
     out
 }
 
+/// The engines' one sanctioned wall-clock handle.
+///
+/// Timing chunks and windows is measurement, not computation: nothing
+/// the engines produce (trajectories, reductions, checkpoints) may
+/// depend on it. Funneling every coordinator-side `Instant::now` read
+/// through this type keeps that auditable — `xmgrid lint`'s
+/// `no-wallclock-in-kernels` rule confines raw `Instant`/`SystemTime`
+/// access to this module, `util/bench.rs` and the CLI surface, so a
+/// wall-clock read leaking into a kernel or reduction path fails the
+/// gate instead of skewing bench rows or breaking replay determinism.
+pub struct WallTimer {
+    t0: Instant,
+}
+
+impl WallTimer {
+    pub fn start() -> WallTimer {
+        WallTimer { t0: Instant::now() }
+    }
+
+    /// Seconds since `start()`. Strictly for reporting (`ChunkStats`
+    /// secs, window sps) — never feed this back into engine state.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
 /// Cumulative steps/second meter for the engines' console reporting.
 pub struct ThroughputMeter {
     t0: Instant,
