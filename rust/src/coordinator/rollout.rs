@@ -31,7 +31,6 @@
 use std::path::PathBuf;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -44,6 +43,7 @@ use crate::util::fault::FaultPlan;
 use crate::util::rng::Rng;
 
 use super::config::{Overlap, ShardConfig};
+use super::metrics::WallTimer;
 use super::native::{NativeEnvConfig, NativePool};
 use super::pool::{EnvFamily, EnvPool};
 use super::shard::{panic_message, ShardPool};
@@ -141,7 +141,7 @@ struct ShardReplica {
 impl RolloutReplica for ShardReplica {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
         maybe_shard_fault(&self.faults, self.shard, round);
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let (reward_sum, episodes, trials) =
             self.pool.rollout(&self.rt, self.t, &mut self.rng)?;
         Ok(ChunkStats {
@@ -151,7 +151,7 @@ impl RolloutReplica for ShardReplica {
             reward_sum,
             episodes,
             trials,
-            secs: t0.elapsed().as_secs_f64(),
+            secs: t0.elapsed_secs(),
         })
     }
 }
@@ -182,7 +182,7 @@ struct NativeReplica {
 impl RolloutReplica for NativeReplica {
     fn rollout_chunk(&mut self, round: usize) -> Result<ChunkStats> {
         maybe_shard_fault(&self.faults, self.shard, round);
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let (reward_sum, episodes, trials) = match &mut self.stepper {
             NativeStepper::Fused(pool) => {
                 pool.rollout(self.t, &mut self.rng)?
@@ -198,7 +198,7 @@ impl RolloutReplica for NativeReplica {
             reward_sum,
             episodes,
             trials,
-            secs: t0.elapsed().as_secs_f64(),
+            secs: t0.elapsed_secs(),
         })
     }
 }
@@ -357,13 +357,13 @@ impl RolloutEngine {
         let mut acc = RolloutTotals::default();
         let mut in_window = 0usize;
         let mut windows = 0usize;
-        let t_window = Instant::now();
+        let t_window = WallTimer::start();
         let mut last_report = 0.0f64;
         let totals = self.collect(rounds, |c| {
             acc.absorb(c);
             in_window += 1;
             if in_window == window {
-                let now = t_window.elapsed().as_secs_f64();
+                let now = t_window.elapsed_secs();
                 acc.elapsed = now - last_report;
                 last_report = now;
                 report(windows, &std::mem::take(&mut acc));
@@ -372,7 +372,7 @@ impl RolloutEngine {
             }
         })?;
         if in_window > 0 {
-            let now = t_window.elapsed().as_secs_f64();
+            let now = t_window.elapsed_secs();
             acc.elapsed = now - last_report;
             report(windows, &acc);
         }
@@ -392,7 +392,7 @@ where
     W: RolloutReplica,
     C: FnMut(&ChunkStats),
 {
-    let t0 = Instant::now();
+    let t0 = WallTimer::start();
     let mut totals = RolloutTotals::default();
     match overlap {
         Overlap::Off => {
@@ -456,7 +456,8 @@ where
             for _ in 0..shards * rounds {
                 let s = res_rx
                     .recv()
-                    .expect("rollout result channel closed")?;
+                    .context("rollout result channel closed: every \
+                              shard sender dropped mid-collection")??;
                 // Refill this shard's pipeline before consuming, so
                 // the shard steps buffer t+1 while we drain buffer t.
                 if next_round[s.shard] < rounds {
@@ -468,6 +469,6 @@ where
             }
         }
     }
-    totals.elapsed = t0.elapsed().as_secs_f64();
+    totals.elapsed = t0.elapsed_secs();
     Ok(totals)
 }
