@@ -395,14 +395,15 @@ where
 /// determinism contract — overlap-off runs must be bitwise reproducible
 /// regardless of which shard finished first (see the reduction-order
 /// regression test in `tests/shard_engine.rs`).
-pub fn average_params(mut shard_params: Vec<Vec<Vec<f32>>>)
+pub fn average_params(shard_params: Vec<Vec<Vec<f32>>>)
                       -> Vec<Vec<f32>> {
     assert!(!shard_params.is_empty());
     let n = shard_params.len() as f32;
-    let rest = shard_params.split_off(1);
-    let mut acc = shard_params.pop().unwrap();
-    for other in &rest {
-        for (a, o) in acc.iter_mut().zip(other) {
+    let mut shards = shard_params.into_iter();
+    // non-empty was just asserted, so the accumulator always exists
+    let mut acc = shards.next().unwrap_or_default();
+    for other in shards {
+        for (a, o) in acc.iter_mut().zip(&other) {
             for (x, y) in a.iter_mut().zip(o) {
                 *x += *y;
             }

@@ -557,7 +557,13 @@ impl ShardedTrainer {
                 inflight.push_back((next, tickets));
                 next += 1;
             }
-            let (t, tickets) = inflight.pop_front().unwrap();
+            // the dispatch loop above always leaves >= 1 iteration in
+            // flight while the outer condition holds; an empty queue here
+            // is a scheduler bug, not a worker failure -- surface it as a
+            // clean error instead of poisoning the supervised pool
+            let Some((t, tickets)) = inflight.pop_front() else {
+                bail!("training pipeline stalled: no iteration in flight");
+            };
             let mut deltas = Vec::with_capacity(shards);
             let mut metrics = Vec::with_capacity(shards);
             for ticket in tickets {

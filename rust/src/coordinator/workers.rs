@@ -264,6 +264,9 @@ impl ParVecEnv {
                 faults: spawn_faults.clone(),
             })
         })
+        // the spawn closure above never returns Err — `ShardPool::spawn`
+        // is fallible only through the closure it is given
+        // xmglint: allow(no-unwrap-in-workers) -- spawn closure is Ok-only
         .expect("spawning vec-env chunk workers");
         let vv2 = cfg.opts.view_size * cfg.opts.view_size * 2;
         let bufs = ranges
@@ -341,6 +344,18 @@ impl ParVecEnv {
             Some(b) => b,
             None => self.alloc_bufs(c),
         }
+    }
+
+    /// Chunk `c`'s staging buffers, which must be at rest. A slot is
+    /// `None` only while a `run_op` dispatch owns it, and every such
+    /// window restores the slot before returning (success, recovery,
+    /// or bail), so `None` here is a coordinator sequencing bug — an
+    /// error, not a panic, to keep the supervised pool recoverable.
+    fn bufs_ref(&self, c: usize) -> Result<&ChunkBufs> {
+        self.bufs[c].as_ref().ok_or_else(|| {
+            anyhow!("chunk {c} staging buffers still in flight — \
+                     coordinator sequencing bug")
+        })
     }
 
     // --- supervised dispatch ----------------------------------------------
@@ -427,7 +442,18 @@ impl ParVecEnv {
             }
             failed = still;
         }
-        Ok(results.into_iter().map(|r| r.unwrap()).collect())
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(c, r)| {
+                // the retry loop only exits with `failed` empty, so
+                // every slot is filled; a hole is a recovery bug
+                r.ok_or_else(|| {
+                    anyhow!("chunk {c} has no `{label}` result after \
+                             recovery — supervision bug")
+                })
+            })
+            .collect()
     }
 
     /// Respawn chunk worker `c` and deterministically rebuild its state:
@@ -614,7 +640,7 @@ impl ParVecEnv {
             })?;
         }
         for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let bufs = self.bufs[c].as_ref().unwrap();
+            let bufs = self.bufs_ref(c)?;
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
         }
         // a reset is a full synchronization point: everything before it
@@ -665,7 +691,7 @@ impl ParVecEnv {
             })?;
         }
         for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let bufs = self.bufs[c].as_ref().unwrap();
+            let bufs = self.bufs_ref(c)?;
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
             rewards[lo..hi].copy_from_slice(&bufs.rewards);
             dones[lo..hi].copy_from_slice(&bufs.dones);
@@ -751,7 +777,7 @@ impl ParVecEnv {
         let mut episodes = 0u64;
         let mut trials = 0u64;
         for (c, (ep, tr)) in per_chunk.into_iter().enumerate() {
-            for &x in &self.bufs[c].as_ref().unwrap().reward_acc {
+            for &x in &self.bufs_ref(c)?.reward_acc {
                 reward_sum += x;
             }
             episodes += ep;
@@ -774,8 +800,11 @@ impl ParVecEnv {
         assert_eq!(out.len(), self.obs_len(), "obs buffer size");
         let vv2 = self.vv2();
         for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let bufs =
-                self.bufs[c].as_ref().expect("chunk bufs in flight");
+            // the `&self` signature cannot surface `bufs_ref`'s error;
+            // buffers are always at rest between operations, so this
+            // only fires on the same sequencing bug `bufs_ref` guards
+            // xmglint: allow(no-unwrap-in-workers) -- infallible &self getter
+            let bufs = self.bufs[c].as_ref().expect("bufs in flight");
             out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
         }
     }
@@ -822,7 +851,7 @@ impl ParVecEnv {
             })?;
         }
         for (c, &(lo, hi)) in self.ranges.iter().enumerate() {
-            let bufs = self.bufs[c].as_ref().unwrap();
+            let bufs = self.bufs_ref(c)?;
             obs_out[lo * vv2..hi * vv2].copy_from_slice(&bufs.obs);
         }
         self.log.events.push(ReplayEvent::Restart(rngs));
@@ -840,6 +869,10 @@ impl ParVecEnv {
                 w.venv.copy_agent_dirs_into(&mut v);
                 v
             })
+            // pinned by the BatchEnvironment trait to an infallible
+            // `&self` signature; workers can only be dead if a prior
+            // fallible op already returned Err, which callers propagate
+            // xmglint: allow(no-unwrap-in-workers) -- trait-pinned &self
             .expect("chunk workers dead — a prior operation failed \
                      and its error was ignored");
         for (c, chunk) in chunks.into_iter().enumerate() {
@@ -862,6 +895,8 @@ impl ParVecEnv {
                 w.venv.copy_task_rows_into(&mut v);
                 v
             })
+            // same contract as `copy_agent_dirs_into` directly above
+            // xmglint: allow(no-unwrap-in-workers) -- trait-pinned &self
             .expect("chunk workers dead — a prior operation failed \
                      and its error was ignored");
         for (c, chunk) in chunks.into_iter().enumerate() {
