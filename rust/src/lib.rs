@@ -23,12 +23,18 @@
 //!   multi-shard), and the evaluation harness (25-trial /
 //!   20th-percentile protocol of §4.2).
 //! - [`render`] — ASCII renderer for interactive inspection.
+//! - [`lint`] — the `xmgrid lint` static-analysis pass: token-level
+//!   rules that machine-check the determinism and panic-safety
+//!   conventions (single seeded RNG, no hasher-order iteration, no
+//!   wall-clock in kernels, no `unwrap` in supervised worker paths,
+//!   fixed-order float reductions) the engine layers rely on.
 //! - [`util`] — offline-friendly substitutes for crates unavailable in this
 //!   environment: PRNG, arg parsing, stats, bench harness, property tests.
 
 pub mod benchgen;
 pub mod coordinator;
 pub mod env;
+pub mod lint;
 pub mod render;
 pub mod runtime;
 pub mod util;

@@ -1,0 +1,447 @@
+//! The rule checkers: each one pattern-matches short windows of the
+//! token stream from [`super::scan`] against the invariant it guards.
+//! Test-region tokens are skipped everywhere — the invariants bind the
+//! engine, not its tests.
+//!
+//! Path scoping is part of each rule (a wall-clock read is fine in the
+//! bench harness, fatal in a kernel), so checkers receive the file's
+//! path relative to the crate's `src/` root with `/` separators.
+
+use super::rules::LintConfig;
+use super::scan::{Kind, Scan, Tok};
+use super::Violation;
+
+/// Determinism-critical module roots: everything the bitwise
+/// `--threads`-invariance contract covers.
+const DET_DIRS: [&str; 3] = ["env/", "benchgen/", "coordinator/"];
+
+/// Files sanctioned to read the wall clock: the bench harness, the
+/// metrics sink (via `WallTimer`), and the CLI binary.
+const WALLCLOCK_ALLOWED: [&str; 3] =
+    ["util/bench.rs", "coordinator/metrics.rs", "main.rs"];
+
+/// Supervised worker / channel paths: a panic here defeats the
+/// catch_unwind + respawn recovery machinery.
+const WORKER_FILES: [&str; 4] = [
+    "coordinator/shard.rs",
+    "coordinator/workers.rs",
+    "coordinator/rollout.rs",
+    "coordinator/trainer.rs",
+];
+
+/// Identifiers that mean "randomness not derived from the config
+/// seed": the rand-crate entry points and OS entropy.
+const RNG_BANNED: [&str; 7] = [
+    "thread_rng",
+    "from_entropy",
+    "OsRng",
+    "StdRng",
+    "SmallRng",
+    "getrandom",
+    "rand",
+];
+
+/// Randomized-hasher types (the PR 3 DefaultHasher collision bug
+/// class) — banned outright in determinism-critical modules.
+const HASH_RANDOM: [&str; 2] = ["DefaultHasher", "RandomState"];
+
+/// Methods that iterate a hash container in hasher order.
+const HASH_ITER_METHODS: [&str; 8] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "drain",
+    "retain",
+];
+
+/// Fallible engine ops whose `Result` must never be discarded. Only
+/// names that return `Result` on *every* stepping/coordination surface
+/// belong here — a token scanner cannot resolve receiver types, so an
+/// ambiguous name (e.g. `step_all`, `Result` on `ParVecEnv` but `()`
+/// on `VecEnv`) would false-positive. The compiler-native
+/// `unused_must_use` deny in `[workspace.lints]` covers the rest.
+const MUST_USE_METHODS: [&str; 9] = [
+    "submit",
+    "broadcast",
+    "respawn",
+    "wait",
+    "rollout",
+    "train_iter",
+    "resample_tasks",
+    "save",
+    "finish",
+];
+
+/// Statement heads that exempt a `…;` run from the must-use check:
+/// bindings, control flow, items, and the assert/log macros.
+const STMT_HEADS: [&str; 27] = [
+    "let", "return", "break", "continue", "if", "match", "while",
+    "for", "loop", "else", "fn", "pub", "use", "mod", "impl",
+    "struct", "enum", "trait", "const", "static", "type", "unsafe",
+    "where", "assert", "assert_eq", "assert_ne", "panic",
+];
+
+/// Macro-call heads likewise exempt (side-effecting by design).
+const STMT_MACRO_HEADS: [&str; 7] = [
+    "println", "eprintln", "print", "eprint", "write", "writeln",
+    "debug_assert",
+];
+
+fn in_det_dir(rel: &str) -> bool {
+    DET_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+/// Run every enabled rule over one scanned file. `rel` is the path
+/// relative to `src/`.
+pub fn check(rel: &str, scan: &Scan, cfg: &LintConfig) -> Vec<Violation> {
+    let mut out = Vec::new();
+    {
+        let mut viol = |line: usize, rule: &'static str, msg: String| {
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule,
+                message: msg,
+            });
+        };
+        let toks = &scan.toks;
+        let live = |k: usize| !scan.in_test[k];
+
+        if cfg.on("no-std-rng") && in_det_dir(rel) {
+            for (k, t) in toks.iter().enumerate() {
+                if !live(k) || t.kind != Kind::Ident {
+                    continue;
+                }
+                if RNG_BANNED.contains(&t.text.as_str()) {
+                    viol(
+                        t.line,
+                        "no-std-rng",
+                        format!(
+                            "`{}` — derive randomness from the config \
+                             seed via util::rng::Rng / stream_seed",
+                            t.text
+                        ),
+                    );
+                }
+            }
+        }
+
+        if cfg.on("no-hash-iter") && in_det_dir(rel) {
+            check_hash_iter(rel, scan, &mut viol);
+        }
+
+        if cfg.on("no-wallclock-in-kernels")
+            && !WALLCLOCK_ALLOWED.contains(&rel)
+        {
+            for (k, t) in toks.iter().enumerate() {
+                if !live(k) || t.kind != Kind::Ident {
+                    continue;
+                }
+                let instant_now = t.text == "Instant"
+                    && matches_seq(toks, k + 1, &[":", ":", "now"]);
+                if instant_now {
+                    viol(
+                        t.line,
+                        "no-wallclock-in-kernels",
+                        "`Instant::now` — time through \
+                         coordinator::metrics::WallTimer or move the \
+                         measurement into util/bench.rs"
+                            .to_string(),
+                    );
+                } else if t.text == "SystemTime" || t.text == "UNIX_EPOCH"
+                {
+                    viol(
+                        t.line,
+                        "no-wallclock-in-kernels",
+                        format!("`{}` — wall-clock reads are confined \
+                                 to the bench/CLI surface", t.text),
+                    );
+                }
+            }
+        }
+
+        if cfg.on("no-unwrap-in-workers")
+            && WORKER_FILES.contains(&rel)
+        {
+            for (k, t) in toks.iter().enumerate() {
+                if !live(k) || t.kind != Kind::Ident {
+                    continue;
+                }
+                if (t.text == "unwrap" || t.text == "expect")
+                    && k > 0
+                    && toks[k - 1].is(".")
+                    && k + 1 < toks.len()
+                    && toks[k + 1].is("(")
+                {
+                    viol(
+                        t.line,
+                        "no-unwrap-in-workers",
+                        format!(
+                            ".{}() in a supervised worker path — \
+                             return the error so recovery can replay \
+                             the chunk",
+                            t.text
+                        ),
+                    );
+                }
+            }
+        }
+
+        if cfg.on("float-reduction-order")
+            && rel.starts_with("coordinator/")
+        {
+            check_float_reduction(scan, &mut viol);
+        }
+
+        if cfg.on("must-use-result") {
+            check_must_use(scan, &mut viol);
+        }
+    }
+    out
+}
+
+/// `toks[at..]` equals the given texts, in order.
+fn matches_seq(toks: &[Tok], at: usize, texts: &[&str]) -> bool {
+    texts
+        .iter()
+        .enumerate()
+        .all(|(j, s)| at + j < toks.len() && toks[at + j].is(s))
+}
+
+/// no-hash-iter: flag randomized hashers outright, then track
+/// `let`-bindings whose initializer mentions HashMap/HashSet and flag
+/// hasher-order iteration over those bindings (`name.iter()` et al.,
+/// `for x in [&[mut]] name {`). Sorted iteration (collect + sort, or
+/// BTreeMap) never trips this.
+fn check_hash_iter<F>(rel: &str, scan: &Scan, viol: &mut F)
+where
+    F: FnMut(usize, &'static str, String),
+{
+    let toks = &scan.toks;
+    for (k, t) in toks.iter().enumerate() {
+        if scan.in_test[k] || t.kind != Kind::Ident {
+            continue;
+        }
+        if HASH_RANDOM.contains(&t.text.as_str()) {
+            viol(
+                t.line,
+                "no-hash-iter",
+                format!(
+                    "`{}` is seeded per-process — use a deterministic \
+                     key order (BTreeMap, or collect + sort)",
+                    t.text
+                ),
+            );
+        }
+    }
+    // pass 1: hash-typed let bindings (scan to `;`/`=`-statement end
+    // at bracket depth 0, recording whether HashMap/HashSet occurs)
+    let mut hashy: Vec<String> = Vec::new();
+    let mut k = 0usize;
+    while k < toks.len() {
+        if scan.in_test[k] {
+            k += 1;
+            continue;
+        }
+        if toks[k].ident("let") {
+            let mut j = k + 1;
+            if j < toks.len() && toks[j].ident("mut") {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].kind == Kind::Ident {
+                let name = toks[j].text.clone();
+                let mut depth = 0usize;
+                let mut hash_init = false;
+                let mut e = j + 1;
+                while e < toks.len() {
+                    let tt = &toks[e];
+                    if tt.is("(") || tt.is("[") || tt.is("{") {
+                        depth += 1;
+                    } else if tt.is(")") || tt.is("]") || tt.is("}") {
+                        if depth == 0 {
+                            break;
+                        }
+                        depth -= 1;
+                    } else if tt.is(";") && depth == 0 {
+                        break;
+                    } else if tt.kind == Kind::Ident
+                        && (tt.text == "HashMap" || tt.text == "HashSet")
+                    {
+                        hash_init = true;
+                    }
+                    e += 1;
+                }
+                if hash_init && !hashy.contains(&name) {
+                    hashy.push(name);
+                }
+                k = e;
+                continue;
+            }
+        }
+        k += 1;
+    }
+    // pass 2: iteration over those bindings
+    for (k, t) in toks.iter().enumerate() {
+        if scan.in_test[k] || t.kind != Kind::Ident {
+            continue;
+        }
+        if !hashy.contains(&t.text) {
+            continue;
+        }
+        // name.iter() / name.drain() / …
+        if k + 3 < toks.len()
+            && toks[k + 1].is(".")
+            && toks[k + 2].kind == Kind::Ident
+            && HASH_ITER_METHODS.contains(&toks[k + 2].text.as_str())
+            && toks[k + 3].is("(")
+        {
+            viol(
+                t.line,
+                "no-hash-iter",
+                format!(
+                    "{}.{}() iterates in hasher order in {rel} — \
+                     collect + sort, or use a BTreeMap",
+                    t.text, toks[k + 2].text
+                ),
+            );
+        }
+        // for x in [&[mut]] name {
+        if k >= 1 && k + 1 < toks.len() && toks[k + 1].is("{") {
+            let mut b = k as isize - 1;
+            while b >= 0
+                && (toks[b as usize].is("&")
+                    || toks[b as usize].ident("mut"))
+            {
+                b -= 1;
+            }
+            if b >= 0 && toks[b as usize].ident("in") {
+                viol(
+                    t.line,
+                    "no-hash-iter",
+                    format!(
+                        "`for _ in {}` iterates in hasher order — \
+                         collect + sort, or use a BTreeMap",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// float-reduction-order: `.sum::<f32>()`, `fold(0.0f32, …)`-style
+/// folds with an f32-suffixed init, and rayon parallel iteration — all
+/// order-sensitive float reductions the fixed-order f64 contract
+/// (ascending env-major, shard 0 accumulator) exists to forbid.
+fn check_float_reduction<F>(scan: &Scan, viol: &mut F)
+where
+    F: FnMut(usize, &'static str, String),
+{
+    let toks = &scan.toks;
+    for (k, t) in toks.iter().enumerate() {
+        if scan.in_test[k] || t.kind != Kind::Ident {
+            continue;
+        }
+        if t.text == "sum"
+            && matches_seq(toks, k + 1, &[":", ":", "<", "f32"])
+        {
+            viol(
+                t.line,
+                "float-reduction-order",
+                ".sum::<f32>() — accumulate in f64, in a fixed order"
+                    .to_string(),
+            );
+        }
+        if t.text == "fold"
+            && k + 2 < toks.len()
+            && toks[k + 1].is("(")
+            && toks[k + 2].kind == Kind::Num
+            && toks[k + 2].text.ends_with("f32")
+        {
+            viol(
+                t.line,
+                "float-reduction-order",
+                "fold with an f32 accumulator — use f64 and a fixed \
+                 reduction order"
+                    .to_string(),
+            );
+        }
+        if t.text == "par_iter"
+            || t.text == "par_iter_mut"
+            || t.text == "rayon"
+        {
+            viol(
+                t.line,
+                "float-reduction-order",
+                format!(
+                    "`{}` — unordered parallel reduction breaks the \
+                     bitwise --threads contract",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// must-use-result: a `;`-terminated statement whose head is a plain
+/// identifier (not a binding/control-flow/macro head), which calls one
+/// of [`MUST_USE_METHODS`] and contains no `?`, discards a `Result`.
+/// Tail expressions (runs ending at `}`) return their value and are
+/// exempt by construction.
+fn check_must_use<F>(scan: &Scan, viol: &mut F)
+where
+    F: FnMut(usize, &'static str, String),
+{
+    let toks = &scan.toks;
+    let mut start = 0usize;
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        let boundary = t.kind == Kind::Punct
+            && (t.is("{") || t.is("}") || t.is(";"));
+        if !boundary {
+            continue;
+        }
+        let run = &toks[start..k];
+        if t.is(";") && !run.is_empty() && !scan.in_test[start] {
+            let head = &run[0];
+            // any macro statement (`name!(…)`) is side-effecting by
+            // design — bail!/ensure!/log macros — and exempt
+            let is_macro =
+                run.len() > 1 && run[1].is("!");
+            let head_exempt = head.kind != Kind::Ident
+                || is_macro
+                || STMT_HEADS.contains(&head.text.as_str())
+                || STMT_MACRO_HEADS.contains(&head.text.as_str());
+            if !head_exempt {
+                let has_try = run.iter().any(|x| x.is("?"));
+                let mut called: Option<&str> = None;
+                for m in 0..run.len().saturating_sub(2) {
+                    if run[m].is(".")
+                        && run[m + 1].kind == Kind::Ident
+                        && MUST_USE_METHODS
+                            .contains(&run[m + 1].text.as_str())
+                        && run[m + 2].is("(")
+                    {
+                        called = Some(&run[m + 1].text);
+                    }
+                }
+                if let Some(name) = called {
+                    if !has_try {
+                        viol(
+                            head.line,
+                            "must-use-result",
+                            format!(
+                                "Result of .{name}() is discarded — \
+                                 `?` it or handle the error"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        start = k + 1;
+    }
+}

@@ -1,0 +1,192 @@
+//! `xmgrid lint` — the in-repo determinism & panic-safety static
+//! analysis pass.
+//!
+//! XLand-MiniGrid inherits reproducibility from JAX's purity
+//! discipline; this native Rust engine gets no such help from its
+//! substrate, so the invariants that make `--threads` bitwise-
+//! invariant and workers panic-safe (single seeded RNG, no
+//! hasher-order iteration, wall-clock confined to measurement, no
+//! `unwrap` in supervised paths, fixed-order f64 reductions) are
+//! conventions — exactly the kind of thing that regresses silently
+//! and surfaces three PRs later as a thread-count-dependent parity
+//! failure. This module turns those conventions into machine-checked
+//! rules, run token-level over the source tree with zero new
+//! dependencies, and wired as a hard CI gate.
+//!
+//! Layering:
+//!
+//! - [`scan`] — the lexer: tokens + test-region marking + directives;
+//! - [`rules`] — rule registry, `--rules` config, allow directives;
+//! - [`checks`] — the per-rule checkers (path-scoped token patterns);
+//! - [`report`] — human and schema-stable JSON output.
+//!
+//! The library surface ([`lint_source`], [`lint_paths`]) exists so
+//! `tests/lint_suite.rs` can pin each rule against fixture snippets
+//! without spawning processes.
+
+pub mod checks;
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use rules::{AllowRecord, LintConfig, RULES};
+
+/// One finding: `file` is the path relative to the crate's `src/`
+/// root (the coordinate system the rule scoping is defined in).
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A full lint run over a set of files.
+pub struct Outcome {
+    pub violations: Vec<Violation>,
+    pub allows: Vec<AllowRecord>,
+    pub files: usize,
+}
+
+/// Lint one in-memory source file. `name` plays the role of the
+/// src-relative path for rule scoping (e.g. pass
+/// `"coordinator/workers.rs"` to exercise the worker rules).
+pub fn lint_source(
+    name: &str,
+    text: &str,
+    cfg: &LintConfig,
+) -> (Vec<Violation>, Vec<AllowRecord>) {
+    let scanned = scan::scan(text);
+    let raw = checks::check(name, &scanned, cfg);
+    let (allows, mut bad) = rules::parse_allows(name, &scanned, cfg);
+    let (mut kept, records) =
+        rules::apply_allows(name, &scanned, allows, raw, cfg);
+    kept.append(&mut bad);
+    (kept, records)
+}
+
+/// Lint `.rs` files on disk: each path may be a file or a directory
+/// (walked recursively, sorted for deterministic order). Returns the
+/// aggregate outcome, violations and allows sorted by (file, line).
+pub fn lint_paths(paths: &[PathBuf], cfg: &LintConfig) -> Result<Outcome> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(p, &mut files)
+                .with_context(|| format!("walking {}", p.display()))?;
+        } else if p.is_file() {
+            files.push(p.clone());
+        } else {
+            bail!("lint path {} does not exist", p.display());
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut violations = Vec::new();
+    let mut allows = Vec::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .with_context(|| format!("reading {}", f.display()))?;
+        let rel = src_relative(f);
+        let (mut v, mut a) = lint_source(&rel, &text, cfg);
+        violations.append(&mut v);
+        allows.append(&mut a);
+    }
+    report::sort_violations(&mut violations);
+    report::sort_allows(&mut allows);
+    Ok(Outcome { violations, allows, files: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Rule scoping runs on paths relative to the crate's `src/` root
+/// with `/` separators: strip everything up to and including the last
+/// `src` component. A path with no `src` component (fixtures, odd
+/// layouts) is used as-is, so scoped rules simply see an unscoped
+/// name.
+fn src_relative(path: &Path) -> String {
+    let comps: Vec<String> = path
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    let after_src = comps
+        .iter()
+        .rposition(|c| c == "src")
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    comps[after_src..].join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn src_relative_strips_through_src() {
+        assert_eq!(
+            src_relative(Path::new("rust/src/coordinator/shard.rs")),
+            "coordinator/shard.rs"
+        );
+        assert_eq!(
+            src_relative(Path::new("/a/b/src/main.rs")),
+            "main.rs"
+        );
+        assert_eq!(
+            src_relative(Path::new("fixture.rs")),
+            "fixture.rs"
+        );
+    }
+
+    #[test]
+    fn scanner_skips_strings_comments_and_range_dots() {
+        let cfg = LintConfig::all();
+        let text = r#"
+fn f(m: &std::collections::HashMap<u32, u32>) -> u32 {
+    // thread_rng mentioned in a comment is fine
+    let s = "Instant::now inside a string is fine";
+    let _ = s;
+    let mut acc = 0;
+    for i in 0..m.len() {
+        acc += i as u32;
+    }
+    acc
+}
+"#;
+        let (v, _) = lint_source("coordinator/x.rs", text, &cfg);
+        assert!(v.is_empty(), "false positives: {v:?}");
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let cfg = LintConfig::all();
+        let text = r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let mut m = std::collections::HashMap::new();
+        m.insert(1, 2);
+        for (k, v) in m.iter() {
+            let _ = (k, v);
+        }
+    }
+}
+"#;
+        let (v, _) = lint_source("coordinator/x.rs", text, &cfg);
+        assert!(v.is_empty(), "test region not exempt: {v:?}");
+    }
+}

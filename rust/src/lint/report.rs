@@ -1,0 +1,139 @@
+//! Lint output: human-readable lines for the terminal and a
+//! schema-stable JSON document for the CI gate. JSON is hand-rolled
+//! (no serde offline — same discipline as `util::bench::JsonReport`),
+//! with a fixed key order and entries sorted by `(file, line, rule)`,
+//! so byte-level diffs of two runs are meaningful.
+//!
+//! Schema (`version` bumps on any breaking change):
+//!
+//! ```json
+//! {
+//!   "tool": "xmglint",
+//!   "version": 1,
+//!   "rules": ["no-std-rng", …],
+//!   "violations": [{"file": …, "line": …, "rule": …, "message": …}],
+//!   "allows":     [{"file": …, "line": …, "rule": …, "reason": …}],
+//!   "summary": {"files": N, "violations": N, "allows": N}
+//! }
+//! ```
+
+use super::rules::AllowRecord;
+use super::{Outcome, Violation};
+
+/// JSON schema version — the CI validator pins this.
+pub const JSON_VERSION: u32 = 1;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Sort for stable output. Callers sort once, centrally, so the human
+/// and JSON reports always agree on order.
+pub fn sort_violations(violations: &mut [Violation]) {
+    violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+pub fn sort_allows(allows: &mut [AllowRecord]) {
+    allows.sort_by(|a, b| {
+        (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line))
+    });
+}
+
+/// `path:line: [rule] message` lines plus a one-line summary — the
+/// shape compilers and editors already know how to jump through.
+pub fn human(outcome: &Outcome, enabled: &[&str]) -> String {
+    let mut out = String::new();
+    for v in &outcome.violations {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}\n",
+            v.file,
+            v.line,
+            v.rule,
+            v.message.replace('\n', " ")
+        ));
+    }
+    if !outcome.violations.is_empty() {
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "xmglint: {} file(s), {} rule(s): {} violation(s), {} \
+         allow(s)\n",
+        outcome.files,
+        enabled.len(),
+        outcome.violations.len(),
+        outcome.allows.len()
+    ));
+    out
+}
+
+pub fn json(outcome: &Outcome, enabled: &[&str]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"tool\": \"xmglint\",\n");
+    out.push_str(&format!("  \"version\": {JSON_VERSION},\n"));
+    let rules: Vec<String> =
+        enabled.iter().map(|r| format!("\"{}\"", esc(r))).collect();
+    out.push_str(&format!("  \"rules\": [{}],\n", rules.join(", ")));
+    out.push_str("  \"violations\": [");
+    for (i, v) in outcome.violations.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \
+             \"{}\", \"message\": \"{}\"}}",
+            esc(&v.file),
+            v.line,
+            esc(v.rule),
+            esc(&v.message)
+        ));
+    }
+    if !outcome.violations.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("],\n");
+    out.push_str("  \"allows\": [");
+    for (i, a) in outcome.allows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \
+             \"{}\", \"reason\": \"{}\"}}",
+            esc(&a.file),
+            a.line,
+            esc(a.rule),
+            esc(&a.reason)
+        ));
+    }
+    if !outcome.allows.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("],\n");
+    out.push_str(&format!(
+        "  \"summary\": {{\"files\": {}, \"violations\": {}, \
+         \"allows\": {}}}\n",
+        outcome.files,
+        outcome.violations.len(),
+        outcome.allows.len()
+    ));
+    out.push_str("}\n");
+    out
+}

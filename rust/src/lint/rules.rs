@@ -1,0 +1,294 @@
+//! Rule registry and the allow-directive machinery.
+//!
+//! Every rule the linter knows is declared here with a stable id (the
+//! same id appears in `--rules`, in `--json` output, and in allow
+//! directives) and a one-line summary for `xmgrid help lint`.
+//!
+//! # Allow directives
+//!
+//! A violation is suppressed by an inline escape hatch:
+//!
+//! ```text
+//! // xmglint: allow(rule-id) -- why this site is sound
+//! ```
+//!
+//! The reason after `--` is mandatory — an allow is a reviewed claim
+//! ("this expect cannot fire because …"), not an opt-out. A directive
+//! covers its own line when it trails code, otherwise the next line of
+//! code below it (intervening plain comments are fine, so a directive
+//! can sit under a longer explanation block). Only plain `//` comments
+//! carry directives — doc comments that mention the syntax are
+//! documentation. Malformed directives,
+//! unknown rule ids, missing reasons, and allows that suppress nothing
+//! are themselves violations of the meta-rule [`BAD_ALLOW`] — an allow
+//! that outlives the code it excused must be deleted, not inherited.
+
+use super::scan::Scan;
+use super::Violation;
+
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// Meta-rule id: defects in the allow directives themselves.
+pub const BAD_ALLOW: &str = "bad-allow";
+
+/// The registry, in canonical (reporting) order. The documented rule
+/// table in docs/ARCHITECTURE.md and the CI gate's expected rule list
+/// mirror this — change them together.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "no-std-rng",
+        summary: "only util::rng may produce randomness in env/, \
+                  benchgen/, coordinator/",
+    },
+    RuleInfo {
+        id: "no-hash-iter",
+        summary: "no HashMap/HashSet iteration (or random hashers) in \
+                  determinism-critical modules",
+    },
+    RuleInfo {
+        id: "no-wallclock-in-kernels",
+        summary: "Instant::now/SystemTime confined to util/bench.rs, \
+                  coordinator/metrics.rs and the CLI",
+    },
+    RuleInfo {
+        id: "no-unwrap-in-workers",
+        summary: "no .unwrap()/.expect() in supervised worker / \
+                  channel paths",
+    },
+    RuleInfo {
+        id: "float-reduction-order",
+        summary: "no f32 accumulation or unordered float folds in \
+                  coordinator reduction paths",
+    },
+    RuleInfo {
+        id: "must-use-result",
+        summary: "no discarded Result from fallible engine ops \
+                  (submit/broadcast/wait/rollout/…)",
+    },
+    RuleInfo {
+        id: BAD_ALLOW,
+        summary: "xmglint allow directives must parse, name a known \
+                  rule, carry a reason, and suppress something",
+    },
+];
+
+pub fn is_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// Canonical static id for a rule name (so `Violation.rule` can stay
+/// `&'static str` even when the name arrived from a directive).
+pub fn canonical_id(id: &str) -> Option<&'static str> {
+    RULES.iter().find(|r| r.id == id).map(|r| r.id)
+}
+
+/// Which rules run. Built from `--rules a,b,c` or [`LintConfig::all`].
+pub struct LintConfig {
+    enabled: Vec<&'static str>,
+}
+
+impl LintConfig {
+    pub fn all() -> LintConfig {
+        LintConfig {
+            enabled: RULES.iter().map(|r| r.id).collect(),
+        }
+    }
+
+    /// Parse a `--rules` list. Unknown ids are an error, not a silent
+    /// no-op — a typo in a CI invocation must fail loudly.
+    pub fn subset(list: &str) -> Result<LintConfig, String> {
+        let mut enabled = Vec::new();
+        for raw in list.split(',') {
+            let id = raw.trim();
+            if id.is_empty() {
+                continue;
+            }
+            match canonical_id(id) {
+                Some(s) => {
+                    if !enabled.contains(&s) {
+                        enabled.push(s);
+                    }
+                }
+                None => {
+                    return Err(format!(
+                        "unknown lint rule `{id}` (known: {})",
+                        RULES
+                            .iter()
+                            .map(|r| r.id)
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ))
+                }
+            }
+        }
+        // report in canonical order regardless of flag order
+        let enabled = RULES
+            .iter()
+            .map(|r| r.id)
+            .filter(|id| enabled.contains(id))
+            .collect();
+        Ok(LintConfig { enabled })
+    }
+
+    pub fn on(&self, id: &str) -> bool {
+        self.enabled.iter().any(|r| *r == id)
+    }
+
+    pub fn enabled(&self) -> &[&'static str] {
+        &self.enabled
+    }
+}
+
+/// A parsed, well-formed allow directive.
+pub struct Allow {
+    /// Line of the directive comment itself.
+    pub line: usize,
+    pub rule: &'static str,
+    pub reason: String,
+}
+
+/// An allow that actually suppressed a violation — surfaced in the
+/// report so the escape hatches stay auditable.
+pub struct AllowRecord {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub reason: String,
+}
+
+/// Parse every directive in a scan. Well-formed allows come back as
+/// [`Allow`]; everything malformed becomes a [`BAD_ALLOW`] violation
+/// immediately.
+pub fn parse_allows(
+    file: &str,
+    scan: &Scan,
+    cfg: &LintConfig,
+) -> (Vec<Allow>, Vec<Violation>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    let mut push_bad = |line: usize, message: String| {
+        if cfg.on(BAD_ALLOW) {
+            bad.push(Violation {
+                file: file.to_string(),
+                line,
+                rule: BAD_ALLOW,
+                message,
+            });
+        }
+    };
+    for d in &scan.directives {
+        let text = d.text.trim();
+        let inner = match text
+            .strip_prefix("allow(")
+            .and_then(|rest| rest.split_once(')'))
+        {
+            Some((rule, tail)) => Some((rule.trim(), tail.trim())),
+            None => None,
+        };
+        let Some((rule_name, tail)) = inner else {
+            push_bad(
+                d.line,
+                format!(
+                    "malformed directive `xmglint: {text}` (expected \
+                     `allow(rule) -- reason`)"
+                ),
+            );
+            continue;
+        };
+        let Some(rule) = canonical_id(rule_name) else {
+            push_bad(
+                d.line,
+                format!("allow names unknown rule `{rule_name}`"),
+            );
+            continue;
+        };
+        let reason = match tail.strip_prefix("--") {
+            Some(r) => r.trim(),
+            None => "",
+        };
+        if reason.is_empty() {
+            push_bad(
+                d.line,
+                format!(
+                    "allow({rule}) has no reason — write \
+                     `allow({rule}) -- why this site is sound`"
+                ),
+            );
+            continue;
+        }
+        allows.push(Allow {
+            line: d.line,
+            rule,
+            reason: reason.to_string(),
+        });
+    }
+    (allows, bad)
+}
+
+/// Apply allows to a file's violations: a directive suppresses
+/// matching-rule violations on its own line (trailing-comment form) or
+/// on the next code line below it. Used allows are returned for the
+/// report; unused allows for *enabled* rules become [`BAD_ALLOW`]
+/// violations (for disabled rules the linter cannot tell, so it stays
+/// quiet).
+pub fn apply_allows(
+    file: &str,
+    scan: &Scan,
+    allows: Vec<Allow>,
+    violations: Vec<Violation>,
+    cfg: &LintConfig,
+) -> (Vec<Violation>, Vec<AllowRecord>) {
+    let mut kept: Vec<Violation> = Vec::new();
+    let mut suppressed = vec![false; allows.len()];
+    // target code line per allow: own line if it holds tokens,
+    // otherwise the first code line below the directive
+    let targets: Vec<Option<usize>> = allows
+        .iter()
+        .map(|a| {
+            let own = scan.toks.iter().any(|t| t.line == a.line);
+            if own {
+                Some(a.line)
+            } else {
+                scan.next_code_line(a.line)
+            }
+        })
+        .collect();
+    for v in violations {
+        let mut hit = false;
+        for (k, a) in allows.iter().enumerate() {
+            if a.rule == v.rule && targets[k] == Some(v.line) {
+                suppressed[k] = true;
+                hit = true;
+            }
+        }
+        if !hit {
+            kept.push(v);
+        }
+    }
+    let mut records = Vec::new();
+    for (k, a) in allows.into_iter().enumerate() {
+        if suppressed[k] {
+            records.push(AllowRecord {
+                file: file.to_string(),
+                line: a.line,
+                rule: a.rule,
+                reason: a.reason,
+            });
+        } else if cfg.on(a.rule) && cfg.on(BAD_ALLOW) {
+            kept.push(Violation {
+                file: file.to_string(),
+                line: a.line,
+                rule: BAD_ALLOW,
+                message: format!(
+                    "allow({}) suppresses nothing — delete it or move \
+                     it next to the violating line",
+                    a.rule
+                ),
+            });
+        }
+    }
+    (kept, records)
+}

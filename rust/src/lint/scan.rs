@@ -1,0 +1,380 @@
+//! Token scanner for the lint pass: a lightweight Rust lexer that is
+//! exactly strong enough to support token-level rules — comments
+//! (line, nested block), string literals (plain, byte, raw with any
+//! `#` arity), char-vs-lifetime disambiguation, numeric literals
+//! (without swallowing range dots: `0..n` is three tokens, not a
+//! float), identifiers, and single-character punctuation. No parse
+//! tree: the rule checkers in [`super::checks`] pattern-match short
+//! token windows instead, which is what keeps the whole subsystem
+//! dependency-free (same vendored-offline discipline as the rest of
+//! the workspace).
+//!
+//! Two source-level facts ride along with the token stream because
+//! every rule needs them:
+//!
+//! - **test regions** — tokens inside a `#[cfg(test)]`-gated item or a
+//!   `#[test]` fn are marked, and every rule skips them (tests may
+//!   unwrap, time, and iterate hash maps freely);
+//! - **directives** — `// xmglint: …` comments, collected with their
+//!   line numbers for the allow machinery in [`super::rules`].
+
+/// Token classes. `Str`/`Char` carry no text (their content is
+/// irrelevant to every rule — what matters is that the scanner does
+/// not lex *inside* them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn ident(&self, text: &str) -> bool {
+        self.kind == Kind::Ident && self.text == text
+    }
+}
+
+/// A `// xmglint: …` comment: line number plus the directive text
+/// after the marker, trimmed.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    pub line: usize,
+    pub text: String,
+}
+
+/// One scanned source file: token stream, per-token test-region flags,
+/// and the lint directives found in comments.
+pub struct Scan {
+    pub toks: Vec<Tok>,
+    pub in_test: Vec<bool>,
+    pub directives: Vec<Directive>,
+}
+
+impl Scan {
+    /// Line number of the first token strictly after `line`, if any.
+    /// This is what a standalone directive comment covers: comment
+    /// lines produce no tokens, so a directive stacked under further
+    /// explanation comments still lands on the code line below.
+    pub fn next_code_line(&self, line: usize) -> Option<usize> {
+        self.toks
+            .iter()
+            .map(|t| t.line)
+            .filter(|&l| l > line)
+            .min()
+    }
+}
+
+const DIRECTIVE_MARKER: &str = "xmglint:";
+
+pub fn scan(src: &str) -> Scan {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut directives: Vec<Directive> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (also doc comments, which start the same way)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            // directives live in plain `//` comments only: a doc
+            // comment (`///`, `//!`) that *mentions* the syntax is
+            // documentation, not an annotation
+            let doc = start < n && (cs[start] == '/' || cs[start] == '!');
+            if !doc {
+                let comment: String = cs[start..j].iter().collect();
+                if let Some(pos) = comment.find(DIRECTIVE_MARKER) {
+                    let text = comment[pos + DIRECTIVE_MARKER.len()..]
+                        .trim()
+                        .to_string();
+                    directives.push(Directive { line, text });
+                }
+            }
+            i = j;
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings: r"…", r#"…"#, br"…", br#"…"# (any # arity)
+        if c == 'r' || (c == 'b' && i + 1 < n && cs[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && cs[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && cs[j] == '"' {
+                j += 1;
+                // closes at `"` followed by `hashes` × `#`
+                'raw: while j < n {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    } else if cs[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n
+                            && cs[j + 1 + k] == '#'
+                        {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Str,
+                    text: String::new(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // not a raw string — fall through to the ident rule, which
+            // will consume `r…`/`b…` as an ordinary identifier
+        }
+        // plain and byte strings
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            if c == 'b' {
+                i += 1;
+            }
+            i += 1;
+            let start_line = line;
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '\n' {
+                    line += 1;
+                }
+                if cs[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Str,
+                text: String::new(),
+                line: start_line,
+            });
+            continue;
+        }
+        if c == '\'' {
+            // lifetime ('a, 'static) unless it closes as a char ('a')
+            let alpha_next = i + 1 < n
+                && (cs[i + 1].is_alphabetic() || cs[i + 1] == '_');
+            let closes = i + 2 < n && cs[i + 2] == '\'';
+            if alpha_next && !closes {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: cs[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // char literal, escapes included
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if cs[i] == '\'' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Char,
+                text: String::new(),
+                line,
+            });
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: cs[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                let ch = cs[j];
+                if ch.is_alphanumeric() || ch == '_' {
+                    j += 1;
+                    continue;
+                }
+                // `1.5` continues the number; `0..n` does not (the dot
+                // must be followed by a digit to be a decimal point)
+                if ch == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    j += 1;
+                    continue;
+                }
+                // exponent sign: 1e-5, 2.5E+3
+                if (ch == '+' || ch == '-')
+                    && j > i
+                    && (cs[j - 1] == 'e' || cs[j - 1] == 'E')
+                {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok {
+                kind: Kind::Num,
+                text: cs[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    let in_test = mark_tests(&toks);
+    Scan { toks, in_test, directives }
+}
+
+/// Mark every token inside a `#[cfg(test)]`-gated item or a `#[test]`
+/// fn: find attributes containing the ident `test`, then extend the
+/// region over any further attributes and through the attributed
+/// item's `{…}` body (brace-matched) or to its terminating `;`.
+fn mark_tests(toks: &[Tok]) -> Vec<bool> {
+    let mut in_test = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let attr_start = toks[i].is("#")
+            && i + 1 < toks.len()
+            && toks[i + 1].is("[");
+        if !attr_start {
+            i += 1;
+            continue;
+        }
+        // scan the attribute group for the ident `test`
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut has_test = false;
+        while j < toks.len() && depth > 0 {
+            let t = &toks[j];
+            if t.is("[") {
+                depth += 1;
+            } else if t.is("]") {
+                depth -= 1;
+            } else if t.ident("test") {
+                has_test = true;
+            }
+            j += 1;
+        }
+        if !has_test {
+            i = j;
+            continue;
+        }
+        // skip any further attributes on the same item
+        let mut k = j;
+        while k + 1 < toks.len() && toks[k].is("#") && toks[k + 1].is("[")
+        {
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if toks[k].is("[") {
+                    d += 1;
+                } else if toks[k].is("]") {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // item body: brace-matched block, or a `;`-terminated item
+        let mut m = k;
+        while m < toks.len() && !toks[m].is("{") && !toks[m].is(";") {
+            m += 1;
+        }
+        let end = if m < toks.len() && toks[m].is("{") {
+            let mut d = 1usize;
+            let mut e = m + 1;
+            while e < toks.len() && d > 0 {
+                if toks[e].is("{") {
+                    d += 1;
+                } else if toks[e].is("}") {
+                    d -= 1;
+                }
+                e += 1;
+            }
+            e
+        } else {
+            (m + 1).min(toks.len())
+        };
+        for flag in in_test.iter_mut().take(end).skip(i) {
+            *flag = true;
+        }
+        i = end;
+    }
+    in_test
+}

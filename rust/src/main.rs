@@ -13,6 +13,7 @@
 //!                   the data-parallel shard engine)
 //!   eval            evaluation protocol on a benchmark
 //!   verify          benchmark store integrity check
+//!   lint            determinism & panic-safety static analysis
 //!   validate        Rust-oracle vs HLO cross-check
 //!   artifacts       list manifest artifacts
 //!   help            global or per-command usage
@@ -37,6 +38,7 @@ use xmgrid::coordinator::{eval_kshot, load_checkpoint, BackendKind,
                           NativeEnvConfig, Overlap, RolloutEngine,
                           ShardConfig, ShardedTrainer, TrainConfig,
                           Trainer};
+use xmgrid::lint;
 use xmgrid::util::fault::{FaultPlan, RetryPolicy, FAULTS_ENV};
 use xmgrid::util::bench::{json_arg_path, JsonReport};
 use xmgrid::env::api::{EnvParams, ObsMode};
@@ -111,6 +113,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "verify" => cmd_verify(&args),
+        "lint" => cmd_lint(&args),
         "validate" => cmd_validate(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" => cmd_help(&args),
@@ -145,6 +148,10 @@ commands:
   verify --benchmark B                integrity-check a stored benchmark
                                       (magic, count, per-task decode,
                                       duplicate detection)
+  lint [--json] [--rules a,b] [PATH]  determinism & panic-safety
+                                      static analysis over the source
+                                      tree (hard CI gate; exits 1 on
+                                      any violation)
   validate                            oracle cross-check
   artifacts                           list manifest
 
@@ -400,6 +407,7 @@ runtime).",
 usage: xmgrid artifacts [--artifacts-dir DIR]
 
 List every artifact in the manifest with kind and I/O arity.",
+        "lint" => LINT_HELP,
         "help" => "\
 usage: xmgrid help [command]
 
@@ -1141,6 +1149,87 @@ fn cmd_verify(args: &Args) -> Result<()> {
          compressed",
         report.tasks, report.raw_bytes, report.compressed_bytes
     );
+    Ok(())
+}
+
+const LINT_HELP: &str = "\
+usage: xmgrid lint [--json] [--rules a,b,c] [paths...]
+
+Token-level static analysis encoding the repo's determinism and
+panic-safety invariants. Scans `.rs` files (directories recurse;
+`#[cfg(test)]` / `#[test]` regions are exempt) and exits 1 on any
+violation — CI runs this as a hard gate.
+
+rules:
+  no-std-rng              only util::rng::Rng / stream_seed may produce
+                          randomness in env/, benchgen/, coordinator/
+  no-hash-iter            no HashMap/HashSet iteration (or DefaultHasher/
+                          RandomState) in determinism-critical modules —
+                          BTreeMap or collect+sort instead
+  no-wallclock-in-kernels Instant::now / SystemTime confined to
+                          util/bench.rs, coordinator/metrics.rs
+                          (WallTimer) and main.rs
+  no-unwrap-in-workers    no .unwrap()/.expect() in the supervised
+                          worker / channel paths (shard.rs, workers.rs,
+                          rollout.rs, trainer.rs)
+  float-reduction-order   no f32 accumulation or unordered float folds
+                          in coordinator reduction paths
+  must-use-result         no discarded Result from fallible engine ops
+                          (submit/broadcast/wait/rollout/save/...)
+  bad-allow               allow directives must parse, name a known
+                          rule, carry a reason, and suppress something
+
+options:
+  --json          schema-stable JSON report on stdout (version-pinned;
+                  the CI gate validates it)
+  --rules a,b,c   run a subset of rules (default: all)
+  paths...        files or directories (default: src, or rust/src when
+                  run from the repo root)
+
+escape hatch — a reviewed claim, never a bare opt-out:
+  // xmglint: allow(rule-id) -- why this site is sound
+suppresses matching violations on the same line, or on the next code
+line when the directive sits on its own (plain comments may sit
+between). Allows that no longer suppress anything are themselves
+violations: delete them when the code they excused goes away.";
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let cfg = match args.get("rules") {
+        Some(list) => match lint::LintConfig::subset(list) {
+            Ok(c) => c,
+            Err(e) => bail!("{e}"),
+        },
+        None => lint::LintConfig::all(),
+    };
+    let mut paths: Vec<PathBuf> = args.positional[1..]
+        .iter()
+        .map(PathBuf::from)
+        .collect();
+    if paths.is_empty() {
+        // running from rust/ (CI, cargo run) or from the repo root
+        let src = PathBuf::from("src");
+        let alt = PathBuf::from("rust/src");
+        if src.is_dir() {
+            paths.push(src);
+        } else if alt.is_dir() {
+            paths.push(alt);
+        } else {
+            bail!("no lint paths given and neither src/ nor rust/src/ \
+                   exists here — pass files or directories explicitly");
+        }
+    }
+    let outcome = lint::lint_paths(&paths, &cfg)?;
+    if args.flag("json") {
+        print!("{}", lint::report::json(&outcome, cfg.enabled()));
+    } else {
+        print!("{}", lint::report::human(&outcome, cfg.enabled()));
+    }
+    if !outcome.violations.is_empty() {
+        bail!(
+            "lint failed: {} violation(s) — see report above",
+            outcome.violations.len()
+        );
+    }
     Ok(())
 }
 
