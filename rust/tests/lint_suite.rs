@@ -1,0 +1,378 @@
+//! Pins the `xmgrid lint` static-analysis pass (src/lint/): one
+//! failing fixture per rule (exact file/line/rule-id), the allow
+//! directive's suppression semantics and mandatory `-- reason`, the
+//! schema-stable `--json` document, the injected-violation path the
+//! CI gate relies on, and — the gate itself — that the workspace's
+//! own sources lint clean with every rule enabled.
+
+use std::path::PathBuf;
+
+use xmgrid::lint::{
+    lint_paths, lint_source, report, LintConfig, Outcome, Violation,
+    RULES,
+};
+
+/// (file, line, rule) triples, sorted, for compact assertions.
+fn keys(violations: &[Violation]) -> Vec<(String, usize, &'static str)> {
+    let mut v: Vec<_> = violations
+        .iter()
+        .map(|x| (x.file.clone(), x.line, x.rule))
+        .collect();
+    v.sort();
+    v
+}
+
+fn lint(name: &str, text: &str) -> Vec<Violation> {
+    lint_source(name, text, &LintConfig::all()).0
+}
+
+// --- one failing fixture per rule ----------------------------------
+
+#[test]
+fn no_std_rng_fires_in_det_dirs_only() {
+    let text = "fn seed_it() {\n\
+                \x20   let mut r = rand::thread_rng();\n\
+                }\n";
+    let v = lint("benchgen/generator.rs", text);
+    // `rand` (path) and `thread_rng` (entry point) both flag
+    assert_eq!(
+        keys(&v),
+        vec![
+            ("benchgen/generator.rs".into(), 2, "no-std-rng"),
+            ("benchgen/generator.rs".into(), 2, "no-std-rng"),
+        ]
+    );
+    // the same source outside a determinism-critical dir is fine
+    assert!(lint("render/ascii.rs", text).is_empty());
+}
+
+#[test]
+fn no_hash_iter_fires_on_hash_iteration_and_random_hashers() {
+    let text = "use std::collections::HashMap;\n\
+                fn f() -> u32 {\n\
+                \x20   let mut m: HashMap<u32, u32> = HashMap::new();\n\
+                \x20   m.insert(1, 2);\n\
+                \x20   let mut acc = 0;\n\
+                \x20   for k in &m {\n\
+                \x20       acc += *k.0;\n\
+                \x20   }\n\
+                \x20   for (k, v) in m.iter() {\n\
+                \x20       acc += k + v;\n\
+                \x20   }\n\
+                \x20   acc\n\
+                }\n";
+    let v = lint("coordinator/pool.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![
+            ("coordinator/pool.rs".into(), 6, "no-hash-iter"),
+            ("coordinator/pool.rs".into(), 9, "no-hash-iter"),
+        ]
+    );
+    let hasher = "use std::collections::hash_map::DefaultHasher;\n";
+    let v = lint("env/grid.rs", hasher);
+    assert_eq!(keys(&v), vec![("env/grid.rs".into(), 1, "no-hash-iter")]);
+    // membership-only use never trips the rule
+    let ok = "use std::collections::HashSet;\n\
+              fn f(s: &HashSet<u32>) -> bool { s.contains(&3) }\n";
+    assert!(lint("env/grid.rs", ok).is_empty());
+}
+
+#[test]
+fn no_wallclock_fires_outside_the_allowed_files() {
+    let text = "use std::time::Instant;\n\
+                fn t() -> f64 {\n\
+                \x20   let t0 = Instant::now();\n\
+                \x20   t0.elapsed().as_secs_f64()\n\
+                }\n";
+    let v = lint("coordinator/rollout.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![(
+            "coordinator/rollout.rs".into(),
+            3,
+            "no-wallclock-in-kernels"
+        )]
+    );
+    // the sanctioned homes are exempt
+    assert!(lint("util/bench.rs", text).is_empty());
+    assert!(lint("coordinator/metrics.rs", text).is_empty());
+    assert!(lint("main.rs", text).is_empty());
+    // SystemTime flags even as a bare import
+    let st = "use std::time::SystemTime;\n";
+    let v = lint("env/state.rs", st);
+    assert_eq!(
+        keys(&v),
+        vec![("env/state.rs".into(), 1, "no-wallclock-in-kernels")]
+    );
+}
+
+#[test]
+fn no_unwrap_in_workers_fires_in_worker_files_only() {
+    let text = "fn f(rx: Receiver<u32>) -> u32 {\n\
+                \x20   let v = rx.recv().unwrap();\n\
+                \x20   let w = rx.recv().expect(\"second\");\n\
+                \x20   v + w\n\
+                }\n";
+    let v = lint("coordinator/shard.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![
+            ("coordinator/shard.rs".into(), 2, "no-unwrap-in-workers"),
+            ("coordinator/shard.rs".into(), 3, "no-unwrap-in-workers"),
+        ]
+    );
+    // env code is not a supervised worker path
+    assert!(lint("env/vector.rs", text).is_empty());
+}
+
+#[test]
+fn float_reduction_order_fires_on_f32_reductions() {
+    let text = "fn reduce(xs: &[f32]) -> f32 {\n\
+                \x20   let a = xs.iter().sum::<f32>();\n\
+                \x20   let b = xs.iter().fold(0.0f32, |s, x| s + x);\n\
+                \x20   a + b\n\
+                }\n";
+    let v = lint("coordinator/trainer.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![
+            ("coordinator/trainer.rs".into(), 2,
+             "float-reduction-order"),
+            ("coordinator/trainer.rs".into(), 3,
+             "float-reduction-order"),
+        ]
+    );
+    // f64 accumulation in fixed order is the sanctioned pattern
+    let ok = "fn reduce(xs: &[f32]) -> f64 {\n\
+              \x20   let mut acc = 0.0f64;\n\
+              \x20   for &x in xs {\n\
+              \x20       acc += x as f64;\n\
+              \x20   }\n\
+              \x20   acc\n\
+              }\n";
+    assert!(lint("coordinator/trainer.rs", ok).is_empty());
+    // and the rule is scoped to coordinator reduction paths
+    assert!(lint("env/observation.rs", text).is_empty());
+}
+
+#[test]
+fn must_use_result_fires_on_discarded_statement_calls() {
+    let text = "fn f(t: Ticket<u32>) {\n\
+                \x20   t.wait();\n\
+                }\n";
+    let v = lint("coordinator/native.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![("coordinator/native.rs".into(), 2, "must-use-result")]
+    );
+    // `?`-propagated and tail-position uses are not discards
+    let ok = "fn g(t: Ticket<u32>) -> Result<u32> {\n\
+              \x20   let v = t.wait()?;\n\
+              \x20   Ok(v)\n\
+              }\n\
+              fn tail(t: Ticket<u32>) -> Result<u32> {\n\
+              \x20   t.wait()\n\
+              }\n";
+    assert!(lint("coordinator/native.rs", ok).is_empty());
+}
+
+#[test]
+fn bad_allow_fires_on_malformed_unknown_and_unused() {
+    // missing reason: the allow is rejected AND the violation stays
+    let no_reason = "fn f(rx: R) {\n\
+                     \x20   // xmglint: allow(no-unwrap-in-workers)\n\
+                     \x20   rx.recv().unwrap();\n\
+                     }\n";
+    let v = lint("coordinator/workers.rs", no_reason);
+    assert_eq!(
+        keys(&v),
+        vec![
+            ("coordinator/workers.rs".into(), 2, "bad-allow"),
+            ("coordinator/workers.rs".into(), 3,
+             "no-unwrap-in-workers"),
+        ]
+    );
+    // unknown rule id
+    let unknown = "// xmglint: allow(no-such-rule) -- because\n";
+    let v = lint("env/grid.rs", unknown);
+    assert_eq!(keys(&v), vec![("env/grid.rs".into(), 1, "bad-allow")]);
+    // well-formed but suppressing nothing
+    let unused = "// xmglint: allow(no-std-rng) -- stale claim\n\
+                  fn nothing_random_here() {}\n";
+    let v = lint("benchgen/ops.rs", unused);
+    assert_eq!(keys(&v), vec![("benchgen/ops.rs".into(), 1, "bad-allow")]);
+    // gibberish after the marker
+    let garbled = "// xmglint: silence everything\n";
+    let v = lint("env/grid.rs", garbled);
+    assert_eq!(keys(&v), vec![("env/grid.rs".into(), 1, "bad-allow")]);
+    // doc comments that *mention* the syntax are not directives
+    let doc = "//! Example: `// xmglint: allow(no-std-rng) -- why`\n\
+               fn f() {}\n";
+    assert!(lint("env/grid.rs", doc).is_empty());
+}
+
+// --- allow-directive suppression semantics -------------------------
+
+#[test]
+fn allow_suppresses_same_line_and_next_code_line() {
+    let cfg = LintConfig::all();
+    // trailing-comment form
+    let inline = "fn f(rx: R) {\n\
+                  \x20   rx.recv().unwrap(); // xmglint: \
+                  allow(no-unwrap-in-workers) -- teardown only\n\
+                  }\n";
+    let (v, a) = lint_source("coordinator/shard.rs", inline, &cfg);
+    assert!(v.is_empty(), "inline allow failed: {v:?}");
+    assert_eq!(a.len(), 1);
+    assert_eq!(a[0].rule, "no-unwrap-in-workers");
+    assert_eq!(a[0].reason, "teardown only");
+    // standalone form, with a plain explanation comment stacked between
+    let stacked = "fn f(rx: R) {\n\
+                   \x20   // xmglint: allow(no-unwrap-in-workers) -- \
+                   teardown only\n\
+                   \x20   // (the pool is already drained here)\n\
+                   \x20   rx.recv().unwrap();\n\
+                   }\n";
+    let (v, a) = lint_source("coordinator/shard.rs", stacked, &cfg);
+    assert!(v.is_empty(), "stacked allow failed: {v:?}");
+    assert_eq!(a.len(), 1);
+    assert_eq!(a[0].line, 2);
+    // an allow for rule X does not silence rule Y on the same line
+    let wrong_rule = "fn f(rx: R) {\n\
+                      \x20   // xmglint: allow(no-std-rng) -- wrong\n\
+                      \x20   rx.recv().unwrap();\n\
+                      }\n";
+    let (v, _) = lint_source("coordinator/shard.rs", wrong_rule, &cfg);
+    let k = keys(&v);
+    assert!(
+        k.contains(&(
+            "coordinator/shard.rs".into(),
+            3,
+            "no-unwrap-in-workers"
+        )),
+        "wrong-rule allow must not suppress: {k:?}"
+    );
+}
+
+// --- --rules subsets -----------------------------------------------
+
+#[test]
+fn rule_subsets_disable_everything_else() {
+    let text = "fn f(rx: R) {\n\
+                \x20   let mut r = rand::thread_rng();\n\
+                \x20   rx.recv().unwrap();\n\
+                }\n";
+    let cfg = LintConfig::subset("no-std-rng").unwrap();
+    let (v, _) = lint_source("coordinator/shard.rs", text, &cfg);
+    assert!(v.iter().all(|x| x.rule == "no-std-rng"), "{v:?}");
+    assert!(!v.is_empty());
+    assert!(LintConfig::subset("no-such-rule").is_err());
+    // subset order is canonicalized for stable JSON output
+    let cfg =
+        LintConfig::subset("must-use-result,no-std-rng").unwrap();
+    assert_eq!(cfg.enabled(), ["no-std-rng", "must-use-result"]);
+}
+
+// --- JSON schema stability -----------------------------------------
+
+#[test]
+fn json_report_is_schema_stable() {
+    let cfg = LintConfig::all();
+    let text = "fn f(rx: R) { rx.recv().unwrap(); }\n";
+    let (violations, allows) =
+        lint_source("coordinator/shard.rs", text, &cfg);
+    let outcome = Outcome { violations, allows, files: 1 };
+    let got = report::json(&outcome, cfg.enabled());
+    let expected = concat!(
+        "{\n",
+        "  \"tool\": \"xmglint\",\n",
+        "  \"version\": 1,\n",
+        "  \"rules\": [\"no-std-rng\", \"no-hash-iter\", ",
+        "\"no-wallclock-in-kernels\", \"no-unwrap-in-workers\", ",
+        "\"float-reduction-order\", \"must-use-result\", ",
+        "\"bad-allow\"],\n",
+        "  \"violations\": [\n",
+        "    {\"file\": \"coordinator/shard.rs\", \"line\": 1, ",
+        "\"rule\": \"no-unwrap-in-workers\", \"message\": ",
+        "\".unwrap() in a supervised worker path — return the error ",
+        "so recovery can replay the chunk\"}\n",
+        "  ],\n",
+        "  \"allows\": [],\n",
+        "  \"summary\": {\"files\": 1, \"violations\": 1, ",
+        "\"allows\": 0}\n",
+        "}\n",
+    );
+    assert_eq!(got, expected);
+}
+
+// --- the CI gate, verified end to end ------------------------------
+
+/// The CI step fails when `violations` is non-empty; this pins that an
+/// injected violation actually produces one through the same
+/// `lint_paths` entry point the CLI uses (file discovery, src-relative
+/// scoping, allow machinery — the full path, not just the checker).
+#[test]
+fn injected_violation_fails_the_gate() {
+    let root = std::env::temp_dir()
+        .join(format!("xmglint-inject-{}", std::process::id()));
+    let dir = root.join("src").join("coordinator");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("workers.rs"),
+        "fn f(rx: R) { rx.recv().unwrap(); }\n",
+    )
+    .unwrap();
+    let out =
+        lint_paths(&[root.join("src")], &LintConfig::all()).unwrap();
+    std::fs::remove_dir_all(&root).ok();
+    assert_eq!(
+        keys(&out.violations),
+        vec![(
+            "coordinator/workers.rs".into(),
+            1,
+            "no-unwrap-in-workers"
+        )]
+    );
+    assert_eq!(out.files, 1);
+}
+
+/// The gate itself: the workspace's own sources lint clean with every
+/// rule enabled, and every surviving allow carries a written reason.
+#[test]
+fn workspace_lints_clean_with_all_rules() {
+    let out = lint_paths(&[PathBuf::from("src")], &LintConfig::all())
+        .expect("linting src/");
+    assert!(out.files >= 30, "suspiciously few files: {}", out.files);
+    assert!(
+        out.violations.is_empty(),
+        "workspace must lint clean, got: {:#?}",
+        out.violations
+    );
+    for a in &out.allows {
+        assert!(
+            !a.reason.trim().is_empty(),
+            "allow without a reason at {}:{}",
+            a.file,
+            a.line
+        );
+    }
+}
+
+/// The registry and the documented rule set must not drift apart.
+#[test]
+fn rule_registry_matches_documented_set() {
+    let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+    assert_eq!(
+        ids,
+        [
+            "no-std-rng",
+            "no-hash-iter",
+            "no-wallclock-in-kernels",
+            "no-unwrap-in-workers",
+            "float-reduction-order",
+            "must-use-result",
+            "bad-allow",
+        ]
+    );
+}
