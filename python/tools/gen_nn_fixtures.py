@@ -1,0 +1,880 @@
+#!/usr/bin/env python3
+"""Oracle fixture generator for the native `rust/src/nn/` stack.
+
+Transliterates the reference model math of `python/compile/model.py`
+(itself the `kernels/ref.py` composition) under the *native numeric
+contract* and emits bit-exact fixtures consumed by
+`rust/tests/nn_kernels.rs`:
+
+  * dot products accumulate in f64 sequentially over the contraction
+    index and round to f32 once;
+  * elementwise +,-,*,/ are single-rounded f32 (evaluated in f64 —
+    exact for f32 operands — then rounded once, which IEEE-754
+    guarantees equals the directly-rounded f32 op);
+  * transcendentals (exp, tanh, log, sigmoid) evaluate in f64 via the
+    platform libm on the widened input and round to f32 once — both
+    CPython's `math` module and Rust's `f64::{exp,tanh,ln}` resolve to
+    the system libm on linux-gnu, so the bit patterns agree;
+  * batch reductions (loss means, adv normalization) accumulate in f64
+    in flat `[T, B]` order (t-major), rounding to f32 once at the end.
+
+The same functions are re-run with rounding disabled (pure f64) to
+validate every analytic gradient against central finite differences to
+~1e-8 relative error before anything is emitted, so the committed
+fixtures carry both the forward bit patterns and a machine-checked
+derivation of the BPTT backward used in `rust/src/nn/train.rs`.
+
+Regenerate with:  python3 python/tools/gen_nn_fixtures.py
+Output:           rust/tests/data/nn_fixtures.txt
+"""
+
+import math
+import os
+import struct
+
+NUM_TILES = 15
+NUM_COLORS = 14
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util::rng mirror (xoshiro256++ seeded by splitmix64)
+# ---------------------------------------------------------------------------
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class XRng:
+    """Bit-exact mirror of `rust/src/util/rng.rs`."""
+
+    def __init__(self, seed=None, state=None):
+        if state is not None:
+            self.s = list(state)
+            return
+        x = seed & MASK
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E37_79B9_7F4A_7C15) & MASK
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        r = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def below(self, n):
+        return self.next_u64() % n
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / float(1 << 53))
+
+    def split(self):
+        return XRng(seed=self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+
+    def shuffle(self, items):
+        for i in range(len(items) - 1, 0, -1):
+            j = self.below(i + 1)
+            items[i], items[j] = items[j], items[i]
+
+
+# ---------------------------------------------------------------------------
+# numeric contract ops (MODE32 toggles f32 rounding; False = pure f64,
+# used only for the finite-difference validation of the backward)
+# ---------------------------------------------------------------------------
+
+MODE32 = True
+
+
+def f32(x):
+    return struct.unpack("<f", struct.pack("<f", float(x)))[0]
+
+
+def rnd(x):
+    return f32(x) if MODE32 else float(x)
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", float(x)))[0]
+
+
+def exp_c(x):
+    return rnd(math.exp(x))
+
+
+def tanh_c(x):
+    return rnd(math.tanh(x))
+
+
+def sigmoid_c(x):
+    return rnd(1.0 / (1.0 + math.exp(-x)))
+
+
+def matvec(x, w, n_in, n_out, bias=None):
+    """out[j] = f32(sum_k f64(x[k] * w[k*n_out + j])) (+ bias, f32 add).
+
+    Row-major `w` of shape [n_in, n_out], mirroring `x @ w` in the
+    reference. The f64 accumulator runs over k ascending.
+    """
+    out = []
+    for j in range(n_out):
+        acc = 0.0
+        for k in range(n_in):
+            acc += x[k] * w[k * n_out + j]
+        v = rnd(acc)
+        if bias is not None:
+            v = rnd(v + bias[j])
+        out.append(v)
+    return out
+
+
+def log_softmax(logits):
+    """Contract: m = max (f32 compare); d_i = f32(x_i - m); s = f64
+    sequential sum of exp(d_i); logp_i = f32(d_i - ln s)."""
+    m = max(logits)
+    d = [rnd(x - m) for x in logits]
+    s = 0.0
+    for di in d:
+        s += math.exp(di)
+    ls = math.log(s)
+    return [rnd(di - ls) for di in d]
+
+
+def categorical(rng, logits):
+    """One action draw: softmax probs in f64 from the contract
+    log-probs, one rng.f64() per draw, CDF walk in action order."""
+    logp = log_softmax(logits)
+    probs = [math.exp(lp) for lp in logp]
+    total = sum(probs)  # ~1.0; normalizes away rounding
+    u = rng.f64() * total
+    acc = 0.0
+    for a, p in enumerate(probs):
+        acc += p
+        if u < acc:
+            return a
+    return len(probs) - 1
+
+
+# ---------------------------------------------------------------------------
+# model forward (transliteration of python/compile/model.py)
+# ---------------------------------------------------------------------------
+
+
+class Dims:
+    def __init__(self, v, e, ae, d, h, a, extra):
+        self.v, self.e, self.ae, self.d = v, e, ae, d
+        self.h, self.a, self.extra = h, a, extra
+
+    @property
+    def obs_len(self):
+        return self.v * self.v * 2 + self.extra
+
+    @property
+    def in1(self):
+        return self.v * self.v * 2 * self.e + self.extra
+
+    @property
+    def rl2_in(self):
+        return self.d + self.ae + 1
+
+
+PARAM_NAMES = (
+    "tile_emb", "col_emb", "act_emb", "w1", "b1",
+    "wi", "wh", "bi", "bh", "whead", "bhead",
+)
+
+
+def param_shapes(dm):
+    return {
+        "tile_emb": (NUM_TILES, dm.e),
+        "col_emb": (NUM_COLORS, dm.e),
+        "act_emb": (dm.a + 1, dm.ae),
+        "w1": (dm.in1, dm.d),
+        "b1": (dm.d,),
+        "wi": (dm.rl2_in, 3 * dm.h),
+        "wh": (dm.h, 3 * dm.h),
+        "bi": (3 * dm.h,),
+        "bh": (3 * dm.h,),
+        "whead": (dm.h, dm.a + 1),
+        "bhead": (dm.a + 1,),
+    }
+
+
+def embed_obs(params, dm, obs_row):
+    """The [V*V*2 (+extra)] i32 row -> f32 input of w1: per cell, E
+    tile-embedding dims then E color dims; extra wrapper values appended
+    raw as f32."""
+    flat = []
+    cells = dm.v * dm.v
+    for c in range(cells):
+        t = min(max(obs_row[c * 2], 0), NUM_TILES - 1)
+        k = min(max(obs_row[c * 2 + 1], 0), NUM_COLORS - 1)
+        flat.extend(params["tile_emb"][t * dm.e:(t + 1) * dm.e])
+        flat.extend(params["col_emb"][k * dm.e:(k + 1) * dm.e])
+    for i in range(dm.extra):
+        flat.append(float(obs_row[cells * 2 + i]))
+    return flat
+
+
+def network_step(params, dm, obs_row, prev_a, prev_r, done, h):
+    """One env, one step: returns (logits, value, h_out, cache)."""
+    flat = embed_obs(params, dm, obs_row)
+    trunk = matvec(flat, params["w1"], dm.in1, dm.d, params["b1"])
+    trunk = [x if x > 0.0 else 0.0 for x in trunk]
+    pa = dm.a if done else min(max(prev_a, 0), dm.a)
+    ae = params["act_emb"][pa * dm.ae:(pa + 1) * dm.ae]
+    nd = rnd(1.0 - (1.0 if done else 0.0))
+    pr = rnd(prev_r * nd)
+    x = trunk + list(ae) + [pr]
+    h_in = [rnd(hj * nd) for hj in h]
+    gi = matvec(x, params["wi"], dm.rl2_in, 3 * dm.h, params["bi"])
+    gh = matvec(h_in, params["wh"], dm.h, 3 * dm.h, params["bh"])
+    H = dm.h
+    r = [sigmoid_c(rnd(gi[j] + gh[j])) for j in range(H)]
+    z = [sigmoid_c(rnd(gi[H + j] + gh[H + j])) for j in range(H)]
+    n = [tanh_c(rnd(gi[2 * H + j] + rnd(r[j] * gh[2 * H + j])))
+         for j in range(H)]
+    h_out = [rnd(rnd(rnd(1.0 - z[j]) * n[j]) + rnd(z[j] * h_in[j]))
+             for j in range(H)]
+    out = matvec(h_out, params["whead"], dm.h, dm.a + 1, params["bhead"])
+    logits, value = out[: dm.a], out[dm.a]
+    cache = {
+        "x": x, "h_in": h_in, "r": r, "z": z, "n": n,
+        "ghn": gh[2 * H:], "pa": pa, "nd": nd, "trunk": trunk,
+        "obs_row": obs_row, "h_out": h_out,
+    }
+    return logits, value, h_out, cache
+
+
+def gae(rewards, values, dones, last_value, gamma, lam, T, B):
+    """Reverse-scan GAE in contract f32; arrays flat [T, B]. Returns
+    (adv, targets) flat [T, B]."""
+    g, l = rnd(gamma), rnd(lam)
+    gl = rnd(g * l)
+    adv = [0.0] * (T * B)
+    targets = [0.0] * (T * B)
+    for b in range(B):
+        a_next = 0.0
+        v_next = last_value[b]
+        for t in range(T - 1, -1, -1):
+            i = t * B + b
+            nonterm = rnd(1.0 - (1.0 if dones[i] else 0.0))
+            t1 = rnd(g * v_next)
+            t2 = rnd(t1 * nonterm)
+            t3 = rnd(rewards[i] + t2)
+            delta = rnd(t3 - values[i])
+            u1 = rnd(gl * nonterm)
+            u2 = rnd(u1 * a_next)
+            a_next = rnd(delta + u2)
+            adv[i] = a_next
+            targets[i] = rnd(a_next + values[i])
+            v_next = values[i]
+    return adv, targets
+
+
+# ---------------------------------------------------------------------------
+# PPO loss + analytic backward (BPTT)
+# ---------------------------------------------------------------------------
+
+
+def forward_sequence(params, dm, mb):
+    """Run the policy over the minibatch's T-step window. `mb` holds
+    flat [T, Bm] arrays plus h0 [Bm, H]. Returns per-step caches and
+    (logits, values) flat [T, Bm, A] / [T, Bm]."""
+    T, Bm = mb["T"], mb["Bm"]
+    h = [list(mb["h0"][b * dm.h:(b + 1) * dm.h]) for b in range(Bm)]
+    logits = [[0.0] * dm.a for _ in range(T * Bm)]
+    values = [0.0] * (T * Bm)
+    caches = [None] * (T * Bm)
+    ol = dm.obs_len
+    for t in range(T):
+        for b in range(Bm):
+            i = t * Bm + b
+            obs_row = mb["obs"][i * ol:(i + 1) * ol]
+            lg, v, h_new, cache = network_step(
+                params, dm, obs_row, mb["prev_a"][i], mb["prev_r"][i],
+                mb["done"][i], h[b])
+            logits[i], values[i], caches[i] = lg, v, cache
+            h[b] = h_new
+    return logits, values, caches
+
+
+def ppo_loss_and_grads(params, dm, mb, hp):
+    """Full loss forward + analytic BPTT backward over the minibatch.
+
+    Returns (metrics6, grads) where metrics6 = [total, pi_loss, v_loss,
+    entropy, approx_kl, clip_frac] (contract f32) and grads maps param
+    name -> f64 list. Loss means accumulate f64 in flat [T, Bm] order.
+    """
+    T, Bm = mb["T"], mb["Bm"]
+    N = T * Bm
+    # hyperparameters live as f32 on the Rust side: round them first so
+    # every f64 expression below sees the identical operand bits
+    clip_eps = float(f32(hp[1]))
+    ent_coef = float(f32(hp[4]))
+    vf_coef = float(f32(hp[5]))
+    logits, values, caches = forward_sequence(params, dm, mb)
+
+    # adv normalization over the minibatch, f64 mean/std (population)
+    s = 0.0
+    for i in range(N):
+        s += mb["adv"][i]
+    mean = s / N
+    s2 = 0.0
+    for i in range(N):
+        d = mb["adv"][i] - mean
+        s2 += d * d
+    std = math.sqrt(s2 / N)
+    adv_n = [rnd((mb["adv"][i] - mean) / (std + 1e-8)) for i in range(N)]
+
+    lo, hi = rnd(1.0 - clip_eps), rnd(1.0 + clip_eps)
+    logp_all = [log_softmax(logits[i]) for i in range(N)]
+    sum_pi, sum_v, sum_ent, sum_kl, n_clip = 0.0, 0.0, 0.0, 0.0, 0
+    dlogits = [[0.0] * dm.a for _ in range(N)]
+    dvalues = [0.0] * N
+    for i in range(N):
+        act = mb["actions"][i]
+        lp = logp_all[i][act]
+        dl = rnd(lp - mb["old_logp"][i])
+        ratio = exp_c(dl)
+        a = adv_n[i]
+        pg1 = rnd(ratio * a)
+        rc = min(max(ratio, lo), hi)
+        pg2 = rnd(rc * a)
+        sum_pi += min(pg1, pg2)
+        rf = ratio
+        sum_kl += (rf - 1.0) - math.log(rf)
+        if abs(rnd(ratio - 1.0)) > clip_eps:
+            n_clip += 1
+        # d min(pg1, pg2) / d logp  (ratio' = ratio)
+        if pg1 <= pg2:
+            dmin_dlogp = a * ratio
+        else:
+            dmin_dlogp = a * ratio if lo <= ratio <= hi else 0.0
+        dlp = -(1.0 / N) * dmin_dlogp  # pi_loss = -mean(min(...))
+        probs = [math.exp(lp_a) for lp_a in logp_all[i]]
+        ent_i = 0.0
+        for p_a, lp_a in zip(probs, logp_all[i]):
+            ent_i -= p_a * lp_a
+        sum_ent += ent_i
+        for j in range(dm.a):
+            d_z = dlp * ((1.0 if j == act else 0.0) - probs[j])
+            # total has -ent_coef * entropy; dH/dz_a = -p_a (logp_a + H)
+            d_z += ent_coef / N * probs[j] * (logp_all[i][j] + ent_i)
+            dlogits[i][j] = d_z
+        e = rnd(values[i] - mb["targets"][i])
+        sum_v += e * e
+        dvalues[i] = vf_coef / N * e
+
+    pi_loss = rnd(-(sum_pi / N))
+    v_loss = rnd(0.5 * sum_v / N)
+    entropy = rnd(sum_ent / N)
+    approx_kl = rnd(sum_kl / N)
+    clip_frac = rnd(n_clip / N)
+    total = rnd(pi_loss + vf_coef * float(v_loss)
+                - ent_coef * float(entropy))
+    # recompute in f64 from the unrounded sums when rounding is off
+    if not MODE32:
+        total = (-(sum_pi / N) + vf_coef * (0.5 * sum_v / N)
+                 - ent_coef * (sum_ent / N))
+
+    grads = {nm: [0.0] * (sh[0] * (sh[1] if len(sh) > 1 else 1))
+             for nm, sh in param_shapes(dm).items()}
+    backward_sequence(params, dm, mb, caches, dlogits, dvalues, grads)
+    metrics = [total, pi_loss, v_loss, entropy, approx_kl, clip_frac]
+    return metrics, grads, std
+
+
+def backward_sequence(params, dm, mb, caches, dlogits, dvalues, grads):
+    """BPTT: iterate t descending, envs ascending; f64 grad buffers."""
+    T, Bm, H, A = mb["T"], mb["Bm"], dm.h, dm.a
+    dh_carry = [[0.0] * H for _ in range(Bm)]
+    for t in range(T - 1, -1, -1):
+        for b in range(Bm):
+            i = t * Bm + b
+            c = caches[i]
+            # head backward: out = h_out @ whead + bhead
+            dout = dlogits[i] + [dvalues[i]]
+            dh = list(dh_carry[b])
+            for j in range(H):
+                hj = c["h_out"][j]
+                base = j * (A + 1)
+                for o in range(A + 1):
+                    grads["whead"][base + o] += hj * dout[o]
+                    dh[j] += dout[o] * params["whead"][base + o]
+            for o in range(A + 1):
+                grads["bhead"][o] += dout[o]
+            # GRU backward
+            dgi = [0.0] * (3 * H)
+            dgh = [0.0] * (3 * H)
+            dh_in = [0.0] * H
+            for j in range(H):
+                r, z, n = c["r"][j], c["z"][j], c["n"][j]
+                dn = dh[j] * (1.0 - z)
+                dz = dh[j] * (c["h_in"][j] - n)
+                dh_in[j] += dh[j] * z
+                da_n = dn * (1.0 - n * n)
+                dr = da_n * c["ghn"][j]
+                da_r = dr * r * (1.0 - r)
+                da_z = dz * z * (1.0 - z)
+                dgi[j], dgi[H + j], dgi[2 * H + j] = da_r, da_z, da_n
+                dgh[j], dgh[H + j] = da_r, da_z
+                dgh[2 * H + j] = da_n * r
+            dx = [0.0] * dm.rl2_in
+            for k in range(dm.rl2_in):
+                xk = c["x"][k]
+                base = k * 3 * H
+                acc = 0.0
+                for j in range(3 * H):
+                    grads["wi"][base + j] += xk * dgi[j]
+                    acc += dgi[j] * params["wi"][base + j]
+                dx[k] = acc
+            for k in range(H):
+                hk = c["h_in"][k]
+                base = k * 3 * H
+                acc = 0.0
+                for j in range(3 * H):
+                    grads["wh"][base + j] += hk * dgh[j]
+                    acc += dgh[j] * params["wh"][base + j]
+                dh_in[k] += acc
+            for j in range(3 * H):
+                grads["bi"][j] += dgi[j]
+                grads["bh"][j] += dgh[j]
+            # input-mask backward: h_in = h_prev * (1 - done)
+            dh_carry[b] = [dh_in[k] * c["nd"] for k in range(H)]
+            # trunk / embeddings backward
+            dtrunk = dx[: dm.d]
+            dae = dx[dm.d: dm.d + dm.ae]
+            ab = c["pa"] * dm.ae
+            for j in range(dm.ae):
+                grads["act_emb"][ab + j] += dae[j]
+            dpre = [dtrunk[j] if c["trunk"][j] > 0.0 else 0.0
+                    for j in range(dm.d)]
+            flat = embed_obs(params, dm, c["obs_row"])
+            dflat = [0.0] * dm.in1
+            for k in range(dm.in1):
+                fk = flat[k]
+                base = k * dm.d
+                acc = 0.0
+                for j in range(dm.d):
+                    grads["w1"][base + j] += fk * dpre[j]
+                    acc += dpre[j] * params["w1"][base + j]
+                dflat[k] = acc
+            for j in range(dm.d):
+                grads["b1"][j] += dpre[j]
+            cells = dm.v * dm.v
+            for cc in range(cells):
+                ti = min(max(c["obs_row"][cc * 2], 0), NUM_TILES - 1)
+                ci = min(max(c["obs_row"][cc * 2 + 1], 0), NUM_COLORS - 1)
+                for j in range(dm.e):
+                    grads["tile_emb"][ti * dm.e + j] += \
+                        dflat[cc * 2 * dm.e + j]
+                    grads["col_emb"][ci * dm.e + j] += \
+                        dflat[cc * 2 * dm.e + dm.e + j]
+
+
+def global_norm(grads):
+    acc = 0.0
+    for nm in PARAM_NAMES:
+        for g in grads[nm]:
+            acc += g * g
+    return math.sqrt(acc)
+
+
+def adam_step(params, grads, mstate, vstate, t, lr, max_norm):
+    """Contract Adam: f64 math per element, states/params rounded to
+    f32 on store. `t` is the post-increment step count (>= 1)."""
+    lr = float(f32(lr))
+    max_norm = float(f32(max_norm))
+    gn = global_norm(grads)
+    scale = min(1.0, max_norm / (gn + 1e-8))
+    bc1 = 1.0 - 0.9 ** t
+    bc2 = 1.0 - 0.999 ** t
+    for nm in PARAM_NAMES:
+        p, g = params[nm], grads[nm]
+        m, v = mstate[nm], vstate[nm]
+        for k in range(len(p)):
+            gk = g[k] * scale
+            mk = rnd(0.9 * m[k] + 0.1 * gk)
+            vk = rnd(0.999 * v[k] + 0.001 * gk * gk)
+            m[k], v[k] = mk, vk
+            mh = mk / bc1
+            vh = vk / bc2
+            p[k] = rnd(p[k] - lr * mh / (math.sqrt(vh) + 1e-8))
+    return gn
+
+
+# ---------------------------------------------------------------------------
+# finite-difference validation (pure f64 mode)
+# ---------------------------------------------------------------------------
+
+
+def fin_diff_check(dm, mb, hp, params):
+    global MODE32
+    MODE32 = False
+    try:
+        _, grads, _ = ppo_loss_and_grads(params, dm, mb, hp)
+
+        def loss_of(ps):
+            m, _, _ = ppo_loss_and_grads(ps, dm, mb, hp)
+            return m[0]
+
+        eps = 1e-6
+        worst = 0.0
+        for nm in PARAM_NAMES:
+            n = len(params[nm])
+            stride = max(1, n // 7)  # probe a spread of elements
+            for k in range(0, n, stride):
+                pp = {q: list(params[q]) for q in PARAM_NAMES}
+                pp[nm][k] += eps
+                up = loss_of(pp)
+                pp[nm][k] -= 2 * eps
+                dn = loss_of(pp)
+                num = (up - dn) / (2 * eps)
+                ana = grads[nm][k]
+                rel = abs(num - ana) / max(abs(num), abs(ana), 1e-6)
+                worst = max(worst, rel)
+                assert rel < 1e-4, (
+                    f"grad mismatch {nm}[{k}]: fin-diff {num:.9g} "
+                    f"analytic {ana:.9g} rel {rel:.3g}")
+        print(f"fin-diff ok: worst rel err {worst:.3g}")
+    finally:
+        MODE32 = True
+
+
+# ---------------------------------------------------------------------------
+# fixture emission
+# ---------------------------------------------------------------------------
+
+
+class Emit:
+    def __init__(self):
+        self.lines = [
+            "# generated by python/tools/gen_nn_fixtures.py -- do not edit",
+        ]
+
+    def case(self, name):
+        self.lines.append(f"case {name}")
+
+    def i32(self, name, vals):
+        self.lines.append(
+            f"i32 {name} {len(vals)} " + " ".join(str(int(v)) for v in vals))
+
+    def fl(self, name, vals):
+        self.lines.append(
+            f"f32 {name} {len(vals)} "
+            + " ".join(f"{f32_bits(v):08x}" for v in vals))
+
+    def u64(self, name, vals):
+        self.lines.append(
+            f"u64 {name} {len(vals)} " + " ".join(f"{v:016x}" for v in vals))
+
+    def end(self):
+        self.lines.append("end")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def rand_f32s(rng, n, scale=1.0, shift=-0.5):
+    return [f32((rng.f64() + shift) * scale) for _ in range(n)]
+
+
+def rand_params(rng, dm, scale=0.6):
+    params = {}
+    for nm, sh in param_shapes(dm).items():
+        n = sh[0] * (sh[1] if len(sh) > 1 else 1)
+        params[nm] = rand_f32s(rng, n, scale=scale)
+    return params
+
+
+def make_minibatch(rng, dm, T, Bm):
+    """Synthetic rollout minibatch with realistic structure."""
+    N = T * Bm
+    ol = dm.obs_len
+    obs = []
+    cells = dm.v * dm.v
+    for _ in range(N):
+        row = []
+        for _ in range(cells):
+            row.append(rng.below(NUM_TILES + 2) - 1)  # includes clamping
+            row.append(rng.below(NUM_COLORS + 2) - 1)
+        for _ in range(dm.extra):
+            row.append(rng.below(3))
+        obs.extend(row)
+    prev_a = [rng.below(dm.a + 1) for _ in range(N)]
+    prev_r = rand_f32s(rng, N, scale=0.5, shift=0.0)
+    done = [1 if rng.f64() < 0.2 else 0 for _ in range(N)]
+    actions = [rng.below(dm.a) for _ in range(N)]
+    old_logp = [f32(-(rng.f64() * 2.0 + 0.1)) for _ in range(N)]
+    old_value = rand_f32s(rng, N, scale=1.0)
+    rewards = [f32(rng.f64() * 0.5) if rng.f64() < 0.3 else 0.0
+               for _ in range(N)]
+    done_after = [1 if rng.f64() < 0.2 else 0 for _ in range(N)]
+    last_value = rand_f32s(rng, Bm, scale=1.0)
+    h0 = rand_f32s(rng, Bm * dm.h, scale=0.8)
+    return {
+        "T": T, "Bm": Bm, "obs": obs, "prev_a": prev_a, "prev_r": prev_r,
+        "done": done, "actions": actions, "old_logp": old_logp,
+        "old_value": old_value, "rewards": rewards,
+        "done_after": done_after, "last_value": last_value, "h0": h0,
+    }
+
+
+def main():
+    out = Emit()
+
+    # --- rng parity ------------------------------------------------------
+    rng = XRng(seed=123)
+    u = [rng.next_u64() for _ in range(6)]
+    f = [XRng(seed=123)]
+    fr = f[0]
+    fvals = [fr.f64() for _ in range(6)]
+    sp = XRng(seed=123)
+    child = sp.split()
+    out.case("rng")
+    out.u64("seed", [123])
+    out.u64("u64s", u)
+    out.u64("f64_bits",
+            [struct.unpack("<Q", struct.pack("<d", x))[0] for x in fvals])
+    out.u64("split_first", [child.next_u64()])
+    out.end()
+
+    # --- gru cell --------------------------------------------------------
+    rng = XRng(seed=7)
+    B, I, H = 3, 7, 4
+    x = rand_f32s(rng, B * I)
+    h = rand_f32s(rng, B * H)
+    wi = rand_f32s(rng, I * 3 * H)
+    wh = rand_f32s(rng, H * 3 * H)
+    bi = rand_f32s(rng, 3 * H, scale=0.2)
+    bh = rand_f32s(rng, 3 * H, scale=0.2)
+    h_out = []
+    for b in range(B):
+        xb, hb = x[b * I:(b + 1) * I], h[b * H:(b + 1) * H]
+        gi = matvec(xb, wi, I, 3 * H, bi)
+        gh = matvec(hb, wh, H, 3 * H, bh)
+        r = [sigmoid_c(rnd(gi[j] + gh[j])) for j in range(H)]
+        z = [sigmoid_c(rnd(gi[H + j] + gh[H + j])) for j in range(H)]
+        n = [tanh_c(rnd(gi[2 * H + j] + rnd(r[j] * gh[2 * H + j])))
+             for j in range(H)]
+        h_out.extend(
+            rnd(rnd(rnd(1.0 - z[j]) * n[j]) + rnd(z[j] * hb[j]))
+            for j in range(H))
+    out.case("gru_forward")
+    out.i32("dims", [B, I, H])
+    out.fl("x", x)
+    out.fl("h", h)
+    out.fl("wi", wi)
+    out.fl("wh", wh)
+    out.fl("bi", bi)
+    out.fl("bh", bh)
+    out.fl("h_out", h_out)
+    out.end()
+
+    # --- actor-critic head ----------------------------------------------
+    rng = XRng(seed=8)
+    B, H, A = 3, 4, 6
+    hv = rand_f32s(rng, B * H)
+    w = rand_f32s(rng, H * (A + 1))
+    bb = rand_f32s(rng, A + 1, scale=0.3)
+    logits, value = [], []
+    for b in range(B):
+        o = matvec(hv[b * H:(b + 1) * H], w, H, A + 1, bb)
+        logits.extend(o[:A])
+        value.append(o[A])
+    out.case("head_forward")
+    out.i32("dims", [B, H, A])
+    out.fl("h", hv)
+    out.fl("w", w)
+    out.fl("b", bb)
+    out.fl("logits", logits)
+    out.fl("value", value)
+    out.end()
+
+    # --- log-softmax -----------------------------------------------------
+    rng = XRng(seed=9)
+    B, A = 4, 6
+    lg = rand_f32s(rng, B * A, scale=4.0)
+    lp = []
+    for b in range(B):
+        lp.extend(log_softmax(lg[b * A:(b + 1) * A]))
+    out.case("log_softmax")
+    out.i32("dims", [B, A])
+    out.fl("logits", lg)
+    out.fl("logp", lp)
+    out.end()
+
+    # --- categorical sampling -------------------------------------------
+    rng = XRng(seed=10)
+    B, A = 5, 6
+    lg = rand_f32s(rng, B * A, scale=3.0)
+    act_rng = XRng(seed=77)
+    acts = [categorical(act_rng, lg[b * A:(b + 1) * A]) for b in range(B)]
+    out.case("categorical")
+    out.u64("seed", [77])
+    out.i32("dims", [B, A])
+    out.fl("logits", lg)
+    out.i32("actions", acts)
+    out.end()
+
+    # --- network_step (symbolic, and with wrapper extras) ---------------
+    for name, extra in (("network_step", 0), ("network_step_ext", 4)):
+        rng = XRng(seed=11 + extra)
+        dm = Dims(v=5, e=2, ae=3, d=6, h=4, a=6, extra=extra)
+        B = 4
+        params = rand_params(rng, dm)
+        mb_obs = []
+        for _ in range(B):
+            row = []
+            for _ in range(dm.v * dm.v):
+                row.append(rng.below(NUM_TILES + 2) - 1)
+                row.append(rng.below(NUM_COLORS + 2) - 1)
+            for _ in range(extra):
+                row.append(rng.below(3))
+            mb_obs.append(row)
+        prev_a = [0, 3, 6, 2]
+        prev_r = [f32(0.25), 0.0, f32(0.5), f32(-0.125)]
+        done = [0, 1, 0, 1]
+        h0 = rand_f32s(rng, B * dm.h)
+        lgs, vals, houts = [], [], []
+        for b in range(B):
+            lg, v, ho, _ = network_step(
+                params, dm, mb_obs[b], prev_a[b], prev_r[b], done[b],
+                h0[b * dm.h:(b + 1) * dm.h])
+            lgs.extend(lg)
+            vals.append(v)
+            houts.extend(ho)
+        out.case(name)
+        out.i32("dims", [B, dm.v, dm.e, dm.ae, dm.d, dm.h, dm.a, extra])
+        for nm in PARAM_NAMES:
+            out.fl(nm, params[nm])
+        out.i32("obs", [v for row in mb_obs for v in row])
+        out.i32("prev_a", prev_a)
+        out.fl("prev_r", prev_r)
+        out.i32("done", done)
+        out.fl("h", h0)
+        out.fl("logits", lgs)
+        out.fl("value", vals)
+        out.fl("h_out", houts)
+        out.end()
+
+    # --- GAE -------------------------------------------------------------
+    rng = XRng(seed=21)
+    T, B = 5, 3
+    rewards = rand_f32s(rng, T * B, scale=1.0, shift=0.0)
+    values = rand_f32s(rng, T * B, scale=1.0)
+    dones = [1 if rng.f64() < 0.3 else 0 for _ in range(T * B)]
+    last_value = rand_f32s(rng, B)
+    adv, targets = gae(rewards, values, dones, last_value,
+                       0.99, 0.95, T, B)
+    out.case("gae")
+    out.i32("dims", [T, B])
+    out.fl("gamma", [0.99])
+    out.fl("lam", [0.95])
+    out.fl("rewards", rewards)
+    out.fl("values", values)
+    out.i32("dones", dones)
+    out.fl("last_value", last_value)
+    out.fl("adv", adv)
+    out.fl("targets", targets)
+    out.end()
+
+    # --- adam ------------------------------------------------------------
+    rng = XRng(seed=31)
+    n = 13
+    p = rand_f32s(rng, n)
+    m = rand_f32s(rng, n, scale=0.1)
+    v = [f32(abs(x)) for x in rand_f32s(rng, n, scale=0.05)]
+    g = [float(x) for x in rand_f32s(rng, n, scale=2.0)]
+    # exercise both clip regimes with the same tensors
+    for name, max_norm in (("adam", 10.0), ("adam_clipped", 0.5)):
+        ps = {"p": list(p)}
+        ms, vs = {"p": list(m)}, {"p": list(v)}
+        names_save = PARAM_NAMES
+        globals()["PARAM_NAMES"] = ("p",)
+        gn = adam_step(ps, {"p": list(g)}, ms, vs, t=3, lr=1e-3,
+                       max_norm=max_norm)
+        globals()["PARAM_NAMES"] = names_save
+        out.case(name)
+        out.i32("dims", [n, 3])  # n, t
+        out.fl("lr", [1e-3])
+        out.fl("max_norm", [max_norm])
+        out.fl("p", p)
+        out.fl("m", m)
+        out.fl("v", v)
+        out.fl("g", g)
+        out.fl("gn", [gn])
+        out.fl("p_out", ps["p"])
+        out.fl("m_out", ms["p"])
+        out.fl("v_out", vs["p"])
+        out.end()
+
+    # --- full PPO update (loss metrics + post-Adam params) ---------------
+    rng = XRng(seed=41)
+    dm = Dims(v=5, e=2, ae=3, d=6, h=4, a=6, extra=0)
+    T, Bm = 3, 4
+    params = rand_params(rng, dm)
+    mb = make_minibatch(rng, dm, T, Bm)
+    hp = [1e-3, 0.2, 0.99, 0.95, 0.01, 0.5, 0.5, 0.0]
+    adv, targets = gae(mb["rewards"], mb["old_value"], mb["done_after"],
+                       mb["last_value"], hp[2], hp[3], T, Bm)
+    mb["adv"], mb["targets"] = adv, targets
+
+    # validate the analytic backward before emitting anything
+    fin_diff_check(dm, mb, hp, params)
+
+    metrics, grads, std = ppo_loss_and_grads(params, dm, mb, hp)
+    new_params = {nm: list(params[nm]) for nm in PARAM_NAMES}
+    mstate = {nm: [0.0] * len(params[nm]) for nm in PARAM_NAMES}
+    vstate = {nm: [0.0] * len(params[nm]) for nm in PARAM_NAMES}
+    gn = adam_step(new_params, grads, mstate, vstate, t=1, lr=hp[0],
+                   max_norm=hp[6])
+    out.case("ppo_update")
+    out.i32("dims", [T, Bm, dm.v, dm.e, dm.ae, dm.d, dm.h, dm.a, 0])
+    out.fl("hp", hp)
+    for nm in PARAM_NAMES:
+        out.fl(nm, params[nm])
+    out.i32("obs", mb["obs"])
+    out.i32("prev_a", mb["prev_a"])
+    out.fl("prev_r", mb["prev_r"])
+    out.i32("done", mb["done"])
+    out.i32("actions", mb["actions"])
+    out.fl("old_logp", mb["old_logp"])
+    out.fl("old_value", mb["old_value"])
+    out.fl("rewards", mb["rewards"])
+    out.i32("done_after", mb["done_after"])
+    out.fl("last_value", mb["last_value"])
+    out.fl("h0", mb["h0"])
+    out.fl("adv", adv)
+    out.fl("targets", targets)
+    out.fl("metrics", metrics + [f32(gn), f32(std)])
+    for nm in PARAM_NAMES:
+        out.fl(nm + "_new", new_params[nm])
+        out.fl(nm + "_m", mstate[nm])
+        out.fl(nm + "_v", vstate[nm])
+    out.end()
+
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    path = os.path.join(root, "rust", "tests", "data", "nn_fixtures.txt")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    out.write(path)
+    print(f"wrote {path} ({len(out.lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,21 +8,31 @@
 //! averaging, lockstep (overlap off) vs the double-buffered pipeline
 //! (overlap on, host reduction overlapped with shard compute).
 //!
-//! Training is AOT-artifact-backed only (the fused `train_iter` HLO has
-//! no native analogue yet), so without artifacts/PJRT the bench prints a
-//! skip note. `--json [PATH]` writes `BENCH_fig5f_training.json` with
-//! whatever sections ran.
+//! The **native** section runs first and needs no artifacts at all: it
+//! times the pure-Rust `--backend native` trainer (reference model
+//! dims) over a batch sweep plus a 2-shard row, so every host —
+//! including the offline CI image — produces training-throughput rows.
+//! The XLA sections still require `train_iter` artifacts + PJRT and
+//! print a skip note without them. `--json [PATH]` writes
+//! `BENCH_fig5f_training.json` with whatever sections ran.
+//!
+//! Env knobs (native section): `XMG_MAX_B` caps the batch sweep,
+//! `XMG_BENCH_T` sets the rollout window, `XMG_MAX_THREADS` the
+//! stepping threads, `XMG_TRAIN_ITERS` the timed iterations.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
 use xmgrid::coordinator::metrics::fmt_sps;
-use xmgrid::coordinator::{Overlap, ShardConfig, ShardedTrainer,
-                          TrainConfig, Trainer};
+use xmgrid::coordinator::{NativeEnvConfig, NativeShardedTrainer,
+                          NativeTrainerConfig, Overlap, ShardConfig,
+                          ShardedTrainer, TrainConfig, Trainer};
+use xmgrid::env::api::ObsMode;
+use xmgrid::env::state::TaskSource;
 use xmgrid::runtime::Runtime;
 use xmgrid::util::args::Args;
-use xmgrid::util::bench::{bench, json_arg_path, JsonReport};
+use xmgrid::util::bench::{bench, env_usize, json_arg_path, JsonReport};
 
 fn trivial_for(mr: usize, mi: usize, n: usize) -> Benchmark {
     let mut cfg = Preset::Trivial.config();
@@ -30,6 +40,48 @@ fn trivial_for(mr: usize, mi: usize, n: usize) -> Benchmark {
     cfg.max_objects = mi;
     let (rulesets, _) = generate_benchmark(&cfg, n).unwrap();
     Benchmark { name: "trivial".into(), rulesets }
+}
+
+/// Trivial-preset tasks with the default table sizes — the native
+/// trainer sizes its fixed-width rule/init tables from the benchmark
+/// itself, so no mr/mi overrides are needed.
+fn trivial_for_native(n: usize) -> Benchmark {
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), n).unwrap();
+    Benchmark { name: "trivial".into(), rulesets }
+}
+
+/// Steps/s of the native trainer: warmup iteration, then `iters` timed
+/// iterations of the full collect → GAE → PPO → shard-reduce loop.
+fn native_train_sps(tasks: &Arc<Benchmark>, b: usize, t: usize,
+                    threads: usize, shards: usize, iters: usize)
+                    -> f64 {
+    let env = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", b, t,
+                                       tasks.as_ref())
+        .expect("native env config")
+        .with_threads(threads);
+    let tcfg = NativeTrainerConfig {
+        env,
+        obs: ObsMode::Symbolic,
+        model: None, // reference dims, as `xmgrid train` uses
+        epochs: 1,
+        minibatches: 1,
+    };
+    let scfg = ShardConfig { shards, seed: 42, ..Default::default() };
+    let src: Arc<dyn TaskSource> = tasks.clone();
+    let mut engine = NativeShardedTrainer::launch(tcfg, src, scfg,
+                                                  TrainConfig::default())
+        .expect("launching native trainer");
+    engine.train(1, |_, _| Ok(())).unwrap(); // warmup
+    let t0 = std::time::Instant::now();
+    let mut steps = 0u64;
+    engine
+        .train(iters, |_, m| {
+            steps += m.env_steps;
+            Ok(())
+        })
+        .unwrap();
+    steps as f64 / t0.elapsed().as_secs_f64()
 }
 
 fn sharded_sps(dir: &Path, artifact: &str, mr: usize, mi: usize,
@@ -55,13 +107,46 @@ fn sharded_sps(dir: &Path, artifact: &str, mr: usize, mi: usize,
 fn main() {
     let args = Args::from_env();
     let mut report = JsonReport::new("fig5f_training");
+
+    // --- native trainer (zero artifacts; runs everywhere) -----------
+    let max_b = env_usize("XMG_MAX_B", 256);
+    let t_steps = env_usize("XMG_BENCH_T", 32);
+    let threads = env_usize("XMG_MAX_THREADS", 8);
+    let iters = env_usize("XMG_TRAIN_ITERS", 2);
+    println!("# Fig 5f (native backend): RL² PPO training throughput, \
+              reference model, {threads} threads, {iters} timed iters");
+    let tasks = Arc::new(trivial_for_native(256));
+    let mut smallest = None;
+    for b in [16usize, 64, 256, 1024] {
+        if b > max_b {
+            continue;
+        }
+        smallest.get_or_insert(b);
+        let sps = native_train_sps(&tasks, b, t_steps, threads, 1,
+                                   iters);
+        println!("native envs={b:<5} T={t_steps:<3} \
+                  train-steps/s={sps:<12.0} ({})", fmt_sps(sps));
+        report.add_sps(&format!("native-train-b{b}"), b,
+                       t_steps * iters, sps);
+    }
+    if let Some(b) = smallest {
+        let sps = native_train_sps(&tasks, b, t_steps, threads, 2,
+                                   iters);
+        println!("native shards=2 envs={b}/shard \
+                  train-steps/s={sps:<12.0} ({})", fmt_sps(sps));
+        report.add_sps(&format!("native-train-sharded2-b{b}"), b * 2,
+                       t_steps * iters, sps);
+    }
+
+    // --- XLA trainer (needs train_iter artifacts + PJRT) ------------
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = match Runtime::new(&dir) {
         Ok(rt) => rt,
         Err(e) => {
-            println!("# Fig 5f needs train_iter artifacts + the PJRT \
-                      runtime; skipped: {e}");
-            report.note("skipped: no artifacts/PJRT runtime");
+            println!("# Fig 5f XLA sections need train_iter artifacts \
+                      + the PJRT runtime; skipped: {e}");
+            report.note("xla sections skipped: no artifacts/PJRT \
+                         runtime (native rows above still ran)");
             if let Some(path) = json_arg_path(&args, "fig5f_training") {
                 report.write(&path).expect("writing bench json");
                 println!("# wrote {}", path.display());

@@ -36,6 +36,10 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::env::goals::Goal;
+use crate::env::rules::Rule;
+use crate::env::types::{Cell, GOAL_ENC, RULE_ENC};
+use crate::env::vector::VecEnvSnapshot;
 use crate::runtime::Tensor;
 use crate::util::fault::FaultPlan;
 
@@ -82,6 +86,124 @@ pub struct TrainCheckpoint {
     pub master: Vec<Tensor>,
     /// per-shard replica states, shard order
     pub shards: Vec<TrainerState>,
+}
+
+// --- env snapshot <-> tensors ---------------------------------------------
+
+fn cells_to_i32(cells: &[Cell]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(cells.len() * 2);
+    for c in cells {
+        out.push(c.tile);
+        out.push(c.color);
+    }
+    out
+}
+
+fn i32_to_cells(v: &[i32]) -> Result<Vec<Cell>> {
+    ensure!(v.len() % 2 == 0, "odd cell-pair tensor length {}", v.len());
+    Ok(v.chunks_exact(2)
+        .map(|p| Cell { tile: p[0], color: p[1] })
+        .collect())
+}
+
+/// Encode a [`VecEnvSnapshot`] as 12 tensors in a fixed order — the
+/// native trainer's `env_state` representation (the analogue of the
+/// XLA trainer's `aot.STATE_FIELDS` device tensors). Cells flatten to
+/// `(tile, color)` i32 pairs; each RNG state becomes 8 u32 words
+/// (lo, hi per u64 lane).
+pub fn encode_env_snapshot(s: &VecEnvSnapshot) -> Vec<Tensor> {
+    let mut rng_words = Vec::with_capacity(s.rng_states.len() * 8);
+    for st in &s.rng_states {
+        for &lane in st {
+            rng_words.push(lane as u32);
+            rng_words.push((lane >> 32) as u32);
+        }
+    }
+    vec![
+        Tensor::I32(cells_to_i32(&s.base)),
+        Tensor::I32(cells_to_i32(&s.grid)),
+        Tensor::I32(s.agent_pos.clone()),
+        Tensor::I32(s.agent_dir.clone()),
+        Tensor::I32(cells_to_i32(&s.pocket)),
+        Tensor::I32(s.rules.iter().flat_map(|r| r.0).collect()),
+        Tensor::I32(s.goals.iter().flat_map(|g| g.0).collect()),
+        Tensor::I32(cells_to_i32(&s.init)),
+        Tensor::U32(s.init_len.clone()),
+        Tensor::I32(s.step_count.clone()),
+        Tensor::I32(s.max_steps.clone()),
+        Tensor::U32(rng_words),
+    ]
+}
+
+fn want_i32(t: &Tensor, what: &str) -> Result<Vec<i32>> {
+    match t {
+        Tensor::I32(v) => Ok(v.clone()),
+        other => bail!("env-state field `{what}`: expected an I32 \
+                        tensor, found {other:?}"),
+    }
+}
+
+fn want_u32(t: &Tensor, what: &str) -> Result<Vec<u32>> {
+    match t {
+        Tensor::U32(v) => Ok(v.clone()),
+        other => bail!("env-state field `{what}`: expected a U32 \
+                        tensor, found {other:?}"),
+    }
+}
+
+/// Decode the inverse of [`encode_env_snapshot`]. Structural defects
+/// (wrong tensor count, wrong dtype, non-divisible lengths) are clean
+/// errors — a corrupt resume must never panic.
+pub fn decode_env_snapshot(ts: &[Tensor]) -> Result<VecEnvSnapshot> {
+    ensure!(ts.len() == 12,
+            "env-state tensor count {} (expected 12)", ts.len());
+    let rules_flat = want_i32(&ts[5], "rules")?;
+    ensure!(rules_flat.len() % RULE_ENC == 0,
+            "rules tensor length {} not a multiple of {RULE_ENC}",
+            rules_flat.len());
+    let goals_flat = want_i32(&ts[6], "goals")?;
+    ensure!(goals_flat.len() % GOAL_ENC == 0,
+            "goals tensor length {} not a multiple of {GOAL_ENC}",
+            goals_flat.len());
+    let rng_words = want_u32(&ts[11], "rng_states")?;
+    ensure!(rng_words.len() % 8 == 0,
+            "rng tensor length {} not a multiple of 8", rng_words.len());
+    let mut rng_states = Vec::with_capacity(rng_words.len() / 8);
+    for w in rng_words.chunks_exact(8) {
+        let mut st = [0u64; 4];
+        for (lane, p) in st.iter_mut().zip(w.chunks_exact(2)) {
+            *lane = p[0] as u64 | ((p[1] as u64) << 32);
+        }
+        rng_states.push(st);
+    }
+    Ok(VecEnvSnapshot {
+        base: i32_to_cells(&want_i32(&ts[0], "base")?)?,
+        grid: i32_to_cells(&want_i32(&ts[1], "grid")?)?,
+        agent_pos: want_i32(&ts[2], "agent_pos")?,
+        agent_dir: want_i32(&ts[3], "agent_dir")?,
+        pocket: i32_to_cells(&want_i32(&ts[4], "pocket")?)?,
+        rules: rules_flat
+            .chunks_exact(RULE_ENC)
+            .map(|c| {
+                let mut r = [0i32; RULE_ENC];
+                r.copy_from_slice(c);
+                Rule(r)
+            })
+            .collect(),
+        goals: goals_flat
+            .chunks_exact(GOAL_ENC)
+            .map(|c| {
+                let mut g = [0i32; GOAL_ENC];
+                g.copy_from_slice(c);
+                Goal(g)
+            })
+            .collect(),
+        init: i32_to_cells(&want_i32(&ts[7], "init")?)?,
+        init_len: want_u32(&ts[8], "init_len")?,
+        step_count: want_i32(&ts[9], "step_count")?,
+        max_steps: want_i32(&ts[10], "max_steps")?,
+        rng_states,
+    })
 }
 
 // --- primitive encoding ---------------------------------------------------
@@ -422,6 +544,34 @@ mod tests {
             "xmgrid_ckpt_test_{}_{tag}.bin",
             std::process::id()
         ))
+    }
+
+    #[test]
+    fn env_snapshot_codec_round_trips() {
+        let snap = VecEnvSnapshot {
+            base: vec![Cell { tile: 1, color: 2 }; 6],
+            grid: vec![Cell { tile: 3, color: 0 }; 6],
+            agent_pos: vec![1, 2, 3, 4],
+            agent_dir: vec![0, 3],
+            pocket: vec![Cell { tile: 0, color: 0 },
+                         Cell { tile: 5, color: 7 }],
+            rules: vec![Rule([1, 2, 3, 4, 5, 6, 7]); 4],
+            goals: vec![Goal([9, 8, 7, 6, 5]); 2],
+            init: vec![Cell { tile: 2, color: 2 }; 4],
+            init_len: vec![1, 2],
+            step_count: vec![10, 20],
+            max_steps: vec![243, 243],
+            rng_states: vec![[u64::MAX, 1, 2, 3], [4, 5, 6, 7]],
+        };
+        let ts = encode_env_snapshot(&snap);
+        assert_eq!(ts.len(), 12);
+        assert_eq!(decode_env_snapshot(&ts).unwrap(), snap);
+        // wrong tensor count is a clean error
+        assert!(decode_env_snapshot(&ts[..11]).is_err());
+        // dtype mismatch is a clean error
+        let mut bad = ts.clone();
+        bad[8] = Tensor::I32(vec![1, 2]);
+        assert!(decode_env_snapshot(&bad).is_err());
     }
 
     #[test]

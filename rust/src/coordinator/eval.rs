@@ -24,7 +24,7 @@
 //! are bitwise thread-invariant. Same seed + same split ⇒ same curve,
 //! for any `--threads`.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::env::api::EnvParams;
 use crate::env::goals::Goal;
@@ -32,19 +32,34 @@ use crate::env::layouts::xland_layout;
 use crate::env::state::{default_max_steps, Ruleset, TaskSource};
 use crate::env::types::*;
 use crate::env::Grid;
+use crate::nn::math::categorical;
+use crate::nn::model::{network_step, StepScratch};
+use crate::nn::Params;
 use crate::util::rng::Rng;
 
 use super::metrics::WallTimer;
 use super::workers::ParVecEnv;
 
-/// Baseline policies the harness ships. `Random` samples uniform
-/// actions; `Greedy` is a deterministic script that turns toward the
-/// nearest visible goal object and picks it up when the goal asks for
-/// possession (a floor for learned policies to clear, not a solver).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Policies the harness runs. `Random` samples uniform actions;
+/// `Greedy` is a deterministic script that turns toward the nearest
+/// visible goal object and picks it up when the goal asks for
+/// possession (a floor for learned policies to clear, not a solver);
+/// `Checkpoint` is a learned RL² policy restored from a train
+/// checkpoint (`--policy checkpoint:PATH`).
+#[derive(Clone, Debug, PartialEq)]
 pub enum EvalPolicy {
     Random,
     Greedy,
+    /// The native GRU actor-critic, run with its hidden state,
+    /// previous action and previous reward carried through the k-shot
+    /// loop exactly as in training: trial resets keep the carry (the
+    /// policy adapts across shots, §2.1), episode resets clear it via
+    /// the done mask inside [`network_step`].
+    Checkpoint {
+        params: Box<Params>,
+        /// sample the categorical head instead of taking the argmax
+        sample: bool,
+    },
 }
 
 impl EvalPolicy {
@@ -53,7 +68,8 @@ impl EvalPolicy {
             "random" => Ok(EvalPolicy::Random),
             "greedy" => Ok(EvalPolicy::Greedy),
             other => anyhow::bail!(
-                "--policy must be random | greedy | artifact, got {other}"
+                "--policy must be random | greedy | artifact | \
+                 checkpoint:PATH, got {other}"
             ),
         }
     }
@@ -62,6 +78,150 @@ impl EvalPolicy {
         match self {
             EvalPolicy::Random => "random",
             EvalPolicy::Greedy => "greedy",
+            EvalPolicy::Checkpoint { .. } => "checkpoint",
+        }
+    }
+}
+
+/// Where the checkpointed model's observation extras come from —
+/// resolved from `ModelDims::extra` against the env shape, mirroring
+/// the trainer's `--obs` stacks (0 = symbolic, 4 = dir one-hot,
+/// task_row_len = rules-goals).
+enum ExtraSrc {
+    None,
+    Direction,
+    TaskRow(usize),
+}
+
+/// Carry + scratch for the checkpoint policy: one batched RL² network
+/// step per harness step, mirroring the native trainer's rollout loop.
+struct NetState {
+    params: Params,
+    sample: bool,
+    extra: ExtraSrc,
+    rows: Vec<i32>,
+    dir_buf: Vec<i32>,
+    task_buf: Vec<i32>,
+    h: Vec<f32>,
+    h_next: Vec<f32>,
+    prev_a: Vec<i32>,
+    prev_r: Vec<f32>,
+    done_prev: Vec<i32>,
+    logits: Vec<f32>,
+    values: Vec<f32>,
+    scratch: StepScratch,
+    lp: Vec<f32>,
+}
+
+impl NetState {
+    fn new(params: Params, sample: bool, ep: &EnvParams, b: usize)
+           -> Result<NetState> {
+        let dm = params.dims;
+        ensure!(
+            dm.v == ep.opts.view_size,
+            "checkpoint was trained on a {0}x{0} view; this env family \
+             observes {1}x{1}",
+            dm.v, ep.opts.view_size
+        );
+        ensure!(
+            dm.a == NUM_ACTIONS,
+            "checkpoint head has {} actions, the env has {NUM_ACTIONS}",
+            dm.a
+        );
+        let extra = match dm.extra {
+            0 => ExtraSrc::None,
+            4 => ExtraSrc::Direction,
+            x if x == ep.task_row_len() => ExtraSrc::TaskRow(x),
+            x => bail!(
+                "checkpoint expects {x} observation extras; this env \
+                 shape provides 0 (symbolic), 4 (dir) or {} \
+                 (rules-goals)",
+                ep.task_row_len()
+            ),
+        };
+        Ok(NetState {
+            sample,
+            extra,
+            rows: vec![0; b * dm.obs_len()],
+            dir_buf: vec![0; b],
+            task_buf: vec![0; b * ep.task_row_len()],
+            h: vec![0.0; b * dm.h],
+            h_next: vec![0.0; b * dm.h],
+            prev_a: vec![0; b],
+            prev_r: vec![0.0; b],
+            // a fresh episode starts done: the mask zeroes the carry
+            done_prev: vec![1; b],
+            logits: vec![0.0; b * dm.a],
+            values: vec![0.0; b],
+            scratch: StepScratch::new(&dm),
+            lp: vec![0.0; dm.a],
+            params,
+        })
+    }
+
+    /// Assemble observation rows, run one network step and pick the
+    /// batch's actions — argmax (first maximum) or one categorical
+    /// draw per env in ascending env order from `act_rng`.
+    fn act(&mut self, venv: &ParVecEnv, obs: &[i32],
+           act_rng: &mut Rng, actions: &mut [i32]) {
+        let dm = self.params.dims;
+        let (ol, vv2, a) = (dm.obs_len(), dm.v * dm.v * 2, dm.a);
+        let b = actions.len();
+        match self.extra {
+            ExtraSrc::None => self.rows.copy_from_slice(obs),
+            ExtraSrc::Direction => {
+                venv.copy_agent_dirs_into(&mut self.dir_buf);
+                for i in 0..b {
+                    let row = &mut self.rows[i * ol..(i + 1) * ol];
+                    row[..vv2]
+                        .copy_from_slice(&obs[i * vv2..(i + 1) * vv2]);
+                    for x in row[vv2..].iter_mut() {
+                        *x = 0;
+                    }
+                    let d = self.dir_buf[i].rem_euclid(4) as usize;
+                    row[vv2 + d] = 1;
+                }
+            }
+            ExtraSrc::TaskRow(rl) => {
+                venv.copy_task_rows_into(&mut self.task_buf);
+                for i in 0..b {
+                    let row = &mut self.rows[i * ol..(i + 1) * ol];
+                    row[..vv2]
+                        .copy_from_slice(&obs[i * vv2..(i + 1) * vv2]);
+                    row[vv2..].copy_from_slice(
+                        &self.task_buf[i * rl..(i + 1) * rl]);
+                }
+            }
+        }
+        network_step(&self.params, &self.rows, &self.prev_a,
+                     &self.prev_r, &self.done_prev, &self.h,
+                     &mut self.logits, &mut self.values,
+                     &mut self.h_next, &mut self.scratch, None);
+        std::mem::swap(&mut self.h, &mut self.h_next);
+        for i in 0..b {
+            let row = &self.logits[i * a..(i + 1) * a];
+            actions[i] = if self.sample {
+                categorical(act_rng, row, &mut self.lp) as i32
+            } else {
+                let mut best = 0usize;
+                for j in 1..a {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best as i32
+            };
+        }
+    }
+
+    /// Advance the RL² carry with the step's outcome (episode dones
+    /// gate the reset inside the next `network_step`, as in training).
+    fn observe(&mut self, actions: &[i32], rewards: &[f32],
+               dones: &[bool]) {
+        for i in 0..actions.len() {
+            self.prev_a[i] = actions[i];
+            self.prev_r[i] = rewards[i];
+            self.done_prev[i] = dones[i] as i32;
         }
     }
 }
@@ -155,6 +315,22 @@ pub fn eval_kshot(tasks: &dyn TaskSource, policy: EvalPolicy,
     venv.reset_all(&grids, &rulesets, &limits, &rngs, &mut obs)?;
     // NOTE: no set_task_source — auto-reset replays the pinned task
 
+    // one dispatch before the loop: the learned policy's carry state
+    // lives in `Actor::Net`, the baselines stay allocation-free
+    enum Actor {
+        Random,
+        Greedy,
+        Net(Box<NetState>),
+    }
+    let mut actor = match &policy {
+        EvalPolicy::Random => Actor::Random,
+        EvalPolicy::Greedy => Actor::Greedy,
+        EvalPolicy::Checkpoint { params, sample } => Actor::Net(
+            Box::new(NetState::new((**params).clone(), *sample,
+                                   &cfg.params, b)?),
+        ),
+    };
+
     let goals: Vec<Goal> = rulesets.iter().map(|r| r.goal).collect();
     let v = cfg.params.opts.view_size;
     let mut actions = vec![0i32; b];
@@ -180,21 +356,27 @@ pub fn eval_kshot(tasks: &dyn TaskSource, policy: EvalPolicy,
         if pending == 0 {
             break;
         }
-        match policy {
-            EvalPolicy::Random => {
+        match &mut actor {
+            Actor::Random => {
                 for a in actions.iter_mut() {
                     *a = act_rng.below(NUM_ACTIONS) as i32;
                 }
             }
-            EvalPolicy::Greedy => {
+            Actor::Greedy => {
                 for i in 0..b {
                     let view = &obs[i * v * v * 2..(i + 1) * v * v * 2];
                     actions[i] = greedy_action(view, v, &goals[i]);
                 }
             }
+            Actor::Net(n) => {
+                n.act(&venv, &obs, &mut act_rng, &mut actions);
+            }
         }
         venv.step_all(&actions, &mut obs, &mut rewards, &mut dones,
                       &mut trial_dones)?;
+        if let Actor::Net(n) = &mut actor {
+            n.observe(&actions, &rewards, &dones);
+        }
         steps_run += b as u64;
         for i in 0..b {
             if shot_idx[i] >= cfg.shots {
@@ -379,6 +561,51 @@ mod tests {
         };
         assert_eq!(run(1), run(2));
         assert_eq!(run(1), run(4));
+    }
+
+    fn tiny_policy(extra: usize) -> EvalPolicy {
+        let dims = crate::nn::ModelDims {
+            v: 5, e: 2, ae: 3, d: 8, h: 6, a: 6, extra,
+        };
+        let mut rng = Rng::new(11);
+        EvalPolicy::Checkpoint {
+            params: Box::new(Params::init(dims, &mut rng)),
+            sample: false,
+        }
+    }
+
+    #[test]
+    fn checkpoint_policy_runs_all_obs_widths() {
+        let s = split();
+        let c = cfg(&s, 8, 1);
+        let task_row = c.params.task_row_len();
+        for extra in [0usize, 4, task_row] {
+            let rep = eval_kshot(&s, tiny_policy(extra), &c).unwrap();
+            assert_eq!(rep.policy, "checkpoint");
+            assert_eq!(rep.shots.len(), 3);
+            assert!(rep.shots.iter().all(|st| st.return_mean.is_finite()));
+        }
+        // a width no wrapper stack produces is a clean error
+        assert!(eval_kshot(&s, tiny_policy(3), &c).is_err());
+    }
+
+    #[test]
+    fn checkpoint_policy_deterministic_across_threads() {
+        let s = split();
+        let run = |threads: usize, sample: bool| {
+            let mut p = tiny_policy(4);
+            if let EvalPolicy::Checkpoint { sample: sm, .. } = &mut p {
+                *sm = sample;
+            }
+            let rep = eval_kshot(&s, p, &cfg(&s, 8, threads)).unwrap();
+            rep.shots
+                .iter()
+                .map(|st| (st.return_mean.to_bits(),
+                           st.len_mean.to_bits()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1, false), run(4, false));
+        assert_eq!(run(1, true), run(4, true));
     }
 
     #[test]

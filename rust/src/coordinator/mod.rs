@@ -18,6 +18,7 @@ pub mod config;
 pub mod eval;
 pub mod metrics;
 pub mod native;
+pub mod native_trainer;
 pub mod pool;
 pub mod rollout;
 pub mod shard;
@@ -30,6 +31,8 @@ pub use config::{BackendKind, Overlap, ShardConfig, TrainConfig};
 pub use eval::{eval_kshot, EvalPolicy, KShotConfig, KShotReport,
                ShotStats};
 pub use native::{NativeEnvConfig, NativePool};
+pub use native_trainer::{NativeShardedTrainer, NativeTrainer,
+                         NativeTrainerConfig};
 pub use pool::EnvPool;
 pub use rollout::RolloutEngine;
 pub use shard::ShardPool;

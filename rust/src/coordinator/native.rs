@@ -20,6 +20,8 @@ use crate::env::Grid;
 use crate::util::fault::RetryPolicy;
 use crate::util::rng::Rng;
 
+use crate::env::vector::VecEnvSnapshot;
+
 use super::workers::ParVecEnv;
 
 /// Shape of a native vectorized env family: the shared [`EnvParams`]
@@ -185,6 +187,25 @@ impl NativePool {
         self.venv.reset_all(&grids, &rulesets, &max_steps, &rngs,
                             &mut self.obs)?;
         self.venv.set_task_source(tasks.clone())
+    }
+
+    /// Full-batch env snapshot (chunk snapshots concatenated in global
+    /// env order) — what the native trainer checkpoints.
+    pub fn snapshot(&mut self) -> Result<VecEnvSnapshot> {
+        self.venv.snapshot()
+    }
+
+    /// Install a full-batch snapshot (inverse of
+    /// [`NativePool::snapshot`]) and re-install the constructor task
+    /// source so episode auto-resets keep drawing tasks. Refreshes the
+    /// `obs()` cache to the restored state.
+    pub fn restore(&mut self, snap: &VecEnvSnapshot) -> Result<()> {
+        self.venv.restore(snap)?;
+        if let Some(ts) = self.tasks.clone() {
+            self.venv.set_task_source(ts)?;
+        }
+        self.venv.copy_obs_into(&mut self.obs);
+        Ok(())
     }
 
     /// One random-policy rollout chunk of `t` steps; returns

@@ -1,0 +1,917 @@
+//! Native RL² PPO training: the pure-Rust analogue of the fused
+//! `train_iter` artifact, driving the [`crate::nn`] GRU actor-critic
+//! over a [`NativePool`] batch. `xmgrid train --backend native` runs
+//! this on a fresh checkout — no HLO artifacts, no PJRT.
+//!
+//! One [`NativeTrainer::train_iter`] is: a T-step on-policy rollout
+//! with the RL² carry (hidden state + prev-action/prev-reward, reset
+//! at episode boundaries per paper §2.1), GAE over the window, then
+//! `epochs × minibatches` clipped-PPO updates with BPTT through the
+//! GRU. Everything is serial and fixed-order on the learner side, so a
+//! run is bitwise-reproducible for a fixed seed at any `--threads`
+//! count (the thread pool only steps envs, under the
+//! [`super::workers`] equivalence contract).
+//!
+//! [`NativeShardedTrainer`] mirrors [`super::trainer::ShardedTrainer`]
+//! on the host thread: per-iteration basis broadcast, per-shard delta,
+//! fixed-order averaging into the master, periodic atomic
+//! checkpoints via the shared [`TrainCheckpoint`] codec. Replicas run
+//! serially in ascending shard order (the native stack has no device
+//! axis to hide latency on), which keeps the reduction order — and
+//! therefore the master parameters — identical to a one-shard-at-a-
+//! time replay.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::env::api::{BatchEnvironment, ObsMode};
+use crate::env::state::TaskSource;
+use crate::nn::loss::gae;
+use crate::nn::math::categorical;
+use crate::nn::model::{network_step, StepScratch, NUM_PARAMS};
+use crate::nn::{ppo_update, Adam, MiniBatch, ModelDims, Params,
+                UpdateBufs};
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+use super::checkpoint::{decode_env_snapshot, encode_env_snapshot,
+                        save_checkpoint, TrainCheckpoint, TrainerState};
+use super::config::{ShardConfig, TrainConfig};
+use super::metrics::reduce_iter_metrics;
+use super::native::{NativeEnvConfig, NativePool};
+use super::rollout::shard_seed;
+use super::shard::{add_params, average_param_tensors, sub_params};
+use super::trainer::{CheckpointPlan, IterMetrics};
+
+/// Shape of one native training replica: the vectorized env family
+/// plus the learner knobs the artifact metadata would otherwise carry.
+#[derive(Clone, Debug)]
+pub struct NativeTrainerConfig {
+    /// env family: batch `b`, rollout window `t`, stepping threads
+    pub env: NativeEnvConfig,
+    /// observation layout (`--obs symbolic|dir|rules-goals`); the
+    /// wrapper extras enter the trunk input as raw values
+    pub obs: ObsMode,
+    /// model hyper-shape; `None` → the reference dims
+    /// ([`ModelDims::reference`]) for this env's view/extra widths
+    pub model: Option<ModelDims>,
+    /// PPO epochs per iteration (the XLA `train_update` is 1)
+    pub epochs: usize,
+    /// env-column minibatches per epoch (must divide the batch)
+    pub minibatches: usize,
+}
+
+/// Wrapper-extra layout, resolved once at construction so the rollout
+/// hot loop never re-matches on [`ObsMode`] (and the unsupported `rgb`
+/// arm is rejected before any buffer exists).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ExtraKind {
+    None,
+    /// 4-wide facing-direction one-hot (`DirectionObs` semantics)
+    Direction,
+    /// encoded goal+rules task row (`RulesAndGoalsObs` semantics)
+    TaskRow,
+}
+
+/// Fill `dst` (`[B, obs_len]`) with model-ready observation rows: the
+/// raw symbolic cells followed by the wrapper extras, matching the
+/// corresponding `ObsMode` wrapper bit for bit.
+fn assemble_rows(pool: &NativePool, kind: ExtraKind, dm: &ModelDims,
+                 cur_obs: &[i32], dir_buf: &mut [i32],
+                 task_buf: &mut [i32], dst: &mut [i32]) {
+    let b = pool.cfg.b;
+    let vv2 = dm.v * dm.v * 2;
+    let ol = dm.obs_len();
+    debug_assert_eq!(cur_obs.len(), b * vv2);
+    debug_assert_eq!(dst.len(), b * ol);
+    match kind {
+        ExtraKind::None => dst.copy_from_slice(cur_obs),
+        ExtraKind::Direction => {
+            pool.agent_dirs_into(dir_buf);
+            for i in 0..b {
+                let row = &mut dst[i * ol..(i + 1) * ol];
+                row[..vv2]
+                    .copy_from_slice(&cur_obs[i * vv2..(i + 1) * vv2]);
+                for x in row[vv2..].iter_mut() {
+                    *x = 0;
+                }
+                row[vv2 + dir_buf[i].rem_euclid(4) as usize] = 1;
+            }
+        }
+        ExtraKind::TaskRow => {
+            let rl = dm.extra;
+            pool.task_rows_into(task_buf);
+            for i in 0..b {
+                let row = &mut dst[i * ol..(i + 1) * ol];
+                row[..vv2]
+                    .copy_from_slice(&cur_obs[i * vv2..(i + 1) * vv2]);
+                row[vv2..]
+                    .copy_from_slice(&task_buf[i * rl..(i + 1) * rl]);
+            }
+        }
+    }
+}
+
+/// Checked f32-tensor view for checkpoint restoration.
+fn want_f32<'a>(t: &'a Tensor, what: &str, n: usize)
+                -> Result<&'a [f32]> {
+    match t {
+        Tensor::F32(v) if v.len() == n => Ok(v),
+        Tensor::F32(v) => bail!(
+            "checkpoint {what} has {} values, expected {n}", v.len()),
+        other => bail!("checkpoint {what} is {:?}, expected f32",
+                       other.dtype()),
+    }
+}
+
+/// Checked i32-tensor view for checkpoint restoration.
+fn want_i32<'a>(t: &'a Tensor, what: &str, n: usize)
+                -> Result<&'a [i32]> {
+    match t {
+        Tensor::I32(v) if v.len() == n => Ok(v),
+        Tensor::I32(v) => bail!(
+            "checkpoint {what} has {} values, expected {n}", v.len()),
+        other => bail!("checkpoint {what} is {:?}, expected i32",
+                       other.dtype()),
+    }
+}
+
+/// One native training replica: envs, model, optimizer, RL² carry and
+/// all rollout/update buffers (allocated once; the iteration hot path
+/// allocates nothing).
+pub struct NativeTrainer {
+    pub cfg: TrainConfig,
+    pub dims: ModelDims,
+    pool: NativePool,
+    tasks: Arc<dyn TaskSource>,
+    extra_kind: ExtraKind,
+    t_len: usize,
+    b: usize,
+    epochs: usize,
+    minibatches: usize,
+    pub params: Params,
+    adam: Adam,
+    pub rng: Rng,
+    pub iter: usize,
+    ready: bool,
+    // --- RL² carry (between iterations) ---
+    prev_a: Vec<i32>,
+    prev_r: Vec<f32>,
+    done_prev: Vec<i32>,
+    h: Vec<f32>,
+    /// latest raw symbolic observations `[B, V, V, 2]`
+    cur_obs: Vec<i32>,
+    // --- rollout storage, flat `[T, B]` ---
+    obs_seq: Vec<i32>,
+    prev_a_seq: Vec<i32>,
+    prev_r_seq: Vec<f32>,
+    done_seq: Vec<i32>,
+    actions_seq: Vec<i32>,
+    logp_seq: Vec<f32>,
+    rewards_seq: Vec<f32>,
+    done_post: Vec<i32>,
+    values_seq: Vec<f32>,
+    adv: Vec<f32>,
+    targets: Vec<f32>,
+    /// hidden carry at the window start (minibatch `h0` source)
+    h_start: Vec<f32>,
+    // --- per-step staging ---
+    logits: Vec<f32>,
+    values_step: Vec<f32>,
+    h_next: Vec<f32>,
+    h_discard: Vec<f32>,
+    last_rows: Vec<i32>,
+    last_value: Vec<f32>,
+    scratch: StepScratch,
+    lp_scratch: Vec<f32>,
+    dir_buf: Vec<i32>,
+    task_buf: Vec<i32>,
+    step_obs: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    trial_dones: Vec<bool>,
+    reward_acc: Vec<f64>,
+    // --- update machinery ---
+    perm: Vec<usize>,
+    mb: MiniBatch,
+    bufs: UpdateBufs,
+}
+
+impl NativeTrainer {
+    /// Build a replica. Parameters are initialized from a stream split
+    /// off the trainer RNG (so the whole run is a function of
+    /// `cfg.train_seed` alone); under [`NativeShardedTrainer`] the
+    /// first basis broadcast replaces them with the shard-0 master.
+    pub fn new(tcfg: NativeTrainerConfig, tasks: Arc<dyn TaskSource>,
+               cfg: TrainConfig) -> Result<NativeTrainer> {
+        let env = tcfg.env;
+        let (b, t_len) = (env.b, env.t);
+        ensure!(b > 0 && t_len > 0,
+                "native training needs batch and steps >= 1");
+        ensure!(tcfg.epochs >= 1, "--epochs must be >= 1");
+        ensure!(
+            tcfg.minibatches >= 1 && b % tcfg.minibatches == 0,
+            "--minibatches ({}) must divide the env batch ({b})",
+            tcfg.minibatches
+        );
+        let extra_kind = match tcfg.obs {
+            ObsMode::Symbolic => ExtraKind::None,
+            ObsMode::Direction => ExtraKind::Direction,
+            ObsMode::RulesGoals => ExtraKind::TaskRow,
+            ObsMode::Rgb => bail!(
+                "--backend native trains on symbolic observation \
+                 layouts (--obs symbolic|dir|rules-goals); rgb is a \
+                 render-only surface"
+            ),
+        };
+        let extra = match extra_kind {
+            ExtraKind::None => 0,
+            ExtraKind::Direction => 4,
+            ExtraKind::TaskRow => env.params.task_row_len(),
+        };
+        let v = env.params.opts.view_size;
+        let dims = tcfg
+            .model
+            .unwrap_or_else(|| ModelDims::reference(v, extra));
+        ensure!(dims.v == v, "model view size {} != env view {v}",
+                dims.v);
+        ensure!(
+            dims.extra == extra,
+            "model extra width {} != the {extra} values --obs {} \
+             appends",
+            dims.extra,
+            tcfg.obs
+        );
+        let pool = NativePool::with_task_source(env, tasks.clone());
+        let na = pool.action_spec().num_actions;
+        ensure!(dims.a == na,
+                "model emits {} action logits, env has {na}", dims.a);
+
+        let mut rng = Rng::new(cfg.train_seed);
+        let params = {
+            let mut prng = rng.split();
+            Params::init(dims, &mut prng)
+        };
+        let (ol, hh, a) = (dims.obs_len(), dims.h, dims.a);
+        let vv2 = dims.v * dims.v * 2;
+        let n = t_len * b;
+        let bm = b / tcfg.minibatches;
+        let nm = t_len * bm;
+        let task_len = if extra_kind == ExtraKind::TaskRow {
+            b * extra
+        } else {
+            0
+        };
+        Ok(NativeTrainer {
+            cfg,
+            dims,
+            pool,
+            tasks,
+            extra_kind,
+            t_len,
+            b,
+            epochs: tcfg.epochs,
+            minibatches: tcfg.minibatches,
+            adam: Adam::new(&dims),
+            params,
+            rng,
+            iter: 0,
+            ready: false,
+            prev_a: vec![0; b],
+            prev_r: vec![0.0; b],
+            done_prev: vec![1; b],
+            h: vec![0.0; b * hh],
+            cur_obs: vec![0; b * vv2],
+            obs_seq: vec![0; n * ol],
+            prev_a_seq: vec![0; n],
+            prev_r_seq: vec![0.0; n],
+            done_seq: vec![0; n],
+            actions_seq: vec![0; n],
+            logp_seq: vec![0.0; n],
+            rewards_seq: vec![0.0; n],
+            done_post: vec![0; n],
+            values_seq: vec![0.0; n],
+            adv: vec![0.0; n],
+            targets: vec![0.0; n],
+            h_start: vec![0.0; b * hh],
+            logits: vec![0.0; b * a],
+            values_step: vec![0.0; b],
+            h_next: vec![0.0; b * hh],
+            h_discard: vec![0.0; b * hh],
+            last_rows: vec![0; b * ol],
+            last_value: vec![0.0; b],
+            scratch: StepScratch::new(&dims),
+            lp_scratch: vec![0.0; a],
+            dir_buf: vec![0; b],
+            task_buf: vec![0; task_len],
+            step_obs: vec![0; b * vv2],
+            rewards: vec![0.0; b],
+            dones: vec![false; b],
+            trial_dones: vec![false; b],
+            reward_acc: vec![0.0; b],
+            perm: (0..b).collect(),
+            mb: MiniBatch {
+                t_len,
+                bm,
+                obs: vec![0; nm * ol],
+                prev_a: vec![0; nm],
+                prev_r: vec![0.0; nm],
+                done: vec![0; nm],
+                actions: vec![0; nm],
+                old_logp: vec![0.0; nm],
+                adv: vec![0.0; nm],
+                targets: vec![0.0; nm],
+                h0: vec![0.0; bm * hh],
+            },
+            bufs: UpdateBufs::new(dims, t_len, bm),
+        })
+    }
+
+    /// Overwrite the policy/value parameters (the broadcast half of
+    /// the all-reduce). Adam moments stay local, like the XLA path.
+    pub fn set_params(&mut self, basis: &[Tensor]) -> Result<()> {
+        self.params = Params::from_tensors(self.dims, basis)?;
+        Ok(())
+    }
+
+    /// Sample fresh tasks for every env, reset the pool, and zero the
+    /// RL² carry (episode start: `done_prev = 1` resets the hidden
+    /// state inside the first `network_step`).
+    pub fn resample_tasks(&mut self) -> Result<()> {
+        let tasks = self.tasks.clone();
+        let mut rng = self.rng.split();
+        self.pool.reset_from(&tasks, &mut rng)?;
+        self.cur_obs.copy_from_slice(self.pool.obs());
+        for x in self.prev_a.iter_mut() {
+            *x = 0;
+        }
+        for x in self.prev_r.iter_mut() {
+            *x = 0.0;
+        }
+        for x in self.done_prev.iter_mut() {
+            *x = 1;
+        }
+        for x in self.h.iter_mut() {
+            *x = 0.0;
+        }
+        self.ready = true;
+        Ok(())
+    }
+
+    /// One PPO iteration: collect `T × B` on-policy steps, GAE, then
+    /// `epochs × minibatches` optimizer steps. Metrics are averaged
+    /// over the updates (f64, fixed dispatch order).
+    pub fn train_iter(&mut self) -> Result<IterMetrics> {
+        ensure!(self.ready, "call resample_tasks before train_iter");
+        let dm = self.dims;
+        let (t_len, b) = (self.t_len, self.b);
+        let (ol, a, hh) = (dm.obs_len(), dm.a, dm.h);
+        self.h_start.copy_from_slice(&self.h);
+        for x in self.reward_acc.iter_mut() {
+            *x = 0.0;
+        }
+        let (mut episodes, mut trials) = (0i64, 0i64);
+
+        // --- rollout ---
+        for t in 0..t_len {
+            let lo = t * b;
+            self.prev_a_seq[lo..lo + b].copy_from_slice(&self.prev_a);
+            self.prev_r_seq[lo..lo + b].copy_from_slice(&self.prev_r);
+            self.done_seq[lo..lo + b].copy_from_slice(&self.done_prev);
+            assemble_rows(&self.pool, self.extra_kind, &dm,
+                          &self.cur_obs, &mut self.dir_buf,
+                          &mut self.task_buf,
+                          &mut self.obs_seq[lo * ol..(lo + b) * ol]);
+            network_step(&self.params,
+                         &self.obs_seq[lo * ol..(lo + b) * ol],
+                         &self.prev_a, &self.prev_r, &self.done_prev,
+                         &self.h, &mut self.logits,
+                         &mut self.values_step, &mut self.h_next,
+                         &mut self.scratch, None);
+            self.values_seq[lo..lo + b]
+                .copy_from_slice(&self.values_step);
+            // serial env-order sampling: exactly one rng draw per env
+            for i in 0..b {
+                let act = categorical(&mut self.rng,
+                                      &self.logits[i * a..(i + 1) * a],
+                                      &mut self.lp_scratch);
+                self.actions_seq[lo + i] = act as i32;
+                self.logp_seq[lo + i] = self.lp_scratch[act];
+            }
+            std::mem::swap(&mut self.h, &mut self.h_next);
+            self.pool.step(&self.actions_seq[lo..lo + b],
+                           &mut self.step_obs, &mut self.rewards,
+                           &mut self.dones, &mut self.trial_dones)?;
+            for i in 0..b {
+                let r = self.rewards[i];
+                self.reward_acc[i] += r as f64;
+                let d = self.dones[i];
+                if d {
+                    episodes += 1;
+                }
+                if self.trial_dones[i] {
+                    trials += 1;
+                }
+                self.prev_a[i] = self.actions_seq[lo + i];
+                self.prev_r[i] = r;
+                self.done_prev[i] = d as i32;
+                self.rewards_seq[lo + i] = r;
+                self.done_post[lo + i] = d as i32;
+            }
+            self.cur_obs.copy_from_slice(&self.step_obs);
+        }
+
+        // --- bootstrap value + GAE (episode dones gate the carry) ---
+        assemble_rows(&self.pool, self.extra_kind, &dm, &self.cur_obs,
+                      &mut self.dir_buf, &mut self.task_buf,
+                      &mut self.last_rows);
+        network_step(&self.params, &self.last_rows, &self.prev_a,
+                     &self.prev_r, &self.done_prev, &self.h,
+                     &mut self.logits, &mut self.values_step,
+                     &mut self.h_discard, &mut self.scratch, None);
+        self.last_value.copy_from_slice(&self.values_step);
+        gae(&self.rewards_seq, &self.values_seq, &self.done_post,
+            &self.last_value, self.cfg.gamma, self.cfg.gae_lambda,
+            t_len, b, &mut self.adv, &mut self.targets);
+
+        // --- PPO epochs over env-column minibatches ---
+        let hpv = self.cfg.hp_vector();
+        let mut hp = [0.0f32; 8];
+        hp.copy_from_slice(&hpv);
+        let bm = b / self.minibatches;
+        let mut acc = [0.0f64; 8];
+        let mut updates = 0usize;
+        for _ in 0..self.epochs {
+            for (i, p) in self.perm.iter_mut().enumerate() {
+                *p = i;
+            }
+            // fixed permutation from the private learner stream —
+            // independent of thread count
+            self.rng.shuffle(&mut self.perm);
+            for g in 0..self.minibatches {
+                let envs = &self.perm[g * bm..(g + 1) * bm];
+                for t in 0..t_len {
+                    for (j, &e) in envs.iter().enumerate() {
+                        let src = t * b + e;
+                        let dst = t * bm + j;
+                        self.mb.obs[dst * ol..(dst + 1) * ol]
+                            .copy_from_slice(
+                                &self.obs_seq
+                                    [src * ol..(src + 1) * ol]);
+                        self.mb.prev_a[dst] = self.prev_a_seq[src];
+                        self.mb.prev_r[dst] = self.prev_r_seq[src];
+                        self.mb.done[dst] = self.done_seq[src];
+                        self.mb.actions[dst] = self.actions_seq[src];
+                        self.mb.old_logp[dst] = self.logp_seq[src];
+                        self.mb.adv[dst] = self.adv[src];
+                        self.mb.targets[dst] = self.targets[src];
+                    }
+                }
+                for (j, &e) in envs.iter().enumerate() {
+                    self.mb.h0[j * hh..(j + 1) * hh].copy_from_slice(
+                        &self.h_start[e * hh..(e + 1) * hh]);
+                }
+                let s = ppo_update(&mut self.params, &mut self.adam,
+                                   &self.mb, &hp, &mut self.bufs);
+                acc[0] += s.loss.total as f64;
+                acc[1] += s.loss.pi_loss as f64;
+                acc[2] += s.loss.v_loss as f64;
+                acc[3] += s.loss.entropy as f64;
+                acc[4] += s.loss.approx_kl as f64;
+                acc[5] += s.loss.clip_frac as f64;
+                acc[6] += s.grad_norm as f64;
+                acc[7] += s.loss.adv_std as f64;
+                updates += 1;
+            }
+        }
+
+        let nu = updates as f64;
+        let mut reward_sum = 0.0f64; // env-major fixed-order reduce
+        for &x in self.reward_acc.iter() {
+            reward_sum += x;
+        }
+        self.iter += 1;
+        Ok(IterMetrics {
+            total_loss: (acc[0] / nu) as f32,
+            pi_loss: (acc[1] / nu) as f32,
+            v_loss: (acc[2] / nu) as f32,
+            entropy: (acc[3] / nu) as f32,
+            approx_kl: (acc[4] / nu) as f32,
+            clip_frac: (acc[5] / nu) as f32,
+            grad_norm: (acc[6] / nu) as f32,
+            adv_std: (acc[7] / nu) as f32,
+            reward_sum: reward_sum as f32,
+            trials,
+            episodes,
+            env_steps: (t_len * b) as u64,
+        })
+    }
+
+    /// Capture everything the next [`train_iter`](Self::train_iter)
+    /// depends on — same [`TrainerState`] container as the XLA path
+    /// (env state via the snapshot codec), so the checkpoint file
+    /// format is shared.
+    pub fn state_snapshot(&mut self) -> Result<TrainerState> {
+        let snap = self.pool.snapshot()?;
+        Ok(TrainerState {
+            params: self.params.to_tensors(),
+            m: self
+                .adam
+                .m
+                .iter()
+                .map(|v| Tensor::F32(v.clone()))
+                .collect(),
+            v: self
+                .adam
+                .v
+                .iter()
+                .map(|v| Tensor::F32(v.clone()))
+                .collect(),
+            t: Tensor::I32(vec![self.adam.t as i32]),
+            env_state: encode_env_snapshot(&snap),
+            last_obs: Tensor::I32(self.cur_obs.clone()),
+            obs: Tensor::I32(self.cur_obs.clone()),
+            prev_a: Tensor::I32(self.prev_a.clone()),
+            prev_r: Tensor::F32(self.prev_r.clone()),
+            done_prev: Tensor::I32(self.done_prev.clone()),
+            h: Tensor::F32(self.h.clone()),
+            rng: self.rng.state(),
+            task_rng: None,
+            iter: self.iter as u64,
+        })
+    }
+
+    /// Restore a [`state_snapshot`](Self::state_snapshot); the resumed
+    /// replica continues bit-for-bit. Shape mismatches are clean
+    /// errors, never a silently-wrong resume.
+    pub fn restore_state(&mut self, s: &TrainerState) -> Result<()> {
+        self.params = Params::from_tensors(self.dims, &s.params)
+            .context("checkpoint params do not fit this model")?;
+        ensure!(s.m.len() == NUM_PARAMS && s.v.len() == NUM_PARAMS,
+                "checkpoint has {}/{} moment tensors, expected {}",
+                s.m.len(), s.v.len(), NUM_PARAMS);
+        for i in 0..NUM_PARAMS {
+            let n = self.dims.param_len(i);
+            self.adam.m[i]
+                .copy_from_slice(want_f32(&s.m[i], "adam m", n)?);
+            self.adam.v[i]
+                .copy_from_slice(want_f32(&s.v[i], "adam v", n)?);
+        }
+        self.adam.t = want_i32(&s.t, "adam t", 1)?[0] as i64;
+        let snap = decode_env_snapshot(&s.env_state)
+            .context("decoding checkpoint env state")?;
+        self.pool.restore(&snap)?;
+        let b = self.b;
+        let vv2 = self.dims.v * self.dims.v * 2;
+        self.cur_obs
+            .copy_from_slice(want_i32(&s.obs, "obs", b * vv2)?);
+        self.prev_a
+            .copy_from_slice(want_i32(&s.prev_a, "prev_a", b)?);
+        self.prev_r
+            .copy_from_slice(want_f32(&s.prev_r, "prev_r", b)?);
+        self.done_prev
+            .copy_from_slice(want_i32(&s.done_prev, "done_prev", b)?);
+        self.h.copy_from_slice(want_f32(&s.h, "h", b * self.dims.h)?);
+        self.rng = Rng::from_state(s.rng);
+        self.iter = s.iter as usize;
+        self.ready = true;
+        Ok(())
+    }
+}
+
+/// Data-parallel native training: one [`NativeTrainer`] replica per
+/// shard, run serially in ascending shard order each iteration, with
+/// the same basis-broadcast / delta-average / master-fold reduction
+/// (and the same [`TrainCheckpoint`] on-disk format) as the XLA
+/// [`super::trainer::ShardedTrainer`]. Overlap has no effect here —
+/// there is no device axis to pipeline against — so every iteration
+/// is the lockstep collective.
+pub struct NativeShardedTrainer {
+    replicas: Vec<NativeTrainer>,
+    pub cfg: ShardConfig,
+    pub train_cfg: TrainConfig,
+    /// host-side master parameters (averaged across shards)
+    pub master: Vec<Tensor>,
+    pub t_len: usize,
+    pub b: usize,
+    /// iterations completed (reduced into the master)
+    pub iters_done: usize,
+    /// optional periodic crash-safe checkpointing
+    pub checkpoint: Option<CheckpointPlan>,
+}
+
+impl NativeShardedTrainer {
+    /// Spin up `cfg.shards` replicas. `cfg.seed` is the single run
+    /// seed: shard `i` trains with `shard_seed(cfg.seed, i)` (any
+    /// `train_cfg.train_seed` is overwritten so the two knobs cannot
+    /// drift apart); the master starts from shard 0's deterministic
+    /// parameter init and every replica receives it at the first basis
+    /// broadcast.
+    pub fn launch(tcfg: NativeTrainerConfig, tasks: Arc<dyn TaskSource>,
+                  cfg: ShardConfig, mut train_cfg: TrainConfig)
+                  -> Result<NativeShardedTrainer> {
+        ensure!(cfg.shards >= 1, "--shards must be >= 1");
+        train_cfg.train_seed = cfg.seed;
+        let mut replicas = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let mut tc = train_cfg;
+            tc.train_seed = shard_seed(cfg.seed, i);
+            let mut tr = NativeTrainer::new(tcfg.clone(),
+                                            tasks.clone(), tc)
+                .with_context(|| format!("building native shard {i}"))?;
+            tr.resample_tasks()
+                .with_context(|| format!("initial resample, shard {i}"))?;
+            replicas.push(tr);
+        }
+        let master = replicas[0].params.to_tensors();
+        Ok(NativeShardedTrainer {
+            replicas,
+            cfg,
+            train_cfg,
+            master,
+            t_len: tcfg.env.t,
+            b: tcfg.env.b,
+            iters_done: 0,
+            checkpoint: None,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Environment steps contributed per iteration across all shards.
+    pub fn steps_per_iter(&self) -> u64 {
+        (self.t_len * self.b * self.replicas.len()) as u64
+    }
+
+    /// Restore a saved [`TrainCheckpoint`]: master parameters, reduced
+    /// iteration count, and every replica's full state. Must be
+    /// launched with the same shard count the checkpoint was written
+    /// with.
+    pub fn restore(&mut self, ckpt: &TrainCheckpoint) -> Result<()> {
+        ensure!(
+            ckpt.shards.len() == self.replicas.len(),
+            "checkpoint holds {} shard states but the trainer is \
+             running {} shards — resume with --shards {}",
+            ckpt.shards.len(),
+            self.replicas.len(),
+            ckpt.shards.len()
+        );
+        ensure!(
+            ckpt.master.len() == self.master.len(),
+            "checkpoint has {} master tensors, expected {}",
+            ckpt.master.len(),
+            self.master.len()
+        );
+        for (s, st) in ckpt.shards.iter().enumerate() {
+            self.replicas[s]
+                .restore_state(st)
+                .with_context(|| format!("restoring shard {s}"))?;
+        }
+        self.master = ckpt.master.clone();
+        self.iters_done = ckpt.iters_done as usize;
+        Ok(())
+    }
+
+    /// Snapshot every replica into an in-memory [`TrainCheckpoint`]
+    /// for the current `iters_done`.
+    pub fn snapshot(&mut self) -> Result<TrainCheckpoint> {
+        let mut shards = Vec::with_capacity(self.replicas.len());
+        for (s, r) in self.replicas.iter_mut().enumerate() {
+            shards.push(r.state_snapshot().with_context(|| {
+                format!("snapshotting shard {s}")
+            })?);
+        }
+        Ok(TrainCheckpoint {
+            iters_done: self.iters_done as u64,
+            master: self.master.clone(),
+            shards,
+        })
+    }
+
+    /// Run `iters` training iterations, calling `consume(iter,
+    /// metrics)` with the cross-shard reduced metrics after each
+    /// iteration is folded into the master. A `consume` error aborts
+    /// training and is returned.
+    pub fn train<C>(&mut self, iters: usize, mut consume: C)
+                    -> Result<()>
+    where
+        C: FnMut(usize, &IterMetrics) -> Result<()>,
+    {
+        let resample_every = self.train_cfg.task_resample_iters.max(1);
+        let every = match &self.checkpoint {
+            Some(p) if p.every > 0 => Some(p.every),
+            _ => None,
+        };
+        let first = self.iters_done + 1;
+        let last = self.iters_done + iters;
+        for t in first..=last {
+            let resample = t > 1 && (t - 1) % resample_every == 0;
+            let basis = self.master.clone();
+            let mut deltas = Vec::with_capacity(self.replicas.len());
+            let mut metrics = Vec::with_capacity(self.replicas.len());
+            // serial, ascending shard order — the reduction order
+            // (and thus the master) is the determinism contract
+            for (s, r) in self.replicas.iter_mut().enumerate() {
+                r.set_params(&basis)
+                    .with_context(|| format!("broadcast, shard {s}"))?;
+                if resample {
+                    r.resample_tasks().with_context(|| {
+                        format!("resampling tasks, shard {s}")
+                    })?;
+                }
+                let m = r.train_iter().with_context(|| {
+                    format!("training iteration {t}, shard {s}")
+                })?;
+                deltas.push(sub_params(&r.params.to_tensors(), &basis));
+                metrics.push(m);
+            }
+            let mean_delta = average_param_tensors(deltas);
+            add_params(&mut self.master, &mean_delta);
+            self.iters_done = t;
+            if let Some(e) = every {
+                if t % e == 0 {
+                    self.write_checkpoint()?;
+                }
+            }
+            let reduced = reduce_iter_metrics(&metrics);
+            consume(t, &reduced)?;
+        }
+        Ok(())
+    }
+
+    /// Write an atomic checkpoint for the current `iters_done`.
+    fn write_checkpoint(&mut self) -> Result<()> {
+        let Some(plan) = &self.checkpoint else {
+            return Ok(());
+        };
+        let (path, faults) = (plan.path.clone(), plan.faults.clone());
+        let ckpt = self.snapshot()?;
+        save_checkpoint(&path, &ckpt, &faults).with_context(|| {
+            format!("checkpointing at iteration {}", self.iters_done)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchgen::{generate_benchmark, Benchmark, Preset};
+
+    fn tiny_bench() -> Arc<Benchmark> {
+        let (rulesets, _) =
+            generate_benchmark(&Preset::Trivial.config(), 8).unwrap();
+        Arc::new(Benchmark { name: "t".into(), rulesets })
+    }
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims { v: 5, e: 2, ae: 3, d: 8, h: 6, a: 6, extra: 0 }
+    }
+
+    fn tiny_cfg(threads: usize, bench: &Arc<Benchmark>)
+                -> NativeTrainerConfig {
+        let env = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", 4,
+                                           3, bench)
+            .unwrap()
+            .with_threads(threads);
+        NativeTrainerConfig {
+            env,
+            obs: ObsMode::Symbolic,
+            model: Some(tiny_dims()),
+            epochs: 2,
+            minibatches: 2,
+        }
+    }
+
+    fn param_bits(p: &Params) -> Vec<u32> {
+        p.t.iter()
+            .flat_map(|v| v.iter().map(|x| x.to_bits()))
+            .collect()
+    }
+
+    fn tensor_bits(ts: &[Tensor]) -> Vec<u32> {
+        ts.iter()
+            .flat_map(|t| t.as_f32().iter().map(|x| x.to_bits()))
+            .collect()
+    }
+
+    #[test]
+    fn train_iter_is_deterministic_and_thread_invariant() {
+        let run = |threads: usize| {
+            let bench = tiny_bench();
+            let tasks: Arc<dyn TaskSource> = bench.clone();
+            let mut tr = NativeTrainer::new(tiny_cfg(threads, &bench),
+                                            tasks,
+                                            TrainConfig::default())
+                .unwrap();
+            tr.resample_tasks().unwrap();
+            let m1 = tr.train_iter().unwrap();
+            let m2 = tr.train_iter().unwrap();
+            assert!(m1.total_loss.is_finite());
+            assert_eq!(m1.env_steps, 4 * 3);
+            (param_bits(&tr.params), m1.total_loss.to_bits(),
+             m2.total_loss.to_bits(), m2.reward_sum.to_bits())
+        };
+        let a = run(1);
+        assert_eq!(a, run(1), "fixed seed reproduces bitwise");
+        assert_eq!(a, run(2), "thread count is invisible");
+    }
+
+    #[test]
+    fn obs_modes_change_the_input_width() {
+        let bench = tiny_bench();
+        let tasks: Arc<dyn TaskSource> = bench.clone();
+        let mut cfg = tiny_cfg(1, &bench);
+        cfg.obs = ObsMode::Direction;
+        cfg.model = None; // reference dims with extra=4
+        let tr = NativeTrainer::new(cfg.clone(), tasks.clone(),
+                                    TrainConfig::default())
+            .unwrap();
+        assert_eq!(tr.dims.extra, 4);
+        cfg.obs = ObsMode::RulesGoals;
+        let tr = NativeTrainer::new(cfg.clone(), tasks.clone(),
+                                    TrainConfig::default())
+            .unwrap();
+        assert_eq!(tr.dims.extra,
+                   cfg.env.params.task_row_len());
+        cfg.obs = ObsMode::Rgb;
+        assert!(NativeTrainer::new(cfg, tasks, TrainConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn training_with_dir_obs_runs() {
+        let bench = tiny_bench();
+        let tasks: Arc<dyn TaskSource> = bench.clone();
+        let mut cfg = tiny_cfg(1, &bench);
+        cfg.obs = ObsMode::Direction;
+        cfg.model = Some(ModelDims { extra: 4, ..tiny_dims() });
+        let mut tr =
+            NativeTrainer::new(cfg, tasks, TrainConfig::default())
+                .unwrap();
+        tr.resample_tasks().unwrap();
+        let m = tr.train_iter().unwrap();
+        assert!(m.total_loss.is_finite());
+    }
+
+    #[test]
+    fn sharded_snapshot_resumes_bitwise() {
+        let scfg = ShardConfig { shards: 2, seed: 7,
+                                 ..Default::default() };
+        let build = || {
+            let bench = tiny_bench();
+            let tasks: Arc<dyn TaskSource> = bench.clone();
+            NativeShardedTrainer::launch(tiny_cfg(1, &bench), tasks,
+                                         scfg,
+                                         TrainConfig::default())
+                .unwrap()
+        };
+        let mut a = build();
+        a.train(1, |_, _| Ok(())).unwrap();
+        let ckpt = a.snapshot().unwrap();
+        let mut rows_a = Vec::new();
+        a.train(2, |t, m| {
+            rows_a.push((t, m.total_loss.to_bits(),
+                         m.reward_sum.to_bits()));
+            Ok(())
+        })
+        .unwrap();
+
+        let mut b = build();
+        b.restore(&ckpt).unwrap();
+        assert_eq!(b.iters_done, 1);
+        let mut rows_b = Vec::new();
+        b.train(2, |t, m| {
+            rows_b.push((t, m.total_loss.to_bits(),
+                         m.reward_sum.to_bits()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows_a, rows_b, "resumed metrics identical");
+        assert_eq!(tensor_bits(&a.master), tensor_bits(&b.master),
+                   "resumed master identical");
+    }
+
+    #[test]
+    fn restore_rejects_wrong_shard_count() {
+        let bench = tiny_bench();
+        let tasks: Arc<dyn TaskSource> = bench.clone();
+        let scfg = ShardConfig { shards: 2, seed: 7,
+                                 ..Default::default() };
+        let mut a = NativeShardedTrainer::launch(tiny_cfg(1, &bench),
+                                                 tasks.clone(), scfg,
+                                                 TrainConfig::default())
+            .unwrap();
+        let ckpt = a.snapshot().unwrap();
+        let one = ShardConfig { shards: 1, seed: 7,
+                                ..Default::default() };
+        let mut b = NativeShardedTrainer::launch(tiny_cfg(1, &bench),
+                                                 tasks, one,
+                                                 TrainConfig::default())
+            .unwrap();
+        let err = b.restore(&ckpt).unwrap_err().to_string();
+        assert!(err.contains("--shards 2"), "{err}");
+    }
+}

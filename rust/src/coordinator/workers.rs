@@ -823,6 +823,71 @@ impl ParVecEnv {
         Ok(out)
     }
 
+    /// Install a full-batch snapshot — the inverse of
+    /// [`ParVecEnv::snapshot`] and the trainer's resume primitive. The
+    /// global snapshot is sliced per chunk along the fixed per-env
+    /// strides, each chunk engine is restored in place, and staging
+    /// observations are re-rendered so `copy_obs_into` reflects the
+    /// restored state. Like `reset_all`, a restore is a full
+    /// synchronization point: the replay log restarts here with the
+    /// per-chunk snapshots as base (tasks carry over), so worker
+    /// recovery replays from the restored state, not the dead past.
+    pub fn restore(&mut self, snap: &VecEnvSnapshot) -> Result<()> {
+        let ghw = self.cfg.h * self.cfg.w;
+        let (mr, mi) = (self.cfg.max_rules, self.cfg.max_init);
+        if snap.rng_states.len() != self.b
+            || snap.base.len() != self.b * ghw
+            || snap.rules.len() != self.b * mr
+        {
+            bail!(
+                "snapshot shape mismatch: {} envs (want {}), {} base \
+                 cells (want {}), {} rules (want {})",
+                snap.rng_states.len(),
+                self.b,
+                snap.base.len(),
+                self.b * ghw,
+                snap.rules.len(),
+                self.b * mr
+            );
+        }
+        let per_chunk: Vec<VecEnvSnapshot> = self
+            .ranges
+            .iter()
+            .map(|&(lo, hi)| VecEnvSnapshot {
+                base: snap.base[lo * ghw..hi * ghw].to_vec(),
+                grid: snap.grid[lo * ghw..hi * ghw].to_vec(),
+                agent_pos: snap.agent_pos[lo * 2..hi * 2].to_vec(),
+                agent_dir: snap.agent_dir[lo..hi].to_vec(),
+                pocket: snap.pocket[lo..hi].to_vec(),
+                rules: snap.rules[lo * mr..hi * mr].to_vec(),
+                goals: snap.goals[lo..hi].to_vec(),
+                init: snap.init[lo * mi..hi * mi].to_vec(),
+                init_len: snap.init_len[lo..hi].to_vec(),
+                step_count: snap.step_count[lo..hi].to_vec(),
+                max_steps: snap.max_steps[lo..hi].to_vec(),
+                rng_states: snap.rng_states[lo..hi].to_vec(),
+            })
+            .collect();
+        {
+            let per = &per_chunk;
+            self.run_op("restore", move |c, bufs| {
+                let s = per[c].clone();
+                Box::new(move |w: &mut ChunkEnv| {
+                    let mut bufs = bufs;
+                    w.venv.restore(&s);
+                    w.venv.write_obs_all(&mut bufs.obs);
+                    (bufs, ())
+                })
+            })?;
+        }
+        self.log.base_tasks = self.log.effective_tasks();
+        self.log.base = ReplayBase::Snapshots(per_chunk);
+        self.log.events.clear();
+        self.log.logged_steps = 0;
+        self.seeded = true;
+        Ok(())
+    }
+
     // --- unified-API surface (env::api::BatchEnvironment) ------------------
 
     /// Parallel [`VecEnv::restart_all`]: per-env streams are split off

@@ -22,6 +22,12 @@
 //!   multi-device scaling, the RL² PPO trainer (Anakin-style, single- and
 //!   multi-shard), and the evaluation harness (25-trial /
 //!   20th-percentile protocol of §4.2).
+//! - [`nn`] — the native training stack: dense f32 GRU actor-critic
+//!   mirroring the Python reference model, GAE + clipped-PPO loss with
+//!   analytic BPTT backward, and Adam, all under a bitwise numeric
+//!   contract pinned by committed Python-oracle fixtures. Lets
+//!   `xmgrid train --backend native` run RL² end to end with zero
+//!   compiled artifacts.
 //! - [`render`] — ASCII renderer for interactive inspection.
 //! - [`lint`] — the `xmgrid lint` static-analysis pass: token-level
 //!   rules that machine-check the determinism and panic-safety
@@ -35,6 +41,7 @@ pub mod benchgen;
 pub mod coordinator;
 pub mod env;
 pub mod lint;
+pub mod nn;
 pub mod render;
 pub mod runtime;
 pub mod util;

@@ -13,7 +13,8 @@ use super::Violation;
 
 /// Determinism-critical module roots: everything the bitwise
 /// `--threads`-invariance contract covers.
-const DET_DIRS: [&str; 3] = ["env/", "benchgen/", "coordinator/"];
+const DET_DIRS: [&str; 4] =
+    ["env/", "benchgen/", "coordinator/", "nn/"];
 
 /// Files sanctioned to read the wall clock: the bench harness, the
 /// metrics sink (via `WallTimer`), and the CLI binary.
@@ -22,11 +23,12 @@ const WALLCLOCK_ALLOWED: [&str; 3] =
 
 /// Supervised worker / channel paths: a panic here defeats the
 /// catch_unwind + respawn recovery machinery.
-const WORKER_FILES: [&str; 4] = [
+const WORKER_FILES: [&str; 5] = [
     "coordinator/shard.rs",
     "coordinator/workers.rs",
     "coordinator/rollout.rs",
     "coordinator/trainer.rs",
+    "coordinator/native_trainer.rs",
 ];
 
 /// Identifiers that mean "randomness not derived from the config
@@ -191,7 +193,8 @@ pub fn check(rel: &str, scan: &Scan, cfg: &LintConfig) -> Vec<Violation> {
         }
 
         if cfg.on("float-reduction-order")
-            && rel.starts_with("coordinator/")
+            && (rel.starts_with("coordinator/")
+                || rel.starts_with("nn/"))
         {
             check_float_reduction(scan, &mut viol);
         }

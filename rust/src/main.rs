@@ -9,8 +9,10 @@
 //!   rollout         sharded random-policy throughput run
 //!                   (--backend native|xla|auto; --shards N
 //!                   --overlap on|off: double-buffered engine)
-//!   train           RL² PPO training (Fig. 6/7 harness; --shards N runs
-//!                   the data-parallel shard engine)
+//!   train           RL² PPO training (Fig. 6/7 harness;
+//!                   --backend native|xla|auto — native is the pure-Rust
+//!                   GRU+PPO stack, zero artifacts; --shards N runs the
+//!                   data-parallel shard engine)
 //!   eval            evaluation protocol on a benchmark
 //!   verify          benchmark store integrity check
 //!   lint            determinism & panic-safety static analysis
@@ -35,10 +37,12 @@ use xmgrid::coordinator::metrics::{fmt_sps, CsvLog, ThroughputMeter};
 use xmgrid::coordinator::pool::EnvFamily;
 use xmgrid::coordinator::{eval_kshot, load_checkpoint, BackendKind,
                           CheckpointPlan, EvalPolicy, KShotConfig,
-                          NativeEnvConfig, Overlap, RolloutEngine,
+                          NativeEnvConfig, NativeShardedTrainer,
+                          NativeTrainerConfig, Overlap, RolloutEngine,
                           ShardConfig, ShardedTrainer, TrainConfig,
                           Trainer};
 use xmgrid::lint;
+use xmgrid::nn::{ModelDims, Params};
 use xmgrid::util::fault::{FaultPlan, RetryPolicy, FAULTS_ENV};
 use xmgrid::util::bench::{json_arg_path, JsonReport};
 use xmgrid::env::api::{EnvParams, ObsMode};
@@ -141,10 +145,12 @@ commands:
   rollout [--backend B] [--shards N]  sharded throughput run
           [--threads T] [--obs M]     (native: chunked stepping pool,
                                       obs wrapper stacks incl. rgb)
-  train [--shards N] [--overlap M]    RL² PPO training
+  train [--backend B] [--shards N]    RL² PPO training (native: pure
+        [--obs M] [--overlap M]       Rust GRU+PPO, zero artifacts;
+                                      xla: fused train_iter via PJRT)
   eval --benchmark B [--shots K]      k-shot evaluation on a held-out
-       [--policy random|greedy]       split (per-trial return curves,
-                                      BENCH_eval JSON via --json)
+       [--policy random|greedy|       split (per-trial return curves,
+        checkpoint:PATH]              BENCH_eval JSON via --json)
   verify --benchmark B                integrity-check a stored benchmark
                                       (magic, count, per-task decode,
                                       duplicate detection)
@@ -295,37 +301,65 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
   --retry-backoff-ms M  linear backoff between retries: attempt k sleeps
                      k*M ms (default: 50)",
         "train" => "\
-usage: xmgrid train [--benchmark NAME] [--iters N] [--batch B]
-                    [--artifact NAME] [--shards K] [--threads T|auto]
-                    [--overlap on|off] [--seed S] [--resample I]
-                    [--eval-every E] [--rooms R] [--log PATH]
-                    [--checkpoint PATH] [--checkpoint-every N]
-                    [--resume] [--obs symbolic] [--artifacts-dir DIR]
+usage: xmgrid train [--backend auto|native|xla] [--benchmark NAME]
+                    [--iters N] [--batch B] [--steps T] [--env NAME]
+                    [--obs symbolic|dir|rules-goals] [--epochs E]
+                    [--minibatches M] [--artifact NAME] [--shards K]
+                    [--threads T|auto] [--overlap on|off] [--seed S]
+                    [--resample I] [--eval-every E] [--rooms R]
+                    [--log PATH] [--checkpoint PATH]
+                    [--checkpoint-every N] [--resume]
+                    [--artifacts-dir DIR]
 
-RL² PPO training over fused train_iter artifacts. With --shards > 1 the
-data-parallel shard engine runs one full trainer replica per shard and
-all-reduces parameter updates on the host in fixed shard order.
+RL² PPO training. The native backend is the pure-Rust GRU actor-critic
++ PPO stack over the vectorized env pool: zero artifacts, runs on a
+fresh checkout, bitwise-reproducible per seed for any --threads. The
+xla backend drives fused train_iter artifacts through PJRT. With
+--shards > 1 either backend runs one full trainer replica per shard
+and all-reduces parameter updates on the host in fixed shard order.
+Both write the same checkpoint format, which `eval --policy
+checkpoint:PATH` can evaluate directly.
 
+  --backend B        native: pure-Rust GRU+PPO, zero artifacts.
+                     xla: compiled train_iter artifacts through PJRT.
+                     auto (default): xla if a manifest with train_iter
+                     artifacts exists, else native.
   --benchmark NAME   task source (default: trivial-1k)
   --iters N          training iterations (default: 50)
-  --batch B          pick the train_iter artifact with this env batch
-                     (default: 256; falls back to the largest)
-  --artifact NAME    explicit train_iter artifact (overrides --batch)
-  --shards K         trainer replicas (default: 1 = single-replica path)
-  --threads T|auto   worker threads for first-use benchmark generation
-                     (default: 1; auto = all cores) — large --benchmark
-                     names like medium-1m generate in seconds
-  --overlap on|off   off: lockstep all-reduce every iteration (bitwise
-                     deterministic per seed). on: double-buffered
-                     pipeline — shards compute iteration t+1 while the
-                     host reduces iteration t (one iteration of
-                     parameter staleness). (default: off)
+  --batch B          env batch: VecEnv size per shard (native) or the
+                     train_iter artifact to pick (xla) (default: 256)
+  --steps T          native: rollout window (BPTT length) per iteration
+                     (default: 64; xla takes T from the artifact)
+  --env NAME         native: XLand registry family to train on
+                     (default: XLand-MiniGrid-R1-9x9; xla bakes the
+                     family into the artifact)
+  --obs MODE         native: symbolic (default) | dir | rules-goals —
+                     the wrapper extras feed the trunk input. xla
+                     supports symbolic only (other stacks error with a
+                     pointer to aot.py).
+  --epochs E         native: PPO epochs per iteration (default: 1)
+  --minibatches M    native: env-column minibatches per epoch; must
+                     divide --batch (default: 1)
+  --artifact NAME    xla: explicit train_iter artifact (overrides
+                     --batch)
+  --shards K         trainer replicas (default: 1)
+  --threads T|auto   native: env-stepping workers per shard (output
+                     bitwise-identical for any count). Also
+                     parallelizes first-use benchmark generation.
+                     (default: 1; auto = all cores)
+  --overlap on|off   xla: off = lockstep all-reduce every iteration,
+                     on = double-buffered pipeline (one iteration of
+                     parameter staleness). The native engine is always
+                     lockstep. (default: off)
   --seed S           training seed (default: 42); shard k trains with
                      shard_seed(S, k)
   --resample I       resample tasks every I iterations (default: 8)
-  --eval-every E     run the §4.2 evaluation every E iterations
-                     (default: 0 = never)
-  --rooms R          rooms in the base grid layout (default: 1)
+  --eval-every E     evaluate every E iterations — native: the k-shot
+                     harness drives the current master greedily; xla:
+                     the §4.2 eval_rollout artifact (default: 0 =
+                     never)
+  --rooms R          rooms in the base grid layout — xla; the native
+                     room count comes from --env (default: 1)
   --log PATH         CSV metrics path
                      (default: artifacts/train_log.csv)
   --checkpoint PATH  crash-safe checkpoint path
@@ -335,19 +369,16 @@ all-reduces parameter updates on the host in fixed shard order.
                      N iterations. Checkpoint boundaries are pipeline
                      sync points, so the cadence is part of the run's
                      schedule: same seed + shards + cadence => same run.
-                     (default: 0 = off). Uses the shard-engine path even
-                     with --shards 1.
+                     (default: 0 = off)
   --resume           restore --checkpoint and continue toward --iters
                      (a total, not an increment), reproducing the
                      uninterrupted run bit for bit; CSV rows append to
                      --log. Missing or torn checkpoints are a clean
-                     error.
-  --obs MODE         must be `symbolic`: the train_iter artifacts are
-                     lowered against the symbolic ObsSpec (other
-                     stacks error with a pointer to aot.py)",
+                     error.",
         "eval" => "\
-usage: xmgrid eval [--benchmark NAME] [--policy random|greedy|artifact]
-                   [--shots K] [--batch B] [--env NAME]
+usage: xmgrid eval [--benchmark NAME]
+                   [--policy random|greedy|checkpoint:PATH|artifact]
+                   [--sample] [--shots K] [--batch B] [--env NAME]
                    [--shuffle S] [--prop P] [--split train|test]
                    [--threads T|auto] [--seed S] [--json [PATH]]
                    [--rooms R] [--artifacts-dir DIR]
@@ -365,9 +396,16 @@ scripts/compare_bench.py diffs).
                      saved `xmgrid split` output to evaluate that split
                      directly
   --policy P         random (default) | greedy (scripted baseline that
-                     homes on visible goal objects) | artifact (the
-                     legacy §4.2 protocol through the eval_rollout
-                     artifact — needs make artifacts + PJRT)
+                     homes on visible goal objects) |
+                     checkpoint:PATH (the learned RL² policy restored
+                     from a `train` checkpoint — either backend's; the
+                     GRU carry runs through the k-shot loop, so the
+                     curve shows within-episode adaptation) | artifact
+                     (the legacy §4.2 protocol through the
+                     eval_rollout artifact — needs make artifacts +
+                     PJRT)
+  --sample           checkpoint policy: draw actions from the
+                     categorical head instead of greedy argmax
   --shots K          trials recorded per task (default: 5)
   --batch B          env batch; tasks assign round-robin, so B >= the
                      split size covers every task (default: 256)
@@ -696,17 +734,33 @@ fn pick_train_artifact(manifest: &Manifest, batch: usize)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let obs_mode = ObsMode::from_flag(&args.str_or("obs", "symbolic"))?;
+    // Backend selection mirrors `rollout`: an explicit flag wins;
+    // `auto` takes the AOT/PJRT path only when a manifest with
+    // train_iter artifacts exists, and otherwise falls back to the
+    // native training stack — a fresh checkout trains with zero build
+    // steps.
+    let backend = BackendKind::from_flag(&args.str_or("backend", "auto"))?;
+    let use_xla = match backend {
+        BackendKind::Native => false,
+        BackendKind::Xla => true,
+        BackendKind::Auto => Manifest::load(&artifacts_dir(args))
+            .ok()
+            .map_or(false, |m| !m.of_kind("train_iter").is_empty()),
+    };
+    if !use_xla {
+        return cmd_train_native(args, obs_mode);
+    }
     // --obs: the train_iter artifacts bake the symbolic ObsSpec into
     // the compiled policy input; other stacks need re-lowered
     // artifacts, so anything else is an explicit error, not a silent
     // fallback.
-    let obs_mode = ObsMode::from_flag(&args.str_or("obs", "symbolic"))?;
     if obs_mode != ObsMode::Symbolic {
-        bail!("train --obs {obs_mode}: the train_iter artifacts are \
-               lowered against the symbolic ObsSpec; re-run \
-               python/compile/aot.py with a different obs head to train \
-               on wrapped observations (rollout --backend native \
-               supports --obs {obs_mode} today)");
+        bail!("train --backend xla --obs {obs_mode}: the train_iter \
+               artifacts are lowered against the symbolic ObsSpec; \
+               re-run python/compile/aot.py with a different obs head, \
+               or use --backend native, which trains on \
+               --obs symbolic|dir|rules-goals directly");
     }
     let scfg = {
         // train defaults its seed to the Table 6 seed, not 0
@@ -918,6 +972,170 @@ fn cmd_train_sharded(args: &Args, scfg: ShardConfig) -> Result<()> {
     Ok(())
 }
 
+/// `train --backend native`: the pure-Rust GRU actor-critic + PPO
+/// stack over the vectorized native env pool. No artifacts, no PJRT:
+/// a fresh checkout trains immediately, bitwise-reproducible per seed
+/// for any `--threads`, and writes the same `TrainCheckpoint` format
+/// as the xla path.
+fn cmd_train_native(args: &Args, obs_mode: ObsMode) -> Result<()> {
+    let scfg = {
+        // train defaults its seed to the Table 6 seed, not 0
+        let mut c = shard_config(args)?;
+        c.seed = args.u64_or("seed", TrainConfig::default().train_seed);
+        c
+    };
+    let threads = parse_threads(args)?;
+    let bench = Arc::new(load_benchmark_with(
+        &args.str_or("benchmark", "trivial-1k"), threads)?);
+    let iters = args.usize_or("iters", 50);
+    let batch = args.usize_or("batch", 256);
+    let t = args.usize_or("steps", 64);
+    let env_name = args.str_or("env", "XLand-MiniGrid-R1-9x9");
+    if args.get("artifact").is_some() {
+        println!("note: --artifact applies to the xla backend only; \
+                  the native model shape is built in");
+    }
+    let mut cfg = TrainConfig::default();
+    cfg.task_resample_iters =
+        args.usize_or("resample", cfg.task_resample_iters);
+    // resolve --resume before building replicas: a missing or torn
+    // checkpoint fails fast, before any buffer is allocated
+    let ckpt_path = PathBuf::from(
+        args.str_or("checkpoint", "artifacts/train_ckpt.bin"));
+    let resume = args.flag("resume");
+    let resume_ckpt = if resume {
+        Some(load_checkpoint(&ckpt_path).context(
+            "cannot resume (re-run without --resume to start fresh)")?)
+    } else {
+        None
+    };
+    let ncfg = NativeEnvConfig::for_env(&env_name, batch, t, &bench)?
+        .with_threads(threads)
+        .with_retry(retry_policy(args));
+    let eval_ncfg = ncfg.clone();
+    let tcfg = NativeTrainerConfig {
+        env: ncfg,
+        obs: obs_mode,
+        model: None,
+        epochs: args.usize_or("epochs", 1),
+        minibatches: args.usize_or("minibatches", 1),
+    };
+    println!(
+        "backend native: {env_name} on {} ({} tasks) — B={batch} \
+         T={t} obs={obs_mode} epochs={} minibatches={} shards={} \
+         threads={threads}",
+        bench.name, bench.num_rulesets(), tcfg.epochs,
+        tcfg.minibatches, scfg.shards
+    );
+    let tasks: Arc<dyn xmgrid::env::state::TaskSource> = bench.clone();
+    let mut engine =
+        NativeShardedTrainer::launch(tcfg, tasks, scfg, cfg)?;
+
+    if let Some(ckpt) = &resume_ckpt {
+        engine.restore(ckpt)?;
+        println!("resumed from {ckpt_path:?} at iteration {}",
+                 engine.iters_done);
+    }
+    let ckpt_every = args.usize_or("checkpoint-every", 0);
+    if ckpt_every > 0 {
+        engine.checkpoint = Some(CheckpointPlan {
+            path: ckpt_path.clone(),
+            every: ckpt_every,
+            faults: Arc::new(FaultPlan::from_env()?),
+        });
+        println!("checkpointing to {ckpt_path:?} every {ckpt_every} \
+                  iteration(s)");
+    }
+
+    let csv_path = PathBuf::from(
+        args.str_or("log", "artifacts/train_log.csv"));
+    let header = [
+        "iter", "env_steps", "loss", "pi_loss", "v_loss", "entropy",
+        "approx_kl", "reward_per_step", "trials", "sps",
+    ];
+    let mut log = if resume {
+        CsvLog::append(&csv_path, &header)?
+    } else {
+        CsvLog::create(&csv_path, &header)?
+    };
+
+    let eval_every = args.usize_or("eval-every", 0);
+    let mut meter = ThroughputMeter::new();
+    // --iters is the run's total; on resume, only the remainder runs.
+    let mut done = engine.iters_done;
+    if done >= iters {
+        println!("checkpoint already at iteration {done} >= --iters \
+                  {iters}; nothing to do");
+        return Ok(());
+    }
+    let base_steps = engine.steps_per_iter() * done as u64;
+    while done < iters {
+        let n = if eval_every > 0 {
+            eval_every.min(iters - done)
+        } else {
+            iters - done
+        };
+        engine.train(n, |i, m| {
+            meter.add(m.env_steps);
+            let sps = meter.sps();
+            log.row(&[
+                i.to_string(), (base_steps + meter.steps()).to_string(),
+                format!("{:.4}", m.total_loss),
+                format!("{:.4}", m.pi_loss),
+                format!("{:.4}", m.v_loss),
+                format!("{:.4}", m.entropy),
+                format!("{:.5}", m.approx_kl),
+                format!("{:.5}", m.reward_sum / m.env_steps as f32),
+                m.trials.to_string(), format!("{sps:.0}"),
+            ])
+            .with_context(|| format!("writing {csv_path:?}"))?;
+            if i % 10 == 0 || i == iters {
+                println!(
+                    "iter {i:>4} steps {:>9} loss {:+.4} ent {:.3} \
+                     r/step {:.4} trials {:>5} sps {}",
+                    base_steps + meter.steps(), m.total_loss, m.entropy,
+                    m.reward_sum / m.env_steps as f32, m.trials,
+                    fmt_sps(sps)
+                );
+            }
+            Ok(())
+        })?;
+        done += n;
+        if eval_every > 0 && done % eval_every == 0 {
+            // the native eval is the k-shot harness driving the
+            // current master parameters greedily (§4.2 protocol)
+            let dims = ModelDims::infer(
+                &engine.master, eval_ncfg.params.opts.view_size)?;
+            let params = Params::from_tensors(dims, &engine.master)?;
+            let kcfg = KShotConfig {
+                params: eval_ncfg.params,
+                rooms: eval_ncfg.rooms,
+                b: batch,
+                shots: 5,
+                threads,
+                seed: engine.train_cfg.eval_seed,
+            };
+            let policy = EvalPolicy::Checkpoint {
+                params: Box::new(params),
+                sample: false,
+            };
+            let rep = eval_kshot(&*bench, policy, &kcfg)?;
+            let (first, last) = (rep.shots.first(), rep.shots.last());
+            println!(
+                "  eval: shot-1 return {:.3} | shot-{} return {:.3} \
+                 | P20 {:.3} (tasks {})",
+                first.map_or(0.0, |s| s.return_mean),
+                rep.shots.len(),
+                last.map_or(0.0, |s| s.return_mean),
+                last.map_or(0.0, |s| s.return_p20),
+                rep.tasks
+            );
+        }
+    }
+    println!("log written to {csv_path:?}");
+    Ok(())
+}
+
 /// `"LO..HI"` → `LO..HI` (half-open, usize).
 fn parse_range(s: &str) -> Result<std::ops::Range<usize>> {
     let (lo, hi) = s
@@ -1007,10 +1225,10 @@ fn cmd_split(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    if args.str_or("policy", "random") == "artifact" {
+    let pol_flag = args.str_or("policy", "random");
+    if pol_flag == "artifact" {
         return cmd_eval_artifact(args);
     }
-    let policy = EvalPolicy::from_flag(&args.str_or("policy", "random"))?;
     let name = args.str_or("benchmark", "trivial-1k");
     let bench = Arc::new(load_benchmark_with(&name,
                                              parse_threads(args)?)?);
@@ -1038,6 +1256,32 @@ fn cmd_eval(args: &Args) -> Result<()> {
         shots,
         threads: parse_threads(args)?,
         seed: args.u64_or("seed", 0),
+    };
+    // `--policy checkpoint:PATH` loads a train checkpoint's master
+    // parameters (either backend writes the same format) and runs the
+    // learned RL² policy through the harness — greedy argmax by
+    // default, `--sample` draws from the categorical head.
+    let policy = match pol_flag.strip_prefix("checkpoint:") {
+        Some(path) => {
+            let ckpt = load_checkpoint(&PathBuf::from(path))
+                .with_context(|| {
+                    format!("loading --policy checkpoint {path}")
+                })?;
+            let dims = ModelDims::infer(&ckpt.master,
+                                        ncfg.params.opts.view_size)?;
+            let params = Params::from_tensors(dims, &ckpt.master)?;
+            println!(
+                "policy checkpoint: {path} (iteration {}, extras {}, \
+                 {})",
+                ckpt.iters_done, dims.extra,
+                if args.flag("sample") { "sampled" } else { "greedy" }
+            );
+            EvalPolicy::Checkpoint {
+                params: Box::new(params),
+                sample: args.flag("sample"),
+            }
+        }
+        None => EvalPolicy::from_flag(&pol_flag)?,
     };
     println!(
         "k-shot eval: {} on {} ({} tasks, {} envs, {shots} shots, \

@@ -1,0 +1,224 @@
+//! GAE and the clipped-PPO loss, forward + analytic gradient at the
+//! (logits, value) level — the reference `model.py` math under the
+//! [`super::math`] numeric contract. Batch reductions accumulate in
+//! f64 in flat `[T, B]` order (t-major) and round to f32 once;
+//! per-element gradients stay f64 (they feed the f64 accumulators of
+//! [`super::model::Grads`]).
+
+/// Reverse-scan generalized advantage estimation (contract f32 ops).
+/// All arrays are flat `[T, B]`; `dones[i] != 0` means the episode
+/// ended *after* step i (the bootstrap mask). Writes advantages and
+/// value targets (`adv + values`).
+#[allow(clippy::too_many_arguments)]
+pub fn gae(rewards: &[f32], values: &[f32], dones: &[i32],
+           last_value: &[f32], gamma: f32, lam: f32, t_len: usize,
+           b: usize, adv: &mut [f32], targets: &mut [f32]) {
+    debug_assert_eq!(rewards.len(), t_len * b);
+    debug_assert_eq!(last_value.len(), b);
+    debug_assert_eq!(adv.len(), t_len * b);
+    let gl = gamma * lam;
+    for e in 0..b {
+        let mut a_next = 0.0f32;
+        let mut v_next = last_value[e];
+        for t in (0..t_len).rev() {
+            let i = t * b + e;
+            let nonterm = 1.0f32 - if dones[i] != 0 { 1.0 } else { 0.0 };
+            let t1 = gamma * v_next;
+            let t2 = t1 * nonterm;
+            let t3 = rewards[i] + t2;
+            let delta = t3 - values[i];
+            let u1 = gl * nonterm;
+            let u2 = u1 * a_next;
+            a_next = delta + u2;
+            adv[i] = a_next;
+            targets[i] = a_next + values[i];
+            v_next = values[i];
+        }
+    }
+}
+
+/// Scalar loss statistics of one PPO minibatch update (f32, contract
+/// rounding; the reference `metrics` vector minus grad-norm, which the
+/// optimizer step reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossStats {
+    pub total: f32,
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub clip_frac: f32,
+    pub adv_std: f32,
+}
+
+/// Inputs of [`ppo_loss_grads`] that come from the rollout (flat
+/// `[T, Bm]` minibatch views).
+pub struct LossBatch<'a> {
+    pub actions: &'a [i32],
+    pub old_logp: &'a [f32],
+    pub adv: &'a [f32],
+    pub targets: &'a [f32],
+}
+
+/// Clipped-PPO loss forward + gradient wrt logits and values.
+///
+/// `logits` is flat `[N, A]`, `values`/`dvalues` `[N]`, `dlogits`
+/// `[N, A]` (overwritten). Advantages are normalized over the
+/// minibatch with f64 mean/std (population). `hp` is the 8-float
+/// hyperparameter vector (`clip_eps = hp[1]`, `ent_coef = hp[4]`,
+/// `vf_coef = hp[5]`). `scratch` must hold `A` floats.
+#[allow(clippy::too_many_arguments)]
+pub fn ppo_loss_grads(logits: &[f32], values: &[f32], lb: &LossBatch,
+                      hp: &[f32; 8], a_dim: usize, scratch: &mut [f32],
+                      dlogits: &mut [f64], dvalues: &mut [f64])
+                      -> LossStats {
+    let n = values.len();
+    debug_assert_eq!(logits.len(), n * a_dim);
+    debug_assert_eq!(dlogits.len(), n * a_dim);
+    let n_f = n as f64;
+    let clip_eps = hp[1];
+    let (ent_coef, vf_coef) = (hp[4] as f64, hp[5] as f64);
+
+    // advantage normalization: f64 mean/std over the minibatch
+    let mut s = 0.0f64;
+    for &a in lb.adv {
+        s += a as f64;
+    }
+    let mean = s / n_f;
+    let mut s2 = 0.0f64;
+    for &a in lb.adv {
+        let d = a as f64 - mean;
+        s2 += d * d;
+    }
+    let std = (s2 / n_f).sqrt();
+
+    let lo = 1.0f32 - clip_eps;
+    let hi = 1.0f32 + clip_eps;
+    let (mut sum_pi, mut sum_v, mut sum_ent, mut sum_kl) =
+        (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut n_clip = 0usize;
+    for i in 0..n {
+        let row = &logits[i * a_dim..(i + 1) * a_dim];
+        super::math::log_softmax(row, scratch);
+        let act = lb.actions[i] as usize;
+        let lp = scratch[act];
+        let dl = lp - lb.old_logp[i];
+        let ratio = super::math::exp_f32(dl);
+        let a_n = ((lb.adv[i] as f64 - mean) / (std + 1e-8)) as f32;
+        let pg1 = ratio * a_n;
+        let rc = ratio.max(lo).min(hi);
+        let pg2 = rc * a_n;
+        let pg_min = if pg1 <= pg2 { pg1 } else { pg2 };
+        sum_pi += pg_min as f64;
+        let rf = ratio as f64;
+        sum_kl += (rf - 1.0) - rf.ln();
+        if (ratio - 1.0).abs() > clip_eps {
+            n_clip += 1;
+        }
+        // d min(pg1, pg2) / d logp (dratio/dlogp = ratio); the clip
+        // branch passes gradient only inside [lo, hi]
+        let dmin_dlogp = if pg1 <= pg2 {
+            a_n as f64 * rf
+        } else if ratio >= lo && ratio <= hi {
+            a_n as f64 * rf
+        } else {
+            0.0
+        };
+        let dlp = -(1.0 / n_f) * dmin_dlogp;
+        let mut ent_i = 0.0f64;
+        for &lp_a in scratch.iter() {
+            let p_a = (lp_a as f64).exp();
+            ent_i -= p_a * lp_a as f64;
+        }
+        sum_ent += ent_i;
+        for j in 0..a_dim {
+            let p_j = (scratch[j] as f64).exp();
+            let ind = if j == act { 1.0f64 } else { 0.0 };
+            let mut d_z = dlp * (ind - p_j);
+            d_z += ent_coef / n_f * p_j * (scratch[j] as f64 + ent_i);
+            dlogits[i * a_dim + j] = d_z;
+        }
+        let e = values[i] - lb.targets[i];
+        sum_v += e as f64 * e as f64;
+        dvalues[i] = vf_coef / n_f * e as f64;
+    }
+    let pi_loss = (-(sum_pi / n_f)) as f32;
+    let v_loss = (0.5 * sum_v / n_f) as f32;
+    let entropy = (sum_ent / n_f) as f32;
+    LossStats {
+        total: (pi_loss as f64 + vf_coef * v_loss as f64
+                - ent_coef * entropy as f64) as f32,
+        pi_loss,
+        v_loss,
+        entropy,
+        approx_kl: (sum_kl / n_f) as f32,
+        clip_frac: (n_clip as f64 / n_f) as f32,
+        adv_std: std as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gae_matches_hand_rollout() {
+        // single env, no terminals: classic telescoped recursion
+        let rewards = [1.0f32, 0.0, 0.5];
+        let values = [0.2f32, 0.3, 0.1];
+        let dones = [0i32, 0, 0];
+        let last_value = [0.4f32];
+        let (mut adv, mut tg) = ([0.0f32; 3], [0.0f32; 3]);
+        gae(&rewards, &values, &dones, &last_value, 0.9, 0.8, 3, 1,
+            &mut adv, &mut tg);
+        let d2 = 0.5 + 0.9 * 0.4 - 0.1;
+        let a2 = d2;
+        let d1 = 0.0 + 0.9 * 0.1 - 0.3;
+        let a1 = d1 + 0.9 * 0.8 * a2;
+        let d0 = 1.0 + 0.9 * 0.3 - 0.2;
+        let a0 = d0 + 0.9 * 0.8 * a1;
+        assert!((adv[0] - a0).abs() < 1e-5, "{} vs {a0}", adv[0]);
+        assert!((adv[1] - a1).abs() < 1e-5);
+        assert!((adv[2] - a2).abs() < 1e-5);
+        assert_eq!(tg[2], adv[2] + values[2]);
+    }
+
+    #[test]
+    fn gae_terminal_cuts_bootstrap() {
+        let rewards = [0.0f32, 1.0];
+        let values = [0.5f32, 0.5];
+        let dones = [1i32, 0]; // terminal after step 0
+        let last_value = [9.0f32];
+        let (mut adv, mut tg) = ([0.0f32; 2], [0.0f32; 2]);
+        gae(&rewards, &values, &dones, &last_value, 0.99, 0.95, 2, 1,
+            &mut adv, &mut tg);
+        // step 0 sees neither v(step 1) nor adv(step 1)
+        assert!((adv[0] - (0.0 - 0.5)).abs() < 1e-6, "{}", adv[0]);
+    }
+
+    #[test]
+    fn loss_grad_signs_point_downhill() {
+        // one element, strong positive advantage on the taken action:
+        // the policy gradient must push that logit up (negative grad)
+        let logits = [0.0f32, 0.0, 0.0];
+        let values = [0.0f32];
+        let lb = LossBatch {
+            actions: &[1],
+            old_logp: &[-1.0986f32], // log(1/3)
+            adv: &[2.0f32],
+            targets: &[1.0f32],
+        };
+        let hp = [1e-3f32, 0.2, 0.99, 0.95, 0.0, 0.5, 0.5, 0.0];
+        let mut scratch = [0.0f32; 3];
+        let mut dlogits = [0.0f64; 3];
+        let mut dvalues = [0.0f64; 1];
+        let stats = ppo_loss_grads(&logits, &values, &lb, &hp, 3,
+                                   &mut scratch, &mut dlogits,
+                                   &mut dvalues);
+        // NB: single-element minibatch → normalized adv is 0/1e-8 ≈ 0,
+        // so use dvalue for the sign check instead
+        assert!(dvalues[0] < 0.0, "value below target: push up");
+        assert!(stats.v_loss > 0.0);
+        assert!(stats.total.is_finite());
+    }
+}

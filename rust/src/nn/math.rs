@@ -1,0 +1,174 @@
+//! The native numeric contract: every op the `nn` stack uses, defined
+//! once so the Rust kernels and the committed Python oracle fixtures
+//! (`python/tools/gen_nn_fixtures.py`) agree bit for bit.
+//!
+//! Contract (mirrored exactly by the generator):
+//!
+//! * dot products accumulate in f64 sequentially over the contraction
+//!   index (ascending) and round to f32 once; the f64 product of two
+//!   f32 operands is exact, so the result depends only on the
+//!   summation order, which is fixed;
+//! * elementwise `+ - * /` are plain f32 IEEE ops (single rounding);
+//! * transcendentals evaluate in f64 via the platform libm on the
+//!   widened f32 input and round to f32 once — `f64::{exp, tanh, ln}`
+//!   and CPython's `math` module resolve to the same libm calls on
+//!   linux-gnu, so the fixture bits match;
+//! * batch reductions (loss means, normalizations) accumulate in f64
+//!   in a fixed documented order and round once at the end.
+//!
+//! Everything here is serial on the coordinator thread: thread-count
+//! invariance of training comes for free because the only parallel
+//! component (env stepping) is bitwise thread-invariant already.
+
+use crate::util::rng::Rng;
+
+/// `f32(exp(x as f64))` — single rounding through libm.
+#[inline]
+pub fn exp_f32(x: f32) -> f32 {
+    (x as f64).exp() as f32
+}
+
+/// `f32(tanh(x as f64))` — single rounding through libm.
+#[inline]
+pub fn tanh_f32(x: f32) -> f32 {
+    (x as f64).tanh() as f32
+}
+
+/// Logistic sigmoid, all-f64 inner evaluation, single rounding.
+#[inline]
+pub fn sigmoid_f32(x: f32) -> f32 {
+    (1.0f64 / (1.0 + (-(x as f64)).exp())) as f32
+}
+
+/// `out[j] = f32(Σ_k f64(x[k] · w[k·n_out + j])) (+ bias[j], f32 add)`
+/// for row-major `w` of shape `[n_in, n_out]` — the `x @ w` of the
+/// reference model. The f64 accumulator runs over `k` ascending.
+pub fn matvec(x: &[f32], w: &[f32], n_in: usize, n_out: usize,
+              bias: Option<&[f32]>, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n_in);
+    debug_assert_eq!(w.len(), n_in * n_out);
+    debug_assert_eq!(out.len(), n_out);
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for k in 0..n_in {
+            acc += x[k] as f64 * w[k * n_out + j] as f64;
+        }
+        let mut v = acc as f32;
+        if let Some(b) = bias {
+            v += b[j];
+        }
+        *o = v;
+    }
+}
+
+/// Contract log-softmax of one logits row: `m = max` (f32 compare),
+/// `d_i = f32(x_i - m)`, `s = Σ exp(d_i)` (f64, ascending),
+/// `logp_i = f32(d_i - ln s)`.
+pub fn log_softmax(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let mut m = f32::NEG_INFINITY;
+    for &x in logits {
+        if x > m {
+            m = x;
+        }
+    }
+    let mut s = 0.0f64;
+    for (o, &x) in out.iter_mut().zip(logits) {
+        let d = x - m;
+        *o = d; // stash d_i; finalized below
+        s += (d as f64).exp();
+    }
+    let ls = s.ln();
+    for o in out.iter_mut() {
+        *o = (*o as f64 - ls) as f32;
+    }
+}
+
+/// One categorical draw from a logits row: softmax probabilities in
+/// f64 (from the contract log-probs), exactly one `rng.f64()` per
+/// draw, CDF walk in action order. Serial per env in env order — the
+/// sampling sequence is part of the determinism contract.
+pub fn categorical(rng: &mut Rng, logits: &[f32], scratch: &mut [f32])
+                   -> usize {
+    debug_assert_eq!(scratch.len(), logits.len());
+    log_softmax(logits, scratch);
+    let mut total = 0.0f64;
+    for &lp in scratch.iter() {
+        total += (lp as f64).exp();
+    }
+    let u = rng.f64() * total;
+    let mut acc = 0.0f64;
+    for (a, &lp) in scratch.iter().enumerate() {
+        acc += (lp as f64).exp();
+        if u < acc {
+            return a;
+        }
+    }
+    logits.len() - 1
+}
+
+/// Standard-normal draw via Box-Muller on two `rng.f64()` uniforms.
+/// Only used for parameter init (the JAX side seeds its own params;
+/// there is no cross-language init parity to keep — just determinism
+/// per seed).
+pub fn normal_f64(rng: &mut Rng) -> f64 {
+    let u1 = 1.0 - rng.f64(); // (0, 1]: keeps ln finite
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_is_f64_sequential() {
+        // 2x2 identity-ish check plus a catastrophic-cancellation case
+        // that distinguishes f64 accumulation from f32
+        let x = [1.0e8f32, 1.0, -1.0e8];
+        let w = [1.0f32, 1.0, 1.0]; // [3, 1]
+        let mut out = [0.0f32];
+        matvec(&x, &w, 3, 1, None, &mut out);
+        assert_eq!(out[0], 1.0, "f64 accumulator preserves the 1.0");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = [0.5f32, -1.0, 2.0, 0.0];
+        let mut lp = [0.0f32; 4];
+        log_softmax(&logits, &mut lp);
+        let total: f64 = lp.iter().map(|&x| (x as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "probs sum to 1: {total}");
+        assert!(lp.iter().all(|&x| x < 0.0));
+    }
+
+    #[test]
+    fn categorical_is_deterministic_and_in_range() {
+        let logits = [0.1f32, 3.0, -2.0, 0.5];
+        let mut s = [0.0f32; 4];
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..64 {
+            let x = categorical(&mut a, &logits, &mut s);
+            let y = categorical(&mut b, &logits, &mut s);
+            assert_eq!(x, y);
+            assert!(x < 4);
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut rng = Rng::new(11);
+        let n = 20_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = normal_f64(&mut rng);
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,582 @@
+//! The RL² actor-critic of the reference stack, natively: embedding
+//! trunk → GRU cell → fused policy/value head, transliterated from
+//! `python/compile/model.py` (itself the `kernels/ref.py` composition)
+//! under the [`super::math`] numeric contract, plus the analytic
+//! backward used by BPTT.
+//!
+//! Parameter layout is identical to the XLA trainer's — the same 11
+//! tensors in the same order ([`PARAM_NAMES`]) — so native checkpoints
+//! and XLA checkpoints share the `TrainCheckpoint` codec unchanged.
+//!
+//! Observation rows are `[V·V·2]` symbolic i32 cells, optionally
+//! followed by `extra` wrapper-appended values (`--obs dir` one-hot,
+//! `--obs rules-goals` task encoding) which enter the trunk input as
+//! raw f32 — the input width comes from the `ObsSpec`, never from a
+//! hardcoded shape.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+use super::math::{matvec, normal_f64, sigmoid_f32, tanh_f32};
+
+/// Tile/color vocabulary sizes (env::types; re-declared to keep `nn`
+/// free of env-layer imports — pinned equal in tests).
+pub const NUM_TILES: usize = 15;
+pub const NUM_COLORS: usize = 14;
+
+/// The 11 parameter tensors, in codec order (= the XLA artifact's
+/// `PARAM_NAMES`).
+pub const PARAM_NAMES: [&str; 11] = [
+    "tile_emb", "col_emb", "act_emb", "w1", "b1", "wi", "wh", "bi",
+    "bh", "whead", "bhead",
+];
+pub const NUM_PARAMS: usize = PARAM_NAMES.len();
+
+/// Model hyper-shape. Defaults mirror the reference `ModelConfig`
+/// (view 5, emb 8, act-emb 16, trunk 256, hidden 256, 6 actions);
+/// `extra` is the wrapper-appended observation width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    /// agent view size (obs is `[v, v, 2]` symbolic)
+    pub v: usize,
+    /// tile/color embedding dim
+    pub e: usize,
+    /// action embedding dim
+    pub ae: usize,
+    /// trunk width
+    pub d: usize,
+    /// GRU hidden width
+    pub h: usize,
+    /// number of env actions (head emits `a` logits + 1 value)
+    pub a: usize,
+    /// wrapper-appended obs values per env (0 for `--obs symbolic`)
+    pub extra: usize,
+}
+
+impl ModelDims {
+    /// Reference dims for a view-`v` env with `extra` wrapper values.
+    pub fn reference(v: usize, extra: usize) -> ModelDims {
+        ModelDims { v, e: 8, ae: 16, d: 256, h: 256, a: 6, extra }
+    }
+
+    /// Observation row width consumed per env (symbolic + extra).
+    pub fn obs_len(&self) -> usize {
+        self.v * self.v * 2 + self.extra
+    }
+
+    /// Trunk input width (embedded symbolic cells + raw extras).
+    pub fn in1(&self) -> usize {
+        self.v * self.v * 2 * self.e + self.extra
+    }
+
+    /// GRU input width: trunk ⧺ action embedding ⧺ prev-reward.
+    pub fn rl2_in(&self) -> usize {
+        self.d + self.ae + 1
+    }
+
+    /// `(rows, cols)` of parameter tensor `idx` (cols 1 for vectors).
+    pub fn param_shape(&self, idx: usize) -> (usize, usize) {
+        match idx {
+            0 => (NUM_TILES, self.e),
+            1 => (NUM_COLORS, self.e),
+            2 => (self.a + 1, self.ae),
+            3 => (self.in1(), self.d),
+            4 => (self.d, 1),
+            5 => (self.rl2_in(), 3 * self.h),
+            6 => (self.h, 3 * self.h),
+            7 => (3 * self.h, 1),
+            8 => (3 * self.h, 1),
+            9 => (self.h, self.a + 1),
+            10 => (self.a + 1, 1),
+            _ => unreachable!("param index {idx}"),
+        }
+    }
+
+    pub fn param_len(&self, idx: usize) -> usize {
+        let (r, c) = self.param_shape(idx);
+        r * c
+    }
+
+    /// Recover the dims from raw parameter tensors plus the env-side
+    /// facts (view size, wrapper width) — how `eval --policy
+    /// checkpoint:` rebuilds the model without a stored config.
+    pub fn infer(params: &[Tensor], v: usize) -> Result<ModelDims> {
+        if params.len() != NUM_PARAMS {
+            bail!("expected {NUM_PARAMS} param tensors, got {}",
+                  params.len());
+        }
+        let len = |i: usize| -> Result<usize> {
+            match &params[i] {
+                Tensor::F32(x) => Ok(x.len()),
+                t => bail!("param {} ({}) is {:?}, expected f32", i,
+                           PARAM_NAMES[i], t.dtype()),
+            }
+        };
+        let e = len(0)? / NUM_TILES;
+        let a1 = len(10)?; // bhead = a + 1
+        if a1 < 2 {
+            bail!("bhead has {a1} entries; not an actor-critic head");
+        }
+        let a = a1 - 1;
+        let ae = len(2)? / a1;
+        let d = len(4)?;
+        let wh = len(6)?;
+        let h2 = wh / 3;
+        let h = (h2 as f64).sqrt().round() as usize;
+        if h * 3 * h != wh {
+            bail!("wh length {wh} is not 3·H² for integer H");
+        }
+        let in1 = len(3)? / d;
+        let sym = v * v * 2 * e;
+        if in1 < sym {
+            bail!(
+                "w1 input width {in1} is smaller than the embedded \
+                 view {sym} (view {v}, emb {e}) — checkpoint/env \
+                 mismatch"
+            );
+        }
+        let dm = ModelDims { v, e, ae, d, h, a, extra: in1 - sym };
+        // cross-check every remaining length against the derived dims
+        for i in 0..NUM_PARAMS {
+            if len(i)? != dm.param_len(i) {
+                bail!(
+                    "param {} ({}) has {} values, expected {} for \
+                     dims {:?}",
+                    i, PARAM_NAMES[i], len(i)?, dm.param_len(i), dm
+                );
+            }
+        }
+        Ok(dm)
+    }
+}
+
+/// The parameter set: 11 dense f32 tensors in [`PARAM_NAMES`] order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params {
+    pub dims: ModelDims,
+    pub t: Vec<Vec<f32>>,
+}
+
+impl Params {
+    /// Fan-in-scaled normal init (biases zero, head weights scaled by
+    /// 0.01 like the reference init) from one deterministic stream.
+    pub fn init(dims: ModelDims, rng: &mut Rng) -> Params {
+        let mut t = Vec::with_capacity(NUM_PARAMS);
+        for idx in 0..NUM_PARAMS {
+            let (rows, cols) = dims.param_shape(idx);
+            let n = rows * cols;
+            let v = match idx {
+                4 | 7 | 8 | 10 => vec![0.0f32; n], // biases
+                9 => (0..n)
+                    .map(|_| (normal_f64(rng) * 0.01) as f32)
+                    .collect(),
+                _ => {
+                    let scale = 1.0 / (rows as f64).sqrt();
+                    (0..n)
+                        .map(|_| (normal_f64(rng) * scale) as f32)
+                        .collect()
+                }
+            };
+            t.push(v);
+        }
+        Params { dims, t }
+    }
+
+    /// Wrap raw checkpoint tensors, validating shapes against `dims`.
+    pub fn from_tensors(dims: ModelDims, tensors: &[Tensor])
+                        -> Result<Params> {
+        let got = ModelDims::infer(tensors, dims.v)?;
+        if got != dims {
+            bail!("checkpoint dims {got:?} != expected {dims:?}");
+        }
+        let t = tensors
+            .iter()
+            .map(|t| match t {
+                Tensor::F32(v) => v.clone(),
+                _ => unreachable!("infer() checked dtypes"),
+            })
+            .collect();
+        Ok(Params { dims, t })
+    }
+
+    /// Codec-order tensors (for `TrainCheckpoint`).
+    pub fn to_tensors(&self) -> Vec<Tensor> {
+        self.t.iter().map(|v| Tensor::F32(v.clone())).collect()
+    }
+}
+
+/// Reusable per-call scratch for [`network_step`] — the rollout and
+/// update hot loops allocate nothing per step.
+#[derive(Debug, Default)]
+pub struct StepScratch {
+    flat: Vec<f32>,
+    gi: Vec<f32>,
+    gh: Vec<f32>,
+}
+
+impl StepScratch {
+    pub fn new(dims: &ModelDims) -> StepScratch {
+        StepScratch {
+            flat: vec![0.0; dims.in1()],
+            gi: vec![0.0; 3 * dims.h],
+            gh: vec![0.0; 3 * dims.h],
+        }
+    }
+}
+
+/// Forward activations of one step for the whole batch, recorded
+/// during the update forward pass and consumed by
+/// [`backward_step`]. All slices are `[B, dim]` views into the
+/// trainer's `[T, B, dim]` cache buffers.
+pub struct CacheSlices<'a> {
+    /// GRU input rows `[B, rl2_in]` (trunk ⧺ act-emb ⧺ prev-reward)
+    pub x: &'a mut [f32],
+    /// done-masked hidden input `[B, H]`
+    pub h_in: &'a mut [f32],
+    pub r: &'a mut [f32],
+    pub z: &'a mut [f32],
+    pub n: &'a mut [f32],
+    /// the `h_n` gate pre-activation contribution `gh[2H..3H]`
+    pub ghn: &'a mut [f32],
+    /// resolved action-embedding row index per env
+    pub pa: &'a mut [i32],
+    /// `1 - done` mask per env
+    pub nd: &'a mut [f32],
+    /// new hidden state `[B, H]`
+    pub h_out: &'a mut [f32],
+}
+
+/// Embed one observation row into the trunk input: per cell, `e` tile
+/// dims then `e` color dims (clamped ids), then the wrapper extras as
+/// raw f32.
+fn embed_obs(p: &Params, obs_row: &[i32], flat: &mut [f32]) {
+    let dm = &p.dims;
+    let e = dm.e;
+    let cells = dm.v * dm.v;
+    let (tile_emb, col_emb) = (&p.t[0], &p.t[1]);
+    for c in 0..cells {
+        let t = obs_row[c * 2].clamp(0, NUM_TILES as i32 - 1) as usize;
+        let k = obs_row[c * 2 + 1].clamp(0, NUM_COLORS as i32 - 1)
+            as usize;
+        flat[c * 2 * e..c * 2 * e + e]
+            .copy_from_slice(&tile_emb[t * e..(t + 1) * e]);
+        flat[c * 2 * e + e..(c + 1) * 2 * e]
+            .copy_from_slice(&col_emb[k * e..(k + 1) * e]);
+    }
+    for i in 0..dm.extra {
+        flat[cells * 2 * e + i] = obs_row[cells * 2 + i] as f32;
+    }
+}
+
+/// One batched RL² network step (the reference `network_step`):
+/// embeds `obs`, masks hidden/prev-reward by `done`, runs the GRU and
+/// the fused head. `h` is the *unmasked* carry (masking happens here,
+/// from the `done` input). Outputs land in `logits [B, A]`,
+/// `value [B]`, `h_out [B, H]`; pass `cache` during update forward
+/// passes to record what the backward needs.
+#[allow(clippy::too_many_arguments)]
+pub fn network_step(p: &Params, obs: &[i32], prev_a: &[i32],
+                    prev_r: &[f32], done: &[i32], h: &[f32],
+                    logits: &mut [f32], value: &mut [f32],
+                    h_out: &mut [f32], scratch: &mut StepScratch,
+                    mut cache: Option<&mut CacheSlices<'_>>) {
+    let dm = p.dims;
+    let b = value.len();
+    let (ol, in1, ri, hh, a) =
+        (dm.obs_len(), dm.in1(), dm.rl2_in(), dm.h, dm.a);
+    debug_assert_eq!(obs.len(), b * ol);
+    debug_assert_eq!(h.len(), b * hh);
+    debug_assert_eq!(logits.len(), b * a);
+    debug_assert_eq!(h_out.len(), b * hh);
+    let mut x = vec![0.0f32; ri];
+    let mut out = vec![0.0f32; a + 1];
+    for i in 0..b {
+        embed_obs(p, &obs[i * ol..(i + 1) * ol], &mut scratch.flat);
+        // trunk = relu(flat @ w1 + b1), written into x[0..d]
+        matvec(&scratch.flat[..in1], &p.t[3], in1, dm.d, Some(&p.t[4]),
+               &mut x[..dm.d]);
+        for v in x[..dm.d].iter_mut() {
+            if !(*v > 0.0) {
+                *v = 0.0;
+            }
+        }
+        let done_i = done[i] > 0;
+        let pa = if done_i {
+            dm.a
+        } else {
+            prev_a[i].clamp(0, dm.a as i32) as usize
+        };
+        x[dm.d..dm.d + dm.ae]
+            .copy_from_slice(&p.t[2][pa * dm.ae..(pa + 1) * dm.ae]);
+        let nd = 1.0f32 - if done_i { 1.0 } else { 0.0 };
+        x[dm.d + dm.ae] = prev_r[i] * nd;
+        let hb = &h[i * hh..(i + 1) * hh];
+        let ho = &mut h_out[i * hh..(i + 1) * hh];
+        // h_in = h * (1 - done), staged in ho then overwritten
+        for (o, &hv) in ho.iter_mut().zip(hb) {
+            *o = hv * nd;
+        }
+        if let Some(c) = cache.as_deref_mut() {
+            c.h_in[i * hh..(i + 1) * hh].copy_from_slice(ho);
+            c.x[i * ri..(i + 1) * ri].copy_from_slice(&x);
+            c.pa[i] = pa as i32;
+            c.nd[i] = nd;
+        }
+        matvec(&x, &p.t[5], ri, 3 * hh, Some(&p.t[7]), &mut scratch.gi);
+        matvec(ho, &p.t[6], hh, 3 * hh, Some(&p.t[8]), &mut scratch.gh);
+        let (gi, gh) = (&scratch.gi, &scratch.gh);
+        for j in 0..hh {
+            let r = sigmoid_f32(gi[j] + gh[j]);
+            let z = sigmoid_f32(gi[hh + j] + gh[hh + j]);
+            let n = tanh_f32(gi[2 * hh + j] + r * gh[2 * hh + j]);
+            let h_in_j = ho[j];
+            ho[j] = (1.0 - z) * n + z * h_in_j;
+            if let Some(c) = cache.as_deref_mut() {
+                c.r[i * hh + j] = r;
+                c.z[i * hh + j] = z;
+                c.n[i * hh + j] = n;
+                c.ghn[i * hh + j] = gh[2 * hh + j];
+            }
+        }
+        matvec(ho, &p.t[9], hh, a + 1, Some(&p.t[10]), &mut out);
+        logits[i * a..(i + 1) * a].copy_from_slice(&out[..a]);
+        value[i] = out[a];
+        if let Some(c) = cache.as_deref_mut() {
+            c.h_out[i * hh..(i + 1) * hh].copy_from_slice(ho);
+        }
+    }
+}
+
+/// Per-parameter f64 gradient accumulators (rounded to f32 only
+/// inside the Adam step, after global-norm clipping).
+pub struct Grads {
+    pub g: Vec<Vec<f64>>,
+}
+
+impl Grads {
+    pub fn zeros(dims: &ModelDims) -> Grads {
+        Grads {
+            g: (0..NUM_PARAMS)
+                .map(|i| vec![0.0f64; dims.param_len(i)])
+                .collect(),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for v in self.g.iter_mut() {
+            for x in v.iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Analytic backward of one batched step: consumes the head/GRU/trunk
+/// gradients for every env in the batch, accumulates parameter
+/// gradients into `grads`, and rewrites `dh` (grad wrt this step's
+/// *input* hidden carry — the BPTT recurrence). `dh` enters holding
+/// the carry from step t+1; `dlogits [B, A]` / `dvalue [B]` add the
+/// head path. Derivation is finite-difference-validated by the
+/// fixture generator and `tests/nn_kernels.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_step(p: &Params, c: &CacheSlices<'_>, obs: &[i32],
+                     dlogits: &[f64], dvalue: &[f64], dh: &mut [f64],
+                     grads: &mut Grads, scratch: &mut StepScratch) {
+    let dm = p.dims;
+    let b = dvalue.len();
+    let (ol, in1, ri, hh, a) =
+        (dm.obs_len(), dm.in1(), dm.rl2_in(), dm.h, dm.a);
+    let a1 = a + 1;
+    let mut dout = vec![0.0f64; a1];
+    let mut dgi = vec![0.0f64; 3 * hh];
+    let mut dgh = vec![0.0f64; 3 * hh];
+    let mut dh_in = vec![0.0f64; hh];
+    let mut dx = vec![0.0f64; ri];
+    let mut dflat = vec![0.0f64; in1];
+    for i in 0..b {
+        dout[..a].copy_from_slice(&dlogits[i * a..(i + 1) * a]);
+        dout[a] = dvalue[i];
+        let dhb = &mut dh[i * hh..(i + 1) * hh];
+        // head: out = h_out @ whead + bhead
+        for j in 0..hh {
+            let hj = c.h_out[i * hh + j] as f64;
+            let base = j * a1;
+            for (o, &d) in dout.iter().enumerate() {
+                grads.g[9][base + o] += hj * d;
+                dhb[j] += d * p.t[9][base + o] as f64;
+            }
+        }
+        for (o, &d) in dout.iter().enumerate() {
+            grads.g[10][o] += d;
+        }
+        // GRU gates
+        for j in 0..hh {
+            let (r, z, n) = (c.r[i * hh + j] as f64,
+                             c.z[i * hh + j] as f64,
+                             c.n[i * hh + j] as f64);
+            let h_in_j = c.h_in[i * hh + j] as f64;
+            let d = dhb[j];
+            let dn = d * (1.0 - z);
+            let dz = d * (h_in_j - n);
+            dh_in[j] = d * z;
+            let da_n = dn * (1.0 - n * n);
+            let dr = da_n * c.ghn[i * hh + j] as f64;
+            let da_r = dr * r * (1.0 - r);
+            let da_z = dz * z * (1.0 - z);
+            dgi[j] = da_r;
+            dgi[hh + j] = da_z;
+            dgi[2 * hh + j] = da_n;
+            dgh[j] = da_r;
+            dgh[hh + j] = da_z;
+            dgh[2 * hh + j] = da_n * r;
+        }
+        // gi = x @ wi + bi
+        let xb = &c.x[i * ri..(i + 1) * ri];
+        for k in 0..ri {
+            let xk = xb[k] as f64;
+            let base = k * 3 * hh;
+            let mut acc = 0.0f64;
+            for j in 0..3 * hh {
+                grads.g[5][base + j] += xk * dgi[j];
+                acc += dgi[j] * p.t[5][base + j] as f64;
+            }
+            dx[k] = acc;
+        }
+        // gh = h_in @ wh + bh
+        for k in 0..hh {
+            let hk = c.h_in[i * hh + k] as f64;
+            let base = k * 3 * hh;
+            let mut acc = 0.0f64;
+            for j in 0..3 * hh {
+                grads.g[6][base + j] += hk * dgh[j];
+                acc += dgh[j] * p.t[6][base + j] as f64;
+            }
+            dh_in[k] += acc;
+        }
+        for j in 0..3 * hh {
+            grads.g[7][j] += dgi[j];
+            grads.g[8][j] += dgh[j];
+        }
+        // h_in = h_prev * (1 - done): the outgoing BPTT carry
+        let ndi = c.nd[i] as f64;
+        for j in 0..hh {
+            dhb[j] = dh_in[j] * ndi;
+        }
+        // act-emb row
+        let ab = c.pa[i] as usize * dm.ae;
+        for j in 0..dm.ae {
+            grads.g[2][ab + j] += dx[dm.d + j];
+        }
+        // trunk: relu'(pre) via trunk > 0 (trunk lives in x[0..d])
+        let obs_row = &obs[i * ol..(i + 1) * ol];
+        embed_obs(p, obs_row, &mut scratch.flat);
+        for k in 0..in1 {
+            let fk = scratch.flat[k] as f64;
+            let base = k * dm.d;
+            let mut acc = 0.0f64;
+            for j in 0..dm.d {
+                let dpre = if xb[j] > 0.0 { dx[j] } else { 0.0 };
+                grads.g[3][base + j] += fk * dpre;
+                acc += dpre * p.t[3][base + j] as f64;
+            }
+            dflat[k] = acc;
+        }
+        for j in 0..dm.d {
+            grads.g[4][j] += if xb[j] > 0.0 { dx[j] } else { 0.0 };
+        }
+        let e = dm.e;
+        let cells = dm.v * dm.v;
+        for cc in 0..cells {
+            let t = obs_row[cc * 2].clamp(0, NUM_TILES as i32 - 1)
+                as usize;
+            let k = obs_row[cc * 2 + 1]
+                .clamp(0, NUM_COLORS as i32 - 1) as usize;
+            for j in 0..e {
+                grads.g[0][t * e + j] += dflat[cc * 2 * e + j];
+                grads.g[1][k * e + j] += dflat[cc * 2 * e + e + j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_shapes_are_consistent() {
+        let dm = ModelDims::reference(5, 0);
+        assert_eq!(dm.obs_len(), 50);
+        assert_eq!(dm.in1(), 400);
+        assert_eq!(dm.rl2_in(), 256 + 16 + 1);
+        assert_eq!(dm.param_len(3), 400 * 256);
+        let ext = ModelDims::reference(5, 4);
+        assert_eq!(ext.obs_len(), 54);
+        assert_eq!(ext.in1(), 404);
+    }
+
+    #[test]
+    fn vocab_matches_env_tables() {
+        assert_eq!(NUM_TILES, crate::env::types::NUM_TILES);
+        assert_eq!(NUM_COLORS, crate::env::types::NUM_COLORS);
+    }
+
+    #[test]
+    fn init_roundtrips_through_tensors_and_infer() {
+        let dm = ModelDims { v: 5, e: 2, ae: 3, d: 6, h: 4, a: 6,
+                             extra: 4 };
+        let mut rng = Rng::new(3);
+        let p = Params::init(dm, &mut rng);
+        let tensors = p.to_tensors();
+        assert_eq!(ModelDims::infer(&tensors, 5).unwrap(), dm);
+        let q = Params::from_tensors(dm, &tensors).unwrap();
+        assert_eq!(p, q);
+        // biases start at zero, weights don't
+        assert!(p.t[4].iter().all(|&x| x == 0.0));
+        assert!(p.t[3].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn infer_rejects_mismatched_tensors() {
+        let dm = ModelDims { v: 5, e: 2, ae: 3, d: 6, h: 4, a: 6,
+                             extra: 0 };
+        let mut rng = Rng::new(4);
+        let p = Params::init(dm, &mut rng);
+        let mut tensors = p.to_tensors();
+        assert!(ModelDims::infer(&tensors[..10], 5).is_err());
+        tensors[6] = Tensor::F32(vec![0.0; 7]); // not 3·H²
+        assert!(ModelDims::infer(&tensors, 5).is_err());
+    }
+
+    #[test]
+    fn done_masks_hidden_and_reward() {
+        let dm = ModelDims { v: 5, e: 2, ae: 3, d: 6, h: 4, a: 6,
+                             extra: 0 };
+        let mut rng = Rng::new(5);
+        let p = Params::init(dm, &mut rng);
+        let obs = vec![1i32; dm.obs_len()];
+        let h = vec![0.7f32; dm.h];
+        let zero_h = vec![0.0f32; dm.h];
+        let mut scratch = StepScratch::new(&dm);
+        let run = |prev_a: i32, prev_r: f32, done: i32, h: &[f32],
+                   scratch: &mut StepScratch| {
+            let mut lg = vec![0.0f32; dm.a];
+            let mut v = vec![0.0f32; 1];
+            let mut ho = vec![0.0f32; dm.h];
+            network_step(&p, &obs, &[prev_a], &[prev_r], &[done], h,
+                         &mut lg, &mut v, &mut ho, scratch, None);
+            (lg, v, ho)
+        };
+        // done=1: prev action/reward/hidden are all invisible
+        let a = run(3, 0.9, 1, &h, &mut scratch);
+        let b = run(0, -0.4, 1, &h, &mut scratch);
+        let c = run(3, 0.9, 1, &zero_h, &mut scratch);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        // done=0: they matter
+        let d = run(3, 0.9, 0, &h, &mut scratch);
+        assert_ne!(a.0, d.0);
+    }
+}

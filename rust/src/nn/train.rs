@@ -1,0 +1,337 @@
+//! The PPO update: T-step forward over a minibatch of env columns
+//! (sequences kept intact — BPTT needs them), loss + analytic
+//! backward, global-norm clip, Adam. One [`ppo_update`] call is one
+//! optimizer step; the reference XLA `train_update` is exactly one
+//! such call over the whole batch (1 epoch × 1 minibatch), which is
+//! the native CLI default too.
+
+use super::loss::{ppo_loss_grads, LossBatch, LossStats};
+use super::model::{backward_step, network_step, CacheSlices, Grads,
+                   ModelDims, Params, StepScratch, NUM_PARAMS};
+
+/// Per-step forward activations for a whole `[T, Bm]` window,
+/// allocated once and reused across epochs/minibatches of equal
+/// shape.
+pub struct SeqCache {
+    t_len: usize,
+    bm: usize,
+    dims: ModelDims,
+    x: Vec<f32>,
+    h_in: Vec<f32>,
+    r: Vec<f32>,
+    z: Vec<f32>,
+    n: Vec<f32>,
+    ghn: Vec<f32>,
+    pa: Vec<i32>,
+    nd: Vec<f32>,
+    h_out: Vec<f32>,
+}
+
+impl SeqCache {
+    pub fn new(dims: ModelDims, t_len: usize, bm: usize) -> SeqCache {
+        let (h, ri) = (dims.h, dims.rl2_in());
+        SeqCache {
+            t_len,
+            bm,
+            dims,
+            x: vec![0.0; t_len * bm * ri],
+            h_in: vec![0.0; t_len * bm * h],
+            r: vec![0.0; t_len * bm * h],
+            z: vec![0.0; t_len * bm * h],
+            n: vec![0.0; t_len * bm * h],
+            ghn: vec![0.0; t_len * bm * h],
+            pa: vec![0; t_len * bm],
+            nd: vec![0.0; t_len * bm],
+            h_out: vec![0.0; t_len * bm * h],
+        }
+    }
+
+    /// Mutable step-`t` view (all buffers sliced to `[Bm, dim]`).
+    fn at(&mut self, t: usize) -> CacheSlices<'_> {
+        debug_assert!(t < self.t_len);
+        let (h, ri, bm) = (self.dims.h, self.dims.rl2_in(), self.bm);
+        CacheSlices {
+            x: &mut self.x[t * bm * ri..(t + 1) * bm * ri],
+            h_in: &mut self.h_in[t * bm * h..(t + 1) * bm * h],
+            r: &mut self.r[t * bm * h..(t + 1) * bm * h],
+            z: &mut self.z[t * bm * h..(t + 1) * bm * h],
+            n: &mut self.n[t * bm * h..(t + 1) * bm * h],
+            ghn: &mut self.ghn[t * bm * h..(t + 1) * bm * h],
+            pa: &mut self.pa[t * bm..(t + 1) * bm],
+            nd: &mut self.nd[t * bm..(t + 1) * bm],
+            h_out: &mut self.h_out[t * bm * h..(t + 1) * bm * h],
+        }
+    }
+}
+
+/// One minibatch of rollout columns, flat `[T, Bm]` arrays (plus
+/// `h0 [Bm, H]`). The trainer gathers these from the `[T, B]` rollout
+/// by env index, preserving each env's full T-step sequence.
+pub struct MiniBatch {
+    pub t_len: usize,
+    pub bm: usize,
+    pub obs: Vec<i32>,
+    pub prev_a: Vec<i32>,
+    pub prev_r: Vec<f32>,
+    pub done: Vec<i32>,
+    pub actions: Vec<i32>,
+    pub old_logp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub targets: Vec<f32>,
+    pub h0: Vec<f32>,
+}
+
+/// Reusable buffers of [`ppo_update`] for a fixed `[T, Bm]` shape.
+pub struct UpdateBufs {
+    cache: SeqCache,
+    logits: Vec<f32>,
+    values: Vec<f32>,
+    dlogits: Vec<f64>,
+    dvalues: Vec<f64>,
+    grads: Grads,
+    scratch: StepScratch,
+    lp_scratch: Vec<f32>,
+    h: Vec<f32>,
+    h_next: Vec<f32>,
+}
+
+impl UpdateBufs {
+    pub fn new(dims: ModelDims, t_len: usize, bm: usize) -> UpdateBufs {
+        let n = t_len * bm;
+        UpdateBufs {
+            cache: SeqCache::new(dims, t_len, bm),
+            logits: vec![0.0; n * dims.a],
+            values: vec![0.0; n],
+            dlogits: vec![0.0; n * dims.a],
+            dvalues: vec![0.0; n],
+            grads: Grads::zeros(&dims),
+            scratch: StepScratch::new(&dims),
+            lp_scratch: vec![0.0; dims.a],
+            h: vec![0.0; bm * dims.h],
+            h_next: vec![0.0; bm * dims.h],
+        }
+    }
+}
+
+/// Adam optimizer state (f32 moments, like the reference). The
+/// update math runs in f64 per element and rounds each stored value
+/// once — the contract the `adam` fixtures pin.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Adam {
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub t: i64,
+}
+
+impl Adam {
+    pub fn new(dims: &ModelDims) -> Adam {
+        Adam {
+            m: (0..NUM_PARAMS)
+                .map(|i| vec![0.0; dims.param_len(i)])
+                .collect(),
+            v: (0..NUM_PARAMS)
+                .map(|i| vec![0.0; dims.param_len(i)])
+                .collect(),
+            t: 0,
+        }
+    }
+
+    /// Global-norm-clipped Adam step (β₁ 0.9, β₂ 0.999, ε 1e-8).
+    /// Returns the pre-clip global gradient norm.
+    pub fn step(&mut self, params: &mut Params, grads: &Grads,
+                lr: f32, max_norm: f32) -> f64 {
+        self.t += 1;
+        let mut acc = 0.0f64;
+        for g in &grads.g {
+            for &x in g {
+                acc += x * x;
+            }
+        }
+        let gn = acc.sqrt();
+        let scale = (max_norm as f64 / (gn + 1e-8)).min(1.0);
+        let bc1 = 1.0 - 0.9f64.powf(self.t as f64);
+        let bc2 = 1.0 - 0.999f64.powf(self.t as f64);
+        let lr = lr as f64;
+        for idx in 0..NUM_PARAMS {
+            let p = &mut params.t[idx];
+            let g = &grads.g[idx];
+            let (m, v) = (&mut self.m[idx], &mut self.v[idx]);
+            for k in 0..p.len() {
+                let gk = g[k] * scale;
+                let mk = (0.9 * m[k] as f64 + 0.1 * gk) as f32;
+                let vk =
+                    (0.999 * v[k] as f64 + 0.001 * gk * gk) as f32;
+                m[k] = mk;
+                v[k] = vk;
+                let mh = mk as f64 / bc1;
+                let vh = vk as f64 / bc2;
+                p[k] = (p[k] as f64 - lr * mh / (vh.sqrt() + 1e-8))
+                    as f32;
+            }
+        }
+        gn
+    }
+}
+
+/// Loss stats plus the optimizer-side scalars of one update.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    pub loss: LossStats,
+    pub grad_norm: f32,
+}
+
+/// Forward the policy over the minibatch window, recording caches.
+fn forward_sequence(params: &Params, mb: &MiniBatch,
+                    bufs: &mut UpdateBufs) {
+    let dm = params.dims;
+    let (t_len, bm) = (mb.t_len, mb.bm);
+    let (ol, a, h) = (dm.obs_len(), dm.a, dm.h);
+    bufs.h.copy_from_slice(&mb.h0);
+    for t in 0..t_len {
+        let lo = t * bm;
+        let mut cs = bufs.cache.at(t);
+        network_step(
+            params,
+            &mb.obs[lo * ol..(lo + bm) * ol],
+            &mb.prev_a[lo..lo + bm],
+            &mb.prev_r[lo..lo + bm],
+            &mb.done[lo..lo + bm],
+            &bufs.h,
+            &mut bufs.logits[lo * a..(lo + bm) * a],
+            &mut bufs.values[lo..lo + bm],
+            &mut bufs.h_next[..bm * h],
+            &mut bufs.scratch,
+            Some(&mut cs),
+        );
+        std::mem::swap(&mut bufs.h, &mut bufs.h_next);
+    }
+}
+
+/// One PPO optimizer step over one minibatch: forward (with caches),
+/// clipped loss + gradient at the head, BPTT through the GRU window
+/// (t descending), global-norm clip, Adam. Deterministic and serial;
+/// bitwise-pinned end to end by the `ppo_update` oracle fixture.
+pub fn ppo_update(params: &mut Params, adam: &mut Adam,
+                  mb: &MiniBatch, hp: &[f32; 8],
+                  bufs: &mut UpdateBufs) -> UpdateStats {
+    let dm = params.dims;
+    let (t_len, bm) = (mb.t_len, mb.bm);
+    forward_sequence(params, mb, bufs);
+    let lb = LossBatch {
+        actions: &mb.actions,
+        old_logp: &mb.old_logp,
+        adv: &mb.adv,
+        targets: &mb.targets,
+    };
+    let loss = ppo_loss_grads(&bufs.logits, &bufs.values, &lb, hp,
+                              dm.a, &mut bufs.lp_scratch,
+                              &mut bufs.dlogits, &mut bufs.dvalues);
+    bufs.grads.clear();
+    let mut dh = vec![0.0f64; bm * dm.h];
+    let (ol, a) = (dm.obs_len(), dm.a);
+    for t in (0..t_len).rev() {
+        let lo = t * bm;
+        let cs = bufs.cache.at(t);
+        backward_step(
+            params,
+            &cs,
+            &mb.obs[lo * ol..(lo + bm) * ol],
+            &bufs.dlogits[lo * a..(lo + bm) * a],
+            &bufs.dvalues[lo..lo + bm],
+            &mut dh,
+            &mut bufs.grads,
+            &mut bufs.scratch,
+        );
+    }
+    let gn = adam.step(params, &bufs.grads, hp[0], hp[6]);
+    UpdateStats { loss, grad_norm: gn as f32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims { v: 5, e: 2, ae: 3, d: 6, h: 4, a: 6, extra: 0 }
+    }
+
+    fn tiny_mb(dm: &ModelDims, seed: u64) -> MiniBatch {
+        let (t_len, bm) = (3usize, 2usize);
+        let n = t_len * bm;
+        let mut rng = Rng::new(seed);
+        let obs: Vec<i32> = (0..n * dm.obs_len())
+            .map(|_| rng.below(15) as i32)
+            .collect();
+        let actions: Vec<i32> =
+            (0..n).map(|_| rng.below(dm.a) as i32).collect();
+        MiniBatch {
+            t_len,
+            bm,
+            obs,
+            prev_a: vec![0; n],
+            prev_r: vec![0.0; n],
+            done: (0..n).map(|i| (i % 4 == 0) as i32).collect(),
+            actions,
+            old_logp: (0..n)
+                .map(|_| -(rng.f64() as f32) - 0.2)
+                .collect(),
+            adv: (0..n)
+                .map(|_| rng.f64() as f32 - 0.5)
+                .collect(),
+            targets: (0..n)
+                .map(|_| rng.f64() as f32)
+                .collect(),
+            h0: vec![0.0; bm * dm.h],
+        }
+    }
+
+    #[test]
+    fn update_is_deterministic_and_moves_params() {
+        let dm = tiny_dims();
+        let mb = tiny_mb(&dm, 9);
+        let hp = [1e-2f32, 0.2, 0.99, 0.95, 0.01, 0.5, 0.5, 0.0];
+        let run = || {
+            let mut rng = Rng::new(1);
+            let mut p = Params::init(dm, &mut rng);
+            let before = p.t.clone();
+            let mut adam = Adam::new(&dm);
+            let mut bufs = UpdateBufs::new(dm, mb.t_len, mb.bm);
+            let s = ppo_update(&mut p, &mut adam, &mb, &hp, &mut bufs);
+            (p, adam, s, before)
+        };
+        let (p1, a1, s1, before) = run();
+        let (p2, a2, s2, _) = run();
+        assert_eq!(p1, p2, "update bitwise-deterministic");
+        assert_eq!(a1, a2);
+        assert_eq!(s1.loss.total.to_bits(), s2.loss.total.to_bits());
+        assert!(s1.loss.total.is_finite());
+        assert!(s1.grad_norm > 0.0);
+        assert_ne!(p1.t, before, "params moved");
+        assert_eq!(a1.t, 1);
+    }
+
+    #[test]
+    fn grad_norm_clip_bounds_the_step() {
+        let dm = tiny_dims();
+        let mb = tiny_mb(&dm, 11);
+        // huge lr + tiny max_norm: post-clip effective gradient norm
+        // is <= max_norm, so m-updates stay small
+        let hp = [1e-3f32, 0.2, 0.99, 0.95, 0.01, 0.5, 1e-6, 0.0];
+        let mut rng = Rng::new(2);
+        let mut p = Params::init(dm, &mut rng);
+        let mut adam = Adam::new(&dm);
+        let mut bufs = UpdateBufs::new(dm, mb.t_len, mb.bm);
+        let s = ppo_update(&mut p, &mut adam, &mb, &hp, &mut bufs);
+        assert!(s.grad_norm > 1e-6, "reported norm is pre-clip");
+        let m_norm: f64 = adam
+            .m
+            .iter()
+            .flat_map(|v| v.iter())
+            .map(|&x| x as f64 * x as f64)
+            .sum::<f64>()
+            .sqrt();
+        // m = 0.1 * clipped grad; clipped grad norm <= 1e-6
+        assert!(m_norm <= 0.1 * 1e-6 * 1.01, "m_norm {m_norm}");
+    }
+}

@@ -1,19 +1,31 @@
 //! Integration: the full training stack — benchmark generation → env pool
-//! reset → fused train_iter (collect + PPO update) → evaluation protocol.
+//! reset → train iteration (collect + PPO update) → evaluation protocol.
 //!
-//! Every test here executes compiled HLO through PJRT, so the whole
-//! file is `#[ignore]`d with the skip reason centralized in
+//! Two sections. The XLA tests execute compiled HLO through PJRT and
+//! are `#[ignore]`d with the skip reason centralized in
 //! `common::ARTIFACT_SKIP_REASON` (the attribute text must be a
-//! literal; keep them in sync). See tests/README.md for the suite map.
-//! Run with `cargo test --test integration_train -- --ignored` on a
-//! host with the artifacts and the runtime.
+//! literal; keep them in sync); run them with
+//! `cargo test --test integration_train -- --ignored` on a host with
+//! the artifacts and the runtime. The **native** tests at the bottom
+//! drive the pure-Rust `--backend native` training stack end to end —
+//! zero artifacts, so they run (not ignored) everywhere, including the
+//! offline CI image. See tests/README.md for the suite map.
 
 mod common;
 
+use std::sync::Arc;
+
 use common::runtime;
 use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
-use xmgrid::coordinator::{TrainConfig, Trainer};
-use xmgrid::runtime::Runtime;
+use xmgrid::coordinator::{load_checkpoint, CheckpointPlan,
+                          NativeEnvConfig, NativeShardedTrainer,
+                          NativeTrainerConfig, ShardConfig, TrainConfig,
+                          Trainer};
+use xmgrid::env::api::ObsMode;
+use xmgrid::env::state::TaskSource;
+use xmgrid::nn::ModelDims;
+use xmgrid::runtime::{Runtime, Tensor};
+use xmgrid::util::fault::FaultPlan;
 
 fn smallest_train_artifact(rt: &Runtime) -> String {
     rt.manifest
@@ -171,4 +183,202 @@ fn render_rgb_artifact_runs() {
     let img = out[0].as_f32();
     assert_eq!(img.len(), b * 40 * 40 * 3);
     assert!(img.iter().all(|&x| (0.0..=1.0).contains(&x)));
+}
+
+// --- native backend (zero artifacts — these are NOT ignored) -----------
+//
+// The same collect → GAE → PPO → shard-reduce loop as above, but through
+// the pure-Rust `--backend native` stack. Fault plans are passed
+// programmatically (not via the `XMG_FAULTS` env var — env vars are
+// process-global and cargo runs tests in parallel; CI's CLI e2e covers
+// the env-var spelling).
+
+fn native_bench(n: usize) -> Arc<Benchmark> {
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), n).unwrap();
+    Arc::new(Benchmark { name: "native-test".into(), rulesets })
+}
+
+fn native_cfg(b: usize, t: usize, threads: usize,
+              bench: &Arc<Benchmark>) -> NativeTrainerConfig {
+    let env = NativeEnvConfig::for_env("XLand-MiniGrid-R1-9x9", b, t,
+                                       bench)
+        .unwrap()
+        .with_threads(threads);
+    NativeTrainerConfig {
+        env,
+        obs: ObsMode::Symbolic,
+        model: Some(ModelDims { v: 5, e: 2, ae: 3, d: 8, h: 6, a: 6,
+                                extra: 0 }),
+        epochs: 1,
+        minibatches: 1,
+    }
+}
+
+fn launch_native(b: usize, t: usize, threads: usize, shards: usize,
+                 seed: u64, bench: &Arc<Benchmark>)
+                 -> NativeShardedTrainer {
+    let tasks: Arc<dyn TaskSource> = bench.clone();
+    let scfg = ShardConfig { shards, seed, ..Default::default() };
+    NativeShardedTrainer::launch(native_cfg(b, t, threads, bench),
+                                 tasks, scfg, TrainConfig::default())
+        .unwrap()
+}
+
+fn tensor_bits(ts: &[Tensor]) -> Vec<u32> {
+    ts.iter()
+        .flat_map(|t| t.as_f32().iter().map(|x| x.to_bits()))
+        .collect()
+}
+
+/// Metrics stay finite through a real training run and the optimizer
+/// actually descends: some later iteration beats the first one. The
+/// run is seeded, so this is a deterministic property of the stack,
+/// not a statistical one.
+#[test]
+fn native_training_loss_is_finite_and_decreases() {
+    let bench = native_bench(16);
+    let mut tr = launch_native(16, 8, 2, 1, 11, &bench);
+    let mut losses = Vec::new();
+    tr.train(24, |_, m| {
+        assert!(m.total_loss.is_finite(), "loss finite");
+        assert!(m.grad_norm.is_finite() && m.grad_norm >= 0.0);
+        assert!(m.adv_std.is_finite() && m.adv_std >= 0.0);
+        assert!(m.entropy > 0.0, "fresh policy keeps entropy");
+        assert!(m.entropy <= (6.0f32).ln() + 1e-3,
+                "entropy bounded by ln(num_actions)");
+        assert_eq!(m.env_steps, 16 * 8);
+        losses.push(m.total_loss);
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(tr.iters_done, 24);
+    let first = losses[0];
+    let best_later =
+        losses[1..].iter().copied().fold(f32::INFINITY, f32::min);
+    assert!(best_later < first,
+            "PPO must improve on the initial loss: first {first}, \
+             best later {best_later}");
+    assert!(losses.windows(2).any(|w| w[0] != w[1]),
+            "loss must actually move across iterations");
+}
+
+/// The full sharded run — rollout, PPO, cross-shard reduction, master
+/// fold — is bitwise identical for 1, 2, and 4 stepping threads.
+#[test]
+fn native_sharded_training_is_thread_invariant() {
+    let run = |threads: usize| {
+        let bench = native_bench(8);
+        let mut tr = launch_native(4, 3, threads, 2, 7, &bench);
+        let mut rows = Vec::new();
+        tr.train(3, |t, m| {
+            rows.push((t, m.total_loss.to_bits(),
+                       m.reward_sum.to_bits(), m.grad_norm.to_bits()));
+            Ok(())
+        })
+        .unwrap();
+        (tensor_bits(&tr.master), rows)
+    };
+    let one = run(1);
+    assert_eq!(one, run(2), "2 stepping threads change nothing");
+    assert_eq!(one, run(4), "4 stepping threads change nothing");
+}
+
+/// Kill-and-resume through the on-disk checkpoint: train A runs 4
+/// iterations straight; train B runs 2 (checkpoint lands at 2) and is
+/// dropped; a fresh engine loads the file, restores, and runs the
+/// remaining 2 — with a different thread count, which must be
+/// invisible. Metrics rows and final master must match A bit for bit.
+#[test]
+fn native_resume_from_checkpoint_file_is_bitwise() {
+    let dir = std::env::temp_dir().join(format!(
+        "xmg_native_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_path = dir.join("native.bin");
+    let ref_path = dir.join("native_ref.bin");
+    let plan = |path: &std::path::Path| {
+        Some(CheckpointPlan {
+            path: path.to_path_buf(),
+            every: 2,
+            faults: Arc::new(FaultPlan::none()),
+        })
+    };
+    let bench = native_bench(8);
+
+    // uninterrupted reference, same checkpoint cadence (the cadence is
+    // part of the schedule), pointed at a scratch path
+    let mut a = launch_native(4, 3, 1, 2, 5, &bench);
+    a.checkpoint = plan(&ref_path);
+    let mut rows_a = Vec::new();
+    a.train(4, |t, m| {
+        rows_a.push((t, m.total_loss.to_bits(),
+                     m.reward_sum.to_bits()));
+        Ok(())
+    })
+    .unwrap();
+
+    // interrupted: 2 iterations, checkpoint written at 2, engine dropped
+    let mut b = launch_native(4, 3, 1, 2, 5, &bench);
+    b.checkpoint = plan(&ckpt_path);
+    b.train(2, |_, _| Ok(())).unwrap();
+    drop(b);
+
+    // fresh engine — more stepping threads this time — restores the
+    // file and finishes the schedule
+    let ckpt = load_checkpoint(&ckpt_path).unwrap();
+    assert_eq!(ckpt.iters_done, 2);
+    let mut c = launch_native(4, 3, 2, 2, 5, &bench);
+    c.checkpoint = plan(&ckpt_path);
+    c.restore(&ckpt).unwrap();
+    let mut rows_c = Vec::new();
+    c.train(2, |t, m| {
+        rows_c.push((t, m.total_loss.to_bits(),
+                     m.reward_sum.to_bits()));
+        Ok(())
+    })
+    .unwrap();
+
+    assert_eq!(rows_c, rows_a[2..],
+               "resumed metrics equal the uninterrupted tail");
+    assert_eq!(tensor_bits(&a.master), tensor_bits(&c.master),
+               "resume must reproduce the uninterrupted run bitwise");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A torn checkpoint write (the injected crash-mid-write fault) never
+/// aborts training, leaves damage that `--resume` detects with a
+/// descriptive error, and the next clean cadence overwrites it with a
+/// loadable file.
+#[test]
+fn native_torn_checkpoint_is_detected_and_survivable() {
+    let dir = std::env::temp_dir().join(format!(
+        "xmg_native_torn_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("torn.bin");
+    let bench = native_bench(8);
+
+    let mut a = launch_native(4, 3, 1, 1, 9, &bench);
+    a.checkpoint = Some(CheckpointPlan {
+        path: path.clone(),
+        every: 2,
+        faults: Arc::new(
+            FaultPlan::parse("torn-checkpoint@iter=4").unwrap()),
+    });
+    a.train(4, |_, _| Ok(())).unwrap();
+
+    // the iter-4 write was torn: loading must fail descriptively
+    let msg = format!("{:#}", load_checkpoint(&path).unwrap_err());
+    assert!(msg.contains("torn") || msg.contains("truncated"), "{msg}");
+
+    // training survived the torn write; the next clean checkpoint
+    // replaces the damage with a loadable file
+    a.checkpoint = Some(CheckpointPlan {
+        path: path.clone(),
+        every: 1,
+        faults: Arc::new(FaultPlan::none()),
+    });
+    a.train(1, |_, _| Ok(())).unwrap();
+    let ckpt = load_checkpoint(&path).unwrap();
+    assert_eq!(ckpt.iters_done, 5);
+    let _ = std::fs::remove_dir_all(&dir);
 }

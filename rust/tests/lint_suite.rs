@@ -44,6 +44,8 @@ fn no_std_rng_fires_in_det_dirs_only() {
     );
     // the same source outside a determinism-critical dir is fine
     assert!(lint("render/ascii.rs", text).is_empty());
+    // the native nn stack is inside the determinism contract
+    assert!(!lint("nn/math.rs", text).is_empty());
 }
 
 #[test]
@@ -124,6 +126,9 @@ fn no_unwrap_in_workers_fires_in_worker_files_only() {
     );
     // env code is not a supervised worker path
     assert!(lint("env/vector.rs", text).is_empty());
+    // the native trainer is one (its iterations replay on recovery)
+    let v = lint("coordinator/native_trainer.rs", text);
+    assert_eq!(keys(&v).len(), 2);
 }
 
 #[test]
@@ -152,8 +157,10 @@ fn float_reduction_order_fires_on_f32_reductions() {
               \x20   acc\n\
               }\n";
     assert!(lint("coordinator/trainer.rs", ok).is_empty());
-    // and the rule is scoped to coordinator reduction paths
+    // and the rule is scoped to coordinator + nn reduction paths
     assert!(lint("env/observation.rs", text).is_empty());
+    let v = lint("nn/train.rs", text);
+    assert_eq!(keys(&v).len(), 2, "nn/ is in the reduction scope");
 }
 
 #[test]
