@@ -1,0 +1,158 @@
+//! Service-tier saturation bench: steps/sec and request latency of an
+//! in-process rollout server under a clients × batch grid.
+//!
+//! Each cell spins the server up on a loopback port, opens C
+//! concurrent client sessions of batch B, and has every client drive
+//! reset + T steps through the wire client ([`ServerClient`]),
+//! recording per-request latencies. Reported per cell:
+//!
+//! - aggregate environment steps/sec across all clients,
+//! - p50/p99 per-step request latency (ms).
+//!
+//! Knobs (CI keeps the grid small): `XMG_SERVE_CLIENTS` caps the
+//! client axis, `XMG_MAX_B` the batch axis, `XMG_BENCH_T` the steps
+//! per client. Rows land in the fig5-style JSON schema via
+//! `--json PATH` (label/envs/steps/sps + clients/p50_ms/p99_ms
+//! extras), consumed by scripts/compare_bench.py like every other
+//! bench.
+
+use std::sync::Arc;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::metrics::fmt_sps;
+use xmgrid::env::api::BatchEnvironment;
+use xmgrid::server::{request_shutdown, ServeConfig, Server, ServerAddr,
+                     ServerClient, SessionSpec};
+use xmgrid::util::args::Args;
+use xmgrid::util::bench::{env_usize, json_arg_path, JsonReport};
+use xmgrid::util::rng::Rng;
+
+const ENV: &str = "XLand-MiniGrid-R1-13x13";
+const BENCH: &str = "serve-bench";
+
+/// One client's run: reset, then `t` steps, returning per-request
+/// wall latencies in seconds. Wall-clock here is the measurement
+/// itself — benches sit outside the lint's kernel scope.
+fn drive_client(addr: &ServerAddr, b: usize, t: usize, seed: u64)
+                -> anyhow::Result<Vec<f64>> {
+    let spec = SessionSpec {
+        env: ENV.into(),
+        benchmark: BENCH.into(),
+        b,
+        t,
+        threads: 1,
+    };
+    let mut client = ServerClient::connect_session(addr, &spec, 30_000)?;
+    let mut rng = Rng::new(seed);
+    let mut obs = vec![0i32; client.obs_len()];
+    client.reset(&mut rng, &mut obs)?;
+    let n = client.action_spec().num_actions as i32;
+    let mut rewards = vec![0f32; b];
+    let mut dones = vec![false; b];
+    let mut trial_dones = vec![false; b];
+    let mut lat = Vec::with_capacity(t);
+    let mut actions = vec![0i32; b];
+    for step in 0..t {
+        for (i, a) in actions.iter_mut().enumerate() {
+            *a = ((step + i) as i32) % n;
+        }
+        let t0 = std::time::Instant::now();
+        client.step(&actions, &mut obs, &mut rewards, &mut dones,
+                    &mut trial_dones)?;
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(lat)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::new("serve_saturation");
+    let max_clients = env_usize("XMG_SERVE_CLIENTS", 4);
+    let max_b = env_usize("XMG_MAX_B", 256);
+    let t_steps = env_usize("XMG_BENCH_T", 32);
+
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), 64).unwrap();
+    let bench = Arc::new(Benchmark { name: BENCH.into(), rulesets });
+
+    println!("# serve saturation: clients x batch over the framed \
+              loopback protocol");
+    println!("# steps/sec aggregated across clients; latency is \
+              per-step request round-trip");
+
+    for &clients in &[1usize, 2, 4] {
+        if clients > max_clients {
+            continue;
+        }
+        for &b in &[64usize, 256] {
+            if b > max_b {
+                continue;
+            }
+            let server =
+                Server::bind_tcp("127.0.0.1:0", ServeConfig::default())
+                    .unwrap();
+            server.preload(BENCH, bench.clone());
+            let addr =
+                ServerAddr::parse(&server.local_addr().unwrap())
+                    .unwrap();
+            let handle = std::thread::spawn(move || server.serve());
+
+            let t0 = std::time::Instant::now();
+            let workers: Vec<_> = (0..clients)
+                .map(|c| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        drive_client(&addr, b, t_steps, c as u64)
+                    })
+                })
+                .collect();
+            let mut lat: Vec<f64> = Vec::new();
+            for w in workers {
+                lat.extend(w.join().unwrap().expect("client run"));
+            }
+            let elapsed = t0.elapsed().as_secs_f64();
+
+            request_shutdown(&addr, 10_000).unwrap();
+            handle.join().unwrap().expect("serve drained");
+
+            lat.sort_by(|a, x| a.total_cmp(x));
+            let p50 = percentile(&lat, 0.50) * 1e3;
+            let p99 = percentile(&lat, 0.99) * 1e3;
+            let env_steps = (clients * b * t_steps) as f64;
+            let sps = env_steps / elapsed.max(1e-9);
+            println!(
+                "clients={clients} b={b:<4} steps/s={sps:<12.0} \
+                 ({}) p50={p50:.3}ms p99={p99:.3}ms",
+                fmt_sps(sps)
+            );
+            report.add_sps_extra(
+                &format!("serve-c{clients}-b{b}"),
+                clients * b,
+                t_steps,
+                sps,
+                &format!(
+                    "\"clients\":{clients},\"p50_ms\":{p50:.6},\
+                     \"p99_ms\":{p99:.6}"
+                ),
+            );
+        }
+    }
+    report.note(
+        "in-process server on loopback TCP; each client session owns a \
+         B-env pool server-side and steps it T times through the \
+         framed protocol; sps counts env steps across all clients, \
+         latency is the per-step request round-trip",
+    );
+    if let Some(path) = json_arg_path(&args, "serve_saturation") {
+        report.write(&path).expect("writing bench json");
+        println!("wrote {path:?}");
+    }
+}

@@ -317,6 +317,50 @@ impl RolloutEngine {
         })
     }
 
+    /// Spin up `cfg.shards` replicas over *caller-supplied*
+    /// [`BatchEnvironment`]s — the `--backend server:ADDR` hook, and
+    /// the generic seam for any future remote/exotic engine. `make`
+    /// runs on each shard's own thread with the shard's canonical
+    /// `shard_rng(seed, i)` stream; it must return an already-reset
+    /// environment (consuming rng state exactly as the native reset
+    /// would, so the downstream action draws stay bitwise-aligned
+    /// with the in-process backends). Chunks then step through
+    /// `rollout_batch` like any wrapped native replica: same shard
+    /// topology, same overlap pipeline, same ChunkStats.
+    pub fn launch_batch_envs<F>(make: F, b: usize, t: usize,
+                                family: EnvFamily, cfg: ShardConfig)
+                                -> Result<RolloutEngine>
+    where
+        F: Fn(usize, &mut Rng) -> Result<Box<dyn BatchEnvironment>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        let seed = cfg.seed;
+        let faults = Arc::new(FaultPlan::from_env()?);
+        let pool = ShardPool::spawn(cfg.shards, move |i| {
+            let faults = faults.clone();
+            let mut rng = shard_rng(seed, i);
+            let env = make(i, &mut rng)
+                .with_context(|| format!("building shard {i} env"))?;
+            let bufs = RolloutBufs::for_env(env.as_ref());
+            Ok(NativeReplica {
+                shard: i,
+                stepper: NativeStepper::Wrapped { env, bufs },
+                rng,
+                b,
+                t,
+                faults,
+            })
+        })?;
+        Ok(RolloutEngine {
+            pool: EnginePool::Native(pool),
+            family,
+            t,
+            cfg,
+        })
+    }
+
     pub fn shards(&self) -> usize {
         match &self.pool {
             EnginePool::Xla(p) => p.shards(),

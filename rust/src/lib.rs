@@ -28,6 +28,13 @@
 //!   contract pinned by committed Python-oracle fixtures. Lets
 //!   `xmgrid train --backend native` run RL² end to end with zero
 //!   compiled artifacts.
+//! - [`server`] — L4 service tier: rollout-as-a-service. A
+//!   multi-tenant environment server (`xmgrid serve`) owning
+//!   per-session `NativePool` replicas behind a framed, checksummed
+//!   wire protocol, with per-session fault isolation, per-request
+//!   deadlines, bounded queues with explicit backpressure, and
+//!   graceful drain — plus a `BatchEnvironment` client so
+//!   `--backend server:ADDR` is bitwise-identical to in-process.
 //! - [`render`] — ASCII renderer for interactive inspection.
 //! - [`lint`] — the `xmgrid lint` static-analysis pass: token-level
 //!   rules that machine-check the determinism and panic-safety
@@ -44,4 +51,5 @@ pub mod lint;
 pub mod nn;
 pub mod render;
 pub mod runtime;
+pub mod server;
 pub mod util;

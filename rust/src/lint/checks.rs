@@ -22,7 +22,10 @@ const WALLCLOCK_ALLOWED: [&str; 3] =
     ["util/bench.rs", "coordinator/metrics.rs", "main.rs"];
 
 /// Supervised worker / channel paths: a panic here defeats the
-/// catch_unwind + respawn recovery machinery.
+/// catch_unwind + respawn recovery machinery. The whole service tier
+/// (`server/`, see [`in_worker_path`]) is scoped in too — a session
+/// thread's panic must surface as a structured Error frame, never an
+/// unwrap-abort that skips the teardown protocol.
 const WORKER_FILES: [&str; 5] = [
     "coordinator/shard.rs",
     "coordinator/workers.rs",
@@ -30,6 +33,13 @@ const WORKER_FILES: [&str; 5] = [
     "coordinator/trainer.rs",
     "coordinator/native_trainer.rs",
 ];
+
+/// Is `rel` in the no-unwrap supervised scope? The coordinator list is
+/// exact files; the serve tier is a whole-directory prefix so new
+/// server modules are covered by default.
+fn in_worker_path(rel: &str) -> bool {
+    WORKER_FILES.contains(&rel) || rel.starts_with("server/")
+}
 
 /// Identifiers that mean "randomness not derived from the config
 /// seed": the rand-crate entry points and OS entropy.
@@ -165,9 +175,7 @@ pub fn check(rel: &str, scan: &Scan, cfg: &LintConfig) -> Vec<Violation> {
             }
         }
 
-        if cfg.on("no-unwrap-in-workers")
-            && WORKER_FILES.contains(&rel)
-        {
+        if cfg.on("no-unwrap-in-workers") && in_worker_path(rel) {
             for (k, t) in toks.iter().enumerate() {
                 if !live(k) || t.kind != Kind::Ident {
                     continue;

@@ -7,8 +7,12 @@
 //!   play            random-policy episode with ASCII render
 //!   gen-benchmark   generate + store a benchmark (§3)
 //!   rollout         sharded random-policy throughput run
-//!                   (--backend native|xla|auto; --shards N
-//!                   --overlap on|off: double-buffered engine)
+//!                   (--backend native|xla|auto|server:ADDR;
+//!                   --shards N --overlap on|off: double-buffered
+//!                   engine)
+//!   serve           rollout-as-a-service environment server
+//!                   (--socket PATH | --port P; fault-isolated
+//!                   sessions, deadlines, backpressure, drain)
 //!   train           RL² PPO training (Fig. 6/7 harness;
 //!                   --backend native|xla|auto — native is the pure-Rust
 //!                   GRU+PPO stack, zero artifacts; --shards N runs the
@@ -45,11 +49,14 @@ use xmgrid::lint;
 use xmgrid::nn::{ModelDims, Params};
 use xmgrid::util::fault::{FaultPlan, RetryPolicy, FAULTS_ENV};
 use xmgrid::util::bench::{json_arg_path, JsonReport};
-use xmgrid::env::api::{EnvParams, ObsMode};
+use xmgrid::env::api::{BatchEnvironment, EnvParams, ObsMode};
 use xmgrid::env::registry;
 use xmgrid::env::state::{reset, step, EnvOptions};
 use xmgrid::render::render_grid;
 use xmgrid::runtime::{Manifest, Runtime};
+use xmgrid::server::{install_signal_drain, request_shutdown,
+                     Connection, ServeConfig, Server, ServerAddr,
+                     ServerClient, SessionSpec};
 use xmgrid::util::args::Args;
 use xmgrid::util::rng::Rng;
 
@@ -114,6 +121,7 @@ fn main() -> Result<()> {
         "gen-benchmark" => cmd_gen_benchmark(&args),
         "split" => cmd_split(&args),
         "rollout" => cmd_rollout(&args),
+        "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "verify" => cmd_verify(&args),
@@ -144,7 +152,14 @@ commands:
         [--depth LO..HI]              through the benchmark store
   rollout [--backend B] [--shards N]  sharded throughput run
           [--threads T] [--obs M]     (native: chunked stepping pool,
-                                      obs wrapper stacks incl. rgb)
+                                      obs wrapper stacks incl. rgb;
+                                      server:ADDR steps a remote
+                                      serve instance, bitwise equal)
+  serve --socket PATH | --port P      rollout-as-a-service environment
+        [--deadline-ms D] [--idle-ms  server: fault-isolated sessions,
+         I] [--queue-depth Q]         per-request deadlines, bounded
+        [--shutdown]                  queues with backpressure replies,
+                                      graceful drain on SIGTERM
   train [--backend B] [--shards N]    RL² PPO training (native: pure
         [--obs M] [--overlap M]       Rust GRU+PPO, zero artifacts;
                                       xla: fused train_iter via PJRT)
@@ -169,8 +184,9 @@ fault tolerance:
   respawned and its chunk replayed deterministically (--max-retries,
   --retry-backoff-ms on rollout). train --checkpoint-every N writes
   atomic crash-safe checkpoints; train --resume continues bit for bit.
-  XMG_FAULTS (e.g. 'panic@worker=2,step=17') injects deterministic
-  faults for testing — see docs/ARCHITECTURE.md.";
+  XMG_FAULTS (e.g. 'panic@worker=2,step=17', or
+  'drop-conn@session=0,req=3' against a serve instance) injects
+  deterministic faults for testing — see docs/ARCHITECTURE.md.";
 
 /// Per-command option documentation for `xmgrid help <cmd>`.
 fn command_help(cmd: &str) -> Option<&'static str> {
@@ -244,7 +260,8 @@ invocation produces byte-identical files on every machine, for every
   --out PREFIX       output name prefix (default: the benchmark name)
   --threads T|auto   first-use generation threads (default: 1)",
         "rollout" => "\
-usage: xmgrid rollout [--backend auto|native|xla] [--batch B]
+usage: xmgrid rollout [--backend auto|native|xla|server:ADDR]
+                      [--batch B]
                       [--chunks N] [--shards K] [--threads T|auto]
                       [--overlap on|off] [--env NAME] [--steps T]
                       [--obs symbolic|dir|rules-goals|rgb]
@@ -258,6 +275,12 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
 
   --backend B        native: vectorized SoA kernels, zero artifacts.
                      xla: compiled HLO artifacts through PJRT.
+                     server:ADDR: step a running `xmgrid serve`
+                     instance over its framed protocol — one session
+                     per shard, RNG state shipped in the reset RPC,
+                     so chunk/total lines are bitwise-identical to
+                     --backend native (ADDR = HOST:PORT or a unix
+                     socket path; --deadline-ms caps each RPC).
                      auto (default): xla if a manifest with rollout
                      artifacts exists, else native.
   --batch B          env batch: artifact to pick (xla) or VecEnv size
@@ -299,7 +322,57 @@ pure-Rust SoA VecEnv batch (`native` — no artifacts needed).
                      respawned and its chunk deterministically replayed
                      before the run fails cleanly (default: 2)
   --retry-backoff-ms M  linear backoff between retries: attempt k sleeps
-                     k*M ms (default: 50)",
+                     k*M ms, capped at 60s (default: 50)",
+        "serve" => "\
+usage: xmgrid serve --socket PATH | --port P [--host H]
+                    [--deadline-ms D] [--idle-ms I] [--queue-depth Q]
+                    [--shutdown]
+
+Run the rollout-as-a-service environment server: a persistent process
+owning vectorized env pools and serving reset/step batches to any
+number of concurrent clients over a length-prefixed framed protocol
+(magic + version + checksum, the checkpoint codec's discipline).
+`xmgrid rollout --backend server:ADDR` against it is bitwise-identical
+to an in-process run: the client ships its RNG state in the reset RPC
+and draws actions locally, so the server adds no RNG of its own.
+
+Failure model (pinned by tests/server_faults.rs):
+  isolation     every session runs on its own reader+worker thread
+                pair with a catch_unwind boundary: a panicking or
+                vanishing session is torn down alone, with an
+                `internal` error frame; other sessions are unaffected
+                bit for bit.
+  deadlines     every socket read/write carries --deadline-ms; a
+                stalled peer gets a structured `timeout` error frame,
+                never a hung thread. A session idle past --idle-ms is
+                reaped the same way.
+  backpressure  each session's request queue is bounded at
+                --queue-depth; a full queue answers `backpressure`
+                immediately instead of buffering unboundedly.
+  malformed     a corrupt frame (bad magic/version/kind, oversized
+                length, checksum mismatch, truncation) is rejected
+                with an error naming the byte offset — the server
+                never panics, over-allocates, or desyncs on hostile
+                input.
+  drain         SIGTERM/SIGINT (or a `shutdown` frame via
+                `xmgrid serve ... --shutdown`) stops accepting new
+                sessions, answers new requests with `draining`,
+                completes every in-flight request, then exits 0.
+
+  --socket PATH     bind a unix-domain socket at PATH (removed on
+                    drain; stale files are replaced on bind)
+  --port P          bind TCP on --host (default 127.0.0.1); port 0
+                    picks a free port and prints it
+  --host H          TCP bind host (default: 127.0.0.1)
+  --deadline-ms D   per-IO deadline, ms (default: 5000)
+  --idle-ms I       idle-session reap timeout, ms (default: 30000)
+  --queue-depth Q   bounded per-session queue depth (default: 8)
+  --shutdown        connect to the given --socket/--port and request
+                    a graceful drain instead of serving
+
+XMG_FAULTS accepts server sites for fault-injection testing:
+drop-conn@session=S,req=R  stall@session=S,ms=M  torn-frame@session=S
+(see `xmgrid help lint` and docs/ARCHITECTURE.md).",
         "train" => "\
 usage: xmgrid train [--backend auto|native|xla] [--benchmark NAME]
                     [--iters N] [--batch B] [--steps T] [--env NAME]
@@ -616,7 +689,13 @@ fn cmd_gen_benchmark(args: &Args) -> Result<()> {
 
 fn cmd_rollout(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let backend = BackendKind::from_flag(&args.str_or("backend", "auto"))?;
+    let backend_flag = args.str_or("backend", "auto");
+    // `server:ADDR` is handled before BackendKind: the remote backend
+    // needs no local benchmark or artifacts — the server owns both.
+    if let Some(addr) = backend_flag.strip_prefix("server:") {
+        return cmd_rollout_server(args, addr);
+    }
+    let backend = BackendKind::from_flag(&backend_flag)?;
     let batch = args.usize_or("batch", 1024);
     let chunks = args.usize_or("chunks", 4);
     let threads = parse_threads(args)?;
@@ -689,7 +768,15 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         );
         RolloutEngine::launch_native_obs(ncfg, bench, cfg, obs_mode)?
     };
+    report_rollout(engine, chunks, &cfg)
+}
 
+/// The chunk/window/total reporting tail shared by every rollout
+/// backend (native, xla, server) — one print path, so backend
+/// comparisons diff bitwise on the deterministic fields after
+/// stripping the timing columns.
+fn report_rollout(engine: RolloutEngine, chunks: usize,
+                  cfg: &ShardConfig) -> Result<()> {
     let totals = if cfg.shards == 1 {
         let mut meter = ThroughputMeter::new();
         engine.collect(chunks, |c| {
@@ -718,6 +805,133 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         fmt_sps(totals.sps())
     );
     Ok(())
+}
+
+/// `rollout --backend server:ADDR` — every shard opens its own
+/// session against a running `xmgrid serve` instance and steps it
+/// through the [`BatchEnvironment`] wire client. RNG state ships in
+/// the reset RPC and action draws stay client-side, so the chunk and
+/// total lines are bitwise-identical to `--backend native` with the
+/// same seed/batch/steps.
+fn cmd_rollout_server(args: &Args, addr: &str) -> Result<()> {
+    let addr = ServerAddr::parse(addr)?;
+    let batch = args.usize_or("batch", 1024);
+    let chunks = args.usize_or("chunks", 4);
+    let t = args.usize_or("steps", 64);
+    let threads = parse_threads(args)?;
+    let obs_mode = ObsMode::from_flag(&args.str_or("obs", "symbolic"))?;
+    let cfg = shard_config(args)?;
+    let deadline_ms = args.u64_or("deadline-ms", 5_000);
+    let spec = SessionSpec {
+        env: args.str_or("env", "XLand-MiniGrid-R1-13x13"),
+        benchmark: args.str_or("benchmark", "trivial-1k"),
+        b: batch,
+        t,
+        threads,
+    };
+    // Probe on the main thread: an unreachable server or unknown env
+    // is a clean CLI error here, not a shard-spawn failure; the hello
+    // reply carries the grid family for the engine header.
+    let params = {
+        let mut conn = Connection::connect(&addr, deadline_ms)
+            .with_context(|| format!("probing rollout server {addr}"))?;
+        let params = conn.hello(&spec)
+            .with_context(|| format!("opening probe session on {addr}"))?;
+        conn.bye();
+        params
+    };
+    let family = EnvFamily {
+        h: params.h,
+        w: params.w,
+        mr: params.max_rules,
+        mi: params.max_init,
+        b: batch,
+    };
+    println!(
+        "backend server ({addr}): {} (B={batch} T={t} grid {}x{}) \
+         shards={} threads={} overlap={} obs={obs_mode} \
+         deadline={deadline_ms}ms",
+        spec.env, params.h, params.w, cfg.shards, threads, cfg.overlap
+    );
+    let engine = RolloutEngine::launch_batch_envs(
+        move |shard, rng| {
+            let mut client =
+                ServerClient::connect_session(&addr, &spec, deadline_ms)
+                    .with_context(|| {
+                        format!("opening session for shard {shard}")
+                    })?;
+            // Mirror the native launch order: reset the raw pool
+            // surface first (consuming the shard rng exactly as the
+            // in-process reset does), then stack the obs wrappers.
+            let mut scratch = vec![0i32; client.obs_len()];
+            client.reset(rng, &mut scratch)?;
+            Ok(obs_mode.wrap(client))
+        },
+        batch, t, family, cfg,
+    )?;
+    report_rollout(engine, chunks, &cfg)
+}
+
+/// `xmgrid serve` — bind, install the SIGTERM/SIGINT drain handler,
+/// and serve sessions until drained. `--shutdown` flips the command
+/// into a client that requests a graceful drain of a running server.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let deadline_ms = args.u64_or("deadline-ms", 5_000);
+    if args.flag("shutdown") {
+        let addr = serve_target(args)?;
+        request_shutdown(&addr, deadline_ms)
+            .with_context(|| format!("requesting drain of {addr}"))?;
+        println!("drain requested on {addr}");
+        return Ok(());
+    }
+    let cfg = ServeConfig {
+        io_deadline_ms: deadline_ms,
+        idle_timeout_ms: args.u64_or("idle-ms", 30_000),
+        queue_depth: args.usize_or("queue-depth", 8),
+        faults: Arc::new(
+            FaultPlan::from_env()
+                .with_context(|| format!("invalid {FAULTS_ENV}"))?,
+        ),
+    };
+    if cfg.queue_depth == 0 {
+        bail!("--queue-depth must be at least 1");
+    }
+    let server = match (args.get("socket"), args.get("port")) {
+        (Some(path), None) => Server::bind_unix(path, cfg)?,
+        (None, Some(port)) => {
+            let host = args.str_or("host", "127.0.0.1");
+            Server::bind_tcp(&format!("{host}:{port}"), cfg)?
+        }
+        (Some(_), Some(_)) => {
+            bail!("serve takes --socket PATH or --port P, not both")
+        }
+        (None, None) => {
+            bail!("serve needs --socket PATH or --port P \
+                   (see `xmgrid help serve`)")
+        }
+    };
+    install_signal_drain();
+    println!("serving on {}", server.local_addr()?);
+    let stats = server.serve()?;
+    println!(
+        "drained: sessions={} requests={} uptime={:.2}s",
+        stats.sessions, stats.requests, stats.uptime_secs
+    );
+    Ok(())
+}
+
+/// The address a `serve --shutdown` invocation should drain, built
+/// from the same `--socket`/`--port`/`--host` flags a serving
+/// invocation uses.
+fn serve_target(args: &Args) -> Result<ServerAddr> {
+    if let Some(path) = args.get("socket") {
+        return ServerAddr::parse(&format!("unix:{path}"));
+    }
+    if let Some(port) = args.get("port") {
+        let host = args.str_or("host", "127.0.0.1");
+        return ServerAddr::parse(&format!("tcp:{host}:{port}"));
+    }
+    bail!("serve --shutdown needs the target's --socket or --port")
 }
 
 fn pick_train_artifact(manifest: &Manifest, batch: usize)
@@ -1412,10 +1626,12 @@ rules:
                           BTreeMap or collect+sort instead
   no-wallclock-in-kernels Instant::now / SystemTime confined to
                           util/bench.rs, coordinator/metrics.rs
-                          (WallTimer) and main.rs
+                          (WallTimer) and main.rs — the server tier
+                          (server/) times itself through WallTimer
   no-unwrap-in-workers    no .unwrap()/.expect() in the supervised
                           worker / channel paths (shard.rs, workers.rs,
-                          rollout.rs, trainer.rs)
+                          rollout.rs, trainer.rs) or anywhere in the
+                          service tier (server/)
   float-reduction-order   no f32 accumulation or unordered float folds
                           in coordinator reduction paths
   must-use-result         no discarded Result from fallible engine ops

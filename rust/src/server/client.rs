@@ -1,0 +1,443 @@
+//! Client side of the rollout service: a [`Connection`] speaking the
+//! framed protocol with per-request deadlines, and [`ServerClient`] —
+//! a [`BatchEnvironment`] whose reset/step run on a remote server.
+//!
+//! Bitwise parity with the in-process native backend is carried by the
+//! RNG state: `reset` ships the caller's `Rng` state in the request,
+//! the server runs the *same* trait-surface reset the in-process pool
+//! would, and the reply carries the post-reset state back, which the
+//! client adopts. Action draws then happen client-side (in
+//! `rollout_batch`), in exactly the order the fused native rollout
+//! draws them — so `--backend server:ADDR` reproduces `--backend
+//! native` totals and observations bit for bit.
+
+use std::cell::RefCell;
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use crate::env::api::{ActionSpec, BatchEnvironment, EnvParams,
+                      ObsSpec};
+use anyhow::{bail, Context, Result};
+use crate::util::rng::Rng;
+
+use super::protocol::{
+    code, decode_error_body, read_frame, write_frame, BodyReader,
+    BodyWriter, Frame, Kind,
+};
+use super::Stream;
+
+/// Where a server lives. `server:` backend strings parse as: a path
+/// (contains `/` or ends in `.sock`) is a unix socket; anything else
+/// is a TCP `host:port`. Explicit `unix:PATH` / `tcp:HOST:PORT`
+/// prefixes are also accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServerAddr {
+    Tcp(String),
+    Unix(String),
+}
+
+impl ServerAddr {
+    pub fn parse(s: &str) -> Result<ServerAddr> {
+        if s.is_empty() {
+            bail!(
+                "empty server address — use server:HOST:PORT or \
+                 server:/path/to.sock"
+            );
+        }
+        if let Some(p) = s.strip_prefix("unix:") {
+            return Ok(ServerAddr::Unix(p.to_string()));
+        }
+        if let Some(hp) = s.strip_prefix("tcp:") {
+            return Ok(ServerAddr::Tcp(hp.to_string()));
+        }
+        if s.contains('/') || s.ends_with(".sock") {
+            return Ok(ServerAddr::Unix(s.to_string()));
+        }
+        if !s.contains(':') {
+            bail!(
+                "server address `{s}` is neither HOST:PORT nor a \
+                 socket path (paths contain `/`)"
+            );
+        }
+        Ok(ServerAddr::Tcp(s.to_string()))
+    }
+}
+
+impl std::fmt::Display for ServerAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        match self {
+            ServerAddr::Tcp(a) => write!(f, "tcp:{a}"),
+            ServerAddr::Unix(p) => write!(f, "unix:{p}"),
+        }
+    }
+}
+
+/// The environment a `Hello` asks the server to build.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub env: String,
+    pub benchmark: String,
+    pub b: usize,
+    pub t: usize,
+    /// Server-side stepping threads for this session's pool.
+    pub threads: usize,
+}
+
+/// One framed connection with request/reply bookkeeping. Every read
+/// and write carries `deadline_ms`; a late reply is a structured
+/// `deadline` error naming the request, never a hung caller.
+pub struct Connection {
+    stream: Stream,
+    session: u64,
+    next_req: u64,
+    deadline_ms: u64,
+}
+
+impl Connection {
+    pub fn connect(addr: &ServerAddr, deadline_ms: u64)
+                   -> Result<Connection> {
+        let stream = match addr {
+            ServerAddr::Tcp(a) => Stream::Tcp(
+                TcpStream::connect(a)
+                    .with_context(|| format!("connecting {addr}"))?,
+            ),
+            #[cfg(unix)]
+            ServerAddr::Unix(p) => Stream::Unix(
+                UnixStream::connect(p)
+                    .with_context(|| format!("connecting {addr}"))?,
+            ),
+            #[cfg(not(unix))]
+            ServerAddr::Unix(_) => bail!(
+                "unix sockets are unavailable on this platform — use \
+                 server:HOST:PORT"
+            ),
+        };
+        let d = Duration::from_millis(deadline_ms.max(1));
+        stream.set_read_timeout(Some(d))?;
+        stream.set_write_timeout(Some(d))?;
+        Ok(Connection { stream, session: 0, next_req: 0, deadline_ms })
+    }
+
+    /// The server-assigned session id (0 until `hello`).
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Fire a request frame without awaiting the reply — the raw
+    /// surface backpressure tests use to overfill a session queue.
+    /// Returns the request id.
+    pub fn send_raw(&mut self, kind: Kind, body: Vec<u8>)
+                    -> Result<u64> {
+        let req = self.next_req;
+        self.next_req += 1;
+        let f = Frame::new(kind, self.session, req, body);
+        write_frame(&mut self.stream, &f)
+            .with_context(|| format!("sending req {req}"))?;
+        Ok(req)
+    }
+
+    /// Await one frame (any kind), honoring the connection deadline.
+    pub fn recv_raw(&mut self) -> Result<Frame> {
+        read_frame(&mut self.stream).map_err(|e| {
+            let msg = format!("{e:#}");
+            if msg.contains(super::protocol::ERR_DEADLINE) {
+                e.context(format!(
+                    "deadline: no reply within {} ms",
+                    self.deadline_ms
+                ))
+            } else {
+                e
+            }
+        })
+    }
+
+    /// Send `kind` and await its reply. `Error` frames become
+    /// structured errors naming the server's error code; an unexpected
+    /// reply kind is a protocol error.
+    pub fn request(&mut self, kind: Kind, body: Vec<u8>, expect: Kind)
+                   -> Result<Vec<u8>> {
+        let req = self.send_raw(kind, body)?;
+        let reply = self
+            .recv_raw()
+            .with_context(|| format!("awaiting reply to req {req}"))?;
+        if reply.kind == Kind::Error {
+            let (c, msg) = decode_error_body(&reply.body);
+            bail!("server error ({}): {msg}", code::name(c));
+        }
+        if reply.kind != expect {
+            bail!(
+                "protocol error: expected {expect:?} for req {req}, \
+                 got {:?}",
+                reply.kind
+            );
+        }
+        Ok(reply.body)
+    }
+
+    /// Open a session: the server builds this session's private pool
+    /// and replies with the family geometry.
+    pub fn hello(&mut self, spec: &SessionSpec) -> Result<EnvParams> {
+        let mut w = BodyWriter::new();
+        w.str(&spec.env)
+            .str(&spec.benchmark)
+            .u32(spec.b as u32)
+            .u32(spec.t as u32)
+            .u32(spec.threads as u32);
+        let req = self.send_raw(Kind::Hello, w.finish())?;
+        let reply = self
+            .recv_raw()
+            .with_context(|| format!("awaiting HelloOk (req {req})"))?;
+        if reply.kind == Kind::Error {
+            let (c, msg) = decode_error_body(&reply.body);
+            bail!("server error ({}): {msg}", code::name(c));
+        }
+        if reply.kind != Kind::HelloOk {
+            bail!("protocol error: expected HelloOk, got {:?}",
+                  reply.kind);
+        }
+        self.session = reply.session;
+        let mut r = BodyReader::new(&reply.body);
+        let h = r.u32("h")? as usize;
+        let w_ = r.u32("w")? as usize;
+        let mr = r.u32("max_rules")? as usize;
+        let mi = r.u32("max_init")? as usize;
+        Ok(EnvParams::new(h, w_, mr, mi))
+    }
+
+    /// Polite close: the server tears the session down immediately
+    /// instead of waiting for the idle deadline.
+    pub fn bye(mut self) {
+        if self.send_raw(Kind::Bye, Vec::new()).is_ok() {
+            let _ = self.recv_raw();
+        }
+    }
+}
+
+/// Ask the server at `addr` to drain gracefully (the wire-level
+/// equivalent of SIGTERM): in-flight work completes, new requests are
+/// refused, `serve` returns.
+pub fn request_shutdown(addr: &ServerAddr, deadline_ms: u64)
+                        -> Result<()> {
+    let mut conn = Connection::connect(addr, deadline_ms)?;
+    let req = conn.send_raw(Kind::Shutdown, Vec::new())?;
+    let reply = conn
+        .recv_raw()
+        .with_context(|| format!("awaiting ShutdownOk (req {req})"))?;
+    if reply.kind != Kind::ShutdownOk {
+        bail!("protocol error: expected ShutdownOk, got {:?}",
+              reply.kind);
+    }
+    Ok(())
+}
+
+/// A remote session as a [`BatchEnvironment`]. Wrap it in the usual
+/// observation wrappers (`ObsMode::wrap`) and drive it with
+/// `rollout_batch` — the obs pipeline runs client-side, only raw
+/// reset/step cross the wire.
+pub struct ServerClient {
+    conn: RefCell<Connection>,
+    params: EnvParams,
+    b: usize,
+    /// First error from a `&self` RPC (`agent_dirs_into` /
+    /// `task_rows_into` cannot return one); the next fallible call
+    /// surfaces it instead of silently continuing on a desynced
+    /// connection.
+    deferred_err: RefCell<Option<String>>,
+}
+
+impl ServerClient {
+    /// Connect and open a session in one move.
+    pub fn connect_session(addr: &ServerAddr, spec: &SessionSpec,
+                           deadline_ms: u64) -> Result<ServerClient> {
+        let mut conn = Connection::connect(addr, deadline_ms)?;
+        let params = conn.hello(spec)?;
+        Ok(ServerClient {
+            conn: RefCell::new(conn),
+            params,
+            b: spec.b,
+            deferred_err: RefCell::new(None),
+        })
+    }
+
+    /// The server-assigned session id.
+    pub fn session(&self) -> u64 {
+        self.conn.borrow().session()
+    }
+
+    fn take_deferred(&self) -> Result<()> {
+        if let Some(msg) = self.deferred_err.borrow_mut().take() {
+            bail!("deferred client error: {msg}");
+        }
+        Ok(())
+    }
+
+    fn rpc(&self, kind: Kind, body: Vec<u8>, expect: Kind)
+           -> Result<Vec<u8>> {
+        self.conn.borrow_mut().request(kind, body, expect)
+    }
+}
+
+impl BatchEnvironment for ServerClient {
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn obs_spec(&self) -> ObsSpec {
+        self.params.obs_spec()
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        self.params.action_spec()
+    }
+
+    fn max_rules(&self) -> usize {
+        self.params.max_rules
+    }
+
+    fn reset(&mut self, rng: &mut Rng, obs_out: &mut [i32])
+             -> Result<()> {
+        self.take_deferred()?;
+        let mut w = BodyWriter::new();
+        for s in rng.state() {
+            w.u64(s);
+        }
+        let body = self.rpc(Kind::Reset, w.finish(), Kind::ResetOk)?;
+        let mut r = BodyReader::new(&body);
+        let state = [
+            r.u64("rng[0]")?,
+            r.u64("rng[1]")?,
+            r.u64("rng[2]")?,
+            r.u64("rng[3]")?,
+        ];
+        let obs = r.i32s("obs")?;
+        if obs.len() != obs_out.len() {
+            bail!(
+                "reset reply carries {} obs values, caller buffer \
+                 holds {}",
+                obs.len(),
+                obs_out.len()
+            );
+        }
+        obs_out.copy_from_slice(&obs);
+        *rng = Rng::from_state(state);
+        Ok(())
+    }
+
+    fn step(&mut self, actions: &[i32], obs_out: &mut [i32],
+            rewards: &mut [f32], dones: &mut [bool],
+            trial_dones: &mut [bool]) -> Result<()> {
+        self.take_deferred()?;
+        let mut w = BodyWriter::new();
+        w.i32s(actions);
+        let body = self.rpc(Kind::Step, w.finish(), Kind::StepOk)?;
+        let mut r = BodyReader::new(&body);
+        let obs = r.i32s("obs")?;
+        let rew = r.f32s("rewards")?;
+        let dn = r.bools("dones")?;
+        let td = r.bools("trial_dones")?;
+        if obs.len() != obs_out.len()
+            || rew.len() != rewards.len()
+            || dn.len() != dones.len()
+            || td.len() != trial_dones.len()
+        {
+            bail!(
+                "step reply sizes (obs {}, rewards {}, dones {}, \
+                 trial_dones {}) do not match caller buffers",
+                obs.len(),
+                rew.len(),
+                dn.len(),
+                td.len()
+            );
+        }
+        obs_out.copy_from_slice(&obs);
+        rewards.copy_from_slice(&rew);
+        dones.copy_from_slice(&dn);
+        trial_dones.copy_from_slice(&td);
+        Ok(())
+    }
+
+    fn agent_dirs_into(&self, out: &mut [i32]) {
+        match self
+            .rpc(Kind::AgentDirs, Vec::new(), Kind::AgentDirsOk)
+            .and_then(|body| {
+                BodyReader::new(&body).i32s("agent dirs")
+            }) {
+            Ok(dirs) if dirs.len() == out.len() => {
+                out.copy_from_slice(&dirs)
+            }
+            Ok(dirs) => {
+                out.fill(0);
+                *self.deferred_err.borrow_mut() = Some(format!(
+                    "agent_dirs reply carried {} values for a batch \
+                     of {}",
+                    dirs.len(),
+                    out.len()
+                ));
+            }
+            Err(e) => {
+                out.fill(0);
+                *self.deferred_err.borrow_mut() =
+                    Some(format!("agent_dirs rpc failed: {e:#}"));
+            }
+        }
+    }
+
+    fn task_rows_into(&self, out: &mut [i32]) {
+        match self
+            .rpc(Kind::TaskRows, Vec::new(), Kind::TaskRowsOk)
+            .and_then(|body| {
+                BodyReader::new(&body).i32s("task rows")
+            }) {
+            Ok(rows) if rows.len() == out.len() => {
+                out.copy_from_slice(&rows)
+            }
+            Ok(rows) => {
+                out.fill(0);
+                *self.deferred_err.borrow_mut() = Some(format!(
+                    "task_rows reply carried {} values, expected {}",
+                    rows.len(),
+                    out.len()
+                ));
+            }
+            Err(e) => {
+                out.fill(0);
+                *self.deferred_err.borrow_mut() =
+                    Some(format!("task_rows rpc failed: {e:#}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parse_shapes() {
+        assert_eq!(
+            ServerAddr::parse("127.0.0.1:7777").unwrap(),
+            ServerAddr::Tcp("127.0.0.1:7777".into())
+        );
+        assert_eq!(
+            ServerAddr::parse("/tmp/xmgrid.sock").unwrap(),
+            ServerAddr::Unix("/tmp/xmgrid.sock".into())
+        );
+        assert_eq!(
+            ServerAddr::parse("run.sock").unwrap(),
+            ServerAddr::Unix("run.sock".into())
+        );
+        assert_eq!(
+            ServerAddr::parse("tcp:localhost:9").unwrap(),
+            ServerAddr::Tcp("localhost:9".into())
+        );
+        assert_eq!(
+            ServerAddr::parse("unix:x/y").unwrap(),
+            ServerAddr::Unix("x/y".into())
+        );
+        assert!(ServerAddr::parse("").is_err());
+        assert!(ServerAddr::parse("localhost").is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! L4 service tier: rollout-as-a-service. A persistent multi-tenant
+//! environment server (`xmgrid serve`) that owns per-session
+//! [`NativePool`](crate::coordinator::NativePool) replicas and serves
+//! reset/step batches to many concurrent clients over a framed,
+//! checksummed protocol ([`protocol`]) on a unix socket or TCP port —
+//! plus a client ([`client::ServerClient`]) that implements
+//! [`BatchEnvironment`](crate::env::api::BatchEnvironment), so
+//! `xmgrid rollout --backend server:ADDR` is bitwise-identical to the
+//! in-process native backend (the client's RNG state rides the wire;
+//! the server steps the same kernels).
+//!
+//! The failure model is the point (see `docs/ARCHITECTURE.md`,
+//! "Service layer & failure model"): sessions are fault-isolated
+//! (own pool, own threads, own queue), every read/write carries a
+//! deadline, full queues answer with explicit backpressure errors,
+//! malformed frames get structured rejections naming the byte offset,
+//! and SIGTERM / a `Shutdown` frame triggers a graceful drain —
+//! in-flight batches complete, new requests are refused, sockets
+//! close, and every session thread is joined before [`Server::serve`]
+//! returns.
+
+pub mod client;
+pub mod protocol;
+mod session;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::benchgen::Benchmark;
+use crate::coordinator::metrics::WallTimer;
+use anyhow::{bail, Context, Result};
+use crate::util::fault::FaultPlan;
+
+pub use client::{request_shutdown, Connection, ServerAddr,
+                 ServerClient, SessionSpec};
+
+/// How often the accept loop wakes to notice the drain flag.
+const ACCEPT_TICK_MS: u64 = 20;
+
+/// Tunables for one server instance. All deadlines are wall-clock
+/// milliseconds; timing inside the server goes through
+/// [`WallTimer`] (the lint gate holds `server/` to the same
+/// no-raw-wallclock rule as the kernels).
+pub struct ServeConfig {
+    /// Per-IO deadline: socket writes, and the client's read deadline
+    /// for a reply. A stalled peer surfaces as a structured `timeout`
+    /// error after this long, never a hung thread.
+    pub io_deadline_ms: u64,
+    /// How long a session may sit idle (no frames) before it is torn
+    /// down with a `timeout` error.
+    pub idle_timeout_ms: u64,
+    /// Bounded per-session request queue depth; a full queue answers
+    /// `backpressure` immediately.
+    pub queue_depth: usize,
+    /// Injected faults (`XMG_FAULTS` grammar — see `util::fault`).
+    pub faults: Arc<FaultPlan>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            io_deadline_ms: 5_000,
+            idle_timeout_ms: 30_000,
+            queue_depth: 8,
+            faults: Arc::new(FaultPlan::none()),
+        }
+    }
+}
+
+/// What a drained server saw over its lifetime.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeStats {
+    pub sessions: u64,
+    pub requests: u64,
+    pub uptime_secs: f64,
+}
+
+/// A connected byte stream, TCP or unix-domain — the one place the
+/// transport dichotomy lives; everything above speaks [`Stream`].
+pub(crate) enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub(crate) fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => {
+                Stream::Tcp(s.try_clone().context("cloning tcp stream")?)
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(
+                s.try_clone().context("cloning unix stream")?,
+            ),
+        })
+    }
+
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>)
+                                   -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+        .context("setting read deadline")
+    }
+
+    pub(crate) fn set_write_timeout(&self, d: Option<Duration>)
+                                    -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+        .context("setting write deadline")
+    }
+
+    /// Shut down both halves — the teardown and kill-9-simulation path.
+    pub(crate) fn shutdown(&self) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                s.shutdown(std::net::Shutdown::Both)
+            }
+        }
+        .context("shutting down stream")
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+/// The multi-tenant environment server. `bind` then `serve`; `serve`
+/// blocks until a drain (SIGTERM via [`install_signal_drain`], a
+/// client `Shutdown` frame, or [`Server::drain_flag`] raised by the
+/// embedding test) completes.
+pub struct Server {
+    listener: Listener,
+    cfg: Arc<ServeConfig>,
+    drain: Arc<AtomicBool>,
+    benchmarks: Arc<Mutex<Vec<(String, Arc<Benchmark>)>>>,
+    unix_path: Option<PathBuf>,
+}
+
+impl Server {
+    pub fn bind_tcp(addr: &str, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding tcp {addr}"))?;
+        Ok(Server {
+            listener: Listener::Tcp(listener),
+            cfg: Arc::new(cfg),
+            drain: Arc::new(AtomicBool::new(false)),
+            benchmarks: Arc::new(Mutex::new(Vec::new())),
+            unix_path: None,
+        })
+    }
+
+    #[cfg(unix)]
+    pub fn bind_unix(path: &str, cfg: ServeConfig) -> Result<Server> {
+        // A stale socket file from a previous run would make bind fail
+        // with AddrInUse; the CLI owns the path, so clear it.
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("binding unix socket {path}"))?;
+        Ok(Server {
+            listener: Listener::Unix(listener),
+            cfg: Arc::new(cfg),
+            drain: Arc::new(AtomicBool::new(false)),
+            benchmarks: Arc::new(Mutex::new(Vec::new())),
+            unix_path: Some(PathBuf::from(path)),
+        })
+    }
+
+    /// The bound address — for tests binding port 0.
+    pub fn local_addr(&self) -> Result<String> {
+        match &self.listener {
+            Listener::Tcp(l) => {
+                let a = l.local_addr().context("tcp local addr")?;
+                Ok(a.to_string())
+            }
+            #[cfg(unix)]
+            Listener::Unix(_) => match &self.unix_path {
+                Some(p) => Ok(p.display().to_string()),
+                None => bail!("unix listener with no path"),
+            },
+        }
+    }
+
+    /// Preload a benchmark under `name` so sessions' `Hello` resolves
+    /// it without touching the store — how tests serve a synthetic
+    /// benchmark.
+    pub fn preload(&self, name: &str, bench: Arc<Benchmark>) {
+        let mut reg = self
+            .benchmarks
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        reg.push((name.to_string(), bench));
+    }
+
+    /// The drain flag: store `true` to begin a graceful shutdown from
+    /// the embedding thread (tests) — equivalent to SIGTERM.
+    pub fn drain_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.drain)
+    }
+
+    /// Accept sessions until drained, then join every session thread
+    /// and close the listener. Returns lifetime stats; `Ok` is the
+    /// graceful-drain exit (the CLI maps it to exit code 0).
+    pub fn serve(self) -> Result<ServeStats> {
+        match &self.listener {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true),
+        }
+        .context("setting listener nonblocking")?;
+
+        let timer = WallTimer::start();
+        let requests = Arc::new(AtomicU64::new(0));
+        let mut next_session: u64 = 0;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+        loop {
+            if self.drain.load(Ordering::SeqCst)
+                || signal_drain_requested()
+            {
+                self.drain.store(true, Ordering::SeqCst);
+                break;
+            }
+            let accepted: Option<Stream> = match &self.listener {
+                Listener::Tcp(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        // per-connection sockets block (with deadlines)
+                        s.set_nonblocking(false)
+                            .context("session socket mode")?;
+                        Some(Stream::Tcp(s))
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        None
+                    }
+                    Err(e) => return Err(e).context("tcp accept"),
+                },
+                #[cfg(unix)]
+                Listener::Unix(l) => match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)
+                            .context("session socket mode")?;
+                        Some(Stream::Unix(s))
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        None
+                    }
+                    Err(e) => return Err(e).context("unix accept"),
+                },
+            };
+            match accepted {
+                Some(stream) => {
+                    let id = next_session;
+                    next_session += 1;
+                    let shared = session::SessionShared {
+                        cfg: Arc::clone(&self.cfg),
+                        drain: Arc::clone(&self.drain),
+                        benchmarks: Arc::clone(&self.benchmarks),
+                        requests_served: Arc::clone(&requests),
+                    };
+                    handles.push(std::thread::spawn(move || {
+                        session::run_session(id, stream, shared)
+                    }));
+                }
+                None => {
+                    // Reap finished sessions so a long-lived server
+                    // doesn't accumulate handles, then idle briefly.
+                    let (done, live): (Vec<_>, Vec<_>) = handles
+                        .drain(..)
+                        .partition(|h| h.is_finished());
+                    for h in done {
+                        let _ = h.join();
+                    }
+                    handles = live;
+                    std::thread::sleep(Duration::from_millis(
+                        ACCEPT_TICK_MS,
+                    ));
+                }
+            }
+        }
+
+        // Drain: stop accepting (loop exited), let sessions finish
+        // their in-flight work (they observe the flag within one poll
+        // tick), join everything, release the socket.
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(p) = &self.unix_path {
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(ServeStats {
+            sessions: next_session,
+            requests: requests.load(Ordering::Relaxed),
+            uptime_secs: timer.elapsed_secs(),
+        })
+    }
+}
+
+// --- SIGTERM/SIGINT -> drain, without a libc crate -------------------
+//
+// std already links libc on unix; declaring `signal(2)` directly keeps
+// the zero-dependency rule. The handler only stores to an atomic
+// (async-signal-safe); the accept loop polls the flag. Installed only
+// by the `xmgrid serve` CLI path — tests drain via Server::drain_flag.
+
+#[cfg(unix)]
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_drain_signal(_sig: i32) {
+    SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT to a graceful drain of every [`Server`]
+/// in this process.
+#[cfg(unix)]
+pub fn install_signal_drain() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let h: extern "C" fn(i32) = on_drain_signal;
+    unsafe {
+        signal(SIGTERM, h as usize);
+        signal(SIGINT, h as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_drain() {}
+
+fn signal_drain_requested() -> bool {
+    #[cfg(unix)]
+    {
+        SIGNAL_DRAIN.load(Ordering::SeqCst)
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}

@@ -1,0 +1,633 @@
+//! Framed wire protocol for the rollout service — the same codec
+//! discipline as the checkpoint format (magic + version +
+//! length-prefix + FNV-1a checksum, bounded reads), applied to a
+//! socket: a peer that sends garbage gets a structured error naming
+//! the byte offset, never a panic, a desync, or an unbounded
+//! allocation.
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! offset  0  magic      b"XMGS"            (4 bytes)
+//! offset  4  version    u32                (4 bytes)
+//! offset  8  kind       u8                 (1 byte)
+//! offset  9  session    u64                (8 bytes)
+//! offset 17  req        u64                (8 bytes)
+//! offset 25  body_len   u64                (8 bytes, <= MAX_BODY)
+//! offset 33  body       body_len bytes
+//! offset 33+body_len    checksum u64       FNV-1a over bytes [0, 33+len)
+//! ```
+//!
+//! `body_len` is validated against [`MAX_BODY`] *before* any
+//! allocation, so an adversarial length prefix (`u64::MAX`) costs
+//! nothing. Body decoding goes through [`BodyReader`], which caps
+//! every count field by the bytes actually remaining — the reader can
+//! reject, but it can never over-allocate or read past the frame.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: [u8; 4] = *b"XMGS";
+pub const VERSION: u32 = 1;
+/// Fixed header bytes before the body: magic(4) version(4) kind(1)
+/// session(8) req(8) body_len(8).
+pub const HEADER_LEN: usize = 33;
+/// Hard cap on a frame body. Checked before allocation; a Step frame
+/// for B=65536 envs at view 5 is ~13 MiB, so 64 MiB clears every real
+/// workload with headroom.
+pub const MAX_BODY: u64 = 64 << 20;
+
+/// Byte offsets of the header fields (named so decode errors and the
+/// docs agree by construction).
+pub const OFF_MAGIC: usize = 0;
+pub const OFF_VERSION: usize = 4;
+pub const OFF_KIND: usize = 8;
+pub const OFF_SESSION: usize = 9;
+pub const OFF_REQ: usize = 17;
+pub const OFF_LEN: usize = 25;
+pub const OFF_BODY: usize = 33;
+
+/// Stable marker in mid-frame deadline errors (a socket read timeout
+/// fired while a frame was partially read) — sessions use it to tell
+/// a stalled peer apart from a malformed one.
+pub const ERR_DEADLINE: &str = "deadline exceeded";
+/// Stable marker for the benign between-frames poll timeout (zero
+/// bytes of the next frame read yet).
+pub const ERR_IDLE: &str = "deadline exceeded waiting for frame";
+
+/// Frame kinds. Requests are odd-ball client->server, `*Ok` replies
+/// echo the request's `req` id; `Error` replies carry a [`code`] and a
+/// message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    Hello = 1,
+    HelloOk = 2,
+    Reset = 3,
+    ResetOk = 4,
+    Step = 5,
+    StepOk = 6,
+    AgentDirs = 7,
+    AgentDirsOk = 8,
+    TaskRows = 9,
+    TaskRowsOk = 10,
+    Bye = 11,
+    ByeOk = 12,
+    Shutdown = 13,
+    ShutdownOk = 14,
+    Error = 15,
+}
+
+impl Kind {
+    pub fn from_u8(v: u8) -> Option<Kind> {
+        Some(match v {
+            1 => Kind::Hello,
+            2 => Kind::HelloOk,
+            3 => Kind::Reset,
+            4 => Kind::ResetOk,
+            5 => Kind::Step,
+            6 => Kind::StepOk,
+            7 => Kind::AgentDirs,
+            8 => Kind::AgentDirsOk,
+            9 => Kind::TaskRows,
+            10 => Kind::TaskRowsOk,
+            11 => Kind::Bye,
+            12 => Kind::ByeOk,
+            13 => Kind::Shutdown,
+            14 => Kind::ShutdownOk,
+            15 => Kind::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// Stable error codes carried by `Kind::Error` bodies (u32 + message).
+/// Clients surface these as structured errors whose text names the
+/// code, so tests and operators can match on them.
+pub mod code {
+    pub const MALFORMED: u32 = 1;
+    pub const TIMEOUT: u32 = 2;
+    pub const BACKPRESSURE: u32 = 3;
+    pub const DRAINING: u32 = 4;
+    pub const INTERNAL: u32 = 5;
+    pub const BAD_REQUEST: u32 = 6;
+
+    /// Human name for a code — the stable token error text carries.
+    pub fn name(c: u32) -> &'static str {
+        match c {
+            MALFORMED => "malformed",
+            TIMEOUT => "timeout",
+            BACKPRESSURE => "backpressure",
+            DRAINING => "draining",
+            INTERNAL => "internal",
+            BAD_REQUEST => "bad-request",
+            _ => "unknown",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: Kind,
+    pub session: u64,
+    pub req: u64,
+    pub body: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: Kind, session: u64, req: u64, body: Vec<u8>)
+               -> Frame {
+        Frame { kind, session, req, body }
+    }
+}
+
+/// FNV-1a 64 — same function the checkpoint codec uses (kept local so
+/// the wire format has no dependency on the checkpoint module's
+/// layout).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a frame to its wire image (header + body + checksum).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + f.body.len() + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(f.kind as u8);
+    out.extend_from_slice(&f.session.to_le_bytes());
+    out.extend_from_slice(&f.req.to_le_bytes());
+    out.extend_from_slice(&(f.body.len() as u64).to_le_bytes());
+    out.extend_from_slice(&f.body);
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write a full frame to `w` (single `write_all` so a frame is never
+/// interleaved mid-frame by a concurrent writer holding the same lock).
+pub fn write_frame(w: &mut dyn Write, f: &Frame) -> Result<()> {
+    let bytes = encode_frame(f);
+    w.write_all(&bytes).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes, distinguishing the three failure
+/// shapes a socket read has: clean truncation (peer closed mid-frame),
+/// deadline expiry (`WouldBlock`/`TimedOut` from a socket read
+/// timeout), and transport errors. `base` is the byte offset of
+/// `buf[0]` within the frame, so every error names where the stream
+/// died.
+fn read_exact_at(r: &mut dyn Read, buf: &mut [u8], base: usize)
+                 -> Result<()> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => bail!(
+                "truncated frame: stream closed at byte offset {} \
+                 (needed {} more bytes)",
+                base + got,
+                buf.len() - got
+            ),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock
+                || e.kind() == ErrorKind::TimedOut =>
+            {
+                bail!(
+                    "{ERR_DEADLINE} reading frame at byte offset {}",
+                    base + got
+                )
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!(
+                    "reading frame at byte offset {}",
+                    base + got
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` means the stream ended cleanly *between*
+/// frames (zero header bytes read) — any other shortfall is an error
+/// naming the offset. Validates magic, version, kind, the body-length
+/// cap (before allocating), and the trailing checksum.
+pub fn read_frame_opt(r: &mut dyn Read) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte separately: EOF here is a clean close, not an error.
+    match r.read(&mut header[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) if e.kind() == ErrorKind::Interrupted => {
+            return read_frame_opt(r)
+        }
+        Err(e) if e.kind() == ErrorKind::WouldBlock
+            || e.kind() == ErrorKind::TimedOut =>
+        {
+            bail!("{ERR_IDLE}")
+        }
+        Err(e) => return Err(e).context("reading frame header"),
+    }
+    read_exact_at(r, &mut header[1..], 1)?;
+    decode_header(&header).and_then(|(kind, session, req, len)| {
+        let mut body = vec![0u8; len];
+        read_exact_at(r, &mut body, OFF_BODY)?;
+        let mut sum = [0u8; 8];
+        read_exact_at(r, &mut sum, OFF_BODY + len)?;
+        let want = u64::from_le_bytes(sum);
+        let mut hashed = fnv1a(&header);
+        // continue the running hash over the body without re-buffering
+        for &b in &body {
+            hashed ^= b as u64;
+            hashed = hashed.wrapping_mul(0x1_0000_0000_01b3);
+        }
+        if hashed != want {
+            bail!(
+                "frame checksum mismatch at byte offset {} \
+                 (stored {want:#018x}, computed {hashed:#018x})",
+                OFF_BODY + len
+            );
+        }
+        Ok(Some(Frame { kind, session, req, body }))
+    })
+}
+
+/// Like [`read_frame_opt`] but a clean between-frame close is also an
+/// error — for clients awaiting a reply.
+pub fn read_frame(r: &mut dyn Read) -> Result<Frame> {
+    match read_frame_opt(r)? {
+        Some(f) => Ok(f),
+        None => bail!(
+            "connection closed before a frame arrived (byte offset 0)"
+        ),
+    }
+}
+
+/// Validate the fixed header, returning (kind, session, req, body_len).
+/// Every rejection names the offending byte offset.
+fn decode_header(h: &[u8; HEADER_LEN])
+                 -> Result<(Kind, u64, u64, usize)> {
+    if h[OFF_MAGIC..OFF_MAGIC + 4] != MAGIC {
+        bail!(
+            "bad frame magic {:02x?} at byte offset {OFF_MAGIC} \
+             (expected {MAGIC:02x?} = \"XMGS\")",
+            &h[OFF_MAGIC..OFF_MAGIC + 4]
+        );
+    }
+    let ver = u32::from_le_bytes([
+        h[OFF_VERSION], h[OFF_VERSION + 1], h[OFF_VERSION + 2],
+        h[OFF_VERSION + 3],
+    ]);
+    if ver != VERSION {
+        bail!(
+            "unsupported protocol version {ver} at byte offset \
+             {OFF_VERSION} (this build speaks {VERSION})"
+        );
+    }
+    let kind = match Kind::from_u8(h[OFF_KIND]) {
+        Some(k) => k,
+        None => bail!(
+            "unknown frame kind {} at byte offset {OFF_KIND}",
+            h[OFF_KIND]
+        ),
+    };
+    let mut u64_at = |off: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&h[off..off + 8]);
+        u64::from_le_bytes(b)
+    };
+    let session = u64_at(OFF_SESSION);
+    let req = u64_at(OFF_REQ);
+    let len = u64_at(OFF_LEN);
+    if len > MAX_BODY {
+        bail!(
+            "frame body length {len} at byte offset {OFF_LEN} exceeds \
+             the {MAX_BODY}-byte cap — refusing allocation"
+        );
+    }
+    Ok((kind, session, req, len as usize))
+}
+
+// ---------------------------------------------------------------------
+// Body codec: length-prefixed fields with bounds-checked reads.
+// ---------------------------------------------------------------------
+
+/// Append-only body builder. Counts are u32 length prefixes; scalars
+/// are little-endian.
+#[derive(Default)]
+pub struct BodyWriter {
+    buf: Vec<u8>,
+}
+
+impl BodyWriter {
+    pub fn new() -> BodyWriter {
+        BodyWriter { buf: Vec::new() }
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn i32s(&mut self, v: &[i32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self
+    }
+
+    pub fn bools(&mut self, v: &[bool]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.push(x as u8);
+        }
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked body reader. Every count field is capped by the
+/// bytes actually remaining — a hostile count can make decoding fail,
+/// never allocate beyond the frame it arrived in.
+pub struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BodyReader<'a> {
+        BodyReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let remain = self.buf.len() - self.pos;
+        if n > remain {
+            bail!(
+                "body truncated at offset {}: {what} needs {n} bytes, \
+                 {remain} remain",
+                self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// A count prefix for elements of `elem` bytes each, capped by the
+    /// remaining body so `vec![0; n]` downstream can never over-allocate.
+    fn count(&mut self, elem: usize, what: &str) -> Result<usize> {
+        let at = self.pos;
+        let n = self.u32(what)? as usize;
+        let remain = self.buf.len() - self.pos;
+        if n.saturating_mul(elem) > remain {
+            bail!(
+                "body count {n} at offset {at}: {what} claims \
+                 {} bytes but only {remain} remain",
+                n.saturating_mul(elem)
+            );
+        }
+        Ok(n)
+    }
+
+    pub fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.count(1, what)?;
+        let b = self.take(n, what)?;
+        match std::str::from_utf8(b) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => bail!(
+                "body field {what} at offset {} is not valid UTF-8",
+                self.pos - n
+            ),
+        }
+    }
+
+    pub fn i32s(&mut self, what: &str) -> Result<Vec<i32>> {
+        let n = self.count(4, what)?;
+        let b = self.take(n * 4, what)?;
+        let mut out = Vec::with_capacity(n);
+        for c in b.chunks_exact(4) {
+            out.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    pub fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.count(4, what)?;
+        let b = self.take(n * 4, what)?;
+        let mut out = Vec::with_capacity(n);
+        for c in b.chunks_exact(4) {
+            out.push(f32::from_bits(u32::from_le_bytes([
+                c[0], c[1], c[2], c[3],
+            ])));
+        }
+        Ok(out)
+    }
+
+    pub fn bools(&mut self, what: &str) -> Result<Vec<bool>> {
+        let n = self.count(1, what)?;
+        let b = self.take(n, what)?;
+        Ok(b.iter().map(|&x| x != 0).collect())
+    }
+
+    /// Bytes left undecoded (0 for a fully-consumed body).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Build an `Error` frame body.
+pub fn error_body(code_: u32, msg: &str) -> Vec<u8> {
+    let mut w = BodyWriter::new();
+    w.u32(code_).str(msg);
+    w.finish()
+}
+
+/// Decode an `Error` frame body -> (code, message). Tolerant of a
+/// truncated message (the code still names the failure class).
+pub fn decode_error_body(body: &[u8]) -> (u32, String) {
+    let mut r = BodyReader::new(body);
+    let c = r.u32("error code").unwrap_or(0);
+    let msg = r
+        .str("error message")
+        .unwrap_or_else(|_| "(unreadable error body)".to_string());
+    (c, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode_frame(f);
+        read_frame(&mut &bytes[..]).expect("roundtrip decode")
+    }
+
+    #[test]
+    fn frame_roundtrips() {
+        let mut w = BodyWriter::new();
+        w.u32(7).str("hello").i32s(&[1, -2, 3]).f32s(&[0.5, -1.25]);
+        w.bools(&[true, false]);
+        let f = Frame::new(Kind::Step, 42, 9, w.finish());
+        let g = roundtrip(&f);
+        assert_eq!(g.kind, Kind::Step);
+        assert_eq!(g.session, 42);
+        assert_eq!(g.req, 9);
+        let mut r = BodyReader::new(&g.body);
+        assert_eq!(r.u32("a").unwrap(), 7);
+        assert_eq!(r.str("b").unwrap(), "hello");
+        assert_eq!(r.i32s("c").unwrap(), vec![1, -2, 3]);
+        assert_eq!(r.f32s("d").unwrap(), vec![0.5, -1.25]);
+        assert_eq!(r.bools("e").unwrap(), vec![true, false]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame_opt(&mut &empty[..]).unwrap().is_none());
+    }
+
+    // Fuzz-style corpus: every malformed shape is a structured error
+    // naming a byte offset — never a panic, never an allocation driven
+    // by attacker-controlled lengths.
+    #[test]
+    fn corpus_truncation_at_every_header_prefix() {
+        let f = Frame::new(Kind::Reset, 1, 2, vec![0u8; 16]);
+        let bytes = encode_frame(&f);
+        for cut in 1..HEADER_LEN {
+            let err = read_frame(&mut &bytes[..cut])
+                .expect_err("truncated header must error");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("byte offset"),
+                "cut={cut}: error must name an offset, got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn corpus_truncated_body_and_checksum() {
+        let f = Frame::new(Kind::Reset, 1, 2, vec![7u8; 16]);
+        let bytes = encode_frame(&f);
+        // mid-body and mid-checksum cuts
+        for cut in [HEADER_LEN + 3, HEADER_LEN + 16 + 3] {
+            let err = read_frame(&mut &bytes[..cut]).expect_err("cut");
+            assert!(format!("{err:#}").contains("byte offset"));
+        }
+    }
+
+    #[test]
+    fn corpus_bad_magic_version_kind() {
+        let f = Frame::new(Kind::Hello, 0, 0, Vec::new());
+        let good = encode_frame(&f);
+
+        let mut bad = good.clone();
+        bad[0] = b'Y';
+        let e = read_frame(&mut &bad[..]).expect_err("magic");
+        assert!(format!("{e:#}").contains("byte offset 0"));
+
+        let mut bad = good.clone();
+        bad[OFF_VERSION] = 99;
+        let e = read_frame(&mut &bad[..]).expect_err("version");
+        assert!(format!("{e:#}").contains("version"));
+
+        let mut bad = good.clone();
+        bad[OFF_KIND] = 0xEE;
+        let e = read_frame(&mut &bad[..]).expect_err("kind");
+        assert!(format!("{e:#}").contains("unknown frame kind"));
+    }
+
+    #[test]
+    fn corpus_oversized_length_is_rejected_before_allocation() {
+        let f = Frame::new(Kind::Hello, 0, 0, Vec::new());
+        let mut bad = encode_frame(&f);
+        bad[OFF_LEN..OFF_LEN + 8]
+            .copy_from_slice(&u64::MAX.to_le_bytes());
+        // If this allocated u64::MAX the test would OOM; a structured
+        // error proves the cap fires before the allocation.
+        let e = read_frame(&mut &bad[..]).expect_err("oversized len");
+        let msg = format!("{e:#}");
+        assert!(msg.contains("cap"), "got: {msg}");
+        assert!(msg.contains(&format!("{OFF_LEN}")), "got: {msg}");
+    }
+
+    #[test]
+    fn corpus_checksum_flip_detected() {
+        let f = Frame::new(Kind::Step, 3, 4, vec![1, 2, 3, 4]);
+        let mut bad = encode_frame(&f);
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        let e = read_frame(&mut &bad[..]).expect_err("checksum");
+        assert!(format!("{e:#}").contains("checksum mismatch"));
+        // ... and a body-byte flip trips the same check
+        let mut bad2 = encode_frame(&f);
+        bad2[OFF_BODY] ^= 0x80;
+        let e2 = read_frame(&mut &bad2[..]).expect_err("body flip");
+        assert!(format!("{e2:#}").contains("checksum mismatch"));
+    }
+
+    #[test]
+    fn corpus_hostile_body_counts_cannot_overallocate() {
+        // A body claiming 2^31 i32s but carrying 4 bytes: the count
+        // check fires with an offset, no allocation happens.
+        let mut body = Vec::new();
+        body.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        body.extend_from_slice(&[0u8; 4]);
+        let mut r = BodyReader::new(&body);
+        let e = r.i32s("actions").expect_err("hostile count");
+        let msg = format!("{e:#}");
+        assert!(msg.contains("offset 0"), "got: {msg}");
+    }
+
+    #[test]
+    fn error_body_roundtrips() {
+        let b = error_body(code::BACKPRESSURE, "queue full");
+        let (c, m) = decode_error_body(&b);
+        assert_eq!(c, code::BACKPRESSURE);
+        assert_eq!(m, "queue full");
+        assert_eq!(code::name(c), "backpressure");
+    }
+}

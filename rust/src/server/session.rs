@@ -1,0 +1,427 @@
+//! One client session: a reader thread that frames requests off the
+//! socket into a *bounded* queue, and a worker thread that owns this
+//! session's private [`NativePool`] replica and serves them. The two
+//! threads and the pool are the session's entire blast radius — a
+//! panic, stall, or vanished peer here cannot touch any other session.
+//!
+//! Robustness contracts (pinned by `tests/server_faults.rs`):
+//!
+//! - **Isolation.** Each session allocates its own pool on `Hello`
+//!   (own envs, own task table, own stepping threads). Worker panics
+//!   are caught per-request; the session replies a structured
+//!   `internal` error and tears itself down. Nothing is shared with
+//!   other sessions but the immutable benchmark registry.
+//! - **Deadlines.** The socket read runs on a short poll tick; a
+//!   mid-frame stall or an idle gap past `idle_timeout_ms` surfaces as
+//!   a structured `timeout` error, then teardown. Writes carry
+//!   `io_deadline_ms`. No blocking read or write is unbounded.
+//! - **Backpressure.** The request queue holds `queue_depth` frames.
+//!   When it is full the reader *replies immediately* with a
+//!   `backpressure` error naming the refused request — never an
+//!   unbounded buffer, never a silent drop.
+//! - **Drain.** When the server-wide drain flag rises, queued and
+//!   in-flight requests complete with normal replies; frames read
+//!   after that get a `draining` error; the reader exits at the next
+//!   idle tick and both threads join.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, TrySendError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::benchgen::store::load_benchmark_with;
+use crate::benchgen::Benchmark;
+use crate::coordinator::metrics::WallTimer;
+use crate::coordinator::{NativeEnvConfig, NativePool};
+use crate::env::api::BatchEnvironment;
+use anyhow::{bail, Result};
+use crate::util::rng::Rng;
+
+use super::protocol::{
+    code, error_body, read_frame_opt, write_frame, BodyReader,
+    BodyWriter, Frame, Kind, ERR_DEADLINE, ERR_IDLE,
+};
+use super::{ServeConfig, Stream};
+
+/// Read-poll tick: the granularity at which an otherwise-blocked
+/// reader notices the drain flag and accumulates idle time.
+const POLL_TICK_MS: u64 = 100;
+
+/// State shared between the server accept loop and every session.
+#[derive(Clone)]
+pub(crate) struct SessionShared {
+    pub cfg: Arc<ServeConfig>,
+    pub drain: Arc<AtomicBool>,
+    /// name -> preloaded benchmark (tests preload; the CLI path loads
+    /// through the store on first use).
+    pub benchmarks: Arc<Mutex<Vec<(String, Arc<Benchmark>)>>>,
+    pub requests_served: Arc<AtomicU64>,
+}
+
+/// Recover a mutex guard even if another session thread panicked while
+/// holding it — poisoning must not cascade across sessions.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn send_error(writer: &Mutex<Stream>, session: u64, req: u64,
+              code_: u32, msg: &str) {
+    let f = Frame::new(Kind::Error, session, req,
+                       error_body(code_, msg));
+    // Best-effort: the peer may already be gone.
+    let mut w = lock_unpoisoned(writer);
+    let _ = write_frame(&mut *w, &f);
+}
+
+/// Run one session to completion. Called on the session's own thread;
+/// spawns the worker internally and joins it before returning.
+pub(crate) fn run_session(id: u64, mut stream: Stream,
+                          shared: SessionShared) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return, // socket already dead; nothing to clean up
+    };
+    let _ = stream
+        .set_read_timeout(Some(Duration::from_millis(POLL_TICK_MS)));
+    {
+        let w = lock_unpoisoned(&writer);
+        let _ = w.set_write_timeout(Some(Duration::from_millis(
+            shared.cfg.io_deadline_ms.max(1),
+        )));
+    }
+
+    let (tx, rx) =
+        std::sync::mpsc::sync_channel::<Frame>(shared.cfg.queue_depth);
+    let worker = {
+        let writer = Arc::clone(&writer);
+        let shared = shared.clone();
+        std::thread::spawn(move || worker_loop(id, rx, writer, shared))
+    };
+
+    let mut idle_ms = 0u64;
+    let mut draining = false;
+    loop {
+        if shared.drain.load(Ordering::SeqCst) {
+            draining = true;
+        }
+        match read_frame_opt(&mut stream) {
+            Ok(None) => break, // peer closed cleanly
+            Ok(Some(f)) => {
+                idle_ms = 0;
+                match f.kind {
+                    Kind::Bye => {
+                        let bye = Frame::new(Kind::ByeOk, id, f.req,
+                                             Vec::new());
+                        let mut w = lock_unpoisoned(&writer);
+                        let _ = write_frame(&mut *w, &bye);
+                        break;
+                    }
+                    Kind::Shutdown => {
+                        // Graceful drain request: acknowledge, raise
+                        // the server-wide flag. In-flight work still
+                        // completes below.
+                        shared.drain.store(true, Ordering::SeqCst);
+                        draining = true;
+                        let okf = Frame::new(Kind::ShutdownOk, id,
+                                             f.req, Vec::new());
+                        let mut w = lock_unpoisoned(&writer);
+                        let _ = write_frame(&mut *w, &okf);
+                    }
+                    Kind::Hello | Kind::Reset | Kind::Step
+                    | Kind::AgentDirs | Kind::TaskRows => {
+                        if draining {
+                            send_error(
+                                &writer, id, f.req, code::DRAINING,
+                                &format!(
+                                    "server is draining — req {} \
+                                     refused, no new work accepted",
+                                    f.req
+                                ),
+                            );
+                            continue;
+                        }
+                        let req = f.req;
+                        match tx.try_send(f) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(_)) => send_error(
+                                &writer, id, req, code::BACKPRESSURE,
+                                &format!(
+                                    "session {id} queue full (depth \
+                                     {}) — req {req} refused, resend \
+                                     after a reply arrives",
+                                    shared.cfg.queue_depth
+                                ),
+                            ),
+                            Err(TrySendError::Disconnected(_)) => break,
+                        }
+                    }
+                    other => {
+                        send_error(
+                            &writer, id, f.req, code::BAD_REQUEST,
+                            &format!(
+                                "frame kind {other:?} is a reply kind \
+                                 — clients send requests only"
+                            ),
+                        );
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains(ERR_IDLE) {
+                    // poll tick between frames: not an error yet
+                    idle_ms += POLL_TICK_MS;
+                    if draining {
+                        break; // drained and idle: session is done
+                    }
+                    if idle_ms >= shared.cfg.idle_timeout_ms {
+                        send_error(
+                            &writer, id, 0, code::TIMEOUT,
+                            &format!(
+                                "session {id} idle deadline \
+                                 ({} ms) exceeded",
+                                shared.cfg.idle_timeout_ms
+                            ),
+                        );
+                        break;
+                    }
+                } else if msg.contains(ERR_DEADLINE) {
+                    // stalled mid-frame: a per-request deadline breach
+                    send_error(
+                        &writer, id, 0, code::TIMEOUT,
+                        &format!("session {id}: {msg}"),
+                    );
+                    break;
+                } else {
+                    // malformed frame or transport error; the stream
+                    // position is unknown, so reply and resync by
+                    // closing.
+                    send_error(
+                        &writer, id, 0, code::MALFORMED,
+                        &format!("session {id}: {msg}"),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+    drop(tx); // closes the queue; the worker finishes what's in flight
+    let _ = worker.join();
+    let _ = stream.shutdown();
+}
+
+/// Per-session environment state, created by `Hello`.
+struct PoolState {
+    pool: NativePool,
+    obs: Vec<i32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    trial_dones: Vec<bool>,
+    b: usize,
+    row_len: usize,
+}
+
+fn worker_loop(id: u64, rx: Receiver<Frame>,
+               writer: Arc<Mutex<Stream>>, shared: SessionShared) {
+    let mut st: Option<PoolState> = None;
+    let timer = WallTimer::start();
+    let mut served = 0u64;
+    for f in rx.iter() {
+        // Fault hooks (XMG_FAULTS): deterministic stand-ins for a
+        // stalled worker, a kill-9'd connection, and a torn reply.
+        if let Some(ms) = shared.cfg.faults.server_stall_ms(id) {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if shared.cfg.faults.server_drop_conn(id, f.req) {
+            let w = lock_unpoisoned(&writer);
+            let _ = w.shutdown(); // both halves: the hard-kill shape
+            break;
+        }
+        let torn = shared.cfg.faults.server_torn_frame(id);
+        let req = f.req;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            handle_request(id, &mut st, &f, &shared)
+        }));
+        match outcome {
+            Ok(Ok(reply)) => {
+                served += 1;
+                shared.requests_served.fetch_add(1, Ordering::Relaxed);
+                let mut w = lock_unpoisoned(&writer);
+                if torn {
+                    // write half the encoded reply, then cut the
+                    // stream — the client must see a structured
+                    // truncation error, never hang or desync.
+                    let bytes =
+                        super::protocol::encode_frame(&reply);
+                    use std::io::Write;
+                    let half = bytes.len() / 2;
+                    let _ = w.write_all(&bytes[..half]);
+                    let _ = w.flush();
+                    let _ = w.shutdown();
+                    break;
+                }
+                let _ = write_frame(&mut *w, &reply);
+            }
+            Ok(Err(e)) => {
+                // Structured failure (bad request, unknown benchmark,
+                // step error): reply and keep serving — handle() fails
+                // before mutating state.
+                send_error(&writer, id, req, code::BAD_REQUEST,
+                           &format!("{e:#}"));
+            }
+            Err(panic) => {
+                let what = panic_msg(&panic);
+                send_error(
+                    &writer, id, req, code::INTERNAL,
+                    &format!(
+                        "session {id} worker panicked serving req \
+                         {req}: {what} — session torn down, other \
+                         sessions unaffected"
+                    ),
+                );
+                break;
+            }
+        }
+    }
+    if served > 0 {
+        eprintln!(
+            "[serve] session {id}: {served} requests in {:.3}s",
+            timer.elapsed_secs()
+        );
+    }
+}
+
+fn panic_msg(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Decode, execute, and encode one request against this session's
+/// pool. Errors are structured and *pre-mutation*: a failed request
+/// leaves the pool exactly as it was.
+fn handle_request(id: u64, st: &mut Option<PoolState>, f: &Frame,
+                  shared: &SessionShared) -> Result<Frame> {
+    match f.kind {
+        Kind::Hello => {
+            let mut r = BodyReader::new(&f.body);
+            let env = r.str("env name")?;
+            let bench_name = r.str("benchmark name")?;
+            let b = r.u32("batch")? as usize;
+            let t = r.u32("steps")? as usize;
+            let threads = (r.u32("threads")? as usize).max(1);
+            let bench = resolve_benchmark(&bench_name, threads,
+                                          shared)?;
+            let ncfg = NativeEnvConfig::for_env(&env, b, t, &bench)?
+                .with_threads(threads);
+            let params = ncfg.params;
+            let pool = NativePool::with_tasks(ncfg, bench);
+            let obs_len = pool.obs_len();
+            *st = Some(PoolState {
+                pool,
+                obs: vec![0; obs_len],
+                rewards: vec![0.0; b],
+                dones: vec![false; b],
+                trial_dones: vec![false; b],
+                b,
+                row_len: params.task_row_len(),
+            });
+            let mut w = BodyWriter::new();
+            w.u32(params.h as u32)
+                .u32(params.w as u32)
+                .u32(params.max_rules as u32)
+                .u32(params.max_init as u32);
+            Ok(Frame::new(Kind::HelloOk, id, f.req, w.finish()))
+        }
+        Kind::Reset => {
+            let st = need_pool(st)?;
+            let mut r = BodyReader::new(&f.body);
+            let state = [
+                r.u64("rng[0]")?,
+                r.u64("rng[1]")?,
+                r.u64("rng[2]")?,
+                r.u64("rng[3]")?,
+            ];
+            let mut rng = Rng::from_state(state);
+            // Trait-surface reset (qualified — the inherent
+            // `NativePool::reset(bench, rng)` would shadow it):
+            // bitwise-identical to the in-process pool, pinned by
+            // trait_surface_matches_inherent_pool.
+            BatchEnvironment::reset(&mut st.pool, &mut rng,
+                                    &mut st.obs)?;
+            let mut w = BodyWriter::new();
+            for s in rng.state() {
+                w.u64(s);
+            }
+            w.i32s(&st.obs);
+            Ok(Frame::new(Kind::ResetOk, id, f.req, w.finish()))
+        }
+        Kind::Step => {
+            let st = need_pool(st)?;
+            let mut r = BodyReader::new(&f.body);
+            let actions = r.i32s("actions")?;
+            if actions.len() != st.b {
+                bail!(
+                    "req {}: {} actions for a batch of {}",
+                    f.req,
+                    actions.len(),
+                    st.b
+                );
+            }
+            st.pool.step(&actions, &mut st.obs, &mut st.rewards,
+                         &mut st.dones, &mut st.trial_dones)?;
+            let mut w = BodyWriter::new();
+            w.i32s(&st.obs)
+                .f32s(&st.rewards)
+                .bools(&st.dones)
+                .bools(&st.trial_dones);
+            Ok(Frame::new(Kind::StepOk, id, f.req, w.finish()))
+        }
+        Kind::AgentDirs => {
+            let st = need_pool(st)?;
+            let mut dirs = vec![0i32; st.b];
+            st.pool.agent_dirs_into(&mut dirs);
+            let mut w = BodyWriter::new();
+            w.i32s(&dirs);
+            Ok(Frame::new(Kind::AgentDirsOk, id, f.req, w.finish()))
+        }
+        Kind::TaskRows => {
+            let st = need_pool(st)?;
+            let mut rows = vec![0i32; st.b * st.row_len];
+            st.pool.task_rows_into(&mut rows);
+            let mut w = BodyWriter::new();
+            w.i32s(&rows);
+            Ok(Frame::new(Kind::TaskRowsOk, id, f.req, w.finish()))
+        }
+        other => bail!("kind {other:?} reached the worker (bug)"),
+    }
+}
+
+fn need_pool(st: &mut Option<PoolState>) -> Result<&mut PoolState> {
+    match st {
+        Some(p) => Ok(p),
+        None => bail!("no session environment — send Hello first"),
+    }
+}
+
+fn resolve_benchmark(name: &str, threads: usize,
+                     shared: &SessionShared) -> Result<Arc<Benchmark>> {
+    {
+        let reg = lock_unpoisoned(&shared.benchmarks);
+        if let Some((_, b)) = reg.iter().find(|(n, _)| n == name) {
+            return Ok(Arc::clone(b));
+        }
+    }
+    let loaded = Arc::new(load_benchmark_with(name, threads)?);
+    let mut reg = lock_unpoisoned(&shared.benchmarks);
+    if let Some((_, b)) = reg.iter().find(|(n, _)| n == name) {
+        return Ok(Arc::clone(b)); // another session raced the load
+    }
+    reg.push((name.to_string(), Arc::clone(&loaded)));
+    Ok(loaded)
+}

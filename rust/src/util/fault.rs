@@ -17,6 +17,16 @@
 //! torn-checkpoint@iter=I                checkpoint at iteration I is
 //!                                       written torn (truncated, at the
 //!                                       final path) instead of atomically
+//! drop-conn@session=S,req=R[,count=N|*] the serve tier hard-drops
+//!                                       session S's socket when it is
+//!                                       about to serve request R (the
+//!                                       kill-9 shape)
+//! stall@session=S,ms=M[,count=N|*]      session S's worker sleeps M ms
+//!                                       before serving a request (trips
+//!                                       client deadlines)
+//! torn-frame@session=S[,count=N|*]      session S's next reply is
+//!                                       written half-length, then the
+//!                                       stream is cut
 //! ```
 //!
 //! Every entry carries a *consumption budget* (default 1): once it has
@@ -47,6 +57,14 @@ enum Site {
     ShardRound { shard: usize, round: u64 },
     /// `torn-checkpoint@iter=I` — checkpoint write at iteration I.
     TornCheckpoint { iter: u64 },
+    /// `drop-conn@session=S,req=R` — serve tier drops session S's
+    /// socket at request R.
+    ServerDropConn { session: u64, req: u64 },
+    /// `stall@session=S,ms=M` — session S's worker sleeps M ms before
+    /// serving a request.
+    ServerStall { session: u64, ms: u64 },
+    /// `torn-frame@session=S` — session S's next reply is truncated.
+    ServerTornFrame { session: u64 },
 }
 
 #[derive(Debug)]
@@ -117,34 +135,60 @@ impl FaultPlan {
         self.fire(Site::TornCheckpoint { iter })
     }
 
-    fn fire(&self, site: Site) -> bool {
+    /// Should the serve tier hard-drop `session`'s socket at request
+    /// `req` (the kill-9 shape)? Consumes one firing on a hit.
+    pub fn server_drop_conn(&self, session: u64, req: u64) -> bool {
+        self.fire(Site::ServerDropConn { session, req })
+    }
+
+    /// Milliseconds `session`'s worker should stall before serving its
+    /// next request, if a matching entry has budget left.
+    pub fn server_stall_ms(&self, session: u64) -> Option<u64> {
         for e in &self.entries {
-            if e.site != site {
-                continue;
-            }
-            // Decrement-if-positive; INFINITE never decrements.
-            loop {
-                let cur = e.remaining.load(Ordering::Relaxed);
-                if cur == 0 {
-                    break;
-                }
-                if cur == INFINITE {
-                    return true;
-                }
-                if e.remaining
-                    .compare_exchange(
-                        cur,
-                        cur - 1,
-                        Ordering::Relaxed,
-                        Ordering::Relaxed,
-                    )
-                    .is_ok()
-                {
-                    return true;
+            if let Site::ServerStall { session: s, ms } = e.site {
+                if s == session && consume(e) {
+                    return Some(ms);
                 }
             }
         }
+        None
+    }
+
+    /// Should `session`'s next reply frame be written torn (truncated,
+    /// then the stream cut)?
+    pub fn server_torn_frame(&self, session: u64) -> bool {
+        self.fire(Site::ServerTornFrame { session })
+    }
+
+    fn fire(&self, site: Site) -> bool {
+        for e in &self.entries {
+            if e.site == site && consume(e) {
+                return true;
+            }
+        }
         false
+    }
+}
+
+/// Decrement-if-positive on the entry's budget; INFINITE never
+/// decrements. Atomic so concurrent workers racing on the same entry
+/// consume it exactly `count` times.
+fn consume(e: &Entry) -> bool {
+    loop {
+        let cur = e.remaining.load(Ordering::Relaxed);
+        if cur == 0 {
+            return false;
+        }
+        if cur == INFINITE {
+            return true;
+        }
+        if e.remaining
+            .compare_exchange(cur, cur - 1, Ordering::Relaxed,
+                              Ordering::Relaxed)
+            .is_ok()
+        {
+            return true;
+        }
     }
 }
 
@@ -191,9 +235,29 @@ fn parse_entry(part: &str) -> Result<Entry> {
             },
             _ => bail!("torn-checkpoint@ needs `iter=I`"),
         },
+        "drop-conn" => match keys.as_slice() {
+            [("req", r), ("session", s)] => Site::ServerDropConn {
+                session: parse_u64(s).context("session")?,
+                req: parse_u64(r).context("req")?,
+            },
+            _ => bail!("drop-conn@ needs `session=S,req=R`"),
+        },
+        "stall" => match keys.as_slice() {
+            [("ms", m), ("session", s)] => Site::ServerStall {
+                session: parse_u64(s).context("session")?,
+                ms: parse_u64(m).context("ms")?,
+            },
+            _ => bail!("stall@ needs `session=S,ms=M`"),
+        },
+        "torn-frame" => match keys.as_slice() {
+            [("session", s)] => Site::ServerTornFrame {
+                session: parse_u64(s).context("session")?,
+            },
+            _ => bail!("torn-frame@ needs `session=S`"),
+        },
         other => bail!(
-            "unknown fault kind `{other}` \
-             (expected `panic` or `torn-checkpoint`)"
+            "unknown fault kind `{other}` (expected `panic`, \
+             `torn-checkpoint`, `drop-conn`, `stall`, or `torn-frame`)"
         ),
     };
     if count == 0 {
@@ -223,10 +287,24 @@ impl Default for RetryPolicy {
     }
 }
 
+/// Ceiling on a single backoff sleep. Linear backoff with a huge
+/// `backoff_ms` (or many attempts) must degrade to a bounded wait, not
+/// an effectively-infinite sleep that looks like a hung worker.
+pub const MAX_BACKOFF_MS: u64 = 60_000;
+
 impl RetryPolicy {
+    /// The backoff for the `attempt`-th retry (1-based):
+    /// `min(backoff_ms * attempt, MAX_BACKOFF_MS)`, overflow-safe.
+    /// Attempt 0 (no retry yet) is always 0.
+    pub fn backoff_for(&self, attempt: u32) -> u64 {
+        self.backoff_ms
+            .saturating_mul(attempt as u64)
+            .min(MAX_BACKOFF_MS)
+    }
+
     /// Sleep for the `attempt`-th retry (1-based). No-op at 0 backoff.
     pub fn sleep(&self, attempt: u32) {
-        let ms = self.backoff_ms.saturating_mul(attempt as u64);
+        let ms = self.backoff_for(attempt);
         if ms > 0 {
             std::thread::sleep(std::time::Duration::from_millis(ms));
         }
@@ -285,9 +363,73 @@ mod tests {
             "panic@worker=x,step=1",
             "panic@worker=1,step=2,count=0",
             "panic",
+            "drop-conn@session=1",
+            "drop-conn@req=2",
+            "stall@session=1",
+            "stall@ms=10",
+            "torn-frame@req=1",
+            "torn-frame@session=x",
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
         }
+    }
+
+    #[test]
+    fn server_faults_parse_and_consume() {
+        let p = FaultPlan::parse(
+            "drop-conn@session=1,req=3; stall@session=0,ms=250;\
+             torn-frame@session=2,count=2",
+        )
+        .unwrap();
+        // wrong coordinates never fire
+        assert!(!p.server_drop_conn(0, 3));
+        assert!(!p.server_drop_conn(1, 2));
+        assert!(p.server_drop_conn(1, 3));
+        assert!(!p.server_drop_conn(1, 3), "one-shot budget");
+
+        assert_eq!(p.server_stall_ms(1), None);
+        assert_eq!(p.server_stall_ms(0), Some(250));
+        assert_eq!(p.server_stall_ms(0), None, "budget consumed");
+
+        assert!(p.server_torn_frame(2));
+        assert!(p.server_torn_frame(2));
+        assert!(!p.server_torn_frame(2), "count=2 exhausted");
+        assert!(!p.server_torn_frame(1));
+    }
+
+    // --- RetryPolicy edges (the PR 10 hardening satellite) -----------
+
+    #[test]
+    fn retry_zero_retries_means_no_backoff_path() {
+        // max_retries=0 -> run_op bails before any sleep; the policy
+        // itself must still be well-defined for attempt 0 and 1.
+        let p = RetryPolicy { max_retries: 0, backoff_ms: 50 };
+        assert_eq!(p.backoff_for(0), 0);
+        assert_eq!(p.backoff_for(1), 50);
+    }
+
+    #[test]
+    fn retry_backoff_overflow_saturates_to_cap() {
+        // backoff_ms near u64::MAX must neither overflow nor sleep
+        // "forever": the product saturates, then the cap clamps it.
+        let p = RetryPolicy { max_retries: 2, backoff_ms: u64::MAX };
+        assert_eq!(p.backoff_for(1), MAX_BACKOFF_MS);
+        assert_eq!(p.backoff_for(u32::MAX), MAX_BACKOFF_MS);
+        // ...and a sane config is untouched by the cap
+        let q = RetryPolicy { max_retries: 2, backoff_ms: 50 };
+        assert_eq!(q.backoff_for(3), 150);
+    }
+
+    #[test]
+    fn retry_no_sleep_configured_is_truly_free() {
+        // backoff_ms=0: every attempt's backoff is 0, so sleep() is a
+        // no-op — pinned so a future refactor can't introduce a
+        // minimum sleep.
+        let p = RetryPolicy { max_retries: 3, backoff_ms: 0 };
+        for attempt in 0..5 {
+            assert_eq!(p.backoff_for(attempt), 0);
+        }
+        p.sleep(4); // must return immediately, not panic
     }
 
     #[test]

@@ -142,6 +142,37 @@ fn retries_exhausted_is_a_clean_error() {
             "error must carry the panic cause: {msg}");
 }
 
+/// RetryPolicy edge: with `max_retries=0` and a pathological
+/// `backoff_ms`, exhaustion must be immediate — the supervisor checks
+/// the budget *before* sleeping, so no backoff (which the cap bounds at
+/// 60s) ever runs after the final attempt. A regression that sleeps on
+/// the exhausted path would stall this test for the full capped
+/// backoff; the wall-clock bound catches it.
+#[test]
+fn exhausted_retries_never_sleep() {
+    let plan =
+        FaultPlan::parse("panic@worker=0,step=3,count=*").unwrap();
+    let retry = RetryPolicy { max_retries: 0, backoff_ms: u64::MAX };
+    let mut par = ParVecEnv::with_faults(cfg(), B, 2, Arc::new(plan),
+                                         retry);
+    let grids: Vec<Grid> = (0..B).map(|_| Grid::empty_room(9, 9))
+        .collect();
+    let rs = simple_ruleset();
+    let refs: Vec<&Ruleset> = (0..B).map(|_| &rs).collect();
+    let maxs = vec![5i32; B];
+    let rngs: Vec<Rng> = (0..B).map(|i| Rng::new(300 + i as u64))
+        .collect();
+    let mut obs = vec![0i32; par.obs_len()];
+    par.reset_all(&grids, &refs, &maxs, &rngs, &mut obs).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = par.rollout(12, &mut Rng::new(1)).unwrap_err();
+    assert!(t0.elapsed() < std::time::Duration::from_secs(20),
+            "exhausted retries must not run the (capped) backoff");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("chunk worker 0"),
+            "error must name the worker: {msg}");
+}
+
 // --- crash-safe checkpoints (public re-export surface) -----------------
 
 fn sample_checkpoint() -> TrainCheckpoint {

@@ -129,6 +129,39 @@ fn no_unwrap_in_workers_fires_in_worker_files_only() {
     // the native trainer is one (its iterations replay on recovery)
     let v = lint("coordinator/native_trainer.rs", text);
     assert_eq!(keys(&v).len(), 2);
+    // the service tier is scoped in wholesale: every server/ module,
+    // including ones that don't exist yet, is a supervised path (a
+    // session panic must become a structured Error frame)
+    let v = lint("server/session.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![
+            ("server/session.rs".into(), 2, "no-unwrap-in-workers"),
+            ("server/session.rs".into(), 3, "no-unwrap-in-workers"),
+        ]
+    );
+    assert_eq!(keys(&lint("server/new_module.rs", text)).len(), 2);
+}
+
+#[test]
+fn server_tier_is_inside_the_wallclock_scope() {
+    // Server timing must route through coordinator::metrics::WallTimer
+    // — raw Instant::now in any server/ module flags.
+    let text = "use std::time::Instant;\n\
+                fn t() -> f64 {\n\
+                \x20   let t0 = Instant::now();\n\
+                \x20   t0.elapsed().as_secs_f64()\n\
+                }\n";
+    let v = lint("server/protocol.rs", text);
+    assert_eq!(
+        keys(&v),
+        vec![(
+            "server/protocol.rs".into(),
+            3,
+            "no-wallclock-in-kernels"
+        )]
+    );
+    assert!(!lint("server/mod.rs", text).is_empty());
 }
 
 #[test]

@@ -1,0 +1,473 @@
+//! Service-tier contract tests: the rollout server must be
+//! bitwise-transparent when healthy and *structurally* safe when not.
+//!
+//! Every test runs an in-process [`Server`] on a loopback port with a
+//! preloaded benchmark (no store access, no artifacts), injects faults
+//! through the `XMG_FAULTS` grammar's server sites — passed directly
+//! via [`ServeConfig::faults`], never the environment, so tests stay
+//! parallel-safe — and asserts the failure model from
+//! `xmgrid help serve`:
+//!
+//! - a server-backed rollout equals the in-process native engine bit
+//!   for bit,
+//! - a dropped/torn/panicked session dies alone; concurrent sessions
+//!   are unaffected bitwise,
+//! - stalls surface as structured `timeout`/`deadline` errors, never
+//!   hangs,
+//! - a full bounded queue answers `backpressure` and the session stays
+//!   usable,
+//! - malformed bytes are rejected with the offending byte offset,
+//! - drain completes in-flight work, refuses new work with `draining`,
+//!   and `serve()` returns cleanly.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use xmgrid::benchgen::{generate_benchmark, Benchmark, Preset};
+use xmgrid::coordinator::pool::EnvFamily;
+use xmgrid::coordinator::{NativeEnvConfig, NativePool, Overlap,
+                          RolloutEngine, ShardConfig};
+use xmgrid::env::api::{BatchEnvironment, ObsMode};
+use xmgrid::server::protocol::{code, decode_error_body, read_frame,
+                               BodyWriter, Kind};
+use xmgrid::server::{request_shutdown, Connection, ServeConfig,
+                     ServeStats, Server, ServerAddr, ServerClient,
+                     SessionSpec};
+use xmgrid::util::fault::FaultPlan;
+use xmgrid::util::rng::Rng;
+
+const ENV: &str = "XLand-MiniGrid-R1-13x13";
+const BENCH: &str = "srv-test";
+
+fn bench() -> Arc<Benchmark> {
+    let (rulesets, _) =
+        generate_benchmark(&Preset::Trivial.config(), 16).unwrap();
+    Arc::new(Benchmark { name: BENCH.into(), rulesets })
+}
+
+/// Bind on a free loopback port, preload the benchmark, serve on a
+/// background thread. Returns the address and the serve() handle.
+fn start(cfg: ServeConfig)
+         -> (ServerAddr, JoinHandle<anyhow::Result<ServeStats>>) {
+    let server = Server::bind_tcp("127.0.0.1:0", cfg).unwrap();
+    server.preload(BENCH, bench());
+    let addr = ServerAddr::parse(&server.local_addr().unwrap()).unwrap();
+    let handle = std::thread::spawn(move || server.serve());
+    (addr, handle)
+}
+
+fn spec(b: usize, t: usize) -> SessionSpec {
+    SessionSpec {
+        env: ENV.into(),
+        benchmark: BENCH.into(),
+        b,
+        t,
+        threads: 1,
+    }
+}
+
+fn cfg_with_faults(spec: &str) -> ServeConfig {
+    ServeConfig {
+        faults: Arc::new(FaultPlan::parse(spec).unwrap()),
+        ..ServeConfig::default()
+    }
+}
+
+/// Shut a test server down and require a clean drain.
+fn drain(addr: &ServerAddr,
+         handle: JoinHandle<anyhow::Result<ServeStats>>) -> ServeStats {
+    request_shutdown(addr, 2_000).unwrap();
+    handle.join().unwrap().unwrap()
+}
+
+/// The deterministic fields of a chunk — everything but wall time.
+type ChunkKey = (usize, usize, u64, u64, u64, u64);
+
+fn collect_chunks(engine: RolloutEngine, rounds: usize)
+                  -> Vec<ChunkKey> {
+    let mut out = Vec::new();
+    engine
+        .collect(rounds, |c| {
+            out.push((c.shard, c.round, c.steps,
+                      c.reward_sum.to_bits(), c.episodes, c.trials));
+        })
+        .unwrap();
+    out.sort_unstable();
+    out
+}
+
+// --- bitwise transparency ----------------------------------------------
+
+/// `--backend server:ADDR` == `--backend native`, bit for bit, across
+/// two shards (two concurrent server sessions): same per-chunk steps,
+/// reward bits, episode and trial counts.
+#[test]
+fn server_rollout_is_bitwise_identical_to_native() {
+    let (b, t, rounds) = (16, 8, 3);
+    let scfg = ShardConfig { shards: 2, overlap: Overlap::Off, seed: 7,
+                             rooms: 1 };
+
+    let bench = bench();
+    let ncfg = NativeEnvConfig::for_env(ENV, b, t, &bench).unwrap();
+    let native = RolloutEngine::launch_native_obs(
+        ncfg, bench, scfg, ObsMode::Symbolic).unwrap();
+    let want = collect_chunks(native, rounds);
+
+    let (addr, handle) = start(ServeConfig::default());
+    let family = EnvFamily {
+        h: ncfg.params.h,
+        w: ncfg.params.w,
+        mr: ncfg.params.max_rules,
+        mi: ncfg.params.max_init,
+        b,
+    };
+    let spec = spec(b, t);
+    let remote_addr = addr.clone();
+    let remote = RolloutEngine::launch_batch_envs(
+        move |_shard, rng| {
+            let mut client = ServerClient::connect_session(
+                &remote_addr, &spec, 5_000)?;
+            let mut scratch = vec![0i32; client.obs_len()];
+            client.reset(rng, &mut scratch)?;
+            Ok(ObsMode::Symbolic.wrap(client))
+        },
+        b, t, family, scfg,
+    )
+    .unwrap();
+    let got = collect_chunks(remote, rounds);
+
+    assert_eq!(got, want, "server-backed chunks diverge from native");
+    let stats = drain(&addr, handle);
+    assert_eq!(stats.sessions, 3); // 2 shards + the shutdown client
+}
+
+// --- fault isolation ---------------------------------------------------
+
+/// Drive one raw session through reset + a step and return the obs
+/// observed, so concurrent-session outputs can be compared bitwise
+/// against an in-process pool fed the identical rng and actions.
+fn reset_and_step(client: &mut ServerClient, rng: &mut Rng)
+                  -> anyhow::Result<(Vec<i32>, Vec<f32>)> {
+    let b = client.batch();
+    let mut obs = vec![0i32; client.obs_len()];
+    client.reset(rng, &mut obs)?;
+    let n = client.action_spec().num_actions as i32;
+    let actions: Vec<i32> =
+        (0..b).map(|i| (i as i32) % n).collect();
+    let mut rewards = vec![0f32; b];
+    let mut dones = vec![false; b];
+    let mut trial_dones = vec![false; b];
+    client.step(&actions, &mut obs, &mut rewards, &mut dones,
+                &mut trial_dones)?;
+    Ok((obs, rewards))
+}
+
+/// Same trajectory on an in-process pool — the isolation tests'
+/// ground truth.
+fn reference_reset_and_step(b: usize, t: usize, seed: u64)
+                            -> (Vec<i32>, Vec<f32>) {
+    let bench = bench();
+    let ncfg = NativeEnvConfig::for_env(ENV, b, t, &bench).unwrap();
+    let mut pool = NativePool::with_tasks(ncfg, bench).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut obs = vec![0i32; pool.obs_len()];
+    BatchEnvironment::reset(&mut pool, &mut rng, &mut obs).unwrap();
+    let n = pool.action_spec().num_actions as i32;
+    let actions: Vec<i32> =
+        (0..b).map(|i| (i as i32) % n).collect();
+    let mut rewards = vec![0f32; b];
+    let mut dones = vec![false; b];
+    let mut trial_dones = vec![false; b];
+    pool.step(&actions, &mut obs, &mut rewards, &mut dones,
+              &mut trial_dones)
+        .unwrap();
+    (obs, rewards)
+}
+
+/// A hard-dropped connection (the kill-9 shape) tears down exactly one
+/// session: the victim sees a transport error, the concurrent session
+/// finishes bitwise-identical to an in-process run.
+#[test]
+fn dropped_connection_isolates_the_session() {
+    let (b, t) = (8, 8);
+    // req 2 is the victim's step (hello=0, reset=1, step=2)
+    let (addr, handle) =
+        start(cfg_with_faults("drop-conn@session=0,req=2"));
+
+    let mut victim =
+        ServerClient::connect_session(&addr, &spec(b, t), 2_000)
+            .unwrap();
+    assert_eq!(victim.session(), 0);
+    let mut bystander =
+        ServerClient::connect_session(&addr, &spec(b, t), 2_000)
+            .unwrap();
+    assert_eq!(bystander.session(), 1);
+
+    let mut vrng = Rng::new(11);
+    let err = reset_and_step(&mut victim, &mut vrng).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("closed") || msg.contains("deadline"),
+        "dropped connection should be a structured error, got: {msg}"
+    );
+
+    let mut brng = Rng::new(42);
+    let (obs, rewards) =
+        reset_and_step(&mut bystander, &mut brng).unwrap();
+    let (want_obs, want_rewards) = reference_reset_and_step(b, t, 42);
+    assert_eq!(obs, want_obs, "bystander obs diverged");
+    assert_eq!(
+        rewards.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+        want_rewards.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+        "bystander rewards diverged"
+    );
+
+    drain(&addr, handle);
+}
+
+/// A failed request (unknown env) is a structured `bad-request` reply
+/// and the session *keeps serving* — failure replies are flow, not
+/// teardown; concurrent sessions are untouched either way.
+#[test]
+fn failed_request_is_clean_and_the_session_survives() {
+    let (b, t) = (8, 8);
+    let (addr, handle) = start(ServeConfig::default());
+
+    let mut conn = Connection::connect(&addr, 2_000).unwrap();
+    let err = conn
+        .hello(&SessionSpec {
+            env: "No-Such-Env".into(),
+            benchmark: BENCH.into(),
+            b,
+            t,
+            threads: 1,
+        })
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad-request"), "got: {msg}");
+    // same connection, same session: a valid Hello now succeeds
+    let params = conn.hello(&spec(b, t)).unwrap();
+    assert_eq!(params.h, 13);
+    conn.bye();
+
+    let mut brng = Rng::new(42);
+    let mut bystander =
+        ServerClient::connect_session(&addr, &spec(b, t), 2_000)
+            .unwrap();
+    let (obs, _) = reset_and_step(&mut bystander, &mut brng).unwrap();
+    let (want_obs, _) = reference_reset_and_step(b, t, 42);
+    assert_eq!(obs, want_obs);
+
+    drain(&addr, handle);
+}
+
+// --- deadlines ---------------------------------------------------------
+
+/// A stalled server worker surfaces at the client as a structured
+/// deadline error — never a hang — and only for the stalled session.
+#[test]
+fn stall_surfaces_as_a_deadline_error() {
+    let (b, t) = (8, 8);
+    // the stall fires on session 0's first worker frame (its Hello);
+    // 2s stall vs a 250ms client deadline, with enough headroom that
+    // a loaded CI machine cannot reorder them
+    let (addr, handle) =
+        start(cfg_with_faults("stall@session=0,ms=2000"));
+
+    let err = ServerClient::connect_session(&addr, &spec(b, t), 250)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("deadline"),
+        "stall must surface as a deadline error, got: {msg}"
+    );
+
+    // session 1 (no stall entry matches it) is fully live
+    let mut bystander =
+        ServerClient::connect_session(&addr, &spec(b, t), 2_000)
+            .unwrap();
+    let mut brng = Rng::new(42);
+    let (obs, _) = reset_and_step(&mut bystander, &mut brng).unwrap();
+    let (want_obs, _) = reference_reset_and_step(b, t, 42);
+    assert_eq!(obs, want_obs);
+
+    drain(&addr, handle);
+}
+
+// --- backpressure ------------------------------------------------------
+
+/// Overfilling a depth-1 session queue while the worker is stalled
+/// answers `backpressure` immediately; every accepted request still
+/// completes and the session stays usable afterwards.
+#[test]
+fn full_queue_answers_backpressure_and_session_survives() {
+    let (b, t) = (4, 4);
+    let cfg = ServeConfig {
+        queue_depth: 1,
+        faults: Arc::new(
+            FaultPlan::parse("stall@session=0,ms=700").unwrap(),
+        ),
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(cfg);
+
+    let mut conn = Connection::connect(&addr, 5_000).unwrap();
+    let sp = spec(b, t);
+    let mut hello = BodyWriter::new();
+    hello.str(&sp.env);
+    hello.str(&sp.benchmark);
+    hello.u32(sp.b as u32);
+    hello.u32(sp.t as u32);
+    hello.u32(sp.threads as u32);
+    // Pipeline hello + three resets without awaiting replies: the
+    // worker stalls on the hello, the depth-1 queue fills, and at
+    // least one reset must be refused with `backpressure`.
+    let rng = Rng::new(5);
+    let reset_body = || {
+        let mut w = BodyWriter::new();
+        for s in rng.state() {
+            w.u64(s);
+        }
+        w.finish()
+    };
+    conn.send_raw(Kind::Hello, hello.finish()).unwrap();
+    for _ in 0..3 {
+        conn.send_raw(Kind::Reset, reset_body()).unwrap();
+    }
+
+    let mut backpressure = 0;
+    let mut hello_ok = 0;
+    let mut reset_ok = 0;
+    for _ in 0..4 {
+        let f = conn.recv_raw().unwrap();
+        match f.kind {
+            Kind::Error => {
+                let (c, msg) = decode_error_body(&f.body).unwrap();
+                assert_eq!(c, code::BACKPRESSURE, "unexpected: {msg}");
+                assert!(msg.contains("queue full"), "got: {msg}");
+                backpressure += 1;
+            }
+            Kind::HelloOk => hello_ok += 1,
+            Kind::ResetOk => reset_ok += 1,
+            other => panic!("unexpected reply kind {other:?}"),
+        }
+    }
+    assert_eq!(hello_ok, 1);
+    assert!(backpressure >= 1, "queue never reported backpressure");
+    assert!(reset_ok >= 1, "accepted resets must still complete");
+    assert_eq!(backpressure + reset_ok, 3);
+
+    // the refusal was flow control, not teardown: a fresh request on
+    // the same session round-trips
+    let req = conn.send_raw(Kind::Reset, reset_body()).unwrap();
+    let f = conn.recv_raw().unwrap();
+    assert_eq!(f.kind, Kind::ResetOk);
+    assert_eq!(f.req, req);
+
+    drain(&addr, handle);
+}
+
+// --- malformed input ---------------------------------------------------
+
+/// Garbage bytes on the wire get a structured `malformed` reply naming
+/// the byte offset, then a clean close — never a panic or a hang.
+#[test]
+fn malformed_bytes_are_rejected_with_an_offset() {
+    use std::io::Write;
+    let (addr, handle) = start(ServeConfig::default());
+
+    let ServerAddr::Tcp(hostport) = &addr else {
+        panic!("test server is TCP");
+    };
+    let mut raw = std::net::TcpStream::connect(hostport).unwrap();
+    raw.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+        .unwrap();
+    raw.write_all(b"this is not a frame, not even close.....")
+        .unwrap();
+    let f = read_frame(&mut raw).unwrap();
+    assert_eq!(f.kind, Kind::Error);
+    let (c, msg) = decode_error_body(&f.body).unwrap();
+    assert_eq!(c, code::MALFORMED);
+    assert!(
+        msg.contains("byte offset 0") && msg.contains("magic"),
+        "malformed reply must name the offset, got: {msg}"
+    );
+
+    // a torn reply fault produces the mirror-image *client* error: a
+    // frame cut mid-stream is named by offset, not hung on
+    let (addr2, handle2) =
+        start(cfg_with_faults("torn-frame@session=0"));
+    let err = ServerClient::connect_session(&addr2, &spec(4, 4), 2_000)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("byte offset"),
+        "torn frame must name the truncation offset, got: {msg}"
+    );
+
+    drain(&addr, handle);
+    drain(&addr2, handle2);
+}
+
+// --- graceful drain ----------------------------------------------------
+
+/// Drain completes in-flight work, refuses new work with `draining`,
+/// and `serve()` returns clean stats: a stalled in-flight Hello still
+/// gets its HelloOk after the drain flag flips.
+#[test]
+fn drain_completes_in_flight_and_refuses_new_work() {
+    let (b, t) = (4, 4);
+    let (addr, handle) =
+        start(cfg_with_faults("stall@session=0,ms=600"));
+
+    let mut conn = Connection::connect(&addr, 5_000).unwrap();
+    let sp = spec(b, t);
+    let mut hello = BodyWriter::new();
+    hello.str(&sp.env);
+    hello.str(&sp.benchmark);
+    hello.u32(sp.b as u32);
+    hello.u32(sp.t as u32);
+    hello.u32(sp.threads as u32);
+    // fire the hello; the worker stalls on it for 600ms
+    conn.send_raw(Kind::Hello, hello.finish()).unwrap();
+    // flip the drain flag while that request is in flight
+    request_shutdown(&addr, 2_000).unwrap();
+    // Two pipelined resets post-drain. The first races the reader's
+    // drain-flag refresh (it may still be accepted and completed);
+    // the second lands on an iteration that has definitely observed
+    // the flag and must be refused with `draining`.
+    let rng = Rng::new(1);
+    for _ in 0..2 {
+        let mut w = BodyWriter::new();
+        for s in rng.state() {
+            w.u64(s);
+        }
+        conn.send_raw(Kind::Reset, w.finish()).unwrap();
+    }
+    let (mut hello_ok, mut reset_ok, mut draining) = (0, 0, 0);
+    for _ in 0..3 {
+        let f = conn.recv_raw().unwrap();
+        match f.kind {
+            Kind::HelloOk => hello_ok += 1,
+            Kind::ResetOk => reset_ok += 1,
+            Kind::Error => {
+                let (c, msg) = decode_error_body(&f.body).unwrap();
+                assert_eq!(c, code::DRAINING, "unexpected: {msg}");
+                assert!(msg.contains("draining"), "got: {msg}");
+                draining += 1;
+            }
+            other => panic!("unexpected reply kind {other:?}"),
+        }
+    }
+    assert_eq!(
+        hello_ok, 1,
+        "the in-flight request must complete through a drain"
+    );
+    assert!(draining >= 1, "post-drain work was not refused");
+    assert_eq!(draining + reset_ok, 2);
+    drop(conn);
+
+    let stats = handle.join().unwrap().unwrap();
+    assert_eq!(stats.sessions, 2); // the stalled client + the drainer
+    assert!(stats.requests >= 1);
+}
